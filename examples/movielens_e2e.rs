@@ -1,0 +1,92 @@
+//! End-to-end validation run (DESIGN.md §6): a Movielens-profile workload
+//! through the FULL three-layer stack — rust PP coordinator scheduling
+//! blocks, each Gibbs half-sweep executing the AOT-compiled HLO (Pallas
+//! kernel + JAX model) on the PJRT runtime — for a few hundred Gibbs
+//! sweeps total, logging the RMSE-vs-sweep learning curve.
+//!
+//!     make artifacts && cargo run --release --example movielens_e2e
+//!
+//! Results are recorded in EXPERIMENTS.md §End-to-end. Falls back to the
+//! native backend when artifacts are missing (CI without python).
+
+use bmf_pp::coordinator::config::auto_tau;
+use bmf_pp::coordinator::{BackendSpec, PpTrainer, TrainConfig};
+use bmf_pp::data::generator::SyntheticDataset;
+use bmf_pp::data::split::holdout_split_covered;
+use bmf_pp::metrics::recorder::Recorder;
+use bmf_pp::metrics::rmse::mean_predictor_rmse;
+use bmf_pp::metrics::throughput::Throughput;
+use bmf_pp::util::timer::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    bmf_pp::util::logging::init();
+    let spec = BackendSpec::auto_default();
+    let backend_name = match spec.resolve() {
+        BackendSpec::Hlo { .. } => "HLO/PJRT (AOT artifacts)",
+        _ => "native (run `make artifacts` for the HLO path)",
+    };
+
+    // Movielens profile, scaled to ~830x160 with ~80k ratings
+    let ds = SyntheticDataset::by_name("movielens", 0.006, 11).expect("profile");
+    let (train, test) = holdout_split_covered(&ds.ratings, 0.2, 12);
+    println!(
+        "end-to-end: {}x{} matrix, {} train ratings, K={}, backend: {backend_name}",
+        train.rows,
+        train.cols,
+        train.nnz(),
+        ds.k
+    );
+
+    let tau = auto_tau(&train);
+    let mut recorder = Recorder::new();
+    let grid = (4, 2);
+    let sw = Stopwatch::start();
+    let mut total_sweeps = 0usize;
+
+    // Learning curve: train with increasing sample budgets so each point is
+    // a full PP pipeline at that compute level (PP is a batch method; the
+    // curve shows posterior quality vs Gibbs compute, paper-style).
+    // One shared pool keeps the per-thread PJRT engines warm across points.
+    let base_cfg = TrainConfig::new(ds.k);
+    let pool = bmf_pp::coordinator::scheduler::WorkerPool::new(
+        &base_cfg.backend,
+        base_cfg.block_parallelism,
+    );
+    let mut last = None;
+    for &samples in &[4usize, 8, 16, 32, 64] {
+        let cfg = TrainConfig::new(ds.k)
+            .with_grid(grid.0, grid.1)
+            .with_sweeps(8, samples)
+            .with_tau(tau)
+            .with_seed(3)
+            .with_workers(2);
+        let result = PpTrainer::new(cfg).train_with_pool(&pool, &train)?;
+        let rmse = result.rmse(&test);
+        total_sweeps = result.stats.sweeps;
+        println!(
+            "samples/block={samples:<4} sweeps(total)={:<6} rmse={rmse:.4} wall={:.2}s",
+            result.stats.sweeps, result.timings.total
+        );
+        recorder.point("rmse_vs_samples", samples as f64, rmse);
+        recorder.point("rmse_vs_sweeps", result.stats.sweeps as f64, rmse);
+        last = Some(result);
+    }
+    let result = last.unwrap();
+    let rmse = result.rmse(&test);
+    let baseline = mean_predictor_rmse(train.mean(), &test);
+    let tp = Throughput::measure(train.rows, train.cols, train.nnz(), total_sweeps / result.stats.blocks.max(1), result.timings.total);
+
+    recorder.scalar("final_rmse", rmse);
+    recorder.scalar("mean_predictor_rmse", baseline);
+    recorder.scalar("total_secs", sw.secs());
+    recorder.scalar("rows_per_sec", tp.rows_per_sec);
+    recorder.scalar("ratings_per_sec", tp.ratings_per_sec);
+    let out = std::path::Path::new("movielens_e2e_metrics.json");
+    recorder.save(out)?;
+
+    println!("final RMSE {rmse:.4} (mean predictor {baseline:.4}); metrics -> {}", out.display());
+    println!("throughput: {}", tp.format_table1());
+    assert!(rmse < baseline * 0.95, "end-to-end must clearly beat the mean predictor");
+    println!("movielens_e2e OK");
+    Ok(())
+}

@@ -1,0 +1,155 @@
+"""AOT exporter: lower the L2 graphs to HLO *text* + manifest.json.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the HLO text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+`make artifacts` wraps this and is a no-op when inputs are unchanged.
+
+Artifact inventory (shapes are compile-time; the rust runtime pads blocks
+with mask=0 into the smallest registered shape that fits):
+
+  sample_side_<N>x<D>x<K>  inputs:  ratings(N,D) mask(N,D) v(D,K)
+                                    prior_mean(N,K) prior_prec(N,K,K)
+                                    noise(N,K) tau()
+                           outputs: (sample(N,K), mean(N,K))
+  predict_sse_<N>x<D>x<K>  inputs:  u(N,K) v(D,K) ratings(N,D) mask(N,D)
+                           outputs: (sse(), cnt())
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (N, D, K) shapes registered with the rust runtime. Keep this list in sync
+# with what the benches/examples need; adding a shape only costs AOT time.
+SAMPLE_SHAPES = [
+    # test / CI shapes
+    (32, 32, 8),
+    (16, 32, 8),
+    # main block shapes per K (K=8: movielens/amazon profile, K=16: general,
+    # K=32: netflix/yahoo profile, paper-K=100 scaled)
+    (256, 256, 8),
+    (128, 256, 8),
+    (64, 256, 8),
+    (256, 256, 16),
+    (128, 256, 16),
+    (64, 256, 16),
+    (512, 512, 16),
+    (256, 512, 16),
+    (128, 512, 16),
+    (256, 256, 32),
+    (512, 512, 32),
+    (256, 512, 32),
+    (128, 512, 32),
+    # rectangular shapes: tall-narrow blocks (Netflix-like aspect) and
+    # short-wide shards — cut the mask-padding waste vs square artifacts
+    (256, 64, 8),
+    (512, 64, 8),
+    (512, 128, 8),
+    (256, 64, 16),
+    (512, 64, 16),
+    (512, 128, 16),
+    (1024, 64, 16),
+    (512, 64, 32),
+    (512, 128, 32),
+]
+
+PREDICT_SHAPES = [
+    (32, 32, 8),
+    (256, 256, 8),
+    (256, 256, 16),
+    (512, 512, 16),
+    (256, 256, 32),
+    (512, 512, 32),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_sample_side(n, d, k, use_pallas=True):
+    fn = functools.partial(model.sample_side, use_pallas=use_pallas)
+    return jax.jit(fn).lower(
+        f32(n, d),  # ratings
+        f32(n, d),  # mask
+        f32(d, k),  # v
+        f32(n, k),  # prior_mean
+        f32(n, k, k),  # prior_prec
+        f32(n, k),  # noise
+        f32(),  # tau
+    )
+
+
+def lower_predict_sse(n, d, k):
+    return jax.jit(model.predict_sse).lower(f32(n, k), f32(d, k), f32(n, d), f32(n, d))
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument(
+        "--flavor",
+        choices=["pallas", "ref"],
+        default="pallas",
+        help="L1 implementation lowered into sample_side (ref = pure-jnp oracle)",
+    )
+    p.add_argument("--only-test-shapes", action="store_true")
+    args = p.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    sample_shapes = SAMPLE_SHAPES[:2] if args.only_test_shapes else SAMPLE_SHAPES
+    predict_shapes = PREDICT_SHAPES[:1] if args.only_test_shapes else PREDICT_SHAPES
+
+    entries = []
+    for n, d, k in sample_shapes:
+        name = f"sample_side_{n}x{d}x{k}"
+        path = os.path.join(args.out_dir, name + ".hlo.txt")
+        text = to_hlo_text(lower_sample_side(n, d, k, use_pallas=args.flavor == "pallas"))
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append(
+            {"name": name, "kind": "sample_side", "n": n, "d": d, "k": k,
+             "file": os.path.basename(path), "flavor": args.flavor}
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for n, d, k in predict_shapes:
+        name = f"predict_sse_{n}x{d}x{k}"
+        path = os.path.join(args.out_dir, name + ".hlo.txt")
+        text = to_hlo_text(lower_predict_sse(n, d, k))
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append(
+            {"name": name, "kind": "predict_sse", "n": n, "d": d, "k": k,
+             "file": os.path.basename(path), "flavor": "ref"}
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = {"version": 1, "artifacts": entries}
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(entries)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Batched K x K linear algebra as pure-HLO ops (no LAPACK custom calls).
+
+jax's `jnp.linalg.cholesky` / `solve_triangular` lower on CPU to
+`lapack_*_ffi` custom-calls (API_VERSION_TYPED_FFI), which the pinned
+xla_extension 0.5.1 PJRT runtime cannot execute. Since K is a compile-time
+constant (<= 32) we unroll Cholesky and the triangular substitutions over K
+as vectorized ops batched over N — everything lowers to plain dot/mul/add
+HLO that any PJRT backend runs.
+
+Numerically this is the standard Cholesky-Banachiewicz column recurrence in
+f32, adequate for the SPD posterior precisions of BPMF (prior precision
+ridges every matrix away from singularity).
+"""
+
+import jax.numpy as jnp
+
+
+def batched_cholesky(a):
+    """Lower-triangular L with a = L L^T, batched.
+
+    Args:
+      a: (N, K, K) SPD matrices.
+    Returns:
+      (N, K, K) lower-triangular factors (strict upper = 0).
+    """
+    n, k, _ = a.shape
+    l = jnp.zeros_like(a)
+    for j in range(k):
+        if j > 0:
+            # s[:, i] = a[:, j+i, j] - sum_m l[:, j+i, m] * l[:, j, m]
+            s = a[:, j:, j] - jnp.einsum("nim,nm->ni", l[:, j:, :j], l[:, j, :j])
+        else:
+            s = a[:, j:, j]
+        d = jnp.sqrt(s[:, 0:1])  # (N, 1)
+        if k - j > 1:
+            col = jnp.concatenate([d, s[:, 1:] / d], axis=1)  # (N, K-j)
+        else:
+            col = d
+        l = l.at[:, j:, j].set(col)
+    return l
+
+
+def solve_lower(l, b):
+    """Solve L y = b (forward substitution), batched.
+
+    Args:
+      l: (N, K, K) lower-triangular; b: (N, K).
+    Returns:
+      y: (N, K).
+    """
+    n, k, _ = l.shape
+    ys = []
+    for i in range(k):
+        acc = b[:, i]
+        if i > 0:
+            stack = jnp.stack(ys, axis=1)  # (N, i)
+            acc = acc - jnp.einsum("nm,nm->n", l[:, i, :i], stack)
+        ys.append(acc / l[:, i, i])
+    return jnp.stack(ys, axis=1)
+
+
+def solve_upper_t(l, b):
+    """Solve L^T x = b (back substitution on the transpose), batched.
+
+    Args:
+      l: (N, K, K) lower-triangular; b: (N, K).
+    Returns:
+      x: (N, K).
+    """
+    n, k, _ = l.shape
+    xs = [None] * k
+    for i in reversed(range(k)):
+        acc = b[:, i]
+        if i < k - 1:
+            stack = jnp.stack(xs[i + 1 :], axis=1)  # (N, K-1-i)
+            # (L^T)[i, m] = L[m, i] for m > i
+            acc = acc - jnp.einsum("nm,nm->n", l[:, i + 1 :, i], stack)
+        xs[i] = acc / l[:, i, i]
+    return jnp.stack(xs, axis=1)
+
+
+def spd_solve(a, b):
+    """Solve a x = b for SPD a via Cholesky, batched: (N,K,K), (N,K) -> (N,K)."""
+    l = batched_cholesky(a)
+    return solve_upper_t(l, solve_lower(l, b))

@@ -1,0 +1,125 @@
+"""L1 Pallas kernel: batched Gibbs precision/rhs accumulation.
+
+Computes, for a tile of N factor rows against all D opposite-side factors,
+
+    lam[n] = sum_d mask[n,d] * v[d] v[d]^T          (N,K,K)
+    b[n]   = sum_d mask[n,d] * ratings[n,d] * v[d]  (N,K)
+
+tiled so each (user-tile x item-tile) step streams one VMEM-sized block of
+the ratings/mask matrices and one item-tile of V from HBM, and accumulates
+the K x K precision blocks in the (revisited) output tile.
+
+TPU adaptation of the paper's CPU/MPI hot loop (DESIGN.md
+Hardware-Adaptation): the per-row sparse gather of the original CSR
+implementation becomes a dense masked rank-K accumulation, which is
+MXU-shaped work: the inner contraction is a (BN*K, BD) x (BD, K) matmul.
+
+Must be lowered with interpret=True: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_tile(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (tiles must divide evenly)."""
+    t = min(n, target)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+def _precision_kernel(r_ref, m_ref, v_ref, lam_ref, b_ref):
+    """One grid step: accumulate item-tile j's contribution for user-tile i.
+
+    Shapes inside the kernel:
+      r_ref, m_ref: (BN, BD)   ratings / mask tile
+      v_ref:        (BD, K)    opposite-side factor tile
+      lam_ref:      (BN, K, K) accumulator (revisited across j)
+      b_ref:        (BN, K)    accumulator (revisited across j)
+    """
+    j = pl.program_id(1)
+
+    m = m_ref[...]
+    r = r_ref[...]
+    v = v_ref[...]
+
+    # masked_v[n, d, :] = mask[n, d] * v[d]  -> (BN, BD, K)
+    masked_v = m[:, :, None] * v[None, :, :]
+    # lam[n] = masked_v[n]^T-contraction with v over d: (BN, K, K).
+    # dot_general: contract dim 1 (d) of masked_v with dim 0 (d) of v,
+    # batching over n — expressed as one reshaped MXU matmul per user tile.
+    lam_tile = jax.lax.dot_general(
+        masked_v,
+        v,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (BN, K, K)
+    b_tile = jnp.dot(m * r, v, preferred_element_type=jnp.float32)  # (BN, K)
+
+    @pl.when(j == 0)
+    def _init():
+        lam_ref[...] = lam_tile
+        b_ref[...] = b_tile
+
+    @pl.when(j > 0)
+    def _acc():
+        lam_ref[...] += lam_tile
+        b_ref[...] += b_tile
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bd"))
+def precision_pallas(ratings, mask, v, *, bn: int = 64, bd: int = 128):
+    """Pallas-tiled version of kernels.ref.precision_ref.
+
+    Args:
+      ratings, mask: (N, D) f32.
+      v: (D, K) f32.
+      bn, bd: requested user/item tile sizes (clamped to divisors).
+
+    Returns:
+      (lam, b): (N, K, K), (N, K) — identical (up to float addition order)
+      to precision_ref.
+    """
+    n, d = ratings.shape
+    k = v.shape[1]
+    bn = _pick_tile(n, bn)
+    bd = _pick_tile(d, bd)
+    grid = (n // bn, d // bd)
+
+    return pl.pallas_call(
+        _precision_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bd), lambda i, j: (i, j)),  # ratings
+            pl.BlockSpec((bn, bd), lambda i, j: (i, j)),  # mask
+            pl.BlockSpec((bd, k), lambda i, j: (j, 0)),  # v
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, k, k), lambda i, j: (i, 0, 0)),  # lam (revisited)
+            pl.BlockSpec((bn, k), lambda i, j: (i, 0)),  # b   (revisited)
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, k, k), jnp.float32),
+            jax.ShapeDtypeStruct((n, k), jnp.float32),
+        ],
+        interpret=True,
+    )(ratings, mask, v)
+
+
+def vmem_bytes(bn: int, bd: int, k: int) -> int:
+    """Estimated VMEM footprint of one grid step (f32)."""
+    tiles = bn * bd * 2  # ratings + mask
+    vtile = bd * k
+    masked = bn * bd * k  # the masked_v intermediate
+    acc = bn * k * k + bn * k
+    return 4 * (tiles + vtile + masked + acc)
+
+
+def mxu_flops(n: int, d: int, k: int) -> int:
+    """MAC count of the lam contraction (the MXU-shaped work)."""
+    return 2 * n * d * k * k + 2 * n * d * k

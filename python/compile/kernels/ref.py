@@ -1,0 +1,32 @@
+"""Pure-jnp reference oracle for the Gibbs hot-spot kernel.
+
+The hot spot of a BPMF Gibbs half-sweep is, for every factor row n of the
+side being updated, the accumulation over observed entries of the opposite
+side's factors:
+
+    lam[n] = sum_d mask[n,d] * v[d] v[d]^T          (N,K,K)
+    b[n]   = sum_d mask[n,d] * ratings[n,d] * v[d]  (N,K)
+
+This file is the correctness oracle the Pallas kernel (precision.py) is
+tested against; it is also what model.py lowers when built with
+use_pallas=False (the "ref" artifact flavour used in A/B perf tests).
+"""
+
+import jax.numpy as jnp
+
+
+def precision_ref(ratings, mask, v):
+    """Unscaled precision contributions and rhs for one side.
+
+    Args:
+      ratings: (N, D) dense block of observed ratings (zeros where unobserved).
+      mask:    (N, D) indicator, 1.0 where observed.
+      v:       (D, K) opposite-side factors.
+
+    Returns:
+      lam: (N, K, K) = einsum('nd,dk,dl->nkl', mask, v, v)
+      b:   (N, K)    = (mask * ratings) @ v
+    """
+    lam = jnp.einsum("nd,dk,dl->nkl", mask, v, v)
+    b = (mask * ratings) @ v
+    return lam, b

@@ -1,0 +1,93 @@
+"""L2: the BPMF Gibbs half-sweep and evaluation graphs, in JAX.
+
+These are the compute graphs the rust coordinator executes at runtime (AOT
+lowered to HLO text by aot.py). Python never runs on the request path.
+
+The central export is `sample_side`: one conditional Gibbs update of the N
+factor rows of ONE side of the factorization, given the D opposite-side
+factor rows. It is used for BOTH the U-side (fed the block as-is) and the
+V-side (fed the transposed block) — this is exactly the alternating
+structure of the BPMF sampler of Salakhutdinov & Mnih (2008), and the unit
+of work each within-block shard worker executes in the distributed BMF
+implementation (Vander Aa et al. 2017).
+
+All randomness is injected by the caller as standard-normal `noise`; the
+graph is deterministic. Per-row Gaussian priors (prior_mean, prior_prec)
+carry both the Normal-Wishart hyperparameter prior of plain BPMF (all rows
+identical) and the Posterior-Propagation propagated marginals of phases
+(b)/(c) (row-specific).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.linalg import batched_cholesky, solve_lower, solve_upper_t
+from .kernels.precision import precision_pallas
+from .kernels.ref import precision_ref
+
+
+def sample_side(ratings, mask, v, prior_mean, prior_prec, noise, tau, *, use_pallas=True):
+    """One conditional Gibbs update for N factor rows given V.
+
+    For each row n, the conditional posterior is Gaussian:
+
+        Prec_n = prior_prec[n] + tau * sum_d mask[n,d] v_d v_d^T
+        mu_n   = Prec_n^{-1} (prior_prec[n] prior_mean[n]
+                              + tau * sum_d mask[n,d] r_nd v_d)
+        u_n    = mu_n + L_n^{-T} noise[n],   Prec_n = L_n L_n^T
+
+    Args:
+      ratings:    (N, D) f32 dense block (zeros where unobserved).
+      mask:       (N, D) f32 indicator.
+      v:          (D, K) f32 opposite-side factors.
+      prior_mean: (N, K) f32 per-row prior means.
+      prior_prec: (N, K, K) f32 per-row prior precisions (SPD).
+      noise:      (N, K) f32 standard normal draws.
+      tau:        () f32 residual noise precision.
+
+    Returns:
+      sample: (N, K) the Gibbs draw.
+      mean:   (N, K) the conditional posterior mean (Rao-Blackwellised
+              moment accumulation on the rust side uses this).
+    """
+    if use_pallas:
+        lam, b = precision_pallas(ratings, mask, v)
+    else:
+        lam, b = precision_ref(ratings, mask, v)
+    prec = prior_prec + tau * lam  # (N, K, K)
+    rhs = jnp.einsum("nkl,nl->nk", prior_prec, prior_mean) + tau * b  # (N, K)
+
+    # Batched Cholesky + substitutions unrolled over K (kernels/linalg.py):
+    # pure-HLO ops — the pinned PJRT runtime cannot execute LAPACK
+    # custom-calls that jnp.linalg would emit on CPU.
+    chol = batched_cholesky(prec)  # (N, K, K)
+    mean = solve_upper_t(chol, solve_lower(chol, rhs))
+    # x ~ N(0, Prec^{-1}):  x = L^{-T} eps.
+    z = solve_upper_t(chol, noise)
+    sample = mean + z
+    return sample, mean
+
+
+def predict_sse(u, v, ratings, mask):
+    """Masked sum of squared prediction errors and observation count.
+
+    Returns (sse, cnt) as () f32 each; the rust side streams these over
+    blocks to form RMSE = sqrt(sum sse / sum cnt).
+    """
+    pred = u @ v.T
+    err = (pred - ratings) * mask
+    return jnp.sum(err * err), jnp.sum(mask)
+
+
+def predict_mean_var(u_samples, v_samples, mask):
+    """Posterior predictive mean and variance from S factor samples.
+
+    Args:
+      u_samples: (S, N, K), v_samples: (S, D, K), mask: (N, D).
+    Returns:
+      (mean, var): (N, D) each, masked.
+    """
+    preds = jnp.einsum("snk,sdk->snd", u_samples, v_samples)
+    mean = preds.mean(axis=0) * mask
+    var = preds.var(axis=0) * mask
+    return mean, var

@@ -1,0 +1,73 @@
+"""AOT exporter tests: HLO text well-formedness + manifest round-trip."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot
+
+
+def test_lower_sample_side_produces_hlo_text():
+    text = aot.to_hlo_text(aot.lower_sample_side(16, 32, 8))
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # tuple return convention (return_tuple=True) — rust unwraps with to_tuple
+    assert "tuple" in text
+
+
+def test_lower_predict_produces_hlo_text():
+    text = aot.to_hlo_text(aot.lower_predict_sse(16, 32, 8))
+    assert "HloModule" in text
+
+
+def test_ref_and_pallas_flavors_lower():
+    t1 = aot.to_hlo_text(aot.lower_sample_side(16, 32, 8, use_pallas=True))
+    t2 = aot.to_hlo_text(aot.lower_sample_side(16, 32, 8, use_pallas=False))
+    assert "HloModule" in t1 and "HloModule" in t2
+
+
+def test_registered_shapes_are_sane():
+    for n, d, k in aot.SAMPLE_SHAPES:
+        assert n > 0 and d > 0 and k > 0
+        assert k in (4, 8, 16, 32)
+    # every predict shape must have a matching sample shape (same N,D,K)
+    for shape in aot.PREDICT_SHAPES:
+        assert shape in aot.SAMPLE_SHAPES
+
+
+def test_no_custom_calls_in_lowered_hlo():
+    """Regression: the pinned PJRT runtime (xla_extension 0.5.1) cannot run
+    LAPACK/FFI custom-calls; jnp.linalg on CPU would emit them. Everything
+    must lower to plain HLO ops (kernels/linalg.py exists for this)."""
+    for n, d, k in [(16, 32, 8), (32, 32, 8), (64, 48, 16)]:
+        text = aot.to_hlo_text(aot.lower_sample_side(n, d, k))
+        assert "custom-call" not in text, f"custom-call leaked into {n}x{d}x{k}"
+        text = aot.to_hlo_text(aot.lower_predict_sse(n, d, k))
+        assert "custom-call" not in text
+
+
+def test_rectangular_shapes_registered():
+    """The runtime relies on tall-narrow artifacts to bound padding waste."""
+    tall = [(n, d) for n, d, _ in aot.SAMPLE_SHAPES if n >= 4 * d]
+    assert tall, "no tall-narrow artifact shapes registered"
+
+
+def test_cli_writes_manifest(tmp_path):
+    out = tmp_path / "arts"
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out),
+         "--only-test-shapes"],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["version"] == 1
+    names = {e["name"] for e in manifest["artifacts"]}
+    assert "sample_side_32x32x8" in names
+    for e in manifest["artifacts"]:
+        p = out / e["file"]
+        assert p.exists() and p.stat().st_size > 0
+        assert {"name", "kind", "n", "d", "k", "file", "flavor"} <= set(e)

@@ -1,0 +1,99 @@
+"""L1 correctness: Pallas precision kernel vs pure-jnp oracle.
+
+Hypothesis sweeps shapes, sparsity, tile sizes and seeds; numerics are
+checked with assert_allclose at f32 tolerances.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.precision import (
+    _pick_tile,
+    mxu_flops,
+    precision_pallas,
+    vmem_bytes,
+)
+from compile.kernels.ref import precision_ref
+
+
+def _data(n, d, k, density, seed):
+    rng = np.random.default_rng(seed)
+    r = rng.normal(size=(n, d)).astype(np.float32)
+    m = (rng.random((n, d)) < density).astype(np.float32)
+    v = rng.normal(size=(d, k)).astype(np.float32)
+    return r * m, m, v
+
+
+def _check(n, d, k, density, seed, bn=64, bd=128):
+    r, m, v = _data(n, d, k, density, seed)
+    lam0, b0 = precision_ref(r, m, v)
+    lam1, b1 = precision_pallas(r, m, v, bn=bn, bd=bd)
+    scale = max(1.0, float(np.abs(lam0).max()))
+    np.testing.assert_allclose(lam1, lam0, rtol=1e-4, atol=1e-4 * scale)
+    np.testing.assert_allclose(b1, b0, rtol=1e-4, atol=1e-4 * scale)
+
+
+@pytest.mark.parametrize(
+    "n,d,k",
+    [(32, 32, 8), (16, 32, 8), (64, 96, 4), (128, 128, 16), (256, 256, 16)],
+)
+def test_kernel_matches_ref_fixed(n, d, k):
+    _check(n, d, k, density=0.3, seed=0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(4, 96),
+    d=st.integers(4, 96),
+    k=st.sampled_from([1, 2, 4, 8, 16]),
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_hypothesis(n, d, k, density, seed):
+    _check(n, d, k, density, seed)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    bn=st.integers(1, 64),
+    bd=st.integers(1, 64),
+    seed=st.integers(0, 1000),
+)
+def test_kernel_tile_size_invariance(bn, bd, seed):
+    """Result must not depend on the tiling."""
+    _check(48, 80, 8, density=0.25, seed=seed, bn=bn, bd=bd)
+
+
+def test_empty_mask_gives_zero():
+    r, m, v = _data(32, 32, 8, density=0.0, seed=3)
+    lam, b = precision_pallas(r, m, v)
+    assert float(np.abs(lam).max()) == 0.0
+    assert float(np.abs(b).max()) == 0.0
+
+
+def test_full_mask_equals_vtv():
+    """With mask == 1, every lam[n] equals V^T V."""
+    r, m, v = _data(8, 40, 4, density=1.1, seed=4)
+    lam, _ = precision_pallas(r, m, v)
+    vtv = v.T @ v
+    for n in range(8):
+        np.testing.assert_allclose(lam[n], vtv, rtol=1e-4, atol=1e-4)
+
+
+def test_pick_tile_divides():
+    for n in [1, 7, 12, 100, 256]:
+        for t in [1, 8, 64]:
+            got = _pick_tile(n, t)
+            assert n % got == 0 and 1 <= got <= max(1, min(n, t))
+
+
+def test_vmem_budget_of_default_tiles():
+    """Default tiling must stay under a 4 MiB VMEM budget for all K we ship."""
+    for k in (8, 16, 32):
+        assert vmem_bytes(64, 128, k) < 4 * 1024 * 1024
+
+
+def test_mxu_flops_positive_and_scales():
+    assert mxu_flops(256, 256, 16) == 2 * 256 * 256 * (16 * 16 + 16)
+    assert mxu_flops(512, 512, 32) > mxu_flops(256, 256, 32)

@@ -1,0 +1,63 @@
+"""Unrolled batched Cholesky/substitution vs numpy.linalg."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.linalg import (
+    batched_cholesky,
+    solve_lower,
+    solve_upper_t,
+    spd_solve,
+)
+
+
+def _spd_batch(n, k, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(n, k, k)).astype(np.float32)
+    spd = np.einsum("nij,nkj->nik", a, a) + 2 * np.eye(k, dtype=np.float32)
+    return spd.astype(np.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 16), k=st.sampled_from([1, 2, 3, 4, 8, 16]), seed=st.integers(0, 999))
+def test_cholesky_matches_numpy(n, k, seed):
+    a = _spd_batch(n, k, seed)
+    l = np.array(batched_cholesky(a))
+    l0 = np.linalg.cholesky(a.astype(np.float64))
+    np.testing.assert_allclose(l, l0, rtol=2e-3, atol=2e-3)
+    # strict upper triangle is exactly zero
+    for i in range(k):
+        for j in range(i + 1, k):
+            assert np.all(l[:, i, j] == 0.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 12), k=st.sampled_from([1, 2, 4, 8]), seed=st.integers(0, 999))
+def test_spd_solve_matches_numpy(n, k, seed):
+    a = _spd_batch(n, k, seed)
+    rng = np.random.default_rng(seed + 1)
+    b = rng.normal(size=(n, k)).astype(np.float32)
+    x = np.array(spd_solve(a, b))
+    x0 = np.linalg.solve(a.astype(np.float64), b.astype(np.float64)[..., None])[..., 0]
+    np.testing.assert_allclose(x, x0, rtol=5e-3, atol=5e-3)
+
+
+def test_triangular_solves_roundtrip():
+    a = _spd_batch(6, 8, 3)
+    l = np.array(batched_cholesky(a))
+    rng = np.random.default_rng(4)
+    y_true = rng.normal(size=(6, 8)).astype(np.float32)
+    b = np.einsum("nij,nj->ni", l, y_true)
+    y = np.array(solve_lower(l, b))
+    np.testing.assert_allclose(y, y_true, rtol=2e-3, atol=2e-3)
+    bt = np.einsum("nji,nj->ni", l, y_true)  # L^T y
+    x = np.array(solve_upper_t(l, bt))
+    np.testing.assert_allclose(x, y_true, rtol=2e-3, atol=2e-3)
+
+
+def test_k1_edge_case():
+    a = np.full((3, 1, 1), 4.0, np.float32)
+    l = np.array(batched_cholesky(a))
+    np.testing.assert_allclose(l[:, 0, 0], 2.0)
+    x = np.array(spd_solve(a, np.full((3, 1), 8.0, np.float32)))
+    np.testing.assert_allclose(x[:, 0], 2.0)

@@ -1,0 +1,104 @@
+"""L2 correctness: sample_side / predict graphs vs per-row numpy linalgebra."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+
+def _problem(n, d, k, density, seed, tau=1.5):
+    rng = np.random.default_rng(seed)
+    r = rng.normal(size=(n, d)).astype(np.float32)
+    m = (rng.random((n, d)) < density).astype(np.float32)
+    r = r * m
+    v = (rng.normal(size=(d, k)) * 0.3).astype(np.float32)
+    pm = (rng.normal(size=(n, k)) * 0.1).astype(np.float32)
+    a = rng.normal(size=(n, k, k)).astype(np.float32)
+    pp = np.einsum("nij,nkj->nik", a, a).astype(np.float32) + 2 * np.eye(
+        k, dtype=np.float32
+    )
+    noise = rng.normal(size=(n, k)).astype(np.float32)
+    return r, m, v, pm, pp, noise, np.float32(tau)
+
+
+def _numpy_sample_side(r, m, v, pm, pp, noise, tau):
+    n, k = pm.shape
+    samples = np.zeros_like(pm)
+    means = np.zeros_like(pm)
+    for i in range(n):
+        prec = pp[i] + tau * np.einsum("d,dk,dl->kl", m[i], v, v)
+        rhs = pp[i] @ pm[i] + tau * (m[i] * r[i]) @ v
+        mean = np.linalg.solve(prec, rhs)
+        chol = np.linalg.cholesky(prec)
+        samples[i] = mean + np.linalg.solve(chol.T, noise[i])
+        means[i] = mean
+    return samples, means
+
+
+@pytest.mark.parametrize("use_pallas", [True, False])
+@pytest.mark.parametrize("n,d,k", [(16, 24, 4), (32, 32, 8), (8, 64, 16)])
+def test_sample_side_matches_numpy(n, d, k, use_pallas):
+    args = _problem(n, d, k, density=0.4, seed=0)
+    s, mu = model.sample_side(*args, use_pallas=use_pallas)
+    s0, mu0 = _numpy_sample_side(*args)
+    np.testing.assert_allclose(np.array(mu), mu0, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.array(s), s0, rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(2, 48),
+    d=st.integers(2, 48),
+    k=st.sampled_from([2, 4, 8]),
+    density=st.floats(0.05, 1.0),
+    seed=st.integers(0, 10_000),
+)
+def test_sample_side_hypothesis(n, d, k, density, seed):
+    args = _problem(n, d, k, density, seed)
+    s, mu = model.sample_side(*args)
+    s0, mu0 = _numpy_sample_side(*args)
+    np.testing.assert_allclose(np.array(mu), mu0, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.array(s), s0, rtol=1e-3, atol=1e-3)
+
+
+def test_sample_side_no_observations_returns_prior():
+    """With an empty mask and zero noise, sample == prior mean."""
+    r, m, v, pm, pp, _, tau = _problem(12, 20, 4, density=0.0, seed=2)
+    noise = np.zeros_like(pm)
+    s, mu = model.sample_side(r, m, v, pm, pp, noise, tau)
+    np.testing.assert_allclose(np.array(s), pm, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.array(mu), pm, rtol=1e-4, atol=1e-4)
+
+
+def test_sample_side_is_deterministic_given_noise():
+    args = _problem(10, 10, 4, density=0.5, seed=3)
+    s1, _ = model.sample_side(*args)
+    s2, _ = model.sample_side(*args)
+    np.testing.assert_array_equal(np.array(s1), np.array(s2))
+
+
+def test_predict_sse_matches_numpy():
+    rng = np.random.default_rng(5)
+    n, d, k = 20, 30, 4
+    u = rng.normal(size=(n, k)).astype(np.float32)
+    v = rng.normal(size=(d, k)).astype(np.float32)
+    r = rng.normal(size=(n, d)).astype(np.float32)
+    m = (rng.random((n, d)) < 0.3).astype(np.float32)
+    sse, cnt = model.predict_sse(u, v, r, m)
+    err = (u @ v.T - r) * m
+    np.testing.assert_allclose(float(sse), float((err**2).sum()), rtol=1e-4)
+    assert float(cnt) == float(m.sum())
+
+
+def test_predict_mean_var_shapes_and_consistency():
+    rng = np.random.default_rng(6)
+    s, n, d, k = 5, 8, 9, 3
+    us = rng.normal(size=(s, n, k)).astype(np.float32)
+    vs = rng.normal(size=(s, d, k)).astype(np.float32)
+    m = np.ones((n, d), np.float32)
+    mean, var = model.predict_mean_var(us, vs, m)
+    preds = np.einsum("snk,sdk->snd", us, vs)
+    np.testing.assert_allclose(np.array(mean), preds.mean(0), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.array(var), preds.var(0), rtol=1e-3, atol=1e-3)
+    assert (np.array(var) >= 0).all()

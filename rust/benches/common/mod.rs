@@ -1,0 +1,53 @@
+//! Shared bench harness (criterion is unavailable offline): dataset
+//! setup at bench scales, table formatting, and JSON result dumps.
+
+use bmf_pp::data::generator::{DatasetProfile, SyntheticDataset};
+use bmf_pp::data::split::holdout_split_covered;
+use bmf_pp::data::sparse::Coo;
+
+/// Bench-scale factor per profile: keeps every dataset seconds-sized while
+/// preserving the Table-1 shape statistics.
+pub fn bench_scale(name: &str) -> f64 {
+    match name {
+        "movielens" => 0.002,
+        "netflix" => 0.002,
+        "yahoo" => 0.0004,
+        "amazon" => 0.00002,
+        _ => 0.002,
+    }
+}
+
+/// (profile, train, test) at bench scale.
+pub fn bench_dataset(name: &str) -> (DatasetProfile, Coo, Coo) {
+    let profile = DatasetProfile::by_name(name).expect("profile");
+    let ds = SyntheticDataset::generate(profile.clone(), bench_scale(name), 1234);
+    let (train, test) = holdout_split_covered(&ds.ratings, 0.2, 1235);
+    (profile, train, test)
+}
+
+/// Grid used for BMF+PP per dataset in the table benches (near-square
+/// blocks per §3.3; row-heavy for Netflix).
+pub fn bench_grid(name: &str) -> (usize, usize) {
+    match name {
+        "netflix" => (4, 2),
+        "yahoo" => (2, 2),
+        "amazon" => (2, 2),
+        _ => (2, 2),
+    }
+}
+
+pub fn hr() {
+    println!("{}", "-".repeat(78));
+}
+
+/// Save a list of (key, value) pairs as a flat JSON object next to the
+/// bench output (picked up for EXPERIMENTS.md).
+pub fn save_json(file: &str, pairs: &[(String, f64)]) {
+    use bmf_pp::util::json::Json;
+    let obj = Json::Obj(
+        pairs.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect(),
+    );
+    let dir = std::path::Path::new("bench_results");
+    std::fs::create_dir_all(dir).ok();
+    std::fs::write(dir.join(file), bmf_pp::util::json::to_string_pretty(&obj)).ok();
+}

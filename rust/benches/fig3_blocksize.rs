@@ -1,0 +1,102 @@
+//! Figure 3: block-size exploration on the Netflix profile — RMSE vs
+//! wall-clock vs block aspect ratio for a sweep of I×J grids (the paper's
+//! bubble plot; here a table + JSON series). Paper finding to reproduce:
+//! near-square blocks Pareto-dominate; with Netflix's 27:1 row/col ratio
+//! the winner is strongly row-heavy (paper: 20x3).
+//!
+//!     cargo bench --bench fig3_blocksize
+
+mod common;
+
+use bmf_pp::coordinator::config::auto_tau;
+use bmf_pp::coordinator::{BackendSpec, PpTrainer, TrainConfig};
+use bmf_pp::partition::balance;
+
+fn main() {
+    bmf_pp::util::logging::init();
+    let (profile, train, test) = common::bench_dataset("netflix");
+    let tau = auto_tau(&train);
+    println!(
+        "FIGURE 3 — block-size exploration, netflix profile {}x{} ({} ratings)",
+        train.rows,
+        train.cols,
+        train.nnz()
+    );
+    common::hr();
+    println!(
+        "{:<8} {:>9} {:>10} {:>10} {:>9} {:>12}",
+        "grid", "aspect", "rmse", "wall(s)", "blocks", "node-secs"
+    );
+    common::hr();
+
+    let grids: &[(usize, usize)] = &[
+        (1, 1),
+        (2, 2),
+        (4, 4),
+        (8, 8),
+        (2, 1),
+        (4, 1),
+        (8, 2),
+        (12, 2),
+        (16, 2),
+        (20, 3),
+        (16, 8),
+        (3, 20), // wrong-way rectangular: should lose
+    ];
+
+    let mut results = Vec::new();
+    let mut pareto: Vec<(f64, f64, String)> = Vec::new();
+    for &(i, j) in grids {
+        if i > train.rows || j > train.cols {
+            continue;
+        }
+        let cfg = TrainConfig::new(profile.k)
+            .with_grid(i, j)
+            .with_sweeps(8, 16)
+            .with_tau(tau)
+            .with_seed(5)
+            .with_backend(BackendSpec::Native);
+        let res = match PpTrainer::new(cfg).train(&train) {
+            Ok(r) => r,
+            Err(e) => {
+                println!("{:<8} skipped: {e}", format!("{i}x{j}"));
+                continue;
+            }
+        };
+        let rmse = res.rmse(&test);
+        let aspect = balance::block_aspect(train.rows, train.cols, i, j);
+        println!(
+            "{:<8} {:>9.2} {:>10.4} {:>10.2} {:>9} {:>12.2}",
+            format!("{i}x{j}"),
+            aspect,
+            rmse,
+            res.timings.total,
+            res.stats.blocks,
+            res.stats.compute_secs
+        );
+        results.push((format!("{i}x{j}_rmse"), rmse));
+        results.push((format!("{i}x{j}_secs"), res.timings.total));
+        results.push((format!("{i}x{j}_aspect"), aspect));
+        pareto.push((res.timings.total, rmse, format!("{i}x{j}")));
+    }
+    common::hr();
+
+    // Pareto set in (time, rmse)
+    pareto.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut best_rmse = f64::INFINITY;
+    let front: Vec<String> = pareto
+        .iter()
+        .filter(|(_, r, _)| {
+            if *r < best_rmse {
+                best_rmse = *r;
+                true
+            } else {
+                false
+            }
+        })
+        .map(|(_, _, g)| g.clone())
+        .collect();
+    println!("pareto (time→rmse): {}", front.join(" → "));
+    println!("expected: row-heavy grids (e.g. 8x2..20x3) on the front; 3x20 dominated.");
+    common::save_json("fig3.json", &results);
+}

@@ -1,0 +1,73 @@
+//! Figures 4 & 5: strong scaling of D-BMF+PP on all four datasets —
+//! wall-clock vs node count, one series per block grid, Pareto points
+//! marked. Runs on the discrete-event cluster simulator calibrated against
+//! this machine's measured sampler throughput (DESIGN.md §Substitutions).
+//!
+//! Shapes to reproduce from the paper:
+//!   - Netflix/Yahoo (high K): near-linear scaling of small grids up to
+//!     ~16-64 nodes; 1x1 flattens at the within-block cap.
+//!   - Movielens/Amazon (K=10): 1x1 mostly flat (too little compute per
+//!     comm); large grids win at high node counts (paper: 20x faster at
+//!     2048 nodes with 32x32).
+//!   - Run-time drops where node counts align with phase parallelism.
+//!
+//!     cargo bench --bench fig45_scaling
+
+mod common;
+
+use bmf_pp::cluster::calibrate::calibrate;
+use bmf_pp::cluster::sim::{node_sweep, pareto_front, simulate_pp, uniform_block_nnz};
+use bmf_pp::coordinator::backend::BlockBackend;
+use bmf_pp::data::generator::DatasetProfile;
+use bmf_pp::partition::Grid;
+use bmf_pp::util::timer::fmt_hhmm;
+
+fn main() {
+    bmf_pp::util::logging::init();
+    let backend = BlockBackend::Native;
+    let sweeps = 28;
+    let max_nodes = 16_384;
+
+    let figures: &[(&str, &[&str], usize, &[(usize, usize)])] = &[
+        ("FIGURE 4 (top): netflix", &["netflix"], 32, &[(1, 1), (2, 2), (4, 4), (16, 8), (32, 32)]),
+        ("FIGURE 4 (bottom): yahoo", &["yahoo"], 32, &[(2, 2), (4, 4), (8, 8), (16, 16), (32, 32)]),
+        ("FIGURE 5 (top): movielens", &["movielens"], 8, &[(1, 1), (2, 2), (4, 4), (8, 8), (32, 32)]),
+        ("FIGURE 5 (bottom): amazon", &["amazon"], 8, &[(1, 1), (4, 4), (8, 8), (16, 16), (32, 32)]),
+    ];
+
+    let mut results = Vec::new();
+    for (title, names, k, grids) in figures {
+        let profile = DatasetProfile::by_name(names[0]).unwrap();
+        let model = calibrate(&backend, (*k).min(32));
+        println!("\n{title} — {}x{} / {:.0}M ratings, K={k}", profile.paper_rows, profile.paper_cols, profile.paper_ratings as f64 / 1e6);
+        common::hr();
+        for &(gi, gj) in *grids {
+            let grid = Grid::new(profile.paper_rows, profile.paper_cols, gi, gj);
+            let nnz = uniform_block_nnz(&grid, profile.paper_ratings);
+            let mut pts = Vec::new();
+            for p in node_sweep(&grid, max_nodes) {
+                let r = simulate_pp(&model, &grid, &nnz, *k, sweeps, sweeps, p);
+                pts.push((p, r.total));
+            }
+            let front = pareto_front(&pts);
+            print!("  {gi:>2}x{gj:<3} ");
+            for (p, t) in pts.iter().filter(|(p, _)| p.is_power_of_two()) {
+                let mark = if front.contains(&(*p, *t)) { "*" } else { "" };
+                print!("{p}:{}{mark} ", fmt_hhmm(*t));
+                results.push((format!("{}_{gi}x{gj}_n{p}", names[0]), *t));
+            }
+            println!();
+            // headline numbers: best speedup over 1-node 1x1
+            if (gi, gj) == (1, 1) || gi * gj >= 64 {
+                let t1 = pts.iter().find(|(p, _)| *p == 1).map(|(_, t)| *t);
+                let tbest = front.last().map(|(_, t)| *t);
+                if let (Some(a), Some(b)) = (t1, tbest) {
+                    println!("        speedup at pareto end: {:.1}x", a / b);
+                }
+            }
+        }
+        common::hr();
+    }
+    println!("\n(* = Pareto-optimal; node counts include phase-aligned points)");
+    common::save_json("fig45.json", &results);
+}

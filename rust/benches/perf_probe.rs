@@ -1,0 +1,171 @@
+//! §Perf probe: steady-state hot-path measurements feeding EXPERIMENTS.md.
+//!
+//!   P1 — sample_side latency, HLO (AOT Pallas kernel via PJRT) vs native
+//!        rust oracle, identical inputs, warm engine; plus ratings/sec.
+//!   P2 — L1 flavor A/B: Pallas-tiled vs pure-jnp-ref artifact (requires
+//!        `python -m compile.aot --out-dir artifacts-ref --flavor ref`).
+//!   P3 — padding overhead: real vs padded cells over a netflix-profile
+//!        PP run (the cost of shape-specialized AOT artifacts).
+//!   P4 — end-to-end trainer wall-clock, cold engines vs warm pool.
+//!
+//!     cargo bench --bench perf_probe
+
+mod common;
+
+use bmf_pp::coordinator::config::auto_tau;
+use bmf_pp::coordinator::scheduler::WorkerPool;
+use bmf_pp::coordinator::{BackendSpec, PpTrainer, TrainConfig};
+use bmf_pp::data::sparse::{Coo, Csr};
+use bmf_pp::gibbs::native::sample_side_native;
+use bmf_pp::posterior::RowGaussians;
+use bmf_pp::rng::{normal::standard_normal_vec, Rng};
+use bmf_pp::runtime::Engine;
+use bmf_pp::util::timer::Stopwatch;
+
+fn random_block(n: usize, d: usize, density: f64, seed: u64) -> Coo {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut coo = Coo::new(n, d);
+    for r in 0..n {
+        for c in 0..d {
+            if rng.bernoulli(density) {
+                coo.push(r, c, (rng.uniform() * 4.0 + 1.0) as f32);
+            }
+        }
+    }
+    coo
+}
+
+fn median(xs: &mut [f64]) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+fn probe_engine(dir: &std::path::Path, label: &str, results: &mut Vec<(String, f64)>) {
+    let engine = match Engine::new(dir) {
+        Ok(e) => e,
+        Err(e) => {
+            println!("  {label}: skipped ({e})");
+            return;
+        }
+    };
+    let (n, d, k) = (256usize, 256usize, 16usize);
+    let block = random_block(n, d, 0.12, 9);
+    let mut rng = Rng::seed_from_u64(10);
+    let v = standard_normal_vec(&mut rng, d * k);
+    let prior = RowGaussians::standard(n, k, 2.0);
+    let noise = standard_normal_vec(&mut rng, n * k);
+    // warm (compile)
+    engine.sample_side(&block, false, &v, &prior, 2.0, &noise).unwrap();
+    let mut times = Vec::new();
+    for _ in 0..30 {
+        let sw = Stopwatch::start();
+        engine.sample_side(&block, false, &v, &prior, 2.0, &noise).unwrap();
+        times.push(sw.secs());
+    }
+    let med = median(&mut times);
+    let st = engine.stats();
+    println!(
+        "  {label}: median {:.2}ms / call  ({:.2}M masked-cells/s, compile {:.2}s)",
+        med * 1e3,
+        (n * d) as f64 / med / 1e6,
+        st.compile_secs
+    );
+    results.push((format!("p1_{label}_ms"), med * 1e3));
+}
+
+fn main() {
+    bmf_pp::util::logging::init();
+    let mut results = Vec::new();
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+
+    println!("P1 — sample_side 256x256x16, steady state");
+    probe_engine(&root.join("artifacts"), "hlo_pallas", &mut results);
+    {
+        let (n, d, k) = (256usize, 256usize, 16usize);
+        let block = random_block(n, d, 0.12, 9);
+        let csr = Csr::from_coo(&block);
+        let mut rng = Rng::seed_from_u64(10);
+        let v = standard_normal_vec(&mut rng, d * k);
+        let prior = RowGaussians::standard(n, k, 2.0);
+        let noise = standard_normal_vec(&mut rng, n * k);
+        let mut times = Vec::new();
+        for _ in 0..30 {
+            let sw = Stopwatch::start();
+            sample_side_native(&csr, &v, k, &prior, 2.0, &noise);
+            times.push(sw.secs());
+        }
+        let med = median(&mut times);
+        println!(
+            "  native: median {:.2}ms / call ({} nnz sparse path)",
+            med * 1e3,
+            block.nnz()
+        );
+        results.push(("p1_native_ms".to_string(), med * 1e3));
+    }
+
+    println!("\nP2 — L1 flavor A/B (pallas-tiled vs pure-jnp ref lowering)");
+    if root.join("artifacts-ref/manifest.json").exists() {
+        probe_engine(&root.join("artifacts-ref"), "hlo_ref", &mut results);
+    } else {
+        println!("  skipped: generate with `python -m compile.aot --out-dir artifacts-ref --flavor ref`");
+    }
+
+    println!("\nP3 — padding overhead on a netflix-profile PP run (grid 4x2)");
+    {
+        let (_, train, _) = common::bench_dataset("netflix");
+        let dir = root.join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let engine = Engine::new(&dir).unwrap();
+            // run one side of each block shape through the engine once
+            let grid = bmf_pp::partition::Grid::new(train.rows, train.cols, 4, 2);
+            let blocks = grid.split(&train);
+            let k = 16;
+            for row in &blocks {
+                for b in row {
+                    let mut rng = Rng::seed_from_u64(5);
+                    let v = standard_normal_vec(&mut rng, b.cols * k);
+                    let prior = RowGaussians::standard(b.rows, k, 1.0);
+                    let noise = standard_normal_vec(&mut rng, b.rows * k);
+                    engine.sample_side(b, false, &v, &prior, 1.0, &noise).unwrap();
+                }
+            }
+            let st = engine.stats();
+            let ratio = st.padded_cells as f64 / st.real_cells.max(1) as f64;
+            println!(
+                "  padded/real cells = {:.2}x over {} executions",
+                ratio, st.executions
+            );
+            results.push(("p3_padding_ratio".to_string(), ratio));
+        } else {
+            println!("  skipped: no artifacts");
+        }
+    }
+
+    println!("\nP4 — trainer cold vs warm pool (movielens profile, 2x2)");
+    {
+        let (_, train, _) = common::bench_dataset("movielens");
+        let cfg = TrainConfig::new(8)
+            .with_grid(2, 2)
+            .with_sweeps(6, 12)
+            .with_tau(auto_tau(&train))
+            .with_seed(6);
+        let trainer = PpTrainer::new(cfg.clone());
+        let sw = Stopwatch::start();
+        trainer.train(&train).unwrap(); // cold: fresh pool, compiles inside
+        let cold = sw.secs();
+        let pool = WorkerPool::new(&cfg.backend, cfg.block_parallelism);
+        trainer.train_with_pool(&pool, &train).unwrap(); // warm the pool
+        let sw = Stopwatch::start();
+        trainer.train_with_pool(&pool, &train).unwrap();
+        let warm = sw.secs();
+        let backend = match cfg.backend.resolve() {
+            BackendSpec::Hlo { .. } => "hlo",
+            _ => "native",
+        };
+        println!("  [{backend}] cold {cold:.2}s vs warm {warm:.2}s ({:.1}x)", cold / warm);
+        results.push(("p4_cold_secs".to_string(), cold));
+        results.push(("p4_warm_secs".to_string(), warm));
+    }
+
+    common::save_json("perf_probe.json", &results);
+}

@@ -1,0 +1,227 @@
+//! FPSGD-style blocked multicore SGD (paper §3.2 comparator; Zhuang et
+//! al. / LIBMF lineage, cited through [15]).
+//!
+//! The rating matrix is partitioned into a (2T)×(2T) block grid for T
+//! threads. A scheduler hands each idle thread a *free* block — one whose
+//! row-range and column-range no running block touches — so threads update
+//! disjoint slices of U and V without locks on the factors themselves.
+//! Within an epoch every block is processed exactly once.
+//!
+//! Factor storage uses an `UnsafeCell` wrapper; soundness rests on the
+//! scheduler invariant (disjoint row/col ranges of concurrently running
+//! blocks), exactly like the original FPSGD implementation.
+
+use super::sgd_common::{init_factors, sgd_update, standardization, SgdConfig, SgdModel};
+use crate::data::sparse::{Coo, Entry};
+use crate::rng::Rng;
+use std::cell::UnsafeCell;
+use std::sync::{Condvar, Mutex};
+
+struct FactorStore(UnsafeCell<Vec<f32>>);
+// SAFETY: disjoint row-ranges are guaranteed by the block scheduler; two
+// threads never touch the same factor rows concurrently.
+unsafe impl Sync for FactorStore {}
+
+impl FactorStore {
+    fn new(v: Vec<f32>) -> Self {
+        FactorStore(UnsafeCell::new(v))
+    }
+    /// SAFETY: caller must hold a scheduler grant covering these rows.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn rows_mut(&self, row: usize, k: usize) -> &mut [f32] {
+        let vec = &mut *self.0.get();
+        &mut vec[row * k..(row + 1) * k]
+    }
+    fn into_inner(self) -> Vec<f32> {
+        self.0.into_inner()
+    }
+}
+
+#[derive(Clone)]
+struct SchedState {
+    row_busy: Vec<bool>,
+    col_busy: Vec<bool>,
+    /// Per-block: processed in the current epoch?
+    done: Vec<bool>,
+    remaining: usize,
+}
+
+struct Scheduler {
+    state: Mutex<SchedState>,
+    cv: Condvar,
+    grid: usize,
+}
+
+impl Scheduler {
+    fn new(grid: usize) -> Scheduler {
+        Scheduler {
+            state: Mutex::new(SchedState {
+                row_busy: vec![false; grid],
+                col_busy: vec![false; grid],
+                done: vec![false; grid * grid],
+                remaining: grid * grid,
+            }),
+            cv: Condvar::new(),
+            grid,
+        }
+    }
+
+    /// Claim a free, not-yet-done block; None when the epoch is finished.
+    fn acquire(&self, rng: &mut Rng) -> Option<(usize, usize)> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.remaining == 0 {
+                return None;
+            }
+            // randomized scan for a free block (randomization avoids the
+            // deterministic update order plain SGD would impose)
+            let g = self.grid;
+            let offset = rng.below(g * g);
+            for t in 0..g * g {
+                let idx = (offset + t) % (g * g);
+                let (bi, bj) = (idx / g, idx % g);
+                if !st.done[idx] && !st.row_busy[bi] && !st.col_busy[bj] {
+                    st.done[idx] = true;
+                    st.row_busy[bi] = true;
+                    st.col_busy[bj] = true;
+                    st.remaining -= 1;
+                    return Some((bi, bj));
+                }
+            }
+            // nothing free right now — wait for a release
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    fn release(&self, bi: usize, bj: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.row_busy[bi] = false;
+        st.col_busy[bj] = false;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    fn reset_epoch(&self) {
+        let mut st = self.state.lock().unwrap();
+        let g = self.grid;
+        st.done.iter_mut().for_each(|d| *d = false);
+        st.remaining = g * g;
+    }
+}
+
+/// Train FPSGD on a rating matrix.
+pub fn train(data: &Coo, cfg: &SgdConfig) -> SgdModel {
+    let t0 = std::time::Instant::now();
+    let k = cfg.k;
+    let (mean, scale) = standardization(data);
+    let threads = cfg.threads.max(1);
+    let grid = (2 * threads).min(data.rows).min(data.cols).max(1);
+
+    // bucket standardized entries into the block grid
+    let row_of = |r: usize| (r * grid / data.rows).min(grid - 1);
+    let col_of = |c: usize| (c * grid / data.cols).min(grid - 1);
+    let mut blocks: Vec<Vec<Entry>> = vec![Vec::new(); grid * grid];
+    for e in &data.entries {
+        let mut e = *e;
+        e.val = (e.val - mean) / scale;
+        blocks[row_of(e.row as usize) * grid + col_of(e.col as usize)].push(e);
+    }
+    // shuffle within blocks once (SGD order randomization)
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    for b in blocks.iter_mut() {
+        rng.shuffle(b);
+    }
+
+    let u = FactorStore::new(init_factors(&mut rng, data.rows, k));
+    let v = FactorStore::new(init_factors(&mut rng, data.cols, k));
+    let sched = Scheduler::new(grid);
+
+    for epoch in 0..cfg.epochs {
+        let lr = cfg.lr_at_epoch(epoch);
+        sched.reset_epoch();
+        crossbeam_utils::thread::scope(|scope| {
+            for t in 0..threads {
+                let blocks = &blocks;
+                let sched = &sched;
+                let u = &u;
+                let v = &v;
+                let mut trng = Rng::seed_from_u64(cfg.seed ^ (epoch as u64) << 16 ^ t as u64);
+                scope.spawn(move |_| {
+                    while let Some((bi, bj)) = sched.acquire(&mut trng) {
+                        for e in &blocks[bi * grid + bj] {
+                            // SAFETY: scheduler grants exclusive row/col ranges
+                            let (ur, vr) = unsafe {
+                                (
+                                    u.rows_mut(e.row as usize, k),
+                                    v.rows_mut(e.col as usize, k),
+                                )
+                            };
+                            sgd_update(ur, vr, e.val, 0.0, lr, cfg.reg);
+                        }
+                        sched.release(bi, bj);
+                    }
+                });
+            }
+        })
+        .expect("fpsgd worker panicked");
+    }
+
+    SgdModel {
+        k,
+        mean,
+        scale,
+        u: u.into_inner(),
+        v: v.into_inner(),
+        secs: t0.elapsed().as_secs_f64(),
+        epochs_run: cfg.epochs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generator::SyntheticDataset;
+    use crate::data::split::holdout_split_covered;
+    use crate::metrics::rmse::mean_predictor_rmse;
+
+    fn dataset() -> (Coo, Coo) {
+        let d = SyntheticDataset::by_name("movielens", 0.0015, 31).unwrap();
+        holdout_split_covered(&d.ratings, 0.2, 32)
+    }
+
+    #[test]
+    fn learns_better_than_mean() {
+        let (train_set, test) = dataset();
+        let model = train(&train_set, &SgdConfig::new(8).with_epochs(15).with_seed(33));
+        let rmse = model.rmse(&test);
+        let base = mean_predictor_rmse(train_set.mean(), &test);
+        assert!(rmse < 0.9 * base, "fpsgd rmse {rmse} vs mean {base}");
+    }
+
+    #[test]
+    fn thread_counts_converge_similarly() {
+        let (train_set, test) = dataset();
+        let r1 = train(&train_set, &SgdConfig::new(8).with_epochs(10).with_threads(1))
+            .rmse(&test);
+        let r4 = train(&train_set, &SgdConfig::new(8).with_epochs(10).with_threads(4))
+            .rmse(&test);
+        assert!((r1 - r4).abs() < 0.12 * r1.max(r4), "1-thread {r1} vs 4-thread {r4}");
+    }
+
+    #[test]
+    fn handles_tiny_matrices() {
+        let mut coo = Coo::new(3, 2);
+        coo.push(0, 0, 5.0);
+        coo.push(2, 1, 1.0);
+        let model = train(&coo, &SgdConfig::new(2).with_epochs(5).with_threads(8));
+        assert!(model.rmse(&coo).is_finite());
+    }
+
+    #[test]
+    fn more_epochs_do_not_hurt() {
+        let (train_set, test) = dataset();
+        let r5 = train(&train_set, &SgdConfig::new(8).with_epochs(5)).rmse(&test);
+        let r25 = train(&train_set, &SgdConfig::new(8).with_epochs(25)).rmse(&test);
+        assert!(r25 < r5 * 1.05, "5ep={r5} 25ep={r25}");
+    }
+}

@@ -1,0 +1,12 @@
+//! Comparator matrix-factorization methods (paper §3.2 and related work):
+//! FPSGD-style blocked multicore SGD, NOMAD-style asynchronous SGD, ALS,
+//! CCD++-style coordinate descent, and distributed-SGLD (the other
+//! scalable-Bayesian line of work, Ahn et al. 2015) — all in rust on the
+//! same data structures.
+
+pub mod als;
+pub mod cgd;
+pub mod fpsgd;
+pub mod nomad;
+pub mod sgd_common;
+pub mod sgld;

@@ -1,0 +1,212 @@
+//! NOMAD-style asynchronous, decentralized SGD (paper §3.2 comparator;
+//! Yun et al. 2014 [19]).
+//!
+//! Rows of U are partitioned statically across threads. The columns of V
+//! circulate: each item's factor vector travels inside a *token* through
+//! the threads' queues; whoever holds the token updates that item against
+//! the ratings its own row partition has for the item, then forwards the
+//! token. No factor state is shared — ownership transfer replaces locking
+//! (rust's move semantics make the NOMAD invariant structural).
+
+use super::sgd_common::{init_factors, sgd_update, SgdConfig, SgdModel};
+use crate::coordinator::worker::shard_bounds;
+use crate::data::sparse::{Coo, Csr};
+use crate::rng::Rng;
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// A circulating item: its column id, factor vector and remaining hops.
+struct Token {
+    col: usize,
+    vcol: Vec<f32>,
+    hops: usize,
+}
+
+enum Msg {
+    Item(Token),
+    Shutdown,
+}
+
+/// Train NOMAD on a rating matrix.
+pub fn train(data: &Coo, cfg: &SgdConfig) -> SgdModel {
+    let t0 = std::time::Instant::now();
+    let k = cfg.k;
+    let (mean, scale) = super::sgd_common::standardization(data);
+    let threads = cfg.threads.max(1).min(data.rows.max(1));
+    let bounds = shard_bounds(data.rows, threads);
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+
+    // standardize (see sgd_common::standardization), then per-thread CSC
+    // view of each row partition: [t] -> csr over columns
+    let mut std_data = data.clone();
+    for e in std_data.entries.iter_mut() {
+        e.val = (e.val - mean) / scale;
+    }
+    let csr = Csr::from_coo(&std_data);
+    let col_views: Vec<Csr> = bounds
+        .iter()
+        .map(|&(a, b)| csr.slice_rows(a, b).transpose())
+        .collect();
+
+    let u_full = init_factors(&mut rng, data.rows, k);
+    let v_init = init_factors(&mut rng, data.cols, k);
+
+    // channels: one queue per thread
+    let mut senders: Vec<Sender<Msg>> = Vec::with_capacity(threads);
+    let mut receivers: Vec<Option<Receiver<Msg>>> = Vec::with_capacity(threads);
+    for _ in 0..threads {
+        let (tx, rx) = channel();
+        senders.push(tx);
+        receivers.push(Some(rx));
+    }
+
+    // seed tokens round-robin; each token makes epochs*threads hops so every
+    // thread sees every item `epochs` times
+    let total_hops = cfg.epochs * threads;
+    for (col, chunk) in v_init.chunks(k).enumerate() {
+        let target = col % threads;
+        senders[target]
+            .send(Msg::Item(Token { col, vcol: chunk.to_vec(), hops: total_hops }))
+            .unwrap();
+    }
+
+    // result collection: final v columns + per-thread u shards
+    let (done_tx, done_rx) = channel::<Token>();
+    let mut u_shards: Vec<Vec<f32>> = bounds
+        .iter()
+        .map(|&(a, b)| u_full[a * k..b * k].to_vec())
+        .collect();
+
+    crossbeam_utils::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (t, (rx, mut u_shard)) in receivers
+            .iter_mut()
+            .map(|r| r.take().unwrap())
+            .zip(u_shards.drain(..))
+            .enumerate()
+        {
+            let senders = senders.clone();
+            let done_tx = done_tx.clone();
+            let col_view = &col_views[t];
+            let epochs = cfg.epochs;
+            let (lr0, decay, reg) = (cfg.lr, cfg.decay, cfg.reg);
+            handles.push(scope.spawn(move |_| {
+                let next = (t + 1) % senders.len();
+                let mut finished = 0usize;
+                let n_cols = col_view.rows;
+                let _ = n_cols;
+                for msg in rx.iter() {
+                    match msg {
+                        Msg::Shutdown => break,
+                        Msg::Item(mut tok) => {
+                            // lr follows the token's epoch (completed rounds)
+                            let epoch = epochs - tok.hops.div_ceil(senders.len()).max(1);
+                            let lr = lr0 * decay.powi(epoch as i32);
+                            let (rows, vals) = col_view.row(tok.col);
+                            for (r, val) in rows.iter().zip(vals) {
+                                let ur = &mut u_shard
+                                    [*r as usize * tok.vcol.len()..(*r as usize + 1) * tok.vcol.len()];
+                                sgd_update(ur, &mut tok.vcol, *val, 0.0, lr, reg);
+                            }
+                            tok.hops -= 1;
+                            if tok.hops == 0 {
+                                done_tx.send(tok).unwrap();
+                                finished += 1;
+                                let _ = finished;
+                            } else {
+                                senders[next].send(Msg::Item(tok)).unwrap();
+                            }
+                        }
+                    }
+                }
+                u_shard
+            }));
+        }
+        drop(done_tx);
+
+        // leader: wait for all tokens to retire, then shut workers down
+        let mut v_final = v_init.clone();
+        let mut retired = 0usize;
+        let n_cols = data.cols;
+        while retired < n_cols {
+            match done_rx.recv() {
+                Ok(tok) => {
+                    v_final[tok.col * k..(tok.col + 1) * k].copy_from_slice(&tok.vcol);
+                    retired += 1;
+                }
+                Err(_) => break,
+            }
+        }
+        for s in &senders {
+            let _ = s.send(Msg::Shutdown);
+        }
+        let mut u_out = vec![0.0f32; data.rows * k];
+        for (h, &(a, b)) in handles.into_iter().zip(&bounds) {
+            let shard = h.join().expect("nomad worker panicked");
+            u_out[a * k..b * k].copy_from_slice(&shard);
+        }
+        (u_out, v_final)
+    })
+    .map(|(u, v)| SgdModel {
+        k,
+        mean,
+        scale,
+        u,
+        v,
+        secs: t0.elapsed().as_secs_f64(),
+        epochs_run: cfg.epochs,
+    })
+    .expect("nomad scope panicked")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generator::SyntheticDataset;
+    use crate::data::split::holdout_split_covered;
+    use crate::metrics::rmse::mean_predictor_rmse;
+
+    fn dataset() -> (Coo, Coo) {
+        let d = SyntheticDataset::by_name("movielens", 0.0015, 41).unwrap();
+        holdout_split_covered(&d.ratings, 0.2, 42)
+    }
+
+    #[test]
+    fn learns_better_than_mean() {
+        let (train_set, test) = dataset();
+        let model = train(&train_set, &SgdConfig::new(8).with_epochs(15).with_seed(43));
+        let rmse = model.rmse(&test);
+        let base = mean_predictor_rmse(train_set.mean(), &test);
+        assert!(rmse < 0.9 * base, "nomad rmse {rmse} vs mean {base}");
+    }
+
+    #[test]
+    fn single_thread_matches_multithread_quality() {
+        let (train_set, test) = dataset();
+        let r1 =
+            train(&train_set, &SgdConfig::new(8).with_epochs(10).with_threads(1)).rmse(&test);
+        let r4 =
+            train(&train_set, &SgdConfig::new(8).with_epochs(10).with_threads(4)).rmse(&test);
+        assert!((r1 - r4).abs() < 0.12 * r1.max(r4), "1t {r1} vs 4t {r4}");
+    }
+
+    #[test]
+    fn every_column_retires() {
+        // a matrix with empty columns still terminates (tokens circulate
+        // without updates and retire)
+        let mut coo = Coo::new(10, 6);
+        coo.push(0, 0, 3.0);
+        coo.push(9, 5, 4.0);
+        let model = train(&coo, &SgdConfig::new(4).with_epochs(3).with_threads(3));
+        assert_eq!(model.v.len(), 6 * 4);
+        assert!(model.u.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn more_threads_than_rows_is_safe() {
+        let mut coo = Coo::new(2, 3);
+        coo.push(0, 0, 1.0);
+        coo.push(1, 2, 2.0);
+        let model = train(&coo, &SgdConfig::new(2).with_epochs(2).with_threads(16));
+        assert!(model.rmse(&coo).is_finite());
+    }
+}

@@ -1,0 +1,163 @@
+//! Shared pieces of the SGD-based baselines (FPSGD, NOMAD).
+
+use crate::rng::{normal::standard_normal_vec, Rng};
+
+/// Hyperparameters for SGD matrix factorization.
+#[derive(Debug, Clone, Copy)]
+pub struct SgdConfig {
+    pub k: usize,
+    /// Initial learning rate.
+    pub lr: f32,
+    /// L2 regularization weight.
+    pub reg: f32,
+    /// Passes over the data.
+    pub epochs: usize,
+    /// Per-epoch learning-rate decay factor.
+    pub decay: f32,
+    pub threads: usize,
+    pub seed: u64,
+}
+
+impl SgdConfig {
+    pub fn new(k: usize) -> SgdConfig {
+        SgdConfig { k, lr: 0.05, reg: 0.05, epochs: 20, decay: 0.9, threads: 4, seed: 42 }
+    }
+
+    pub fn with_epochs(mut self, epochs: usize) -> Self {
+        self.epochs = epochs;
+        self
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn lr_at_epoch(&self, epoch: usize) -> f32 {
+        self.lr * self.decay.powi(epoch as i32)
+    }
+}
+
+/// One SGD update on a single rating residual (ratings centred on `mean`).
+/// Returns the squared error before the update.
+#[inline]
+pub fn sgd_update(
+    u: &mut [f32],
+    v: &mut [f32],
+    rating: f32,
+    mean: f32,
+    lr: f32,
+    reg: f32,
+) -> f32 {
+    debug_assert_eq!(u.len(), v.len());
+    let mut dot = 0.0f32;
+    for (a, b) in u.iter().zip(v.iter()) {
+        dot += a * b;
+    }
+    let err = rating - mean - dot;
+    for (a, b) in u.iter_mut().zip(v.iter_mut()) {
+        let (ua, vb) = (*a, *b);
+        *a += lr * (err * vb - reg * ua);
+        *b += lr * (err * ua - reg * vb);
+    }
+    err * err
+}
+
+/// Random factor initialization at scale 1/sqrt(k).
+pub fn init_factors(rng: &mut Rng, rows: usize, k: usize) -> Vec<f32> {
+    let scale = (1.0 / k as f64).sqrt() as f32;
+    standard_normal_vec(rng, rows * k).iter().map(|x| x * scale).collect()
+}
+
+/// Mean and standard deviation of the observed ratings — SGD baselines
+/// standardize internally so one learning rate works across rating scales
+/// (1-5 vs 0-100; without this the Yahoo scale diverges).
+pub fn standardization(data: &crate::data::sparse::Coo) -> (f32, f32) {
+    let mean = data.mean();
+    if data.nnz() == 0 {
+        return (0.0, 1.0);
+    }
+    let var: f64 = data
+        .entries
+        .iter()
+        .map(|e| (e.val as f64 - mean).powi(2))
+        .sum::<f64>()
+        / data.nnz() as f64;
+    (mean as f32, (var.sqrt().max(1e-6)) as f32)
+}
+
+/// Result of an SGD baseline run.
+#[derive(Debug, Clone)]
+pub struct SgdModel {
+    pub k: usize,
+    pub mean: f32,
+    /// Rating scale the factors were trained in (predictions multiply back).
+    pub scale: f32,
+    pub u: Vec<f32>,
+    pub v: Vec<f32>,
+    pub secs: f64,
+    pub epochs_run: usize,
+}
+
+impl SgdModel {
+    pub fn predict(&self, row: usize, col: usize) -> f64 {
+        let mut dot = 0.0f64;
+        for j in 0..self.k {
+            dot += (self.u[row * self.k + j] * self.v[col * self.k + j]) as f64;
+        }
+        self.mean as f64 + self.scale as f64 * dot
+    }
+
+    pub fn rmse(&self, test: &crate::data::sparse::Coo) -> f64 {
+        crate::metrics::rmse::rmse_with(test, |r, c| self.predict(r, c))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn update_reduces_error_on_repeat() {
+        let mut u = vec![0.1f32, -0.1];
+        let mut v = vec![0.2f32, 0.3];
+        let target = 4.0;
+        let mut last = f32::INFINITY;
+        for _ in 0..200 {
+            let se = sgd_update(&mut u, &mut v, target, 0.0, 0.05, 0.0);
+            assert!(se <= last * 1.001, "error should shrink: {se} > {last}");
+            last = se;
+        }
+        assert!(last < 1e-3);
+    }
+
+    #[test]
+    fn regularization_shrinks_factors() {
+        let mut u = vec![5.0f32];
+        let mut v = vec![5.0f32];
+        // rating equals current prediction → err 0, only reg acts
+        let r = 25.0;
+        sgd_update(&mut u, &mut v, r, 0.0, 0.1, 0.5);
+        assert!(u[0] < 5.0 && v[0] < 5.0);
+    }
+
+    #[test]
+    fn lr_decays() {
+        let c = SgdConfig::new(8);
+        assert!(c.lr_at_epoch(5) < c.lr_at_epoch(0));
+    }
+
+    #[test]
+    fn init_scale() {
+        let mut rng = Rng::seed_from_u64(1);
+        let f = init_factors(&mut rng, 1000, 16);
+        let var: f64 =
+            f.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / f.len() as f64;
+        assert!((var - 1.0 / 16.0).abs() < 0.01, "var={var}");
+    }
+}

@@ -1,0 +1,104 @@
+//! Calibration: fit the cluster model's compute coefficients from measured
+//! block runs on the real backend, so the simulated scaling curves are
+//! anchored to this machine's actual sampler throughput.
+//!
+//! The per-sweep cost model is  t = c_row·k³·(n+d) + c_rating·k²·2·nnz.
+//! Two measurements with different (rows+cols) : nnz ratios give a 2×2
+//! system for (c_row, c_rating); both are clamped positive.
+
+use super::model::{BlockCost, ClusterModel};
+use crate::coordinator::backend::{BlockBackend, BlockData};
+use crate::coordinator::block_task::{run_block, BlockTaskCfg};
+use crate::data::sparse::Coo;
+use crate::rng::Rng;
+
+/// Measure one synthetic block; returns seconds per sweep.
+fn measure(backend: &BlockBackend, n: usize, d: usize, nnz: usize, k: usize, seed: u64) -> f64 {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut coo = Coo::new(n, d);
+    let mut placed = 0usize;
+    while placed < nnz {
+        let r = rng.below(n);
+        let c = rng.below(d);
+        coo.push(r, c, (rng.uniform() * 4.0 + 1.0) as f32);
+        placed += 1;
+    }
+    let data = BlockData::new(coo);
+    let sweeps = 4usize;
+    let cfg = BlockTaskCfg {
+        k,
+        tau: 2.0,
+        burnin: sweeps - 2,
+        samples: 2,
+        workers: 1,
+        ridge: 1e-2,
+        seed,
+    };
+    let (_, stats) = run_block(backend, &data, &cfg, None, None).expect("calibration run");
+    stats.secs / stats.sweeps as f64
+}
+
+/// Calibrate (c_row, c_rating) on the given backend; other model fields
+/// keep their defaults.
+pub fn calibrate(backend: &BlockBackend, k: usize) -> ClusterModel {
+    let mut model = ClusterModel::default();
+    // measurement A: row-heavy (few ratings), B: rating-heavy
+    let (n, d) = (192, 192);
+    let t_a = measure(backend, n, d, 400, k, 1001);
+    let t_b = measure(backend, n, d, 8_000, k, 1002);
+
+    let k3 = (k * k * k) as f64;
+    let k2 = (k * k) as f64;
+    let rows = (n + d) as f64;
+    // t_a = c_row k3 rows + c_rating k2 2·400
+    // t_b = c_row k3 rows + c_rating k2 2·8000
+    let c_rating = ((t_b - t_a) / (k2 * 2.0 * (8_000.0 - 400.0))).max(1e-13);
+    let c_row = ((t_a - c_rating * k2 * 2.0 * 400.0) / (k3 * rows)).max(1e-13);
+    model.c_rating = c_rating;
+    model.c_row = c_row;
+    log::info!(
+        "calibrated cluster model: c_row={:.3e} c_rating={:.3e} (t_a={t_a:.4}s t_b={t_b:.4}s)",
+        c_row,
+        c_rating
+    );
+    model
+}
+
+/// Predicted single-node seconds for a full dataset sweep set — a sanity
+/// hook comparing model vs measurement.
+pub fn predicted_secs(model: &ClusterModel, b: &BlockCost, k: usize, sweeps: usize) -> f64 {
+    model.block_compute_secs(b, k, sweeps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_produces_positive_rates() {
+        let backend = BlockBackend::Native;
+        let m = calibrate(&backend, 8);
+        assert!(m.c_row > 0.0 && m.c_rating > 0.0);
+        assert!(m.c_row < 1e-3 && m.c_rating < 1e-3, "rates implausibly slow");
+    }
+
+    #[test]
+    fn model_predicts_measurement_within_factor() {
+        // calibrate, then check a third configuration is predicted within
+        // a generous factor (cache effects etc.)
+        let backend = BlockBackend::Native;
+        let m = calibrate(&backend, 8);
+        let t = measure(&backend, 256, 256, 4_000, 8, 7);
+        let want = predicted_secs(
+            &m,
+            &BlockCost { rows: 256, cols: 256, nnz: 4_000 },
+            8,
+            1,
+        );
+        let ratio = t / want;
+        assert!(
+            (0.2..5.0).contains(&ratio),
+            "model {want:.5}s vs measured {t:.5}s (ratio {ratio:.2})"
+        );
+    }
+}

@@ -1,0 +1,7 @@
+//! Discrete-event cluster simulator for the strong-scaling studies
+//! (paper Figs. 4-5): executes the PP schedule on a modeled cluster of P
+//! nodes with a calibrated compute rate and an MPI-like communication model.
+
+pub mod calibrate;
+pub mod model;
+pub mod sim;

@@ -1,0 +1,205 @@
+//! Cost model of a distributed-BMF cluster (the Hazel-Hen substitute).
+//!
+//! Compute: a node samples factor rows at a rate governed by two
+//! calibrated coefficients — per-row cost (the K³ Cholesky/solve work) and
+//! per-rating cost (the K² precision accumulation). Communication: the
+//! within-block factor exchange each half-sweep is an allgather, modeled
+//! with the standard α-β (latency-bandwidth) form
+//!
+//!   t = α ⌈log2 w⌉ + β · bytes · (w-1)/w .
+//!
+//! Defaults for α/β follow a Cray-Aries-class interconnect (~1.5 µs
+//! latency, ~10 GB/s effective per-node bandwidth); the compute
+//! coefficients come from `calibrate::calibrate()` on the actual backend.
+
+/// Communication backend of the within-block factor exchange — the paper's
+/// future-work item #3 compares the MPI allgather implementation against
+/// the GASPI one-sided implementation of Vander Aa et al. 2017.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommBackend {
+    /// Two-sided collective: synchronizing allgather each half-sweep.
+    Mpi,
+    /// One-sided asynchronous puts: communication overlaps the next
+    /// shard's compute; only the non-overlappable fraction is exposed.
+    Gaspi,
+}
+
+/// Calibrated + configured cluster parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterModel {
+    /// Seconds per factor row per sweep, divided by k³ (Cholesky term).
+    pub c_row: f64,
+    /// Seconds per rating per sweep, divided by k² (accumulation term).
+    pub c_rating: f64,
+    /// Allgather latency per hop (seconds).
+    pub alpha: f64,
+    /// Inverse bandwidth (seconds per byte).
+    pub beta: f64,
+    /// Max useful nodes inside one block (paper: scaling saturates ~128).
+    pub within_block_cap: usize,
+    pub comm: CommBackend,
+    /// GASPI: fraction of communication hidden behind compute (0..1).
+    pub overlap: f64,
+}
+
+impl Default for ClusterModel {
+    fn default() -> Self {
+        ClusterModel {
+            // ballpark CPU rates; calibrate() overwrites the first two
+            c_row: 2.0e-9,
+            c_rating: 1.2e-9,
+            alpha: 1.5e-6,
+            beta: 1.0 / 10.0e9,
+            within_block_cap: 128,
+            comm: CommBackend::Mpi,
+            overlap: 0.7,
+        }
+    }
+}
+
+/// One block's workload for the simulator.
+#[derive(Debug, Clone, Copy)]
+pub struct BlockCost {
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+}
+
+impl ClusterModel {
+    /// Single-node compute seconds for `sweeps` full Gibbs sweeps on a block.
+    pub fn block_compute_secs(&self, b: &BlockCost, k: usize, sweeps: usize) -> f64 {
+        let k3 = (k * k * k) as f64;
+        let k2 = (k * k) as f64;
+        let per_sweep = self.c_row * k3 * (b.rows + b.cols) as f64
+            + self.c_rating * k2 * 2.0 * b.nnz as f64;
+        per_sweep * sweeps as f64
+    }
+
+    /// Allgather time of `bytes` over `w` nodes.
+    pub fn allgather_secs(&self, bytes: f64, w: usize) -> f64 {
+        if w <= 1 {
+            return 0.0;
+        }
+        let hops = (w as f64).log2().ceil();
+        self.alpha * hops + self.beta * bytes * (w as f64 - 1.0) / w as f64
+    }
+
+    /// Wall-clock of one block processed by `w` nodes (distributed BMF):
+    /// compute divides across nodes; each sweep pays two factor-side
+    /// exchanges (U then V, paper Fig. 2). With the GASPI backend the
+    /// overlappable fraction of each exchange hides behind compute, but
+    /// never more communication than there is compute to hide it behind.
+    pub fn block_secs(&self, b: &BlockCost, k: usize, sweeps: usize, w: usize) -> f64 {
+        let w = w.clamp(1, self.within_block_cap);
+        let compute = self.block_compute_secs(b, k, sweeps) / w as f64;
+        let bytes_u = (b.rows * k * 4) as f64;
+        let bytes_v = (b.cols * k * 4) as f64;
+        let comm = sweeps as f64
+            * (self.allgather_secs(bytes_u, w) + self.allgather_secs(bytes_v, w));
+        match self.comm {
+            CommBackend::Mpi => compute + comm,
+            CommBackend::Gaspi => {
+                let hidden = (comm * self.overlap).min(compute);
+                compute + comm - hidden
+            }
+        }
+    }
+
+    /// Nodes beyond which adding more stops helping for this block
+    /// (d block_secs / d w ≥ 0): the strong-scaling knee.
+    pub fn saturation_nodes(&self, b: &BlockCost, k: usize, sweeps: usize) -> usize {
+        let mut best = (f64::INFINITY, 1usize);
+        let mut w = 1usize;
+        while w <= self.within_block_cap {
+            let t = self.block_secs(b, k, sweeps, w);
+            if t < best.0 {
+                best = (t, w);
+            }
+            w *= 2;
+        }
+        best.1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn block() -> BlockCost {
+        BlockCost { rows: 10_000, cols: 5_000, nnz: 2_000_000 }
+    }
+
+    #[test]
+    fn compute_scales_with_k_and_sweeps() {
+        let m = ClusterModel::default();
+        let b = block();
+        let t1 = m.block_compute_secs(&b, 16, 10);
+        assert!(m.block_compute_secs(&b, 32, 10) > 3.0 * t1, "K³ scaling");
+        assert!((m.block_compute_secs(&b, 16, 20) / t1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn more_nodes_help_until_saturation() {
+        let m = ClusterModel::default();
+        let b = block();
+        let t1 = m.block_secs(&b, 16, 10, 1);
+        let t8 = m.block_secs(&b, 16, 10, 8);
+        assert!(t8 < t1 / 4.0, "8 nodes should be ≥4x faster: {t1} vs {t8}");
+        // a tiny block saturates strictly before the cap; a huge block
+        // saturates later than the tiny one
+        let tiny = BlockCost { rows: 100, cols: 100, nnz: 500 };
+        let sat_tiny = m.saturation_nodes(&tiny, 8, 10);
+        assert!(sat_tiny < m.within_block_cap, "tiny block saturated at {sat_tiny}");
+        let sat_big = m.saturation_nodes(&block(), 32, 10);
+        assert!(sat_big >= sat_tiny, "big {sat_big} vs tiny {sat_tiny}");
+    }
+
+    #[test]
+    fn allgather_grows_with_nodes_and_bytes() {
+        let m = ClusterModel::default();
+        assert_eq!(m.allgather_secs(1e6, 1), 0.0);
+        assert!(m.allgather_secs(1e6, 4) > m.allgather_secs(1e6, 2));
+        assert!(m.allgather_secs(2e6, 4) > m.allgather_secs(1e6, 4));
+    }
+
+    #[test]
+    fn gaspi_overlap_beats_mpi_when_comm_bound() {
+        let mut mpi = ClusterModel::default();
+        mpi.comm = CommBackend::Mpi;
+        let mut gaspi = mpi;
+        gaspi.comm = CommBackend::Gaspi;
+        let b = block();
+        for w in [2usize, 8, 32, 128] {
+            let t_mpi = mpi.block_secs(&b, 16, 10, w);
+            let t_gaspi = gaspi.block_secs(&b, 16, 10, w);
+            assert!(t_gaspi <= t_mpi, "w={w}: gaspi {t_gaspi} > mpi {t_mpi}");
+        }
+        // single node: no communication, identical
+        assert_eq!(mpi.block_secs(&b, 16, 10, 1), gaspi.block_secs(&b, 16, 10, 1));
+    }
+
+    #[test]
+    fn gaspi_cannot_hide_more_than_compute() {
+        let mut gaspi = ClusterModel::default();
+        gaspi.comm = CommBackend::Gaspi;
+        gaspi.overlap = 1.0;
+        // a tiny block at many nodes is pure communication; hidden part is
+        // bounded by the (tiny) compute share
+        let tiny = BlockCost { rows: 64, cols: 64, nnz: 100 };
+        let t = gaspi.block_secs(&tiny, 8, 10, 64);
+        let compute = gaspi.block_compute_secs(&tiny, 8, 10) / 64.0;
+        assert!(t >= compute, "time below compute floor");
+        let bytes = (64 * 8 * 4) as f64;
+        let comm = 10.0 * 2.0 * gaspi.allgather_secs(bytes, 64);
+        assert!(t >= comm - compute, "hid more than compute");
+    }
+
+    #[test]
+    fn cap_limits_within_block_nodes() {
+        let m = ClusterModel::default();
+        let b = block();
+        let t_cap = m.block_secs(&b, 16, 10, m.within_block_cap);
+        let t_over = m.block_secs(&b, 16, 10, m.within_block_cap * 8);
+        assert_eq!(t_cap, t_over);
+    }
+}

@@ -1,0 +1,214 @@
+//! Posterior aggregation (paper §2.2 final step; Qin et al. 2019 §3):
+//! combine the subset posteriors from phases (a)-(c) and divide away the
+//! multiply-counted propagated marginals.
+//!
+//! For a factor sub-matrix that was used as a prior by `m` downstream
+//! blocks, the product of the m downstream posteriors counts that prior m
+//! times while the true joint counts it once, so the aggregate is
+//!
+//!   q_agg = [ Π_{t=1..m} q_t ] / q_prior^{m-1}
+//!
+//! which in Gaussian natural parameters is
+//!   prec_agg = Σ prec_t − (m−1)·prec_prior
+//!   h_agg    = Σ prec_t μ_t − (m−1)·prec_prior μ_prior.
+
+use crate::linalg::Cholesky;
+use crate::posterior::RowGaussians;
+
+/// Aggregate `posts` (≥1) that each consumed `prior` once.
+/// `prior=None` is only valid for a single posterior (no division needed).
+pub fn aggregate_rows(
+    posts: &[&RowGaussians],
+    prior: Option<&RowGaussians>,
+    ridge: f64,
+) -> RowGaussians {
+    assert!(!posts.is_empty());
+    let (n, k) = (posts[0].n, posts[0].k);
+    for p in posts {
+        assert_eq!((p.n, p.k), (n, k), "posterior shape mismatch");
+    }
+    if posts.len() == 1 && prior.is_none() {
+        return posts[0].clone();
+    }
+    let m = posts.len() as f64;
+    let prior = prior.expect("aggregating multiple posteriors requires the shared prior");
+    assert_eq!((prior.n, prior.k), (n, k));
+
+    let mut out = posts[0].clone();
+    for i in 0..n {
+        let mut sum_prec = posts[0].row_prec(i);
+        let mut sum_h = posts[0].row_prec(i).matvec(posts[0].row_mean(i));
+        for p in &posts[1..] {
+            let pp = p.row_prec(i);
+            sum_prec.add_scaled(&pp, 1.0);
+            let hp = pp.matvec(p.row_mean(i));
+            for (a, b) in sum_h.iter_mut().zip(hp) {
+                *a += b;
+            }
+        }
+        let prior_prec = prior.row_prec(i);
+        let prior_h = prior_prec.matvec(prior.row_mean(i));
+
+        // The exact correction subtracts (m-1)·prior. With finite-sample
+        // posteriors the subtraction can lose positive-definiteness, and
+        // forcing it SPD with a ridge yields wildly inconsistent means.
+        // Instead scale the correction by the largest γ ∈ [0, 1] that
+        // keeps the precision comfortably SPD — γ=1 is the exact PP
+        // aggregate; γ→0 degrades smoothly to a product-of-experts.
+        // SPD alone is not enough: a subtraction that leaves a near-zero
+        // eigenvalue passes Cholesky but produces an exploding mean solve.
+        // Require the smallest eigenvalue to clear a margin proportional
+        // to the summed precision's scale.
+        let margin = 0.02 * (0..k).map(|d| sum_prec[(d, d)]).sum::<f64>() / k as f64 + ridge;
+        let attempt = |gamma: f64| -> Option<(crate::linalg::Mat, Cholesky)> {
+            let mut prec = sum_prec.clone();
+            prec.add_scaled(&prior_prec, -gamma * (m - 1.0));
+            prec.symmetrize();
+            // margin test: prec − margin·I must itself be SPD
+            let mut test = prec.clone();
+            for d in 0..k {
+                test[(d, d)] -= margin;
+            }
+            Cholesky::new(&test).ok()?;
+            for d in 0..k {
+                prec[(d, d)] += ridge;
+            }
+            Cholesky::new(&prec).ok().map(|c| (prec, c))
+        };
+        let gamma = if attempt(1.0).is_some() {
+            1.0
+        } else {
+            let (mut lo, mut hi) = (0.0f64, 1.0f64);
+            for _ in 0..24 {
+                let mid = 0.5 * (lo + hi);
+                if attempt(mid).is_some() {
+                    lo = mid;
+                } else {
+                    hi = mid;
+                }
+            }
+            0.9 * lo // safety margin inside the feasible region
+        };
+        // final fallback: even γ=0 can fail the *margin* test when the
+        // summed posterior has a genuinely tiny eigenvalue — accept the
+        // plain ridged sum there (no subtraction, no margin requirement)
+        let (gamma, prec, chol) = match attempt(gamma) {
+            Some((p, c)) => (gamma, p, c),
+            None => {
+                let mut p = sum_prec.clone();
+                p.symmetrize();
+                for d in 0..k {
+                    p[(d, d)] += ridge + margin;
+                }
+                let c = Cholesky::new(&p).expect("ridged SPD sum");
+                (0.0, p, c)
+            }
+        };
+        // h uses the same γ so (prec, h) stay a consistent natural pair
+        let mut h = sum_h.clone();
+        for (a, b) in h.iter_mut().zip(&prior_h) {
+            *a -= gamma * (m - 1.0) * b;
+        }
+        let mut mean = chol.solve(&h);
+        // trust region: the aggregate mean cannot legitimately exceed the
+        // largest input mean by much; if it does, the correction was still
+        // ill-conditioned — fall back to the conservative γ=0 aggregate.
+        let in_scale = posts
+            .iter()
+            .map(|p| p.row_mean(i).iter().fold(0.0f64, |a, &b| a.max(b.abs())))
+            .fold(0.0f64, f64::max);
+        let out_scale = mean.iter().fold(0.0f64, |a, &b| a.max(b.abs()));
+        let (prec, mean) = if gamma > 0.0 && out_scale > 5.0 * in_scale + 1e-6 {
+            let (prec0, chol0) = attempt(0.0).expect("sum of SPD posteriors is SPD");
+            mean = chol0.solve(&sum_h);
+            (prec0, mean)
+        } else {
+            (prec, mean)
+        };
+        out.mean[i * k..(i + 1) * k].copy_from_slice(&mean);
+        out.prec[i * k * k..(i + 1) * k * k].copy_from_slice(&prec.data);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rng::Rng;
+
+    fn gaussians(n: usize, k: usize, seed: u64) -> RowGaussians {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut g = RowGaussians::standard(n, k, 1.0);
+        for i in 0..n {
+            let mut a = Mat::zeros(k, k);
+            for v in a.data.iter_mut() {
+                *v = rng.uniform() - 0.5;
+            }
+            let mut spd = a.matmul(&a.transpose());
+            for d in 0..k {
+                spd[(d, d)] += 1.5;
+            }
+            let mean: Vec<f64> = (0..k).map(|_| rng.uniform() * 2.0 - 1.0).collect();
+            g.mean[i * k..(i + 1) * k].copy_from_slice(&mean);
+            g.prec[i * k * k..(i + 1) * k * k].copy_from_slice(&spd.data);
+        }
+        g
+    }
+
+    #[test]
+    fn single_posterior_passthrough() {
+        let p = gaussians(4, 3, 1);
+        let agg = aggregate_rows(&[&p], None, 1e-6);
+        assert_eq!(agg.mean, p.mean);
+        assert_eq!(agg.prec, p.prec);
+    }
+
+    #[test]
+    fn exact_gaussian_case_recovers_joint() {
+        // Construct the exact conjugate situation: prior q0; two "data
+        // likelihoods" L1, L2 as Gaussians. Posteriors q1 = q0·L1,
+        // q2 = q0·L2 (computed by combine). True joint = q0·L1·L2.
+        // aggregate([q1, q2], prior=q0) must equal the true joint.
+        let q0 = gaussians(5, 3, 2);
+        let l1 = gaussians(5, 3, 3);
+        let l2 = gaussians(5, 3, 4);
+        let q1 = q0.combine(&l1);
+        let q2 = q0.combine(&l2);
+        let truth = q0.combine(&l1).combine(&l2);
+        let agg = aggregate_rows(&[&q1, &q2], Some(&q0), 1e-10);
+        for i in 0..5 {
+            assert!(
+                agg.row_prec(i).max_abs_diff(&truth.row_prec(i)) < 1e-8,
+                "prec row {i}"
+            );
+            for (a, b) in agg.row_mean(i).iter().zip(truth.row_mean(i)) {
+                assert!((a - b).abs() < 1e-8, "mean row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn three_way_aggregation() {
+        let q0 = gaussians(3, 2, 5);
+        let ls: Vec<RowGaussians> = (0..3).map(|t| gaussians(3, 2, 10 + t)).collect();
+        let posts: Vec<RowGaussians> = ls.iter().map(|l| q0.combine(l)).collect();
+        let mut truth = q0.clone();
+        for l in &ls {
+            truth = truth.combine(l);
+        }
+        let refs: Vec<&RowGaussians> = posts.iter().collect();
+        let agg = aggregate_rows(&refs, Some(&q0), 1e-10);
+        for i in 0..3 {
+            assert!(agg.row_prec(i).max_abs_diff(&truth.row_prec(i)) < 1e-8);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn multiple_posts_without_prior_panics() {
+        let a = gaussians(2, 2, 6);
+        let b = gaussians(2, 2, 7);
+        let _ = aggregate_rows(&[&a, &b], None, 1e-6);
+    }
+}

@@ -1,0 +1,143 @@
+//! Model checkpointing: persist a trained `TrainResult` (posterior means +
+//! precisions) to a JSON file and restore it — restartable pipelines and
+//! offline serving of the factorization.
+
+use super::trainer::{PhaseTimings, RunStats, TrainResult};
+use crate::posterior::RowGaussians;
+use crate::util::json::{self, Json};
+use std::path::Path;
+
+fn vec_to_json(v: &[f64]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
+}
+
+fn json_to_vec(j: &Json) -> Option<Vec<f64>> {
+    Some(j.as_arr()?.iter().filter_map(Json::as_f64).collect())
+}
+
+fn gaussians_to_json(g: &RowGaussians) -> Json {
+    Json::obj(vec![
+        ("n", g.n.into()),
+        ("k", g.k.into()),
+        ("mean", vec_to_json(&g.mean)),
+        ("prec", vec_to_json(&g.prec)),
+    ])
+}
+
+fn gaussians_from_json(j: &Json) -> Option<RowGaussians> {
+    let n = j.get("n")?.as_usize()?;
+    let k = j.get("k")?.as_usize()?;
+    let mean = json_to_vec(j.get("mean")?)?;
+    let prec = json_to_vec(j.get("prec")?)?;
+    if mean.len() != n * k || prec.len() != n * k * k {
+        return None;
+    }
+    Some(RowGaussians { n, k, mean, prec })
+}
+
+/// Save a trained model.
+pub fn save(result: &TrainResult, path: &Path) -> std::io::Result<()> {
+    let root = Json::obj(vec![
+        ("version", 1usize.into()),
+        ("k", result.k.into()),
+        ("grid_i", result.grid.0.into()),
+        ("grid_j", result.grid.1.into()),
+        ("global_mean", result.global_mean.into()),
+        ("u_post", gaussians_to_json(&result.u_post)),
+        ("v_post", gaussians_to_json(&result.v_post)),
+    ]);
+    std::fs::write(path, json::to_string(&root))
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CheckpointError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("malformed checkpoint: {0}")]
+    Malformed(String),
+}
+
+/// Load a trained model (timings/stats are zeroed — they describe a run,
+/// not a model).
+pub fn load(path: &Path) -> Result<TrainResult, CheckpointError> {
+    let text = std::fs::read_to_string(path)?;
+    let root =
+        json::parse(&text).map_err(|e| CheckpointError::Malformed(e.to_string()))?;
+    let bad = |m: &str| CheckpointError::Malformed(m.to_string());
+    let k = root.get("k").and_then(Json::as_usize).ok_or_else(|| bad("k"))?;
+    let gi = root.get("grid_i").and_then(Json::as_usize).ok_or_else(|| bad("grid_i"))?;
+    let gj = root.get("grid_j").and_then(Json::as_usize).ok_or_else(|| bad("grid_j"))?;
+    let global_mean =
+        root.get("global_mean").and_then(Json::as_f64).ok_or_else(|| bad("global_mean"))?;
+    let u_post = root
+        .get("u_post")
+        .and_then(gaussians_from_json)
+        .ok_or_else(|| bad("u_post"))?;
+    let v_post = root
+        .get("v_post")
+        .and_then(gaussians_from_json)
+        .ok_or_else(|| bad("v_post"))?;
+    if u_post.k != k || v_post.k != k {
+        return Err(bad("latent dim mismatch"));
+    }
+    let u_mean: Vec<f32> = u_post.mean.iter().map(|&x| x as f32).collect();
+    let v_mean: Vec<f32> = v_post.mean.iter().map(|&x| x as f32).collect();
+    Ok(TrainResult {
+        k,
+        grid: (gi, gj),
+        u_post,
+        v_post,
+        u_mean,
+        v_mean,
+        global_mean,
+        timings: PhaseTimings::default(),
+        stats: RunStats::default(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BackendSpec, PpTrainer, TrainConfig};
+    use crate::data::generator::SyntheticDataset;
+    use crate::data::split::holdout_split_covered;
+
+    #[test]
+    fn roundtrip_preserves_predictions() {
+        let d = SyntheticDataset::by_name("movielens", 0.001, 44).unwrap();
+        let (train, test) = holdout_split_covered(&d.ratings, 0.2, 45);
+        let cfg = TrainConfig::new(d.k)
+            .with_sweeps(4, 8)
+            .with_backend(BackendSpec::Native)
+            .with_seed(46);
+        let result = PpTrainer::new(cfg).train(&train).unwrap();
+        let path = std::env::temp_dir().join(format!("bmfpp_ckpt_{}.json", std::process::id()));
+        save(&result, &path).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.k, result.k);
+        assert!((loaded.rmse(&test) - result.rmse(&test)).abs() < 1e-6);
+        // uncertainty survives too
+        let v1 = result.predict_variance(0, 0);
+        let v2 = loaded.predict_variance(0, 0);
+        assert!((v1 - v2).abs() < 1e-9 * v1.abs().max(1.0));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_malformed_files() {
+        let path = std::env::temp_dir().join(format!("bmfpp_bad_{}.json", std::process::id()));
+        std::fs::write(&path, "{\"version\": 1}").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::write(&path, "not json").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn missing_file_is_io_error() {
+        assert!(matches!(
+            load(Path::new("/definitely/missing.json")),
+            Err(CheckpointError::Io(_))
+        ));
+    }
+}

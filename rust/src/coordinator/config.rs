@@ -1,0 +1,176 @@
+//! Training configuration for D-BMF+PP.
+
+use std::path::PathBuf;
+
+/// Which compute backend executes the Gibbs half-sweeps.
+#[derive(Debug, Clone)]
+pub enum BackendSpec {
+    /// Pure-rust sampler (oracle; also the plain-BMF baseline path).
+    Native,
+    /// AOT HLO artifacts through the PJRT runtime (the production path).
+    Hlo { artifact_dir: PathBuf },
+    /// HLO if the artifact directory exists, else native — for tests and
+    /// examples that should run pre-`make artifacts`.
+    Auto { artifact_dir: PathBuf },
+}
+
+impl BackendSpec {
+    /// Default: `Auto` over the repo's `artifacts/` directory.
+    pub fn auto_default() -> BackendSpec {
+        BackendSpec::Auto {
+            artifact_dir: std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+        }
+    }
+
+    /// Resolve Auto into Native/Hlo by checking the manifest.
+    pub fn resolve(&self) -> BackendSpec {
+        match self {
+            BackendSpec::Auto { artifact_dir } => {
+                if artifact_dir.join("manifest.json").exists() {
+                    BackendSpec::Hlo { artifact_dir: artifact_dir.clone() }
+                } else {
+                    BackendSpec::Native
+                }
+            }
+            other => other.clone(),
+        }
+    }
+}
+
+/// Heuristic residual-noise precision from the data: assumes the factor
+/// model explains ~75% of the centred rating variance, so the residual
+/// variance is ~25% and τ ≈ 4 / Var(r). Keeps τ sensible across rating
+/// scales (1-5 vs 0-100) without a hyperparameter search.
+pub fn auto_tau(train: &crate::data::sparse::Coo) -> f64 {
+    let mean = train.mean();
+    if train.nnz() == 0 {
+        return 2.0;
+    }
+    let var: f64 = train
+        .entries
+        .iter()
+        .map(|e| (e.val as f64 - mean).powi(2))
+        .sum::<f64>()
+        / train.nnz() as f64;
+    (4.0 / var.max(1e-9)).clamp(1e-4, 1e4)
+}
+
+/// Full configuration of a PP training run.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Latent dimension (must match an AOT artifact K when using HLO).
+    pub k: usize,
+    /// Residual noise precision τ.
+    pub tau: f64,
+    /// Block grid: I row-blocks × J column-blocks.
+    pub grid: (usize, usize),
+    /// Burn-in Gibbs sweeps per block before samples are retained.
+    pub burnin: usize,
+    /// Retained samples per block (posterior moments are formed from these).
+    pub samples: usize,
+    /// Within-block shard workers (the distributed-BMF level).
+    pub workers: usize,
+    /// Parallel block slots for phases (b) and (c).
+    pub block_parallelism: usize,
+    /// Ridge added when inverting sample covariances / dividing posteriors.
+    pub ridge: f64,
+    /// Base RNG seed.
+    pub seed: u64,
+    pub backend: BackendSpec,
+    /// Optional sweep-reduction for later phases (paper §4 future work):
+    /// phases b and c run `max(min_phase_sweeps, samples * frac)` retained
+    /// samples where `frac = phase_sample_frac`. 1.0 = paper default
+    /// (same samples for every block).
+    pub phase_sample_frac: f64,
+    pub min_phase_samples: usize,
+}
+
+impl TrainConfig {
+    pub fn new(k: usize) -> TrainConfig {
+        TrainConfig {
+            k,
+            tau: 2.0,
+            grid: (1, 1),
+            burnin: 8,
+            samples: 20,
+            workers: 1,
+            block_parallelism: std::thread::available_parallelism()
+                .map(|p| p.get().min(8))
+                .unwrap_or(4),
+            ridge: 1e-3,
+            seed: 42,
+            backend: BackendSpec::auto_default(),
+            phase_sample_frac: 1.0,
+            min_phase_samples: 4,
+        }
+    }
+
+    pub fn with_grid(mut self, i: usize, j: usize) -> Self {
+        self.grid = (i, j);
+        self
+    }
+
+    pub fn with_sweeps(mut self, burnin: usize, samples: usize) -> Self {
+        self.burnin = burnin;
+        self.samples = samples;
+        self
+    }
+
+    pub fn with_backend(mut self, backend: BackendSpec) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    pub fn with_tau(mut self, tau: f64) -> Self {
+        self.tau = tau;
+        self
+    }
+
+    /// Retained samples for a phase-(b)/(c) block under sweep reduction.
+    pub fn phase_samples(&self) -> usize {
+        ((self.samples as f64 * self.phase_sample_frac) as usize)
+            .max(self.min_phase_samples)
+            .min(self.samples)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_chains() {
+        let c = TrainConfig::new(8).with_grid(4, 2).with_sweeps(5, 10).with_seed(7);
+        assert_eq!(c.k, 8);
+        assert_eq!(c.grid, (4, 2));
+        assert_eq!(c.burnin, 5);
+        assert_eq!(c.samples, 10);
+        assert_eq!(c.seed, 7);
+    }
+
+    #[test]
+    fn phase_sample_reduction() {
+        let mut c = TrainConfig::new(8).with_sweeps(4, 20);
+        assert_eq!(c.phase_samples(), 20);
+        c.phase_sample_frac = 0.25;
+        assert_eq!(c.phase_samples(), 5);
+        c.phase_sample_frac = 0.0;
+        assert_eq!(c.phase_samples(), 4); // floor at min_phase_samples
+    }
+
+    #[test]
+    fn auto_backend_resolves() {
+        let spec = BackendSpec::Auto { artifact_dir: PathBuf::from("/definitely/not/here") };
+        assert!(matches!(spec.resolve(), BackendSpec::Native));
+    }
+}

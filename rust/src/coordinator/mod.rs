@@ -1,0 +1,28 @@
+//! The Layer-3 coordinator: Posterior Propagation over an I×J block grid
+//! with distributed Gibbs inside each block — the paper's contribution.
+//!
+//! Pipeline (paper §2.4, Fig. 1):
+//! 1. `partition::Grid` cuts R into blocks.
+//! 2. Phase (a): full joint Gibbs on block (0,0).
+//! 3. Phase (b): first-row and first-column blocks in parallel, consuming
+//!    phase-(a) posterior marginals as priors.
+//! 4. Phase (c): all remaining blocks in parallel, consuming phase-(b)
+//!    marginals.
+//! 5. `aggregate` combines subset posteriors, dividing away multiply-
+//!    counted propagated priors.
+//!
+//! Within each block, the Gibbs half-sweeps execute over row shards
+//! (`worker`) — the distributed-BMF-inside-a-block layer of the paper —
+//! through either the AOT HLO runtime or the native oracle backend.
+
+pub mod aggregate;
+pub mod backend;
+pub mod block_task;
+pub mod checkpoint;
+pub mod config;
+pub mod scheduler;
+pub mod trainer;
+pub mod worker;
+
+pub use config::{BackendSpec, TrainConfig};
+pub use trainer::{PpTrainer, TrainResult};

@@ -1,0 +1,177 @@
+//! Phase-parallel task scheduling on a persistent worker pool.
+//!
+//! Within a PP phase all block tasks are independent; across phases the
+//! expensive per-thread state (the PJRT engine: client + compiled
+//! executables) must be REUSED, so the pool outlives individual phases.
+//! Each worker thread instantiates its own `BlockBackend` once (the engine
+//! is thread-confined) and then serves jobs from a shared channel.
+
+use super::backend::BlockBackend;
+use super::config::BackendSpec;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+type Job = Box<dyn FnOnce(&BlockBackend) + Send>;
+
+/// A pool of worker threads, each owning one backend instance.
+pub struct WorkerPool {
+    tx: Option<Sender<Job>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    pub threads: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `threads` workers, each constructing its own backend from
+    /// `spec`. Backend construction errors surface on the first job.
+    pub fn new(spec: &BackendSpec, threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            let rx = rx.clone();
+            let spec = spec.clone();
+            handles.push(std::thread::spawn(move || {
+                let backend = BlockBackend::create(&spec);
+                loop {
+                    let job = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match job {
+                        Ok(job) => match &backend {
+                            Ok(b) => job(b),
+                            Err(e) => {
+                                // construct a fresh native backend so the job
+                                // can still report the error path cleanly
+                                log::error!("backend construction failed: {e:#}");
+                                job(&BlockBackend::Native);
+                            }
+                        },
+                        Err(_) => break, // pool dropped
+                    }
+                }
+            }));
+        }
+        WorkerPool { tx: Some(tx), handles, threads }
+    }
+
+    /// Run a batch of tasks to completion; results in task order.
+    pub fn run_phase<T, F>(&self, tasks: Vec<F>) -> anyhow::Result<Vec<T>>
+    where
+        T: Send + 'static,
+        F: FnOnce(&BlockBackend) -> anyhow::Result<T> + Send + 'static,
+    {
+        let n = tasks.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let (rtx, rrx): (Sender<(usize, anyhow::Result<T>)>, Receiver<_>) = channel();
+        for (idx, task) in tasks.into_iter().enumerate() {
+            let rtx = rtx.clone();
+            let job: Job = Box::new(move |backend| {
+                let out = task(backend);
+                let _ = rtx.send((idx, out));
+            });
+            self.tx.as_ref().expect("pool alive").send(job).expect("workers alive");
+        }
+        drop(rtx);
+        let mut slots: Vec<Option<anyhow::Result<T>>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (idx, res) = rrx.recv().map_err(|_| anyhow::anyhow!("worker pool hung up"))?;
+            slots[idx] = Some(res);
+        }
+        let mut out = Vec::with_capacity(n);
+        for (i, s) in slots.into_iter().enumerate() {
+            match s {
+                Some(Ok(v)) => out.push(v),
+                Some(Err(e)) => return Err(e.context(format!("phase task {i} failed"))),
+                None => anyhow::bail!("phase task {i} was never executed"),
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One-shot convenience used by tests and simple callers: builds a
+/// transient pool, runs the batch, tears it down.
+pub fn run_phase<T, F>(spec: &BackendSpec, slots: usize, tasks: Vec<F>) -> anyhow::Result<Vec<T>>
+where
+    T: Send + 'static,
+    F: FnOnce(&BlockBackend) -> anyhow::Result<T> + Send + 'static,
+{
+    WorkerPool::new(spec, slots.min(tasks.len().max(1))).run_phase(tasks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_tasks_in_order() {
+        let tasks: Vec<_> = (0..20)
+            .map(|i| move |_b: &BlockBackend| -> anyhow::Result<usize> { Ok(i * i) })
+            .collect();
+        let out = run_phase(&BackendSpec::Native, 4, tasks).unwrap();
+        assert_eq!(out, (0..20).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_survives_multiple_phases() {
+        let pool = WorkerPool::new(&BackendSpec::Native, 3);
+        for round in 0..4 {
+            let tasks: Vec<_> = (0..7)
+                .map(|i| move |_b: &BlockBackend| -> anyhow::Result<usize> { Ok(i + round) })
+                .collect();
+            let out = pool.run_phase(tasks).unwrap();
+            assert_eq!(out, (0..7).map(|i| i + round).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn propagates_task_errors() {
+        let tasks: Vec<_> = (0..4)
+            .map(|i| {
+                move |_b: &BlockBackend| -> anyhow::Result<usize> {
+                    if i == 2 {
+                        anyhow::bail!("boom");
+                    }
+                    Ok(i)
+                }
+            })
+            .collect();
+        let err = run_phase(&BackendSpec::Native, 2, tasks).unwrap_err();
+        assert!(format!("{err:#}").contains("boom"));
+    }
+
+    #[test]
+    fn empty_task_list() {
+        let tasks: Vec<fn(&BlockBackend) -> anyhow::Result<()>> = vec![];
+        assert!(run_phase(&BackendSpec::Native, 4, tasks).unwrap().is_empty());
+    }
+
+    #[test]
+    fn actually_parallel() {
+        let t0 = std::time::Instant::now();
+        let tasks: Vec<_> = (0..4)
+            .map(|_| {
+                move |_b: &BlockBackend| -> anyhow::Result<()> {
+                    std::thread::sleep(std::time::Duration::from_millis(50));
+                    Ok(())
+                }
+            })
+            .collect();
+        run_phase(&BackendSpec::Native, 4, tasks).unwrap();
+        let dt = t0.elapsed().as_millis();
+        assert!(dt < 160, "took {dt}ms — not parallel");
+    }
+}

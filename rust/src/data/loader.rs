@@ -1,0 +1,224 @@
+//! File loaders for users with the real datasets: CSV triplets
+//! (`row,col,value`, optional header) and MatrixMarket coordinate files.
+
+use super::sparse::Coo;
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+
+#[derive(Debug, thiserror::Error)]
+pub enum LoadError {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("parse error at line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+}
+
+fn perr<T>(line: usize, msg: impl Into<String>) -> Result<T, LoadError> {
+    Err(LoadError::Parse { line, msg: msg.into() })
+}
+
+/// Load `row,col,value` CSV (0- or 1-based ids auto-detected by `one_based`).
+/// Dimensions are inferred as max index + 1.
+pub fn load_csv(path: &Path, one_based: bool) -> Result<Coo, LoadError> {
+    let f = std::fs::File::open(path)?;
+    let reader = BufReader::new(f);
+    let mut entries = Vec::new();
+    let (mut max_r, mut max_c) = (0usize, 0usize);
+    for (i, line) in reader.lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = t.split([',', '\t', ' ']).filter(|s| !s.is_empty()).collect();
+        if parts.len() < 3 {
+            return perr(i + 1, format!("expected 3 fields, got {}", parts.len()));
+        }
+        // skip a header row
+        if i == 0 && parts[0].parse::<usize>().is_err() {
+            continue;
+        }
+        let r: usize = match parts[0].parse() {
+            Ok(v) => v,
+            Err(_) => return perr(i + 1, "bad row id"),
+        };
+        let c: usize = match parts[1].parse() {
+            Ok(v) => v,
+            Err(_) => return perr(i + 1, "bad col id"),
+        };
+        let v: f32 = match parts[2].parse() {
+            Ok(v) => v,
+            Err(_) => return perr(i + 1, "bad value"),
+        };
+        let off = usize::from(one_based);
+        if one_based && (r == 0 || c == 0) {
+            return perr(i + 1, "index 0 in one-based file");
+        }
+        let (r, c) = (r - off, c - off);
+        max_r = max_r.max(r);
+        max_c = max_c.max(c);
+        entries.push((r, c, v));
+    }
+    let mut coo = Coo::new(max_r + 1, max_c + 1);
+    for (r, c, v) in entries {
+        coo.push(r, c, v);
+    }
+    Ok(coo)
+}
+
+/// Load a MatrixMarket coordinate file (`%%MatrixMarket matrix coordinate ...`).
+pub fn load_matrix_market(path: &Path) -> Result<Coo, LoadError> {
+    let f = std::fs::File::open(path)?;
+    let reader = BufReader::new(f);
+    let mut lines = reader.lines().enumerate();
+
+    // header
+    let (_, first) = match lines.next() {
+        Some((i, l)) => (i, l?),
+        None => return perr(0, "empty file"),
+    };
+    if !first.starts_with("%%MatrixMarket") {
+        return perr(1, "missing MatrixMarket banner");
+    }
+    if !first.contains("coordinate") {
+        return perr(1, "only coordinate format supported");
+    }
+
+    let mut dims: Option<(usize, usize, usize)> = None;
+    let mut coo = Coo::new(0, 0);
+    let mut count = 0usize;
+    for (i, line) in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let parts: Vec<&str> = t.split_whitespace().collect();
+        match dims {
+            None => {
+                if parts.len() != 3 {
+                    return perr(i + 1, "bad size line");
+                }
+                let r = parts[0].parse().map_err(|_| LoadError::Parse {
+                    line: i + 1,
+                    msg: "bad rows".into(),
+                })?;
+                let c = parts[1].parse().map_err(|_| LoadError::Parse {
+                    line: i + 1,
+                    msg: "bad cols".into(),
+                })?;
+                let n = parts[2].parse().map_err(|_| LoadError::Parse {
+                    line: i + 1,
+                    msg: "bad nnz".into(),
+                })?;
+                dims = Some((r, c, n));
+                coo = Coo::new(r, c);
+            }
+            Some((r, c, _)) => {
+                if parts.len() < 2 {
+                    return perr(i + 1, "bad entry");
+                }
+                let er: usize = parts[0]
+                    .parse()
+                    .map_err(|_| LoadError::Parse { line: i + 1, msg: "bad row".into() })?;
+                let ec: usize = parts[1]
+                    .parse()
+                    .map_err(|_| LoadError::Parse { line: i + 1, msg: "bad col".into() })?;
+                let v: f32 = if parts.len() >= 3 {
+                    parts[2]
+                        .parse()
+                        .map_err(|_| LoadError::Parse { line: i + 1, msg: "bad val".into() })?
+                } else {
+                    1.0 // pattern matrices
+                };
+                if er == 0 || ec == 0 || er > r || ec > c {
+                    return perr(i + 1, "index out of bounds");
+                }
+                coo.push(er - 1, ec - 1, v);
+                count += 1;
+            }
+        }
+    }
+    match dims {
+        Some((_, _, n)) if n != count => perr(0, format!("nnz mismatch: header {n}, got {count}")),
+        Some(_) => Ok(coo),
+        None => perr(0, "missing size line"),
+    }
+}
+
+/// Save as CSV triplets (for exporting synthetic data).
+pub fn save_csv(coo: &Coo, path: &Path) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "row,col,value")?;
+    for e in &coo.entries {
+        writeln!(f, "{},{},{}", e.row, e.col, e.val)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str, content: &str) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("bmfpp_test_{name}_{}", std::process::id()));
+        std::fs::write(&p, content).unwrap();
+        p
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let p = tmp("csv1", "row,col,value\n0,1,3.5\n2,0,1.0\n");
+        let c = load_csv(&p, false).unwrap();
+        assert_eq!((c.rows, c.cols, c.nnz()), (3, 2, 2));
+        let out = std::env::temp_dir().join(format!("bmfpp_out_{}", std::process::id()));
+        save_csv(&c, &out).unwrap();
+        let c2 = load_csv(&out, false).unwrap();
+        assert_eq!(c2.nnz(), 2);
+        std::fs::remove_file(p).ok();
+        std::fs::remove_file(out).ok();
+    }
+
+    #[test]
+    fn csv_one_based_and_whitespace() {
+        let p = tmp("csv2", "1 1 4.0\n2\t3\t5.0\n");
+        let c = load_csv(&p, true).unwrap();
+        assert_eq!((c.rows, c.cols), (2, 3));
+        assert_eq!(c.entries[0].row, 0);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn csv_rejects_bad_lines() {
+        let p = tmp("csv3", "0,1\n");
+        assert!(load_csv(&p, false).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn matrix_market_ok() {
+        let p = tmp(
+            "mm1",
+            "%%MatrixMarket matrix coordinate real general\n% comment\n3 4 2\n1 2 0.5\n3 4 -1\n",
+        );
+        let c = load_matrix_market(&p).unwrap();
+        assert_eq!((c.rows, c.cols, c.nnz()), (3, 4, 2));
+        assert_eq!(c.entries[1].val, -1.0);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn matrix_market_detects_nnz_mismatch() {
+        let p = tmp("mm2", "%%MatrixMarket matrix coordinate real general\n2 2 3\n1 1 1.0\n");
+        assert!(load_matrix_market(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn matrix_market_rejects_oob() {
+        let p = tmp("mm3", "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n");
+        assert!(load_matrix_market(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+}

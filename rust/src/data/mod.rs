@@ -1,0 +1,12 @@
+//! Data substrate: sparse rating matrices, synthetic web-scale dataset
+//! profiles (Movielens / Netflix / Yahoo / Amazon analogues), file loaders
+//! and train/test splitting.
+
+pub mod generator;
+pub mod loader;
+pub mod sparse;
+pub mod split;
+pub mod stats;
+
+pub use generator::{DatasetProfile, SyntheticDataset};
+pub use sparse::{Coo, Csr, Entry};

@@ -1,0 +1,264 @@
+//! Sparse matrix representations for rating data.
+//!
+//! `Coo` is the interchange/build format; `Csr` the compute format (row
+//! iteration for the U-side; `Csr::transpose` yields the V-side). Block
+//! extraction (`Coo::slice_block`) is what the Posterior-Propagation grid
+//! partitioner uses.
+
+/// One observed rating.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Entry {
+    pub row: u32,
+    pub col: u32,
+    pub val: f32,
+}
+
+/// Coordinate-format sparse matrix.
+#[derive(Debug, Clone, Default)]
+pub struct Coo {
+    pub rows: usize,
+    pub cols: usize,
+    pub entries: Vec<Entry>,
+}
+
+impl Coo {
+    pub fn new(rows: usize, cols: usize) -> Coo {
+        Coo { rows, cols, entries: Vec::new() }
+    }
+
+    pub fn push(&mut self, row: usize, col: usize, val: f32) {
+        debug_assert!(row < self.rows && col < self.cols);
+        self.entries.push(Entry { row: row as u32, col: col as u32, val });
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Density = nnz / (rows*cols); the paper's "sparsity" is 1/density.
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
+    }
+
+    /// Extract the sub-matrix [r0, r1) × [c0, c1) with re-based indices.
+    pub fn slice_block(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Coo {
+        let mut out = Coo::new(r1 - r0, c1 - c0);
+        for e in &self.entries {
+            let (r, c) = (e.row as usize, e.col as usize);
+            if r >= r0 && r < r1 && c >= c0 && c < c1 {
+                out.push(r - r0, c - c0, e.val);
+            }
+        }
+        out
+    }
+
+    /// Mean rating over observed entries.
+    pub fn mean(&self) -> f64 {
+        if self.entries.is_empty() {
+            return 0.0;
+        }
+        self.entries.iter().map(|e| e.val as f64).sum::<f64>() / self.nnz() as f64
+    }
+
+    /// Densify into row-major ratings + mask buffers of shape (pad_rows,
+    /// pad_cols), zero-padded — the layout the AOT `sample_side` artifact
+    /// consumes. `transpose=true` writes the transposed block (V-side).
+    pub fn to_dense_padded(
+        &self,
+        pad_rows: usize,
+        pad_cols: usize,
+        transpose: bool,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let (er, ec) = if transpose { (self.cols, self.rows) } else { (self.rows, self.cols) };
+        assert!(er <= pad_rows && ec <= pad_cols, "block larger than pad target");
+        let mut ratings = vec![0.0f32; pad_rows * pad_cols];
+        let mut mask = vec![0.0f32; pad_rows * pad_cols];
+        for e in &self.entries {
+            let (mut r, mut c) = (e.row as usize, e.col as usize);
+            if transpose {
+                std::mem::swap(&mut r, &mut c);
+            }
+            ratings[r * pad_cols + c] = e.val;
+            mask[r * pad_cols + c] = 1.0;
+        }
+        (ratings, mask)
+    }
+}
+
+/// Compressed sparse row matrix.
+#[derive(Debug, Clone)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl Csr {
+    pub fn from_coo(coo: &Coo) -> Csr {
+        let mut counts = vec![0usize; coo.rows + 1];
+        for e in &coo.entries {
+            counts[e.row as usize + 1] += 1;
+        }
+        for i in 0..coo.rows {
+            counts[i + 1] += counts[i];
+        }
+        let indptr = counts.clone();
+        let mut next = counts;
+        let mut indices = vec![0u32; coo.nnz()];
+        let mut values = vec![0.0f32; coo.nnz()];
+        for e in &coo.entries {
+            let slot = next[e.row as usize];
+            indices[slot] = e.col;
+            values[slot] = e.val;
+            next[e.row as usize] += 1;
+        }
+        Csr { rows: coo.rows, cols: coo.cols, indptr, indices, values }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// (column indices, values) of row i.
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let (a, b) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[a..b], &self.values[a..b])
+    }
+
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.indptr[i + 1] - self.indptr[i]
+    }
+
+    /// CSR of the transpose (i.e. CSC view of self) — the V-side access path.
+    pub fn transpose(&self) -> Csr {
+        let mut coo = Coo::new(self.cols, self.rows);
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            for (c, v) in cols.iter().zip(vals) {
+                coo.push(*c as usize, r, *v);
+            }
+        }
+        Csr::from_coo(&coo)
+    }
+
+    /// Copy rows [a, b) into a standalone CSR (column space unchanged) —
+    /// the shard extraction used by within-block distributed workers.
+    pub fn slice_rows(&self, a: usize, b: usize) -> Csr {
+        assert!(a <= b && b <= self.rows);
+        let (lo, hi) = (self.indptr[a], self.indptr[b]);
+        Csr {
+            rows: b - a,
+            cols: self.cols,
+            indptr: self.indptr[a..=b].iter().map(|p| p - lo).collect(),
+            indices: self.indices[lo..hi].to_vec(),
+            values: self.values[lo..hi].to_vec(),
+        }
+    }
+
+    pub fn to_coo(&self) -> Coo {
+        let mut coo = Coo::new(self.rows, self.cols);
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            for (c, v) in cols.iter().zip(vals) {
+                coo.push(r, *c as usize, *v);
+            }
+        }
+        coo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Coo {
+        let mut c = Coo::new(3, 4);
+        c.push(0, 1, 1.0);
+        c.push(2, 3, 2.0);
+        c.push(1, 0, 3.0);
+        c.push(2, 0, 4.0);
+        c
+    }
+
+    #[test]
+    fn coo_basics() {
+        let c = sample();
+        assert_eq!(c.nnz(), 4);
+        assert!((c.density() - 4.0 / 12.0).abs() < 1e-12);
+        assert!((c.mean() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csr_roundtrip() {
+        let c = sample();
+        let m = Csr::from_coo(&c);
+        assert_eq!(m.nnz(), 4);
+        let (cols, vals) = m.row(2);
+        // within a row, order follows insertion order of COO entries
+        let mut pairs: Vec<_> = cols.iter().zip(vals).collect();
+        pairs.sort_by_key(|(c, _)| **c);
+        assert_eq!(pairs.len(), 2);
+        assert_eq!(*pairs[0].0, 0);
+        assert_eq!(*pairs[0].1, 4.0);
+        let back = m.to_coo();
+        assert_eq!(back.nnz(), 4);
+    }
+
+    #[test]
+    fn transpose_swaps() {
+        let m = Csr::from_coo(&sample());
+        let t = m.transpose();
+        assert_eq!((t.rows, t.cols), (4, 3));
+        assert_eq!(t.nnz(), 4);
+        let (cols, vals) = t.row(0);
+        let mut pairs: Vec<_> = cols.iter().zip(vals).collect();
+        pairs.sort_by_key(|(c, _)| **c);
+        assert_eq!(pairs, vec![(&1u32, &3.0f32), (&2u32, &4.0f32)]);
+    }
+
+    #[test]
+    fn slice_block_rebases() {
+        let c = sample();
+        let b = c.slice_block(1, 3, 0, 2);
+        assert_eq!((b.rows, b.cols), (2, 2));
+        assert_eq!(b.nnz(), 2); // (1,0,3.0) -> (0,0), (2,0,4.0) -> (1,0)
+        assert!(b.entries.iter().any(|e| e.row == 0 && e.col == 0 && e.val == 3.0));
+        assert!(b.entries.iter().any(|e| e.row == 1 && e.col == 0 && e.val == 4.0));
+    }
+
+    #[test]
+    fn dense_padded_layout_and_transpose() {
+        let c = sample();
+        let (r, m) = c.to_dense_padded(4, 5, false);
+        assert_eq!(r.len(), 20);
+        assert_eq!(r[0 * 5 + 1], 1.0);
+        assert_eq!(m[2 * 5 + 3], 1.0);
+        assert_eq!(m[3 * 5 + 4], 0.0); // padding
+        let (rt, mt) = c.to_dense_padded(5, 4, true);
+        assert_eq!(rt[1 * 4 + 0], 1.0); // (0,1) transposed to (1,0)
+        assert_eq!(mt[3 * 4 + 2], 1.0); // (2,3) -> (3,2)
+    }
+
+    #[test]
+    fn slice_rows_extracts_shard() {
+        let m = Csr::from_coo(&sample());
+        let shard = m.slice_rows(1, 3);
+        assert_eq!((shard.rows, shard.cols), (2, 4));
+        assert_eq!(shard.nnz(), 3);
+        let (cols, vals) = shard.row(0); // original row 1
+        assert_eq!((cols, vals), (&[0u32][..], &[3.0f32][..]));
+        // shards concatenated cover the original
+        let a = m.slice_rows(0, 1);
+        let b = m.slice_rows(1, 3);
+        assert_eq!(a.nnz() + b.nnz(), m.nnz());
+    }
+
+    #[test]
+    fn mask_sum_equals_nnz() {
+        let c = sample();
+        let (_, m) = c.to_dense_padded(3, 4, false);
+        assert_eq!(m.iter().sum::<f32>() as usize, c.nnz());
+    }
+}

@@ -1,0 +1,123 @@
+//! Train/test splitting of rating matrices.
+
+use super::sparse::Coo;
+use crate::rng::Rng;
+
+/// Split entries uniformly at random into (train, test) with `test_frac`
+/// of observations held out. Both matrices keep the full dimensions.
+pub fn holdout_split(coo: &Coo, test_frac: f64, seed: u64) -> (Coo, Coo) {
+    assert!((0.0..1.0).contains(&test_frac));
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut idx: Vec<usize> = (0..coo.nnz()).collect();
+    rng.shuffle(&mut idx);
+    let n_test = (coo.nnz() as f64 * test_frac) as usize;
+    let mut train = Coo::new(coo.rows, coo.cols);
+    let mut test = Coo::new(coo.rows, coo.cols);
+    for (pos, &i) in idx.iter().enumerate() {
+        let e = coo.entries[i];
+        if pos < n_test {
+            test.entries.push(e);
+        } else {
+            train.entries.push(e);
+        }
+    }
+    (train, test)
+}
+
+/// Like `holdout_split` but guarantees every row and column with ≥2
+/// observations keeps at least one training observation (avoids cold-start
+/// rows distorting RMSE comparisons on small data).
+pub fn holdout_split_covered(coo: &Coo, test_frac: f64, seed: u64) -> (Coo, Coo) {
+    let (mut train, mut test) = holdout_split(coo, test_frac, seed);
+    let mut row_cnt = vec![0usize; coo.rows];
+    let mut col_cnt = vec![0usize; coo.cols];
+    for e in &train.entries {
+        row_cnt[e.row as usize] += 1;
+        col_cnt[e.col as usize] += 1;
+    }
+    // move test entries back to train where they are a row/col's only hope
+    let mut kept = Vec::with_capacity(test.entries.len());
+    for e in test.entries.drain(..) {
+        if row_cnt[e.row as usize] == 0 || col_cnt[e.col as usize] == 0 {
+            row_cnt[e.row as usize] += 1;
+            col_cnt[e.col as usize] += 1;
+            train.entries.push(e);
+        } else {
+            kept.push(e);
+        }
+    }
+    test.entries = kept;
+    (train, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generator::SyntheticDataset;
+    use crate::testing::prop;
+
+    #[test]
+    fn split_partitions_entries() {
+        let d = SyntheticDataset::by_name("movielens", 0.002, 1).unwrap();
+        let (tr, te) = holdout_split(&d.ratings, 0.2, 9);
+        assert_eq!(tr.nnz() + te.nnz(), d.ratings.nnz());
+        let want = (d.ratings.nnz() as f64 * 0.2) as usize;
+        assert_eq!(te.nnz(), want);
+    }
+
+    #[test]
+    fn covered_split_leaves_no_orphan_rows() {
+        let d = SyntheticDataset::by_name("amazon", 0.00002, 2).unwrap();
+        let (tr, te) = holdout_split_covered(&d.ratings, 0.25, 3);
+        let mut row_cnt = vec![0usize; tr.rows];
+        let mut col_cnt = vec![0usize; tr.cols];
+        for e in &tr.entries {
+            row_cnt[e.row as usize] += 1;
+            col_cnt[e.col as usize] += 1;
+        }
+        for e in &te.entries {
+            assert!(row_cnt[e.row as usize] > 0, "orphan row {}", e.row);
+            assert!(col_cnt[e.col as usize] > 0, "orphan col {}", e.col);
+        }
+    }
+
+    #[test]
+    fn prop_split_is_a_partition() {
+        prop::check(
+            20,
+            |g| {
+                let rows = g.size(4, 60);
+                let cols = g.size(4, 60);
+                let mut coo = Coo::new(rows, cols);
+                let n = g.size(1, rows * cols / 2);
+                for _ in 0..n {
+                    let r = g.usize_in(0, rows - 1);
+                    let c = g.usize_in(0, cols - 1);
+                    coo.push(r, c, g.f64_in(1.0, 5.0) as f32);
+                }
+                (coo, g.f64_in(0.0, 0.9))
+            },
+            |(coo, frac)| {
+                let (tr, te) = holdout_split(coo, *frac, 5);
+                if tr.nnz() + te.nnz() != coo.nnz() {
+                    return Err("entry count not preserved".into());
+                }
+                // multiset equality via sorted triplets
+                let mut a: Vec<_> =
+                    coo.entries.iter().map(|e| (e.row, e.col, e.val.to_bits())).collect();
+                let mut b: Vec<_> = tr
+                    .entries
+                    .iter()
+                    .chain(&te.entries)
+                    .map(|e| (e.row, e.col, e.val.to_bits()))
+                    .collect();
+                a.sort_unstable();
+                b.sort_unstable();
+                if a != b {
+                    return Err("entries mutated by split".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

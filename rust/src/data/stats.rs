@@ -1,0 +1,105 @@
+//! Dataset statistics — the rows of the paper's Table 1.
+
+use super::sparse::Coo;
+
+/// Table-1 style statistics for a rating matrix.
+#[derive(Debug, Clone)]
+pub struct DatasetStats {
+    pub rows: usize,
+    pub cols: usize,
+    pub ratings: usize,
+    /// Paper's "Sparsity": (#rows * #cols) / #ratings.
+    pub sparsity: f64,
+    pub ratings_per_row: f64,
+    pub rows_per_col: f64,
+    pub min_val: f32,
+    pub max_val: f32,
+    pub mean_val: f64,
+}
+
+impl DatasetStats {
+    pub fn compute(coo: &Coo) -> DatasetStats {
+        let mut min_val = f32::INFINITY;
+        let mut max_val = f32::NEG_INFINITY;
+        for e in &coo.entries {
+            min_val = min_val.min(e.val);
+            max_val = max_val.max(e.val);
+        }
+        if coo.entries.is_empty() {
+            min_val = 0.0;
+            max_val = 0.0;
+        }
+        DatasetStats {
+            rows: coo.rows,
+            cols: coo.cols,
+            ratings: coo.nnz(),
+            sparsity: (coo.rows as f64 * coo.cols as f64) / coo.nnz().max(1) as f64,
+            ratings_per_row: coo.nnz() as f64 / coo.rows.max(1) as f64,
+            rows_per_col: coo.rows as f64 / coo.cols.max(1) as f64,
+            min_val,
+            max_val,
+            mean_val: coo.mean(),
+        }
+    }
+
+    /// One formatted row of a Table-1 style report.
+    pub fn format_row(&self, name: &str) -> String {
+        format!(
+            "{name:<12} rows={:<9} cols={:<9} ratings={:<10} sparsity={:<10.1} r/row={:<8.1} rows/cols={:<6.2}",
+            self.rows, self.cols, self.ratings, self.sparsity, self.ratings_per_row, self.rows_per_col
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generator::{DatasetProfile, SyntheticDataset};
+
+    #[test]
+    fn stats_on_known_matrix() {
+        let mut c = Coo::new(10, 5);
+        c.push(0, 0, 1.0);
+        c.push(1, 1, 5.0);
+        let s = DatasetStats::compute(&c);
+        assert_eq!(s.ratings, 2);
+        assert_eq!(s.sparsity, 25.0);
+        assert_eq!(s.ratings_per_row, 0.2);
+        assert_eq!(s.rows_per_col, 2.0);
+        assert_eq!(s.min_val, 1.0);
+        assert_eq!(s.max_val, 5.0);
+        assert_eq!(s.mean_val, 3.0);
+    }
+
+    #[test]
+    fn synthetic_profiles_reproduce_table1_shape() {
+        // scaled synthetics must preserve the two key Table-1 shape stats
+        for p in DatasetProfile::all() {
+            let scale = match p.name {
+                "amazon" => 0.00003,
+                "yahoo" => 0.0004,
+                _ => 0.002,
+            };
+            let d = SyntheticDataset::generate(p.clone(), scale, 11);
+            let s = DatasetStats::compute(&d.ratings);
+            let aspect_err = (s.rows_per_col - p.aspect()).abs() / p.aspect();
+            assert!(aspect_err < 0.35, "{}: aspect {} vs {}", p.name, s.rows_per_col, p.aspect());
+            // ratings/row may be capped by density ceiling at tiny scales;
+            // allow under- but not over-shoot
+            assert!(
+                s.ratings_per_row <= p.ratings_per_row() * 1.3,
+                "{}: r/row {} vs {}",
+                p.name,
+                s.ratings_per_row,
+                p.ratings_per_row()
+            );
+        }
+    }
+
+    #[test]
+    fn empty_matrix_is_safe() {
+        let s = DatasetStats::compute(&Coo::new(3, 3));
+        assert_eq!(s.ratings, 0);
+        assert_eq!(s.mean_val, 0.0);
+    }
+}

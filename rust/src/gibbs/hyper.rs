@@ -1,0 +1,213 @@
+//! Normal-Wishart hyperparameter sampling (BPMF, Salakhutdinov & Mnih 2008).
+//!
+//! Conditional on the current factor matrix U (N rows of dim K), the
+//! hyperparameters (mu, Lambda) of the row prior N(mu, Lambda^{-1}) are
+//! sampled from their Normal-Wishart conditional:
+//!
+//!   Lambda ~ W(W*, nu0 + N)
+//!   mu | Lambda ~ N(mu*, (beta0 + N) Lambda)^{-1}
+//!
+//! with the standard posterior updates of (mu0, beta0, W0, nu0).
+
+use crate::linalg::{Cholesky, Mat};
+use crate::rng::{normal::StdNormal, wishart::sample_wishart, Rng};
+
+/// Normal-Wishart prior parameters.
+#[derive(Debug, Clone)]
+pub struct NormalWishartPrior {
+    pub mu0: Vec<f64>,
+    pub beta0: f64,
+    /// W0 scale matrix.
+    pub w0: Mat,
+    pub nu0: f64,
+}
+
+impl NormalWishartPrior {
+    /// The BPMF defaults: mu0 = 0, beta0 = 2, W0 = I, nu0 = K.
+    pub fn default_for_dim(k: usize) -> NormalWishartPrior {
+        NormalWishartPrior { mu0: vec![0.0; k], beta0: 2.0, w0: Mat::eye(k), nu0: k as f64 }
+    }
+}
+
+/// Sampled hyperparameters: row-prior mean and precision.
+#[derive(Debug, Clone)]
+pub struct HyperSample {
+    pub mu: Vec<f64>,
+    pub lambda: Mat,
+}
+
+/// Draw (mu, Lambda) conditional on factor rows `u` (row-major n × k).
+pub fn sample_hyper(
+    rng: &mut Rng,
+    prior: &NormalWishartPrior,
+    u: &[f64],
+    n: usize,
+    k: usize,
+) -> HyperSample {
+    assert_eq!(u.len(), n * k);
+    let nf = n as f64;
+
+    // sample mean and scatter
+    let mut ubar = vec![0.0; k];
+    for i in 0..n {
+        for j in 0..k {
+            ubar[j] += u[i * k + j];
+        }
+    }
+    if n > 0 {
+        for j in ubar.iter_mut() {
+            *j /= nf;
+        }
+    }
+    let mut scatter = Mat::zeros(k, k);
+    for i in 0..n {
+        let row = &u[i * k..(i + 1) * k];
+        for a in 0..k {
+            for b in 0..k {
+                scatter[(a, b)] += (row[a] - ubar[a]) * (row[b] - ubar[b]);
+            }
+        }
+    }
+
+    // posterior Normal-Wishart params
+    let beta_n = prior.beta0 + nf;
+    let nu_n = prior.nu0 + nf;
+    let mut mu_n = vec![0.0; k];
+    for j in 0..k {
+        mu_n[j] = (prior.beta0 * prior.mu0[j] + nf * ubar[j]) / beta_n;
+    }
+    // W_n^{-1} = W0^{-1} + S + beta0*N/(beta0+N) (ubar-mu0)(ubar-mu0)^T
+    let w0_inv = Cholesky::new(&prior.w0).expect("W0 SPD").inverse();
+    let mut wn_inv = w0_inv;
+    wn_inv.add_scaled(&scatter, 1.0);
+    let diff: Vec<f64> = (0..k).map(|j| ubar[j] - prior.mu0[j]).collect();
+    wn_inv.add_scaled(&Mat::outer(&diff, &diff), prior.beta0 * nf / beta_n);
+    wn_inv.symmetrize();
+    let wn = Cholesky::new(&wn_inv).expect("Wn^{-1} SPD").inverse();
+
+    // Lambda ~ W(Wn, nu_n)
+    let lambda = sample_wishart(rng, &wn, nu_n);
+
+    // mu ~ N(mu_n, (beta_n Lambda)^{-1})
+    let mut prec = lambda.clone();
+    prec.scale(beta_n);
+    let chol = Cholesky::new(&prec).expect("beta_n*Lambda SPD");
+    let mut norm = StdNormal::new();
+    let eps: Vec<f64> = (0..k).map(|_| norm.sample(rng)).collect();
+    let mu = chol.sample_with_precision(&mu_n, &eps);
+
+    HyperSample { mu, lambda }
+}
+
+/// Gamma(a0, b0) prior on the residual precision τ; conditional on the
+/// current factors the posterior is Gamma(a0 + n/2, b0 + SSE/2) — sampling
+/// τ instead of fixing it is the standard BPMF extension (the paper fixes
+/// τ; `TrainConfig::tau` / `auto_tau` covers that path).
+pub fn sample_tau(rng: &mut Rng, a0: f64, b0: f64, sse: f64, n_obs: usize) -> f64 {
+    let shape = a0 + n_obs as f64 / 2.0;
+    let rate = b0 + sse / 2.0;
+    crate::rng::gamma::Gamma::new(shape, 1.0 / rate).sample(rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::normal::StdNormal;
+
+    #[test]
+    fn tau_posterior_concentrates_on_true_precision() {
+        // residuals from N(0, 1/tau*) with lots of data → τ draws ≈ τ*
+        let tau_star: f64 = 4.0;
+        let n = 50_000;
+        let mut rng = Rng::seed_from_u64(41);
+        let mut norm = StdNormal::new();
+        let sse: f64 = (0..n)
+            .map(|_| {
+                let e = norm.sample(&mut rng) / tau_star.sqrt();
+                e * e
+            })
+            .sum();
+        let mean_tau: f64 = (0..200)
+            .map(|_| sample_tau(&mut rng, 1.0, 1.0, sse, n))
+            .sum::<f64>()
+            / 200.0;
+        assert!(
+            (mean_tau - tau_star).abs() / tau_star < 0.05,
+            "tau {mean_tau} vs {tau_star}"
+        );
+    }
+
+    #[test]
+    fn tau_prior_dominates_with_no_data() {
+        let mut rng = Rng::seed_from_u64(42);
+        // Gamma(2, rate 1) mean = 2
+        let mean: f64 =
+            (0..5000).map(|_| sample_tau(&mut rng, 2.0, 1.0, 0.0, 0)).sum::<f64>() / 5000.0;
+        assert!((mean - 2.0).abs() < 0.1, "prior mean {mean}");
+    }
+
+    #[test]
+    fn recovers_generating_hyperparams_in_expectation() {
+        // generate rows from N(mu*, sigma^2 I); posterior mean of mu should
+        // approach mu*, and Lambda's mean diag should approach 1/sigma^2.
+        let k = 4;
+        let n = 2000;
+        let mu_star = [1.0, -0.5, 0.25, 2.0];
+        let sigma = 0.7;
+        let mut rng = Rng::seed_from_u64(17);
+        let mut norm = StdNormal::new();
+        let mut u = vec![0.0; n * k];
+        for i in 0..n {
+            for j in 0..k {
+                u[i * k + j] = mu_star[j] + sigma * norm.sample(&mut rng);
+            }
+        }
+        let prior = NormalWishartPrior::default_for_dim(k);
+        // average several draws to tame MC noise
+        let mut mu_acc = vec![0.0; k];
+        let mut lam_acc = Mat::zeros(k, k);
+        let draws = 200;
+        for _ in 0..draws {
+            let h = sample_hyper(&mut rng, &prior, &u, n, k);
+            for j in 0..k {
+                mu_acc[j] += h.mu[j] / draws as f64;
+            }
+            lam_acc.add_scaled(&h.lambda, 1.0 / draws as f64);
+        }
+        for j in 0..k {
+            assert!((mu_acc[j] - mu_star[j]).abs() < 0.1, "mu[{j}]={}", mu_acc[j]);
+        }
+        let want_prec = 1.0 / (sigma * sigma);
+        for j in 0..k {
+            assert!(
+                (lam_acc[(j, j)] - want_prec).abs() / want_prec < 0.15,
+                "lambda[{j}]={} want {want_prec}",
+                lam_acc[(j, j)]
+            );
+        }
+    }
+
+    #[test]
+    fn handles_empty_factor_matrix() {
+        let k = 3;
+        let mut rng = Rng::seed_from_u64(5);
+        let prior = NormalWishartPrior::default_for_dim(k);
+        let h = sample_hyper(&mut rng, &prior, &[], 0, k);
+        assert_eq!(h.mu.len(), k);
+        assert!(Cholesky::new(&h.lambda).is_ok());
+    }
+
+    #[test]
+    fn lambda_draws_are_spd() {
+        let k = 8;
+        let mut rng = Rng::seed_from_u64(6);
+        let prior = NormalWishartPrior::default_for_dim(k);
+        let mut norm = StdNormal::new();
+        let n = 50;
+        let u: Vec<f64> = (0..n * k).map(|_| norm.sample(&mut rng)).collect();
+        for _ in 0..20 {
+            let h = sample_hyper(&mut rng, &prior, &u, n, k);
+            assert!(Cholesky::new(&h.lambda).is_ok());
+        }
+    }
+}

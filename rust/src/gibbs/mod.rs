@@ -1,0 +1,17 @@
+//! Pure-rust BPMF Gibbs sampler.
+//!
+//! Two roles:
+//! 1. **Oracle**: the runtime's AOT HLO path is cross-checked against this
+//!    implementation on identical inputs (same injected noise).
+//! 2. **Baseline**: the "BMF" column of the paper's Table 3 (plain BPMF,
+//!    1×1 grid, no PP) runs through this sampler.
+//!
+//! The Normal-Wishart hyperparameter updates (hyper.rs) run in rust in both
+//! the native and the HLO-backed samplers — they are K×K-cheap and once per
+//! sweep, not part of the hot path.
+
+pub mod hyper;
+pub mod native;
+
+pub use hyper::{NormalWishartPrior, sample_hyper};
+pub use native::{sample_side_native, NativeGibbs};

@@ -1,0 +1,33 @@
+//! # D-BMF+PP
+//!
+//! Distributed Bayesian Matrix Factorization with Posterior Propagation —
+//! a reproduction of Vander Aa et al. (2020), "A High-Performance
+//! Implementation of Bayesian Matrix Factorization with Limited
+//! Communication".
+//!
+//! The rust crate is the Layer-3 coordinator of a three-layer stack:
+//! - **L3 (this crate)**: Posterior-Propagation phase scheduling across an
+//!   I×J block grid, distributed Gibbs workers inside each block, posterior
+//!   propagation/aggregation, datasets, baselines (NOMAD/FPSGD), a cluster
+//!   simulator for strong-scaling studies, CLI and metrics.
+//! - **L2 (python/compile/model.py, build-time)**: the BPMF Gibbs half-sweep
+//!   as a JAX graph, AOT-lowered to HLO text.
+//! - **L1 (python/compile/kernels/, build-time)**: the Gibbs hot-spot as a
+//!   Pallas kernel lowered into the same HLO.
+//!
+//! At runtime the coordinator executes the AOT artifacts through the PJRT
+//! CPU client (`runtime`); python is never on the hot path.
+
+pub mod baselines;
+pub mod cluster;
+pub mod coordinator;
+pub mod data;
+pub mod gibbs;
+pub mod linalg;
+pub mod metrics;
+pub mod partition;
+pub mod posterior;
+pub mod rng;
+pub mod runtime;
+pub mod testing;
+pub mod util;

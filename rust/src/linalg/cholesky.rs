@@ -1,0 +1,199 @@
+//! Cholesky factorization and SPD solves for K×K posterior precisions.
+
+use super::mat::Mat;
+
+/// Lower-triangular Cholesky factor L with A = L Lᵀ.
+#[derive(Debug, Clone)]
+pub struct Cholesky {
+    pub l: Mat,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("matrix is not positive definite (pivot {pivot} at {index})")]
+pub struct NotPositiveDefinite {
+    pub pivot: f64,
+    pub index: usize,
+}
+
+impl Cholesky {
+    /// Factor an SPD matrix.
+    pub fn new(a: &Mat) -> Result<Cholesky, NotPositiveDefinite> {
+        assert_eq!(a.rows, a.cols, "cholesky needs a square matrix");
+        let n = a.rows;
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = a[(i, j)];
+                for k in 0..j {
+                    s -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if s <= 0.0 || !s.is_finite() {
+                        return Err(NotPositiveDefinite { pivot: s, index: i });
+                    }
+                    l[(i, j)] = s.sqrt();
+                } else {
+                    l[(i, j)] = s / l[(j, j)];
+                }
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.l.rows
+    }
+
+    /// Solve L y = b (forward substitution).
+    pub fn solve_lower(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.dim();
+        let mut y = b.to_vec();
+        for i in 0..n {
+            for k in 0..i {
+                y[i] -= self.l[(i, k)] * y[k];
+            }
+            y[i] /= self.l[(i, i)];
+        }
+        y
+    }
+
+    /// Solve Lᵀ x = b (back substitution).
+    pub fn solve_upper(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.dim();
+        let mut x = b.to_vec();
+        for i in (0..n).rev() {
+            for k in (i + 1)..n {
+                x[i] -= self.l[(k, i)] * x[k];
+            }
+            x[i] /= self.l[(i, i)];
+        }
+        x
+    }
+
+    /// Solve A x = b.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        self.solve_upper(&self.solve_lower(b))
+    }
+
+    /// A⁻¹ (column-by-column solve; K is small).
+    pub fn inverse(&self) -> Mat {
+        let n = self.dim();
+        let mut inv = Mat::zeros(n, n);
+        let mut e = vec![0.0; n];
+        for j in 0..n {
+            e[j] = 1.0;
+            let col = self.solve(&e);
+            for i in 0..n {
+                inv[(i, j)] = col[i];
+            }
+            e[j] = 0.0;
+        }
+        inv.symmetrize();
+        inv
+    }
+
+    /// log det A = 2 Σ log L_ii.
+    pub fn log_det(&self) -> f64 {
+        (0..self.dim()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+
+    /// Sample x ~ N(mean, A⁻¹) given A = L Lᵀ: x = mean + L⁻ᵀ ε.
+    pub fn sample_with_precision(&self, mean: &[f64], eps: &[f64]) -> Vec<f64> {
+        let z = self.solve_upper(eps);
+        mean.iter().zip(z).map(|(m, zi)| m + zi).collect()
+    }
+
+    /// Sample x ~ N(mean, A) when this factors the COVARIANCE: x = mean + L ε.
+    pub fn sample_with_covariance(&self, mean: &[f64], eps: &[f64]) -> Vec<f64> {
+        let n = self.dim();
+        let mut x = mean.to_vec();
+        for i in 0..n {
+            for k in 0..=i {
+                x[i] += self.l[(i, k)] * eps[k];
+            }
+        }
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut a = Mat::zeros(n, n);
+        for v in a.data.iter_mut() {
+            *v = rng.uniform() * 2.0 - 1.0;
+        }
+        let mut spd = a.matmul(&a.transpose());
+        for i in 0..n {
+            spd[(i, i)] += n as f64;
+        }
+        spd
+    }
+
+    #[test]
+    fn factor_roundtrip() {
+        for n in [1, 2, 5, 16, 32] {
+            let a = random_spd(n, n as u64);
+            let ch = Cholesky::new(&a).unwrap();
+            let reconstructed = ch.l.matmul(&ch.l.transpose());
+            assert!(a.max_abs_diff(&reconstructed) < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn solve_matches_matvec() {
+        let a = random_spd(8, 3);
+        let ch = Cholesky::new(&a).unwrap();
+        let x_true: Vec<f64> = (0..8).map(|i| (i as f64) - 3.5).collect();
+        let b = a.matvec(&x_true);
+        let x = ch.solve(&b);
+        for (xi, ti) in x.iter().zip(&x_true) {
+            assert!((xi - ti).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn inverse_times_a_is_identity() {
+        let a = random_spd(6, 4);
+        let inv = Cholesky::new(&a).unwrap().inverse();
+        let prod = a.matmul(&inv);
+        assert!(prod.max_abs_diff(&Mat::eye(6)) < 1e-9);
+    }
+
+    #[test]
+    fn log_det_known() {
+        let a = Mat::from_rows(&[&[4.0, 0.0], &[0.0, 9.0]]);
+        let ch = Cholesky::new(&a).unwrap();
+        assert!((ch.log_det() - (36.0f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eigenvalues 3, -1
+        assert!(Cholesky::new(&a).is_err());
+    }
+
+    #[test]
+    fn precision_sampling_has_right_covariance() {
+        // A = precision; sample many draws with eps ~ N(0, I) and check
+        // empirical covariance ≈ A^{-1}.
+        let a = random_spd(3, 7);
+        let ch = Cholesky::new(&a).unwrap();
+        let target = ch.inverse();
+        let mut rng = Rng::seed_from_u64(99);
+        let mut norm = crate::rng::StdNormal::new();
+        let n = 60_000;
+        let mean = vec![0.0; 3];
+        let mut cov = Mat::zeros(3, 3);
+        for _ in 0..n {
+            let eps: Vec<f64> = (0..3).map(|_| norm.sample(&mut rng)).collect();
+            let x = ch.sample_with_precision(&mean, &eps);
+            cov.add_scaled(&Mat::outer(&x, &x), 1.0 / n as f64);
+        }
+        assert!(cov.max_abs_diff(&target) < 0.05, "{:?} vs {:?}", cov, target);
+    }
+}

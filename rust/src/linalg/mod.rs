@@ -1,0 +1,12 @@
+//! Small dense linear algebra substrate (K×K scale, row-major f64).
+//!
+//! The coordinator needs exact K×K work — Cholesky factorizations, SPD
+//! solves, posterior precision algebra — both for the Normal-Wishart
+//! hyperparameter sampler and as the oracle the AOT HLO path is
+//! cross-checked against. K ≤ 128 in all uses; no BLAS needed.
+
+pub mod cholesky;
+pub mod mat;
+
+pub use cholesky::Cholesky;
+pub use mat::Mat;

@@ -1,0 +1,304 @@
+//! `bmf-pp` — the D-BMF+PP command-line launcher.
+//!
+//! Subcommands:
+//!   train     run Posterior-Propagation BMF on a dataset (synthetic profile
+//!             or CSV/MatrixMarket file), report RMSE + timings
+//!   baseline  run a comparator (bmf | nomad | fpsgd) on the same data
+//!   datasets  print Table-1 style statistics for the synthetic profiles
+//!   partition analyse block grids for a dataset (Fig-3 style table)
+//!   simulate  strong-scaling simulation on the calibrated cluster model
+//!
+//! Examples:
+//!   bmf-pp train --dataset netflix --scale 0.002 --grid 4x2 --samples 20
+//!   bmf-pp train --file ratings.csv --k 16 --grid 8x8
+//!   bmf-pp baseline --method nomad --dataset movielens --scale 0.002
+//!   bmf-pp simulate --dataset yahoo --grid 16x16 --max-nodes 16384
+
+use bmf_pp::baselines::sgd_common::SgdConfig;
+use bmf_pp::baselines::{fpsgd, nomad};
+use bmf_pp::cluster::{calibrate, sim};
+use bmf_pp::coordinator::backend::BlockBackend;
+use bmf_pp::coordinator::config::auto_tau;
+use bmf_pp::coordinator::{BackendSpec, PpTrainer, TrainConfig};
+use bmf_pp::data::generator::{DatasetProfile, SyntheticDataset};
+use bmf_pp::data::loader;
+use bmf_pp::data::split::holdout_split_covered;
+use bmf_pp::data::sparse::Coo;
+use bmf_pp::data::stats::DatasetStats;
+use bmf_pp::gibbs::NativeGibbs;
+use bmf_pp::metrics::throughput::Throughput;
+use bmf_pp::partition::{balance, Grid};
+use bmf_pp::util::cli::Args;
+use bmf_pp::util::timer::{fmt_duration, fmt_hhmm, Stopwatch};
+
+fn load_data(args: &Args) -> anyhow::Result<(Coo, usize)> {
+    if let Some(file) = args.get("file") {
+        let path = std::path::Path::new(file);
+        let coo = if file.ends_with(".mtx") {
+            loader::load_matrix_market(path)?
+        } else {
+            loader::load_csv(path, args.bool_or("one-based", false))?
+        };
+        let k = args.usize_or("k", 16);
+        Ok((coo, k))
+    } else {
+        let name = args.get_or("dataset", "movielens").to_string();
+        let scale = args.f64_or("scale", 0.002);
+        let seed = args.u64_or("seed", 42);
+        let ds = SyntheticDataset::by_name(&name, scale, seed)
+            .ok_or_else(|| anyhow::anyhow!("unknown dataset profile '{name}'"))?;
+        let k = args.usize_or("k", ds.k);
+        Ok((ds.ratings, k))
+    }
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let (data, k) = load_data(args)?;
+    let (train, test) = holdout_split_covered(&data, args.f64_or("test-frac", 0.2), 7);
+    let grid = args.grid_or("grid", (1, 1));
+    let mut cfg = TrainConfig::new(k)
+        .with_grid(grid.0, grid.1)
+        .with_sweeps(args.usize_or("burnin", 8), args.usize_or("samples", 20))
+        .with_workers(args.usize_or("workers", 1))
+        .with_seed(args.u64_or("seed", 42))
+        .with_tau(args.f64_or("tau", auto_tau(&train)));
+    if args.bool_or("native", false) {
+        cfg = cfg.with_backend(BackendSpec::Native);
+    }
+    cfg.block_parallelism = args.usize_or("block-parallelism", cfg.block_parallelism);
+    cfg.phase_sample_frac = args.f64_or("phase-sample-frac", 1.0);
+    let save_path = args.get("save").map(str::to_string);
+    args.check_unknown().map_err(|e| anyhow::anyhow!(e))?;
+
+    println!(
+        "training D-BMF+PP: {}x{} matrix, {} ratings, K={k}, grid {}x{}",
+        train.rows,
+        train.cols,
+        train.nnz(),
+        grid.0,
+        grid.1
+    );
+    let result = PpTrainer::new(cfg).train(&train)?;
+    let rmse = result.rmse(&test);
+    println!(
+        "phases: a={} b={} c={} aggregate={} total={}",
+        fmt_duration(result.timings.a),
+        fmt_duration(result.timings.b),
+        fmt_duration(result.timings.c),
+        fmt_duration(result.timings.aggregate),
+        fmt_duration(result.timings.total)
+    );
+    let tp = Throughput::measure(
+        train.rows,
+        train.cols,
+        train.nnz(),
+        result.stats.sweeps / result.stats.blocks.max(1),
+        result.timings.total,
+    );
+    println!("throughput: {}", tp.format_table1());
+    println!("test RMSE = {rmse:.4}  (wall-clock {})", fmt_hhmm(result.timings.total));
+    if let Some(path) = save_path {
+        bmf_pp::coordinator::checkpoint::save(&result, std::path::Path::new(&path))?;
+        println!("checkpoint saved to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_evaluate(args: &Args) -> anyhow::Result<()> {
+    let ckpt = args
+        .get("checkpoint")
+        .ok_or_else(|| anyhow::anyhow!("--checkpoint <file> required"))?
+        .to_string();
+    let model = bmf_pp::coordinator::checkpoint::load(std::path::Path::new(&ckpt))?;
+    let (data, _) = load_data(args)?;
+    let (_, test) = holdout_split_covered(&data, args.f64_or("test-frac", 0.2), 7);
+    args.check_unknown().map_err(|e| anyhow::anyhow!(e))?;
+    println!("checkpoint {ckpt}: K={} grid {}x{}", model.k, model.grid.0, model.grid.1);
+    println!("test RMSE = {:.4} over {} held-out ratings", model.rmse(&test), test.nnz());
+    // calibration report using factor-posterior + residual variance
+    let resid_var = 1.0 / auto_tau(&data);
+    let report = bmf_pp::metrics::calibration::coverage(&test, &[1.0, 2.0, 3.0], |r, c| {
+        let mu = model.predict(r, c);
+        let sigma = (model.predict_variance(r, c) + resid_var).sqrt();
+        (mu, sigma)
+    });
+    for (z, nominal, empirical) in report.rows {
+        println!("  ±{z:.0}σ coverage: {:.1}% (nominal {:.1}%)", empirical * 100.0, nominal * 100.0);
+    }
+    Ok(())
+}
+
+fn cmd_recommend_grid(args: &Args) -> anyhow::Result<()> {
+    let name = args.get_or("dataset", "netflix").to_string();
+    let profile = bmf_pp::data::generator::DatasetProfile::by_name(&name)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{name}'"))?;
+    let nodes = args.usize_or("nodes", 1024);
+    let k = args.usize_or("k", profile.k);
+    let max_aspect = args.f64_or("max-aspect", 8.0);
+    args.check_unknown().map_err(|e| anyhow::anyhow!(e))?;
+    let backend = BlockBackend::Native;
+    let model = calibrate::calibrate(&backend, k.min(32));
+    let (i, j) = bmf_pp::partition::balance::recommend_grid(
+        &model,
+        profile.paper_rows,
+        profile.paper_cols,
+        profile.paper_ratings,
+        k,
+        28,
+        nodes,
+        max_aspect,
+    );
+    println!(
+        "{name} at {nodes} nodes, K={k}: recommended grid {i}x{j} (block aspect {:.2})",
+        bmf_pp::partition::balance::block_aspect(profile.paper_rows, profile.paper_cols, i, j)
+    );
+    Ok(())
+}
+
+fn cmd_baseline(args: &Args) -> anyhow::Result<()> {
+    let (data, k) = load_data(args)?;
+    let (train, test) = holdout_split_covered(&data, args.f64_or("test-frac", 0.2), 7);
+    let method = args.get_or("method", "fpsgd").to_string();
+    let sw = Stopwatch::start();
+    let rmse = match method.as_str() {
+        "bmf" => {
+            let sweeps = args.usize_or("sweeps", 30);
+            let tau = args.f64_or("tau", auto_tau(&train));
+            let mut g = NativeGibbs::new(&train, k, tau, args.u64_or("seed", 42));
+            for _ in 0..sweeps {
+                g.sweep();
+            }
+            g.rmse(&test)
+        }
+        "nomad" | "fpsgd" => {
+            let cfg = SgdConfig::new(k)
+                .with_epochs(args.usize_or("epochs", 20))
+                .with_threads(args.usize_or("threads", 4))
+                .with_seed(args.u64_or("seed", 42));
+            let model = if method == "nomad" {
+                nomad::train(&train, &cfg)
+            } else {
+                fpsgd::train(&train, &cfg)
+            };
+            model.rmse(&test)
+        }
+        other => anyhow::bail!("unknown method '{other}' (bmf | nomad | fpsgd)"),
+    };
+    args.check_unknown().map_err(|e| anyhow::anyhow!(e))?;
+    println!("{method}: test RMSE = {rmse:.4} in {}", fmt_duration(sw.secs()));
+    Ok(())
+}
+
+fn cmd_datasets(args: &Args) -> anyhow::Result<()> {
+    let scale = args.f64_or("scale", 0.002);
+    args.check_unknown().map_err(|e| anyhow::anyhow!(e))?;
+    println!("synthetic dataset profiles at scale {scale} (paper Table 1 shape stats):");
+    for p in DatasetProfile::all() {
+        let eff_scale = match p.name {
+            "amazon" => scale * 0.015,
+            "yahoo" => scale * 0.2,
+            _ => scale,
+        };
+        let ds = SyntheticDataset::generate(p.clone(), eff_scale, 42);
+        let st = DatasetStats::compute(&ds.ratings);
+        println!("{}  K={} (paper K={})", st.format_row(p.name), p.k, p.paper_k);
+    }
+    Ok(())
+}
+
+fn cmd_partition(args: &Args) -> anyhow::Result<()> {
+    let (data, _) = load_data(args)?;
+    let max_side = args.usize_or("max-side", 32);
+    args.check_unknown().map_err(|e| anyhow::anyhow!(e))?;
+    println!("grid analysis for {}x{} ({} ratings):", data.rows, data.cols, data.nnz());
+    println!("{:<8} {:>10} {:>14} {:>12}", "grid", "aspect", "area/circum", "max-par");
+    for (i, j) in balance::candidate_grids(max_side) {
+        if i > data.rows || j > data.cols {
+            continue;
+        }
+        let g = Grid::new(data.rows, data.cols, i, j);
+        let (_, pb, pc) = g.phase_parallelism();
+        println!(
+            "{:<8} {:>10.2} {:>14.1} {:>12}",
+            format!("{i}x{j}"),
+            balance::block_aspect(data.rows, data.cols, i, j),
+            balance::area_over_circumference(data.rows, data.cols, i, j),
+            pb.max(pc)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let name = args.get_or("dataset", "netflix").to_string();
+    let profile = DatasetProfile::by_name(&name)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{name}'"))?;
+    let (gi, gj) = args.grid_or("grid", (4, 4));
+    let max_nodes = args.usize_or("max-nodes", 16384);
+    let sweeps = args.usize_or("sweeps", 28);
+    let k = args.usize_or("k", profile.paper_k);
+    args.check_unknown().map_err(|e| anyhow::anyhow!(e))?;
+
+    let backend = BlockBackend::Native;
+    let model = calibrate::calibrate(&backend, k.min(32));
+    let grid = Grid::new(profile.paper_rows, profile.paper_cols, gi, gj);
+    let nnz = sim::uniform_block_nnz(&grid, profile.paper_ratings);
+
+    println!(
+        "strong scaling, {name} ({}x{}, {} ratings), K={k}, grid {gi}x{gj}:",
+        profile.paper_rows, profile.paper_cols, profile.paper_ratings
+    );
+    let mut pts = Vec::new();
+    for p in sim::node_sweep(&grid, max_nodes) {
+        let r = sim::simulate_pp(&model, &grid, &nnz, k, sweeps, sweeps, p);
+        pts.push((p, r.total));
+        println!(
+            "  nodes={p:<7} wall={:<12} (a={} b={} c={})",
+            fmt_hhmm(r.total),
+            fmt_hhmm(r.phase_a),
+            fmt_hhmm(r.phase_b),
+            fmt_hhmm(r.phase_c)
+        );
+    }
+    let front = sim::pareto_front(&pts);
+    println!(
+        "pareto: {}",
+        front
+            .iter()
+            .map(|(p, t)| format!("{p}@{}", fmt_hhmm(*t)))
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
+    Ok(())
+}
+
+fn main() {
+    bmf_pp::util::logging::init();
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("baseline") => cmd_baseline(&args),
+        Some("datasets") => cmd_datasets(&args),
+        Some("partition") => cmd_partition(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("evaluate") => cmd_evaluate(&args),
+        Some("recommend-grid") => cmd_recommend_grid(&args),
+        other => {
+            eprintln!(
+                "usage: bmf-pp <train|baseline|datasets|partition|simulate|evaluate|recommend-grid> [--flags]\n\
+                 (got: {other:?}) — see crate docs for flag reference"
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,128 @@
+//! Uncertainty-quantification metrics — the Bayesian payoff the paper's
+//! introduction motivates (drug discovery needs calibrated predictive
+//! uncertainty, Labelle et al. 2019 [9]).
+
+use crate::data::sparse::Coo;
+
+/// Empirical coverage of central credible intervals: the fraction of
+/// held-out observations falling inside mean ± z·σ, for a set of z values.
+#[derive(Debug, Clone)]
+pub struct CoverageReport {
+    /// (z, nominal coverage, empirical coverage).
+    pub rows: Vec<(f64, f64, f64)>,
+    pub n: usize,
+}
+
+/// Standard normal CDF (Abramowitz-Stegun 7.1.26 via erf approximation).
+pub fn normal_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+fn erf(x: f64) -> f64 {
+    // max abs error ~1.5e-7
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Compute coverage at the given z values for a predictor that returns
+/// (mean, std) per cell.
+pub fn coverage(
+    test: &Coo,
+    zs: &[f64],
+    mut predict: impl FnMut(usize, usize) -> (f64, f64),
+) -> CoverageReport {
+    let mut hits = vec![0usize; zs.len()];
+    for e in &test.entries {
+        let (mu, sigma) = predict(e.row as usize, e.col as usize);
+        let dev = (e.val as f64 - mu).abs();
+        for (h, &z) in hits.iter_mut().zip(zs) {
+            if dev <= z * sigma {
+                *h += 1;
+            }
+        }
+    }
+    let n = test.nnz().max(1);
+    CoverageReport {
+        rows: zs
+            .iter()
+            .zip(&hits)
+            .map(|(&z, &h)| (z, 2.0 * normal_cdf(z) - 1.0, h as f64 / n as f64))
+            .collect(),
+        n,
+    }
+}
+
+/// Mean negative log predictive density under per-cell Gaussians — the
+/// proper-scoring complement to RMSE (lower is better).
+pub fn mean_nlpd(
+    test: &Coo,
+    mut predict: impl FnMut(usize, usize) -> (f64, f64),
+) -> f64 {
+    let ln_2pi = (2.0 * std::f64::consts::PI).ln();
+    let mut total = 0.0;
+    for e in &test.entries {
+        let (mu, sigma) = predict(e.row as usize, e.col as usize);
+        let var = (sigma * sigma).max(1e-12);
+        let z2 = (e.val as f64 - mu).powi(2) / var;
+        total += 0.5 * (ln_2pi + var.ln() + z2);
+    }
+    total / test.nnz().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{normal::StdNormal, Rng};
+
+    #[test]
+    fn normal_cdf_known_values() {
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!((normal_cdf(1.96) - 0.975).abs() < 1e-3);
+        assert!((normal_cdf(-1.96) - 0.025).abs() < 1e-3);
+    }
+
+    fn gaussian_test_set(sigma: f64, n: usize) -> Coo {
+        let mut rng = Rng::seed_from_u64(7);
+        let mut norm = StdNormal::new();
+        let mut coo = Coo::new(n, 1);
+        for r in 0..n {
+            coo.push(r, 0, (3.0 + sigma * norm.sample(&mut rng)) as f32);
+        }
+        coo
+    }
+
+    #[test]
+    fn well_calibrated_predictor_covers_nominally() {
+        let test = gaussian_test_set(0.5, 20_000);
+        let rep = coverage(&test, &[1.0, 2.0], |_, _| (3.0, 0.5));
+        for (z, nominal, empirical) in rep.rows {
+            assert!(
+                (nominal - empirical).abs() < 0.02,
+                "z={z}: nominal {nominal} vs {empirical}"
+            );
+        }
+    }
+
+    #[test]
+    fn overconfident_predictor_undercovers() {
+        let test = gaussian_test_set(1.0, 10_000);
+        let rep = coverage(&test, &[2.0], |_, _| (3.0, 0.25)); // 4x overconfident
+        assert!(rep.rows[0].2 < 0.7, "should undercover: {:?}", rep.rows);
+    }
+
+    #[test]
+    fn nlpd_prefers_true_sigma() {
+        let test = gaussian_test_set(0.5, 10_000);
+        let good = mean_nlpd(&test, |_, _| (3.0, 0.5));
+        let over = mean_nlpd(&test, |_, _| (3.0, 0.05));
+        let under = mean_nlpd(&test, |_, _| (3.0, 5.0));
+        assert!(good < over && good < under, "good {good} over {over} under {under}");
+    }
+}

@@ -1,0 +1,6 @@
+//! Evaluation metrics and performance counters.
+
+pub mod calibration;
+pub mod recorder;
+pub mod rmse;
+pub mod throughput;

@@ -1,0 +1,91 @@
+//! Structured metric recording: named series of (step, value) points,
+//! dumped as JSON for EXPERIMENTS.md and plotting.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Collects named numeric series and scalar results.
+#[derive(Debug, Default, Clone)]
+pub struct Recorder {
+    series: BTreeMap<String, Vec<(f64, f64)>>,
+    scalars: BTreeMap<String, f64>,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::default()
+    }
+
+    pub fn point(&mut self, series: &str, x: f64, y: f64) {
+        self.series.entry(series.to_string()).or_default().push((x, y));
+    }
+
+    pub fn scalar(&mut self, name: &str, value: f64) {
+        self.scalars.insert(name.to_string(), value);
+    }
+
+    pub fn get_scalar(&self, name: &str) -> Option<f64> {
+        self.scalars.get(name).copied()
+    }
+
+    pub fn get_series(&self, name: &str) -> Option<&[(f64, f64)]> {
+        self.series.get(name).map(|v| v.as_slice())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let series = Json::Obj(
+            self.series
+                .iter()
+                .map(|(k, pts)| {
+                    (
+                        k.clone(),
+                        Json::Arr(
+                            pts.iter()
+                                .map(|(x, y)| Json::Arr(vec![Json::Num(*x), Json::Num(*y)]))
+                                .collect(),
+                        ),
+                    )
+                })
+                .collect(),
+        );
+        let scalars = Json::Obj(
+            self.scalars.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect(),
+        );
+        Json::obj(vec![("series", series), ("scalars", scalars)])
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, crate::util::json::to_string_pretty(&self.to_json()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_serializes() {
+        let mut r = Recorder::new();
+        r.point("rmse", 1.0, 0.95);
+        r.point("rmse", 2.0, 0.90);
+        r.scalar("final_rmse", 0.90);
+        let j = r.to_json();
+        let text = crate::util::json::to_string(&j);
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(
+            back.get("scalars").unwrap().get("final_rmse").unwrap().as_f64(),
+            Some(0.90)
+        );
+        assert_eq!(back.get("series").unwrap().get("rmse").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn save_writes_file() {
+        let mut r = Recorder::new();
+        r.scalar("x", 1.5);
+        let p = std::env::temp_dir().join(format!("bmfpp_rec_{}.json", std::process::id()));
+        r.save(&p).unwrap();
+        assert!(p.exists());
+        std::fs::remove_file(p).ok();
+    }
+}

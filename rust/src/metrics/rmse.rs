@@ -1,0 +1,98 @@
+//! RMSE evaluation.
+
+use crate::data::sparse::Coo;
+
+/// Streaming SSE accumulator → RMSE.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SseAccumulator {
+    pub sse: f64,
+    pub count: f64,
+}
+
+impl SseAccumulator {
+    pub fn add(&mut self, sse: f64, count: f64) {
+        self.sse += sse;
+        self.count += count;
+    }
+
+    pub fn merge(&mut self, other: &SseAccumulator) {
+        self.sse += other.sse;
+        self.count += other.count;
+    }
+
+    pub fn rmse(&self) -> f64 {
+        if self.count == 0.0 {
+            f64::NAN
+        } else {
+            (self.sse / self.count).sqrt()
+        }
+    }
+}
+
+/// RMSE of factor predictions u vᵀ against observed entries of `test`.
+/// Factors are row-major f32 (rows×k, cols×k).
+pub fn rmse_factors(u: &[f32], v: &[f32], k: usize, test: &Coo) -> f64 {
+    let mut acc = SseAccumulator::default();
+    for e in &test.entries {
+        let (r, c) = (e.row as usize, e.col as usize);
+        let pred: f32 = (0..k).map(|j| u[r * k + j] * v[c * k + j]).sum();
+        let err = (pred - e.val) as f64;
+        acc.add(err * err, 1.0);
+    }
+    acc.rmse()
+}
+
+/// RMSE of an arbitrary predictor closure.
+pub fn rmse_with(test: &Coo, mut predict: impl FnMut(usize, usize) -> f64) -> f64 {
+    let mut acc = SseAccumulator::default();
+    for e in &test.entries {
+        let err = predict(e.row as usize, e.col as usize) - e.val as f64;
+        acc.add(err * err, 1.0);
+    }
+    acc.rmse()
+}
+
+/// RMSE of always predicting the train-set mean (the weakest sane baseline).
+pub fn mean_predictor_rmse(train_mean: f64, test: &Coo) -> f64 {
+    rmse_with(test, |_, _| train_mean)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulator_merges() {
+        let mut a = SseAccumulator::default();
+        a.add(4.0, 1.0);
+        let mut b = SseAccumulator::default();
+        b.add(0.0, 1.0);
+        a.merge(&b);
+        assert!((a.rmse() - (2.0f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_test_is_nan() {
+        assert!(SseAccumulator::default().rmse().is_nan());
+    }
+
+    #[test]
+    fn perfect_factors_have_zero_rmse() {
+        let k = 2;
+        let u = vec![1.0f32, 0.0, 0.0, 1.0]; // 2 rows
+        let v = vec![0.5f32, 0.25, 1.0, -1.0]; // 2 cols
+        let mut t = Coo::new(2, 2);
+        t.push(0, 0, 0.5);
+        t.push(1, 1, -1.0);
+        assert!(rmse_factors(&u, &v, k, &t) < 1e-7);
+    }
+
+    #[test]
+    fn known_rmse() {
+        let mut t = Coo::new(1, 2);
+        t.push(0, 0, 1.0);
+        t.push(0, 1, 3.0);
+        // predict 2.0 everywhere: errors 1 and 1 → rmse 1
+        assert!((rmse_with(&t, |_, _| 2.0) - 1.0).abs() < 1e-12);
+    }
+}

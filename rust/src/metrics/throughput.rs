@@ -1,0 +1,54 @@
+//! Compute-performance metrics — the paper's Table-1 bottom rows
+//! (rows/sec and ratings/sec of the sampler).
+
+/// Throughput of a Gibbs run.
+#[derive(Debug, Clone, Copy)]
+pub struct Throughput {
+    /// Factor rows updated per second (U rows + V rows per sweep).
+    pub rows_per_sec: f64,
+    /// Observed ratings processed per second.
+    pub ratings_per_sec: f64,
+}
+
+impl Throughput {
+    /// From totals: `sweeps` full Gibbs sweeps over a matrix with
+    /// `rows`+`cols` factor rows and `nnz` observations, in `secs` seconds.
+    /// Each full sweep touches every rating twice (U side and V side).
+    pub fn measure(rows: usize, cols: usize, nnz: usize, sweeps: usize, secs: f64) -> Throughput {
+        let total_rows = (rows + cols) as f64 * sweeps as f64;
+        let total_ratings = 2.0 * nnz as f64 * sweeps as f64;
+        Throughput {
+            rows_per_sec: total_rows / secs,
+            ratings_per_sec: total_ratings / secs,
+        }
+    }
+
+    /// Paper formatting: rows/sec in thousands, ratings/sec in millions.
+    pub fn format_table1(&self) -> String {
+        format!(
+            "rows/sec(x1000)={:.1} ratings/sec(x1e6)={:.2}",
+            self.rows_per_sec / 1e3,
+            self.ratings_per_sec / 1e6
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_known_values() {
+        let t = Throughput::measure(100, 50, 1000, 10, 2.0);
+        assert!((t.rows_per_sec - 150.0 * 10.0 / 2.0).abs() < 1e-9);
+        assert!((t.ratings_per_sec - 2.0 * 1000.0 * 10.0 / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn formatting_units() {
+        let t = Throughput { rows_per_sec: 416_000.0, ratings_per_sec: 70_000_000.0 };
+        let s = t.format_table1();
+        assert!(s.contains("416.0"));
+        assert!(s.contains("70.00"));
+    }
+}

@@ -1,0 +1,180 @@
+//! Block-shape analysis (paper §3.3): blocks should be approximately
+//! square; the best grid for a matrix with aspect ratio rows/cols ≈ A uses
+//! I/J ≈ A. Also the bubble-size metric of Fig. 3 (aspect ratio of blocks).
+
+use super::grid::Grid;
+
+/// Aspect ratio of the blocks of a grid: max(h/w, w/h) ≥ 1; 1 = square.
+/// This is the paper's Fig.-3 bubble size ("smaller bubbles indicate the
+/// blocks are more square").
+pub fn block_aspect(rows: usize, cols: usize, i: usize, j: usize) -> f64 {
+    let h = rows as f64 / i as f64;
+    let w = cols as f64 / j as f64;
+    (h / w).max(w / h)
+}
+
+/// Information-per-compute score of a block shape (paper §3.3: both the
+/// amount of information and compute are "proportionate to the ratio of the
+/// area versus the circumference"). Higher is better; square maximizes it.
+pub fn area_over_circumference(rows: usize, cols: usize, i: usize, j: usize) -> f64 {
+    let h = rows as f64 / i as f64;
+    let w = cols as f64 / j as f64;
+    (h * w) / (2.0 * (h + w))
+}
+
+/// Choose the I×J grid with `target_blocks` total blocks whose blocks are
+/// most square (the paper's recommendation). Returns (I, J).
+pub fn squarest_grid(rows: usize, cols: usize, target_blocks: usize) -> (usize, usize) {
+    let mut best = (1, target_blocks.max(1));
+    let mut best_aspect = f64::INFINITY;
+    for i in 1..=target_blocks {
+        if target_blocks % i != 0 {
+            continue;
+        }
+        let j = target_blocks / i;
+        if i > rows || j > cols {
+            continue;
+        }
+        let a = block_aspect(rows, cols, i, j);
+        if a < best_aspect {
+            best_aspect = a;
+            best = (i, j);
+        }
+    }
+    best
+}
+
+/// Enumerate candidate grids (both square-count and rectangular) up to
+/// `max_side` blocks per side — the Fig-3 exploration set.
+pub fn candidate_grids(max_side: usize) -> Vec<(usize, usize)> {
+    let mut v = Vec::new();
+    let mut side = 1;
+    while side <= max_side {
+        v.push((side, side));
+        side *= 2;
+    }
+    // rectangular candidates biased toward more row blocks (Netflix-like)
+    for &(i, j) in &[(2usize, 1usize), (4, 2), (8, 4), (16, 8), (20, 3), (32, 8), (8, 2)] {
+        if i <= max_side && j <= max_side {
+            v.push((i, j));
+        }
+    }
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+/// Recommend an I×J grid for a node budget by simulating the PP schedule
+/// on the calibrated cluster model over candidate grids and picking the
+/// fastest whose blocks stay information-dense enough (block aspect within
+/// `max_aspect` of square — the paper's §3.3 quality guard).
+pub fn recommend_grid(
+    model: &crate::cluster::model::ClusterModel,
+    rows: usize,
+    cols: usize,
+    nnz: usize,
+    k: usize,
+    sweeps: usize,
+    nodes: usize,
+    max_aspect: f64,
+) -> (usize, usize) {
+    let mut best = ((1usize, 1usize), f64::INFINITY);
+    for (i, j) in candidate_grids(64) {
+        if i > rows || j > cols {
+            continue;
+        }
+        // the aspect guard protects per-block information content; a 1×1
+        // "grid" holds the full matrix and is always admissible
+        if (i, j) != (1, 1) && block_aspect(rows, cols, i, j) > max_aspect {
+            continue;
+        }
+        let grid = Grid::new(rows, cols, i, j);
+        let block_nnz = crate::cluster::sim::uniform_block_nnz(&grid, nnz);
+        let r = crate::cluster::sim::simulate_pp(model, &grid, &block_nnz, k, sweeps, sweeps, nodes);
+        if r.total < best.1 {
+            best = ((i, j), r.total);
+        }
+    }
+    best.0
+}
+
+/// Per-block observation counts — used to check information balance.
+pub fn block_nnz_histogram(grid: &Grid, blocks: &[Vec<crate::data::sparse::Coo>]) -> Vec<usize> {
+    let mut out = Vec::with_capacity(grid.n_blocks());
+    for row in blocks {
+        for b in row {
+            out.push(b.nnz());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn square_matrix_prefers_square_grid() {
+        assert_eq!(squarest_grid(1000, 1000, 16), (4, 4));
+    }
+
+    #[test]
+    fn netflix_like_prefers_row_heavy_grid() {
+        // Netflix: 27x more rows than cols → with 64 blocks the squarest
+        // split puts many more blocks on rows
+        let (i, j) = squarest_grid(480_200, 17_800, 64);
+        assert!(i > j, "expected row-heavy grid, got {i}x{j}");
+        assert!(block_aspect(480_200, 17_800, i, j) < block_aspect(480_200, 17_800, 8, 8));
+    }
+
+    #[test]
+    fn aspect_is_symmetric_and_min_at_square() {
+        assert_eq!(block_aspect(100, 100, 2, 2), 1.0);
+        let a = block_aspect(100, 100, 4, 1);
+        let b = block_aspect(100, 100, 1, 4);
+        assert!((a - b).abs() < 1e-12);
+        assert!(a > 1.0);
+    }
+
+    #[test]
+    fn area_over_circumference_peaks_at_square() {
+        let sq = area_over_circumference(1200, 1200, 4, 4);
+        let rect = area_over_circumference(1200, 1200, 16, 1);
+        assert!(sq > rect);
+    }
+
+    #[test]
+    fn recommender_scales_grid_with_node_budget() {
+        let model = crate::cluster::model::ClusterModel::default();
+        let (rows, cols, nnz, k) = (480_200, 17_800, 100_000_000, 16);
+        let small = recommend_grid(&model, rows, cols, nnz, k, 28, 1, 8.0);
+        let big = recommend_grid(&model, rows, cols, nnz, k, 28, 4096, 8.0);
+        assert!(
+            big.0 * big.1 >= small.0 * small.1,
+            "more nodes should not shrink the grid: {small:?} -> {big:?}"
+        );
+        // 1 node: no reason to pay the multi-block compute overhead
+        assert_eq!(small, (1, 1));
+    }
+
+    #[test]
+    fn recommender_respects_aspect_guard() {
+        let model = crate::cluster::model::ClusterModel::default();
+        let g = recommend_grid(&model, 480_200, 17_800, 100_000_000, 16, 28, 1024, 4.0);
+        // any multi-block recommendation must satisfy the guard; the 1×1
+        // fallback (full-information single block) is always admissible
+        assert!(
+            g == (1, 1) || block_aspect(480_200, 17_800, g.0, g.1) <= 4.0,
+            "grid {g:?} too skewed"
+        );
+    }
+
+    #[test]
+    fn candidates_contain_paper_points() {
+        let c = candidate_grids(32);
+        assert!(c.contains(&(1, 1)));
+        assert!(c.contains(&(32, 32)));
+        assert!(c.contains(&(20, 3))); // the paper's Netflix winner
+        assert!(c.contains(&(16, 8)));
+    }
+}

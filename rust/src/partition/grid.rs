@@ -1,0 +1,257 @@
+//! The I×J grid partition of the rating matrix.
+//!
+//! Rows are split into I contiguous ranges of (near-)equal size, columns
+//! into J ranges; block (i, j) covers rows(i) × cols(j). Phase assignment
+//! follows the Posterior Propagation scheme (paper Fig. 1):
+//!   (0,0) → phase a; first row/col → phase b; the rest → phase c.
+
+use crate::data::sparse::Coo;
+
+/// Identifies one block of the grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BlockId {
+    pub i: usize,
+    pub j: usize,
+}
+
+/// The PP phase a block belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    A,
+    B,
+    C,
+}
+
+/// An I×J partition of an N×D matrix.
+#[derive(Debug, Clone)]
+pub struct Grid {
+    pub rows: usize,
+    pub cols: usize,
+    pub i_blocks: usize,
+    pub j_blocks: usize,
+    /// Row range boundaries, length i_blocks + 1.
+    pub row_bounds: Vec<usize>,
+    /// Column range boundaries, length j_blocks + 1.
+    pub col_bounds: Vec<usize>,
+}
+
+fn bounds(total: usize, parts: usize) -> Vec<usize> {
+    // distribute remainder one-per-leading-part: sizes differ by ≤ 1
+    let base = total / parts;
+    let extra = total % parts;
+    let mut b = Vec::with_capacity(parts + 1);
+    let mut acc = 0;
+    b.push(0);
+    for p in 0..parts {
+        acc += base + usize::from(p < extra);
+        b.push(acc);
+    }
+    b
+}
+
+impl Grid {
+    pub fn new(rows: usize, cols: usize, i_blocks: usize, j_blocks: usize) -> Grid {
+        assert!(i_blocks >= 1 && j_blocks >= 1, "grid must be at least 1x1");
+        assert!(i_blocks <= rows && j_blocks <= cols, "more blocks than rows/cols");
+        Grid {
+            rows,
+            cols,
+            i_blocks,
+            j_blocks,
+            row_bounds: bounds(rows, i_blocks),
+            col_bounds: bounds(cols, j_blocks),
+        }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.i_blocks * self.j_blocks
+    }
+
+    pub fn row_range(&self, i: usize) -> (usize, usize) {
+        (self.row_bounds[i], self.row_bounds[i + 1])
+    }
+
+    pub fn col_range(&self, j: usize) -> (usize, usize) {
+        (self.col_bounds[j], self.col_bounds[j + 1])
+    }
+
+    pub fn block_shape(&self, id: BlockId) -> (usize, usize) {
+        let (r0, r1) = self.row_range(id.i);
+        let (c0, c1) = self.col_range(id.j);
+        (r1 - r0, c1 - c0)
+    }
+
+    /// PP phase of a block (paper Fig. 1).
+    pub fn phase(&self, id: BlockId) -> Phase {
+        match (id.i, id.j) {
+            (0, 0) => Phase::A,
+            (0, _) | (_, 0) => Phase::B,
+            _ => Phase::C,
+        }
+    }
+
+    pub fn blocks(&self) -> impl Iterator<Item = BlockId> + '_ {
+        (0..self.i_blocks)
+            .flat_map(move |i| (0..self.j_blocks).map(move |j| BlockId { i, j }))
+    }
+
+    pub fn blocks_in_phase(&self, phase: Phase) -> Vec<BlockId> {
+        self.blocks().filter(|b| self.phase(*b) == phase).collect()
+    }
+
+    /// Cut the data matrix into per-block COOs, indexed [i][j].
+    pub fn split(&self, data: &Coo) -> Vec<Vec<Coo>> {
+        assert_eq!((data.rows, data.cols), (self.rows, self.cols), "grid/data shape mismatch");
+        // single pass: route each entry to its block
+        let mut out: Vec<Vec<Coo>> = (0..self.i_blocks)
+            .map(|i| {
+                (0..self.j_blocks)
+                    .map(|j| {
+                        let (r, c) = self.block_shape(BlockId { i, j });
+                        Coo::new(r, c)
+                    })
+                    .collect()
+            })
+            .collect();
+        for e in &data.entries {
+            let i = self.find_block(&self.row_bounds, e.row as usize);
+            let j = self.find_block(&self.col_bounds, e.col as usize);
+            let (r0, _) = self.row_range(i);
+            let (c0, _) = self.col_range(j);
+            out[i][j].push(e.row as usize - r0, e.col as usize - c0, e.val);
+        }
+        out
+    }
+
+    fn find_block(&self, bounds: &[usize], idx: usize) -> usize {
+        // bounds is sorted; find the partition containing idx
+        match bounds.binary_search(&idx) {
+            Ok(k) => k.min(bounds.len() - 2),
+            Err(k) => k - 1,
+        }
+    }
+
+    /// Max parallelism per phase (paper §3.4): phase b can use I+J-2 block
+    /// slots, phase c (I-1)(J-1).
+    pub fn phase_parallelism(&self) -> (usize, usize, usize) {
+        (
+            1,
+            self.i_blocks + self.j_blocks - 2,
+            (self.i_blocks - 1).saturating_mul(self.j_blocks - 1),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generator::SyntheticDataset;
+    use crate::testing::prop;
+
+    #[test]
+    fn bounds_cover_exactly() {
+        let g = Grid::new(10, 7, 3, 2);
+        assert_eq!(g.row_bounds, vec![0, 4, 7, 10]);
+        assert_eq!(g.col_bounds, vec![0, 4, 7]);
+    }
+
+    #[test]
+    fn phases_follow_fig1() {
+        let g = Grid::new(30, 40, 3, 4);
+        assert_eq!(g.phase(BlockId { i: 0, j: 0 }), Phase::A);
+        assert_eq!(g.phase(BlockId { i: 0, j: 2 }), Phase::B);
+        assert_eq!(g.phase(BlockId { i: 2, j: 0 }), Phase::B);
+        assert_eq!(g.phase(BlockId { i: 1, j: 1 }), Phase::C);
+        assert_eq!(g.blocks_in_phase(Phase::A).len(), 1);
+        assert_eq!(g.blocks_in_phase(Phase::B).len(), 3 + 4 - 2);
+        assert_eq!(g.blocks_in_phase(Phase::C).len(), 2 * 3);
+    }
+
+    #[test]
+    fn split_routes_every_entry_once() {
+        let d = SyntheticDataset::by_name("movielens", 0.001, 13).unwrap();
+        let g = Grid::new(d.ratings.rows, d.ratings.cols, 4, 3);
+        let blocks = g.split(&d.ratings);
+        let total: usize = blocks.iter().flatten().map(|b| b.nnz()).sum();
+        assert_eq!(total, d.ratings.nnz());
+    }
+
+    #[test]
+    fn prop_grid_partition_invariants() {
+        prop::check(
+            25,
+            |g| {
+                let rows = g.size(2, 200);
+                let cols = g.size(2, 200);
+                let i = g.usize_in(1, rows.min(8));
+                let j = g.usize_in(1, cols.min(8));
+                (rows, cols, i, j)
+            },
+            |&(rows, cols, i, j)| {
+                let g = Grid::new(rows, cols, i, j);
+                // bounds monotone, cover [0, rows]
+                if g.row_bounds[0] != 0 || *g.row_bounds.last().unwrap() != rows {
+                    return Err("row bounds don't cover".into());
+                }
+                for w in g.row_bounds.windows(2) {
+                    if w[1] <= w[0] {
+                        return Err("empty row block".into());
+                    }
+                }
+                // block sizes differ by at most 1 (load balance)
+                let sizes: Vec<usize> = (0..i).map(|b| g.row_range(b).1 - g.row_range(b).0).collect();
+                let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                if mx - mn > 1 {
+                    return Err(format!("unbalanced rows: {sizes:?}"));
+                }
+                // every cell belongs to exactly one block
+                let (pa, pb, pc) = g.phase_parallelism();
+                if pa + pb + pc != g.n_blocks() {
+                    return Err("phase partition of blocks broken".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_split_reassembles() {
+        prop::check(
+            15,
+            |g| {
+                let rows = g.size(3, 80);
+                let cols = g.size(3, 80);
+                let mut coo = Coo::new(rows, cols);
+                for _ in 0..g.size(1, 300) {
+                    coo.push(g.usize_in(0, rows - 1), g.usize_in(0, cols - 1), 1.0);
+                }
+                let i = g.usize_in(1, rows.min(6));
+                let j = g.usize_in(1, cols.min(6));
+                (coo, i, j)
+            },
+            |(coo, i, j)| {
+                let g = Grid::new(coo.rows, coo.cols, *i, *j);
+                let blocks = g.split(coo);
+                let mut reassembled: Vec<(u32, u32)> = Vec::new();
+                for bi in 0..*i {
+                    for bj in 0..*j {
+                        let (r0, _) = g.row_range(bi);
+                        let (c0, _) = g.col_range(bj);
+                        for e in &blocks[bi][bj].entries {
+                            reassembled
+                                .push((e.row + r0 as u32, e.col + c0 as u32));
+                        }
+                    }
+                }
+                let mut orig: Vec<(u32, u32)> =
+                    coo.entries.iter().map(|e| (e.row, e.col)).collect();
+                reassembled.sort_unstable();
+                orig.sort_unstable();
+                if reassembled != orig {
+                    return Err("reassembled entries differ".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,7 @@
+//! Posterior-Propagation block partitioning: the I×J grid over R and the
+//! block-shape analysis of paper §3.3 (blocks should be roughly square).
+
+pub mod balance;
+pub mod grid;
+
+pub use grid::{BlockId, Grid};

@@ -1,0 +1,279 @@
+//! Row-wise Gaussian posterior marginals.
+//!
+//! Posterior Propagation approximates the posterior over each factor row
+//! u_n by a multivariate Gaussian N(mean[n], prec[n]^{-1}) (Qin et al.
+//! 2019). Phases (b) and (c) consume these as priors; aggregation divides
+//! away multiply-counted propagated marginals — Gaussian density division
+//! subtracts precisions and natural parameters.
+
+use crate::linalg::{Cholesky, Mat};
+
+/// N independent K-dimensional Gaussians: per-row mean and precision.
+#[derive(Debug, Clone)]
+pub struct RowGaussians {
+    pub n: usize,
+    pub k: usize,
+    /// Means, row-major (n × k).
+    pub mean: Vec<f64>,
+    /// Precisions, row-major (n × k × k), each SPD.
+    pub prec: Vec<f64>,
+}
+
+impl RowGaussians {
+    /// All rows share `mean`/`prec` (the plain-BPMF hyperprior case).
+    pub fn broadcast(n: usize, mean: &[f64], prec: &Mat) -> RowGaussians {
+        let k = mean.len();
+        assert_eq!((prec.rows, prec.cols), (k, k));
+        let mut g = RowGaussians {
+            n,
+            k,
+            mean: Vec::with_capacity(n * k),
+            prec: Vec::with_capacity(n * k * k),
+        };
+        for _ in 0..n {
+            g.mean.extend_from_slice(mean);
+            g.prec.extend_from_slice(&prec.data);
+        }
+        g
+    }
+
+    /// Standard-normal prior N(0, I/alpha) i.e. precision alpha*I.
+    pub fn standard(n: usize, k: usize, alpha: f64) -> RowGaussians {
+        RowGaussians::broadcast(n, &vec![0.0; k], &Mat::scaled_eye(k, alpha))
+    }
+
+    pub fn row_mean(&self, i: usize) -> &[f64] {
+        &self.mean[i * self.k..(i + 1) * self.k]
+    }
+
+    pub fn row_prec(&self, i: usize) -> Mat {
+        let kk = self.k * self.k;
+        Mat::from_vec(self.k, self.k, self.prec[i * kk..(i + 1) * kk].to_vec())
+    }
+
+    fn set_row(&mut self, i: usize, mean: &[f64], prec: &Mat) {
+        let k = self.k;
+        self.mean[i * k..(i + 1) * k].copy_from_slice(mean);
+        self.prec[i * k * k..(i + 1) * k * k].copy_from_slice(&prec.data);
+    }
+
+    /// Product of densities per row (posterior combine):
+    /// prec = pa + pb, mean = prec^{-1} (pa μa + pb μb).
+    pub fn combine(&self, other: &RowGaussians) -> RowGaussians {
+        assert_eq!((self.n, self.k), (other.n, other.k));
+        let mut out = self.clone();
+        for i in 0..self.n {
+            let pa = self.row_prec(i);
+            let pb = other.row_prec(i);
+            let prec = &pa + &pb;
+            let mut h = pa.matvec(self.row_mean(i));
+            let hb = pb.matvec(other.row_mean(i));
+            for (a, b) in h.iter_mut().zip(hb) {
+                *a += b;
+            }
+            let mean = Cholesky::new(&prec)
+                .expect("combined precision must be SPD")
+                .solve(&h);
+            out.set_row(i, &mean, &prec);
+        }
+        out
+    }
+
+    /// Density division per row (divide away a multiply-counted prior):
+    /// prec = pa - pb (ridged to stay SPD), mean = prec^{-1} (pa μa - pb μb).
+    ///
+    /// `ridge` guards against the difference losing positive-definiteness
+    /// to Monte-Carlo noise — the standard fix in embarrassingly-parallel
+    /// MCMC aggregation.
+    pub fn divide(&self, other: &RowGaussians, ridge: f64) -> RowGaussians {
+        assert_eq!((self.n, self.k), (other.n, other.k));
+        let mut out = self.clone();
+        for i in 0..self.n {
+            let pa = self.row_prec(i);
+            let pb = other.row_prec(i);
+            let mut prec = &pa - &pb;
+            prec.symmetrize();
+            // ridge escalation until SPD
+            let mut lam = ridge;
+            let chol = loop {
+                match Cholesky::new(&prec) {
+                    Ok(c) => break c,
+                    Err(_) => {
+                        for d in 0..self.k {
+                            prec[(d, d)] += lam;
+                        }
+                        lam *= 10.0;
+                        if lam > 1e8 {
+                            panic!("divide: precision unrecoverable");
+                        }
+                    }
+                }
+            };
+            let mut h = pa.matvec(self.row_mean(i));
+            let hb = pb.matvec(other.row_mean(i));
+            for (a, b) in h.iter_mut().zip(hb) {
+                *a -= b;
+            }
+            let mean = chol.solve(&h);
+            out.set_row(i, &mean, &prec);
+        }
+        out
+    }
+
+    /// Stack two row sets (concatenate along n).
+    pub fn concat(&self, other: &RowGaussians) -> RowGaussians {
+        assert_eq!(self.k, other.k);
+        let mut out = self.clone();
+        out.n += other.n;
+        out.mean.extend_from_slice(&other.mean);
+        out.prec.extend_from_slice(&other.prec);
+        out
+    }
+
+    /// Slice rows [a, b).
+    pub fn slice(&self, a: usize, b: usize) -> RowGaussians {
+        let k = self.k;
+        RowGaussians {
+            n: b - a,
+            k,
+            mean: self.mean[a * k..b * k].to_vec(),
+            prec: self.prec[a * k * k..b * k * k].to_vec(),
+        }
+    }
+
+    /// Flatten to f32 buffers in the layout the AOT artifacts consume
+    /// (mean: n×k, prec: n×k×k), zero-padded to `pad_n` rows with identity
+    /// precisions (padding rows must stay SPD for the batched Cholesky).
+    pub fn to_f32_padded(&self, pad_n: usize) -> (Vec<f32>, Vec<f32>) {
+        assert!(self.n <= pad_n);
+        let k = self.k;
+        let mut mean = vec![0.0f32; pad_n * k];
+        let mut prec = vec![0.0f32; pad_n * k * k];
+        for (dst, src) in mean.iter_mut().zip(&self.mean) {
+            *dst = *src as f32;
+        }
+        for (dst, src) in prec.iter_mut().zip(&self.prec) {
+            *dst = *src as f32;
+        }
+        for i in self.n..pad_n {
+            for d in 0..k {
+                prec[i * k * k + d * k + d] = 1.0;
+            }
+        }
+        (mean, prec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::testing::prop;
+
+    fn random_gaussians(n: usize, k: usize, seed: u64) -> RowGaussians {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut g = RowGaussians::standard(n, k, 1.0);
+        for i in 0..n {
+            let mut a = Mat::zeros(k, k);
+            for v in a.data.iter_mut() {
+                *v = rng.uniform() - 0.5;
+            }
+            let mut spd = a.matmul(&a.transpose());
+            for d in 0..k {
+                spd[(d, d)] += 1.0 + k as f64 * 0.25;
+            }
+            let mean: Vec<f64> = (0..k).map(|_| rng.uniform() * 2.0 - 1.0).collect();
+            g.set_row(i, &mean, &spd);
+        }
+        g
+    }
+
+    #[test]
+    fn broadcast_rows_are_identical() {
+        let g = RowGaussians::standard(4, 3, 2.0);
+        assert_eq!(g.row_mean(0), g.row_mean(3));
+        assert_eq!(g.row_prec(1), Mat::scaled_eye(3, 2.0));
+    }
+
+    #[test]
+    fn combine_of_identical_doubles_precision() {
+        let g = random_gaussians(3, 4, 1);
+        let c = g.combine(&g);
+        for i in 0..3 {
+            let mut want = g.row_prec(i);
+            want.scale(2.0);
+            assert!(c.row_prec(i).max_abs_diff(&want) < 1e-9);
+            // mean unchanged
+            for (a, b) in c.row_mean(i).iter().zip(g.row_mean(i)) {
+                assert!((a - b).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn divide_inverts_combine() {
+        let a = random_gaussians(5, 3, 2);
+        let b = random_gaussians(5, 3, 3);
+        let c = a.combine(&b);
+        let back = c.divide(&b, 1e-9);
+        for i in 0..5 {
+            assert!(back.row_prec(i).max_abs_diff(&a.row_prec(i)) < 1e-6);
+            for (x, y) in back.row_mean(i).iter().zip(a.row_mean(i)) {
+                assert!((x - y).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_combine_commutes() {
+        prop::check(
+            15,
+            |g| {
+                let n = g.size(1, 8);
+                let k = *g.pick(&[1usize, 2, 4]);
+                (n, k, g.usize_in(0, 1000) as u64)
+            },
+            |&(n, k, seed)| {
+                let a = random_gaussians(n, k, seed);
+                let b = random_gaussians(n, k, seed + 77);
+                let ab = a.combine(&b);
+                let ba = b.combine(&a);
+                for i in 0..n {
+                    if ab.row_prec(i).max_abs_diff(&ba.row_prec(i)) > 1e-9 {
+                        return Err("precisions differ".into());
+                    }
+                    for (x, y) in ab.row_mean(i).iter().zip(ba.row_mean(i)) {
+                        if (x - y).abs() > 1e-8 {
+                            return Err("means differ".into());
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn concat_and_slice_roundtrip() {
+        let a = random_gaussians(3, 2, 5);
+        let b = random_gaussians(2, 2, 6);
+        let c = a.concat(&b);
+        assert_eq!(c.n, 5);
+        let back = c.slice(3, 5);
+        assert_eq!(back.mean, b.mean);
+        assert_eq!(back.prec, b.prec);
+    }
+
+    #[test]
+    fn f32_padding_is_identity_spd() {
+        let g = random_gaussians(2, 3, 7);
+        let (mean, prec) = g.to_f32_padded(4);
+        assert_eq!(mean.len(), 4 * 3);
+        assert_eq!(prec.len(), 4 * 9);
+        // padded row has identity precision
+        assert_eq!(prec[3 * 9 + 0], 1.0);
+        assert_eq!(prec[3 * 9 + 4], 1.0);
+        assert_eq!(prec[3 * 9 + 8], 1.0);
+        assert_eq!(prec[3 * 9 + 1], 0.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! Posterior representations for Posterior Propagation: row-wise Gaussian
+//! marginals over factor rows, the combine/divide algebra used when
+//! propagating and aggregating them, and running moment estimators that
+//! turn MCMC samples into those Gaussians.
+
+pub mod gaussian;
+pub mod moments;
+
+pub use gaussian::RowGaussians;
+pub use moments::RunningMoments;

@@ -1,0 +1,107 @@
+//! Gamma sampling — Marsaglia & Tsang (2000) squeeze method, with the
+//! Johnk-style boost for shape < 1. Needed for Wishart (chi-square) draws
+//! in the Normal-Wishart hyperparameter sampler.
+
+use super::normal::StdNormal;
+use super::pcg::Rng;
+
+/// Gamma(shape k, scale θ) sampler.
+#[derive(Debug, Clone)]
+pub struct Gamma {
+    shape: f64,
+    scale: f64,
+}
+
+impl Gamma {
+    pub fn new(shape: f64, scale: f64) -> Gamma {
+        assert!(shape > 0.0 && scale > 0.0, "gamma params must be positive");
+        Gamma { shape, scale }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        self.scale * sample_standard(rng, self.shape)
+    }
+}
+
+/// Gamma(shape, 1).
+pub fn sample_standard(rng: &mut Rng, shape: f64) -> f64 {
+    if shape < 1.0 {
+        // boost: X_a = X_{a+1} * U^{1/a}
+        let x = sample_standard(rng, shape + 1.0);
+        let u: f64 = rng.uniform().max(f64::MIN_POSITIVE);
+        return x * u.powf(1.0 / shape);
+    }
+    let d = shape - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    let mut norm = StdNormal::new();
+    loop {
+        let x = norm.sample(rng);
+        let v = 1.0 + c * x;
+        if v <= 0.0 {
+            continue;
+        }
+        let v3 = v * v * v;
+        let u = rng.uniform();
+        if u < 1.0 - 0.0331 * x.powi(4) {
+            return d * v3;
+        }
+        if u.ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln()) {
+            return d * v3;
+        }
+    }
+}
+
+/// Chi-square with `dof` degrees of freedom = Gamma(dof/2, 2).
+pub fn chi_square(rng: &mut Rng, dof: f64) -> f64 {
+    2.0 * sample_standard(rng, dof / 2.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_moments(shape: f64, scale: f64, n: usize, tol: f64) {
+        let mut rng = Rng::seed_from_u64((shape * 1000.0) as u64 + 1);
+        let g = Gamma::new(shape, scale);
+        let mut s1 = 0.0;
+        let mut s2 = 0.0;
+        for _ in 0..n {
+            let x = g.sample(&mut rng);
+            assert!(x > 0.0);
+            s1 += x;
+            s2 += x * x;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        let want_mean = shape * scale;
+        let want_var = shape * scale * scale;
+        assert!((mean - want_mean).abs() / want_mean < tol, "mean {mean} vs {want_mean}");
+        assert!((var - want_var).abs() / want_var < 4.0 * tol, "var {var} vs {want_var}");
+    }
+
+    #[test]
+    fn moments_large_shape() {
+        check_moments(5.0, 2.0, 100_000, 0.02);
+        check_moments(50.0, 0.5, 100_000, 0.02);
+    }
+
+    #[test]
+    fn moments_small_shape() {
+        check_moments(0.5, 1.0, 200_000, 0.03);
+    }
+
+    #[test]
+    fn chi_square_mean_is_dof() {
+        let mut rng = Rng::seed_from_u64(9);
+        let n = 50_000;
+        let dof = 7.0;
+        let mean: f64 = (0..n).map(|_| chi_square(&mut rng, dof)).sum::<f64>() / n as f64;
+        assert!((mean - dof).abs() < 0.1, "mean={mean}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_params() {
+        let _ = Gamma::new(-1.0, 1.0);
+    }
+}

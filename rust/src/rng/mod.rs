@@ -1,0 +1,14 @@
+//! Random-number substrate (the offline environment has no `rand`):
+//! a counter-free xoshiro256++ generator, Gaussian / Gamma / Wishart
+//! samplers — everything the BPMF Gibbs sampler and the synthetic dataset
+//! generator need. All randomness in the system flows through here; the AOT
+//! compute graphs are deterministic and consume injected noise.
+
+pub mod gamma;
+pub mod normal;
+pub mod pcg;
+pub mod wishart;
+
+pub use gamma::Gamma;
+pub use normal::StdNormal;
+pub use pcg::Rng;

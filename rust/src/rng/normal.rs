@@ -1,0 +1,85 @@
+//! Gaussian sampling (Marsaglia polar method) and bulk noise generation.
+
+use super::pcg::Rng;
+
+/// Standard normal sampler with one-value cache (polar method emits pairs).
+#[derive(Debug, Clone, Default)]
+pub struct StdNormal {
+    cached: Option<f64>,
+}
+
+impl StdNormal {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Draw one N(0,1) variate.
+    pub fn sample(&mut self, rng: &mut Rng) -> f64 {
+        if let Some(v) = self.cached.take() {
+            return v;
+        }
+        loop {
+            let u = 2.0 * rng.uniform() - 1.0;
+            let v = 2.0 * rng.uniform() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let f = (-2.0 * s.ln() / s).sqrt();
+                self.cached = Some(v * f);
+                return u * f;
+            }
+        }
+    }
+}
+
+/// Fill `out` with i.i.d. N(0,1) f32 draws (bulk noise for the HLO graphs).
+pub fn fill_standard_normal(rng: &mut Rng, out: &mut [f32]) {
+    let mut n = StdNormal::new();
+    for x in out.iter_mut() {
+        *x = n.sample(rng) as f32;
+    }
+}
+
+/// Draw a vector of N(0,1) f32.
+pub fn standard_normal_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; len];
+    fill_standard_normal(rng, &mut v);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moments() {
+        let mut rng = Rng::seed_from_u64(11);
+        let mut n = StdNormal::new();
+        let count = 200_000;
+        let (mut s1, mut s2, mut s3, mut s4) = (0.0, 0.0, 0.0, 0.0);
+        for _ in 0..count {
+            let x = n.sample(&mut rng);
+            s1 += x;
+            s2 += x * x;
+            s3 += x * x * x;
+            s4 += x * x * x * x;
+        }
+        let m = s1 / count as f64;
+        let var = s2 / count as f64 - m * m;
+        let skew = s3 / count as f64;
+        let kurt = s4 / count as f64;
+        assert!(m.abs() < 0.01, "mean={m}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+        assert!(skew.abs() < 0.05, "skew={skew}");
+        assert!((kurt - 3.0).abs() < 0.1, "kurt={kurt}");
+    }
+
+    #[test]
+    fn bulk_fill_matches_distribution() {
+        let mut rng = Rng::seed_from_u64(12);
+        let v = standard_normal_vec(&mut rng, 50_000);
+        let mean = v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64;
+        assert!(mean.abs() < 0.02);
+        // tail sanity: |x|>4 should be very rare but finite values only
+        assert!(v.iter().all(|x| x.is_finite()));
+    }
+}

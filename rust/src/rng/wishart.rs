@@ -1,0 +1,74 @@
+//! Wishart sampling via the Bartlett decomposition — the Normal-Wishart
+//! hyperprior updates of BPMF (Salakhutdinov & Mnih 2008, eqs. 14-16) need
+//! draws Λ ~ W(W₀, ν₀).
+
+use super::gamma::chi_square;
+use super::normal::StdNormal;
+use super::pcg::Rng;
+use crate::linalg::{Cholesky, Mat};
+
+/// Draw Λ ~ Wishart(scale, dof) where `scale` is the K×K scale matrix and
+/// `dof >= K`. Bartlett: Λ = L A Aᵀ Lᵀ with scale = L Lᵀ, A lower-triangular
+/// with A_ii = sqrt(χ²(dof-i)) and N(0,1) below the diagonal.
+pub fn sample_wishart(rng: &mut Rng, scale: &Mat, dof: f64) -> Mat {
+    let k = scale.rows;
+    assert!(dof >= k as f64, "wishart dof {dof} < dim {k}");
+    let l = Cholesky::new(scale).expect("wishart scale must be SPD").l;
+    let mut a = Mat::zeros(k, k);
+    let mut norm = StdNormal::new();
+    for i in 0..k {
+        a[(i, i)] = chi_square(rng, dof - i as f64).sqrt();
+        for j in 0..i {
+            a[(i, j)] = norm.sample(rng);
+        }
+    }
+    let la = l.matmul(&a);
+    let mut out = la.matmul(&la.transpose());
+    out.symmetrize();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_is_dof_times_scale() {
+        let k = 3;
+        let scale = {
+            let mut s = Mat::eye(k);
+            s[(0, 1)] = 0.3;
+            s[(1, 0)] = 0.3;
+            s[(0, 0)] = 2.0;
+            s
+        };
+        let dof = 7.0;
+        let mut rng = Rng::seed_from_u64(21);
+        let n = 20_000;
+        let mut mean = Mat::zeros(k, k);
+        for _ in 0..n {
+            let w = sample_wishart(&mut rng, &scale, dof);
+            mean.add_scaled(&w, 1.0 / n as f64);
+        }
+        let mut want = scale.clone();
+        want.scale(dof);
+        assert!(mean.max_abs_diff(&want) < 0.15, "{mean:?} vs {want:?}");
+    }
+
+    #[test]
+    fn draws_are_spd() {
+        let mut rng = Rng::seed_from_u64(22);
+        let scale = Mat::eye(5);
+        for _ in 0..50 {
+            let w = sample_wishart(&mut rng, &scale, 6.0);
+            assert!(Cholesky::new(&w).is_ok());
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_low_dof() {
+        let mut rng = Rng::seed_from_u64(23);
+        let _ = sample_wishart(&mut rng, &Mat::eye(4), 2.0);
+    }
+}

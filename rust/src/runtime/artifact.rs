@@ -1,0 +1,173 @@
+//! Artifact manifest: the registry of AOT-compiled HLO programs.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json` describing each
+//! lowered program (kind, block shape, latent dim, flavor). Shapes are
+//! compile-time constants of the HLO; the runtime picks, for each real
+//! block, the smallest registered shape that fits and zero-pads (masked
+//! padding is exact, not approximate).
+
+use crate::util::json::{self, Json};
+use std::path::{Path, PathBuf};
+
+/// One AOT artifact entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// "sample_side" or "predict_sse".
+    pub kind: String,
+    pub n: usize,
+    pub d: usize,
+    pub k: usize,
+    pub file: String,
+    /// "pallas" or "ref" — which L1 implementation was lowered in.
+    pub flavor: String,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("io error reading {path}: {err}")]
+    Io { path: String, err: std::io::Error },
+    #[error("manifest parse error: {0}")]
+    Parse(String),
+    #[error("no registered {kind} artifact fits n={n} d={d} k={k}")]
+    NoFit { kind: String, n: usize, d: usize, k: usize },
+}
+
+/// The parsed artifact registry.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, ManifestError> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|err| ManifestError::Io { path: path.display().to_string(), err })?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest, ManifestError> {
+        let root = json::parse(text).map_err(|e| ManifestError::Parse(e.to_string()))?;
+        let arts = root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| ManifestError::Parse("missing 'artifacts' array".into()))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let get_str = |k: &str| {
+                a.get(k)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| ManifestError::Parse(format!("missing field '{k}'")))
+            };
+            let get_num = |k: &str| {
+                a.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| ManifestError::Parse(format!("missing field '{k}'")))
+            };
+            artifacts.push(ArtifactSpec {
+                name: get_str("name")?,
+                kind: get_str("kind")?,
+                n: get_num("n")?,
+                d: get_num("d")?,
+                k: get_num("k")?,
+                file: get_str("file")?,
+                flavor: get_str("flavor")?,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// Path of an artifact's HLO text file.
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    /// The smallest registered artifact of `kind` with matching k that fits
+    /// an (n, d) block — "smallest" by padded area (wasted compute).
+    pub fn best_fit(
+        &self,
+        kind: &str,
+        n: usize,
+        d: usize,
+        k: usize,
+    ) -> Result<&ArtifactSpec, ManifestError> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == kind && a.k == k && a.n >= n && a.d >= d)
+            .min_by_key(|a| a.n * a.d)
+            .ok_or_else(|| ManifestError::NoFit { kind: kind.into(), n, d, k })
+    }
+
+    /// All latent dims available for a kind.
+    pub fn available_ks(&self, kind: &str) -> Vec<usize> {
+        let mut ks: Vec<usize> =
+            self.artifacts.iter().filter(|a| a.kind == kind).map(|a| a.k).collect();
+        ks.sort_unstable();
+        ks.dedup();
+        ks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "sample_side_32x32x8", "kind": "sample_side", "n": 32, "d": 32, "k": 8,
+         "file": "sample_side_32x32x8.hlo.txt", "flavor": "pallas"},
+        {"name": "sample_side_256x256x8", "kind": "sample_side", "n": 256, "d": 256, "k": 8,
+         "file": "sample_side_256x256x8.hlo.txt", "flavor": "pallas"},
+        {"name": "predict_sse_32x32x8", "kind": "predict_sse", "n": 32, "d": 32, "k": 8,
+         "file": "predict_sse_32x32x8.hlo.txt", "flavor": "ref"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_entries() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.artifacts[0].k, 8);
+        assert_eq!(m.available_ks("sample_side"), vec![8]);
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        let a = m.best_fit("sample_side", 20, 30, 8).unwrap();
+        assert_eq!(a.n, 32);
+        let b = m.best_fit("sample_side", 33, 20, 8).unwrap();
+        assert_eq!(b.n, 256);
+    }
+
+    #[test]
+    fn best_fit_errors_when_nothing_fits() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert!(m.best_fit("sample_side", 1000, 1000, 8).is_err());
+        assert!(m.best_fit("sample_side", 10, 10, 99).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse(Path::new("/tmp"), "{}").is_err());
+        assert!(Manifest::parse(Path::new("/tmp"), r#"{"artifacts":[{"name":1}]}"#).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        // integration-ish: only runs when `make artifacts` has been run
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.artifacts.is_empty());
+            for a in &m.artifacts {
+                assert!(m.path_of(a).exists(), "missing {}", a.file);
+            }
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! Thread model: `PjRtClient` in the `xla` crate is `Rc`-based and NOT
+//! `Send`, so an [`Engine`] is **thread-confined** — each coordinator
+//! worker thread constructs its own Engine (compilation is per-thread,
+//! one-time). XLA's CPU backend parallelizes internally, so even a single
+//! Engine uses multiple cores for large blocks.
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::{ArtifactSpec, Manifest};
+pub use executor::Engine;

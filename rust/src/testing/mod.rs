@@ -1,0 +1,3 @@
+//! Property-testing substrate (proptest is unavailable offline).
+
+pub mod prop;

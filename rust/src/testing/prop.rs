@@ -1,0 +1,110 @@
+//! Minimal property-testing harness.
+//!
+//! `check(cases, gen, prop)` runs `prop` on `cases` generated inputs; on
+//! failure it retries with progressively "smaller" regenerated inputs
+//! (generator receives a shrink level) and reports the seed so the case is
+//! reproducible. A deliberate substitute for proptest (offline environment),
+//! covering what the coordinator invariants need: randomized inputs,
+//! reproducible failures, basic shrinking.
+
+use crate::rng::Rng;
+
+/// Context handed to generators: RNG + shrink level (0 = full size).
+pub struct Gen<'a> {
+    pub rng: &'a mut Rng,
+    /// 0 = full-size inputs; higher values should produce smaller inputs.
+    pub shrink: u32,
+}
+
+impl<'a> Gen<'a> {
+    /// A size in [lo, hi] scaled down by the shrink level.
+    pub fn size(&mut self, lo: usize, hi: usize) -> usize {
+        let hi_eff = (hi >> self.shrink).max(lo);
+        lo + self.rng.below(hi_eff - lo + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.uniform() * (hi - lo)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn pick<'t, T>(&mut self, xs: &'t [T]) -> &'t T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Run a property over `cases` random inputs. Panics with the failing seed
+/// and (if found) a shrunk failing input description.
+pub fn check<T: std::fmt::Debug>(
+    cases: u32,
+    mut generate: impl FnMut(&mut Gen) -> T,
+    mut property: impl FnMut(&T) -> Result<(), String>,
+) {
+    let base_seed = match std::env::var("PROP_SEED") {
+        Ok(s) => s.parse().unwrap_or(0xBADC0FFE),
+        Err(_) => 0xBADC0FFE,
+    };
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::seed_from_u64(seed);
+        let input = generate(&mut Gen { rng: &mut rng, shrink: 0 });
+        if let Err(msg) = property(&input) {
+            // try to find a smaller failure with the same seed family
+            for shrink in 1..=4u32 {
+                let mut srng = Rng::seed_from_u64(seed);
+                let small = generate(&mut Gen { rng: &mut srng, shrink });
+                if let Err(smsg) = property(&small) {
+                    panic!(
+                        "property failed (case {case}, seed {seed:#x}, shrink {shrink}): {smsg}\ninput: {small:?}"
+                    );
+                }
+            }
+            panic!("property failed (case {case}, seed {seed:#x}): {msg}\ninput: {input:?}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            50,
+            |g| (g.size(1, 100), g.f64_in(-1.0, 1.0)),
+            |(n, x)| {
+                if *n >= 1 && x.abs() <= 1.0 {
+                    Ok(())
+                } else {
+                    Err("bounds".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports() {
+        check(
+            20,
+            |g| g.size(0, 1000),
+            |n| if *n < 900 { Ok(()) } else { Err(format!("{n} too big")) },
+        );
+    }
+
+    #[test]
+    fn shrink_reduces_sizes() {
+        let mut rng = Rng::seed_from_u64(1);
+        let mut g0 = Gen { rng: &mut rng, shrink: 0 };
+        let full: Vec<usize> = (0..100).map(|_| g0.size(1, 1024)).collect();
+        let mut rng2 = Rng::seed_from_u64(1);
+        let mut g3 = Gen { rng: &mut rng2, shrink: 3 };
+        let small: Vec<usize> = (0..100).map(|_| g3.size(1, 1024)).collect();
+        assert!(small.iter().max() <= full.iter().max());
+        assert!(*small.iter().max().unwrap() <= 1024 >> 3);
+    }
+}

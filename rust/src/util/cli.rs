@@ -1,0 +1,169 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `prog <subcommand> [--flag] [--key value] [--key=value] [pos...]`.
+//! Unknown flags are an error; values are fetched typed with defaults.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    /// Flags actually consumed by `get`/`has` — used for unknown-flag checks.
+    seen: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` separator: rest is positional
+                    out.positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` unless next item is another flag → boolean
+                    match it.peek() {
+                        Some(nxt) if !nxt.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.flags.insert(body.to_string(), v);
+                        }
+                        _ => {
+                            out.flags.insert(body.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() && out.flags.is_empty()
+            {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.seen.borrow_mut().insert(key.to_string());
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.seen.borrow_mut().insert(key.to_string());
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Error if any provided flag was never consumed by `get`/`has`.
+    pub fn check_unknown(&self) -> Result<(), String> {
+        let seen = self.seen.borrow();
+        let unknown: Vec<_> =
+            self.flags.keys().filter(|k| !seen.contains(*k)).cloned().collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("unknown flags: {}", unknown.join(", ")))
+        }
+    }
+
+    /// Parse a grid spec like "16x8" into (16, 8).
+    pub fn grid_or(&self, key: &str, default: (usize, usize)) -> (usize, usize) {
+        match self.get(key) {
+            Some(v) => parse_grid(v).unwrap_or(default),
+            None => default,
+        }
+    }
+}
+
+/// Parse "IxJ" → (I, J).
+pub fn parse_grid(s: &str) -> Option<(usize, usize)> {
+    let (a, b) = s.split_once(['x', 'X'])?;
+    Some((a.trim().parse().ok()?, b.trim().parse().ok()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(items: &[&str]) -> Args {
+        Args::parse(items.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["train", "--dataset", "netflix", "--grid=16x8", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("dataset"), Some("netflix"));
+        assert_eq!(a.grid_or("grid", (1, 1)), (16, 8));
+        assert!(a.has("verbose"));
+        assert!(a.check_unknown().is_ok());
+    }
+
+    #[test]
+    fn typed_getters_and_defaults() {
+        let a = parse(&["x", "--k", "32", "--tau", "1.5"]);
+        assert_eq!(a.usize_or("k", 8), 32);
+        assert_eq!(a.f64_or("tau", 0.0), 1.5);
+        assert_eq!(a.usize_or("missing", 7), 7);
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = parse(&["x", "--oops", "1"]);
+        assert!(a.check_unknown().is_err());
+        let _ = a.get("oops");
+        assert!(a.check_unknown().is_ok());
+    }
+
+    #[test]
+    fn boolean_flag_before_another_flag() {
+        let a = parse(&["x", "--fast", "--k", "3"]);
+        assert!(a.has("fast"));
+        assert_eq!(a.usize_or("k", 0), 3);
+    }
+
+    #[test]
+    fn positional_after_separator() {
+        let a = parse(&["run", "--k", "1", "--", "--not-a-flag", "pos2"]);
+        assert_eq!(a.positional, vec!["--not-a-flag", "pos2"]);
+    }
+
+    #[test]
+    fn grid_parsing() {
+        assert_eq!(parse_grid("32x32"), Some((32, 32)));
+        assert_eq!(parse_grid("1X4"), Some((1, 4)));
+        assert_eq!(parse_grid("bad"), None);
+    }
+}

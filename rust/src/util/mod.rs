@@ -1,0 +1,8 @@
+//! Shared utility substrates built from scratch (the offline environment has
+//! no clap/serde/tracing): a JSON parser/writer, a CLI argument parser, a
+//! tiny logger and wall-clock timers.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod timer;

@@ -1,0 +1,80 @@
+//! Wall-clock timing helpers and the paper's hh:mm formatting.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Format seconds as the paper's tables do: `h:mm` (Table 3) .
+pub fn fmt_hhmm(secs: f64) -> String {
+    let total_min = (secs / 60.0).round() as u64;
+    format!("{}:{:02}", total_min / 60, total_min % 60)
+}
+
+/// Format seconds adaptively for logs: ms below 1s, else s / m / h.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1.0 {
+        format!("{:.1}ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{secs:.2}s")
+    } else if secs < 7200.0 {
+        format!("{:.1}m", secs / 60.0)
+    } else {
+        format!("{:.2}h", secs / 3600.0)
+    }
+}
+
+/// Measure the wall-clock time of `f`, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let sw = Stopwatch::start();
+    let out = f();
+    (out, sw.secs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hhmm_matches_paper_format() {
+        assert_eq!(fmt_hhmm(7.0 * 60.0), "0:07");
+        assert_eq!(fmt_hhmm(2.0 * 3600.0 + 2.0 * 60.0), "2:02");
+        assert_eq!(fmt_hhmm(13.0 * 3600.0 + 2.0 * 60.0), "13:02");
+        assert_eq!(fmt_hhmm(0.0), "0:00");
+    }
+
+    #[test]
+    fn adaptive_format() {
+        assert!(fmt_duration(0.002).ends_with("ms"));
+        assert!(fmt_duration(3.0).ends_with('s'));
+        assert!(fmt_duration(600.0).ends_with('m'));
+        assert!(fmt_duration(10_000.0).ends_with('h'));
+    }
+
+    #[test]
+    fn time_it_returns_result() {
+        let (v, t) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(t >= 0.0);
+    }
+}

@@ -1,0 +1,214 @@
+//! Cross-module integration tests: the full pipeline (data → partition →
+//! PP phases → runtime → aggregation → evaluation), backend equivalence,
+//! file-loader round trips and the CLI binary.
+
+use bmf_pp::baselines::sgd_common::SgdConfig;
+use bmf_pp::baselines::{fpsgd, nomad};
+use bmf_pp::coordinator::config::auto_tau;
+use bmf_pp::coordinator::{BackendSpec, PpTrainer, TrainConfig};
+use bmf_pp::data::generator::SyntheticDataset;
+use bmf_pp::data::loader;
+use bmf_pp::data::split::holdout_split_covered;
+use bmf_pp::data::sparse::Coo;
+use bmf_pp::gibbs::NativeGibbs;
+use bmf_pp::metrics::rmse::mean_predictor_rmse;
+
+fn artifacts_present() -> bool {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists()
+}
+
+fn dataset(scale: f64) -> (Coo, Coo, usize) {
+    let ds = SyntheticDataset::by_name("movielens", scale, 71).unwrap();
+    let (train, test) = holdout_split_covered(&ds.ratings, 0.2, 72);
+    let k = ds.k;
+    (train, test, k)
+}
+
+#[test]
+fn full_pipeline_hlo_backend() {
+    if !artifacts_present() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let (train, test, k) = dataset(0.002);
+    let cfg = TrainConfig::new(k)
+        .with_grid(2, 2)
+        .with_sweeps(8, 16)
+        .with_tau(auto_tau(&train))
+        .with_seed(73);
+    let res = PpTrainer::new(cfg).train(&train).unwrap();
+    let rmse = res.rmse(&test);
+    let base = mean_predictor_rmse(train.mean(), &test);
+    assert!(rmse < base * 0.9, "hlo pipeline rmse {rmse} vs mean {base}");
+}
+
+#[test]
+fn hlo_and_native_backends_agree_statistically() {
+    if !artifacts_present() {
+        return;
+    }
+    let (train, test, k) = dataset(0.002);
+    let mk = |backend| {
+        TrainConfig::new(k)
+            .with_grid(2, 2)
+            .with_sweeps(8, 16)
+            .with_tau(auto_tau(&train))
+            .with_seed(74)
+            .with_backend(backend)
+    };
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let r_hlo = PpTrainer::new(mk(BackendSpec::Hlo { artifact_dir: dir })).train(&train).unwrap();
+    let r_nat = PpTrainer::new(mk(BackendSpec::Native)).train(&train).unwrap();
+    let (a, b) = (r_hlo.rmse(&test), r_nat.rmse(&test));
+    // same seeds and same math; f32-vs-f64 accumulation orders diverge over
+    // a chain, so compare quality, not bits
+    assert!((a - b).abs() < 0.1 * a.max(b), "hlo {a} vs native {b}");
+}
+
+#[test]
+fn within_block_workers_match_single_worker_exactly() {
+    let (train, test, k) = dataset(0.0015);
+    let mk = |workers| {
+        TrainConfig::new(k)
+            .with_grid(2, 1)
+            .with_sweeps(5, 10)
+            .with_tau(2.0)
+            .with_seed(75)
+            .with_workers(workers)
+            .with_backend(BackendSpec::Native)
+    };
+    let r1 = PpTrainer::new(mk(1)).train(&train).unwrap();
+    let r4 = PpTrainer::new(mk(4)).train(&train).unwrap();
+    assert_eq!(r1.u_mean, r4.u_mean, "sharding must be bit-exact");
+    assert!((r1.rmse(&test) - r4.rmse(&test)).abs() < 1e-12);
+}
+
+#[test]
+fn pp_matches_plain_bmf_quality() {
+    // the paper's ML claim (Table 2 ≈ BMF column): PP RMSE ≈ plain Gibbs
+    let (train, test, k) = dataset(0.002);
+    let tau = auto_tau(&train);
+    let cfg = TrainConfig::new(k)
+        .with_grid(3, 2)
+        .with_sweeps(10, 20)
+        .with_tau(tau)
+        .with_seed(76)
+        .with_backend(BackendSpec::Native);
+    let pp = PpTrainer::new(cfg).train(&train).unwrap().rmse(&test);
+    let mut bmf = NativeGibbs::new(&train, k, tau, 76);
+    for _ in 0..30 {
+        bmf.sweep();
+    }
+    let bmf_rmse = bmf.rmse(&test);
+    assert!(
+        (pp - bmf_rmse).abs() < 0.2 * bmf_rmse,
+        "pp {pp} vs plain bmf {bmf_rmse}"
+    );
+}
+
+#[test]
+fn all_methods_beat_mean_predictor_on_all_profiles() {
+    for name in ["movielens", "netflix"] {
+        let scale = 0.0015;
+        let ds = SyntheticDataset::by_name(name, scale, 81).unwrap();
+        let (train, test) = holdout_split_covered(&ds.ratings, 0.2, 82);
+        let base = mean_predictor_rmse(train.mean(), &test);
+
+        let cfg = TrainConfig::new(ds.k)
+            .with_grid(2, 2)
+            .with_sweeps(8, 16)
+            .with_tau(auto_tau(&train))
+            .with_seed(83)
+            .with_backend(BackendSpec::Native);
+        let pp = PpTrainer::new(cfg).train(&train).unwrap().rmse(&test);
+        let sgd = SgdConfig::new(ds.k).with_epochs(25).with_seed(83);
+        let f = fpsgd::train(&train, &sgd).rmse(&test);
+        let n = nomad::train(&train, &sgd).rmse(&test);
+        for (label, rmse) in [("pp", pp), ("fpsgd", f), ("nomad", n)] {
+            assert!(rmse < base, "{name}/{label}: {rmse} vs mean {base}");
+        }
+    }
+}
+
+#[test]
+fn csv_to_training_pipeline() {
+    // export a synthetic matrix, reload it, train on it
+    let ds = SyntheticDataset::by_name("movielens", 0.0015, 91).unwrap();
+    let path = std::env::temp_dir().join(format!("bmfpp_it_{}.csv", std::process::id()));
+    loader::save_csv(&ds.ratings, &path).unwrap();
+    let loaded = loader::load_csv(&path, false).unwrap();
+    assert_eq!(loaded.nnz(), ds.ratings.nnz());
+    let (train, test) = holdout_split_covered(&loaded, 0.2, 92);
+    let cfg = TrainConfig::new(8)
+        .with_sweeps(5, 10)
+        .with_tau(auto_tau(&train))
+        .with_backend(BackendSpec::Native);
+    let res = PpTrainer::new(cfg).train(&train).unwrap();
+    assert!(res.rmse(&test).is_finite());
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn cli_binary_smoke() {
+    let bin = env!("CARGO_BIN_EXE_bmf-pp");
+    let out = std::process::Command::new(bin)
+        .args(["datasets", "--scale", "0.001"])
+        .output()
+        .expect("run bmf-pp");
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for name in ["movielens", "netflix", "yahoo", "amazon"] {
+        assert!(stdout.contains(name), "missing {name} in:\n{stdout}");
+    }
+
+    let out = std::process::Command::new(bin)
+        .args([
+            "train",
+            "--dataset",
+            "movielens",
+            "--scale",
+            "0.0015",
+            "--grid",
+            "2x2",
+            "--burnin",
+            "4",
+            "--samples",
+            "8",
+            "--native",
+        ])
+        .output()
+        .expect("run train");
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("test RMSE"));
+
+    // unknown flag is rejected
+    let out = std::process::Command::new(bin)
+        .args(["train", "--no-such-flag", "1"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn phase_sample_reduction_reduces_compute() {
+    let (train, _test, k) = dataset(0.002);
+    let mk = |frac| {
+        let mut c = TrainConfig::new(k)
+            .with_grid(2, 2)
+            .with_sweeps(6, 16)
+            .with_tau(2.0)
+            .with_backend(BackendSpec::Native);
+        c.phase_sample_frac = frac;
+        c
+    };
+    let full = PpTrainer::new(mk(1.0)).train(&train).unwrap();
+    let quarter = PpTrainer::new(mk(0.25)).train(&train).unwrap();
+    assert!(
+        quarter.stats.sweeps < full.stats.sweeps,
+        "{} vs {}",
+        quarter.stats.sweeps,
+        full.stats.sweeps
+    );
+}
