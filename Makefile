@@ -1,0 +1,19 @@
+# Build-time AOT lowering: compiles the L2/L1 Gibbs programs (JAX/Pallas)
+# to HLO text + manifest under rust/artifacts, where the PJRT runtime
+# (`--features pjrt`) picks them up. Without the artifacts the coordinator
+# transparently uses the native sampler — all default tests still pass.
+
+.PHONY: artifacts test bench clean-artifacts
+
+artifacts:
+	cd python && python -m compile.aot --out-dir ../rust/artifacts
+
+test:
+	cd rust && cargo test -q
+	python -m pytest python/tests -q
+
+bench:
+	cd rust && cargo bench --no-run
+
+clean-artifacts:
+	rm -rf rust/artifacts

@@ -74,7 +74,13 @@ fn main() -> anyhow::Result<()> {
     let result = last.unwrap();
     let rmse = result.rmse(&test);
     let baseline = mean_predictor_rmse(train.mean(), &test);
-    let tp = Throughput::measure(train.rows, train.cols, train.nnz(), total_sweeps / result.stats.blocks.max(1), result.timings.total);
+    let tp = Throughput::measure(
+        train.rows,
+        train.cols,
+        train.nnz(),
+        total_sweeps / result.stats.blocks.max(1),
+        result.timings.total,
+    );
 
     recorder.scalar("final_rmse", rmse);
     recorder.scalar("mean_predictor_rmse", baseline);

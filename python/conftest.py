@@ -1,0 +1,8 @@
+"""Make the `compile` package importable when pytest runs from the repo
+root (`python -m pytest python/tests`): the package lives at python/compile
+but is imported as `compile.*` by the tests."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))

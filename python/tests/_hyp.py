@@ -1,0 +1,40 @@
+"""Hypothesis import shim.
+
+The CI image installs hypothesis and the property tests run in full; the
+offline development image does not ship the wheel, so this module degrades
+gracefully: `@given(...)` marks the test as skipped instead of failing
+collection, and strategy expressions evaluate to inert placeholders.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # offline image: no hypothesis wheel
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """Chainable stand-in so module-level strategy expressions like
+        `st.integers(1, 8).filter(...)` still evaluate."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _Strategy()
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+        return deco
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+
+        return deco

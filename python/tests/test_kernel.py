@@ -6,7 +6,7 @@ checked with assert_allclose at f32 tolerances.
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from compile.kernels.precision import (
     _pick_tile,

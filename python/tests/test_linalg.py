@@ -1,7 +1,7 @@
 """Unrolled batched Cholesky/substitution vs numpy.linalg."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from compile.kernels.linalg import (
     batched_cholesky,

@@ -1,6 +1,9 @@
 //! Shared bench harness (criterion is unavailable offline): dataset
 //! setup at bench scales, table formatting, and JSON result dumps.
 
+// each bench binary compiles its own copy and uses a subset of the helpers
+#![allow(dead_code)]
+
 use bmf_pp::data::generator::{DatasetProfile, SyntheticDataset};
 use bmf_pp::data::split::holdout_split_covered;
 use bmf_pp::data::sparse::Coo;
@@ -34,6 +37,29 @@ pub fn bench_grid(name: &str) -> (usize, usize) {
         "amazon" => (2, 2),
         _ => (2, 2),
     }
+}
+
+/// A bench dataset with one heavily over-dense row stripe: the middle
+/// row-block of a 3-row grid carries ~`factor`x the observations of its
+/// siblings, making its phase-(b) block a straggler. Used to measure what
+/// barrier-free scheduling buys on imbalanced grids.
+pub fn skewed_dataset(name: &str, factor: usize) -> (Coo, Coo) {
+    let (_, train, test) = bench_dataset(name);
+    let mut skewed = train.clone();
+    let r0 = train.rows / 3;
+    let r1 = 2 * train.rows / 3;
+    let stripe: Vec<(usize, usize, f32)> = train
+        .entries
+        .iter()
+        .filter(|e| (e.row as usize) >= r0 && (e.row as usize) < r1)
+        .map(|e| (e.row as usize, e.col as usize, e.val))
+        .collect();
+    for _ in 1..factor.max(1) {
+        for &(r, c, v) in &stripe {
+            skewed.push(r, c, v);
+        }
+    }
+    (skewed, test)
 }
 
 pub fn hr() {

@@ -16,7 +16,9 @@
 mod common;
 
 use bmf_pp::cluster::calibrate::calibrate;
-use bmf_pp::cluster::sim::{node_sweep, pareto_front, simulate_pp, uniform_block_nnz};
+use bmf_pp::cluster::sim::{
+    node_sweep, pareto_front, simulate_pp, simulate_pp_mode, uniform_block_nnz, ScheduleMode,
+};
 use bmf_pp::coordinator::backend::BlockBackend;
 use bmf_pp::data::generator::DatasetProfile;
 use bmf_pp::partition::Grid;
@@ -31,23 +33,43 @@ fn main() {
     let figures: &[(&str, &[&str], usize, &[(usize, usize)])] = &[
         ("FIGURE 4 (top): netflix", &["netflix"], 32, &[(1, 1), (2, 2), (4, 4), (16, 8), (32, 32)]),
         ("FIGURE 4 (bottom): yahoo", &["yahoo"], 32, &[(2, 2), (4, 4), (8, 8), (16, 16), (32, 32)]),
-        ("FIGURE 5 (top): movielens", &["movielens"], 8, &[(1, 1), (2, 2), (4, 4), (8, 8), (32, 32)]),
-        ("FIGURE 5 (bottom): amazon", &["amazon"], 8, &[(1, 1), (4, 4), (8, 8), (16, 16), (32, 32)]),
+        (
+            "FIGURE 5 (top): movielens",
+            &["movielens"],
+            8,
+            &[(1, 1), (2, 2), (4, 4), (8, 8), (32, 32)],
+        ),
+        (
+            "FIGURE 5 (bottom): amazon",
+            &["amazon"],
+            8,
+            &[(1, 1), (4, 4), (8, 8), (16, 16), (32, 32)],
+        ),
     ];
 
     let mut results = Vec::new();
     for (title, names, k, grids) in figures {
         let profile = DatasetProfile::by_name(names[0]).unwrap();
         let model = calibrate(&backend, (*k).min(32));
-        println!("\n{title} — {}x{} / {:.0}M ratings, K={k}", profile.paper_rows, profile.paper_cols, profile.paper_ratings as f64 / 1e6);
+        println!(
+            "\n{title} — {}x{} / {:.0}M ratings, K={k}",
+            profile.paper_rows,
+            profile.paper_cols,
+            profile.paper_ratings as f64 / 1e6
+        );
         common::hr();
         for &(gi, gj) in *grids {
             let grid = Grid::new(profile.paper_rows, profile.paper_cols, gi, gj);
             let nnz = uniform_block_nnz(&grid, profile.paper_ratings);
             let mut pts = Vec::new();
+            let mut dag_gain_max = 1.0f64;
             for p in node_sweep(&grid, max_nodes) {
                 let r = simulate_pp(&model, &grid, &nnz, *k, sweeps, sweeps, p);
+                let rd =
+                    simulate_pp_mode(&model, &grid, &nnz, *k, sweeps, sweeps, p, ScheduleMode::Dag);
                 pts.push((p, r.total));
+                dag_gain_max = dag_gain_max.max(r.total / rd.total.max(1e-12));
+                results.push((format!("{}_{gi}x{gj}_n{p}_dag", names[0]), rd.total));
             }
             let front = pareto_front(&pts);
             print!("  {gi:>2}x{gj:<3} ");
@@ -56,6 +78,7 @@ fn main() {
                 print!("{p}:{}{mark} ", fmt_hhmm(*t));
                 results.push((format!("{}_{gi}x{gj}_n{p}", names[0]), *t));
             }
+            print!(" [barrier-free gain up to {dag_gain_max:.2}x]");
             println!();
             // headline numbers: best speedup over 1-node 1x1
             if (gi, gj) == (1, 1) || gi * gj >= 64 {
@@ -68,6 +91,34 @@ fn main() {
         }
         common::hr();
     }
+    // ---- barrier vs DAG on a skewed (imbalanced-nnz) grid ----
+    // uniform grids barely separate the schedules (all blocks finish
+    // together); with one 8x-dense phase-(b) block the barrier stalls
+    println!("\nBARRIER vs DAG schedule, netflix 4x4 with one 8x-dense row block");
+    common::hr();
+    {
+        let profile = DatasetProfile::by_name("netflix").unwrap();
+        let model = calibrate(&BlockBackend::Native, 32);
+        let grid = Grid::new(profile.paper_rows, profile.paper_cols, 4, 4);
+        let mut nnz = uniform_block_nnz(&grid, profile.paper_ratings);
+        nnz[1][0] *= 8;
+        for p in [1usize, 6, 16, 64, 256] {
+            let run = |mode: ScheduleMode| {
+                simulate_pp_mode(&model, &grid, &nnz, 32, sweeps, sweeps, p, mode)
+            };
+            let bar = run(ScheduleMode::Barrier);
+            let dag = run(ScheduleMode::Dag);
+            println!(
+                "  nodes={p:<5} barrier={:<10} dag={:<10} ({:.2}x)",
+                fmt_hhmm(bar.total),
+                fmt_hhmm(dag.total),
+                bar.total / dag.total
+            );
+            results.push((format!("skew_barrier_n{p}"), bar.total));
+            results.push((format!("skew_dag_n{p}"), dag.total));
+        }
+    }
+
     println!("\n(* = Pareto-optimal; node counts include phase-aligned points)");
     common::save_json("fig45.json", &results);
 }

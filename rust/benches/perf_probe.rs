@@ -19,6 +19,7 @@ use bmf_pp::data::sparse::{Coo, Csr};
 use bmf_pp::gibbs::native::sample_side_native;
 use bmf_pp::posterior::RowGaussians;
 use bmf_pp::rng::{normal::standard_normal_vec, Rng};
+#[cfg(feature = "pjrt")]
 use bmf_pp::runtime::Engine;
 use bmf_pp::util::timer::Stopwatch;
 
@@ -40,6 +41,12 @@ fn median(xs: &mut [f64]) -> f64 {
     xs[xs.len() / 2]
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn probe_engine(_dir: &std::path::Path, label: &str, _results: &mut Vec<(String, f64)>) {
+    println!("  {label}: skipped (built without the `pjrt` feature)");
+}
+
+#[cfg(feature = "pjrt")]
 fn probe_engine(dir: &std::path::Path, label: &str, results: &mut Vec<(String, f64)>) {
     let engine = match Engine::new(dir) {
         Ok(e) => e,
@@ -71,6 +78,39 @@ fn probe_engine(dir: &std::path::Path, label: &str, results: &mut Vec<(String, f
         st.compile_secs
     );
     results.push((format!("p1_{label}_ms"), med * 1e3));
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn probe_padding(_root: &std::path::Path, _results: &mut Vec<(String, f64)>) {
+    println!("  skipped (built without the `pjrt` feature)");
+}
+
+#[cfg(feature = "pjrt")]
+fn probe_padding(root: &std::path::Path, results: &mut Vec<(String, f64)>) {
+    let (_, train, _) = common::bench_dataset("netflix");
+    let dir = root.join("artifacts");
+    if dir.join("manifest.json").exists() {
+        let engine = Engine::new(&dir).unwrap();
+        // run one side of each block shape through the engine once
+        let grid = bmf_pp::partition::Grid::new(train.rows, train.cols, 4, 2);
+        let blocks = grid.split(&train);
+        let k = 16;
+        for row in &blocks {
+            for b in row {
+                let mut rng = Rng::seed_from_u64(5);
+                let v = standard_normal_vec(&mut rng, b.cols * k);
+                let prior = RowGaussians::standard(b.rows, k, 1.0);
+                let noise = standard_normal_vec(&mut rng, b.rows * k);
+                engine.sample_side(b, false, &v, &prior, 1.0, &noise).unwrap();
+            }
+        }
+        let st = engine.stats();
+        let ratio = st.padded_cells as f64 / st.real_cells.max(1) as f64;
+        println!("  padded/real cells = {:.2}x over {} executions", ratio, st.executions);
+        results.push(("p3_padding_ratio".to_string(), ratio));
+    } else {
+        println!("  skipped: no artifacts");
+    }
 }
 
 fn main() {
@@ -107,39 +147,11 @@ fn main() {
     if root.join("artifacts-ref/manifest.json").exists() {
         probe_engine(&root.join("artifacts-ref"), "hlo_ref", &mut results);
     } else {
-        println!("  skipped: generate with `python -m compile.aot --out-dir artifacts-ref --flavor ref`");
+        println!("  skipped: run `python -m compile.aot --out-dir artifacts-ref --flavor ref`");
     }
 
     println!("\nP3 — padding overhead on a netflix-profile PP run (grid 4x2)");
-    {
-        let (_, train, _) = common::bench_dataset("netflix");
-        let dir = root.join("artifacts");
-        if dir.join("manifest.json").exists() {
-            let engine = Engine::new(&dir).unwrap();
-            // run one side of each block shape through the engine once
-            let grid = bmf_pp::partition::Grid::new(train.rows, train.cols, 4, 2);
-            let blocks = grid.split(&train);
-            let k = 16;
-            for row in &blocks {
-                for b in row {
-                    let mut rng = Rng::seed_from_u64(5);
-                    let v = standard_normal_vec(&mut rng, b.cols * k);
-                    let prior = RowGaussians::standard(b.rows, k, 1.0);
-                    let noise = standard_normal_vec(&mut rng, b.rows * k);
-                    engine.sample_side(b, false, &v, &prior, 1.0, &noise).unwrap();
-                }
-            }
-            let st = engine.stats();
-            let ratio = st.padded_cells as f64 / st.real_cells.max(1) as f64;
-            println!(
-                "  padded/real cells = {:.2}x over {} executions",
-                ratio, st.executions
-            );
-            results.push(("p3_padding_ratio".to_string(), ratio));
-        } else {
-            println!("  skipped: no artifacts");
-        }
-    }
+    probe_padding(root, &mut results);
 
     println!("\nP4 — trainer cold vs warm pool (movielens profile, 2x2)");
     {

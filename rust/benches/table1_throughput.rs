@@ -25,8 +25,12 @@ fn main() {
     common::hr();
 
     // paper Table 1 bottom rows
-    let paper: &[(&str, f64, f64)] =
-        &[("movielens", 416.0, 70.0), ("netflix", 15.0, 5.5), ("yahoo", 27.0, 5.2), ("amazon", 911.0, 3.8)];
+    let paper: &[(&str, f64, f64)] = &[
+        ("movielens", 416.0, 70.0),
+        ("netflix", 15.0, 5.5),
+        ("yahoo", 27.0, 5.2),
+        ("amazon", 911.0, 3.8),
+    ];
 
     let mut results = Vec::new();
     for &(name, p_rows, p_ratings) in paper {

@@ -102,9 +102,9 @@ pub fn train(data: &Coo, cfg: &SgdConfig) -> SgdModel {
                             let epoch = epochs - tok.hops.div_ceil(senders.len()).max(1);
                             let lr = lr0 * decay.powi(epoch as i32);
                             let (rows, vals) = col_view.row(tok.col);
+                            let kk = tok.vcol.len();
                             for (r, val) in rows.iter().zip(vals) {
-                                let ur = &mut u_shard
-                                    [*r as usize * tok.vcol.len()..(*r as usize + 1) * tok.vcol.len()];
+                                let ur = &mut u_shard[*r as usize * kk..(*r as usize + 1) * kk];
                                 sgd_update(ur, &mut tok.vcol, *val, 0.0, lr, reg);
                             }
                             tok.hops -= 1;

@@ -10,6 +10,17 @@
 use super::model::{BlockCost, ClusterModel};
 use crate::partition::Grid;
 
+/// Scheduling regime the simulator models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScheduleMode {
+    /// Full barrier between PP phases: phase (c) starts only when the
+    /// slowest phase-(b) block has finished (the paper's Fig. 4/5 runs).
+    Barrier,
+    /// Dependency-driven dispatch: block (i,j) starts as soon as (i,0) and
+    /// (0,j) are done and nodes are free — the barrier-free coordinator.
+    Dag,
+}
+
 /// Simulated wall-clock of a full PP run.
 #[derive(Debug, Clone, Copy)]
 pub struct SimResult {
@@ -21,12 +32,35 @@ pub struct SimResult {
     pub node_secs: f64,
 }
 
+/// Wave partition of `n` LPT-sorted blocks over `p` nodes: a list of
+/// (start index, group size, per-block width). Both schedule modes derive
+/// their node-group widths from this single formula — group = min(p,
+/// remaining), width = p / group — so they stay comparable by construction.
+fn lpt_wave_widths(n: usize, p: usize) -> Vec<(usize, usize, usize)> {
+    let p = p.max(1);
+    let mut out = Vec::new();
+    let mut idx = 0;
+    while idx < n {
+        let group = (n - idx).min(p);
+        let w = (p / group).max(1);
+        out.push((idx, group, w));
+        idx += group;
+    }
+    out
+}
+
 /// One phase: distribute `blocks` over `p` nodes in waves.
 ///
 /// Blocks are processed in parallel groups of g = min(p, #blocks); each
 /// block in a group gets w = p / g nodes (the paper assigns node groups per
 /// block). Returns (wall seconds, node-seconds).
-fn simulate_phase(model: &ClusterModel, blocks: &[BlockCost], k: usize, sweeps: usize, p: usize) -> (f64, f64) {
+fn simulate_phase(
+    model: &ClusterModel,
+    blocks: &[BlockCost],
+    k: usize,
+    sweeps: usize,
+    p: usize,
+) -> (f64, f64) {
     if blocks.is_empty() {
         return (0.0, 0.0);
     }
@@ -40,20 +74,34 @@ fn simulate_phase(model: &ClusterModel, blocks: &[BlockCost], k: usize, sweeps: 
     });
     let mut wall = 0.0;
     let mut node_secs = 0.0;
-    let mut idx = 0;
-    while idx < remaining.len() {
-        let group = (remaining.len() - idx).min(p.max(1));
-        let w = (p / group).max(1);
+    for (start, group, w) in lpt_wave_widths(remaining.len(), p) {
         let mut wave_time = 0.0f64;
-        for b in &remaining[idx..idx + group] {
+        for b in &remaining[start..start + group] {
             let t = model.block_secs(b, k, sweeps, w);
             wave_time = wave_time.max(t);
             node_secs += t * w as f64;
         }
         wall += wave_time;
-        idx += group;
     }
     (wall, node_secs)
+}
+
+/// Simulate a full PP run over a partitioned workload under `mode`.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_pp_mode(
+    model: &ClusterModel,
+    grid: &Grid,
+    block_nnz: &[Vec<usize>],
+    k: usize,
+    sweeps_a: usize,
+    sweeps_bc: usize,
+    p: usize,
+    mode: ScheduleMode,
+) -> SimResult {
+    match mode {
+        ScheduleMode::Barrier => simulate_pp(model, grid, block_nnz, k, sweeps_a, sweeps_bc, p),
+        ScheduleMode::Dag => simulate_pp_dag(model, grid, block_nnz, k, sweeps_a, sweeps_bc, p),
+    }
 }
 
 /// Simulate a full PP run over a partitioned workload.
@@ -104,6 +152,149 @@ pub fn simulate_pp(
         total: ta + tb + tc,
         node_secs: na + nb + nc,
     }
+}
+
+/// Event-driven simulation of the dependency-driven schedule: blocks are
+/// DAG nodes ((i,0) and (0,j) depend on (0,0); (i,j) on those two) and a
+/// ready block starts as soon as its node group fits in the free nodes —
+/// phase-(c) blocks overlap phase-(b) stragglers exactly as the
+/// coordinator's `DagScheduler` overlaps them.
+///
+/// Each block keeps the node-group width the barrier schedule would have
+/// assigned it (LPT waves, `w = p / group`), and dispatch follows strict
+/// wave priority (a later-wave block never bypasses an earlier one that is
+/// waiting for nodes). With identical widths and priorities, removing the
+/// phase barriers can only move start times earlier — the DAG schedule is
+/// never slower than the barrier schedule, and strictly faster whenever a
+/// straggler block holds a phase open.
+fn simulate_pp_dag(
+    model: &ClusterModel,
+    grid: &Grid,
+    block_nnz: &[Vec<usize>],
+    k: usize,
+    sweeps_a: usize,
+    sweeps_bc: usize,
+    p: usize,
+) -> SimResult {
+    struct Node {
+        deps: Vec<usize>,
+        secs: f64,
+        width: usize,
+        phase: usize,
+    }
+    let p = p.max(1);
+    let cost = |i: usize, j: usize| {
+        let (r, c) = grid.block_shape(crate::partition::BlockId { i, j });
+        BlockCost { rows: r, cols: c, nnz: block_nnz[i][j] }
+    };
+    // per-block widths exactly as the barrier schedule would assign them
+    // (LPT order, shared lpt_wave_widths formula)
+    let wave_plan = |mut blocks: Vec<((usize, usize), BlockCost)>,
+                     sweeps: usize|
+     -> Vec<((usize, usize), usize, f64)> {
+        blocks.sort_by(|a, b| {
+            model
+                .block_compute_secs(&b.1, k, sweeps)
+                .partial_cmp(&model.block_compute_secs(&a.1, k, sweeps))
+                .unwrap()
+        });
+        let mut out = Vec::with_capacity(blocks.len());
+        for (start, group, w) in lpt_wave_widths(blocks.len(), p) {
+            for (key, b) in &blocks[start..start + group] {
+                out.push((*key, w, model.block_secs(b, k, sweeps, w)));
+            }
+        }
+        out
+    };
+
+    // nodes in priority order: (a), then phase (b) in wave order, then (c)
+    let mut nodes = vec![Node {
+        deps: Vec::new(),
+        secs: model.block_secs(&cost(0, 0), k, sweeps_a, p),
+        width: p,
+        phase: 0,
+    }];
+    let mut b_blocks = Vec::new();
+    for i in 1..grid.i_blocks {
+        b_blocks.push(((i, 0), cost(i, 0)));
+    }
+    for j in 1..grid.j_blocks {
+        b_blocks.push(((0, j), cost(0, j)));
+    }
+    let mut row_id = vec![0usize; grid.i_blocks];
+    let mut col_id = vec![0usize; grid.j_blocks];
+    for ((i, j), w, secs) in wave_plan(b_blocks, sweeps_bc) {
+        if j == 0 {
+            row_id[i] = nodes.len();
+        } else {
+            col_id[j] = nodes.len();
+        }
+        nodes.push(Node { deps: vec![0], secs, width: w, phase: 1 });
+    }
+    let mut c_blocks = Vec::new();
+    for i in 1..grid.i_blocks {
+        for j in 1..grid.j_blocks {
+            c_blocks.push(((i, j), cost(i, j)));
+        }
+    }
+    for ((i, j), w, secs) in wave_plan(c_blocks, sweeps_bc) {
+        nodes.push(Node { deps: vec![row_id[i], col_id[j]], secs, width: w, phase: 2 });
+    }
+
+    let n = nodes.len();
+    let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut unmet: Vec<usize> = vec![0; n];
+    for (id, nd) in nodes.iter().enumerate() {
+        unmet[id] = nd.deps.len();
+        for &d in &nd.deps {
+            dependents[d].push(id);
+        }
+    }
+    let mut ready: Vec<usize> = (0..n).filter(|&id| unmet[id] == 0).collect();
+    let mut running: Vec<(f64, usize, usize)> = Vec::new(); // (finish, id, width)
+    let mut free = p;
+    let mut now = 0.0f64;
+    let mut node_secs = 0.0f64;
+    let mut phase_finish = [0.0f64; 3];
+    let mut done = 0usize;
+    while done < n {
+        // dispatch strictly in priority (wave) order; stop at the first
+        // ready block whose node group does not fit — no bypassing
+        ready.sort_unstable();
+        while let Some(&id) = ready.first() {
+            let w = nodes[id].width;
+            if w > free {
+                break;
+            }
+            ready.remove(0);
+            free -= w;
+            node_secs += nodes[id].secs * w as f64;
+            running.push((now + nodes[id].secs, id, w));
+        }
+        // advance to the earliest completion
+        let mut best = 0usize;
+        for (i, r) in running.iter().enumerate() {
+            if r.0 < running[best].0 {
+                best = i;
+            }
+        }
+        let (t, id, w) = running.swap_remove(best);
+        now = t;
+        free += w;
+        done += 1;
+        let ph = nodes[id].phase;
+        phase_finish[ph] = phase_finish[ph].max(now);
+        for &child in &dependents[id] {
+            unmet[child] -= 1;
+            if unmet[child] == 0 {
+                ready.push(child);
+            }
+        }
+    }
+    let fa = phase_finish[0];
+    let fb = phase_finish[1].max(fa);
+    let fc = phase_finish[2].max(fb);
+    SimResult { phase_a: fa, phase_b: fb - fa, phase_c: fc - fb, total: fc, node_secs }
 }
 
 /// Uniform block-nnz estimate when no real split is available: distributes
@@ -226,6 +417,43 @@ mod tests {
         let before = simulate_pp(&m, &g, &nnz, 16, 20, 20, pc - 1);
         let at = simulate_pp(&m, &g, &nnz, 16, 20, 20, pc);
         assert!(at.phase_c < before.phase_c, "no drop at aligned node count");
+    }
+
+    #[test]
+    fn dag_schedule_never_materially_slower_than_barrier() {
+        let (m, g, nnz) = setup(4, 4);
+        for p in [1usize, 2, 4, 6, 8, 16, 64, 256] {
+            let bar = simulate_pp_mode(&m, &g, &nnz, 16, 20, 20, p, ScheduleMode::Barrier);
+            let dag = simulate_pp_mode(&m, &g, &nnz, 16, 20, 20, p, ScheduleMode::Dag);
+            assert!(
+                dag.total <= bar.total * 1.05,
+                "p={p}: dag {} vs barrier {}",
+                dag.total,
+                bar.total
+            );
+        }
+    }
+
+    #[test]
+    fn dag_schedule_beats_barrier_on_straggler_blocks() {
+        // one phase-(b) block carries 10x the observations: the barrier
+        // schedule stalls phase (c) behind it, the DAG schedule overlaps
+        let (m, g, mut nnz) = setup(4, 4);
+        nnz[1][0] *= 10;
+        let p = 6; // = I+J-2: every phase-(b) block in flight at once
+        let bar = simulate_pp_mode(&m, &g, &nnz, 16, 20, 20, p, ScheduleMode::Barrier);
+        let dag = simulate_pp_mode(&m, &g, &nnz, 16, 20, 20, p, ScheduleMode::Dag);
+        assert!(dag.total < bar.total, "dag {} vs barrier {}", dag.total, bar.total);
+    }
+
+    #[test]
+    fn dag_schedule_matches_barrier_at_one_node() {
+        // sequential execution: both schedules run every block back to back
+        let (m, g, nnz) = setup(3, 3);
+        let bar = simulate_pp_mode(&m, &g, &nnz, 16, 20, 20, 1, ScheduleMode::Barrier);
+        let dag = simulate_pp_mode(&m, &g, &nnz, 16, 20, 20, 1, ScheduleMode::Dag);
+        assert!((dag.total - bar.total).abs() < 1e-9 * bar.total.max(1.0));
+        assert!((dag.node_secs - bar.node_secs).abs() < 1e-9 * bar.node_secs.max(1.0));
     }
 
     #[test]

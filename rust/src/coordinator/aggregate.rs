@@ -15,6 +15,25 @@
 use crate::linalg::Cholesky;
 use crate::posterior::RowGaussians;
 
+/// One part (row-group or column-group) of the final posterior: `prior`
+/// refined by the downstream `posts` that each consumed it once. With no
+/// downstream posts the prior passes through unchanged (e.g. a 1-column
+/// grid has no phase-(c) refinements of a row block).
+///
+/// This is the unit the DAG scheduler runs the moment a part's own inputs
+/// complete — aggregation no longer waits for every block of the grid.
+pub fn aggregate_part(
+    prior: &RowGaussians,
+    posts: &[&RowGaussians],
+    ridge: f64,
+) -> RowGaussians {
+    if posts.is_empty() {
+        prior.clone()
+    } else {
+        aggregate_rows(posts, Some(prior), ridge)
+    }
+}
+
 /// Aggregate `posts` (≥1) that each consumed `prior` once.
 /// `prior=None` is only valid for a single posterior (no division needed).
 pub fn aggregate_rows(
@@ -202,6 +221,23 @@ mod tests {
         for i in 0..3 {
             assert!(agg.row_prec(i).max_abs_diff(&truth.row_prec(i)) < 1e-8);
         }
+    }
+
+    #[test]
+    fn part_aggregation_matches_bulk() {
+        let q0 = gaussians(4, 3, 8);
+        let l1 = gaussians(4, 3, 9);
+        let l2 = gaussians(4, 3, 10);
+        let q1 = q0.combine(&l1);
+        let q2 = q0.combine(&l2);
+        let part = aggregate_part(&q0, &[&q1, &q2], 1e-10);
+        let bulk = aggregate_rows(&[&q1, &q2], Some(&q0), 1e-10);
+        assert_eq!(part.mean, bulk.mean);
+        assert_eq!(part.prec, bulk.prec);
+        // no downstream posts: the prior passes through untouched
+        let passthrough = aggregate_part(&q0, &[], 1e-10);
+        assert_eq!(passthrough.mean, q0.mean);
+        assert_eq!(passthrough.prec, q0.prec);
     }
 
     #[test]

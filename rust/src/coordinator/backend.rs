@@ -4,6 +4,7 @@ use super::config::BackendSpec;
 use crate::data::sparse::{Coo, Csr};
 use crate::gibbs::native::sample_side_native;
 use crate::posterior::RowGaussians;
+#[cfg(feature = "pjrt")]
 use crate::runtime::Engine;
 
 /// A block's data in the layouts both backends want: COO (densify for HLO)
@@ -54,9 +55,11 @@ impl BlockData {
     }
 }
 
-/// Thread-confined backend instance.
+/// Thread-confined backend instance. The HLO/PJRT variant only exists in
+/// builds with the `pjrt` feature (it needs the XLA system libraries).
 pub enum BlockBackend {
     Native,
+    #[cfg(feature = "pjrt")]
     Hlo(Engine),
 }
 
@@ -65,15 +68,25 @@ impl BlockBackend {
     pub fn create(spec: &BackendSpec) -> anyhow::Result<BlockBackend> {
         match spec.resolve() {
             BackendSpec::Native => Ok(BlockBackend::Native),
+            #[cfg(feature = "pjrt")]
             BackendSpec::Hlo { artifact_dir } => {
                 Ok(BlockBackend::Hlo(Engine::new(&artifact_dir)?))
             }
+            #[cfg(not(feature = "pjrt"))]
+            BackendSpec::Hlo { .. } => anyhow::bail!(
+                "HLO backend requested but this build has no PJRT support \
+                 (rebuild with `--features pjrt`)"
+            ),
             BackendSpec::Auto { .. } => unreachable!("resolve() removes Auto"),
         }
     }
 
     pub fn is_hlo(&self) -> bool {
-        matches!(self, BlockBackend::Hlo(_))
+        #[cfg(feature = "pjrt")]
+        if matches!(self, BlockBackend::Hlo(_)) {
+            return true;
+        }
+        false
     }
 
     /// One conditional Gibbs half-sweep of a block side.
@@ -92,6 +105,7 @@ impl BlockBackend {
                 let csr = if transpose { &data.csr_t } else { &data.csr };
                 Ok(sample_side_native(csr, v, prior.k, prior, tau, noise))
             }
+            #[cfg(feature = "pjrt")]
             BlockBackend::Hlo(engine) => {
                 let (n_real, d_real) = if transpose {
                     (data.cols(), data.rows())
@@ -146,6 +160,7 @@ impl BlockBackend {
                 }
                 Ok((sse, block.nnz() as f64))
             }
+            #[cfg(feature = "pjrt")]
             BlockBackend::Hlo(engine) => Ok(engine.predict_sse(u, v, k, block)?),
         }
     }
@@ -190,6 +205,7 @@ mod tests {
         assert_eq!(cnt as usize, data.coo.nnz());
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn hlo_falls_back_to_native_when_no_artifact_fits() {
         let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -213,6 +229,7 @@ mod tests {
         assert_eq!(s_h, s_n, "fallback must be the native path exactly");
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn backends_agree_when_artifacts_present() {
         let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");

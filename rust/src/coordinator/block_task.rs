@@ -30,6 +30,47 @@ pub struct BlockRunStats {
     pub ratings_processed: u64,
 }
 
+/// Output of one node in the PP task DAG: either a sampled block's
+/// posterior marginals, or one aggregated part (a row-group or
+/// column-group) of the final factor posterior. Keeping both in one type
+/// lets the scheduler pipeline sampling and aggregation without barriers.
+#[derive(Debug, Clone)]
+pub enum PpTaskOutput {
+    Block(BlockPosteriors, BlockRunStats),
+    Part(RowGaussians),
+    /// Output of a synthetic phase-join node (barrier mode only): carries
+    /// no data, exists so N downstream blocks can wait on one node instead
+    /// of each holding edges to every block of the previous phase.
+    Barrier,
+}
+
+impl PpTaskOutput {
+    /// The block posteriors; panics on a non-block node (the trainer
+    /// wires block outputs only into nodes expecting blocks).
+    pub fn block(&self) -> &BlockPosteriors {
+        match self {
+            PpTaskOutput::Block(p, _) => p,
+            _ => panic!("expected a block node output"),
+        }
+    }
+
+    /// The block's run statistics, if this node sampled a block.
+    pub fn block_stats(&self) -> Option<&BlockRunStats> {
+        match self {
+            PpTaskOutput::Block(_, s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The aggregated posterior part; panics on a non-part node.
+    pub fn part(&self) -> &RowGaussians {
+        match self {
+            PpTaskOutput::Part(g) => g,
+            _ => panic!("expected an aggregation node output"),
+        }
+    }
+}
+
 /// Configuration subset a block task needs.
 #[derive(Debug, Clone, Copy)]
 pub struct BlockTaskCfg {
@@ -135,7 +176,13 @@ mod tests {
     use crate::linalg::Mat;
     use crate::rng::Rng;
 
-    fn block_from_factors(n: usize, d: usize, k: usize, seed: u64, density: f64) -> (BlockData, Vec<f32>, Vec<f32>) {
+    fn block_from_factors(
+        n: usize,
+        d: usize,
+        k: usize,
+        seed: u64,
+        density: f64,
+    ) -> (BlockData, Vec<f32>, Vec<f32>) {
         let mut rng = Rng::seed_from_u64(seed);
         let scale = (1.0 / k as f64).sqrt() as f32;
         let u: Vec<f32> =
@@ -191,7 +238,15 @@ mod tests {
             prior_u.mean[i * k] = 2.0;
         }
         let backend = BlockBackend::Native;
-        let c = BlockTaskCfg { k, tau: 1.0, burnin: 4, samples: 30, workers: 1, ridge: 1e-4, seed: 3 };
+        let c = BlockTaskCfg {
+            k,
+            tau: 1.0,
+            burnin: 4,
+            samples: 30,
+            workers: 1,
+            ridge: 1e-4,
+            seed: 3,
+        };
         let (post, _) = run_block(&backend, &data, &c, Some(&prior_u), None).unwrap();
         for i in 0..8 {
             assert!(

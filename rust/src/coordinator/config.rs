@@ -22,11 +22,13 @@ impl BackendSpec {
         }
     }
 
-    /// Resolve Auto into Native/Hlo by checking the manifest.
+    /// Resolve Auto into Native/Hlo by checking the manifest. Builds
+    /// without the `pjrt` feature always resolve Auto to Native — the HLO
+    /// runtime is not compiled in.
     pub fn resolve(&self) -> BackendSpec {
         match self {
             BackendSpec::Auto { artifact_dir } => {
-                if artifact_dir.join("manifest.json").exists() {
+                if cfg!(feature = "pjrt") && artifact_dir.join("manifest.json").exists() {
                     BackendSpec::Hlo { artifact_dir: artifact_dir.clone() }
                 } else {
                     BackendSpec::Native
@@ -35,6 +37,18 @@ impl BackendSpec {
             other => other.clone(),
         }
     }
+}
+
+/// How block tasks are ordered across the PP phases.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerMode {
+    /// Full barrier between phases (a), (b), (c) and aggregation: every
+    /// task of a phase waits for the slowest block of the previous phase.
+    Barrier,
+    /// Dependency-driven: a block is dispatched the moment the posteriors
+    /// it consumes are aggregated — phase-(c) blocks overlap phase-(b)
+    /// stragglers (the paper's asynchronous-communication direction).
+    Dag,
 }
 
 /// Heuristic residual-noise precision from the data: assumes the factor
@@ -77,6 +91,10 @@ pub struct TrainConfig {
     /// Base RNG seed.
     pub seed: u64,
     pub backend: BackendSpec,
+    /// Barrier vs dependency-driven block scheduling. Both produce
+    /// bitwise-identical posteriors for the same seeds/config; Dag removes
+    /// the straggler wait between phases.
+    pub scheduler: SchedulerMode,
     /// Optional sweep-reduction for later phases (paper §4 future work):
     /// phases b and c run `max(min_phase_sweeps, samples * frac)` retained
     /// samples where `frac = phase_sample_frac`. 1.0 = paper default
@@ -100,6 +118,7 @@ impl TrainConfig {
             ridge: 1e-3,
             seed: 42,
             backend: BackendSpec::auto_default(),
+            scheduler: SchedulerMode::Dag,
             phase_sample_frac: 1.0,
             min_phase_samples: 4,
         }
@@ -133,6 +152,11 @@ impl TrainConfig {
 
     pub fn with_tau(mut self, tau: f64) -> Self {
         self.tau = tau;
+        self
+    }
+
+    pub fn with_scheduler(mut self, scheduler: SchedulerMode) -> Self {
+        self.scheduler = scheduler;
         self
     }
 

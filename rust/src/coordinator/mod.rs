@@ -11,6 +11,12 @@
 //! 5. `aggregate` combines subset posteriors, dividing away multiply-
 //!    counted propagated priors.
 //!
+//! Phases are scheduled as a dependency DAG (`scheduler::DagScheduler`):
+//! by default a block runs the moment the posteriors it consumes exist,
+//! so no phase barrier stalls on stragglers; `SchedulerMode::Barrier`
+//! restores the classic phase-synchronous schedule for comparison. Both
+//! produce bitwise-identical posteriors.
+//!
 //! Within each block, the Gibbs half-sweeps execute over row shards
 //! (`worker`) — the distributed-BMF-inside-a-block layer of the paper —
 //! through either the AOT HLO runtime or the native oracle backend.
@@ -24,5 +30,5 @@ pub mod scheduler;
 pub mod trainer;
 pub mod worker;
 
-pub use config::{BackendSpec, TrainConfig};
+pub use config::{BackendSpec, SchedulerMode, TrainConfig};
 pub use trainer::{PpTrainer, TrainResult};

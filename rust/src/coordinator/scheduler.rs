@@ -1,17 +1,32 @@
-//! Phase-parallel task scheduling on a persistent worker pool.
+//! Block-task scheduling on a persistent worker pool.
 //!
-//! Within a PP phase all block tasks are independent; across phases the
-//! expensive per-thread state (the PJRT engine: client + compiled
-//! executables) must be REUSED, so the pool outlives individual phases.
-//! Each worker thread instantiates its own `BlockBackend` once (the engine
-//! is thread-confined) and then serves jobs from a shared channel.
+//! Two scheduling regimes share the same pool:
+//!
+//! - [`WorkerPool::run_phase`] — the barrier scheduler: a batch of
+//!   independent tasks runs to completion before the caller continues, so
+//!   every batch waits for its slowest straggler.
+//! - [`DagScheduler`] — dependency-driven (barrier-free) scheduling: each
+//!   node is dispatched the moment its parents' outputs exist, so tasks of
+//!   a later PP phase start while stragglers of the previous phase are
+//!   still running.
+//!
+//! Across phases the expensive per-thread state (the PJRT engine: client +
+//! compiled executables) must be REUSED, so the pool outlives individual
+//! phases. Each worker thread instantiates its own `BlockBackend` once
+//! (the engine is thread-confined) and then serves jobs from a shared
+//! channel. If backend construction fails, every job submitted to that
+//! worker reports the construction error to its caller — jobs are never
+//! silently run on a substitute backend.
 
 use super::backend::BlockBackend;
 use super::config::BackendSpec;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
-type Job = Box<dyn FnOnce(&BlockBackend) + Send>;
+/// A job receives the worker's backend, or the error that prevented the
+/// backend from being constructed.
+type Job = Box<dyn FnOnce(anyhow::Result<&BlockBackend>) + Send>;
 
 /// A pool of worker threads, each owning one backend instance.
 pub struct WorkerPool {
@@ -39,21 +54,34 @@ impl WorkerPool {
                         guard.recv()
                     };
                     match job {
-                        Ok(job) => match &backend {
-                            Ok(b) => job(b),
-                            Err(e) => {
-                                // construct a fresh native backend so the job
-                                // can still report the error path cleanly
-                                log::error!("backend construction failed: {e:#}");
-                                job(&BlockBackend::Native);
+                        Ok(job) => {
+                            // catch unwinds so one panicking task cannot kill
+                            // the worker and strand the jobs queued behind it
+                            let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                                || match &backend {
+                                    Ok(b) => job(Ok(b)),
+                                    // propagate the construction failure to the
+                                    // submitter instead of substituting a fresh
+                                    // native backend behind its back
+                                    Err(e) => job(Err(anyhow::anyhow!(
+                                        "backend construction failed: {e:#}"
+                                    ))),
+                                },
+                            ));
+                            if run.is_err() {
+                                log::error!("scheduled task panicked; worker continues");
                             }
-                        },
+                        }
                         Err(_) => break, // pool dropped
                     }
                 }
             }));
         }
         WorkerPool { tx: Some(tx), handles, threads }
+    }
+
+    fn submit(&self, job: Job) {
+        self.tx.as_ref().expect("pool alive").send(job).expect("workers alive");
     }
 
     /// Run a batch of tasks to completion; results in task order.
@@ -70,10 +98,10 @@ impl WorkerPool {
         for (idx, task) in tasks.into_iter().enumerate() {
             let rtx = rtx.clone();
             let job: Job = Box::new(move |backend| {
-                let out = task(backend);
+                let out = backend.and_then(task);
                 let _ = rtx.send((idx, out));
             });
-            self.tx.as_ref().expect("pool alive").send(job).expect("workers alive");
+            self.submit(job);
         }
         drop(rtx);
         let mut slots: Vec<Option<anyhow::Result<T>>> = (0..n).map(|_| None).collect();
@@ -110,6 +138,205 @@ where
     F: FnOnce(&BlockBackend) -> anyhow::Result<T> + Send + 'static,
 {
     WorkerPool::new(spec, slots.min(tasks.len().max(1))).run_phase(tasks)
+}
+
+/// Identifier of a node added to a [`DagScheduler`]: its insertion index.
+pub type NodeId = usize;
+
+type DagTask<T> = Box<dyn FnOnce(&BlockBackend, &[Arc<T>]) -> anyhow::Result<T> + Send>;
+
+/// (node, output, compute start, compute end) reported by a worker.
+type Done<T> = (NodeId, anyhow::Result<T>, Instant, Instant);
+
+struct DagNodeSpec<T> {
+    deps: Vec<NodeId>,
+    task: DagTask<T>,
+}
+
+/// A completed node: its output plus start/finish seconds relative to the
+/// moment the schedule began (for phase attribution and idle accounting).
+pub struct DagNodeResult<T> {
+    pub output: Arc<T>,
+    pub started: f64,
+    pub finished: f64,
+}
+
+impl<T> DagNodeResult<T> {
+    /// Seconds this node occupied a worker slot.
+    pub fn busy(&self) -> f64 {
+        self.finished - self.started
+    }
+}
+
+/// Dependency-driven (barrier-free) scheduler over a [`WorkerPool`].
+///
+/// Nodes are added in topological order — a node may only depend on nodes
+/// added before it, which makes cycles unrepresentable. [`DagScheduler::run`]
+/// dispatches every node with no pending dependencies, then dispatches each
+/// remaining node the moment its last parent completes.
+pub struct DagScheduler<T> {
+    nodes: Vec<DagNodeSpec<T>>,
+}
+
+impl<T: Send + Sync + 'static> DagScheduler<T> {
+    pub fn new() -> DagScheduler<T> {
+        DagScheduler { nodes: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Add a node depending on `deps` (all must already be in the DAG).
+    /// The task receives its parents' outputs in `deps` order.
+    pub fn add<F>(&mut self, deps: &[NodeId], task: F) -> NodeId
+    where
+        F: FnOnce(&BlockBackend, &[Arc<T>]) -> anyhow::Result<T> + Send + 'static,
+    {
+        for &d in deps {
+            assert!(d < self.nodes.len(), "dependency {d} on a node not yet added");
+        }
+        self.nodes.push(DagNodeSpec { deps: deps.to_vec(), task: Box::new(task) });
+        self.nodes.len() - 1
+    }
+
+    /// Execute the DAG on `pool`; returns per-node outputs and timings.
+    ///
+    /// On a task failure no further nodes are dispatched; in-flight nodes
+    /// drain and the first error is returned with the node attributed.
+    pub fn run(self, pool: &WorkerPool) -> anyhow::Result<Vec<DagNodeResult<T>>> {
+        let n = self.nodes.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let mut deps: Vec<Vec<NodeId>> = Vec::with_capacity(n);
+        let mut tasks: Vec<Option<DagTask<T>>> = Vec::with_capacity(n);
+        for spec in self.nodes {
+            deps.push(spec.deps);
+            tasks.push(Some(spec.task));
+        }
+        let mut dependents: Vec<Vec<NodeId>> = vec![Vec::new(); n];
+        let mut unmet: Vec<usize> = vec![0; n];
+        for (id, dl) in deps.iter().enumerate() {
+            let mut uniq = dl.clone();
+            uniq.sort_unstable();
+            uniq.dedup();
+            unmet[id] = uniq.len();
+            for d in uniq {
+                dependents[d].push(id);
+            }
+        }
+
+        let t0 = Instant::now();
+        let (rtx, rrx): (Sender<Done<T>>, Receiver<Done<T>>) = channel();
+        let mut outputs: Vec<Option<Arc<T>>> = (0..n).map(|_| None).collect();
+        let mut results: Vec<Option<DagNodeResult<T>>> = (0..n).map(|_| None).collect();
+        let mut in_flight = 0usize;
+        let mut completed = 0usize;
+        let mut first_err: Option<anyhow::Error> = None;
+
+        for id in 0..n {
+            if unmet[id] == 0 {
+                dispatch(pool, &rtx, id, tasks[id].take().expect("task present"), Vec::new());
+                in_flight += 1;
+            }
+        }
+        while completed < n {
+            if in_flight == 0 {
+                // a failed parent kept the rest of the DAG from running
+                return Err(first_err.unwrap_or_else(|| {
+                    anyhow::anyhow!("dag stalled with {completed}/{n} nodes completed")
+                }));
+            }
+            let (id, out, started, finished) =
+                rrx.recv().map_err(|_| anyhow::anyhow!("worker pool hung up"))?;
+            in_flight -= 1;
+            completed += 1;
+            match out {
+                Ok(value) => {
+                    let value = Arc::new(value);
+                    outputs[id] = Some(value.clone());
+                    results[id] = Some(DagNodeResult {
+                        output: value,
+                        started: started.saturating_duration_since(t0).as_secs_f64(),
+                        finished: finished.saturating_duration_since(t0).as_secs_f64(),
+                    });
+                    for &child in &dependents[id] {
+                        unmet[child] -= 1;
+                        if unmet[child] == 0 && first_err.is_none() {
+                            let parents: Vec<Arc<T>> = deps[child]
+                                .iter()
+                                .map(|&p| outputs[p].clone().expect("parent completed"))
+                                .collect();
+                            let task = tasks[child].take().expect("task present");
+                            dispatch(pool, &rtx, child, task, parents);
+                            in_flight += 1;
+                        }
+                    }
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e.context(format!("dag node {id} failed")));
+                    }
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(results.into_iter().map(|r| r.expect("all nodes completed")).collect()),
+        }
+    }
+}
+
+impl<T: Send + Sync + 'static> Default for DagScheduler<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Reports a node as failed if its task unwinds: `DagScheduler::run` holds
+/// its own `Sender` for later dispatches, so unlike `run_phase` it cannot
+/// rely on channel disconnection to notice a dead worker — without this
+/// guard a panicking task would leave the scheduler waiting forever.
+struct PanicGuard<T> {
+    rtx: Option<Sender<Done<T>>>,
+    id: NodeId,
+    started: Instant,
+}
+
+impl<T> Drop for PanicGuard<T> {
+    fn drop(&mut self) {
+        if let Some(rtx) = self.rtx.take() {
+            let _ = rtx.send((
+                self.id,
+                Err(anyhow::anyhow!("dag task panicked")),
+                self.started,
+                Instant::now(),
+            ));
+        }
+    }
+}
+
+fn dispatch<T: Send + Sync + 'static>(
+    pool: &WorkerPool,
+    rtx: &Sender<Done<T>>,
+    id: NodeId,
+    task: DagTask<T>,
+    parents: Vec<Arc<T>>,
+) {
+    let rtx = rtx.clone();
+    let job: Job = Box::new(move |backend| {
+        let started = Instant::now();
+        let mut guard = PanicGuard { rtx: Some(rtx), id, started };
+        let out = backend.and_then(|b| task(b, &parents));
+        let rtx = guard.rtx.take().expect("guard armed");
+        let _ = rtx.send((id, out, started, Instant::now()));
+    });
+    pool.submit(job);
 }
 
 #[cfg(test)]
@@ -154,6 +381,23 @@ mod tests {
     }
 
     #[test]
+    fn propagates_backend_construction_errors() {
+        // an HLO spec over a missing artifact dir (or a build without the
+        // `pjrt` feature) must fail the task, not silently run natively
+        let spec = BackendSpec::Hlo {
+            artifact_dir: std::path::PathBuf::from("/definitely/not/here"),
+        };
+        let tasks: Vec<_> = (0..3)
+            .map(|i| move |_b: &BlockBackend| -> anyhow::Result<usize> { Ok(i) })
+            .collect();
+        let err = run_phase(&spec, 2, tasks).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("backend construction failed"),
+            "got: {err:#}"
+        );
+    }
+
+    #[test]
     fn empty_task_list() {
         let tasks: Vec<fn(&BlockBackend) -> anyhow::Result<()>> = vec![];
         assert!(run_phase(&BackendSpec::Native, 4, tasks).unwrap().is_empty());
@@ -173,5 +417,95 @@ mod tests {
         run_phase(&BackendSpec::Native, 4, tasks).unwrap();
         let dt = t0.elapsed().as_millis();
         assert!(dt < 160, "took {dt}ms — not parallel");
+    }
+
+    #[test]
+    fn dag_propagates_parent_outputs() {
+        let pool = WorkerPool::new(&BackendSpec::Native, 4);
+        let mut dag: DagScheduler<usize> = DagScheduler::new();
+        let a = dag.add(&[], |_b: &BlockBackend, _p: &[Arc<usize>]| Ok(1));
+        let b = dag.add(&[a], |_b: &BlockBackend, p: &[Arc<usize>]| Ok(*p[0] * 10));
+        let c = dag.add(&[a], |_b: &BlockBackend, p: &[Arc<usize>]| Ok(*p[0] * 100));
+        let d = dag.add(&[b, c], |_b: &BlockBackend, p: &[Arc<usize>]| Ok(*p[0] + *p[1]));
+        assert_eq!(dag.len(), 4);
+        let out = dag.run(&pool).unwrap();
+        assert_eq!(*out[b].output, 10);
+        assert_eq!(*out[c].output, 100);
+        assert_eq!(*out[d].output, 110);
+        // children never start before their parents finish
+        assert!(out[b].started >= out[a].finished - 1e-9);
+        assert!(out[d].started >= out[c].finished - 1e-9);
+    }
+
+    #[test]
+    fn dag_empty_is_ok() {
+        let pool = WorkerPool::new(&BackendSpec::Native, 2);
+        let dag: DagScheduler<()> = DagScheduler::new();
+        assert!(dag.is_empty());
+        assert!(dag.run(&pool).unwrap().is_empty());
+    }
+
+    #[test]
+    fn dag_starts_children_before_sibling_stragglers_finish() {
+        // PP-shaped DAG: a; then b1 (straggler) and b2 (fast) both depend
+        // on a; c depends only on b2. Barrier-free scheduling must start —
+        // and even finish — c while b1 is still running.
+        let pool = WorkerPool::new(&BackendSpec::Native, 3);
+        let sleep = |ms: u64| std::thread::sleep(std::time::Duration::from_millis(ms));
+        let mut dag: DagScheduler<u32> = DagScheduler::new();
+        let a = dag.add(&[], move |_b: &BlockBackend, _p: &[Arc<u32>]| Ok(0));
+        let b1 = dag.add(&[a], move |_b: &BlockBackend, _p: &[Arc<u32>]| {
+            sleep(400);
+            Ok(1)
+        });
+        let b2 = dag.add(&[a], move |_b: &BlockBackend, _p: &[Arc<u32>]| {
+            sleep(25);
+            Ok(2)
+        });
+        let c = dag.add(&[b2], move |_b: &BlockBackend, p: &[Arc<u32>]| {
+            sleep(25);
+            Ok(*p[0] + 1)
+        });
+        let out = dag.run(&pool).unwrap();
+        assert_eq!(*out[c].output, 3);
+        assert!(
+            out[c].started < out[b1].finished,
+            "c started at {:.3}s, after the straggler finished at {:.3}s",
+            out[c].started,
+            out[b1].finished
+        );
+        assert!(out[c].finished < out[b1].finished, "c should finish inside the straggler");
+    }
+
+    #[test]
+    fn dag_errors_abort_descendants() {
+        let pool = WorkerPool::new(&BackendSpec::Native, 2);
+        let mut dag: DagScheduler<u32> = DagScheduler::new();
+        let a = dag.add(&[], |_b: &BlockBackend, _p: &[Arc<u32>]| Ok(7));
+        let b = dag.add(&[a], |_b: &BlockBackend, _p: &[Arc<u32>]| anyhow::bail!("boom"));
+        let _c = dag.add(&[b], |_b: &BlockBackend, p: &[Arc<u32>]| Ok(*p[0]));
+        let err = dag.run(&pool).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("boom"), "{msg}");
+        assert!(msg.contains("dag node 1"), "{msg}");
+    }
+
+    #[test]
+    #[should_panic(expected = "not yet added")]
+    fn dag_rejects_forward_dependencies() {
+        let mut dag: DagScheduler<u32> = DagScheduler::new();
+        dag.add(&[3], |_b: &BlockBackend, _p: &[Arc<u32>]| Ok(0));
+    }
+
+    #[test]
+    fn dag_task_panic_reports_error_instead_of_hanging() {
+        let pool = WorkerPool::new(&BackendSpec::Native, 2);
+        let mut dag: DagScheduler<u32> = DagScheduler::new();
+        let a = dag.add(&[], |_b: &BlockBackend, _p: &[Arc<u32>]| Ok(1));
+        let _b = dag.add(&[a], |_b: &BlockBackend, _p: &[Arc<u32>]| -> anyhow::Result<u32> {
+            panic!("kaboom")
+        });
+        let err = dag.run(&pool).unwrap_err();
+        assert!(format!("{err:#}").contains("panicked"), "{err:#}");
     }
 }

@@ -81,6 +81,7 @@ pub fn sample_side_sharded(
             .expect("worker thread panicked");
             Ok((samples, means))
         }
+        #[cfg(feature = "pjrt")]
         BlockBackend::Hlo(engine) => {
             // sequential shard execution through the thread-confined engine
             let mut samples = vec![0.0f32; n * k];

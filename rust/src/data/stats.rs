@@ -46,7 +46,12 @@ impl DatasetStats {
     pub fn format_row(&self, name: &str) -> String {
         format!(
             "{name:<12} rows={:<9} cols={:<9} ratings={:<10} sparsity={:<10.1} r/row={:<8.1} rows/cols={:<6.2}",
-            self.rows, self.cols, self.ratings, self.sparsity, self.ratings_per_row, self.rows_per_col
+            self.rows,
+            self.cols,
+            self.ratings,
+            self.sparsity,
+            self.ratings_per_row,
+            self.rows_per_col
         )
     }
 }

@@ -28,6 +28,7 @@ pub mod metrics;
 pub mod partition;
 pub mod posterior;
 pub mod rng;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod testing;
 pub mod util;

@@ -19,7 +19,7 @@ use bmf_pp::baselines::{fpsgd, nomad};
 use bmf_pp::cluster::{calibrate, sim};
 use bmf_pp::coordinator::backend::BlockBackend;
 use bmf_pp::coordinator::config::auto_tau;
-use bmf_pp::coordinator::{BackendSpec, PpTrainer, TrainConfig};
+use bmf_pp::coordinator::{BackendSpec, PpTrainer, SchedulerMode, TrainConfig};
 use bmf_pp::data::generator::{DatasetProfile, SyntheticDataset};
 use bmf_pp::data::loader;
 use bmf_pp::data::split::holdout_split_covered;
@@ -65,6 +65,11 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     if args.bool_or("native", false) {
         cfg = cfg.with_backend(BackendSpec::Native);
     }
+    cfg = cfg.with_scheduler(match args.get_or("scheduler", "dag") {
+        "barrier" => SchedulerMode::Barrier,
+        "dag" => SchedulerMode::Dag,
+        other => anyhow::bail!("unknown scheduler '{other}' (barrier | dag)"),
+    });
     cfg.block_parallelism = args.usize_or("block-parallelism", cfg.block_parallelism);
     cfg.phase_sample_frac = args.f64_or("phase-sample-frac", 1.0);
     let save_path = args.get("save").map(str::to_string);
@@ -87,6 +92,12 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         fmt_duration(result.timings.c),
         fmt_duration(result.timings.aggregate),
         fmt_duration(result.timings.total)
+    );
+    println!(
+        "scheduling: compute {} / idle {} / phase-overlap {}",
+        fmt_duration(result.stats.compute_secs),
+        fmt_duration(result.stats.idle_secs),
+        fmt_duration(result.stats.overlap_secs)
     );
     let tp = Throughput::measure(
         train.rows,
@@ -123,7 +134,11 @@ fn cmd_evaluate(args: &Args) -> anyhow::Result<()> {
         (mu, sigma)
     });
     for (z, nominal, empirical) in report.rows {
-        println!("  ±{z:.0}σ coverage: {:.1}% (nominal {:.1}%)", empirical * 100.0, nominal * 100.0);
+        println!(
+            "  ±{z:.0}σ coverage: {:.1}% (nominal {:.1}%)",
+            empirical * 100.0,
+            nominal * 100.0
+        );
     }
     Ok(())
 }

@@ -90,7 +90,8 @@ pub fn recommend_grid(
         }
         let grid = Grid::new(rows, cols, i, j);
         let block_nnz = crate::cluster::sim::uniform_block_nnz(&grid, nnz);
-        let r = crate::cluster::sim::simulate_pp(model, &grid, &block_nnz, k, sweeps, sweeps, nodes);
+        let r =
+            crate::cluster::sim::simulate_pp(model, &grid, &block_nnz, k, sweeps, sweeps, nodes);
         if r.total < best.1 {
             best = ((i, j), r.total);
         }

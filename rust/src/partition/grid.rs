@@ -199,7 +199,8 @@ mod tests {
                     }
                 }
                 // block sizes differ by at most 1 (load balance)
-                let sizes: Vec<usize> = (0..i).map(|b| g.row_range(b).1 - g.row_range(b).0).collect();
+                let sizes: Vec<usize> =
+                    (0..i).map(|b| g.row_range(b).1 - g.row_range(b).0).collect();
                 let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
                 if mx - mn > 1 {
                     return Err(format!("unbalanced rows: {sizes:?}"));
