@@ -5,7 +5,7 @@
 //!     cargo run --release --example blocksize_explore
 
 use bmf_pp::coordinator::config::auto_tau;
-use bmf_pp::coordinator::{PpTrainer, TrainConfig};
+use bmf_pp::coordinator::{Engine, TrainConfig};
 use bmf_pp::data::generator::SyntheticDataset;
 use bmf_pp::data::split::holdout_split_covered;
 use bmf_pp::partition::balance;
@@ -29,6 +29,10 @@ fn main() -> anyhow::Result<()> {
     let grids: &[(usize, usize)] =
         &[(1, 1), (2, 2), (4, 4), (8, 8), (4, 1), (8, 2), (16, 2), (20, 3), (12, 2)];
     let mut best: Option<(f64, (usize, usize))> = None;
+    // one warm engine serves the whole grid sweep — no pool re-spawn (and
+    // no HLO recompilation under `pjrt`) between the nine runs
+    let base = TrainConfig::new(ds.k);
+    let engine = Engine::new(&base.backend, base.block_parallelism);
     for &(i, j) in grids {
         if i > train.rows || j > train.cols {
             continue;
@@ -38,7 +42,7 @@ fn main() -> anyhow::Result<()> {
             .with_sweeps(8, 16)
             .with_tau(tau)
             .with_seed(5);
-        let res = PpTrainer::new(cfg).train(&train)?;
+        let res = engine.train(&cfg, &train)?;
         let rmse = res.rmse(&test);
         let aspect = balance::block_aspect(train.rows, train.cols, i, j);
         println!(

@@ -6,11 +6,12 @@
 //!     cargo run --release --example drug_discovery
 //!
 //! Demonstrates: posterior predictive mean ± std, empirical coverage of the
-//! ±2σ interval on held-out data, and an "acquisition" ranking (high
-//! predicted activity, low uncertainty).
+//! ±2σ interval on held-out data, the PosteriorModel's top-N ranking
+//! (greedy by predicted activity), and an "acquisition" ranking (high
+//! predicted activity + high uncertainty, UCB-style).
 
 use bmf_pp::coordinator::config::auto_tau;
-use bmf_pp::coordinator::{PpTrainer, TrainConfig};
+use bmf_pp::coordinator::{BackendSpec, Engine, TrainConfig};
 use bmf_pp::data::generator::{DatasetProfile, SyntheticDataset};
 use bmf_pp::data::split::holdout_split_covered;
 
@@ -44,8 +45,9 @@ fn main() -> anyhow::Result<()> {
         .with_sweeps(10, 32)
         .with_tau(auto_tau(&train))
         .with_seed(103);
-    let result = PpTrainer::new(cfg).train(&train)?;
-    println!("test RMSE: {:.3} (pIC50 units)", result.rmse(&test));
+    let engine = Engine::new(&cfg.backend, cfg.block_parallelism);
+    let model = engine.train(&cfg, &train)?.into_model();
+    println!("test RMSE: {:.3} (pIC50 units)", model.rmse(&test));
 
     // calibration: fraction of held-out activities inside mean ± 2σ
     // (σ from factor posterior + residual noise)
@@ -53,8 +55,8 @@ fn main() -> anyhow::Result<()> {
     let mut inside = 0usize;
     for e in &test.entries {
         let (r, c) = (e.row as usize, e.col as usize);
-        let mu = result.predict(r, c);
-        let sigma = (result.predict_variance(r, c) + residual_var).sqrt();
+        let mu = model.predict(r, c);
+        let sigma = (model.predict_variance(r, c) + residual_var).sqrt();
         if (e.val as f64 - mu).abs() <= 2.0 * sigma {
             inside += 1;
         }
@@ -63,7 +65,7 @@ fn main() -> anyhow::Result<()> {
     println!("±2σ empirical coverage: {:.1}% (nominal 95%)", coverage * 100.0);
 
     // acquisition: among unmeasured pairs of the most-assayed compound,
-    // rank by upper confidence bound (mean + σ)
+    // rank next assays
     let compound = (0..train.rows)
         .max_by_key(|&r| train.entries.iter().filter(|e| e.row as usize == r).count())
         .unwrap();
@@ -73,11 +75,19 @@ fn main() -> anyhow::Result<()> {
         .filter(|e| e.row as usize == compound)
         .map(|e| e.col as usize)
         .collect();
+
+    // greedy ranking straight off the model: highest predicted activity
+    println!("\ntop-5 unmeasured targets for compound {compound} by predicted pIC50:");
+    for (c, mu) in model.top_n_where(compound, 5, |c| !measured.contains(&c)) {
+        println!("  target {c:<6} predicted pIC50 {mu:.2}");
+    }
+
+    // exploration-aware ranking: UCB = mean + sigma from the posterior
     let mut candidates: Vec<(usize, f64, f64)> = (0..train.cols)
         .filter(|c| !measured.contains(c))
         .map(|c| {
-            let mu = result.predict(compound, c);
-            let sigma = (result.predict_variance(compound, c) + residual_var).sqrt();
+            let mu = model.predict(compound, c);
+            let sigma = (model.predict_variance(compound, c) + residual_var).sqrt();
             (c, mu, sigma)
         })
         .collect();

@@ -7,10 +7,13 @@
 //!     make artifacts && cargo run --release --example movielens_e2e
 //!
 //! Results are recorded in EXPERIMENTS.md §End-to-end. Falls back to the
-//! native backend when artifacts are missing (CI without python).
+//! native backend when artifacts are missing (CI without python). One
+//! Engine carries every run, so the per-thread PJRT engines (compiled
+//! executables) stay warm across the whole curve, and the in-training
+//! sweep RMSE stream is recorded live off the session's event stream.
 
 use bmf_pp::coordinator::config::auto_tau;
-use bmf_pp::coordinator::{BackendSpec, PpTrainer, TrainConfig};
+use bmf_pp::coordinator::{BackendSpec, Engine, TrainConfig};
 use bmf_pp::data::generator::SyntheticDataset;
 use bmf_pp::data::split::holdout_split_covered;
 use bmf_pp::metrics::recorder::Recorder;
@@ -46,12 +49,9 @@ fn main() -> anyhow::Result<()> {
     // Learning curve: train with increasing sample budgets so each point is
     // a full PP pipeline at that compute level (PP is a batch method; the
     // curve shows posterior quality vs Gibbs compute, paper-style).
-    // One shared pool keeps the per-thread PJRT engines warm across points.
+    // One engine keeps the per-thread PJRT executables warm across points.
     let base_cfg = TrainConfig::new(ds.k);
-    let pool = bmf_pp::coordinator::scheduler::WorkerPool::new(
-        &base_cfg.backend,
-        base_cfg.block_parallelism,
-    );
+    let engine = Engine::new(&base_cfg.backend, base_cfg.block_parallelism);
     let mut last = None;
     for &samples in &[4usize, 8, 16, 32, 64] {
         let cfg = TrainConfig::new(ds.k)
@@ -60,7 +60,13 @@ fn main() -> anyhow::Result<()> {
             .with_tau(tau)
             .with_seed(3)
             .with_workers(2);
-        let result = PpTrainer::new(cfg).train_with_pool(&pool, &train)?;
+        // stream the run's events straight into the recorder: the
+        // per-block sweep-RMSE series accumulate live as blocks execute
+        let session = engine.submit(cfg, &train)?;
+        for event in session.events() {
+            recorder.observe(&event);
+        }
+        let result = session.wait()?;
         let rmse = result.rmse(&test);
         total_sweeps = result.stats.sweeps;
         println!(

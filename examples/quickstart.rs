@@ -1,13 +1,15 @@
-//! Quickstart: factorize a synthetic Movielens-like matrix with D-BMF+PP.
+//! Quickstart: factorize a synthetic Movielens-like matrix with D-BMF+PP
+//! through the Engine/Session API.
 //!
 //!     cargo run --release --example quickstart
 //!
-//! Walks the whole public API in ~50 lines: generate data, split, configure
-//! a PP grid, train (through the AOT HLO runtime when `make artifacts` has
-//! run, else the native sampler), evaluate RMSE and inspect uncertainty.
+//! Walks the whole public API in ~60 lines: generate data, split, build a
+//! warm Engine, submit a run and watch its typed progress events stream,
+//! then use the servable PosteriorModel — RMSE, per-cell uncertainty and
+//! top-N ranking.
 
 use bmf_pp::coordinator::config::auto_tau;
-use bmf_pp::coordinator::{PpTrainer, TrainConfig};
+use bmf_pp::coordinator::{BackendSpec, Engine, TrainConfig, TrainEvent};
 use bmf_pp::data::generator::SyntheticDataset;
 use bmf_pp::data::split::holdout_split_covered;
 use bmf_pp::metrics::rmse::mean_predictor_rmse;
@@ -26,19 +28,35 @@ fn main() -> anyhow::Result<()> {
         test.nnz()
     );
 
-    // 2. configure Posterior Propagation: a 2x2 block grid, 10 burn-in
-    //    sweeps then 24 retained samples per block
+    // 2. one warm engine (the HLO/PJRT backend when `make artifacts` has
+    //    run, else the native sampler) + a PP config: 2x2 block grid,
+    //    10 burn-in sweeps then 24 retained samples per block
+    let engine = Engine::new(&BackendSpec::auto_default(), 4);
     let cfg = TrainConfig::new(ds.k)
         .with_grid(2, 2)
         .with_sweeps(10, 24)
         .with_tau(auto_tau(&train))
         .with_seed(1);
 
-    // 3. train — phases (a), (b), (c) + posterior aggregation
-    let result = PpTrainer::new(cfg).train(&train)?;
+    // 3. submit and watch the run live: phases (a), (b), (c) + aggregation
+    let session = engine.submit(cfg, &train)?;
+    for event in session.events() {
+        match event {
+            TrainEvent::PhaseStarted { phase } => println!("  phase ({phase}) started"),
+            TrainEvent::BlockCompleted { node, secs, sweeps, .. } => {
+                println!("  block {node:?} done: {sweeps} sweeps in {secs:.2}s")
+            }
+            TrainEvent::Finished { secs, blocks } => {
+                println!("  finished: {blocks} blocks in {secs:.2}s")
+            }
+            TrainEvent::SweepSample { .. } => {} // per-sweep RMSE, see movielens_e2e
+        }
+    }
+    let result = session.wait()?;
 
-    // 4. evaluate
-    let rmse = result.rmse(&test);
+    // 4. evaluate the servable model
+    let model = &result.model;
+    let rmse = model.rmse(&test);
     let baseline = mean_predictor_rmse(train.mean(), &test);
     println!("test RMSE  : {rmse:.4}");
     println!("mean-pred  : {baseline:.4}  (sanity baseline)");
@@ -54,9 +72,15 @@ fn main() -> anyhow::Result<()> {
     // 5. Bayesian bonus: per-prediction uncertainty from the posterior
     let e = &test.entries[0];
     let (r, c) = (e.row as usize, e.col as usize);
-    let mean = result.predict(r, c);
-    let std = result.predict_variance(r, c).sqrt();
+    let mean = model.predict(r, c);
+    let std = model.predict_variance(r, c).sqrt();
     println!("example prediction ({r},{c}): {mean:.2} ± {std:.2} (true {})", e.val);
+
+    // 6. serving primitive: top-N ranking for one row
+    println!("top-3 columns for row {r} by posterior mean:");
+    for (col, score) in model.top_n(r, 3) {
+        println!("  col {col:<6} predicted {score:.2}");
+    }
 
     assert!(rmse < baseline, "PP must beat the mean predictor");
     println!("quickstart OK");

@@ -13,7 +13,7 @@ mod common;
 use bmf_pp::coordinator::backend::{BlockBackend, BlockData};
 use bmf_pp::coordinator::block_task::{run_block, BlockTaskCfg};
 use bmf_pp::coordinator::config::auto_tau;
-use bmf_pp::coordinator::{BackendSpec, PpTrainer, TrainConfig};
+use bmf_pp::coordinator::{BackendSpec, Engine, TrainConfig};
 use bmf_pp::metrics::rmse::rmse_with;
 use bmf_pp::partition::Grid;
 use bmf_pp::util::timer::Stopwatch;
@@ -52,7 +52,7 @@ fn independent_blocks_rmse(
                 ridge: 1e-2,
                 seed: 7 + (i * 31 + j) as u64,
             };
-            let (post, _) = run_block(&backend, &data, &cfg, None, None).unwrap();
+            let (post, _) = run_block(&backend, &data, &cfg, None, None, None).unwrap();
             let (r0, _) = g.row_range(i);
             let (c0, _) = g.col_range(j);
             for r in 0..post.u.n {
@@ -86,6 +86,8 @@ fn main() {
     let k = profile.k;
     let tau = auto_tau(&train);
     let mut results = Vec::new();
+    // every PP ablation below runs on this one warm engine
+    let engine = Engine::new(&BackendSpec::Native, TrainConfig::new(1).block_parallelism);
 
     println!("ABLATION A1 — posterior propagation vs independent blocks (grid 4x2)");
     common::hr();
@@ -95,7 +97,7 @@ fn main() {
         .with_tau(tau)
         .with_seed(7)
         .with_backend(BackendSpec::Native);
-    let pp_rmse = PpTrainer::new(cfg.clone()).train(&train).unwrap().rmse(&test);
+    let pp_rmse = engine.train(&cfg, &train).unwrap().rmse(&test);
     let indep_rmse = independent_blocks_rmse(&train, &test, k, tau, (4, 2));
     println!("  with propagation   : rmse {pp_rmse:.4}");
     println!("  independent blocks : rmse {indep_rmse:.4}");
@@ -109,7 +111,7 @@ fn main() {
         let mut c = cfg.clone();
         c.phase_sample_frac = frac;
         let sw = Stopwatch::start();
-        let res = PpTrainer::new(c).train(&train).unwrap();
+        let res = engine.train(&c, &train).unwrap();
         let rmse = res.rmse(&test);
         println!(
             "  frac={frac:<4} rmse={rmse:.4} wall={:>6.2}s node-secs={:>7.2}",
@@ -150,7 +152,7 @@ fn main() {
             .with_backend(BackendSpec::Native);
         c.block_parallelism = 1;
         let sw = Stopwatch::start();
-        let res = PpTrainer::new(c).train(&big_train).unwrap();
+        let res = engine.train(&c, &big_train).unwrap();
         let rmse = res.rmse(&big_test);
         println!("  workers={workers} wall={:>6.2}s rmse={rmse:.4}", sw.secs());
         results.push((format!("a3_w{workers}_secs"), sw.secs()));

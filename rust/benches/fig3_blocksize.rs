@@ -9,7 +9,7 @@
 mod common;
 
 use bmf_pp::coordinator::config::auto_tau;
-use bmf_pp::coordinator::{BackendSpec, PpTrainer, TrainConfig};
+use bmf_pp::coordinator::{BackendSpec, Engine, TrainConfig};
 use bmf_pp::partition::balance;
 
 fn main() {
@@ -46,6 +46,8 @@ fn main() {
 
     let mut results = Vec::new();
     let mut pareto: Vec<(f64, f64, String)> = Vec::new();
+    // the whole sweep runs on one warm engine: every grid shares the pool
+    let engine = Engine::new(&BackendSpec::Native, TrainConfig::new(1).block_parallelism);
     for &(i, j) in grids {
         if i > train.rows || j > train.cols {
             continue;
@@ -56,7 +58,7 @@ fn main() {
             .with_tau(tau)
             .with_seed(5)
             .with_backend(BackendSpec::Native);
-        let res = match PpTrainer::new(cfg).train(&train) {
+        let res = match engine.train(&cfg, &train) {
             Ok(r) => r,
             Err(e) => {
                 println!("{:<8} skipped: {e}", format!("{i}x{j}"));

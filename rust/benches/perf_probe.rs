@@ -13,7 +13,7 @@
 mod common;
 
 use bmf_pp::coordinator::config::auto_tau;
-use bmf_pp::coordinator::scheduler::WorkerPool;
+use bmf_pp::coordinator::Engine as TrainEngine;
 use bmf_pp::coordinator::{BackendSpec, PpTrainer, TrainConfig};
 use bmf_pp::data::sparse::{Coo, Csr};
 use bmf_pp::gibbs::native::sample_side_native;
@@ -161,14 +161,13 @@ fn main() {
             .with_sweeps(6, 12)
             .with_tau(auto_tau(&train))
             .with_seed(6);
-        let trainer = PpTrainer::new(cfg.clone());
         let sw = Stopwatch::start();
-        trainer.train(&train).unwrap(); // cold: fresh pool, compiles inside
+        PpTrainer::new(cfg.clone()).train(&train).unwrap(); // cold: fresh pool, compiles inside
         let cold = sw.secs();
-        let pool = WorkerPool::new(&cfg.backend, cfg.block_parallelism);
-        trainer.train_with_pool(&pool, &train).unwrap(); // warm the pool
+        let engine = TrainEngine::new(&cfg.backend, cfg.block_parallelism);
+        engine.train(&cfg, &train).unwrap(); // warm the engine's pool
         let sw = Stopwatch::start();
-        trainer.train_with_pool(&pool, &train).unwrap();
+        engine.train(&cfg, &train).unwrap();
         let warm = sw.secs();
         let backend = match cfg.backend.resolve() {
             BackendSpec::Hlo { .. } => "hlo",

@@ -9,8 +9,7 @@
 mod common;
 
 use bmf_pp::coordinator::config::auto_tau;
-use bmf_pp::coordinator::scheduler::WorkerPool;
-use bmf_pp::coordinator::{PpTrainer, TrainConfig};
+use bmf_pp::coordinator::{Engine, TrainConfig};
 use bmf_pp::data::stats::DatasetStats;
 use bmf_pp::metrics::throughput::Throughput;
 
@@ -42,12 +41,11 @@ fn main() {
             .with_sweeps(4, 8)
             .with_tau(auto_tau(&train))
             .with_seed(2);
-        let trainer = PpTrainer::new(cfg.clone());
         // warm measurement: first run pays PJRT compilation; report the
-        // steady-state second run through the same pool
-        let pool = WorkerPool::new(&cfg.backend, cfg.block_parallelism);
-        trainer.train_with_pool(&pool, &train).expect("warmup");
-        let res = trainer.train_with_pool(&pool, &train).expect("train");
+        // steady-state second run through the same engine
+        let engine = Engine::new(&cfg.backend, cfg.block_parallelism);
+        engine.train(&cfg, &train).expect("warmup");
+        let res = engine.train(&cfg, &train).expect("train");
         let sweeps_per_block = res.stats.sweeps / res.stats.blocks.max(1);
         let tp = Throughput::measure(
             train.rows,

@@ -12,7 +12,7 @@ use bmf_pp::baselines::sgd_common::SgdConfig;
 use bmf_pp::baselines::sgld::SgldConfig;
 use bmf_pp::baselines::{als, cgd, fpsgd, nomad, sgld};
 use bmf_pp::coordinator::config::auto_tau;
-use bmf_pp::coordinator::{PpTrainer, TrainConfig};
+use bmf_pp::coordinator::{Engine, TrainConfig};
 
 fn main() {
     bmf_pp::util::logging::init();
@@ -33,6 +33,9 @@ fn main() {
     ];
 
     let mut results = Vec::new();
+    // all four dataset rows train on one warm engine
+    let base = TrainConfig::new(1);
+    let engine = Engine::new(&base.backend, base.block_parallelism);
     for &(name, p_pp, p_nomad, p_fpsgd) in paper {
         let (profile, train, test) = common::bench_dataset(name);
         let k = profile.k;
@@ -43,7 +46,7 @@ fn main() {
             .with_sweeps(10, 24)
             .with_tau(auto_tau(&train))
             .with_seed(3);
-        let pp_rmse = PpTrainer::new(cfg).train(&train).expect("pp").rmse(&test);
+        let pp_rmse = engine.train(&cfg, &train).expect("pp").rmse(&test);
 
         let sgd = SgdConfig::new(k).with_epochs(30).with_threads(4).with_seed(3);
         let nomad_rmse = nomad::train(&train, &sgd).rmse(&test);

@@ -10,7 +10,7 @@ mod common;
 use bmf_pp::baselines::sgd_common::SgdConfig;
 use bmf_pp::baselines::{fpsgd, nomad};
 use bmf_pp::coordinator::config::auto_tau;
-use bmf_pp::coordinator::{BackendSpec, PpTrainer, SchedulerMode, TrainConfig};
+use bmf_pp::coordinator::{BackendSpec, Engine, SchedulerMode, TrainConfig};
 use bmf_pp::gibbs::NativeGibbs;
 use bmf_pp::util::timer::Stopwatch;
 
@@ -47,8 +47,12 @@ fn main() {
             .with_tau(tau)
             .with_seed(4)
             .with_backend(BackendSpec::Native); // same backend for PP & BMF
+        // cold engine per dataset: the measured wall-clock matches what a
+        // fresh single-run launch pays, like the BMF/SGD columns below
         let sw = Stopwatch::start();
-        let pp = PpTrainer::new(cfg).train(&train).expect("pp");
+        let pp = Engine::new(&cfg.backend, cfg.block_parallelism)
+            .train(&cfg, &train)
+            .expect("pp");
         let t_pp = sw.secs();
         let rmse_pp = pp.rmse(&test);
 
@@ -106,11 +110,14 @@ fn main() {
         cfg.block_parallelism = 4;
         cfg
     };
+    // one warm engine with exactly 4 slots serves both schedules, so the
+    // barrier-vs-DAG comparison is not polluted by pool spawn costs
+    let engine = Engine::new(&BackendSpec::Native, 4);
     let sw = Stopwatch::start();
-    let bar = PpTrainer::new(mk(SchedulerMode::Barrier)).train(&train).expect("barrier");
+    let bar = engine.train(&mk(SchedulerMode::Barrier), &train).expect("barrier");
     let t_bar = sw.secs();
     let sw = Stopwatch::start();
-    let dag = PpTrainer::new(mk(SchedulerMode::Dag)).train(&train).expect("dag");
+    let dag = engine.train(&mk(SchedulerMode::Dag), &train).expect("dag");
     let t_dag = sw.secs();
     assert_eq!(bar.u_mean, dag.u_mean, "scheduling must not change the posterior");
     println!(

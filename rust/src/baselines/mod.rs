@@ -3,6 +3,13 @@
 //! CCD++-style coordinate descent, and distributed-SGLD (the other
 //! scalable-Bayesian line of work, Ahn et al. 2015) — all in rust on the
 //! same data structures.
+//!
+//! Every method is also exposed as a [`Factorizer`], so PP and the
+//! baselines share one `fit(&Engine, &Coo) -> FitOutcome` entry point and
+//! comparing methods (or cross-validating one) is a loop over fits on a
+//! single warm engine. The SGD-family baselines manage their own
+//! intra-method threading; the engine parameter keeps the interface
+//! uniform and hands PP its warm pool.
 
 pub mod als;
 pub mod cgd;
@@ -10,3 +17,209 @@ pub mod fpsgd;
 pub mod nomad;
 pub mod sgd_common;
 pub mod sgld;
+
+use crate::coordinator::engine::{Engine, Factorizer, FitOutcome};
+use crate::data::sparse::Coo;
+use crate::gibbs::NativeGibbs;
+use crate::posterior::PosteriorModel;
+use als::AlsConfig;
+use cgd::CgdConfig;
+use sgd_common::{SgdConfig, SgdModel};
+use sgld::SgldConfig;
+
+fn outcome(method: &str, model: PosteriorModel, secs: f64) -> FitOutcome {
+    FitOutcome { method: method.to_string(), model, secs, pp_stats: None }
+}
+
+fn sgd_outcome(method: &str, t0: std::time::Instant, model: SgdModel) -> FitOutcome {
+    outcome(method, model.to_posterior(), t0.elapsed().as_secs_f64())
+}
+
+/// NOMAD-style asynchronous SGD as a [`Factorizer`].
+pub struct Nomad(pub SgdConfig);
+
+impl Factorizer for Nomad {
+    fn name(&self) -> &str {
+        "nomad"
+    }
+
+    fn fit(&self, _engine: &Engine, data: &Coo) -> anyhow::Result<FitOutcome> {
+        let t0 = std::time::Instant::now();
+        Ok(sgd_outcome("nomad", t0, nomad::train(data, &self.0)))
+    }
+}
+
+/// FPSGD-style blocked multicore SGD as a [`Factorizer`].
+pub struct Fpsgd(pub SgdConfig);
+
+impl Factorizer for Fpsgd {
+    fn name(&self) -> &str {
+        "fpsgd"
+    }
+
+    fn fit(&self, _engine: &Engine, data: &Coo) -> anyhow::Result<FitOutcome> {
+        let t0 = std::time::Instant::now();
+        Ok(sgd_outcome("fpsgd", t0, fpsgd::train(data, &self.0)))
+    }
+}
+
+/// SGLD (stochastic gradient Langevin dynamics) as a [`Factorizer`].
+pub struct Sgld(pub SgldConfig);
+
+impl Factorizer for Sgld {
+    fn name(&self) -> &str {
+        "sgld"
+    }
+
+    fn fit(&self, _engine: &Engine, data: &Coo) -> anyhow::Result<FitOutcome> {
+        let t0 = std::time::Instant::now();
+        Ok(sgd_outcome("sgld", t0, sgld::train(data, &self.0)))
+    }
+}
+
+/// ALS (alternating least squares) as a [`Factorizer`].
+pub struct Als(pub AlsConfig);
+
+impl Factorizer for Als {
+    fn name(&self) -> &str {
+        "als"
+    }
+
+    fn fit(&self, _engine: &Engine, data: &Coo) -> anyhow::Result<FitOutcome> {
+        let t0 = std::time::Instant::now();
+        Ok(sgd_outcome("als", t0, als::train(data, &self.0)))
+    }
+}
+
+/// CCD++-style coordinate descent as a [`Factorizer`].
+pub struct Cgd(pub CgdConfig);
+
+impl Factorizer for Cgd {
+    fn name(&self) -> &str {
+        "cgd"
+    }
+
+    fn fit(&self, _engine: &Engine, data: &Coo) -> anyhow::Result<FitOutcome> {
+        let t0 = std::time::Instant::now();
+        Ok(sgd_outcome("cgd", t0, cgd::train(data, &self.0)))
+    }
+}
+
+/// Plain (unblocked) BPMF Gibbs — the paper's "BMF" column — as a
+/// [`Factorizer`]. The chain's final factor state is the point estimate.
+pub struct PlainBmf {
+    pub k: usize,
+    pub tau: f64,
+    pub sweeps: usize,
+    pub seed: u64,
+}
+
+impl Factorizer for PlainBmf {
+    fn name(&self) -> &str {
+        "bmf"
+    }
+
+    fn fit(&self, _engine: &Engine, data: &Coo) -> anyhow::Result<FitOutcome> {
+        let t0 = std::time::Instant::now();
+        let mut g = NativeGibbs::new(data, self.k, self.tau, self.seed);
+        for _ in 0..self.sweeps {
+            g.sweep();
+        }
+        let model = PosteriorModel::from_factors(self.k, &g.u, &g.v, g.global_mean, 1e6);
+        Ok(outcome("bmf", model, t0.elapsed().as_secs_f64()))
+    }
+}
+
+/// Common knobs the CLI maps onto per-method configs.
+pub struct BaselineOpts {
+    pub k: usize,
+    pub epochs: usize,
+    pub threads: usize,
+    pub sweeps: usize,
+    pub seed: u64,
+    pub tau: f64,
+}
+
+/// The method names [`factorizer`] accepts, for up-front CLI validation.
+pub const METHODS: [&str; 6] = ["bmf", "nomad", "fpsgd", "sgld", "als", "cgd"];
+
+/// Look up a baseline [`Factorizer`] by CLI name.
+pub fn factorizer(method: &str, o: &BaselineOpts) -> Option<Box<dyn Factorizer>> {
+    match method {
+        "bmf" => Some(Box::new(PlainBmf { k: o.k, tau: o.tau, sweeps: o.sweeps, seed: o.seed })),
+        "nomad" => Some(Box::new(Nomad(
+            SgdConfig::new(o.k).with_epochs(o.epochs).with_threads(o.threads).with_seed(o.seed),
+        ))),
+        "fpsgd" => Some(Box::new(Fpsgd(
+            SgdConfig::new(o.k).with_epochs(o.epochs).with_threads(o.threads).with_seed(o.seed),
+        ))),
+        "sgld" => Some(Box::new(Sgld(SgldConfig {
+            seed: o.seed,
+            ..SgldConfig::new(o.k).with_epochs(o.epochs)
+        }))),
+        "als" => Some(Box::new(Als(AlsConfig {
+            seed: o.seed,
+            ..AlsConfig::new(o.k).with_sweeps(o.sweeps)
+        }))),
+        "cgd" => Some(Box::new(Cgd(CgdConfig { seed: o.seed, ..CgdConfig::new(o.k) }))),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BackendSpec, PpFactorizer, TrainConfig};
+    use crate::data::generator::SyntheticDataset;
+    use crate::data::split::holdout_split_covered;
+    use crate::metrics::rmse::mean_predictor_rmse;
+
+    #[test]
+    fn every_factorizer_beats_the_mean_predictor_on_one_engine() {
+        let d = SyntheticDataset::by_name("movielens", 0.0015, 51).unwrap();
+        let (train, test) = holdout_split_covered(&d.ratings, 0.2, 52);
+        let base = mean_predictor_rmse(train.mean(), &test);
+        let engine = Engine::new(&BackendSpec::Native, 4);
+        let opts =
+            BaselineOpts { k: d.k, epochs: 40, threads: 2, sweeps: 16, seed: 53, tau: 2.0 };
+        let mut fits: Vec<Box<dyn Factorizer>> = vec![Box::new(PpFactorizer(
+            TrainConfig::new(d.k)
+                .with_grid(2, 2)
+                .with_sweeps(6, 12)
+                .with_backend(BackendSpec::Native)
+                .with_seed(53),
+        ))];
+        for m in ["bmf", "nomad", "fpsgd", "sgld", "als", "cgd"] {
+            fits.push(factorizer(m, &opts).unwrap());
+        }
+        for f in &fits {
+            let out = f.fit(&engine, &train).unwrap();
+            let rmse = out.model.rmse(&test);
+            assert!(rmse < base, "{}: rmse {rmse} vs mean predictor {base}", f.name());
+            assert_eq!(out.method, f.name());
+        }
+    }
+
+    #[test]
+    fn unknown_method_is_none() {
+        let o = BaselineOpts { k: 4, epochs: 1, threads: 1, sweeps: 1, seed: 1, tau: 1.0 };
+        assert!(factorizer("laplace", &o).is_none());
+        // the advertised method list and the lookup table agree
+        for m in METHODS {
+            assert!(factorizer(m, &o).is_some(), "{m}");
+        }
+    }
+
+    #[test]
+    fn sgd_model_posterior_matches_its_predictions() {
+        let d = SyntheticDataset::by_name("movielens", 0.001, 54).unwrap();
+        let (train, test) = holdout_split_covered(&d.ratings, 0.2, 55);
+        let m = fpsgd::train(&train, &SgdConfig::new(d.k).with_epochs(10).with_seed(56));
+        let p = m.to_posterior();
+        // the scale fold-in reproduces SgdModel::predict to f32 rounding
+        for (r, c) in [(0usize, 0usize), (3, 5), (10, 1)] {
+            assert!((m.predict(r, c) - p.predict(r, c)).abs() < 1e-3);
+        }
+        assert!((m.rmse(&test) - p.rmse(&test)).abs() < 1e-3);
+    }
+}

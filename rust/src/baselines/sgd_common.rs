@@ -116,6 +116,21 @@ impl SgdModel {
     pub fn rmse(&self, test: &crate::data::sparse::Coo) -> f64 {
         crate::metrics::rmse::rmse_with(test, |r, c| self.predict(r, c))
     }
+
+    /// Convert to the servable [`PosteriorModel`]: the training scale is
+    /// folded into the U factors and the point estimate becomes a
+    /// degenerate posterior (tight identity precision), so baselines flow
+    /// through the same checkpoint/predict/evaluate path as PP.
+    pub fn to_posterior(&self) -> crate::posterior::PosteriorModel {
+        let u_scaled: Vec<f32> = self.u.iter().map(|x| x * self.scale).collect();
+        crate::posterior::PosteriorModel::from_factors(
+            self.k,
+            &u_scaled,
+            &self.v,
+            self.mean as f64,
+            1e6,
+        )
+    }
 }
 
 #[cfg(test)]

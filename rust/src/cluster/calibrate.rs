@@ -34,7 +34,8 @@ fn measure(backend: &BlockBackend, n: usize, d: usize, nnz: usize, k: usize, see
         ridge: 1e-2,
         seed,
     };
-    let (_, stats) = run_block(backend, &data, &cfg, None, None).expect("calibration run");
+    let (_, stats) =
+        run_block(backend, &data, &cfg, None, None, None).expect("calibration run");
     stats.secs / stats.sweeps as f64
 }
 

@@ -84,13 +84,18 @@ pub struct BlockTaskCfg {
 }
 
 /// Run the block's MCMC. `u_prior`/`v_prior`: propagated priors, or None
-/// for a fresh (hyper-sampled) prior.
+/// for a fresh (hyper-sampled) prior. `sweep_obs`, when present, receives
+/// `(sweep index, block training RMSE of the current factor sample)` after
+/// every retained sweep — the live mixing signal streamed as
+/// `TrainEvent::SweepSample`. Observation never touches the RNG, so the
+/// posterior is bitwise identical with or without an observer.
 pub fn run_block(
     backend: &BlockBackend,
     data: &BlockData,
     cfg: &BlockTaskCfg,
     u_prior: Option<&RowGaussians>,
     v_prior: Option<&RowGaussians>,
+    sweep_obs: Option<&dyn Fn(usize, f64)>,
 ) -> anyhow::Result<(BlockPosteriors, BlockRunStats)> {
     let k = cfg.k;
     let (n, d) = (data.rows(), data.cols());
@@ -152,6 +157,9 @@ pub fn run_block(
         if sweep >= cfg.burnin {
             u_moments.push_f32(&u);
             v_moments.push_f32(&v);
+            if let Some(obs) = sweep_obs {
+                obs(sweep, sample_rmse(&data.coo, &u, &v, k));
+            }
         }
     }
     drop((fresh_u, fresh_v));
@@ -167,6 +175,20 @@ pub fn run_block(
         v: v_moments.finalize(cfg.ridge),
     };
     Ok((posteriors, stats))
+}
+
+/// RMSE of the current factor sample on the block's own (centred) ratings.
+fn sample_rmse(coo: &crate::data::sparse::Coo, u: &[f32], v: &[f32], k: usize) -> f64 {
+    if coo.nnz() == 0 {
+        return 0.0;
+    }
+    let mut sse = 0.0f64;
+    for e in &coo.entries {
+        let (r, c) = (e.row as usize, e.col as usize);
+        let dot: f64 = (0..k).map(|j| (u[r * k + j] * v[c * k + j]) as f64).sum();
+        sse += (e.val as f64 - dot).powi(2);
+    }
+    (sse / coo.nnz() as f64).sqrt()
 }
 
 #[cfg(test)]
@@ -209,7 +231,7 @@ mod tests {
     fn block_posterior_predicts_block() {
         let (data, _, _) = block_from_factors(30, 25, 4, 60, 0.5);
         let backend = BlockBackend::Native;
-        let (post, stats) = run_block(&backend, &data, &cfg(4, 61), None, None).unwrap();
+        let (post, stats) = run_block(&backend, &data, &cfg(4, 61), None, None, None).unwrap();
         assert_eq!(post.u.n, 30);
         assert_eq!(post.v.n, 25);
         assert_eq!(stats.sweeps, 16);
@@ -247,7 +269,7 @@ mod tests {
             ridge: 1e-4,
             seed: 3,
         };
-        let (post, _) = run_block(&backend, &data, &c, Some(&prior_u), None).unwrap();
+        let (post, _) = run_block(&backend, &data, &c, Some(&prior_u), None, None).unwrap();
         for i in 0..8 {
             assert!(
                 (post.u.row_mean(i)[0] - 2.0).abs() < 0.25,
@@ -261,10 +283,10 @@ mod tests {
     fn worker_count_does_not_change_posterior_means_much() {
         let (data, _, _) = block_from_factors(24, 20, 4, 62, 0.4);
         let backend = BlockBackend::Native;
-        let (p1, _) = run_block(&backend, &data, &cfg(4, 63), None, None).unwrap();
+        let (p1, _) = run_block(&backend, &data, &cfg(4, 63), None, None, None).unwrap();
         let mut c2 = cfg(4, 63);
         c2.workers = 3;
-        let (p3, _) = run_block(&backend, &data, &c2, None, None).unwrap();
+        let (p3, _) = run_block(&backend, &data, &c2, None, None, None).unwrap();
         // identical seeds + sharding-invariant math → identical chains
         for i in 0..24 {
             for j in 0..4 {
@@ -277,10 +299,27 @@ mod tests {
     fn posterior_precisions_are_spd() {
         let (data, _, _) = block_from_factors(12, 10, 3, 64, 0.6);
         let backend = BlockBackend::Native;
-        let (post, _) = run_block(&backend, &data, &cfg(3, 65), None, None).unwrap();
+        let (post, _) = run_block(&backend, &data, &cfg(3, 65), None, None, None).unwrap();
         for i in 0..post.u.n {
             let p: Mat = post.u.row_prec(i);
             assert!(crate::linalg::Cholesky::new(&p).is_ok(), "row {i} precision not SPD");
         }
+    }
+
+    #[test]
+    fn sweep_observer_sees_every_retained_sweep_without_changing_the_chain() {
+        let (data, _, _) = block_from_factors(20, 16, 4, 66, 0.5);
+        let backend = BlockBackend::Native;
+        let seen = std::cell::RefCell::new(Vec::<(usize, f64)>::new());
+        let obs = |sweep: usize, rmse: f64| seen.borrow_mut().push((sweep, rmse));
+        let c = cfg(4, 67);
+        let (observed, _) = run_block(&backend, &data, &c, None, None, Some(&obs)).unwrap();
+        let (silent, _) = run_block(&backend, &data, &c, None, None, None).unwrap();
+        let seen = seen.into_inner();
+        assert_eq!(seen.len(), c.samples, "one sample per retained sweep");
+        assert!(seen.iter().all(|&(s, r)| s >= c.burnin && r.is_finite() && r >= 0.0));
+        // observing must not perturb the RNG stream
+        assert_eq!(observed.u.mean, silent.u.mean);
+        assert_eq!(observed.v.prec, silent.v.prec);
     }
 }

@@ -1,9 +1,13 @@
-//! Model checkpointing: persist a trained `TrainResult` (posterior means +
-//! precisions) to a JSON file and restore it — restartable pipelines and
-//! offline serving of the factorization.
+//! Model checkpointing: persist a trained [`PosteriorModel`] (posterior
+//! means + precisions + global mean) to a JSON file and restore it —
+//! restartable pipelines and offline serving of the factorization.
+//!
+//! The file stores exactly the servable artifact: run diagnostics
+//! (timings, scheduling stats) describe a run, not a model, and never
+//! enter the checkpoint. Format v2 drops the unused grid fields v1
+//! carried; v1 files still load.
 
-use super::trainer::{PhaseTimings, RunStats, TrainResult};
-use crate::posterior::RowGaussians;
+use crate::posterior::{PosteriorModel, RowGaussians};
 use crate::util::json::{self, Json};
 use std::path::Path;
 
@@ -11,8 +15,11 @@ fn vec_to_json(v: &[f64]) -> Json {
     Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
 }
 
+/// Every element must be numeric: a malformed array is a malformed
+/// checkpoint, not a shorter vector (a silent `filter_map` here could drop
+/// elements and still pass a length check downstream).
 fn json_to_vec(j: &Json) -> Option<Vec<f64>> {
-    Some(j.as_arr()?.iter().filter_map(Json::as_f64).collect())
+    j.as_arr()?.iter().map(Json::as_f64).collect()
 }
 
 fn gaussians_to_json(g: &RowGaussians) -> Json {
@@ -36,15 +43,13 @@ fn gaussians_from_json(j: &Json) -> Option<RowGaussians> {
 }
 
 /// Save a trained model.
-pub fn save(result: &TrainResult, path: &Path) -> std::io::Result<()> {
+pub fn save(model: &PosteriorModel, path: &Path) -> std::io::Result<()> {
     let root = Json::obj(vec![
-        ("version", 1usize.into()),
-        ("k", result.k.into()),
-        ("grid_i", result.grid.0.into()),
-        ("grid_j", result.grid.1.into()),
-        ("global_mean", result.global_mean.into()),
-        ("u_post", gaussians_to_json(&result.u_post)),
-        ("v_post", gaussians_to_json(&result.v_post)),
+        ("version", 2usize.into()),
+        ("k", model.k.into()),
+        ("global_mean", model.global_mean.into()),
+        ("u_post", gaussians_to_json(&model.u_post)),
+        ("v_post", gaussians_to_json(&model.v_post)),
     ]);
     std::fs::write(path, json::to_string(&root))
 }
@@ -57,16 +62,18 @@ pub enum CheckpointError {
     Malformed(String),
 }
 
-/// Load a trained model (timings/stats are zeroed — they describe a run,
-/// not a model).
-pub fn load(path: &Path) -> Result<TrainResult, CheckpointError> {
+/// Load a trained model (accepts format v1 and v2; v1's grid fields are
+/// run metadata and are ignored).
+pub fn load(path: &Path) -> Result<PosteriorModel, CheckpointError> {
     let text = std::fs::read_to_string(path)?;
     let root =
         json::parse(&text).map_err(|e| CheckpointError::Malformed(e.to_string()))?;
     let bad = |m: &str| CheckpointError::Malformed(m.to_string());
+    let version = root.get("version").and_then(Json::as_usize).ok_or_else(|| bad("version"))?;
+    if version == 0 || version > 2 {
+        return Err(bad(&format!("unsupported checkpoint version {version}")));
+    }
     let k = root.get("k").and_then(Json::as_usize).ok_or_else(|| bad("k"))?;
-    let gi = root.get("grid_i").and_then(Json::as_usize).ok_or_else(|| bad("grid_i"))?;
-    let gj = root.get("grid_j").and_then(Json::as_usize).ok_or_else(|| bad("grid_j"))?;
     let global_mean =
         root.get("global_mean").and_then(Json::as_f64).ok_or_else(|| bad("global_mean"))?;
     let u_post = root
@@ -80,27 +87,19 @@ pub fn load(path: &Path) -> Result<TrainResult, CheckpointError> {
     if u_post.k != k || v_post.k != k {
         return Err(bad("latent dim mismatch"));
     }
-    let u_mean: Vec<f32> = u_post.mean.iter().map(|&x| x as f32).collect();
-    let v_mean: Vec<f32> = v_post.mean.iter().map(|&x| x as f32).collect();
-    Ok(TrainResult {
-        k,
-        grid: (gi, gj),
-        u_post,
-        v_post,
-        u_mean,
-        v_mean,
-        global_mean,
-        timings: PhaseTimings::default(),
-        stats: RunStats::default(),
-    })
+    Ok(PosteriorModel::new(u_post, v_post, global_mean))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{BackendSpec, PpTrainer, TrainConfig};
+    use crate::coordinator::{BackendSpec, Engine, PpTrainer, TrainConfig};
     use crate::data::generator::SyntheticDataset;
     use crate::data::split::holdout_split_covered;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("bmfpp_{tag}_{}.json", std::process::id()))
+    }
 
     #[test]
     fn roundtrip_preserves_predictions() {
@@ -111,7 +110,7 @@ mod tests {
             .with_backend(BackendSpec::Native)
             .with_seed(46);
         let result = PpTrainer::new(cfg).train(&train).unwrap();
-        let path = std::env::temp_dir().join(format!("bmfpp_ckpt_{}.json", std::process::id()));
+        let path = tmp("ckpt");
         save(&result, &path).unwrap();
         let loaded = load(&path).unwrap();
         assert_eq!(loaded.k, result.k);
@@ -124,12 +123,98 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_is_bitwise_across_k_and_grid() {
+        // save → load must reproduce predict / predict_variance to the
+        // last bit for every (k, grid) shape, since the JSON writer emits
+        // shortest-round-trip f64
+        let d = SyntheticDataset::by_name("movielens", 0.001, 47).unwrap();
+        let (train, _) = holdout_split_covered(&d.ratings, 0.2, 48);
+        let engine = Engine::new(&BackendSpec::Native, 4);
+        for (k, grid) in [(4usize, (1usize, 1usize)), (8, (2, 2)), (6, (3, 2))] {
+            let cfg = TrainConfig::new(k)
+                .with_grid(grid.0, grid.1)
+                .with_sweeps(3, 6)
+                .with_backend(BackendSpec::Native)
+                .with_seed(49);
+            let result = engine.train(&cfg, &train).unwrap();
+            let path = tmp(&format!("bitwise_{k}_{}x{}", grid.0, grid.1));
+            save(&result, &path).unwrap();
+            let loaded = load(&path).unwrap();
+            assert_eq!(loaded.u_mean, result.u_mean, "k={k} grid={grid:?}");
+            assert_eq!(loaded.v_mean, result.v_mean, "k={k} grid={grid:?}");
+            for (r, c) in [(0usize, 0usize), (1, 2), (train.rows - 1, train.cols - 1)] {
+                assert_eq!(
+                    loaded.predict(r, c).to_bits(),
+                    result.predict(r, c).to_bits(),
+                    "predict({r},{c}) k={k} grid={grid:?}"
+                );
+                assert_eq!(
+                    loaded.predict_variance(r, c).to_bits(),
+                    result.predict_variance(r, c).to_bits(),
+                    "predict_variance({r},{c}) k={k} grid={grid:?}"
+                );
+            }
+            std::fs::remove_file(path).ok();
+        }
+    }
+
+    #[test]
     fn rejects_malformed_files() {
-        let path = std::env::temp_dir().join(format!("bmfpp_bad_{}.json", std::process::id()));
+        let path = tmp("bad");
         std::fs::write(&path, "{\"version\": 1}").unwrap();
         assert!(load(&path).is_err());
         std::fs::write(&path, "not json").unwrap();
         assert!(load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_future_format_versions() {
+        // a v3 writer may have changed field semantics — refuse rather
+        // than decode with v2 assumptions
+        let path = tmp("v3");
+        std::fs::write(
+            &path,
+            r#"{"version":3,"k":1,"global_mean":0.0,
+                "u_post":{"n":1,"k":1,"mean":[0.5],"prec":[4.0]},
+                "v_post":{"n":1,"k":1,"mean":[2.0],"prec":[4.0]}}"#,
+        )
+        .unwrap();
+        assert!(matches!(load(&path), Err(CheckpointError::Malformed(_))));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_non_numeric_array_elements() {
+        // n=1, k=1 with a 2-element mean array whose numeric prefix has
+        // length 1: the old filter_map decode silently accepted this file;
+        // a malformed element must be a Malformed error instead
+        let path = tmp("nonnum");
+        std::fs::write(
+            &path,
+            r#"{"version":2,"k":1,"global_mean":0.5,
+                "u_post":{"n":1,"k":1,"mean":[1.5,"oops"],"prec":[2.0]},
+                "v_post":{"n":1,"k":1,"mean":[0.25],"prec":[2.0]}}"#,
+        )
+        .unwrap();
+        assert!(matches!(load(&path), Err(CheckpointError::Malformed(_))));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn loads_version_1_files_without_grid_semantics() {
+        // a v1-style file (extra grid fields) still loads into a model
+        let path = tmp("v1");
+        std::fs::write(
+            &path,
+            r#"{"version":1,"k":1,"grid_i":2,"grid_j":3,"global_mean":1.0,
+                "u_post":{"n":2,"k":1,"mean":[0.5,-0.5],"prec":[4.0,4.0]},
+                "v_post":{"n":1,"k":1,"mean":[2.0],"prec":[4.0]}}"#,
+        )
+        .unwrap();
+        let m = load(&path).unwrap();
+        assert_eq!((m.rows(), m.cols(), m.k), (2, 1, 1));
+        assert!((m.predict(0, 0) - 2.0).abs() < 1e-12);
         std::fs::remove_file(path).ok();
     }
 

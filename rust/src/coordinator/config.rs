@@ -39,6 +39,23 @@ impl BackendSpec {
     }
 }
 
+/// A training configuration the engine refuses to run: every variant names
+/// the field and the constraint so bad CLI input fails at submit time with
+/// an actionable message instead of panicking inside a worker thread.
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum ConfigError {
+    #[error("latent dimension k must be > 0")]
+    ZeroK,
+    #[error("grid {0}x{1} has a zero dimension")]
+    ZeroGrid(usize, usize),
+    #[error("grid {gi}x{gj} does not fit a {rows}x{cols} matrix")]
+    GridExceedsMatrix { gi: usize, gj: usize, rows: usize, cols: usize },
+    #[error("noise precision tau must be positive and finite (got {0})")]
+    BadTau(f64),
+    #[error("block_parallelism must be > 0")]
+    ZeroBlockParallelism,
+}
+
 /// How block tasks are ordered across the PP phases.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SchedulerMode {
@@ -84,7 +101,11 @@ pub struct TrainConfig {
     pub samples: usize,
     /// Within-block shard workers (the distributed-BMF level).
     pub workers: usize,
-    /// Parallel block slots for phases (b) and (c).
+    /// Parallel block slots for phases (b) and (c). Sizes the pool of a
+    /// one-shot run (`PpTrainer::train`, and the CLI, which builds its
+    /// engine from this field); a caller-owned `Engine` keeps its own
+    /// thread count and this field does not resize it. Parallelism never
+    /// changes the posterior (bitwise-invariant scheduling).
     pub block_parallelism: usize,
     /// Ridge added when inverting sample covariances / dividing posteriors.
     pub ridge: f64,
@@ -101,6 +122,12 @@ pub struct TrainConfig {
     /// (same samples for every block).
     pub phase_sample_frac: f64,
     pub min_phase_samples: usize,
+    /// Emit a `TrainEvent::SweepSample` (block training RMSE of the
+    /// current factor sample) after every retained sweep when an event
+    /// sink is attached. Costs an extra O(nnz·k) pass per retained sweep,
+    /// so consumers that only want phase/block progress can turn it off;
+    /// with no sink attached nothing is computed either way.
+    pub stream_sweep_rmse: bool,
 }
 
 impl TrainConfig {
@@ -121,6 +148,7 @@ impl TrainConfig {
             scheduler: SchedulerMode::Dag,
             phase_sample_frac: 1.0,
             min_phase_samples: 4,
+            stream_sweep_rmse: true,
         }
     }
 
@@ -160,6 +188,29 @@ impl TrainConfig {
         self
     }
 
+    /// Check the configuration against the training matrix's dimensions.
+    /// Called by the engine on every submit; the typed [`ConfigError`]
+    /// reaches the caller before any worker thread sees the job.
+    pub fn validate(&self, rows: usize, cols: usize) -> Result<(), ConfigError> {
+        if self.k == 0 {
+            return Err(ConfigError::ZeroK);
+        }
+        let (gi, gj) = self.grid;
+        if gi == 0 || gj == 0 {
+            return Err(ConfigError::ZeroGrid(gi, gj));
+        }
+        if gi > rows || gj > cols {
+            return Err(ConfigError::GridExceedsMatrix { gi, gj, rows, cols });
+        }
+        if !(self.tau > 0.0 && self.tau.is_finite()) {
+            return Err(ConfigError::BadTau(self.tau));
+        }
+        if self.block_parallelism == 0 {
+            return Err(ConfigError::ZeroBlockParallelism);
+        }
+        Ok(())
+    }
+
     /// Retained samples for a phase-(b)/(c) block under sweep reduction.
     pub fn phase_samples(&self) -> usize {
         ((self.samples as f64 * self.phase_sample_frac) as usize)
@@ -190,6 +241,36 @@ mod tests {
         assert_eq!(c.phase_samples(), 5);
         c.phase_sample_frac = 0.0;
         assert_eq!(c.phase_samples(), 4); // floor at min_phase_samples
+    }
+
+    #[test]
+    fn validate_accepts_defaults() {
+        assert_eq!(TrainConfig::new(8).validate(100, 50), Ok(()));
+        assert_eq!(TrainConfig::new(8).with_grid(4, 2).validate(100, 50), Ok(()));
+    }
+
+    #[test]
+    fn validate_rejects_bad_fields() {
+        assert_eq!(TrainConfig::new(0).validate(100, 50), Err(ConfigError::ZeroK));
+        assert_eq!(
+            TrainConfig::new(8).with_grid(0, 2).validate(100, 50),
+            Err(ConfigError::ZeroGrid(0, 2))
+        );
+        assert_eq!(
+            TrainConfig::new(8).with_grid(4, 51).validate(100, 50),
+            Err(ConfigError::GridExceedsMatrix { gi: 4, gj: 51, rows: 100, cols: 50 })
+        );
+        assert_eq!(
+            TrainConfig::new(8).with_tau(0.0).validate(100, 50),
+            Err(ConfigError::BadTau(0.0))
+        );
+        assert!(matches!(
+            TrainConfig::new(8).with_tau(f64::NAN).validate(100, 50),
+            Err(ConfigError::BadTau(_))
+        ));
+        let mut c = TrainConfig::new(8);
+        c.block_parallelism = 0;
+        assert_eq!(c.validate(100, 50), Err(ConfigError::ZeroBlockParallelism));
     }
 
     #[test]

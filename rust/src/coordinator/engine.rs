@@ -1,0 +1,361 @@
+//! The training engine: a warm, shareable compute context for many runs.
+//!
+//! [`Engine`] owns the persistent [`WorkerPool`] (and with it, under the
+//! `pjrt` feature, each worker thread's PJRT client and compiled-artifact
+//! cache) so that many training jobs — repeated benches, learning curves,
+//! cross-validation folds, back-to-back CLI runs — execute on the same hot
+//! threads instead of re-spawning and re-compiling per call.
+//!
+//! Three ways to run a job:
+//!
+//! - [`Engine::train`] — blocking, no events: the plain replacement for the
+//!   old `PpTrainer::train`.
+//! - [`Engine::train_observed`] — blocking, with a callback receiving
+//!   typed [`TrainEvent`]s as the schedule executes.
+//! - [`Engine::submit`] — returns a [`Session`] handle immediately; the run
+//!   proceeds on a background thread and streams [`TrainEvent`]s through a
+//!   channel ([`Session::events`]), with [`Session::wait`] yielding the
+//!   final [`TrainResult`].
+//!
+//! The [`Factorizer`] trait unifies PP and the baseline comparators behind
+//! `fit(&Engine, &Coo)`, so sweeping methods (or cross-validating one) is a
+//! loop over fits on one warm engine.
+
+use super::config::{BackendSpec, TrainConfig};
+use super::scheduler::WorkerPool;
+use super::trainer::{center, run_pp, run_pp_centered, PhaseTimings, RunStats, TrainResult};
+use crate::data::sparse::Coo;
+use crate::posterior::PosteriorModel;
+use std::fmt;
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+
+/// One of the four stages of the PP pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PpPhase {
+    /// Block (0,0), fresh priors both sides.
+    A,
+    /// First-row / first-column blocks consuming the phase-(a) posterior.
+    B,
+    /// Interior blocks consuming two phase-(b) posteriors.
+    C,
+    /// Posterior aggregation parts.
+    Aggregate,
+}
+
+impl fmt::Display for PpPhase {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            PpPhase::A => "a",
+            PpPhase::B => "b",
+            PpPhase::C => "c",
+            PpPhase::Aggregate => "aggregate",
+        })
+    }
+}
+
+/// Typed progress events streamed while a training run executes. Emitted
+/// from worker threads the moment the underlying work happens, so a
+/// consumer (CLI, recorder, bench) observes the run live, not post-hoc.
+#[derive(Debug, Clone)]
+pub enum TrainEvent {
+    /// First task of `phase` started executing.
+    PhaseStarted { phase: PpPhase },
+    /// Block `node` = (i, j) of the grid finished its MCMC.
+    BlockCompleted { node: (usize, usize), phase: PpPhase, secs: f64, sweeps: usize },
+    /// One retained Gibbs sweep on block `node`: training-data RMSE of the
+    /// current factor sample (mean-centred scale) — the live mixing signal.
+    SweepSample { node: (usize, usize), sweep: usize, rmse: f64 },
+    /// The whole schedule (all blocks + aggregation) completed.
+    Finished { secs: f64, blocks: usize },
+}
+
+/// Where events go: any thread-safe callback. `Engine::submit` wires this
+/// to a channel; `Engine::train_observed` passes the caller's closure.
+pub type EventSink = Arc<dyn Fn(TrainEvent) + Send + Sync>;
+
+/// A persistent training engine: owns the worker pool, accepts many jobs.
+///
+/// Dropping the engine drains and joins the pool threads.
+pub struct Engine {
+    pool: Arc<WorkerPool>,
+    spec: BackendSpec,
+}
+
+impl Engine {
+    /// Spawn an engine with `threads` pool workers, each constructing its
+    /// own backend from `spec` (backend errors surface on the first job).
+    pub fn new(spec: &BackendSpec, threads: usize) -> Engine {
+        Engine { pool: Arc::new(WorkerPool::new(spec, threads)), spec: spec.clone() }
+    }
+
+    /// Engine over the default auto-resolved backend with the default
+    /// block parallelism (same heuristics as [`TrainConfig::new`]).
+    pub fn auto() -> Engine {
+        let cfg = TrainConfig::new(1);
+        Engine::new(&cfg.backend, cfg.block_parallelism)
+    }
+
+    /// The backend spec the pool workers were constructed from.
+    pub fn backend(&self) -> &BackendSpec {
+        &self.spec
+    }
+
+    /// Number of worker threads (parallel block slots).
+    pub fn threads(&self) -> usize {
+        self.pool.threads
+    }
+
+    /// The underlying pool, for callers that schedule raw phases/DAGs.
+    pub fn pool(&self) -> &WorkerPool {
+        &self.pool
+    }
+
+    /// Run one training job to completion on the warm pool (no events).
+    pub fn train(&self, cfg: &TrainConfig, train: &Coo) -> anyhow::Result<TrainResult> {
+        run_pp(cfg, &self.pool, train, None)
+    }
+
+    /// Run one training job to completion, delivering every [`TrainEvent`]
+    /// to `on_event` as it happens (called from worker threads).
+    pub fn train_observed(
+        &self,
+        cfg: &TrainConfig,
+        train: &Coo,
+        on_event: impl Fn(TrainEvent) + Send + Sync + 'static,
+    ) -> anyhow::Result<TrainResult> {
+        run_pp(cfg, &self.pool, train, Some(Arc::new(on_event)))
+    }
+
+    /// Validate `cfg` against `train`, then start the run on a background
+    /// thread against this engine's warm pool. Returns immediately with a
+    /// [`Session`] streaming the run's events.
+    pub fn submit(&self, cfg: TrainConfig, train: &Coo) -> anyhow::Result<Session> {
+        cfg.validate(train.rows, train.cols)?;
+        let (tx, rx) = channel::<TrainEvent>();
+        let pool = self.pool.clone();
+        // the session's single private copy of the data, centred during
+        // the one unavoidable clone
+        let (centered, global_mean) = center(train);
+        let handle = std::thread::spawn(move || {
+            let sink: EventSink = Arc::new(move |e| {
+                // a dropped receiver just means nobody is watching
+                let _ = tx.send(e);
+            });
+            run_pp_centered(&cfg, &pool, centered, global_mean, Some(sink))
+        });
+        Ok(Session { rx, handle })
+    }
+}
+
+/// Handle to one in-flight training run submitted to an [`Engine`].
+///
+/// Events arrive on an unbounded channel, so a slow (or absent) consumer
+/// never stalls training. The channel closes when the run finishes; after
+/// that [`Session::wait`] returns the result.
+pub struct Session {
+    rx: Receiver<TrainEvent>,
+    handle: std::thread::JoinHandle<anyhow::Result<TrainResult>>,
+}
+
+impl Session {
+    /// Block for the next event; `None` once the run is over and the
+    /// stream is drained.
+    pub fn next_event(&self) -> Option<TrainEvent> {
+        self.rx.recv().ok()
+    }
+
+    /// Non-blocking poll for an event.
+    pub fn try_event(&self) -> Option<TrainEvent> {
+        self.rx.try_recv().ok()
+    }
+
+    /// Iterate events until the run completes (the iterator is the live
+    /// progress stream; it ends when training stops emitting).
+    pub fn events(&self) -> impl Iterator<Item = TrainEvent> + '_ {
+        std::iter::from_fn(move || self.rx.recv().ok())
+    }
+
+    /// Join the run and return its result (undelivered events are dropped).
+    pub fn wait(self) -> anyhow::Result<TrainResult> {
+        drop(self.rx);
+        match self.handle.join() {
+            Ok(res) => res,
+            Err(_) => Err(anyhow::anyhow!("training thread panicked")),
+        }
+    }
+}
+
+/// A matrix-factorization method that can be fitted on an [`Engine`].
+///
+/// PP trains on the engine's pool; the SGD/ALS/CGD/SGLD baselines manage
+/// their own intra-method threading and take the engine for interface
+/// uniformity — either way, `fit` returns one servable [`PosteriorModel`]
+/// so downstream evaluation code is method-agnostic.
+pub trait Factorizer {
+    /// Short method name ("pp", "nomad", …) for tables and logs.
+    fn name(&self) -> &str;
+
+    /// Train on `data`, returning the fitted model plus diagnostics.
+    fn fit(&self, engine: &Engine, data: &Coo) -> anyhow::Result<FitOutcome>;
+}
+
+/// What a [`Factorizer`] fit produces: the servable model plus run
+/// diagnostics (PP-specific scheduling stats when available).
+pub struct FitOutcome {
+    pub method: String,
+    pub model: PosteriorModel,
+    /// Wall-clock seconds of the fit.
+    pub secs: f64,
+    /// Phase timings + scheduling stats — `Some` only for PP runs.
+    pub pp_stats: Option<(PhaseTimings, RunStats)>,
+}
+
+/// Posterior Propagation as a [`Factorizer`].
+pub struct PpFactorizer(pub TrainConfig);
+
+impl Factorizer for PpFactorizer {
+    fn name(&self) -> &str {
+        "pp"
+    }
+
+    fn fit(&self, engine: &Engine, data: &Coo) -> anyhow::Result<FitOutcome> {
+        let t0 = std::time::Instant::now();
+        let res = engine.train(&self.0, data)?;
+        Ok(FitOutcome {
+            method: "pp".to_string(),
+            secs: t0.elapsed().as_secs_f64(),
+            pp_stats: Some((res.timings, res.stats)),
+            model: res.model,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::BlockBackend;
+    use crate::coordinator::config::ConfigError;
+    use crate::coordinator::PpTrainer;
+    use crate::data::generator::SyntheticDataset;
+    use crate::data::split::holdout_split_covered;
+    use std::collections::HashSet;
+    use std::thread::ThreadId;
+
+    fn dataset() -> (Coo, Coo, usize) {
+        let d = SyntheticDataset::by_name("movielens", 0.0015, 31).unwrap();
+        let (train, test) = holdout_split_covered(&d.ratings, 0.2, 32);
+        (train, test, d.k)
+    }
+
+    fn quick_cfg(k: usize) -> TrainConfig {
+        TrainConfig::new(k)
+            .with_backend(BackendSpec::Native)
+            .with_grid(2, 2)
+            .with_sweeps(4, 8)
+            .with_seed(33)
+    }
+
+    /// Thread ids of pool workers observed while running a saturating batch.
+    fn worker_ids(pool: &WorkerPool) -> HashSet<ThreadId> {
+        let tasks: Vec<_> = (0..pool.threads * 4)
+            .map(|_| {
+                move |_b: &BlockBackend| -> anyhow::Result<ThreadId> {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                    Ok(std::thread::current().id())
+                }
+            })
+            .collect();
+        pool.run_phase(tasks).unwrap().into_iter().collect()
+    }
+
+    #[test]
+    fn sequential_sessions_match_fresh_trainers_on_one_warm_pool() {
+        let (train, _, k) = dataset();
+        let engine = Engine::new(&BackendSpec::Native, 3);
+        let ids_before = worker_ids(engine.pool());
+
+        let r1 = engine.submit(quick_cfg(k), &train).unwrap().wait().unwrap();
+        let r2 = engine.submit(quick_cfg(k), &train).unwrap().wait().unwrap();
+        // the warm pool must not change the math: both sessions equal a
+        // fresh one-shot trainer bit for bit
+        let fresh = PpTrainer::new(quick_cfg(k)).train(&train).unwrap();
+        assert_eq!(r1.u_post.mean, fresh.u_post.mean);
+        assert_eq!(r1.v_post.prec, fresh.v_post.prec);
+        assert_eq!(r1.u_mean, r2.u_mean);
+        assert_eq!(r1.v_mean, r2.v_mean);
+
+        // and it must actually be the same pool: no threads re-spawned
+        let ids_after = worker_ids(engine.pool());
+        assert!(
+            ids_after.is_subset(&ids_before),
+            "pool threads changed: {ids_before:?} -> {ids_after:?}"
+        );
+    }
+
+    #[test]
+    fn session_streams_typed_events() {
+        let (train, _, k) = dataset();
+        let engine = Engine::new(&BackendSpec::Native, 2);
+        let session = engine.submit(quick_cfg(k), &train).unwrap();
+        let events: Vec<TrainEvent> = session.events().collect();
+        let result = session.wait().unwrap();
+
+        // phase (a) starts before anything else
+        assert!(matches!(events[0], TrainEvent::PhaseStarted { phase: PpPhase::A }));
+        let blocks = events
+            .iter()
+            .filter(|e| matches!(e, TrainEvent::BlockCompleted { .. }))
+            .count();
+        assert_eq!(blocks, result.stats.blocks);
+        assert_eq!(blocks, 4, "2x2 grid");
+        // per-sweep samples stream from inside the blocks
+        assert!(events.iter().any(|e| matches!(
+            e,
+            TrainEvent::SweepSample { rmse, .. } if rmse.is_finite()
+        )));
+        // aggregation is part of the stream, and the run closes with Finished
+        assert!(events
+            .iter()
+            .any(|e| matches!(e, TrainEvent::PhaseStarted { phase: PpPhase::Aggregate })));
+        assert!(matches!(events.last(), Some(TrainEvent::Finished { .. })));
+    }
+
+    #[test]
+    fn submit_validates_config_before_spawning() {
+        let (train, _, _) = dataset();
+        let engine = Engine::new(&BackendSpec::Native, 2);
+        let err = engine.submit(quick_cfg(0), &train).unwrap_err();
+        assert_eq!(err.downcast_ref::<ConfigError>(), Some(&ConfigError::ZeroK));
+        let err = engine.submit(quick_cfg(8).with_grid(train.rows + 1, 1), &train).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<ConfigError>(),
+            Some(ConfigError::GridExceedsMatrix { .. })
+        ));
+    }
+
+    #[test]
+    fn train_observed_delivers_callback_events() {
+        let (train, _, k) = dataset();
+        let engine = Engine::new(&BackendSpec::Native, 2);
+        let count = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let c = count.clone();
+        let res = engine
+            .train_observed(&quick_cfg(k), &train, move |_e| {
+                c.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            })
+            .unwrap();
+        assert!(res.rmse(&train).is_finite());
+        assert!(count.load(std::sync::atomic::Ordering::Relaxed) > 4);
+    }
+
+    #[test]
+    fn factorizer_runs_pp_on_engine() {
+        let (train, test, k) = dataset();
+        let engine = Engine::new(&BackendSpec::Native, 2);
+        let out = PpFactorizer(quick_cfg(k)).fit(&engine, &train).unwrap();
+        assert_eq!(out.method, "pp");
+        assert!(out.model.rmse(&test).is_finite());
+        assert!(out.pp_stats.is_some());
+    }
+}

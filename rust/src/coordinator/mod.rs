@@ -20,15 +20,25 @@
 //! Within each block, the Gibbs half-sweeps execute over row shards
 //! (`worker`) — the distributed-BMF-inside-a-block layer of the paper —
 //! through either the AOT HLO runtime or the native oracle backend.
+//!
+//! The public entry point is the [`Engine`]: it owns the persistent worker
+//! pool, runs many jobs against it warm ([`Engine::train`] /
+//! [`Engine::submit`] → [`Session`] streaming [`TrainEvent`]s), and every
+//! run yields a servable [`PosteriorModel`] (what `checkpoint` persists).
+//! [`PpTrainer`] survives as a deprecated one-shot facade.
 
 pub mod aggregate;
 pub mod backend;
 pub mod block_task;
 pub mod checkpoint;
 pub mod config;
+pub mod engine;
 pub mod scheduler;
 pub mod trainer;
 pub mod worker;
 
-pub use config::{BackendSpec, SchedulerMode, TrainConfig};
+pub use config::{BackendSpec, ConfigError, SchedulerMode, TrainConfig};
+pub use engine::{Engine, Factorizer, FitOutcome, PpFactorizer, PpPhase, Session, TrainEvent};
 pub use trainer::{PpTrainer, TrainResult};
+
+pub use crate::posterior::PosteriorModel;

@@ -12,11 +12,13 @@
 //!
 //! Across phases the expensive per-thread state (the PJRT engine: client +
 //! compiled executables) must be REUSED, so the pool outlives individual
-//! phases. Each worker thread instantiates its own `BlockBackend` once
-//! (the engine is thread-confined) and then serves jobs from a shared
-//! channel. If backend construction fails, every job submitted to that
-//! worker reports the construction error to its caller — jobs are never
-//! silently run on a substitute backend.
+//! phases — and, via [`crate::coordinator::Engine`], individual *runs*:
+//! the training engine holds one pool for its whole lifetime and schedules
+//! every submitted job onto it. Each worker thread instantiates its own
+//! `BlockBackend` once (the PJRT engine is thread-confined) and then
+//! serves jobs from a shared channel. If backend construction fails, every
+//! job submitted to that worker reports the construction error to its
+//! caller — jobs are never silently run on a substitute backend.
 
 use super::backend::BlockBackend;
 use super::config::BackendSpec;

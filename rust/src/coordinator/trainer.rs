@@ -1,4 +1,4 @@
-//! The top-level D-BMF+PP trainer.
+//! The top-level D-BMF+PP training pipeline.
 //!
 //! Phases (a) → (b) → (c) → aggregation are expressed as one dependency
 //! DAG over block tasks: phase-(b) block (i,0) depends only on (0,0);
@@ -12,16 +12,22 @@
 //! schedule through the same machinery — both modes run the identical
 //! per-block math with identical seeds and produce bitwise-identical
 //! posteriors.
+//!
+//! The pipeline itself is [`run_pp`], invoked through
+//! [`crate::coordinator::Engine`]; as it executes it streams typed
+//! [`TrainEvent`]s to an optional sink. [`PpTrainer`] remains as a thin
+//! compatibility facade over a one-shot engine.
 
 use super::aggregate::aggregate_part;
 use super::backend::{BlockBackend, BlockData};
 use super::block_task::{run_block, BlockPosteriors, BlockRunStats, BlockTaskCfg, PpTaskOutput};
 use super::config::{SchedulerMode, TrainConfig};
+use super::engine::{Engine, EventSink, PpPhase, TrainEvent};
 use super::scheduler::{DagScheduler, NodeId, WorkerPool};
 use crate::data::sparse::Coo;
-use crate::metrics::rmse::rmse_factors;
 use crate::partition::Grid;
-use crate::posterior::RowGaussians;
+use crate::posterior::{PosteriorModel, RowGaussians};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 /// Wall-clock seconds per PP phase, attributed from per-block completion
@@ -64,60 +70,96 @@ impl RunStats {
     }
 }
 
-/// The trained model: aggregated posterior marginals over all factor rows.
+/// Outcome of one training run: the servable [`PosteriorModel`] plus the
+/// run's diagnostics (phase timings, scheduling stats, grid used).
+///
+/// Derefs to the model, so prediction/evaluation calls (`predict`, `rmse`,
+/// `predict_variance`, `top_n`, field access like `u_post`) go straight
+/// through; persist or serve `result.model` alone.
 #[derive(Debug, Clone)]
 pub struct TrainResult {
-    pub k: usize,
+    /// The servable artifact — the only part a checkpoint stores.
+    pub model: PosteriorModel,
+    /// Block grid the run used.
     pub grid: (usize, usize),
-    pub u_post: RowGaussians,
-    pub v_post: RowGaussians,
-    /// Posterior means as f32 factors (rows×k, cols×k) for fast prediction.
-    pub u_mean: Vec<f32>,
-    pub v_mean: Vec<f32>,
-    /// Global rating mean (training is mean-centred; predictions add it back).
-    pub global_mean: f64,
     pub timings: PhaseTimings,
     pub stats: RunStats,
 }
 
-impl TrainResult {
-    /// Posterior-mean prediction for one cell.
-    pub fn predict(&self, row: usize, col: usize) -> f64 {
-        self.global_mean
-            + (0..self.k)
-                .map(|j| (self.u_mean[row * self.k + j] * self.v_mean[col * self.k + j]) as f64)
-                .sum::<f64>()
-    }
+impl std::ops::Deref for TrainResult {
+    type Target = PosteriorModel;
 
-    /// RMSE of posterior-mean predictions on a held-out set.
-    pub fn rmse(&self, test: &Coo) -> f64 {
-        if self.global_mean == 0.0 {
-            rmse_factors(&self.u_mean, &self.v_mean, self.k, test)
-        } else {
-            crate::metrics::rmse::rmse_with(test, |r, c| self.predict(r, c))
+    fn deref(&self) -> &PosteriorModel {
+        &self.model
+    }
+}
+
+impl TrainResult {
+    /// Extract the servable model, discarding run diagnostics.
+    pub fn into_model(self) -> PosteriorModel {
+        self.model
+    }
+}
+
+/// Emits [`TrainEvent`]s from inside DAG task closures. Phase starts are
+/// deduplicated with atomics because the first task of a phase is decided
+/// by the scheduler at run time, not by construction order.
+#[derive(Clone)]
+struct Emitter {
+    sink: Option<EventSink>,
+    sweep_rmse: bool,
+    phase_started: Arc<[AtomicBool; 4]>,
+}
+
+impl Emitter {
+    fn new(sink: Option<EventSink>, sweep_rmse: bool) -> Emitter {
+        Emitter {
+            sink,
+            sweep_rmse,
+            phase_started: Arc::new([
+                AtomicBool::new(false),
+                AtomicBool::new(false),
+                AtomicBool::new(false),
+                AtomicBool::new(false),
+            ]),
         }
     }
 
-    /// Predictive variance of one cell from the factor posteriors
-    /// (delta-method approximation: uᵀΣ_v u + vᵀΣ_u v + tr(Σ_u Σ_v)).
-    pub fn predict_variance(&self, row: usize, col: usize) -> f64 {
-        let k = self.k;
-        let su = self.u_post.row_prec(row);
-        let sv = self.v_post.row_prec(col);
-        let cu = crate::linalg::Cholesky::new(&su).map(|c| c.inverse());
-        let cv = crate::linalg::Cholesky::new(&sv).map(|c| c.inverse());
-        let (cu, cv) = match (cu, cv) {
-            (Ok(a), Ok(b)) => (a, b),
-            _ => return f64::NAN,
-        };
-        let u: Vec<f64> = (0..k).map(|j| self.u_mean[row * k + j] as f64).collect();
-        let v: Vec<f64> = (0..k).map(|j| self.v_mean[col * k + j] as f64).collect();
-        let vsv = cv.matvec(&u);
-        let usu = cu.matvec(&v);
-        let term1: f64 = u.iter().zip(&vsv).map(|(a, b)| a * b).sum();
-        let term2: f64 = v.iter().zip(&usu).map(|(a, b)| a * b).sum();
-        let term3: f64 = (0..k).map(|a| (0..k).map(|b| cu[(a, b)] * cv[(b, a)]).sum::<f64>()).sum();
-        term1 + term2 + term3
+    fn phase(&self, phase: PpPhase) {
+        let Some(sink) = &self.sink else { return };
+        if !self.phase_started[phase as usize].swap(true, Ordering::Relaxed) {
+            sink(TrainEvent::PhaseStarted { phase });
+        }
+    }
+
+    fn block_done(&self, node: (usize, usize), phase: PpPhase, stats: &BlockRunStats) {
+        if let Some(sink) = &self.sink {
+            sink(TrainEvent::BlockCompleted {
+                node,
+                phase,
+                secs: stats.secs,
+                sweeps: stats.sweeps,
+            });
+        }
+    }
+
+    /// Per-sweep observer for one block, or None when nobody listens or
+    /// the config disabled sweep streaming (the block then skips the
+    /// per-sweep RMSE computation entirely).
+    fn sweep_observer(&self, node: (usize, usize)) -> Option<Box<dyn Fn(usize, f64)>> {
+        if !self.sweep_rmse {
+            return None;
+        }
+        let sink = self.sink.clone()?;
+        Some(Box::new(move |sweep, rmse| {
+            sink(TrainEvent::SweepSample { node, sweep, rmse })
+        }))
+    }
+
+    fn finished(&self, secs: f64, blocks: usize) {
+        if let Some(sink) = &self.sink {
+            sink(TrainEvent::Finished { secs, blocks });
+        }
     }
 }
 
@@ -141,6 +183,7 @@ fn add_part(
     join: Option<NodeId>,
     ridge: f64,
     pick: fn(&BlockPosteriors) -> &RowGaussians,
+    em: &Emitter,
 ) -> NodeId {
     let mut edges = Vec::with_capacity(posts.len() + 2);
     edges.push(prior);
@@ -149,14 +192,274 @@ fn add_part(
         edges.push(j);
     }
     let n_posts = posts.len();
+    let em = em.clone();
     dag.add(&edges, move |_b: &BlockBackend, p: &[Arc<PpTaskOutput>]| {
+        em.phase(PpPhase::Aggregate);
         let posts: Vec<&RowGaussians> =
             p[1..1 + n_posts].iter().map(|q| pick(q.block())).collect();
         Ok(PpTaskOutput::Part(aggregate_part(pick(p[0].block()), &posts, ridge)))
     })
 }
 
-/// Posterior-Propagation trainer.
+fn block_seed(cfg: &TrainConfig, i: usize, j: usize) -> u64 {
+    cfg.seed
+        .wrapping_mul(0x9E3779B97F4A7C15)
+        .wrapping_add((i as u64) << 32 | j as u64)
+}
+
+fn task_cfg(cfg: &TrainConfig, samples: usize, seed: u64) -> BlockTaskCfg {
+    BlockTaskCfg {
+        k: cfg.k,
+        tau: cfg.tau,
+        burnin: cfg.burnin,
+        samples,
+        workers: cfg.workers,
+        ridge: cfg.ridge,
+        seed,
+    }
+}
+
+/// Mean-centre a training matrix into a private copy: the factors model
+/// the residual, the global mean is restored at prediction — standard for
+/// all methods compared in the paper.
+pub(crate) fn center(train: &Coo) -> (Coo, f64) {
+    let global_mean = train.mean();
+    let mut centered = train.clone();
+    for e in centered.entries.iter_mut() {
+        e.val -= global_mean as f32;
+    }
+    (centered, global_mean)
+}
+
+/// Run the full PP pipeline for `cfg` on a caller-owned worker pool,
+/// streaming progress to `sink` (if any).
+pub(crate) fn run_pp(
+    cfg: &TrainConfig,
+    pool: &WorkerPool,
+    train: &Coo,
+    sink: Option<EventSink>,
+) -> anyhow::Result<TrainResult> {
+    cfg.validate(train.rows, train.cols)?;
+    let (centered, global_mean) = center(train);
+    run_pp_centered(cfg, pool, centered, global_mean, sink)
+}
+
+/// [`run_pp`] over an already mean-centred matrix the caller gives away —
+/// the path `Engine::submit` uses so a session holds exactly one private
+/// copy of the data (centring happens during that one clone) instead of
+/// clone-for-the-thread plus clone-for-centring.
+pub(crate) fn run_pp_centered(
+    cfg: &TrainConfig,
+    pool: &WorkerPool,
+    train: Coo,
+    global_mean: f64,
+    sink: Option<EventSink>,
+) -> anyhow::Result<TrainResult> {
+    cfg.validate(train.rows, train.cols)?;
+    let em = Emitter::new(sink, cfg.stream_sweep_rmse);
+    let train = &train;
+
+    let (gi, gj) = cfg.grid;
+    let grid = Grid::new(train.rows, train.cols, gi, gj);
+    let mut blocks = grid.split(train);
+    let t_total = std::time::Instant::now();
+    let barrier = cfg.scheduler == SchedulerMode::Barrier;
+    let ridge = cfg.ridge;
+    let phase_samples = cfg.phase_samples();
+
+    let mut dag: DagScheduler<PpTaskOutput> = DagScheduler::new();
+    let mut take = |i: usize, j: usize| {
+        BlockData::new(std::mem::replace(&mut blocks[i][j], Coo::new(0, 0)))
+    };
+
+    // ---- Phase (a): block (0,0), fresh priors both sides ----
+    let a_data = take(0, 0);
+    let cfg_a = task_cfg(cfg, cfg.samples, block_seed(cfg, 0, 0));
+    let em_a = em.clone();
+    let a_id = dag.add(&[], move |b: &BlockBackend, _p: &[Arc<PpTaskOutput>]| {
+        em_a.phase(PpPhase::A);
+        let obs = em_a.sweep_observer((0, 0));
+        let (post, stats) = run_block(b, &a_data, &cfg_a, None, None, obs.as_deref())?;
+        em_a.block_done((0, 0), PpPhase::A, &stats);
+        Ok(PpTaskOutput::Block(post, stats))
+    });
+
+    // ---- Phase (b): first-row and first-column blocks; each depends
+    // only on (a), whose posterior it consumes as a prior ----
+    let mut b_row_ids: Vec<NodeId> = vec![a_id; gi];
+    let mut b_col_ids: Vec<NodeId> = vec![a_id; gj];
+    let mut b_ids: Vec<NodeId> = Vec::new();
+    for i in 1..gi {
+        let data = take(i, 0);
+        let bcfg = task_cfg(cfg, phase_samples, block_seed(cfg, i, 0));
+        let em_b = em.clone();
+        let id = dag.add(&[a_id], move |b: &BlockBackend, p: &[Arc<PpTaskOutput>]| {
+            em_b.phase(PpPhase::B);
+            let obs = em_b.sweep_observer((i, 0));
+            let (post, stats) =
+                run_block(b, &data, &bcfg, None, Some(&p[0].block().v), obs.as_deref())?;
+            em_b.block_done((i, 0), PpPhase::B, &stats);
+            Ok(PpTaskOutput::Block(post, stats))
+        });
+        b_row_ids[i] = id;
+        b_ids.push(id);
+    }
+    for j in 1..gj {
+        let data = take(0, j);
+        let bcfg = task_cfg(cfg, phase_samples, block_seed(cfg, 0, j));
+        let em_b = em.clone();
+        let id = dag.add(&[a_id], move |b: &BlockBackend, p: &[Arc<PpTaskOutput>]| {
+            em_b.phase(PpPhase::B);
+            let obs = em_b.sweep_observer((0, j));
+            let (post, stats) =
+                run_block(b, &data, &bcfg, Some(&p[0].block().u), None, obs.as_deref())?;
+            em_b.block_done((0, j), PpPhase::B, &stats);
+            Ok(PpTaskOutput::Block(post, stats))
+        });
+        b_col_ids[j] = id;
+        b_ids.push(id);
+    }
+
+    // barrier mode: one synthetic join node per phase keeps the edge
+    // count linear in the block count — every phase-(c) block waits on
+    // this single node instead of on each of the I+J-2 (b) blocks
+    let b_join = (barrier && !b_ids.is_empty()).then(|| {
+        dag.add(&b_ids, |_b: &BlockBackend, _p: &[Arc<PpTaskOutput>]| {
+            Ok(PpTaskOutput::Barrier)
+        })
+    });
+
+    // ---- Phase (c): interior block (i,j) depends on its two real
+    // parents (i,0) and (0,j); barrier mode adds the phase-(b) join,
+    // restoring the old full phase barrier ----
+    let mut c_ids: Vec<NodeId> = Vec::new();
+    let mut c_id_at = vec![vec![a_id; gj]; gi];
+    for i in 1..gi {
+        for j in 1..gj {
+            let data = take(i, j);
+            let bcfg = task_cfg(cfg, phase_samples, block_seed(cfg, i, j));
+            let mut edges = vec![b_row_ids[i], b_col_ids[j]];
+            if let Some(join) = b_join {
+                edges.push(join);
+            }
+            let em_c = em.clone();
+            let id = dag.add(&edges, move |b: &BlockBackend, p: &[Arc<PpTaskOutput>]| {
+                em_c.phase(PpPhase::C);
+                let obs = em_c.sweep_observer((i, j));
+                let (post, stats) = run_block(
+                    b,
+                    &data,
+                    &bcfg,
+                    Some(&p[0].block().u),
+                    Some(&p[1].block().v),
+                    obs.as_deref(),
+                )?;
+                em_c.block_done((i, j), PpPhase::C, &stats);
+                Ok(PpTaskOutput::Block(post, stats))
+            });
+            c_ids.push(id);
+            c_id_at[i][j] = id;
+        }
+    }
+
+    // barrier mode: aggregation waits for the slower of the two phase
+    // joins (phase (c) when interior blocks exist, else phase (b))
+    let c_join = (barrier && !c_ids.is_empty()).then(|| {
+        dag.add(&c_ids, |_b: &BlockBackend, _p: &[Arc<PpTaskOutput>]| {
+            Ok(PpTaskOutput::Barrier)
+        })
+    });
+    let agg_join = c_join.or(b_join);
+
+    // ---- Aggregation as DAG nodes: each row/column part starts the
+    // moment its own inputs exist instead of after every block.
+    // Inputs are consumed in canonical (i, j) order, so the floating-
+    // point reduction is identical whatever the completion order. ----
+    let mut u_part_ids: Vec<NodeId> = Vec::with_capacity(gi);
+    let mut v_part_ids: Vec<NodeId> = Vec::with_capacity(gj);
+    // U^(0): phase-a posterior refined by the phase-b column blocks
+    let posts: Vec<NodeId> = (1..gj).map(|j| b_col_ids[j]).collect();
+    u_part_ids.push(add_part(&mut dag, a_id, &posts, agg_join, ridge, pick_u, &em));
+    // U^(i): phase-b row posterior refined by row i's (c) blocks
+    for i in 1..gi {
+        let posts: Vec<NodeId> = (1..gj).map(|j| c_id_at[i][j]).collect();
+        u_part_ids.push(add_part(&mut dag, b_row_ids[i], &posts, agg_join, ridge, pick_u, &em));
+    }
+    // V^(0): phase-a posterior refined by the phase-b row blocks
+    let posts: Vec<NodeId> = (1..gi).map(|i| b_row_ids[i]).collect();
+    v_part_ids.push(add_part(&mut dag, a_id, &posts, agg_join, ridge, pick_v, &em));
+    // V^(j): phase-b column posterior refined by column j's (c) blocks
+    for j in 1..gj {
+        let posts: Vec<NodeId> = (1..gi).map(|i| c_id_at[i][j]).collect();
+        v_part_ids.push(add_part(&mut dag, b_col_ids[j], &posts, agg_join, ridge, pick_v, &em));
+    }
+
+    let nodes = dag.run(pool)?;
+
+    // ---- stats + phase attribution from per-node completion times ----
+    let mut stats = RunStats::default();
+    for res in &nodes {
+        if let Some(s) = res.output.block_stats() {
+            stats.absorb(s);
+        }
+    }
+    let a_finish = nodes[a_id].finished;
+    let b_finish = b_ids.iter().map(|&id| nodes[id].finished).fold(a_finish, f64::max);
+    let c_finish = c_ids.iter().map(|&id| nodes[id].finished).fold(b_finish, f64::max);
+    let agg_finish = u_part_ids
+        .iter()
+        .chain(&v_part_ids)
+        .map(|&id| nodes[id].finished)
+        .fold(c_finish, f64::max);
+    let mut timings = PhaseTimings {
+        a: a_finish,
+        b: b_finish - a_finish,
+        c: c_finish - b_finish,
+        aggregate: agg_finish - c_finish,
+        total: 0.0,
+    };
+
+    // idle: worker-slot seconds not spent computing over the schedule
+    // span — the straggler cost the barrier-free schedule removes
+    let busy: f64 = nodes.iter().map(|r| r.busy()).sum();
+    stats.idle_secs = (pool.threads as f64 * agg_finish - busy).max(0.0);
+    // overlap: phase-(c) compute that ran while phase-(b) stragglers
+    // were still in flight (zero under the barrier scheduler)
+    stats.overlap_secs = c_ids
+        .iter()
+        .map(|&id| (b_finish - nodes[id].started).clamp(0.0, nodes[id].busy()))
+        .sum();
+
+    let mut u_post = nodes[u_part_ids[0]].output.part().clone();
+    for &id in &u_part_ids[1..] {
+        u_post = u_post.concat(nodes[id].output.part());
+    }
+    let mut v_post = nodes[v_part_ids[0]].output.part().clone();
+    for &id in &v_part_ids[1..] {
+        v_post = v_post.concat(nodes[id].output.part());
+    }
+    timings.total = t_total.elapsed().as_secs_f64();
+
+    assert_eq!(u_post.n, train.rows, "U posterior row count");
+    assert_eq!(v_post.n, train.cols, "V posterior row count");
+
+    em.finished(timings.total, stats.blocks);
+
+    Ok(TrainResult {
+        model: PosteriorModel::new(u_post, v_post, global_mean),
+        grid: cfg.grid,
+        timings,
+        stats,
+    })
+}
+
+/// Legacy one-shot trainer facade.
+///
+/// **Deprecated** in favour of [`Engine`]: each `train` call builds (and
+/// tears down) a private single-run engine, so nothing is kept warm across
+/// runs and no progress events are observable. Kept for one release so
+/// existing callers and the DAG/Barrier equivalence tests compile
+/// unchanged; both paths execute the identical [`run_pp`] pipeline.
 pub struct PpTrainer {
     pub cfg: TrainConfig,
 }
@@ -166,221 +469,17 @@ impl PpTrainer {
         PpTrainer { cfg }
     }
 
-    fn block_seed(&self, i: usize, j: usize) -> u64 {
-        self.cfg
-            .seed
-            .wrapping_mul(0x9E3779B97F4A7C15)
-            .wrapping_add((i as u64) << 32 | j as u64)
-    }
-
-    fn task_cfg(&self, samples: usize, seed: u64) -> BlockTaskCfg {
-        BlockTaskCfg {
-            k: self.cfg.k,
-            tau: self.cfg.tau,
-            burnin: self.cfg.burnin,
-            samples,
-            workers: self.cfg.workers,
-            ridge: self.cfg.ridge,
-            seed,
-        }
-    }
-
-    /// Run the full PP pipeline on a training matrix.
-    ///
-    /// Ratings are mean-centred before inference (the factors model the
-    /// residual, the global mean is restored at prediction) — standard for
-    /// all methods compared in the paper.
+    /// Run the full PP pipeline on a training matrix through a fresh
+    /// one-shot [`Engine`] sized by `cfg.block_parallelism`.
     pub fn train(&self, train: &Coo) -> anyhow::Result<TrainResult> {
-        let pool = WorkerPool::new(&self.cfg.backend, self.cfg.block_parallelism);
-        self.train_with_pool(&pool, train)
+        Engine::new(&self.cfg.backend, self.cfg.block_parallelism).train(&self.cfg, train)
     }
 
     /// `train` against a caller-owned worker pool — reuses the per-thread
-    /// PJRT engines (compiled executables) across multiple training runs;
-    /// use this for repeated/warm-measured runs (benches, learning curves).
+    /// PJRT engines (compiled executables) across multiple training runs.
+    /// Prefer an [`Engine`], which owns such a pool.
     pub fn train_with_pool(&self, pool: &WorkerPool, train: &Coo) -> anyhow::Result<TrainResult> {
-        let global_mean = train.mean();
-        let mut centered = train.clone();
-        for e in centered.entries.iter_mut() {
-            e.val -= global_mean as f32;
-        }
-        let train = &centered;
-
-        let (gi, gj) = self.cfg.grid;
-        let grid = Grid::new(train.rows, train.cols, gi, gj);
-        let mut blocks = grid.split(train);
-        let k = self.cfg.k;
-        let t_total = std::time::Instant::now();
-        let barrier = self.cfg.scheduler == SchedulerMode::Barrier;
-        let ridge = self.cfg.ridge;
-        let phase_samples = self.cfg.phase_samples();
-
-        let mut dag: DagScheduler<PpTaskOutput> = DagScheduler::new();
-        let mut take = |i: usize, j: usize| {
-            BlockData::new(std::mem::replace(&mut blocks[i][j], Coo::new(0, 0)))
-        };
-
-        // ---- Phase (a): block (0,0), fresh priors both sides ----
-        let a_data = take(0, 0);
-        let cfg_a = self.task_cfg(self.cfg.samples, self.block_seed(0, 0));
-        let a_id = dag.add(&[], move |b: &BlockBackend, _p: &[Arc<PpTaskOutput>]| {
-            let (post, stats) = run_block(b, &a_data, &cfg_a, None, None)?;
-            Ok(PpTaskOutput::Block(post, stats))
-        });
-
-        // ---- Phase (b): first-row and first-column blocks; each depends
-        // only on (a), whose posterior it consumes as a prior ----
-        let mut b_row_ids: Vec<NodeId> = vec![a_id; gi];
-        let mut b_col_ids: Vec<NodeId> = vec![a_id; gj];
-        let mut b_ids: Vec<NodeId> = Vec::new();
-        for i in 1..gi {
-            let data = take(i, 0);
-            let cfg = self.task_cfg(phase_samples, self.block_seed(i, 0));
-            let id = dag.add(&[a_id], move |b: &BlockBackend, p: &[Arc<PpTaskOutput>]| {
-                let (post, stats) = run_block(b, &data, &cfg, None, Some(&p[0].block().v))?;
-                Ok(PpTaskOutput::Block(post, stats))
-            });
-            b_row_ids[i] = id;
-            b_ids.push(id);
-        }
-        for j in 1..gj {
-            let data = take(0, j);
-            let cfg = self.task_cfg(phase_samples, self.block_seed(0, j));
-            let id = dag.add(&[a_id], move |b: &BlockBackend, p: &[Arc<PpTaskOutput>]| {
-                let (post, stats) = run_block(b, &data, &cfg, Some(&p[0].block().u), None)?;
-                Ok(PpTaskOutput::Block(post, stats))
-            });
-            b_col_ids[j] = id;
-            b_ids.push(id);
-        }
-
-        // barrier mode: one synthetic join node per phase keeps the edge
-        // count linear in the block count — every phase-(c) block waits on
-        // this single node instead of on each of the I+J-2 (b) blocks
-        let b_join = (barrier && !b_ids.is_empty()).then(|| {
-            dag.add(&b_ids, |_b: &BlockBackend, _p: &[Arc<PpTaskOutput>]| {
-                Ok(PpTaskOutput::Barrier)
-            })
-        });
-
-        // ---- Phase (c): interior block (i,j) depends on its two real
-        // parents (i,0) and (0,j); barrier mode adds the phase-(b) join,
-        // restoring the old full phase barrier ----
-        let mut c_ids: Vec<NodeId> = Vec::new();
-        let mut c_id_at = vec![vec![a_id; gj]; gi];
-        for i in 1..gi {
-            for j in 1..gj {
-                let data = take(i, j);
-                let cfg = self.task_cfg(phase_samples, self.block_seed(i, j));
-                let mut edges = vec![b_row_ids[i], b_col_ids[j]];
-                if let Some(join) = b_join {
-                    edges.push(join);
-                }
-                let id = dag.add(&edges, move |b: &BlockBackend, p: &[Arc<PpTaskOutput>]| {
-                    let (post, stats) =
-                        run_block(b, &data, &cfg, Some(&p[0].block().u), Some(&p[1].block().v))?;
-                    Ok(PpTaskOutput::Block(post, stats))
-                });
-                c_ids.push(id);
-                c_id_at[i][j] = id;
-            }
-        }
-
-        // barrier mode: aggregation waits for the slower of the two phase
-        // joins (phase (c) when interior blocks exist, else phase (b))
-        let c_join = (barrier && !c_ids.is_empty()).then(|| {
-            dag.add(&c_ids, |_b: &BlockBackend, _p: &[Arc<PpTaskOutput>]| {
-                Ok(PpTaskOutput::Barrier)
-            })
-        });
-        let agg_join = c_join.or(b_join);
-
-        // ---- Aggregation as DAG nodes: each row/column part starts the
-        // moment its own inputs exist instead of after every block.
-        // Inputs are consumed in canonical (i, j) order, so the floating-
-        // point reduction is identical whatever the completion order. ----
-        let mut u_part_ids: Vec<NodeId> = Vec::with_capacity(gi);
-        let mut v_part_ids: Vec<NodeId> = Vec::with_capacity(gj);
-        // U^(0): phase-a posterior refined by the phase-b column blocks
-        let posts: Vec<NodeId> = (1..gj).map(|j| b_col_ids[j]).collect();
-        u_part_ids.push(add_part(&mut dag, a_id, &posts, agg_join, ridge, pick_u));
-        // U^(i): phase-b row posterior refined by row i's (c) blocks
-        for i in 1..gi {
-            let posts: Vec<NodeId> = (1..gj).map(|j| c_id_at[i][j]).collect();
-            u_part_ids.push(add_part(&mut dag, b_row_ids[i], &posts, agg_join, ridge, pick_u));
-        }
-        // V^(0): phase-a posterior refined by the phase-b row blocks
-        let posts: Vec<NodeId> = (1..gi).map(|i| b_row_ids[i]).collect();
-        v_part_ids.push(add_part(&mut dag, a_id, &posts, agg_join, ridge, pick_v));
-        // V^(j): phase-b column posterior refined by column j's (c) blocks
-        for j in 1..gj {
-            let posts: Vec<NodeId> = (1..gi).map(|i| c_id_at[i][j]).collect();
-            v_part_ids.push(add_part(&mut dag, b_col_ids[j], &posts, agg_join, ridge, pick_v));
-        }
-
-        let nodes = dag.run(pool)?;
-
-        // ---- stats + phase attribution from per-node completion times ----
-        let mut stats = RunStats::default();
-        for res in &nodes {
-            if let Some(s) = res.output.block_stats() {
-                stats.absorb(s);
-            }
-        }
-        let a_finish = nodes[a_id].finished;
-        let b_finish = b_ids.iter().map(|&id| nodes[id].finished).fold(a_finish, f64::max);
-        let c_finish = c_ids.iter().map(|&id| nodes[id].finished).fold(b_finish, f64::max);
-        let agg_finish = u_part_ids
-            .iter()
-            .chain(&v_part_ids)
-            .map(|&id| nodes[id].finished)
-            .fold(c_finish, f64::max);
-        let mut timings = PhaseTimings {
-            a: a_finish,
-            b: b_finish - a_finish,
-            c: c_finish - b_finish,
-            aggregate: agg_finish - c_finish,
-            total: 0.0,
-        };
-
-        // idle: worker-slot seconds not spent computing over the schedule
-        // span — the straggler cost the barrier-free schedule removes
-        let busy: f64 = nodes.iter().map(|r| r.busy()).sum();
-        stats.idle_secs = (pool.threads as f64 * agg_finish - busy).max(0.0);
-        // overlap: phase-(c) compute that ran while phase-(b) stragglers
-        // were still in flight (zero under the barrier scheduler)
-        stats.overlap_secs = c_ids
-            .iter()
-            .map(|&id| (b_finish - nodes[id].started).clamp(0.0, nodes[id].busy()))
-            .sum();
-
-        let mut u_post = nodes[u_part_ids[0]].output.part().clone();
-        for &id in &u_part_ids[1..] {
-            u_post = u_post.concat(nodes[id].output.part());
-        }
-        let mut v_post = nodes[v_part_ids[0]].output.part().clone();
-        for &id in &v_part_ids[1..] {
-            v_post = v_post.concat(nodes[id].output.part());
-        }
-        timings.total = t_total.elapsed().as_secs_f64();
-
-        assert_eq!(u_post.n, train.rows, "U posterior row count");
-        assert_eq!(v_post.n, train.cols, "V posterior row count");
-
-        let u_mean: Vec<f32> = u_post.mean.iter().map(|&x| x as f32).collect();
-        let v_mean: Vec<f32> = v_post.mean.iter().map(|&x| x as f32).collect();
-
-        Ok(TrainResult {
-            k,
-            grid: self.cfg.grid,
-            u_post,
-            v_post,
-            u_mean,
-            v_mean,
-            global_mean,
-            timings,
-            stats,
-        })
+        run_pp(&self.cfg, pool, train, None)
     }
 }
 

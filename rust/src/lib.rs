@@ -5,11 +5,67 @@
 //! Implementation of Bayesian Matrix Factorization with Limited
 //! Communication".
 //!
-//! The rust crate is the Layer-3 coordinator of a three-layer stack:
+//! ## The API in three types
+//!
+//! - [`coordinator::Engine`] — a persistent training engine owning the
+//!   warm worker pool (and, under the `pjrt` feature, each worker's PJRT
+//!   client and compiled-artifact cache). Build it once, run many jobs.
+//! - [`coordinator::Session`] — a handle to one in-flight run, returned by
+//!   [`coordinator::Engine::submit`]; it streams typed
+//!   [`coordinator::TrainEvent`]s (phase starts, block completions,
+//!   per-sweep RMSE samples) while training executes, and
+//!   [`coordinator::Session::wait`] yields the result.
+//! - [`posterior::PosteriorModel`] — the servable artifact every run
+//!   produces: posterior means/precisions + global mean, with `predict`,
+//!   `predict_variance`, `rmse` and `top_n`. Checkpoints persist exactly
+//!   this type, and the baselines convert into it, so serving code never
+//!   cares which method trained the model.
+//!
+//! PP and the comparator methods all implement
+//! [`coordinator::Factorizer`], so sweeping methods is a loop over
+//! `fit(&engine, &data)` calls on one warm engine.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use bmf_pp::coordinator::{BackendSpec, Engine, TrainConfig, TrainEvent};
+//! use bmf_pp::data::generator::SyntheticDataset;
+//! use bmf_pp::data::split::holdout_split_covered;
+//!
+//! let ds = SyntheticDataset::by_name("movielens", 0.001, 7).expect("profile");
+//! let (train, test) = holdout_split_covered(&ds.ratings, 0.2, 8);
+//!
+//! // one warm engine, reusable across any number of runs
+//! let engine = Engine::new(&BackendSpec::Native, 2);
+//! let cfg = TrainConfig::new(ds.k).with_grid(2, 2).with_sweeps(3, 6).with_seed(1);
+//!
+//! // submit() validates the config, then streams progress events
+//! let session = engine.submit(cfg, &train).unwrap();
+//! let mut blocks_done = 0;
+//! for event in session.events() {
+//!     if let TrainEvent::BlockCompleted { .. } = event {
+//!         blocks_done += 1;
+//!     }
+//! }
+//! let result = session.wait().unwrap();
+//! assert_eq!(blocks_done, 4); // 2x2 grid
+//!
+//! // the servable artifact: predictions, uncertainty, rankings
+//! let model = result.model;
+//! assert!(model.rmse(&test).is_finite());
+//! assert!(model.predict_variance(0, 0) > 0.0);
+//! let top = model.top_n(0, 3);
+//! assert_eq!(top.len(), 3);
+//! ```
+//!
+//! ## The three-layer stack
+//!
+//! The rust crate is the Layer-3 coordinator:
 //! - **L3 (this crate)**: Posterior-Propagation phase scheduling across an
 //!   I×J block grid, distributed Gibbs workers inside each block, posterior
-//!   propagation/aggregation, datasets, baselines (NOMAD/FPSGD), a cluster
-//!   simulator for strong-scaling studies, CLI and metrics.
+//!   propagation/aggregation, datasets, baselines (NOMAD/FPSGD/ALS/CGD/
+//!   SGLD), a cluster simulator for strong-scaling studies, CLI and
+//!   metrics.
 //! - **L2 (python/compile/model.py, build-time)**: the BPMF Gibbs half-sweep
 //!   as a JAX graph, AOT-lowered to HLO text.
 //! - **L1 (python/compile/kernels/, build-time)**: the Gibbs hot-spot as a

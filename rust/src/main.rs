@@ -2,289 +2,471 @@
 //!
 //! Subcommands:
 //!   train     run Posterior-Propagation BMF on a dataset (synthetic profile
-//!             or CSV/MatrixMarket file), report RMSE + timings
-//!   baseline  run a comparator (bmf | nomad | fpsgd) on the same data
+//!             or CSV/MatrixMarket file), streaming progress events, then
+//!             report RMSE + timings; optionally save the model (--save)
+//!             and the holdout set (--save-test)
+//!   predict   load a saved model (--load) and score a ratings file or a
+//!             dataset holdout; optionally rank top items for a row
+//!   baseline  run comparators (bmf | nomad | fpsgd | sgld | als | cgd) on
+//!             the same data; --method accepts a comma-separated list and
+//!             all fits share one warm engine
+//!   evaluate  calibration report (coverage of posterior intervals) for a
+//!             saved model
 //!   datasets  print Table-1 style statistics for the synthetic profiles
 //!   partition analyse block grids for a dataset (Fig-3 style table)
 //!   simulate  strong-scaling simulation on the calibrated cluster model
 //!
 //! Examples:
 //!   bmf-pp train --dataset netflix --scale 0.002 --grid 4x2 --samples 20
-//!   bmf-pp train --file ratings.csv --k 16 --grid 8x8
-//!   bmf-pp baseline --method nomad --dataset movielens --scale 0.002
+//!   bmf-pp train --dataset movielens --save m.json --save-test holdout.csv
+//!   bmf-pp predict --load m.json --file holdout.csv
+//!   bmf-pp baseline --method nomad,fpsgd,als --dataset movielens
 //!   bmf-pp simulate --dataset yahoo --grid 16x16 --max-nodes 16384
+//!
+//! Every subcommand parses its flags up front; the dispatch path then runs
+//! a single unknown-flag check (listing the known flags on error) before
+//! any data is loaded or work starts.
 
-use bmf_pp::baselines::sgd_common::SgdConfig;
-use bmf_pp::baselines::{fpsgd, nomad};
+use bmf_pp::baselines::{factorizer, BaselineOpts};
 use bmf_pp::cluster::{calibrate, sim};
 use bmf_pp::coordinator::backend::BlockBackend;
 use bmf_pp::coordinator::config::auto_tau;
-use bmf_pp::coordinator::{BackendSpec, PpTrainer, SchedulerMode, TrainConfig};
+use bmf_pp::coordinator::{
+    checkpoint, BackendSpec, Engine, SchedulerMode, TrainConfig, TrainEvent,
+};
 use bmf_pp::data::generator::{DatasetProfile, SyntheticDataset};
 use bmf_pp::data::loader;
 use bmf_pp::data::split::holdout_split_covered;
 use bmf_pp::data::sparse::Coo;
 use bmf_pp::data::stats::DatasetStats;
-use bmf_pp::gibbs::NativeGibbs;
+use bmf_pp::metrics::recorder::Recorder;
 use bmf_pp::metrics::throughput::Throughput;
 use bmf_pp::partition::{balance, Grid};
 use bmf_pp::util::cli::Args;
 use bmf_pp::util::timer::{fmt_duration, fmt_hhmm, Stopwatch};
+use std::path::Path;
 
-fn load_data(args: &Args) -> anyhow::Result<(Coo, usize)> {
-    if let Some(file) = args.get("file") {
-        let path = std::path::Path::new(file);
-        let coo = if file.ends_with(".mtx") {
-            loader::load_matrix_market(path)?
+/// A fully-parsed subcommand, ready to execute. Parsing consumes flags;
+/// execution does the work — so the dispatch path can reject unknown
+/// flags after parse, before anything expensive runs.
+type Action = Box<dyn FnOnce() -> anyhow::Result<()>>;
+
+/// Where the training matrix comes from (parsed flags, loaded lazily).
+enum DataSpec {
+    File { path: String, one_based: bool, k: usize },
+    Synthetic { name: String, scale: f64, seed: u64, k: Option<usize> },
+}
+
+impl DataSpec {
+    fn from_args(args: &Args) -> DataSpec {
+        if let Some(file) = args.get("file") {
+            DataSpec::File {
+                path: file.to_string(),
+                one_based: args.bool_or("one-based", false),
+                k: args.usize_or("k", 16),
+            }
         } else {
-            loader::load_csv(path, args.bool_or("one-based", false))?
-        };
-        let k = args.usize_or("k", 16);
-        Ok((coo, k))
-    } else {
-        let name = args.get_or("dataset", "movielens").to_string();
-        let scale = args.f64_or("scale", 0.002);
-        let seed = args.u64_or("seed", 42);
-        let ds = SyntheticDataset::by_name(&name, scale, seed)
-            .ok_or_else(|| anyhow::anyhow!("unknown dataset profile '{name}'"))?;
-        let k = args.usize_or("k", ds.k);
-        Ok((ds.ratings, k))
+            DataSpec::Synthetic {
+                name: args.get_or("dataset", "movielens").to_string(),
+                scale: args.f64_or("scale", 0.002),
+                seed: args.u64_or("seed", 42),
+                k: args.get("k").and_then(|v| v.parse().ok()),
+            }
+        }
+    }
+
+    fn load(&self) -> anyhow::Result<(Coo, usize)> {
+        match self {
+            DataSpec::File { path, one_based, k } => {
+                let p = Path::new(path);
+                let coo = if path.ends_with(".mtx") {
+                    loader::load_matrix_market(p)?
+                } else {
+                    loader::load_csv(p, *one_based)?
+                };
+                Ok((coo, *k))
+            }
+            DataSpec::Synthetic { name, scale, seed, k } => {
+                let ds = SyntheticDataset::by_name(name, *scale, *seed)
+                    .ok_or_else(|| anyhow::anyhow!("unknown dataset profile '{name}'"))?;
+                Ok((ds.ratings, k.unwrap_or(ds.k)))
+            }
+        }
     }
 }
 
-fn cmd_train(args: &Args) -> anyhow::Result<()> {
-    let (data, k) = load_data(args)?;
-    let (train, test) = holdout_split_covered(&data, args.f64_or("test-frac", 0.2), 7);
+fn plan_train(args: &Args) -> anyhow::Result<Action> {
+    let data = DataSpec::from_args(args);
+    let test_frac = args.f64_or("test-frac", 0.2);
     let grid = args.grid_or("grid", (1, 1));
-    let mut cfg = TrainConfig::new(k)
-        .with_grid(grid.0, grid.1)
-        .with_sweeps(args.usize_or("burnin", 8), args.usize_or("samples", 20))
-        .with_workers(args.usize_or("workers", 1))
-        .with_seed(args.u64_or("seed", 42))
-        .with_tau(args.f64_or("tau", auto_tau(&train)));
-    if args.bool_or("native", false) {
-        cfg = cfg.with_backend(BackendSpec::Native);
-    }
-    cfg = cfg.with_scheduler(match args.get_or("scheduler", "dag") {
+    let burnin = args.usize_or("burnin", 8);
+    let samples = args.usize_or("samples", 20);
+    let workers = args.usize_or("workers", 1);
+    let seed = args.u64_or("seed", 42);
+    let tau = args.get("tau").and_then(|v| v.parse::<f64>().ok());
+    let native = args.bool_or("native", false);
+    let scheduler = match args.get_or("scheduler", "dag") {
         "barrier" => SchedulerMode::Barrier,
         "dag" => SchedulerMode::Dag,
         other => anyhow::bail!("unknown scheduler '{other}' (barrier | dag)"),
-    });
-    cfg.block_parallelism = args.usize_or("block-parallelism", cfg.block_parallelism);
-    cfg.phase_sample_frac = args.f64_or("phase-sample-frac", 1.0);
+    };
+    let block_parallelism = args.get("block-parallelism").and_then(|v| v.parse().ok());
+    let phase_sample_frac = args.f64_or("phase-sample-frac", 1.0);
     let save_path = args.get("save").map(str::to_string);
-    args.check_unknown().map_err(|e| anyhow::anyhow!(e))?;
+    let save_test = args.get("save-test").map(str::to_string);
+    let metrics_path = args.get("metrics").map(str::to_string);
+    let quiet = args.bool_or("quiet", false);
 
-    println!(
-        "training D-BMF+PP: {}x{} matrix, {} ratings, K={k}, grid {}x{}",
-        train.rows,
-        train.cols,
-        train.nnz(),
-        grid.0,
-        grid.1
-    );
-    let result = PpTrainer::new(cfg).train(&train)?;
-    let rmse = result.rmse(&test);
-    println!(
-        "phases: a={} b={} c={} aggregate={} total={}",
-        fmt_duration(result.timings.a),
-        fmt_duration(result.timings.b),
-        fmt_duration(result.timings.c),
-        fmt_duration(result.timings.aggregate),
-        fmt_duration(result.timings.total)
-    );
-    println!(
-        "scheduling: compute {} / idle {} / phase-overlap {}",
-        fmt_duration(result.stats.compute_secs),
-        fmt_duration(result.stats.idle_secs),
-        fmt_duration(result.stats.overlap_secs)
-    );
-    let tp = Throughput::measure(
-        train.rows,
-        train.cols,
-        train.nnz(),
-        result.stats.sweeps / result.stats.blocks.max(1),
-        result.timings.total,
-    );
-    println!("throughput: {}", tp.format_table1());
-    println!("test RMSE = {rmse:.4}  (wall-clock {})", fmt_hhmm(result.timings.total));
-    if let Some(path) = save_path {
-        bmf_pp::coordinator::checkpoint::save(&result, std::path::Path::new(&path))?;
-        println!("checkpoint saved to {path}");
-    }
-    Ok(())
+    Ok(Box::new(move || {
+        let (data, k) = data.load()?;
+        let (train, test) = holdout_split_covered(&data, test_frac, 7);
+        let mut cfg = TrainConfig::new(k)
+            .with_grid(grid.0, grid.1)
+            .with_sweeps(burnin, samples)
+            .with_workers(workers)
+            .with_seed(seed)
+            .with_tau(tau.unwrap_or_else(|| auto_tau(&train)))
+            .with_scheduler(scheduler);
+        if native {
+            cfg = cfg.with_backend(BackendSpec::Native);
+        }
+        if let Some(bp) = block_parallelism {
+            cfg.block_parallelism = bp;
+        }
+        cfg.phase_sample_frac = phase_sample_frac;
+        // per-sweep RMSE costs an extra O(nnz·k) pass per retained sweep;
+        // only pay for it when --metrics will actually record the series
+        cfg.stream_sweep_rmse = metrics_path.is_some();
+
+        println!(
+            "training D-BMF+PP: {}x{} matrix, {} ratings, K={k}, grid {}x{}",
+            train.rows,
+            train.cols,
+            train.nnz(),
+            grid.0,
+            grid.1
+        );
+        let engine = Engine::new(&cfg.backend, cfg.block_parallelism);
+        let session = engine.submit(cfg, &train)?;
+
+        // live progress: consume the session's typed event stream
+        let mut recorder = Recorder::new();
+        let clock = Stopwatch::start();
+        for event in session.events() {
+            recorder.observe(&event);
+            if quiet {
+                continue;
+            }
+            match &event {
+                TrainEvent::PhaseStarted { phase } => {
+                    println!("[{:>6.2}s] phase ({phase}) started", clock.secs());
+                }
+                TrainEvent::BlockCompleted { node, phase, secs, sweeps } => {
+                    println!(
+                        "[{:>6.2}s] block ({},{}) done: {sweeps} sweeps in {} [phase {phase}]",
+                        clock.secs(),
+                        node.0,
+                        node.1,
+                        fmt_duration(*secs)
+                    );
+                }
+                TrainEvent::SweepSample { .. } => {} // recorded, not printed
+                TrainEvent::Finished { secs, blocks } => {
+                    println!(
+                        "[{:>6.2}s] finished: {blocks} blocks in {}",
+                        clock.secs(),
+                        fmt_duration(*secs)
+                    );
+                }
+            }
+        }
+        let result = session.wait()?;
+
+        let rmse = result.rmse(&test);
+        println!(
+            "phases: a={} b={} c={} aggregate={} total={}",
+            fmt_duration(result.timings.a),
+            fmt_duration(result.timings.b),
+            fmt_duration(result.timings.c),
+            fmt_duration(result.timings.aggregate),
+            fmt_duration(result.timings.total)
+        );
+        println!(
+            "scheduling: compute {} / idle {} / phase-overlap {}",
+            fmt_duration(result.stats.compute_secs),
+            fmt_duration(result.stats.idle_secs),
+            fmt_duration(result.stats.overlap_secs)
+        );
+        let tp = Throughput::measure(
+            train.rows,
+            train.cols,
+            train.nnz(),
+            result.stats.sweeps / result.stats.blocks.max(1),
+            result.timings.total,
+        );
+        println!("throughput: {}", tp.format_table1());
+        println!("test RMSE = {rmse:.4}  (wall-clock {})", fmt_hhmm(result.timings.total));
+        if let Some(path) = metrics_path {
+            recorder.scalar("test_rmse", rmse);
+            recorder.save(Path::new(&path))?;
+            println!("metrics saved to {path}");
+        }
+        if let Some(path) = save_path {
+            checkpoint::save(&result, Path::new(&path))?;
+            println!("checkpoint saved to {path}");
+        }
+        if let Some(path) = save_test {
+            loader::save_csv(&test, Path::new(&path))?;
+            println!("holdout set saved to {path} ({} ratings)", test.nnz());
+        }
+        Ok(())
+    }))
 }
 
-fn cmd_evaluate(args: &Args) -> anyhow::Result<()> {
+fn plan_predict(args: &Args) -> anyhow::Result<Action> {
+    let load_path = args
+        .get("load")
+        .ok_or_else(|| anyhow::anyhow!("--load <model.json> required"))?
+        .to_string();
+    let data = DataSpec::from_args(args);
+    let test_frac = args.f64_or("test-frac", 0.2);
+    let top_for = args.get("top-for").and_then(|v| v.parse::<usize>().ok());
+    let top_n = args.usize_or("top-n", 5);
+
+    Ok(Box::new(move || {
+        let model = checkpoint::load(Path::new(&load_path))?;
+        println!(
+            "model {load_path}: K={} over {} rows x {} cols",
+            model.k,
+            model.rows(),
+            model.cols()
+        );
+        let test = match &data {
+            // a ratings file (CSV or MatrixMarket) is scored as-is — e.g.
+            // the holdout written by `train --save-test`
+            DataSpec::File { .. } => data.load()?.0,
+            // otherwise reproduce train's split and score its holdout
+            DataSpec::Synthetic { .. } => holdout_split_covered(&data.load()?.0, test_frac, 7).1,
+        };
+        anyhow::ensure!(test.nnz() > 0, "no ratings to score");
+        anyhow::ensure!(
+            test.rows <= model.rows() && test.cols <= model.cols(),
+            "ratings reference row/col ids outside the model ({}x{} vs {}x{})",
+            test.rows,
+            test.cols,
+            model.rows(),
+            model.cols()
+        );
+        println!("test RMSE = {:.4} over {} ratings", model.rmse(&test), test.nnz());
+        if let Some(row) = top_for {
+            anyhow::ensure!(row < model.rows(), "--top-for row {row} out of range");
+            println!("top-{top_n} columns for row {row} (posterior-mean score):");
+            for (col, score) in model.top_n(row, top_n) {
+                println!("  col {col:<8} predicted {score:.3}");
+            }
+        }
+        Ok(())
+    }))
+}
+
+fn plan_evaluate(args: &Args) -> anyhow::Result<Action> {
     let ckpt = args
         .get("checkpoint")
         .ok_or_else(|| anyhow::anyhow!("--checkpoint <file> required"))?
         .to_string();
-    let model = bmf_pp::coordinator::checkpoint::load(std::path::Path::new(&ckpt))?;
-    let (data, _) = load_data(args)?;
-    let (_, test) = holdout_split_covered(&data, args.f64_or("test-frac", 0.2), 7);
-    args.check_unknown().map_err(|e| anyhow::anyhow!(e))?;
-    println!("checkpoint {ckpt}: K={} grid {}x{}", model.k, model.grid.0, model.grid.1);
-    println!("test RMSE = {:.4} over {} held-out ratings", model.rmse(&test), test.nnz());
-    // calibration report using factor-posterior + residual variance
-    let resid_var = 1.0 / auto_tau(&data);
-    let report = bmf_pp::metrics::calibration::coverage(&test, &[1.0, 2.0, 3.0], |r, c| {
-        let mu = model.predict(r, c);
-        let sigma = (model.predict_variance(r, c) + resid_var).sqrt();
-        (mu, sigma)
-    });
-    for (z, nominal, empirical) in report.rows {
-        println!(
-            "  ±{z:.0}σ coverage: {:.1}% (nominal {:.1}%)",
-            empirical * 100.0,
-            nominal * 100.0
-        );
+    let data = DataSpec::from_args(args);
+    let test_frac = args.f64_or("test-frac", 0.2);
+
+    Ok(Box::new(move || {
+        let model = checkpoint::load(Path::new(&ckpt))?;
+        let (full, _) = data.load()?;
+        let (_, test) = holdout_split_covered(&full, test_frac, 7);
+        println!("checkpoint {ckpt}: K={}", model.k);
+        println!("test RMSE = {:.4} over {} held-out ratings", model.rmse(&test), test.nnz());
+        // calibration report using factor-posterior + residual variance
+        let resid_var = 1.0 / auto_tau(&full);
+        let report = bmf_pp::metrics::calibration::coverage(&test, &[1.0, 2.0, 3.0], |r, c| {
+            let mu = model.predict(r, c);
+            let sigma = (model.predict_variance(r, c) + resid_var).sqrt();
+            (mu, sigma)
+        });
+        for (z, nominal, empirical) in report.rows {
+            println!(
+                "  ±{z:.0}σ coverage: {:.1}% (nominal {:.1}%)",
+                empirical * 100.0,
+                nominal * 100.0
+            );
+        }
+        Ok(())
+    }))
+}
+
+fn plan_baseline(args: &Args) -> anyhow::Result<Action> {
+    let data = DataSpec::from_args(args);
+    let test_frac = args.f64_or("test-frac", 0.2);
+    let methods: Vec<String> = args
+        .get_or("method", "fpsgd")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    // reject typos at parse time, before any method gets to train
+    for m in &methods {
+        if !bmf_pp::baselines::METHODS.contains(&m.as_str()) {
+            anyhow::bail!(
+                "unknown method '{m}' (expected one of: {})",
+                bmf_pp::baselines::METHODS.join(", ")
+            );
+        }
     }
-    Ok(())
-}
+    let epochs = args.usize_or("epochs", 20);
+    let threads = args.usize_or("threads", 4);
+    let sweeps = args.usize_or("sweeps", 30);
+    let seed = args.u64_or("seed", 42);
+    let tau = args.get("tau").and_then(|v| v.parse::<f64>().ok());
 
-fn cmd_recommend_grid(args: &Args) -> anyhow::Result<()> {
-    let name = args.get_or("dataset", "netflix").to_string();
-    let profile = bmf_pp::data::generator::DatasetProfile::by_name(&name)
-        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{name}'"))?;
-    let nodes = args.usize_or("nodes", 1024);
-    let k = args.usize_or("k", profile.k);
-    let max_aspect = args.f64_or("max-aspect", 8.0);
-    args.check_unknown().map_err(|e| anyhow::anyhow!(e))?;
-    let backend = BlockBackend::Native;
-    let model = calibrate::calibrate(&backend, k.min(32));
-    let (i, j) = bmf_pp::partition::balance::recommend_grid(
-        &model,
-        profile.paper_rows,
-        profile.paper_cols,
-        profile.paper_ratings,
-        k,
-        28,
-        nodes,
-        max_aspect,
-    );
-    println!(
-        "{name} at {nodes} nodes, K={k}: recommended grid {i}x{j} (block aspect {:.2})",
-        bmf_pp::partition::balance::block_aspect(profile.paper_rows, profile.paper_cols, i, j)
-    );
-    Ok(())
-}
-
-fn cmd_baseline(args: &Args) -> anyhow::Result<()> {
-    let (data, k) = load_data(args)?;
-    let (train, test) = holdout_split_covered(&data, args.f64_or("test-frac", 0.2), 7);
-    let method = args.get_or("method", "fpsgd").to_string();
-    let sw = Stopwatch::start();
-    let rmse = match method.as_str() {
-        "bmf" => {
-            let sweeps = args.usize_or("sweeps", 30);
-            let tau = args.f64_or("tau", auto_tau(&train));
-            let mut g = NativeGibbs::new(&train, k, tau, args.u64_or("seed", 42));
-            for _ in 0..sweeps {
-                g.sweep();
-            }
-            g.rmse(&test)
-        }
-        "nomad" | "fpsgd" => {
-            let cfg = SgdConfig::new(k)
-                .with_epochs(args.usize_or("epochs", 20))
-                .with_threads(args.usize_or("threads", 4))
-                .with_seed(args.u64_or("seed", 42));
-            let model = if method == "nomad" {
-                nomad::train(&train, &cfg)
-            } else {
-                fpsgd::train(&train, &cfg)
-            };
-            model.rmse(&test)
-        }
-        other => anyhow::bail!("unknown method '{other}' (bmf | nomad | fpsgd)"),
-    };
-    args.check_unknown().map_err(|e| anyhow::anyhow!(e))?;
-    println!("{method}: test RMSE = {rmse:.4} in {}", fmt_duration(sw.secs()));
-    Ok(())
-}
-
-fn cmd_datasets(args: &Args) -> anyhow::Result<()> {
-    let scale = args.f64_or("scale", 0.002);
-    args.check_unknown().map_err(|e| anyhow::anyhow!(e))?;
-    println!("synthetic dataset profiles at scale {scale} (paper Table 1 shape stats):");
-    for p in DatasetProfile::all() {
-        let eff_scale = match p.name {
-            "amazon" => scale * 0.015,
-            "yahoo" => scale * 0.2,
-            _ => scale,
+    Ok(Box::new(move || {
+        let (data, k) = data.load()?;
+        let (train, test) = holdout_split_covered(&data, test_frac, 7);
+        let opts = BaselineOpts {
+            k,
+            epochs,
+            threads,
+            sweeps,
+            seed,
+            tau: tau.unwrap_or_else(|| auto_tau(&train)),
         };
-        let ds = SyntheticDataset::generate(p.clone(), eff_scale, 42);
-        let st = DatasetStats::compute(&ds.ratings);
-        println!("{}  K={} (paper K={})", st.format_row(p.name), p.k, p.paper_k);
-    }
-    Ok(())
-}
-
-fn cmd_partition(args: &Args) -> anyhow::Result<()> {
-    let (data, _) = load_data(args)?;
-    let max_side = args.usize_or("max-side", 32);
-    args.check_unknown().map_err(|e| anyhow::anyhow!(e))?;
-    println!("grid analysis for {}x{} ({} ratings):", data.rows, data.cols, data.nnz());
-    println!("{:<8} {:>10} {:>14} {:>12}", "grid", "aspect", "area/circum", "max-par");
-    for (i, j) in balance::candidate_grids(max_side) {
-        if i > data.rows || j > data.cols {
-            continue;
+        // every method fits through the same Factorizer path on one engine
+        let engine = Engine::new(&BackendSpec::Native, threads);
+        for method in &methods {
+            let f = factorizer(method, &opts).expect("method names validated at parse time");
+            let out = f.fit(&engine, &train)?;
+            println!(
+                "{method}: test RMSE = {:.4} in {}",
+                out.model.rmse(&test),
+                fmt_duration(out.secs)
+            );
         }
-        let g = Grid::new(data.rows, data.cols, i, j);
-        let (_, pb, pc) = g.phase_parallelism();
-        println!(
-            "{:<8} {:>10.2} {:>14.1} {:>12}",
-            format!("{i}x{j}"),
-            balance::block_aspect(data.rows, data.cols, i, j),
-            balance::area_over_circumference(data.rows, data.cols, i, j),
-            pb.max(pc)
-        );
-    }
-    Ok(())
+        Ok(())
+    }))
 }
 
-fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+fn plan_recommend_grid(args: &Args) -> anyhow::Result<Action> {
     let name = args.get_or("dataset", "netflix").to_string();
-    let profile = DatasetProfile::by_name(&name)
-        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{name}'"))?;
+    let nodes = args.usize_or("nodes", 1024);
+    let k_flag = args.get("k").and_then(|v| v.parse::<usize>().ok());
+    let max_aspect = args.f64_or("max-aspect", 8.0);
+
+    Ok(Box::new(move || {
+        let profile = DatasetProfile::by_name(&name)
+            .ok_or_else(|| anyhow::anyhow!("unknown dataset '{name}'"))?;
+        let k = k_flag.unwrap_or(profile.k);
+        let backend = BlockBackend::Native;
+        let model = calibrate::calibrate(&backend, k.min(32));
+        let (i, j) = balance::recommend_grid(
+            &model,
+            profile.paper_rows,
+            profile.paper_cols,
+            profile.paper_ratings,
+            k,
+            28,
+            nodes,
+            max_aspect,
+        );
+        println!(
+            "{name} at {nodes} nodes, K={k}: recommended grid {i}x{j} (block aspect {:.2})",
+            balance::block_aspect(profile.paper_rows, profile.paper_cols, i, j)
+        );
+        Ok(())
+    }))
+}
+
+fn plan_datasets(args: &Args) -> anyhow::Result<Action> {
+    let scale = args.f64_or("scale", 0.002);
+    Ok(Box::new(move || {
+        println!("synthetic dataset profiles at scale {scale} (paper Table 1 shape stats):");
+        for p in DatasetProfile::all() {
+            let eff_scale = match p.name {
+                "amazon" => scale * 0.015,
+                "yahoo" => scale * 0.2,
+                _ => scale,
+            };
+            let ds = SyntheticDataset::generate(p.clone(), eff_scale, 42);
+            let st = DatasetStats::compute(&ds.ratings);
+            println!("{}  K={} (paper K={})", st.format_row(p.name), p.k, p.paper_k);
+        }
+        Ok(())
+    }))
+}
+
+fn plan_partition(args: &Args) -> anyhow::Result<Action> {
+    let data = DataSpec::from_args(args);
+    let max_side = args.usize_or("max-side", 32);
+    Ok(Box::new(move || {
+        let (data, _) = data.load()?;
+        println!("grid analysis for {}x{} ({} ratings):", data.rows, data.cols, data.nnz());
+        println!("{:<8} {:>10} {:>14} {:>12}", "grid", "aspect", "area/circum", "max-par");
+        for (i, j) in balance::candidate_grids(max_side) {
+            if i > data.rows || j > data.cols {
+                continue;
+            }
+            let g = Grid::new(data.rows, data.cols, i, j);
+            let (_, pb, pc) = g.phase_parallelism();
+            println!(
+                "{:<8} {:>10.2} {:>14.1} {:>12}",
+                format!("{i}x{j}"),
+                balance::block_aspect(data.rows, data.cols, i, j),
+                balance::area_over_circumference(data.rows, data.cols, i, j),
+                pb.max(pc)
+            );
+        }
+        Ok(())
+    }))
+}
+
+fn plan_simulate(args: &Args) -> anyhow::Result<Action> {
+    let name = args.get_or("dataset", "netflix").to_string();
     let (gi, gj) = args.grid_or("grid", (4, 4));
     let max_nodes = args.usize_or("max-nodes", 16384);
     let sweeps = args.usize_or("sweeps", 28);
-    let k = args.usize_or("k", profile.paper_k);
-    args.check_unknown().map_err(|e| anyhow::anyhow!(e))?;
+    let k_flag = args.get("k").and_then(|v| v.parse::<usize>().ok());
 
-    let backend = BlockBackend::Native;
-    let model = calibrate::calibrate(&backend, k.min(32));
-    let grid = Grid::new(profile.paper_rows, profile.paper_cols, gi, gj);
-    let nnz = sim::uniform_block_nnz(&grid, profile.paper_ratings);
+    Ok(Box::new(move || {
+        let profile = DatasetProfile::by_name(&name)
+            .ok_or_else(|| anyhow::anyhow!("unknown dataset '{name}'"))?;
+        let k = k_flag.unwrap_or(profile.paper_k);
+        let backend = BlockBackend::Native;
+        let model = calibrate::calibrate(&backend, k.min(32));
+        let grid = Grid::new(profile.paper_rows, profile.paper_cols, gi, gj);
+        let nnz = sim::uniform_block_nnz(&grid, profile.paper_ratings);
 
-    println!(
-        "strong scaling, {name} ({}x{}, {} ratings), K={k}, grid {gi}x{gj}:",
-        profile.paper_rows, profile.paper_cols, profile.paper_ratings
-    );
-    let mut pts = Vec::new();
-    for p in sim::node_sweep(&grid, max_nodes) {
-        let r = sim::simulate_pp(&model, &grid, &nnz, k, sweeps, sweeps, p);
-        pts.push((p, r.total));
         println!(
-            "  nodes={p:<7} wall={:<12} (a={} b={} c={})",
-            fmt_hhmm(r.total),
-            fmt_hhmm(r.phase_a),
-            fmt_hhmm(r.phase_b),
-            fmt_hhmm(r.phase_c)
+            "strong scaling, {name} ({}x{}, {} ratings), K={k}, grid {gi}x{gj}:",
+            profile.paper_rows, profile.paper_cols, profile.paper_ratings
         );
-    }
-    let front = sim::pareto_front(&pts);
-    println!(
-        "pareto: {}",
-        front
-            .iter()
-            .map(|(p, t)| format!("{p}@{}", fmt_hhmm(*t)))
-            .collect::<Vec<_>>()
-            .join(" ")
-    );
-    Ok(())
+        let mut pts = Vec::new();
+        for p in sim::node_sweep(&grid, max_nodes) {
+            let r = sim::simulate_pp(&model, &grid, &nnz, k, sweeps, sweeps, p);
+            pts.push((p, r.total));
+            println!(
+                "  nodes={p:<7} wall={:<12} (a={} b={} c={})",
+                fmt_hhmm(r.total),
+                fmt_hhmm(r.phase_a),
+                fmt_hhmm(r.phase_b),
+                fmt_hhmm(r.phase_c)
+            );
+        }
+        let front = sim::pareto_front(&pts);
+        println!(
+            "pareto: {}",
+            front
+                .iter()
+                .map(|(p, t)| format!("{p}@{}", fmt_hhmm(*t)))
+                .collect::<Vec<_>>()
+                .join(" ")
+        );
+        Ok(())
+    }))
 }
 
 fn main() {
@@ -296,23 +478,38 @@ fn main() {
             std::process::exit(2);
         }
     };
-    let result = match args.subcommand.as_deref() {
-        Some("train") => cmd_train(&args),
-        Some("baseline") => cmd_baseline(&args),
-        Some("datasets") => cmd_datasets(&args),
-        Some("partition") => cmd_partition(&args),
-        Some("simulate") => cmd_simulate(&args),
-        Some("evaluate") => cmd_evaluate(&args),
-        Some("recommend-grid") => cmd_recommend_grid(&args),
+    // stage 1: parse — each plan_* consumes exactly the flags it accepts
+    let planned = match args.subcommand.as_deref() {
+        Some("train") => plan_train(&args),
+        Some("predict") => plan_predict(&args),
+        Some("baseline") => plan_baseline(&args),
+        Some("datasets") => plan_datasets(&args),
+        Some("partition") => plan_partition(&args),
+        Some("simulate") => plan_simulate(&args),
+        Some("evaluate") => plan_evaluate(&args),
+        Some("recommend-grid") => plan_recommend_grid(&args),
         other => {
             eprintln!(
-                "usage: bmf-pp <train|baseline|datasets|partition|simulate|evaluate|recommend-grid> [--flags]\n\
+                "usage: bmf-pp <train|predict|baseline|datasets|partition|simulate|evaluate|recommend-grid> [--flags]\n\
                  (got: {other:?}) — see crate docs for flag reference"
             );
             std::process::exit(2);
         }
     };
-    if let Err(e) = result {
+    let action = match planned {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    // stage 2: one shared unknown-flag check, before any work runs
+    if let Err(e) = args.check_unknown() {
+        eprintln!("argument error: {e}");
+        std::process::exit(2);
+    }
+    // stage 3: execute
+    if let Err(e) = action() {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }

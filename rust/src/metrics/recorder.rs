@@ -32,6 +32,28 @@ impl Recorder {
         self.series.get(name).map(|v| v.as_slice())
     }
 
+    /// Fold one live [`TrainEvent`](crate::coordinator::TrainEvent) into
+    /// the recorded series — point a session's event stream at a recorder
+    /// and the learning curve / block timeline accumulate as the run
+    /// executes instead of being reconstructed post-hoc.
+    pub fn observe(&mut self, event: &crate::coordinator::TrainEvent) {
+        use crate::coordinator::TrainEvent;
+        match event {
+            TrainEvent::SweepSample { node, sweep, rmse } => {
+                self.point(&format!("sweep_rmse_{}x{}", node.0, node.1), *sweep as f64, *rmse);
+            }
+            TrainEvent::BlockCompleted { secs, .. } => {
+                let idx = self.get_series("block_secs").map_or(0, |s| s.len());
+                self.point("block_secs", idx as f64, *secs);
+            }
+            TrainEvent::Finished { secs, blocks } => {
+                self.scalar("train_secs", *secs);
+                self.scalar("blocks", *blocks as f64);
+            }
+            TrainEvent::PhaseStarted { .. } => {}
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         let series = Json::Obj(
             self.series
@@ -77,6 +99,26 @@ mod tests {
             Some(0.90)
         );
         assert_eq!(back.get("series").unwrap().get("rmse").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn observes_train_events() {
+        use crate::coordinator::{PpPhase, TrainEvent};
+        let mut r = Recorder::new();
+        r.observe(&TrainEvent::PhaseStarted { phase: PpPhase::A });
+        r.observe(&TrainEvent::SweepSample { node: (0, 0), sweep: 3, rmse: 0.9 });
+        r.observe(&TrainEvent::SweepSample { node: (0, 0), sweep: 4, rmse: 0.8 });
+        r.observe(&TrainEvent::BlockCompleted {
+            node: (0, 0),
+            phase: PpPhase::A,
+            secs: 1.5,
+            sweeps: 5,
+        });
+        r.observe(&TrainEvent::Finished { secs: 2.0, blocks: 1 });
+        assert_eq!(r.get_series("sweep_rmse_0x0").unwrap().len(), 2);
+        assert_eq!(r.get_series("block_secs").unwrap(), &[(0.0, 1.5)]);
+        assert_eq!(r.get_scalar("train_secs"), Some(2.0));
+        assert_eq!(r.get_scalar("blocks"), Some(1.0));
     }
 
     #[test]

@@ -1,10 +1,13 @@
 //! Posterior representations for Posterior Propagation: row-wise Gaussian
 //! marginals over factor rows, the combine/divide algebra used when
-//! propagating and aggregating them, and running moment estimators that
-//! turn MCMC samples into those Gaussians.
+//! propagating and aggregating them, running moment estimators that turn
+//! MCMC samples into those Gaussians, and the servable [`PosteriorModel`]
+//! a training run ultimately produces.
 
 pub mod gaussian;
+pub mod model;
 pub mod moments;
 
 pub use gaussian::RowGaussians;
+pub use model::PosteriorModel;
 pub use moments::RunningMoments;

@@ -1,0 +1,202 @@
+//! The servable artifact of a factorization run.
+//!
+//! [`PosteriorModel`] is what training *produces* and serving *consumes*:
+//! the aggregated per-row Gaussian posteriors over both factor sides plus
+//! the global rating mean — nothing about how the run was scheduled or how
+//! long it took (that lives in `coordinator::trainer::TrainResult`).
+//! Checkpoints persist exactly this type, the `bmf-pp predict` subcommand
+//! loads exactly this type, and the baseline comparators convert their
+//! point estimates into it so every method is evaluated through one
+//! prediction path.
+
+use super::RowGaussians;
+use crate::data::sparse::Coo;
+use crate::linalg::Cholesky;
+use crate::metrics::rmse::{rmse_factors, rmse_with};
+
+/// A trained factorization model: posterior marginals over the factor rows
+/// (means + precisions), f32 mean mirrors for fast prediction, and the
+/// global rating mean (training is mean-centred; predictions add it back).
+#[derive(Debug, Clone)]
+pub struct PosteriorModel {
+    /// Latent dimension.
+    pub k: usize,
+    /// Global rating mean.
+    pub global_mean: f64,
+    /// Row-side posterior marginals (n_rows × k Gaussians).
+    pub u_post: RowGaussians,
+    /// Column-side posterior marginals (n_cols × k Gaussians).
+    pub v_post: RowGaussians,
+    /// Posterior means as f32 factors (rows×k) for fast prediction.
+    pub u_mean: Vec<f32>,
+    /// Posterior means as f32 factors (cols×k) for fast prediction.
+    pub v_mean: Vec<f32>,
+}
+
+impl PosteriorModel {
+    /// Build from the two aggregated posterior sides.
+    pub fn new(u_post: RowGaussians, v_post: RowGaussians, global_mean: f64) -> PosteriorModel {
+        assert_eq!(u_post.k, v_post.k, "factor sides must share the latent dimension");
+        let u_mean: Vec<f32> = u_post.mean.iter().map(|&x| x as f32).collect();
+        let v_mean: Vec<f32> = v_post.mean.iter().map(|&x| x as f32).collect();
+        PosteriorModel { k: u_post.k, global_mean, u_post, v_post, u_mean, v_mean }
+    }
+
+    /// Wrap a point estimate (e.g. an SGD/ALS baseline) as a degenerate
+    /// posterior: means from the factors, precision `precision`·I per row.
+    /// A large `precision` makes `predict_variance` report near-zero
+    /// factor uncertainty, which is the honest statement for a MAP fit.
+    pub fn from_factors(
+        k: usize,
+        u: &[f32],
+        v: &[f32],
+        global_mean: f64,
+        precision: f64,
+    ) -> PosteriorModel {
+        assert!(k > 0, "k must be positive");
+        assert_eq!(u.len() % k, 0, "u length must be a multiple of k");
+        assert_eq!(v.len() % k, 0, "v length must be a multiple of k");
+        let (n, d) = (u.len() / k, v.len() / k);
+        let mut u_post = RowGaussians::standard(n, k, precision);
+        u_post.mean = u.iter().map(|&x| x as f64).collect();
+        let mut v_post = RowGaussians::standard(d, k, precision);
+        v_post.mean = v.iter().map(|&x| x as f64).collect();
+        PosteriorModel::new(u_post, v_post, global_mean)
+    }
+
+    /// Number of row entities (users / compounds / …).
+    pub fn rows(&self) -> usize {
+        self.u_post.n
+    }
+
+    /// Number of column entities (items / targets / …).
+    pub fn cols(&self) -> usize {
+        self.v_post.n
+    }
+
+    /// Posterior-mean prediction for one cell.
+    pub fn predict(&self, row: usize, col: usize) -> f64 {
+        self.global_mean
+            + (0..self.k)
+                .map(|j| (self.u_mean[row * self.k + j] * self.v_mean[col * self.k + j]) as f64)
+                .sum::<f64>()
+    }
+
+    /// RMSE of posterior-mean predictions on a held-out set.
+    pub fn rmse(&self, test: &Coo) -> f64 {
+        if self.global_mean == 0.0 {
+            rmse_factors(&self.u_mean, &self.v_mean, self.k, test)
+        } else {
+            rmse_with(test, |r, c| self.predict(r, c))
+        }
+    }
+
+    /// Predictive variance of one cell from the factor posteriors
+    /// (delta-method approximation: uᵀΣ_v u + vᵀΣ_u v + tr(Σ_u Σ_v)).
+    pub fn predict_variance(&self, row: usize, col: usize) -> f64 {
+        let k = self.k;
+        let su = self.u_post.row_prec(row);
+        let sv = self.v_post.row_prec(col);
+        let cu = Cholesky::new(&su).map(|c| c.inverse());
+        let cv = Cholesky::new(&sv).map(|c| c.inverse());
+        let (cu, cv) = match (cu, cv) {
+            (Ok(a), Ok(b)) => (a, b),
+            _ => return f64::NAN,
+        };
+        let u: Vec<f64> = (0..k).map(|j| self.u_mean[row * k + j] as f64).collect();
+        let v: Vec<f64> = (0..k).map(|j| self.v_mean[col * k + j] as f64).collect();
+        let vsv = cv.matvec(&u);
+        let usu = cu.matvec(&v);
+        let term1: f64 = u.iter().zip(&vsv).map(|(a, b)| a * b).sum();
+        let term2: f64 = v.iter().zip(&usu).map(|(a, b)| a * b).sum();
+        let term3: f64 = (0..k).map(|a| (0..k).map(|b| cu[(a, b)] * cv[(b, a)]).sum::<f64>()).sum();
+        term1 + term2 + term3
+    }
+
+    /// The `n` columns with the highest posterior-mean prediction for
+    /// `row`, best first — the serving-side ranking primitive.
+    pub fn top_n(&self, row: usize, n: usize) -> Vec<(usize, f64)> {
+        self.top_n_where(row, n, |_| true)
+    }
+
+    /// [`PosteriorModel::top_n`] restricted to columns where `keep` holds
+    /// (e.g. skip already-rated items).
+    pub fn top_n_where(
+        &self,
+        row: usize,
+        n: usize,
+        keep: impl Fn(usize) -> bool,
+    ) -> Vec<(usize, f64)> {
+        let mut scored: Vec<(usize, f64)> = (0..self.cols())
+            .filter(|&c| keep(c))
+            .map(|c| (c, self.predict(row, c)))
+            .collect();
+        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+        scored.truncate(n);
+        scored
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point_model() -> PosteriorModel {
+        // 2 rows × 3 cols, k = 2
+        let u = vec![1.0f32, 0.0, 0.0, 1.0];
+        let v = vec![1.0f32, 2.0, 3.0, -1.0, 0.5, 0.5];
+        PosteriorModel::from_factors(2, &u, &v, 1.5, 1e6)
+    }
+
+    #[test]
+    fn from_factors_predicts_dot_plus_mean() {
+        let m = point_model();
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 3);
+        // row 0 picks the first factor coordinate
+        assert!((m.predict(0, 0) - (1.5 + 1.0)).abs() < 1e-9);
+        assert!((m.predict(0, 1) - (1.5 + 3.0)).abs() < 1e-9);
+        // row 1 picks the second coordinate
+        assert!((m.predict(1, 1) - (1.5 - 1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn point_model_has_near_zero_variance() {
+        let m = point_model();
+        let var = m.predict_variance(0, 0);
+        assert!(var.is_finite() && var >= 0.0 && var < 1e-4, "var={var}");
+    }
+
+    #[test]
+    fn top_n_orders_by_prediction() {
+        let m = point_model();
+        // row 0 scores columns by v[c][0]: col1 (3.0) > col2 (0.5) > col0 (1.0)?
+        // v rows: col0=(1,2) col1=(3,-1) col2=(0.5,0.5) → row0 dot = 1, 3, 0.5
+        let top = m.top_n(0, 2);
+        assert_eq!(top.len(), 2);
+        assert_eq!(top[0].0, 1);
+        assert_eq!(top[1].0, 0);
+        assert!(top[0].1 >= top[1].1);
+    }
+
+    #[test]
+    fn top_n_where_filters() {
+        let m = point_model();
+        let top = m.top_n_where(0, 3, |c| c != 1);
+        assert_eq!(top.len(), 2);
+        assert!(top.iter().all(|&(c, _)| c != 1));
+        assert_eq!(top[0].0, 0); // next best after excluded col 1
+    }
+
+    #[test]
+    fn rmse_of_exact_fit_is_zero() {
+        let m = point_model();
+        let mut test = Coo::new(2, 3);
+        for r in 0..2 {
+            for c in 0..3 {
+                test.push(r, c, m.predict(r, c) as f32);
+            }
+        }
+        assert!(m.rmse(&test) < 1e-6);
+    }
+}

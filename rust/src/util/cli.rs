@@ -86,7 +86,9 @@ impl Args {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
-    /// Error if any provided flag was never consumed by `get`/`has`.
+    /// Error if any provided flag was never consumed by `get`/`has`. The
+    /// message lists the flags this command did consult, so the caller
+    /// sees what was accepted next to what was rejected.
     pub fn check_unknown(&self) -> Result<(), String> {
         let seen = self.seen.borrow();
         let unknown: Vec<_> =
@@ -94,7 +96,13 @@ impl Args {
         if unknown.is_empty() {
             Ok(())
         } else {
-            Err(format!("unknown flags: {}", unknown.join(", ")))
+            let known: Vec<_> = seen.iter().map(|k| format!("--{k}")).collect();
+            let hint = if known.is_empty() {
+                "this command takes no flags".to_string()
+            } else {
+                format!("known flags: {}", known.join(", "))
+            };
+            Err(format!("unknown flags: {} ({hint})", unknown.join(", ")))
         }
     }
 
@@ -145,6 +153,16 @@ mod tests {
         assert!(a.check_unknown().is_err());
         let _ = a.get("oops");
         assert!(a.check_unknown().is_ok());
+    }
+
+    #[test]
+    fn unknown_flag_error_lists_known_flags() {
+        let a = parse(&["x", "--k", "3", "--oops", "1"]);
+        let _ = a.usize_or("k", 0);
+        let _ = a.f64_or("tau", 1.0); // consulted but absent — still "known"
+        let err = a.check_unknown().unwrap_err();
+        assert!(err.contains("--oops") || err.contains("oops"), "{err}");
+        assert!(err.contains("--k") && err.contains("--tau"), "{err}");
     }
 
     #[test]

@@ -192,6 +192,76 @@ fn cli_binary_smoke() {
 }
 
 #[test]
+fn cli_train_save_predict_roundtrip_reports_identical_rmse() {
+    // acceptance path: `train --save m.json --save-test t.csv` followed by
+    // `predict --load m.json --file t.csv` must report the same holdout
+    // RMSE the training run printed (CSV and JSON round-trips are exact)
+    fn rmse_line(stdout: &str) -> String {
+        stdout
+            .lines()
+            .find(|l| l.starts_with("test RMSE = "))
+            .unwrap_or_else(|| panic!("no RMSE line in:\n{stdout}"))
+            .split_whitespace()
+            .nth(3)
+            .unwrap()
+            .to_string()
+    }
+    let bin = env!("CARGO_BIN_EXE_bmf-pp");
+    let dir = std::env::temp_dir();
+    let model = dir.join(format!("bmfpp_cli_model_{}.json", std::process::id()));
+    let holdout = dir.join(format!("bmfpp_cli_holdout_{}.csv", std::process::id()));
+
+    let out = std::process::Command::new(bin)
+        .args([
+            "train",
+            "--dataset",
+            "movielens",
+            "--scale",
+            "0.0015",
+            "--grid",
+            "2x2",
+            "--burnin",
+            "3",
+            "--samples",
+            "6",
+            "--native",
+            "--quiet",
+            "--save",
+            model.to_str().unwrap(),
+            "--save-test",
+            holdout.to_str().unwrap(),
+        ])
+        .output()
+        .expect("run train");
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let train_rmse = rmse_line(&String::from_utf8_lossy(&out.stdout));
+
+    let out = std::process::Command::new(bin)
+        .args(["predict", "--load", model.to_str().unwrap(), "--file", holdout.to_str().unwrap()])
+        .output()
+        .expect("run predict");
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let predict_rmse = rmse_line(&String::from_utf8_lossy(&out.stdout));
+
+    assert_eq!(train_rmse, predict_rmse, "train-side vs predict-side RMSE");
+    std::fs::remove_file(model).ok();
+    std::fs::remove_file(holdout).ok();
+}
+
+#[test]
+fn cli_rejects_unknown_flags_listing_known_ones() {
+    let bin = env!("CARGO_BIN_EXE_bmf-pp");
+    let out = std::process::Command::new(bin)
+        .args(["datasets", "--scalee", "0.001"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("scalee"), "{stderr}");
+    assert!(stderr.contains("--scale"), "should list known flags: {stderr}");
+}
+
+#[test]
 fn dag_and_barrier_schedulers_agree_bitwise_end_to_end() {
     // the full pipeline (centering → grid split → DAG → aggregation →
     // concat) must be schedule-invariant down to the last bit
