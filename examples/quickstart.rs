@@ -50,6 +50,7 @@ fn main() -> anyhow::Result<()> {
                 println!("  finished: {blocks} blocks in {secs:.2}s")
             }
             TrainEvent::SweepSample { .. } => {} // per-sweep RMSE, see movielens_e2e
+            TrainEvent::ChunkExchanged { .. } => {} // pipelined sweeps only
         }
     }
     let result = session.wait()?;

@@ -51,8 +51,12 @@ fn independent_blocks_rmse(
                 workers: 1,
                 ridge: 1e-2,
                 seed: 7 + (i * 31 + j) as u64,
+                sweep: bmf_pp::coordinator::SweepMode::Lockstep,
+                chunk_rows: 256,
+                staleness: 0,
             };
-            let (post, _) = run_block(&backend, &data, &cfg, None, None, None).unwrap();
+            let (post, _) =
+                run_block(&backend, &data, &cfg, None, None, Default::default()).unwrap();
             let (r0, _) = g.row_range(i);
             let (c0, _) = g.col_range(j);
             for r in 0..post.u.n {

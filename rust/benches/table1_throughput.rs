@@ -9,7 +9,7 @@
 mod common;
 
 use bmf_pp::coordinator::config::auto_tau;
-use bmf_pp::coordinator::{Engine, TrainConfig};
+use bmf_pp::coordinator::{Engine, SweepMode, TrainConfig};
 use bmf_pp::data::stats::DatasetStats;
 use bmf_pp::metrics::throughput::Throughput;
 
@@ -70,5 +70,54 @@ fn main() {
     common::hr();
     println!("expected shape: amazon & movielens lead rows/s (small K), movielens leads");
     println!("ratings/s (dense rows, small K); netflix/yahoo pay the K=100→{{16}} row cost.");
+
+    // ---- within-block sweep pipelining: lockstep vs GASPI-style ----
+    // 4 shard workers on one block; the pipelined run must show real
+    // compute/communication overlap (V-side compute while the U side is
+    // still sampling/publishing), which lockstep cannot have by definition
+    println!();
+    println!("WITHIN-BLOCK SWEEPS — lockstep vs pipelined (movielens, 4 shard workers)");
+    common::hr();
+    let (profile, train, _test) = common::bench_dataset("movielens");
+    // pinned to the native backend: pipelined sweeps are native-only (on
+    // HLO they fall back to lockstep, which would void the overlap assert)
+    let base = TrainConfig::new(profile.k)
+        .with_backend(bmf_pp::coordinator::BackendSpec::Native)
+        .with_sweeps(4, 8)
+        .with_workers(4)
+        .with_tau(auto_tau(&train))
+        .with_seed(3);
+    let engine = Engine::new(&base.backend, base.block_parallelism);
+    let mut sweep_rows = Vec::new();
+    for (label, mode, tau_chunks) in [
+        ("lockstep", SweepMode::Lockstep, 0usize),
+        ("pipelined", SweepMode::Pipelined, 2),
+    ] {
+        let cfg = base
+            .clone()
+            .with_sweep_mode(mode)
+            .with_chunk_rows(16)
+            .with_staleness(tau_chunks);
+        engine.train(&cfg, &train).expect("warmup");
+        let res = engine.train(&cfg, &train).expect("train");
+        println!(
+            "{label:<10} wall={:<8.3}s compute={:<8.3}s sweep-overlap={:.4}s (tau={tau_chunks})",
+            res.timings.total, res.stats.compute_secs, res.stats.comm_overlap_secs
+        );
+        sweep_rows.push((format!("{label}_wall_secs"), res.timings.total));
+        sweep_rows.push((format!("{label}_overlap_secs"), res.stats.comm_overlap_secs));
+        if mode == SweepMode::Lockstep {
+            assert_eq!(
+                res.stats.comm_overlap_secs, 0.0,
+                "lockstep sweeps cannot overlap compute with the exchange"
+            );
+        } else {
+            assert!(
+                res.stats.comm_overlap_secs > 0.0,
+                "pipelined sweeps must measure compute/communication overlap"
+            );
+        }
+    }
+    results.extend(sweep_rows);
     common::save_json("table1.json", &results);
 }

@@ -13,18 +13,23 @@ use crate::rng::Rng;
 /// ALS hyperparameters.
 #[derive(Debug, Clone, Copy)]
 pub struct AlsConfig {
+    /// Latent dimension.
     pub k: usize,
     /// Ridge weight λ (per-observation scaling, Zhou et al. 2008 style).
     pub lambda: f64,
+    /// Alternating sweeps (each updates both sides).
     pub sweeps: usize,
+    /// RNG seed.
     pub seed: u64,
 }
 
 impl AlsConfig {
+    /// Defaults for latent dimension `k`.
     pub fn new(k: usize) -> AlsConfig {
         AlsConfig { k, lambda: 0.05, sweeps: 12, seed: 42 }
     }
 
+    /// Set the alternating sweep count.
     pub fn with_sweeps(mut self, sweeps: usize) -> Self {
         self.sweeps = sweeps;
         self

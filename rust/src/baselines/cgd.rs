@@ -11,16 +11,20 @@ use crate::rng::Rng;
 /// CCD++ hyperparameters.
 #[derive(Debug, Clone, Copy)]
 pub struct CgdConfig {
+    /// Latent dimension.
     pub k: usize,
+    /// Ridge weight λ.
     pub lambda: f64,
     /// Outer passes over all K dimensions.
     pub outer_iters: usize,
     /// Inner refinements of each rank-one subproblem.
     pub inner_iters: usize,
+    /// RNG seed.
     pub seed: u64,
 }
 
 impl CgdConfig {
+    /// Defaults for latent dimension `k`.
     pub fn new(k: usize) -> CgdConfig {
         CgdConfig { k, lambda: 0.05, outer_iters: 6, inner_iters: 2, seed: 42 }
     }

@@ -108,9 +108,13 @@ impl Factorizer for Cgd {
 /// Plain (unblocked) BPMF Gibbs — the paper's "BMF" column — as a
 /// [`Factorizer`]. The chain's final factor state is the point estimate.
 pub struct PlainBmf {
+    /// Latent dimension.
     pub k: usize,
+    /// Residual noise precision.
     pub tau: f64,
+    /// Gibbs sweeps to run.
     pub sweeps: usize,
+    /// RNG seed.
     pub seed: u64,
 }
 
@@ -132,11 +136,17 @@ impl Factorizer for PlainBmf {
 
 /// Common knobs the CLI maps onto per-method configs.
 pub struct BaselineOpts {
+    /// Latent dimension.
     pub k: usize,
+    /// SGD-family passes over the data.
     pub epochs: usize,
+    /// Intra-method worker threads.
     pub threads: usize,
+    /// MCMC sweeps (bmf / sgld / als / cgd iterations).
     pub sweeps: usize,
+    /// RNG seed.
     pub seed: u64,
+    /// Residual noise precision for the Bayesian methods.
     pub tau: f64,
 }
 

@@ -5,6 +5,7 @@ use crate::rng::{normal::standard_normal_vec, Rng};
 /// Hyperparameters for SGD matrix factorization.
 #[derive(Debug, Clone, Copy)]
 pub struct SgdConfig {
+    /// Latent dimension.
     pub k: usize,
     /// Initial learning rate.
     pub lr: f32,
@@ -14,30 +15,37 @@ pub struct SgdConfig {
     pub epochs: usize,
     /// Per-epoch learning-rate decay factor.
     pub decay: f32,
+    /// Worker threads.
     pub threads: usize,
+    /// RNG seed.
     pub seed: u64,
 }
 
 impl SgdConfig {
+    /// Defaults for latent dimension `k`.
     pub fn new(k: usize) -> SgdConfig {
         SgdConfig { k, lr: 0.05, reg: 0.05, epochs: 20, decay: 0.9, threads: 4, seed: 42 }
     }
 
+    /// Set the number of passes over the data.
     pub fn with_epochs(mut self, epochs: usize) -> Self {
         self.epochs = epochs;
         self
     }
 
+    /// Set the worker thread count.
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads;
         self
     }
 
+    /// Set the RNG seed.
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
     }
 
+    /// Learning rate after `epoch` decay steps.
     pub fn lr_at_epoch(&self, epoch: usize) -> f32 {
         self.lr * self.decay.powi(epoch as i32)
     }
@@ -94,17 +102,24 @@ pub fn standardization(data: &crate::data::sparse::Coo) -> (f32, f32) {
 /// Result of an SGD baseline run.
 #[derive(Debug, Clone)]
 pub struct SgdModel {
+    /// Latent dimension.
     pub k: usize,
+    /// Global rating mean (added back at prediction).
     pub mean: f32,
     /// Rating scale the factors were trained in (predictions multiply back).
     pub scale: f32,
+    /// Row factors (rows × k).
     pub u: Vec<f32>,
+    /// Column factors (cols × k).
     pub v: Vec<f32>,
+    /// Wall-clock seconds of the fit.
     pub secs: f64,
+    /// Epochs actually run.
     pub epochs_run: usize,
 }
 
 impl SgdModel {
+    /// Point prediction for one cell.
     pub fn predict(&self, row: usize, col: usize) -> f64 {
         let mut dot = 0.0f64;
         for j in 0..self.k {
@@ -113,6 +128,7 @@ impl SgdModel {
         self.mean as f64 + self.scale as f64 * dot
     }
 
+    /// RMSE of point predictions on a held-out set.
     pub fn rmse(&self, test: &crate::data::sparse::Coo) -> f64 {
         crate::metrics::rmse::rmse_with(test, |r, c| self.predict(r, c))
     }

@@ -12,23 +12,28 @@ use crate::rng::{normal::StdNormal, Rng};
 /// SGLD hyperparameters.
 #[derive(Debug, Clone, Copy)]
 pub struct SgldConfig {
+    /// Latent dimension.
     pub k: usize,
     /// Initial step size ε₀.
     pub eps0: f64,
     /// Polynomial decay: ε_t = ε₀ (1 + t/t0)^(−κ).
     pub kappa: f64,
+    /// Decay offset t0.
     pub t0: f64,
     /// Gaussian prior precision on factors.
     pub prior_prec: f64,
     /// Residual noise precision τ (likelihood weight).
     pub tau: f64,
+    /// Passes over the data.
     pub epochs: usize,
     /// Fraction of the chain (from the end) averaged as the posterior mean.
     pub average_frac: f64,
+    /// RNG seed.
     pub seed: u64,
 }
 
 impl SgldConfig {
+    /// Defaults for latent dimension `k`.
     pub fn new(k: usize) -> SgldConfig {
         SgldConfig {
             k,
@@ -43,6 +48,7 @@ impl SgldConfig {
         }
     }
 
+    /// Set the number of passes over the data.
     pub fn with_epochs(mut self, epochs: usize) -> Self {
         self.epochs = epochs;
         self

@@ -33,9 +33,12 @@ fn measure(backend: &BlockBackend, n: usize, d: usize, nnz: usize, k: usize, see
         workers: 1,
         ridge: 1e-2,
         seed,
+        sweep: crate::coordinator::SweepMode::Lockstep,
+        chunk_rows: 256,
+        staleness: 0,
     };
     let (_, stats) =
-        run_block(backend, &data, &cfg, None, None, None).expect("calibration run");
+        run_block(backend, &data, &cfg, None, None, Default::default()).expect("calibration run");
     stats.secs / stats.sweeps as f64
 }
 

@@ -37,6 +37,7 @@ pub struct ClusterModel {
     pub beta: f64,
     /// Max useful nodes inside one block (paper: scaling saturates ~128).
     pub within_block_cap: usize,
+    /// Which exchange implementation the within-block comm term models.
     pub comm: CommBackend,
     /// GASPI: fraction of communication hidden behind compute (0..1).
     pub overlap: f64,
@@ -60,8 +61,11 @@ impl Default for ClusterModel {
 /// One block's workload for the simulator.
 #[derive(Debug, Clone, Copy)]
 pub struct BlockCost {
+    /// Block rows.
     pub rows: usize,
+    /// Block columns.
     pub cols: usize,
+    /// Observations in the block.
     pub nnz: usize,
 }
 

@@ -7,7 +7,8 @@
 //! that align with the phase parallelism (P = I+J-2, P = (I-1)(J-1))
 //! avoid ragged waves — the run-time "drops" the paper observes.
 
-use super::model::{BlockCost, ClusterModel};
+use super::model::{BlockCost, ClusterModel, CommBackend};
+use crate::coordinator::config::SweepMode;
 use crate::partition::Grid;
 
 /// Scheduling regime the simulator models.
@@ -24,9 +25,13 @@ pub enum ScheduleMode {
 /// Simulated wall-clock of a full PP run.
 #[derive(Debug, Clone, Copy)]
 pub struct SimResult {
+    /// Wall-clock of phase (a).
     pub phase_a: f64,
+    /// Wall-clock of phase (b) past phase (a).
     pub phase_b: f64,
+    /// Wall-clock of phase (c) past phase (b).
     pub phase_c: f64,
+    /// Total simulated wall-clock.
     pub total: f64,
     /// Aggregate node-seconds actually consumed (efficiency metric).
     pub node_secs: f64,
@@ -84,6 +89,52 @@ fn simulate_phase(
         wall += wave_time;
     }
     (wall, node_secs)
+}
+
+/// Derive the cluster model a within-block sweep regime implies:
+/// lockstep half-sweeps pay the synchronizing MPI allgather after every
+/// half-sweep; pipelined half-sweeps publish `chunks` chunks one-sidedly
+/// (GASPI-style) while sampling continues, so all but the pipeline-drain
+/// fraction (the last chunk, which has no compute left to hide behind)
+/// of each exchange overlaps computation. Used so the Table-3 / Fig-4/5
+/// projections reflect the coordinator's `SweepMode`.
+pub fn model_for_sweep(base: &ClusterModel, sweep: SweepMode, chunks: usize) -> ClusterModel {
+    let mut m = *base;
+    match sweep {
+        SweepMode::Lockstep => m.comm = CommBackend::Mpi,
+        SweepMode::Pipelined => {
+            m.comm = CommBackend::Gaspi;
+            m.overlap = 1.0 - 1.0 / chunks.max(1) as f64;
+        }
+    }
+    m
+}
+
+/// [`simulate_pp_mode`] with the exchange model of a sweep regime applied
+/// (see [`model_for_sweep`]).
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_pp_sweep(
+    model: &ClusterModel,
+    grid: &Grid,
+    block_nnz: &[Vec<usize>],
+    k: usize,
+    sweeps_a: usize,
+    sweeps_bc: usize,
+    p: usize,
+    mode: ScheduleMode,
+    sweep: SweepMode,
+    chunks: usize,
+) -> SimResult {
+    simulate_pp_mode(
+        &model_for_sweep(model, sweep, chunks),
+        grid,
+        block_nnz,
+        k,
+        sweeps_a,
+        sweeps_bc,
+        p,
+        mode,
+    )
 }
 
 /// Simulate a full PP run over a partitioned workload under `mode`.
@@ -454,6 +505,55 @@ mod tests {
         let dag = simulate_pp_mode(&m, &g, &nnz, 16, 20, 20, 1, ScheduleMode::Dag);
         assert!((dag.total - bar.total).abs() < 1e-9 * bar.total.max(1.0));
         assert!((dag.node_secs - bar.node_secs).abs() < 1e-9 * bar.node_secs.max(1.0));
+    }
+
+    #[test]
+    fn pipelined_exchange_never_slower_and_wins_at_scale() {
+        let (m, g, nnz) = setup(4, 4);
+        for p in [1usize, 2, 8, 64, 256, 1024] {
+            let lock = simulate_pp_sweep(
+                &m, &g, &nnz, 16, 20, 20, p, ScheduleMode::Barrier, SweepMode::Lockstep, 16,
+            );
+            let pipe = simulate_pp_sweep(
+                &m, &g, &nnz, 16, 20, 20, p, ScheduleMode::Barrier, SweepMode::Pipelined, 16,
+            );
+            assert!(
+                pipe.total <= lock.total * (1.0 + 1e-9),
+                "p={p}: pipelined {} vs lockstep {}",
+                pipe.total,
+                lock.total
+            );
+        }
+        // single node: no within-block exchange at all, identical times
+        let lock1 = simulate_pp_sweep(
+            &m, &g, &nnz, 16, 20, 20, 1, ScheduleMode::Barrier, SweepMode::Lockstep, 16,
+        );
+        let pipe1 = simulate_pp_sweep(
+            &m, &g, &nnz, 16, 20, 20, 1, ScheduleMode::Barrier, SweepMode::Pipelined, 16,
+        );
+        assert!((lock1.total - pipe1.total).abs() < 1e-9 * lock1.total.max(1.0));
+        // at high node counts the exchange dominates, so hiding it must
+        // show up as a strict win
+        let lock_hi = simulate_pp_sweep(
+            &m, &g, &nnz, 16, 20, 20, 1024, ScheduleMode::Barrier, SweepMode::Lockstep, 16,
+        );
+        let pipe_hi = simulate_pp_sweep(
+            &m, &g, &nnz, 16, 20, 20, 1024, ScheduleMode::Barrier, SweepMode::Pipelined, 16,
+        );
+        assert!(pipe_hi.total < lock_hi.total, "{} vs {}", pipe_hi.total, lock_hi.total);
+    }
+
+    #[test]
+    fn finer_chunks_hide_more_of_the_exchange() {
+        let (m, g, nnz) = setup(4, 4);
+        let p = 256;
+        let coarse = simulate_pp_sweep(
+            &m, &g, &nnz, 16, 20, 20, p, ScheduleMode::Barrier, SweepMode::Pipelined, 2,
+        );
+        let fine = simulate_pp_sweep(
+            &m, &g, &nnz, 16, 20, 20, p, ScheduleMode::Barrier, SweepMode::Pipelined, 64,
+        );
+        assert!(fine.total <= coarse.total * (1.0 + 1e-9), "{} vs {}", fine.total, coarse.total);
     }
 
     #[test]

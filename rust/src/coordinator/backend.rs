@@ -15,8 +15,11 @@ use crate::runtime::Engine;
 /// sweeps, and re-scattering the COO every half-sweep showed up as a top-3
 /// hot spot in the L3 profile (EXPERIMENTS.md §Perf).
 pub struct BlockData {
+    /// The block's ratings in coordinate form (the HLO densify source).
     pub coo: Coo,
+    /// Row-major CSR for row-side half-sweeps.
     pub csr: Csr,
+    /// Column-major (transposed CSR) for column-side half-sweeps.
     pub csr_t: Csr,
     dense_cache: std::cell::RefCell<
         std::collections::HashMap<(usize, usize, bool), std::sync::Arc<(Vec<f32>, Vec<f32>)>>,
@@ -24,6 +27,7 @@ pub struct BlockData {
 }
 
 impl BlockData {
+    /// Build all layouts from the block's COO ratings.
     pub fn new(coo: Coo) -> BlockData {
         let csr = Csr::from_coo(&coo);
         let csr_t = csr.transpose();
@@ -46,10 +50,12 @@ impl BlockData {
             .clone()
     }
 
+    /// Row count of the block.
     pub fn rows(&self) -> usize {
         self.coo.rows
     }
 
+    /// Column count of the block.
     pub fn cols(&self) -> usize {
         self.coo.cols
     }
@@ -58,7 +64,9 @@ impl BlockData {
 /// Thread-confined backend instance. The HLO/PJRT variant only exists in
 /// builds with the `pjrt` feature (it needs the XLA system libraries).
 pub enum BlockBackend {
+    /// Pure-rust oracle sampler (also the plain-BMF baseline path).
     Native,
+    /// AOT HLO artifacts through the thread-confined PJRT engine.
     #[cfg(feature = "pjrt")]
     Hlo(Engine),
 }
@@ -81,6 +89,7 @@ impl BlockBackend {
         }
     }
 
+    /// True when this backend executes through the PJRT/HLO runtime.
     pub fn is_hlo(&self) -> bool {
         #[cfg(feature = "pjrt")]
         if matches!(self, BlockBackend::Hlo(_)) {

@@ -8,7 +8,10 @@
 //! per-row Gaussian posterior marginals that PP propagates onward.
 
 use super::backend::{BlockBackend, BlockData};
-use super::worker::sample_side_sharded;
+use super::config::SweepMode;
+use super::engine::FactorSide;
+use super::mailbox::FactorMailbox;
+use super::worker::{pipelined_sweep, sample_side_sharded, ChunkObs};
 use crate::gibbs::hyper::{sample_hyper, NormalWishartPrior};
 use crate::posterior::{RowGaussians, RunningMoments};
 use crate::rng::{normal::standard_normal_vec, Rng};
@@ -16,7 +19,9 @@ use crate::rng::{normal::standard_normal_vec, Rng};
 /// Posterior marginals of one block's factor sub-matrices.
 #[derive(Debug, Clone)]
 pub struct BlockPosteriors {
+    /// Row-side posterior marginals.
     pub u: RowGaussians,
+    /// Column-side posterior marginals.
     pub v: RowGaussians,
 }
 
@@ -24,10 +29,24 @@ pub struct BlockPosteriors {
 /// simulator's calibration).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct BlockRunStats {
+    /// Total Gibbs sweeps run (burn-in + retained).
     pub sweeps: usize,
+    /// Wall-clock seconds of the block's MCMC.
     pub secs: f64,
+    /// Factor rows sampled across all sweeps (both sides).
     pub rows_processed: u64,
+    /// Rating observations visited across all sweeps (both sides).
     pub ratings_processed: u64,
+    /// V-side receive + compute seconds that ran while the U side was
+    /// still sampling/publishing — the compute/communication overlap of
+    /// [`SweepMode::Pipelined`]; always 0 under [`SweepMode::Lockstep`].
+    pub comm_overlap_secs: f64,
+    /// Chunks served from the previous sweep across all stale-bounded
+    /// mailbox reads (pipelined sweeps only).
+    pub stale_chunk_reads: u64,
+    /// Largest number of unpublished chunks any single mailbox read
+    /// proceeded with — never above the configured staleness bound τ.
+    pub max_staleness: u64,
 }
 
 /// Output of one node in the PP task DAG: either a sampled block's
@@ -36,7 +55,9 @@ pub struct BlockRunStats {
 /// lets the scheduler pipeline sampling and aggregation without barriers.
 #[derive(Debug, Clone)]
 pub enum PpTaskOutput {
+    /// A sampled block's posterior marginals plus its run statistics.
     Block(BlockPosteriors, BlockRunStats),
+    /// One aggregated part of the final factor posterior.
     Part(RowGaussians),
     /// Output of a synthetic phase-join node (barrier mode only): carries
     /// no data, exists so N downstream blocks can wait on one node instead
@@ -74,40 +95,113 @@ impl PpTaskOutput {
 /// Configuration subset a block task needs.
 #[derive(Debug, Clone, Copy)]
 pub struct BlockTaskCfg {
+    /// Latent dimension.
     pub k: usize,
+    /// Residual noise precision τ.
     pub tau: f64,
+    /// Burn-in sweeps before samples are retained.
     pub burnin: usize,
+    /// Retained sweeps (posterior moments are formed from these).
     pub samples: usize,
+    /// Within-block shard workers.
     pub workers: usize,
+    /// Ridge added when finalizing sample moments.
     pub ridge: f64,
+    /// Block RNG seed.
     pub seed: u64,
+    /// Lockstep vs pipelined half-sweeps.
+    pub sweep: SweepMode,
+    /// Rows per published chunk (pipelined sweeps).
+    pub chunk_rows: usize,
+    /// Staleness bound τ in chunks (pipelined sweeps).
+    pub staleness: usize,
+}
+
+/// Observers a block task streams progress through. Both are optional and
+/// neither ever touches the block's RNG, so the posterior is bitwise
+/// identical with or without them.
+#[derive(Clone, Copy, Default)]
+pub struct BlockObs<'a> {
+    /// Receives `(sweep index, block training RMSE of the current factor
+    /// sample)` after every retained sweep — streamed as
+    /// `TrainEvent::SweepSample`.
+    pub sweep: Option<&'a dyn Fn(usize, f64)>,
+    /// Receives `(side, sweep, chunk, writer seq)` for every chunk a
+    /// pipelined half-sweep publishes — streamed as
+    /// `TrainEvent::ChunkExchanged`. Called from worker threads.
+    pub chunk: Option<&'a (dyn Fn(FactorSide, usize, usize, u64) + Sync)>,
+}
+
+/// N(0, 0.1) factor initialization both sweep schedules share — the τ=0
+/// bitwise-equivalence contract requires lockstep and pipelined runs to
+/// consume the block RNG identically, so the sequence lives here once.
+fn init_factors(rng: &mut Rng, n: usize, d: usize, k: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut u: Vec<f32> = standard_normal_vec(rng, n * k);
+    let mut v: Vec<f32> = standard_normal_vec(rng, d * k);
+    for x in u.iter_mut().chain(v.iter_mut()) {
+        *x *= 0.1;
+    }
+    (u, v)
+}
+
+/// Hyper-sample a fresh broadcast prior from the current factor state —
+/// the per-sweep RNG draw both sweep schedules share (see
+/// [`init_factors`] on why this must not be duplicated).
+fn fresh_prior(
+    rng: &mut Rng,
+    hyper_prior: &NormalWishartPrior,
+    factors: &[f32],
+    n: usize,
+    k: usize,
+) -> RowGaussians {
+    let f64s: Vec<f64> = factors.iter().map(|&x| x as f64).collect();
+    let h = sample_hyper(rng, hyper_prior, &f64s, n, k);
+    RowGaussians::broadcast(n, &h.mu, &h.lambda)
 }
 
 /// Run the block's MCMC. `u_prior`/`v_prior`: propagated priors, or None
-/// for a fresh (hyper-sampled) prior. `sweep_obs`, when present, receives
-/// `(sweep index, block training RMSE of the current factor sample)` after
-/// every retained sweep — the live mixing signal streamed as
-/// `TrainEvent::SweepSample`. Observation never touches the RNG, so the
-/// posterior is bitwise identical with or without an observer.
+/// for a fresh (hyper-sampled) prior; `obs` carries the optional progress
+/// observers. Dispatches on [`BlockTaskCfg::sweep`]: lockstep half-sweeps
+/// run on any backend, pipelined half-sweeps are native-only (the PJRT
+/// engine is thread-confined) and fall back to lockstep on HLO.
 pub fn run_block(
     backend: &BlockBackend,
     data: &BlockData,
     cfg: &BlockTaskCfg,
     u_prior: Option<&RowGaussians>,
     v_prior: Option<&RowGaussians>,
-    sweep_obs: Option<&dyn Fn(usize, f64)>,
+    obs: BlockObs<'_>,
+) -> anyhow::Result<(BlockPosteriors, BlockRunStats)> {
+    match cfg.sweep {
+        SweepMode::Pipelined if !backend.is_hlo() => {
+            run_block_pipelined(data, cfg, u_prior, v_prior, obs)
+        }
+        SweepMode::Pipelined => {
+            log::warn!(
+                "pipelined sweeps are native-only; block falls back to lockstep on HLO"
+            );
+            run_block_lockstep(backend, data, cfg, u_prior, v_prior, obs)
+        }
+        SweepMode::Lockstep => run_block_lockstep(backend, data, cfg, u_prior, v_prior, obs),
+    }
+}
+
+/// The classic synchronous schedule: full U half-sweep (sharded, gathered),
+/// then full V half-sweep — the reference the pipelined mode is validated
+/// against.
+fn run_block_lockstep(
+    backend: &BlockBackend,
+    data: &BlockData,
+    cfg: &BlockTaskCfg,
+    u_prior: Option<&RowGaussians>,
+    v_prior: Option<&RowGaussians>,
+    obs: BlockObs<'_>,
 ) -> anyhow::Result<(BlockPosteriors, BlockRunStats)> {
     let k = cfg.k;
     let (n, d) = (data.rows(), data.cols());
     let mut rng = Rng::seed_from_u64(cfg.seed);
     let t0 = std::time::Instant::now();
-
-    // init factors
-    let mut u: Vec<f32> = standard_normal_vec(&mut rng, n * k);
-    let mut v: Vec<f32> = standard_normal_vec(&mut rng, d * k);
-    for x in u.iter_mut().chain(v.iter_mut()) {
-        *x *= 0.1;
-    }
+    let (mut u, mut v) = init_factors(&mut rng, n, d, k);
 
     let hyper_prior = NormalWishartPrior::default_for_dim(k);
     let mut u_moments = RunningMoments::new(n, k);
@@ -125,12 +219,7 @@ pub fn run_block(
         // --- U side ---
         let prior_u: &RowGaussians = match u_prior {
             Some(p) => p,
-            None => {
-                let uf: Vec<f64> = u.iter().map(|&x| x as f64).collect();
-                let h = sample_hyper(&mut rng, &hyper_prior, &uf, n, k);
-                fresh_u = Some(RowGaussians::broadcast(n, &h.mu, &h.lambda));
-                fresh_u.as_ref().unwrap()
-            }
+            None => &*fresh_u.insert(fresh_prior(&mut rng, &hyper_prior, &u, n, k)),
         };
         crate::rng::normal::fill_standard_normal(&mut rng, &mut noise_u);
         let (u_new, _) = sample_side_sharded(
@@ -141,12 +230,7 @@ pub fn run_block(
         // --- V side ---
         let prior_v: &RowGaussians = match v_prior {
             Some(p) => p,
-            None => {
-                let vf: Vec<f64> = v.iter().map(|&x| x as f64).collect();
-                let h = sample_hyper(&mut rng, &hyper_prior, &vf, d, k);
-                fresh_v = Some(RowGaussians::broadcast(d, &h.mu, &h.lambda));
-                fresh_v.as_ref().unwrap()
-            }
+            None => &*fresh_v.insert(fresh_prior(&mut rng, &hyper_prior, &v, d, k)),
         };
         crate::rng::normal::fill_standard_normal(&mut rng, &mut noise_v);
         let (v_new, _) = sample_side_sharded(
@@ -157,8 +241,8 @@ pub fn run_block(
         if sweep >= cfg.burnin {
             u_moments.push_f32(&u);
             v_moments.push_f32(&v);
-            if let Some(obs) = sweep_obs {
-                obs(sweep, sample_rmse(&data.coo, &u, &v, k));
+            if let Some(f) = obs.sweep {
+                f(sweep, sample_rmse(&data.coo, &u, &v, k));
             }
         }
     }
@@ -169,6 +253,113 @@ pub fn run_block(
         secs: t0.elapsed().as_secs_f64(),
         rows_processed: ((n + d) * total_sweeps) as u64,
         ratings_processed: (2 * data.coo.nnz() * total_sweeps) as u64,
+        comm_overlap_secs: 0.0,
+        stale_chunk_reads: 0,
+        max_staleness: 0,
+    };
+    let posteriors = BlockPosteriors {
+        u: u_moments.finalize(cfg.ridge),
+        v: v_moments.finalize(cfg.ridge),
+    };
+    Ok((posteriors, stats))
+}
+
+/// The GASPI-style pipelined schedule: each half-sweep publishes per-shard
+/// chunks to a double-buffered [`FactorMailbox`] while sampling continues,
+/// and the opposite half-sweep starts under a bounded staleness τ
+/// ([`BlockTaskCfg::staleness`]). τ = 0 reproduces the lockstep posterior
+/// bitwise; the RNG draw order (hyper U, noise U, hyper V, noise V per
+/// sweep) is identical to the lockstep schedule by construction.
+fn run_block_pipelined(
+    data: &BlockData,
+    cfg: &BlockTaskCfg,
+    u_prior: Option<&RowGaussians>,
+    v_prior: Option<&RowGaussians>,
+    obs: BlockObs<'_>,
+) -> anyhow::Result<(BlockPosteriors, BlockRunStats)> {
+    anyhow::ensure!(cfg.chunk_rows > 0, "chunk_rows must be > 0");
+    let k = cfg.k;
+    let (n, d) = (data.rows(), data.cols());
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let t0 = std::time::Instant::now();
+    let (mut u, mut v) = init_factors(&mut rng, n, d, k);
+
+    let mut u_mail = FactorMailbox::new(n, k, cfg.chunk_rows, &u);
+    let mut v_mail = FactorMailbox::new(d, k, cfg.chunk_rows, &v);
+
+    let hyper_prior = NormalWishartPrior::default_for_dim(k);
+    let mut u_moments = RunningMoments::new(n, k);
+    let mut v_moments = RunningMoments::new(d, k);
+    let total_sweeps = cfg.burnin + cfg.samples.max(2);
+    let mut fresh_u: Option<RowGaussians> = None;
+    let mut fresh_v: Option<RowGaussians> = None;
+    let mut noise_u = vec![0.0f32; n * k];
+    let mut noise_v = vec![0.0f32; d * k];
+    let mut overlap_secs = 0.0f64;
+
+    for sweep in 0..total_sweeps {
+        // RNG draw order matches lockstep exactly: hyper(U) — if fresh —
+        // then noise(U), hyper(V), noise(V); sampling consumes no RNG
+        let prior_u: &RowGaussians = match u_prior {
+            Some(p) => p,
+            None => &*fresh_u.insert(fresh_prior(&mut rng, &hyper_prior, &u, n, k)),
+        };
+        crate::rng::normal::fill_standard_normal(&mut rng, &mut noise_u);
+        let prior_v: &RowGaussians = match v_prior {
+            Some(p) => p,
+            None => &*fresh_v.insert(fresh_prior(&mut rng, &hyper_prior, &v, d, k)),
+        };
+        crate::rng::normal::fill_standard_normal(&mut rng, &mut noise_v);
+
+        // wrap the per-chunk observer with this sweep's index
+        let sweep_cb;
+        let chunk_obs: ChunkObs<'_> = match obs.chunk {
+            Some(f) => {
+                sweep_cb =
+                    move |side: FactorSide, chunk: usize, seq: u64| f(side, sweep, chunk, seq);
+                Some(&sweep_cb)
+            }
+            None => None,
+        };
+
+        overlap_secs += pipelined_sweep(
+            data,
+            k,
+            cfg.tau,
+            cfg.workers,
+            prior_u,
+            prior_v,
+            &noise_u,
+            &noise_v,
+            &mut u_mail,
+            &mut v_mail,
+            cfg.staleness,
+            chunk_obs,
+        );
+
+        // refresh the main-thread factor snapshots (epoch is complete, so
+        // these reads are immediate and never stale)
+        u_mail.assemble_latest(&mut u, 0);
+        v_mail.assemble_latest(&mut v, 0);
+        if sweep >= cfg.burnin {
+            u_moments.push_f32(&u);
+            v_moments.push_f32(&v);
+            if let Some(f) = obs.sweep {
+                f(sweep, sample_rmse(&data.coo, &u, &v, k));
+            }
+        }
+    }
+    drop((fresh_u, fresh_v));
+
+    let (uc, vc) = (u_mail.counters(), v_mail.counters());
+    let stats = BlockRunStats {
+        sweeps: total_sweeps,
+        secs: t0.elapsed().as_secs_f64(),
+        rows_processed: ((n + d) * total_sweeps) as u64,
+        ratings_processed: (2 * data.coo.nnz() * total_sweeps) as u64,
+        comm_overlap_secs: overlap_secs,
+        stale_chunk_reads: uc.stale_chunk_reads + vc.stale_chunk_reads,
+        max_staleness: uc.max_staleness.max(vc.max_staleness),
     };
     let posteriors = BlockPosteriors {
         u: u_moments.finalize(cfg.ridge),
@@ -224,14 +415,26 @@ mod tests {
     }
 
     fn cfg(k: usize, seed: u64) -> BlockTaskCfg {
-        BlockTaskCfg { k, tau: 10.0, burnin: 6, samples: 10, workers: 1, ridge: 1e-3, seed }
+        BlockTaskCfg {
+            k,
+            tau: 10.0,
+            burnin: 6,
+            samples: 10,
+            workers: 1,
+            ridge: 1e-3,
+            seed,
+            sweep: SweepMode::Lockstep,
+            chunk_rows: 8,
+            staleness: 0,
+        }
     }
 
     #[test]
     fn block_posterior_predicts_block() {
         let (data, _, _) = block_from_factors(30, 25, 4, 60, 0.5);
         let backend = BlockBackend::Native;
-        let (post, stats) = run_block(&backend, &data, &cfg(4, 61), None, None, None).unwrap();
+        let (post, stats) =
+            run_block(&backend, &data, &cfg(4, 61), None, None, BlockObs::default()).unwrap();
         assert_eq!(post.u.n, 30);
         assert_eq!(post.v.n, 25);
         assert_eq!(stats.sweeps, 16);
@@ -260,16 +463,9 @@ mod tests {
             prior_u.mean[i * k] = 2.0;
         }
         let backend = BlockBackend::Native;
-        let c = BlockTaskCfg {
-            k,
-            tau: 1.0,
-            burnin: 4,
-            samples: 30,
-            workers: 1,
-            ridge: 1e-4,
-            seed: 3,
-        };
-        let (post, _) = run_block(&backend, &data, &c, Some(&prior_u), None, None).unwrap();
+        let c = BlockTaskCfg { burnin: 4, samples: 30, ridge: 1e-4, seed: 3, tau: 1.0, ..cfg(k, 3) };
+        let (post, _) =
+            run_block(&backend, &data, &c, Some(&prior_u), None, BlockObs::default()).unwrap();
         for i in 0..8 {
             assert!(
                 (post.u.row_mean(i)[0] - 2.0).abs() < 0.25,
@@ -283,10 +479,11 @@ mod tests {
     fn worker_count_does_not_change_posterior_means_much() {
         let (data, _, _) = block_from_factors(24, 20, 4, 62, 0.4);
         let backend = BlockBackend::Native;
-        let (p1, _) = run_block(&backend, &data, &cfg(4, 63), None, None, None).unwrap();
+        let (p1, _) =
+            run_block(&backend, &data, &cfg(4, 63), None, None, BlockObs::default()).unwrap();
         let mut c2 = cfg(4, 63);
         c2.workers = 3;
-        let (p3, _) = run_block(&backend, &data, &c2, None, None, None).unwrap();
+        let (p3, _) = run_block(&backend, &data, &c2, None, None, BlockObs::default()).unwrap();
         // identical seeds + sharding-invariant math → identical chains
         for i in 0..24 {
             for j in 0..4 {
@@ -299,11 +496,109 @@ mod tests {
     fn posterior_precisions_are_spd() {
         let (data, _, _) = block_from_factors(12, 10, 3, 64, 0.6);
         let backend = BlockBackend::Native;
-        let (post, _) = run_block(&backend, &data, &cfg(3, 65), None, None, None).unwrap();
+        let (post, _) =
+            run_block(&backend, &data, &cfg(3, 65), None, None, BlockObs::default()).unwrap();
         for i in 0..post.u.n {
             let p: Mat = post.u.row_prec(i);
             assert!(crate::linalg::Cholesky::new(&p).is_ok(), "row {i} precision not SPD");
         }
+    }
+
+    #[test]
+    fn pipelined_tau0_two_shards_matches_lockstep_bitwise() {
+        // the τ = 0 contract: a deterministic two-shard pipelined run is
+        // indistinguishable from lockstep to the last bit, because every
+        // read waits for the complete opposite side
+        let (data, _, _) = block_from_factors(48, 40, 4, 70, 0.4);
+        let backend = BlockBackend::Native;
+        let mut lock_cfg = cfg(4, 71);
+        lock_cfg.workers = 2;
+        let (lock, lock_stats) =
+            run_block(&backend, &data, &lock_cfg, None, None, BlockObs::default()).unwrap();
+        let mut pipe_cfg = lock_cfg;
+        pipe_cfg.sweep = SweepMode::Pipelined;
+        pipe_cfg.chunk_rows = 8;
+        pipe_cfg.staleness = 0;
+        let (pipe, pipe_stats) =
+            run_block(&backend, &data, &pipe_cfg, None, None, BlockObs::default()).unwrap();
+        assert_eq!(pipe.u.mean, lock.u.mean, "U means");
+        assert_eq!(pipe.u.prec, lock.u.prec, "U precisions");
+        assert_eq!(pipe.v.mean, lock.v.mean, "V means");
+        assert_eq!(pipe.v.prec, lock.v.prec, "V precisions");
+        // τ = 0 forbids stale reads; lockstep reports no overlap by definition
+        assert_eq!(pipe_stats.stale_chunk_reads, 0);
+        assert_eq!(pipe_stats.max_staleness, 0);
+        assert_eq!(lock_stats.comm_overlap_secs, 0.0);
+        assert!(pipe_stats.comm_overlap_secs >= 0.0);
+    }
+
+    #[test]
+    fn pipelined_staleness_never_exceeds_bound() {
+        // τ > 0 relaxes the read gate, but the mailbox counters must show
+        // every read stayed within τ chunks of the writers' sequence
+        let (data, _, _) = block_from_factors(60, 44, 4, 72, 0.4);
+        let backend = BlockBackend::Native;
+        for tau in [1usize, 3] {
+            let mut c = cfg(4, 73);
+            c.sweep = SweepMode::Pipelined;
+            c.workers = 3;
+            c.chunk_rows = 4;
+            c.staleness = tau;
+            let (post, stats) =
+                run_block(&backend, &data, &c, None, None, BlockObs::default()).unwrap();
+            assert!(
+                stats.max_staleness <= tau as u64,
+                "τ={tau}: observed staleness {}",
+                stats.max_staleness
+            );
+            assert!(post.u.mean.iter().all(|x| x.is_finite()));
+            assert!(post.v.mean.iter().all(|x| x.is_finite()));
+            // the posterior must still explain the block about as well as
+            // the lockstep fit (statistical validation, not bitwise)
+            let (lock, _) =
+                run_block(&backend, &data, &cfg(4, 73), None, None, BlockObs::default())
+                    .unwrap();
+            let sse = |p: &BlockPosteriors| {
+                data.coo
+                    .entries
+                    .iter()
+                    .map(|e| {
+                        let (r, c2) = (e.row as usize, e.col as usize);
+                        let pred: f64 = (0..4)
+                            .map(|j| p.u.row_mean(r)[j] * p.v.row_mean(c2)[j])
+                            .sum();
+                        (pred - e.val as f64).powi(2)
+                    })
+                    .sum::<f64>()
+            };
+            let (s_pipe, s_lock) = (sse(&post), sse(&lock));
+            assert!(
+                s_pipe < 2.0 * s_lock.max(1e-6),
+                "τ={tau}: pipelined SSE {s_pipe} vs lockstep {s_lock}"
+            );
+        }
+    }
+
+    #[test]
+    fn pipelined_chunk_observer_sees_all_publications() {
+        let (data, _, _) = block_from_factors(24, 20, 3, 74, 0.5);
+        let backend = BlockBackend::Native;
+        let mut c = cfg(3, 75);
+        c.sweep = SweepMode::Pipelined;
+        c.workers = 2;
+        c.chunk_rows = 6;
+        c.staleness = 1;
+        let seen = std::sync::Mutex::new(Vec::<(FactorSide, usize, usize, u64)>::new());
+        let chunk_obs = |side: FactorSide, sweep: usize, chunk: usize, seq: u64| {
+            seen.lock().unwrap().push((side, sweep, chunk, seq));
+        };
+        let obs = BlockObs { sweep: None, chunk: Some(&chunk_obs) };
+        let (_, stats) = run_block(&backend, &data, &c, None, None, obs).unwrap();
+        let seen = seen.into_inner().unwrap();
+        // U side: ceil(24/6) = 4 chunks, V side: ceil(20/6) = 4 chunks,
+        // published once per sweep each
+        assert_eq!(seen.len(), stats.sweeps * (4 + 4));
+        assert!(seen.iter().all(|&(_, sweep, _, _)| sweep < stats.sweeps));
     }
 
     #[test]
@@ -313,8 +608,9 @@ mod tests {
         let seen = std::cell::RefCell::new(Vec::<(usize, f64)>::new());
         let obs = |sweep: usize, rmse: f64| seen.borrow_mut().push((sweep, rmse));
         let c = cfg(4, 67);
-        let (observed, _) = run_block(&backend, &data, &c, None, None, Some(&obs)).unwrap();
-        let (silent, _) = run_block(&backend, &data, &c, None, None, None).unwrap();
+        let with_obs = BlockObs { sweep: Some(&obs), chunk: None };
+        let (observed, _) = run_block(&backend, &data, &c, None, None, with_obs).unwrap();
+        let (silent, _) = run_block(&backend, &data, &c, None, None, BlockObs::default()).unwrap();
         let seen = seen.into_inner();
         assert_eq!(seen.len(), c.samples, "one sample per retained sweep");
         assert!(seen.iter().all(|&(s, r)| s >= c.burnin && r.is_finite() && r >= 0.0));

@@ -4,8 +4,14 @@
 //!
 //! The file stores exactly the servable artifact: run diagnostics
 //! (timings, scheduling stats) describe a run, not a model, and never
-//! enter the checkpoint. Format v2 drops the unused grid fields v1
-//! carried; v1 files still load.
+//! enter the checkpoint.
+//!
+//! **Version gate:** the writer emits format v2 (v1's unused grid fields
+//! dropped). The loader accepts v1 and v2; anything outside that range —
+//! a pre-versioning v0 file, or a file written by a future format — is
+//! rejected with a [`CheckpointError::Malformed`] naming the version
+//! found and the supported range, instead of decoding it with wrong
+//! assumptions.
 
 use crate::posterior::{PosteriorModel, RowGaussians};
 use crate::util::json::{self, Json};
@@ -54,24 +60,37 @@ pub fn save(model: &PosteriorModel, path: &Path) -> std::io::Result<()> {
     std::fs::write(path, json::to_string(&root))
 }
 
+/// Why a checkpoint failed to load.
 #[derive(Debug, thiserror::Error)]
 pub enum CheckpointError {
+    /// The file could not be read.
     #[error("io: {0}")]
     Io(#[from] std::io::Error),
+    /// The file parsed but is not a valid checkpoint (bad JSON, missing
+    /// fields, shape mismatch, or an unsupported format version).
     #[error("malformed checkpoint: {0}")]
     Malformed(String),
 }
 
+/// Oldest and newest checkpoint format versions [`load`] accepts.
+pub const SUPPORTED_VERSIONS: (usize, usize) = (1, 2);
+
 /// Load a trained model (accepts format v1 and v2; v1's grid fields are
-/// run metadata and are ignored).
+/// run metadata and are ignored). Versions outside
+/// [`SUPPORTED_VERSIONS`] fail with an error naming the found and
+/// expected versions.
 pub fn load(path: &Path) -> Result<PosteriorModel, CheckpointError> {
     let text = std::fs::read_to_string(path)?;
     let root =
         json::parse(&text).map_err(|e| CheckpointError::Malformed(e.to_string()))?;
     let bad = |m: &str| CheckpointError::Malformed(m.to_string());
     let version = root.get("version").and_then(Json::as_usize).ok_or_else(|| bad("version"))?;
-    if version == 0 || version > 2 {
-        return Err(bad(&format!("unsupported checkpoint version {version}")));
+    let (oldest, newest) = SUPPORTED_VERSIONS;
+    if version < oldest || version > newest {
+        return Err(bad(&format!(
+            "unsupported checkpoint format: found version {version}, \
+             this build reads versions {oldest} through {newest}"
+        )));
     }
     let k = root.get("k").and_then(Json::as_usize).ok_or_else(|| bad("k"))?;
     let global_mean =
@@ -180,7 +199,30 @@ mod tests {
                 "v_post":{"n":1,"k":1,"mean":[2.0],"prec":[4.0]}}"#,
         )
         .unwrap();
-        assert!(matches!(load(&path), Err(CheckpointError::Malformed(_))));
+        let err = load(&path).unwrap_err();
+        assert!(matches!(err, CheckpointError::Malformed(_)));
+        // the message must name the found version and the supported range
+        let msg = err.to_string();
+        assert!(msg.contains("version 3"), "{msg}");
+        assert!(msg.contains("1 through 2"), "{msg}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_version_zero_files() {
+        // pre-versioning v0 checkpoints are older than the supported range
+        let path = tmp("v0");
+        std::fs::write(
+            &path,
+            r#"{"version":0,"k":1,"global_mean":0.0,
+                "u_post":{"n":1,"k":1,"mean":[0.5],"prec":[4.0]},
+                "v_post":{"n":1,"k":1,"mean":[2.0],"prec":[4.0]}}"#,
+        )
+        .unwrap();
+        let err = load(&path).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("version 0"), "{msg}");
+        assert!(msg.contains("1 through 2"), "{msg}");
         std::fs::remove_file(path).ok();
     }
 

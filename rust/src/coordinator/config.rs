@@ -8,10 +8,16 @@ pub enum BackendSpec {
     /// Pure-rust sampler (oracle; also the plain-BMF baseline path).
     Native,
     /// AOT HLO artifacts through the PJRT runtime (the production path).
-    Hlo { artifact_dir: PathBuf },
+    Hlo {
+        /// Directory holding `manifest.json` and the HLO artifacts.
+        artifact_dir: PathBuf,
+    },
     /// HLO if the artifact directory exists, else native — for tests and
     /// examples that should run pre-`make artifacts`.
-    Auto { artifact_dir: PathBuf },
+    Auto {
+        /// Directory probed for `manifest.json`.
+        artifact_dir: PathBuf,
+    },
 }
 
 impl BackendSpec {
@@ -44,16 +50,57 @@ impl BackendSpec {
 /// an actionable message instead of panicking inside a worker thread.
 #[derive(Debug, Clone, PartialEq, thiserror::Error)]
 pub enum ConfigError {
+    /// `k == 0`: a factor model needs at least one latent dimension.
     #[error("latent dimension k must be > 0")]
     ZeroK,
+    /// One of the grid dimensions is zero.
     #[error("grid {0}x{1} has a zero dimension")]
     ZeroGrid(usize, usize),
+    /// The grid has more row-blocks than matrix rows (or columns).
     #[error("grid {gi}x{gj} does not fit a {rows}x{cols} matrix")]
-    GridExceedsMatrix { gi: usize, gj: usize, rows: usize, cols: usize },
+    GridExceedsMatrix {
+        /// Requested row-blocks.
+        gi: usize,
+        /// Requested column-blocks.
+        gj: usize,
+        /// Training-matrix rows.
+        rows: usize,
+        /// Training-matrix columns.
+        cols: usize,
+    },
+    /// τ must be a positive finite precision.
     #[error("noise precision tau must be positive and finite (got {0})")]
     BadTau(f64),
+    /// The worker pool needs at least one block slot.
     #[error("block_parallelism must be > 0")]
     ZeroBlockParallelism,
+    /// Pipelined sweeps publish factor rows in chunks; a chunk must hold
+    /// at least one row.
+    #[error("chunk_rows must be > 0")]
+    ZeroChunkRows,
+}
+
+/// How the U/V half-sweeps inside one block execute across the
+/// within-block shard workers — the paper's second pillar (asynchronous
+/// communication *within* a block, GASPI-style).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SweepMode {
+    /// Classic synchronous half-sweeps: every worker samples its whole
+    /// shard, the leader gathers all shards (the MPI-allgather analogue),
+    /// and only then does the opposite side start. The default, and the
+    /// reference the pipelined mode is validated against.
+    Lockstep,
+    /// GASPI-style pipelined half-sweeps: each half-sweep is split into
+    /// per-shard column chunks, and a worker publishes every finished
+    /// chunk to a double-buffered [`crate::coordinator::mailbox::FactorMailbox`]
+    /// while it keeps sampling — so the factor exchange overlaps
+    /// computation instead of following it. The opposite side starts as
+    /// soon as all but [`TrainConfig::staleness`] chunks are published,
+    /// reading the previous sweep's values for the (bounded) remainder.
+    /// With `staleness == 0` the output is bitwise identical to
+    /// [`SweepMode::Lockstep`]; with `staleness > 0` it is validated
+    /// statistically (RMSE within tolerance).
+    Pipelined,
 }
 
 /// How block tasks are ordered across the PP phases.
@@ -111,6 +158,7 @@ pub struct TrainConfig {
     pub ridge: f64,
     /// Base RNG seed.
     pub seed: u64,
+    /// Which compute backend executes the Gibbs half-sweeps.
     pub backend: BackendSpec,
     /// Barrier vs dependency-driven block scheduling. Both produce
     /// bitwise-identical posteriors for the same seeds/config; Dag removes
@@ -121,6 +169,8 @@ pub struct TrainConfig {
     /// samples where `frac = phase_sample_frac`. 1.0 = paper default
     /// (same samples for every block).
     pub phase_sample_frac: f64,
+    /// Floor on retained samples per phase-(b)/(c) block under sweep
+    /// reduction (keeps posterior moments estimable at small fractions).
     pub min_phase_samples: usize,
     /// Emit a `TrainEvent::SweepSample` (block training RMSE of the
     /// current factor sample) after every retained sweep when an event
@@ -128,9 +178,29 @@ pub struct TrainConfig {
     /// so consumers that only want phase/block progress can turn it off;
     /// with no sink attached nothing is computed either way.
     pub stream_sweep_rmse: bool,
+    /// Lockstep vs pipelined within-block half-sweeps.
+    /// [`SweepMode::Lockstep`] (the default) is the synchronous reference;
+    /// [`SweepMode::Pipelined`] overlaps the factor exchange with
+    /// computation and, at `staleness == 0`, reproduces lockstep bitwise.
+    pub sweep: SweepMode,
+    /// Rows per published chunk in pipelined sweeps: each worker's shard
+    /// is cut into chunks of this many rows, and every finished chunk is
+    /// published to the other shards immediately. Smaller chunks publish
+    /// earlier (finer overlap) at a higher per-chunk bookkeeping cost.
+    /// Ignored under [`SweepMode::Lockstep`].
+    pub chunk_rows: usize,
+    /// Staleness bound τ for pipelined sweeps: a half-sweep may begin
+    /// reading the opposite side while at most τ chunks of it are still
+    /// unpublished, substituting the previous sweep's values for exactly
+    /// those chunks. τ = 0 forbids stale reads (bitwise-lockstep);
+    /// larger τ buys more compute/communication overlap at a bounded,
+    /// mailbox-audited staleness. Ignored under [`SweepMode::Lockstep`].
+    pub staleness: usize,
 }
 
 impl TrainConfig {
+    /// Defaults for latent dimension `k`: 1×1 grid, lockstep sweeps,
+    /// dependency-driven scheduling, auto-resolved backend.
     pub fn new(k: usize) -> TrainConfig {
         TrainConfig {
             k,
@@ -149,42 +219,70 @@ impl TrainConfig {
             phase_sample_frac: 1.0,
             min_phase_samples: 4,
             stream_sweep_rmse: true,
+            sweep: SweepMode::Lockstep,
+            chunk_rows: 256,
+            staleness: 0,
         }
     }
 
+    /// Set the block grid (I row-blocks × J column-blocks).
     pub fn with_grid(mut self, i: usize, j: usize) -> Self {
         self.grid = (i, j);
         self
     }
 
+    /// Set burn-in and retained sweeps per block.
     pub fn with_sweeps(mut self, burnin: usize, samples: usize) -> Self {
         self.burnin = burnin;
         self.samples = samples;
         self
     }
 
+    /// Set the compute backend.
     pub fn with_backend(mut self, backend: BackendSpec) -> Self {
         self.backend = backend;
         self
     }
 
+    /// Set the base RNG seed.
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
     }
 
+    /// Set the within-block shard worker count.
     pub fn with_workers(mut self, workers: usize) -> Self {
         self.workers = workers;
         self
     }
 
+    /// Set the residual noise precision τ.
     pub fn with_tau(mut self, tau: f64) -> Self {
         self.tau = tau;
         self
     }
 
+    /// Set barrier vs dependency-driven block scheduling.
     pub fn with_scheduler(mut self, scheduler: SchedulerMode) -> Self {
         self.scheduler = scheduler;
+        self
+    }
+
+    /// Set lockstep vs pipelined within-block half-sweeps.
+    pub fn with_sweep_mode(mut self, sweep: SweepMode) -> Self {
+        self.sweep = sweep;
+        self
+    }
+
+    /// Set the rows-per-chunk granularity of pipelined publication.
+    pub fn with_chunk_rows(mut self, chunk_rows: usize) -> Self {
+        self.chunk_rows = chunk_rows;
+        self
+    }
+
+    /// Set the staleness bound τ (in chunks) for pipelined reads.
+    pub fn with_staleness(mut self, staleness: usize) -> Self {
+        self.staleness = staleness;
         self
     }
 
@@ -207,6 +305,9 @@ impl TrainConfig {
         }
         if self.block_parallelism == 0 {
             return Err(ConfigError::ZeroBlockParallelism);
+        }
+        if self.chunk_rows == 0 {
+            return Err(ConfigError::ZeroChunkRows);
         }
         Ok(())
     }
@@ -271,6 +372,23 @@ mod tests {
         let mut c = TrainConfig::new(8);
         c.block_parallelism = 0;
         assert_eq!(c.validate(100, 50), Err(ConfigError::ZeroBlockParallelism));
+    }
+
+    #[test]
+    fn sweep_mode_defaults_and_builders() {
+        let c = TrainConfig::new(8);
+        assert_eq!(c.sweep, SweepMode::Lockstep);
+        assert_eq!(c.staleness, 0);
+        assert!(c.chunk_rows > 0);
+        let c = c.with_sweep_mode(SweepMode::Pipelined).with_chunk_rows(32).with_staleness(2);
+        assert_eq!(c.sweep, SweepMode::Pipelined);
+        assert_eq!(c.chunk_rows, 32);
+        assert_eq!(c.staleness, 2);
+        assert_eq!(c.validate(100, 50), Ok(()));
+        assert_eq!(
+            TrainConfig::new(8).with_chunk_rows(0).validate(100, 50),
+            Err(ConfigError::ZeroChunkRows)
+        );
     }
 
     #[test]

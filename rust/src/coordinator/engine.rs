@@ -54,20 +54,79 @@ impl fmt::Display for PpPhase {
     }
 }
 
+/// Which factor side of a block a pipelined chunk belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FactorSide {
+    /// The row side (users / compounds / …).
+    U,
+    /// The column side (items / targets / …).
+    V,
+}
+
+impl fmt::Display for FactorSide {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            FactorSide::U => "U",
+            FactorSide::V => "V",
+        })
+    }
+}
+
 /// Typed progress events streamed while a training run executes. Emitted
 /// from worker threads the moment the underlying work happens, so a
 /// consumer (CLI, recorder, bench) observes the run live, not post-hoc.
 #[derive(Debug, Clone)]
 pub enum TrainEvent {
     /// First task of `phase` started executing.
-    PhaseStarted { phase: PpPhase },
+    PhaseStarted {
+        /// The PP phase that just started.
+        phase: PpPhase,
+    },
     /// Block `node` = (i, j) of the grid finished its MCMC.
-    BlockCompleted { node: (usize, usize), phase: PpPhase, secs: f64, sweeps: usize },
+    BlockCompleted {
+        /// Grid coordinates of the block.
+        node: (usize, usize),
+        /// The PP phase the block belongs to.
+        phase: PpPhase,
+        /// Wall-clock seconds the block's MCMC took.
+        secs: f64,
+        /// Total Gibbs sweeps the block ran (burn-in + retained).
+        sweeps: usize,
+    },
     /// One retained Gibbs sweep on block `node`: training-data RMSE of the
     /// current factor sample (mean-centred scale) — the live mixing signal.
-    SweepSample { node: (usize, usize), sweep: usize, rmse: f64 },
+    SweepSample {
+        /// Grid coordinates of the block.
+        node: (usize, usize),
+        /// Sweep index within the block (burn-in sweeps included).
+        sweep: usize,
+        /// Block training RMSE of the current factor sample.
+        rmse: f64,
+    },
+    /// One chunk of a pipelined half-sweep was published to the block's
+    /// [`FactorMailbox`](super::mailbox::FactorMailbox) — the within-block
+    /// exchange overlapping computation. Emitted only under
+    /// [`SweepMode::Pipelined`](super::config::SweepMode::Pipelined).
+    ChunkExchanged {
+        /// Grid coordinates of the block.
+        node: (usize, usize),
+        /// Factor side the chunk belongs to.
+        side: FactorSide,
+        /// Sweep index within the block.
+        sweep: usize,
+        /// Chunk index within the side.
+        chunk: usize,
+        /// Writer sequence number: publications of this side's half-sweep
+        /// so far, this one included (1-based).
+        seq: u64,
+    },
     /// The whole schedule (all blocks + aggregation) completed.
-    Finished { secs: f64, blocks: usize },
+    Finished {
+        /// Wall-clock seconds of the full run.
+        secs: f64,
+        /// Number of blocks sampled.
+        blocks: usize,
+    },
 }
 
 /// Where events go: any thread-safe callback. `Engine::submit` wires this
@@ -203,7 +262,9 @@ pub trait Factorizer {
 /// What a [`Factorizer`] fit produces: the servable model plus run
 /// diagnostics (PP-specific scheduling stats when available).
 pub struct FitOutcome {
+    /// Short method name ("pp", "nomad", …).
     pub method: String,
+    /// The servable model the fit produced.
     pub model: PosteriorModel,
     /// Wall-clock seconds of the fit.
     pub secs: f64,
@@ -212,7 +273,10 @@ pub struct FitOutcome {
 }
 
 /// Posterior Propagation as a [`Factorizer`].
-pub struct PpFactorizer(pub TrainConfig);
+pub struct PpFactorizer(
+    /// The PP training configuration each fit runs with.
+    pub TrainConfig,
+);
 
 impl Factorizer for PpFactorizer {
     fn name(&self) -> &str {

@@ -1,0 +1,352 @@
+//! Double-buffered, chunk-granular factor exchange for pipelined sweeps.
+//!
+//! A [`FactorMailbox`] holds one side's factor matrix (n × k, f32) as the
+//! shared medium of the GASPI-style pipelined half-sweep: writers publish
+//! freshly sampled row *chunks* the moment they finish them, readers pull
+//! the opposite side either as a clean previous-sweep snapshot or as the
+//! freshest available state under a bounded staleness τ — the in-process
+//! analogue of one-sided RDMA puts with per-chunk notifications.
+//!
+//! The buffer is doubled per epoch (one epoch = one half-sweep):
+//!
+//! - `prev` — the fully published values of the *previous* epoch. Immutable
+//!   for the whole current epoch, so readers that need the classic Gibbs
+//!   dependency (side A of sweep *s* conditions on side B of sweep *s−1*)
+//!   read it lock-free via [`FactorMailbox::prev`].
+//! - `cur` — per-chunk buffers the current epoch's writers fill. Each
+//!   chunk carries a sequence number (the epoch that last published it),
+//!   so a reader can tell fresh chunks from stale ones.
+//!
+//! [`FactorMailbox::assemble_latest`] is the stale-bounded read: it blocks
+//! until at most τ chunks of the current epoch are unpublished, then
+//! assembles fresh chunks from `cur` and substitutes `prev` for the (≤ τ)
+//! rest. Every stale substitution is counted, and the observed maximum
+//! staleness is recorded, so tests can audit that no read ever exceeded
+//! the configured bound.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// Audit counters a mailbox accumulates across all epochs, read after a
+/// run to verify the staleness contract (every read within τ chunks of
+/// the writers' sequence number) actually held.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MailboxCounters {
+    /// Total chunk publications across all epochs.
+    pub publishes: u64,
+    /// Chunks served from the previous epoch during a stale-bounded read.
+    pub stale_chunk_reads: u64,
+    /// Largest number of unpublished chunks any single read proceeded
+    /// with — by construction never above the configured staleness bound.
+    pub max_staleness: u64,
+}
+
+/// Publication progress of the current epoch, guarded by one mutex so the
+/// gate in [`FactorMailbox::assemble_latest`] can wait on it.
+struct Progress {
+    /// Chunks published in the current epoch.
+    published: usize,
+    /// When the last chunk of the current epoch was published.
+    completed_at: Option<Instant>,
+}
+
+/// One factor side's double-buffered, chunked exchange medium.
+pub struct FactorMailbox {
+    n: usize,
+    k: usize,
+    chunk_rows: usize,
+    chunks: usize,
+    /// Previous epoch's fully published factors; immutable during an
+    /// epoch (only [`FactorMailbox::begin_epoch`], which needs `&mut
+    /// self`, replaces it).
+    prev: Vec<f32>,
+    /// Current epoch's factors, one lock per chunk so writers of disjoint
+    /// chunks never contend.
+    cur: Vec<Mutex<Vec<f32>>>,
+    /// Per-chunk sequence number: the epoch that last published the chunk.
+    chunk_seq: Vec<AtomicU64>,
+    /// Current epoch (starts at 0; the first [`FactorMailbox::begin_epoch`]
+    /// moves it to 1, so seeded chunks are "previous" from the start).
+    epoch: AtomicU64,
+    progress: Mutex<Progress>,
+    advanced: Condvar,
+    publishes: AtomicU64,
+    stale_chunk_reads: AtomicU64,
+    max_staleness: AtomicU64,
+}
+
+impl FactorMailbox {
+    /// Mailbox for an `n` × `k` factor side cut into chunks of
+    /// `chunk_rows` rows, seeded so that the first epoch's readers see
+    /// `init` as the previous-sweep state.
+    pub fn new(n: usize, k: usize, chunk_rows: usize, init: &[f32]) -> FactorMailbox {
+        assert!(chunk_rows > 0, "chunk_rows must be > 0");
+        assert_eq!(init.len(), n * k, "init factor length");
+        let chunks = n.div_ceil(chunk_rows);
+        let cur = (0..chunks)
+            .map(|c| {
+                let a = c * chunk_rows;
+                let b = ((c + 1) * chunk_rows).min(n);
+                Mutex::new(init[a * k..b * k].to_vec())
+            })
+            .collect();
+        FactorMailbox {
+            n,
+            k,
+            chunk_rows,
+            chunks,
+            prev: init.to_vec(),
+            cur,
+            chunk_seq: (0..chunks).map(|_| AtomicU64::new(0)).collect(),
+            epoch: AtomicU64::new(0),
+            progress: Mutex::new(Progress { published: chunks, completed_at: None }),
+            advanced: Condvar::new(),
+            publishes: AtomicU64::new(0),
+            stale_chunk_reads: AtomicU64::new(0),
+            max_staleness: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of chunks the side is cut into.
+    pub fn chunks(&self) -> usize {
+        self.chunks
+    }
+
+    /// Configured rows per chunk (the last chunk may be shorter).
+    pub fn chunk_rows(&self) -> usize {
+        self.chunk_rows
+    }
+
+    /// Total `n * k` length of one factor buffer.
+    pub fn len(&self) -> usize {
+        self.n * self.k
+    }
+
+    /// True when the side holds no rows (a degenerate empty block).
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Global row range `[start, end)` of chunk `c`.
+    pub fn chunk_span(&self, c: usize) -> (usize, usize) {
+        let a = c * self.chunk_rows;
+        (a, ((c + 1) * self.chunk_rows).min(self.n))
+    }
+
+    /// Start the next epoch (half-sweep): the chunks published in the
+    /// epoch that just ended become the new `prev` snapshot and the
+    /// publication count resets. Takes `&mut self`, so an epoch can only
+    /// roll over while no reader or writer holds the mailbox.
+    pub fn begin_epoch(&mut self) {
+        let k = self.k;
+        for c in 0..self.chunks {
+            let (a, b) = self.chunk_span(c);
+            let buf = self.cur[c].get_mut().expect("mailbox chunk lock poisoned");
+            self.prev[a * k..b * k].copy_from_slice(buf);
+        }
+        let progress = self.progress.get_mut().expect("mailbox progress lock poisoned");
+        progress.published = 0;
+        progress.completed_at = if self.chunks == 0 { Some(Instant::now()) } else { None };
+        *self.epoch.get_mut() += 1;
+    }
+
+    /// The previous epoch's fully published factors — the classic Gibbs
+    /// dependency (this half-sweep conditions on the opposite side's
+    /// previous state). Lock-free: `prev` is immutable during an epoch.
+    pub fn prev(&self) -> &[f32] {
+        &self.prev
+    }
+
+    /// Publish chunk `c` of the current epoch and wake any reader waiting
+    /// at the staleness gate. Returns the writer's sequence number: how
+    /// many chunks of this epoch are published after this one (1-based).
+    pub fn publish(&self, c: usize, data: &[f32]) -> u64 {
+        let (a, b) = self.chunk_span(c);
+        assert_eq!(data.len(), (b - a) * self.k, "chunk {c} data length");
+        {
+            let mut buf = self.cur[c].lock().expect("mailbox chunk lock poisoned");
+            buf.copy_from_slice(data);
+        }
+        self.chunk_seq[c].store(self.epoch.load(Ordering::Relaxed), Ordering::Release);
+        self.publishes.fetch_add(1, Ordering::Relaxed);
+        let mut progress = self.progress.lock().expect("mailbox progress lock poisoned");
+        progress.published += 1;
+        let seq = progress.published as u64;
+        if progress.published == self.chunks {
+            progress.completed_at = Some(Instant::now());
+        }
+        self.advanced.notify_all();
+        seq
+    }
+
+    /// The staleness gate alone: block until at most `max_stale` chunks
+    /// of the current epoch are unpublished. Publication only grows
+    /// within an epoch, so a subsequent [`FactorMailbox::assemble_latest`]
+    /// with the same bound returns without waiting.
+    pub fn wait_within(&self, max_stale: usize) {
+        let mut progress = self.progress.lock().expect("mailbox progress lock poisoned");
+        while self.chunks - progress.published > max_stale {
+            progress = self
+                .advanced
+                .wait(progress)
+                .expect("mailbox progress lock poisoned");
+        }
+    }
+
+    /// Stale-bounded read: block until at most `max_stale` chunks of the
+    /// current epoch are unpublished, then copy the freshest state into
+    /// `dst` — published chunks from the current epoch, the previous
+    /// epoch's values for the rest. Returns the number of stale chunks
+    /// substituted (≤ `max_stale`); audit totals land in
+    /// [`FactorMailbox::counters`].
+    pub fn assemble_latest(&self, dst: &mut [f32], max_stale: usize) -> usize {
+        assert_eq!(dst.len(), self.n * self.k, "destination length");
+        self.wait_within(max_stale);
+        let epoch = self.epoch.load(Ordering::Relaxed);
+        let k = self.k;
+        let mut stale = 0usize;
+        for c in 0..self.chunks {
+            let (a, b) = self.chunk_span(c);
+            if self.chunk_seq[c].load(Ordering::Acquire) == epoch {
+                let buf = self.cur[c].lock().expect("mailbox chunk lock poisoned");
+                dst[a * k..b * k].copy_from_slice(&buf);
+            } else {
+                dst[a * k..b * k].copy_from_slice(&self.prev[a * k..b * k]);
+                stale += 1;
+            }
+        }
+        if stale > 0 {
+            self.stale_chunk_reads.fetch_add(stale as u64, Ordering::Relaxed);
+            self.max_staleness.fetch_max(stale as u64, Ordering::Relaxed);
+        }
+        stale
+    }
+
+    /// When the current epoch's last chunk was published; `None` while
+    /// the epoch is still incomplete.
+    pub fn completed_at(&self) -> Option<Instant> {
+        self.progress.lock().expect("mailbox progress lock poisoned").completed_at
+    }
+
+    /// Accumulated audit counters.
+    pub fn counters(&self) -> MailboxCounters {
+        MailboxCounters {
+            publishes: self.publishes.load(Ordering::Relaxed),
+            stale_chunk_reads: self.stale_chunk_reads.load(Ordering::Relaxed),
+            max_staleness: self.max_staleness.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seeded(n: usize, k: usize, chunk_rows: usize, fill: f32) -> FactorMailbox {
+        FactorMailbox::new(n, k, chunk_rows, &vec![fill; n * k])
+    }
+
+    #[test]
+    fn chunk_spans_cover_rows() {
+        let m = seeded(10, 2, 4, 0.0);
+        assert_eq!(m.chunks(), 3);
+        assert_eq!(m.chunk_span(0), (0, 4));
+        assert_eq!(m.chunk_span(1), (4, 8));
+        assert_eq!(m.chunk_span(2), (8, 10));
+    }
+
+    #[test]
+    fn publish_then_assemble_is_fresh() {
+        let mut m = seeded(4, 2, 2, 0.0);
+        m.begin_epoch();
+        assert_eq!(m.publish(0, &[1.0; 4]), 1);
+        assert_eq!(m.publish(1, &[2.0; 4]), 2);
+        let mut dst = vec![0.0f32; 8];
+        let stale = m.assemble_latest(&mut dst, 0);
+        assert_eq!(stale, 0);
+        assert_eq!(&dst[..4], &[1.0; 4]);
+        assert_eq!(&dst[4..], &[2.0; 4]);
+        assert_eq!(m.counters().stale_chunk_reads, 0);
+        assert_eq!(m.counters().publishes, 2);
+    }
+
+    #[test]
+    fn stale_read_substitutes_previous_epoch_within_bound() {
+        let mut m = seeded(4, 1, 2, 7.0);
+        // epoch 1: fully published with distinct values
+        m.begin_epoch();
+        m.publish(0, &[1.0, 1.0]);
+        m.publish(1, &[2.0, 2.0]);
+        // epoch 2: only chunk 0 published
+        m.begin_epoch();
+        m.publish(0, &[10.0, 10.0]);
+        let mut dst = vec![0.0f32; 4];
+        let stale = m.assemble_latest(&mut dst, 1);
+        assert_eq!(stale, 1);
+        // fresh chunk 0, epoch-1 values for chunk 1 (never the seed 7.0)
+        assert_eq!(dst, vec![10.0, 10.0, 2.0, 2.0]);
+        let c = m.counters();
+        assert_eq!(c.stale_chunk_reads, 1);
+        assert_eq!(c.max_staleness, 1);
+    }
+
+    #[test]
+    fn prev_holds_last_completed_epoch() {
+        let mut m = seeded(2, 1, 1, 5.0);
+        assert_eq!(m.prev(), &[5.0, 5.0]);
+        m.begin_epoch();
+        assert_eq!(m.prev(), &[5.0, 5.0], "seed survives the first rollover");
+        m.publish(0, &[1.0]);
+        m.publish(1, &[2.0]);
+        m.begin_epoch();
+        assert_eq!(m.prev(), &[1.0, 2.0]);
+        assert!(m.completed_at().is_none(), "new epoch not complete yet");
+    }
+
+    #[test]
+    fn completion_time_recorded_when_last_chunk_lands() {
+        let mut m = seeded(2, 1, 1, 0.0);
+        m.begin_epoch();
+        assert!(m.completed_at().is_none());
+        m.publish(0, &[1.0]);
+        assert!(m.completed_at().is_none());
+        m.publish(1, &[2.0]);
+        assert!(m.completed_at().is_some());
+    }
+
+    #[test]
+    fn gate_blocks_until_within_staleness_bound() {
+        // a writer thread publishes with a delay; a tau=0 reader must
+        // observe the complete epoch despite starting first
+        let mut m = seeded(8, 1, 2, 0.0);
+        m.begin_epoch();
+        let m = std::sync::Arc::new(m);
+        let writer = {
+            let m = m.clone();
+            std::thread::spawn(move || {
+                for c in 0..m.chunks() {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                    let (a, b) = m.chunk_span(c);
+                    m.publish(c, &vec![c as f32 + 1.0; b - a]);
+                }
+            })
+        };
+        let mut dst = vec![0.0f32; 8];
+        let stale = m.assemble_latest(&mut dst, 0);
+        writer.join().unwrap();
+        assert_eq!(stale, 0);
+        assert_eq!(dst, vec![1.0, 1.0, 2.0, 2.0, 3.0, 3.0, 4.0, 4.0]);
+    }
+
+    #[test]
+    fn empty_side_is_trivially_complete() {
+        let mut m = FactorMailbox::new(0, 3, 4, &[]);
+        assert!(m.is_empty());
+        assert_eq!(m.chunks(), 0);
+        m.begin_epoch();
+        assert!(m.completed_at().is_some());
+        let mut dst = Vec::new();
+        assert_eq!(m.assemble_latest(&mut dst, 0), 0);
+    }
+}

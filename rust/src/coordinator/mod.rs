@@ -19,7 +19,12 @@
 //!
 //! Within each block, the Gibbs half-sweeps execute over row shards
 //! (`worker`) — the distributed-BMF-inside-a-block layer of the paper —
-//! through either the AOT HLO runtime or the native oracle backend.
+//! through either the AOT HLO runtime or the native oracle backend. The
+//! half-sweeps themselves run in one of two regimes
+//! ([`SweepMode`]): classic lockstep (sample, then exchange), or
+//! GASPI-style pipelined (`mailbox`), where finished factor chunks are
+//! published to the other shards while sampling continues, overlapping
+//! the exchange with computation under a bounded staleness τ.
 //!
 //! The public entry point is the [`Engine`]: it owns the persistent worker
 //! pool, runs many jobs against it warm ([`Engine::train`] /
@@ -33,12 +38,16 @@ pub mod block_task;
 pub mod checkpoint;
 pub mod config;
 pub mod engine;
+pub mod mailbox;
 pub mod scheduler;
 pub mod trainer;
 pub mod worker;
 
-pub use config::{BackendSpec, ConfigError, SchedulerMode, TrainConfig};
-pub use engine::{Engine, Factorizer, FitOutcome, PpFactorizer, PpPhase, Session, TrainEvent};
+pub use config::{BackendSpec, ConfigError, SchedulerMode, SweepMode, TrainConfig};
+pub use engine::{
+    Engine, Factorizer, FactorSide, FitOutcome, PpFactorizer, PpPhase, Session, TrainEvent,
+};
+pub use mailbox::{FactorMailbox, MailboxCounters};
 pub use trainer::{PpTrainer, TrainResult};
 
 pub use crate::posterior::PosteriorModel;

@@ -34,6 +34,7 @@ type Job = Box<dyn FnOnce(anyhow::Result<&BlockBackend>) + Send>;
 pub struct WorkerPool {
     tx: Option<Sender<Job>>,
     handles: Vec<std::thread::JoinHandle<()>>,
+    /// Number of worker threads (parallel task slots).
     pub threads: usize,
 }
 
@@ -158,8 +159,11 @@ struct DagNodeSpec<T> {
 /// A completed node: its output plus start/finish seconds relative to the
 /// moment the schedule began (for phase attribution and idle accounting).
 pub struct DagNodeResult<T> {
+    /// The node's task output.
     pub output: Arc<T>,
+    /// Seconds after schedule start when the task began computing.
     pub started: f64,
+    /// Seconds after schedule start when the task finished.
     pub finished: f64,
 }
 
@@ -181,14 +185,17 @@ pub struct DagScheduler<T> {
 }
 
 impl<T: Send + Sync + 'static> DagScheduler<T> {
+    /// An empty DAG.
     pub fn new() -> DagScheduler<T> {
         DagScheduler { nodes: Vec::new() }
     }
 
+    /// Number of nodes added so far.
     pub fn len(&self) -> usize {
         self.nodes.len()
     }
 
+    /// True when no nodes have been added.
     pub fn is_empty(&self) -> bool {
         self.nodes.is_empty()
     }

@@ -20,9 +20,11 @@
 
 use super::aggregate::aggregate_part;
 use super::backend::{BlockBackend, BlockData};
-use super::block_task::{run_block, BlockPosteriors, BlockRunStats, BlockTaskCfg, PpTaskOutput};
+use super::block_task::{
+    run_block, BlockObs, BlockPosteriors, BlockRunStats, BlockTaskCfg, PpTaskOutput,
+};
 use super::config::{SchedulerMode, TrainConfig};
-use super::engine::{Engine, EventSink, PpPhase, TrainEvent};
+use super::engine::{Engine, EventSink, FactorSide, PpPhase, TrainEvent};
 use super::scheduler::{DagScheduler, NodeId, WorkerPool};
 use crate::data::sparse::Coo;
 use crate::partition::Grid;
@@ -35,19 +37,28 @@ use std::sync::Arc;
 /// the previous phase's last block finishing (zero-clamped).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct PhaseTimings {
+    /// Seconds until the phase-(a) block finished.
     pub a: f64,
+    /// Seconds between the last phase-(a) and last phase-(b) completion.
     pub b: f64,
+    /// Seconds between the last phase-(b) and last phase-(c) completion.
     pub c: f64,
+    /// Seconds between the last block and the last aggregation part.
     pub aggregate: f64,
+    /// Wall-clock seconds of the whole run.
     pub total: f64,
 }
 
 /// Aggregate compute counters over all blocks.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct RunStats {
+    /// Blocks sampled.
     pub blocks: usize,
+    /// Total Gibbs sweeps across all blocks.
     pub sweeps: usize,
+    /// Factor rows sampled across all blocks and sweeps.
     pub rows_processed: u64,
+    /// Rating observations visited across all blocks and sweeps.
     pub ratings_processed: u64,
     /// Sum of per-block compute seconds (≥ wall-clock when parallel).
     pub compute_secs: f64,
@@ -58,6 +69,12 @@ pub struct RunStats {
     /// Phase-(c) compute seconds that ran before the last phase-(b) block
     /// finished — positive only under the dependency-driven scheduler.
     pub overlap_secs: f64,
+    /// Within-block compute/communication overlap summed over all blocks:
+    /// V-half-sweep compute seconds that ran while the U half-sweep was
+    /// still sampling/publishing. Positive only under
+    /// [`SweepMode::Pipelined`](super::config::SweepMode::Pipelined) —
+    /// lockstep sweeps serialize exchange after compute by definition.
+    pub comm_overlap_secs: f64,
 }
 
 impl RunStats {
@@ -67,6 +84,7 @@ impl RunStats {
         self.rows_processed += s.rows_processed;
         self.ratings_processed += s.ratings_processed;
         self.compute_secs += s.secs;
+        self.comm_overlap_secs += s.comm_overlap_secs;
     }
 }
 
@@ -82,7 +100,9 @@ pub struct TrainResult {
     pub model: PosteriorModel,
     /// Block grid the run used.
     pub grid: (usize, usize),
+    /// Wall-clock seconds attributed to each PP phase.
     pub timings: PhaseTimings,
+    /// Aggregate compute and scheduling counters.
     pub stats: RunStats,
 }
 
@@ -156,6 +176,19 @@ impl Emitter {
         }))
     }
 
+    /// Per-chunk publication observer for one block (pipelined sweeps),
+    /// or None when nobody listens. Called from worker threads, hence the
+    /// `Sync` bound.
+    fn chunk_observer(
+        &self,
+        node: (usize, usize),
+    ) -> Option<Box<dyn Fn(FactorSide, usize, usize, u64) + Sync>> {
+        let sink = self.sink.clone()?;
+        Some(Box::new(move |side, sweep, chunk, seq| {
+            sink(TrainEvent::ChunkExchanged { node, side, sweep, chunk, seq })
+        }))
+    }
+
     fn finished(&self, secs: f64, blocks: usize) {
         if let Some(sink) = &self.sink {
             sink(TrainEvent::Finished { secs, blocks });
@@ -216,6 +249,9 @@ fn task_cfg(cfg: &TrainConfig, samples: usize, seed: u64) -> BlockTaskCfg {
         workers: cfg.workers,
         ridge: cfg.ridge,
         seed,
+        sweep: cfg.sweep,
+        chunk_rows: cfg.chunk_rows,
+        staleness: cfg.staleness,
     }
 }
 
@@ -278,8 +314,10 @@ pub(crate) fn run_pp_centered(
     let em_a = em.clone();
     let a_id = dag.add(&[], move |b: &BlockBackend, _p: &[Arc<PpTaskOutput>]| {
         em_a.phase(PpPhase::A);
-        let obs = em_a.sweep_observer((0, 0));
-        let (post, stats) = run_block(b, &a_data, &cfg_a, None, None, obs.as_deref())?;
+        let sweep_obs = em_a.sweep_observer((0, 0));
+        let chunk_obs = em_a.chunk_observer((0, 0));
+        let obs = BlockObs { sweep: sweep_obs.as_deref(), chunk: chunk_obs.as_deref() };
+        let (post, stats) = run_block(b, &a_data, &cfg_a, None, None, obs)?;
         em_a.block_done((0, 0), PpPhase::A, &stats);
         Ok(PpTaskOutput::Block(post, stats))
     });
@@ -295,9 +333,10 @@ pub(crate) fn run_pp_centered(
         let em_b = em.clone();
         let id = dag.add(&[a_id], move |b: &BlockBackend, p: &[Arc<PpTaskOutput>]| {
             em_b.phase(PpPhase::B);
-            let obs = em_b.sweep_observer((i, 0));
-            let (post, stats) =
-                run_block(b, &data, &bcfg, None, Some(&p[0].block().v), obs.as_deref())?;
+            let sweep_obs = em_b.sweep_observer((i, 0));
+            let chunk_obs = em_b.chunk_observer((i, 0));
+            let obs = BlockObs { sweep: sweep_obs.as_deref(), chunk: chunk_obs.as_deref() };
+            let (post, stats) = run_block(b, &data, &bcfg, None, Some(&p[0].block().v), obs)?;
             em_b.block_done((i, 0), PpPhase::B, &stats);
             Ok(PpTaskOutput::Block(post, stats))
         });
@@ -310,9 +349,10 @@ pub(crate) fn run_pp_centered(
         let em_b = em.clone();
         let id = dag.add(&[a_id], move |b: &BlockBackend, p: &[Arc<PpTaskOutput>]| {
             em_b.phase(PpPhase::B);
-            let obs = em_b.sweep_observer((0, j));
-            let (post, stats) =
-                run_block(b, &data, &bcfg, Some(&p[0].block().u), None, obs.as_deref())?;
+            let sweep_obs = em_b.sweep_observer((0, j));
+            let chunk_obs = em_b.chunk_observer((0, j));
+            let obs = BlockObs { sweep: sweep_obs.as_deref(), chunk: chunk_obs.as_deref() };
+            let (post, stats) = run_block(b, &data, &bcfg, Some(&p[0].block().u), None, obs)?;
             em_b.block_done((0, j), PpPhase::B, &stats);
             Ok(PpTaskOutput::Block(post, stats))
         });
@@ -345,14 +385,17 @@ pub(crate) fn run_pp_centered(
             let em_c = em.clone();
             let id = dag.add(&edges, move |b: &BlockBackend, p: &[Arc<PpTaskOutput>]| {
                 em_c.phase(PpPhase::C);
-                let obs = em_c.sweep_observer((i, j));
+                let sweep_obs = em_c.sweep_observer((i, j));
+                let chunk_obs = em_c.chunk_observer((i, j));
+                let obs =
+                    BlockObs { sweep: sweep_obs.as_deref(), chunk: chunk_obs.as_deref() };
                 let (post, stats) = run_block(
                     b,
                     &data,
                     &bcfg,
                     Some(&p[0].block().u),
                     Some(&p[1].block().v),
-                    obs.as_deref(),
+                    obs,
                 )?;
                 em_c.block_done((i, j), PpPhase::C, &stats);
                 Ok(PpTaskOutput::Block(post, stats))
@@ -461,10 +504,12 @@ pub(crate) fn run_pp_centered(
 /// existing callers and the DAG/Barrier equivalence tests compile
 /// unchanged; both paths execute the identical [`run_pp`] pipeline.
 pub struct PpTrainer {
+    /// The training configuration every `train` call runs with.
     pub cfg: TrainConfig,
 }
 
 impl PpTrainer {
+    /// Wrap a configuration in the legacy one-shot facade.
     pub fn new(cfg: TrainConfig) -> PpTrainer {
         PpTrainer { cfg }
     }
@@ -579,6 +624,55 @@ mod tests {
             assert_eq!(dag.v_post.mean, base.v_post.mean, "v mean, slots={slots}");
             assert_eq!(dag.v_post.prec, base.v_post.prec, "v prec, slots={slots}");
         }
+    }
+
+    #[test]
+    fn pipelined_tau0_bitwise_equals_lockstep_end_to_end() {
+        // τ = 0 pipelined sweeps must be invisible to the math across the
+        // whole PP pipeline, grid and all
+        use crate::coordinator::config::SweepMode;
+        let (train, _, k) = dataset();
+        let lock = PpTrainer::new(quick_cfg(k).with_grid(2, 2).with_workers(2))
+            .train(&train)
+            .unwrap();
+        let pipe = PpTrainer::new(
+            quick_cfg(k)
+                .with_grid(2, 2)
+                .with_workers(2)
+                .with_sweep_mode(SweepMode::Pipelined)
+                .with_chunk_rows(16)
+                .with_staleness(0),
+        )
+        .train(&train)
+        .unwrap();
+        assert_eq!(pipe.u_post.mean, lock.u_post.mean);
+        assert_eq!(pipe.u_post.prec, lock.u_post.prec);
+        assert_eq!(pipe.v_post.mean, lock.v_post.mean);
+        assert_eq!(pipe.v_post.prec, lock.v_post.prec);
+        assert_eq!(lock.stats.comm_overlap_secs, 0.0, "lockstep never overlaps");
+    }
+
+    #[test]
+    fn pipelined_stale_mode_learns_close_to_lockstep() {
+        // τ > 0 trades bitwise equality for overlap; the fit must stay
+        // statistically equivalent (RMSE within tolerance)
+        use crate::coordinator::config::SweepMode;
+        let (train, test, k) = dataset();
+        let lock =
+            PpTrainer::new(quick_cfg(k).with_grid(2, 2)).train(&train).unwrap();
+        let pipe = PpTrainer::new(
+            quick_cfg(k)
+                .with_grid(2, 2)
+                .with_workers(3)
+                .with_sweep_mode(SweepMode::Pipelined)
+                .with_chunk_rows(8)
+                .with_staleness(2),
+        )
+        .train(&train)
+        .unwrap();
+        let (a, b) = (lock.rmse(&test), pipe.rmse(&test));
+        assert!((a - b).abs() < 0.15 * a.max(b), "lockstep={a} vs pipelined={b}");
+        assert!(pipe.stats.comm_overlap_secs >= 0.0);
     }
 
     #[test]

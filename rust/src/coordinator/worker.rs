@@ -11,9 +11,12 @@
 //! cluster simulator uses for multi-node projections.
 
 use super::backend::{BlockBackend, BlockData};
+use super::engine::FactorSide;
+use super::mailbox::FactorMailbox;
 use crate::data::sparse::Csr;
-use crate::gibbs::native::sample_side_native;
+use crate::gibbs::native::{sample_rows_into, sample_side_native};
 use crate::posterior::RowGaussians;
+use std::time::Instant;
 
 /// Contiguous row-shard boundaries for `n` rows over `workers` shards.
 pub fn shard_bounds(n: usize, workers: usize) -> Vec<(usize, usize)> {
@@ -109,6 +112,143 @@ pub fn sample_side_sharded(
     }
 }
 
+/// Observer of per-chunk publications inside a pipelined sweep, called
+/// from worker threads: `(side, chunk index, writer sequence number)`.
+pub type ChunkObs<'a> = Option<&'a (dyn Fn(FactorSide, usize, u64) + Sync)>;
+
+/// One full pipelined Gibbs sweep (U half-sweep, then V half-sweep) over
+/// a block, GASPI-style: the U side's rows are cut into mailbox chunks
+/// and every finished chunk is published to the other shards immediately,
+/// while the publishing worker keeps sampling its next chunk. Each
+/// worker's V half-sweep starts as soon as at most `stale_bound` U chunks
+/// are unpublished (reading the previous sweep's values for exactly those
+/// chunks), so the factor exchange and the U-side tail overlap the V-side
+/// compute instead of preceding it.
+///
+/// With `stale_bound == 0` every read waits for the complete U side, so
+/// the sweep is bitwise identical to the lockstep schedule (rows only
+/// ever see exactly the inputs lockstep gives them — same priors, same
+/// injected noise, same opposite-side values).
+///
+/// Returns the seconds of V-side work (receiving the U snapshot +
+/// sampling) that ran while the U side was still sampling/publishing —
+/// the communication/computation overlap the lockstep schedule cannot
+/// have.
+#[allow(clippy::too_many_arguments)]
+pub fn pipelined_sweep(
+    data: &BlockData,
+    k: usize,
+    tau: f64,
+    workers: usize,
+    prior_u: &RowGaussians,
+    prior_v: &RowGaussians,
+    noise_u: &[f32],
+    noise_v: &[f32],
+    u_mail: &mut FactorMailbox,
+    v_mail: &mut FactorMailbox,
+    stale_bound: usize,
+    chunk_obs: ChunkObs<'_>,
+) -> f64 {
+    u_mail.begin_epoch();
+    v_mail.begin_epoch();
+    let w = workers.max(1);
+    // contiguous chunk ranges per worker (fewer entries than w when a
+    // side has fewer chunks than workers; the extras idle on that side)
+    let u_bounds = shard_bounds(u_mail.chunks(), w);
+    let v_bounds = shard_bounds(v_mail.chunks(), w);
+    let u_ref: &FactorMailbox = u_mail;
+    let v_ref: &FactorMailbox = v_mail;
+    let csr: &Csr = &data.csr;
+    let csr_t: &Csr = &data.csr_t;
+
+    let mut v_spans: Vec<(Instant, Instant)> = Vec::with_capacity(w);
+    crossbeam_utils::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(w);
+        for wi in 0..w {
+            let ur = u_bounds.get(wi).copied().unwrap_or((0, 0));
+            let vr = v_bounds.get(wi).copied().unwrap_or((0, 0));
+            handles.push(scope.spawn(move |_| {
+                let chunk_cap = u_ref.chunk_rows().max(v_ref.chunk_rows()) * k;
+                let mut samples = vec![0.0f32; chunk_cap];
+                let mut means = vec![0.0f32; chunk_cap];
+
+                // ---- U half-sweep: publish every chunk as it finishes ----
+                let v_prev = v_ref.prev();
+                for c in ur.0..ur.1 {
+                    let (a, b) = u_ref.chunk_span(c);
+                    let len = (b - a) * k;
+                    sample_rows_into(
+                        csr,
+                        a..b,
+                        v_prev,
+                        k,
+                        prior_u,
+                        tau,
+                        noise_u,
+                        &mut samples[..len],
+                        &mut means[..len],
+                    );
+                    let seq = u_ref.publish(c, &samples[..len]);
+                    if let Some(f) = chunk_obs {
+                        f(FactorSide::U, c, seq);
+                    }
+                }
+
+                // ---- V half-sweep: stale-bounded read of the U side ----
+                if vr.0 >= vr.1 {
+                    let now = Instant::now();
+                    return (now, now);
+                }
+                // each worker assembles its own U snapshot — the
+                // in-process stand-in for the per-node receive buffer a
+                // real one-sided exchange fills (w copies of n·k f32 per
+                // sweep; hoisting them across sweeps would need persistent
+                // per-block workers). The overlap clock starts when the
+                // staleness gate opens: receive/unpack + V sampling are
+                // the work that runs while U publication completes.
+                u_ref.wait_within(stale_bound);
+                let started = Instant::now();
+                let mut u_view = vec![0.0f32; u_ref.len()];
+                u_ref.assemble_latest(&mut u_view, stale_bound);
+                for c in vr.0..vr.1 {
+                    let (a, b) = v_ref.chunk_span(c);
+                    let len = (b - a) * k;
+                    sample_rows_into(
+                        csr_t,
+                        a..b,
+                        &u_view,
+                        k,
+                        prior_v,
+                        tau,
+                        noise_v,
+                        &mut samples[..len],
+                        &mut means[..len],
+                    );
+                    let seq = v_ref.publish(c, &samples[..len]);
+                    if let Some(f) = chunk_obs {
+                        f(FactorSide::V, c, seq);
+                    }
+                }
+                (started, Instant::now())
+            }));
+        }
+        for h in handles {
+            v_spans.push(h.join().expect("pipelined worker panicked"));
+        }
+    })
+    .expect("pipelined sweep scope");
+
+    // overlap: V-side compute that ran before the last U chunk landed
+    let u_done = u_ref.completed_at().expect("U side fully published");
+    v_spans
+        .iter()
+        .map(|&(start, end)| {
+            let end = end.min(u_done);
+            if end > start { end.duration_since(start).as_secs_f64() } else { 0.0 }
+        })
+        .sum()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -158,6 +298,85 @@ mod tests {
                 assert!((m[i] - m1[i]).abs() < 1e-5, "w={w} mean[{i}]");
             }
         }
+    }
+
+    #[test]
+    fn pipelined_sweep_tau0_matches_lockstep_bitwise() {
+        let mut coo = Coo::new(40, 30);
+        let mut rng = Rng::seed_from_u64(52);
+        for _ in 0..350 {
+            coo.push(rng.below(40), rng.below(30), (rng.uniform() * 4.0 + 1.0) as f32);
+        }
+        let data = BlockData::new(coo);
+        let k = 4;
+        let u0 = standard_normal_vec(&mut rng, 40 * k);
+        let v0 = standard_normal_vec(&mut rng, 30 * k);
+        let prior_u = RowGaussians::standard(40, k, 1.5);
+        let prior_v = RowGaussians::standard(30, k, 1.0);
+        let noise_u = standard_normal_vec(&mut rng, 40 * k);
+        let noise_v = standard_normal_vec(&mut rng, 30 * k);
+
+        // lockstep reference: full U half-sweep, then full V half-sweep
+        let (u1, _) = sample_side_native(&data.csr, &v0, k, &prior_u, 2.0, &noise_u);
+        let (v1, _) = sample_side_native(&data.csr_t, &u1, k, &prior_v, 2.0, &noise_v);
+
+        for workers in [1usize, 2, 3] {
+            let mut u_mail = FactorMailbox::new(40, k, 7, &u0);
+            let mut v_mail = FactorMailbox::new(30, k, 5, &v0);
+            let overlap = pipelined_sweep(
+                &data, k, 2.0, workers, &prior_u, &prior_v, &noise_u, &noise_v,
+                &mut u_mail, &mut v_mail, 0, None,
+            );
+            assert!(overlap >= 0.0);
+            let mut u = vec![0.0f32; 40 * k];
+            let mut v = vec![0.0f32; 30 * k];
+            u_mail.assemble_latest(&mut u, 0);
+            v_mail.assemble_latest(&mut v, 0);
+            assert_eq!(u, u1, "workers={workers}: U must equal lockstep bitwise");
+            assert_eq!(v, v1, "workers={workers}: V must equal lockstep bitwise");
+            // tau = 0 forbids stale reads entirely
+            assert_eq!(u_mail.counters().stale_chunk_reads, 0);
+            assert_eq!(u_mail.counters().max_staleness, 0);
+        }
+    }
+
+    #[test]
+    fn pipelined_sweep_publishes_every_chunk_once() {
+        let mut coo = Coo::new(24, 18);
+        let mut rng = Rng::seed_from_u64(53);
+        for _ in 0..150 {
+            coo.push(rng.below(24), rng.below(18), 3.0);
+        }
+        let data = BlockData::new(coo);
+        let k = 3;
+        let u0 = standard_normal_vec(&mut rng, 24 * k);
+        let v0 = standard_normal_vec(&mut rng, 18 * k);
+        let prior_u = RowGaussians::standard(24, k, 1.0);
+        let prior_v = RowGaussians::standard(18, k, 1.0);
+        let noise_u = standard_normal_vec(&mut rng, 24 * k);
+        let noise_v = standard_normal_vec(&mut rng, 18 * k);
+        let mut u_mail = FactorMailbox::new(24, k, 4, &u0);
+        let mut v_mail = FactorMailbox::new(18, k, 4, &v0);
+        let seen = std::sync::Mutex::new(Vec::<(FactorSide, usize, u64)>::new());
+        let obs = |side: FactorSide, chunk: usize, seq: u64| {
+            seen.lock().unwrap().push((side, chunk, seq));
+        };
+        pipelined_sweep(
+            &data, k, 1.0, 2, &prior_u, &prior_v, &noise_u, &noise_v,
+            &mut u_mail, &mut v_mail, 1, Some(&obs),
+        );
+        let seen = seen.into_inner().unwrap();
+        let u_chunks: Vec<usize> =
+            seen.iter().filter(|e| e.0 == FactorSide::U).map(|e| e.1).collect();
+        let v_chunks: Vec<usize> =
+            seen.iter().filter(|e| e.0 == FactorSide::V).map(|e| e.1).collect();
+        assert_eq!(u_chunks.len(), u_mail.chunks(), "every U chunk published once");
+        assert_eq!(v_chunks.len(), v_mail.chunks(), "every V chunk published once");
+        // writer sequence numbers count publications 1..=chunks per side
+        let mut u_seqs: Vec<u64> =
+            seen.iter().filter(|e| e.0 == FactorSide::U).map(|e| e.2).collect();
+        u_seqs.sort_unstable();
+        assert_eq!(u_seqs, (1..=u_mail.chunks() as u64).collect::<Vec<_>>());
     }
 
     #[test]

@@ -17,13 +17,17 @@ use crate::rng::{normal::StdNormal, Rng};
 /// Statistical profile of a rating dataset (paper Table 1).
 #[derive(Debug, Clone)]
 pub struct DatasetProfile {
+    /// Profile name ("movielens", "netflix", "yahoo", "amazon").
     pub name: &'static str,
     /// Full-size dimensions from the paper.
     pub paper_rows: usize,
+    /// Full-size column count from the paper.
     pub paper_cols: usize,
+    /// Full-size rating count from the paper.
     pub paper_ratings: usize,
     /// Rating scale (values are clamped into this range).
     pub min_rating: f32,
+    /// Upper end of the rating scale.
     pub max_rating: f32,
     /// Latent dimension used in the paper for this dataset.
     pub paper_k: usize,
@@ -32,6 +36,7 @@ pub struct DatasetProfile {
 }
 
 impl DatasetProfile {
+    /// MovieLens-20M shape statistics.
     pub fn movielens() -> Self {
         DatasetProfile {
             name: "movielens",
@@ -45,6 +50,7 @@ impl DatasetProfile {
         }
     }
 
+    /// Netflix-prize shape statistics.
     pub fn netflix() -> Self {
         DatasetProfile {
             name: "netflix",
@@ -58,6 +64,7 @@ impl DatasetProfile {
         }
     }
 
+    /// Yahoo-Music R2 shape statistics.
     pub fn yahoo() -> Self {
         DatasetProfile {
             name: "yahoo",
@@ -71,6 +78,7 @@ impl DatasetProfile {
         }
     }
 
+    /// Amazon-ratings shape statistics.
     pub fn amazon() -> Self {
         DatasetProfile {
             name: "amazon",
@@ -84,6 +92,7 @@ impl DatasetProfile {
         }
     }
 
+    /// Profile by name, if known.
     pub fn by_name(name: &str) -> Option<Self> {
         match name {
             "movielens" => Some(Self::movielens()),
@@ -94,6 +103,7 @@ impl DatasetProfile {
         }
     }
 
+    /// All four paper profiles.
     pub fn all() -> Vec<Self> {
         vec![Self::movielens(), Self::netflix(), Self::yahoo(), Self::amazon()]
     }
@@ -124,11 +134,15 @@ impl DatasetProfile {
 /// A generated dataset with known ground truth.
 #[derive(Debug, Clone)]
 pub struct SyntheticDataset {
+    /// The profile this instance was generated from.
     pub profile: DatasetProfile,
+    /// The generated observations.
     pub ratings: Coo,
     /// Planted factors (row-major rows × k, cols × k).
     pub true_u: Vec<f32>,
+    /// Planted column-side factors.
     pub true_v: Vec<f32>,
+    /// Latent dimension of the planted factors.
     pub k: usize,
     /// Residual noise std used when generating.
     pub noise_std: f32,

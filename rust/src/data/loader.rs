@@ -5,12 +5,20 @@ use super::sparse::Coo;
 use std::io::{BufRead, BufReader};
 use std::path::Path;
 
+/// Why a ratings file failed to load.
 #[derive(Debug, thiserror::Error)]
 pub enum LoadError {
+    /// The file could not be read.
     #[error("io error: {0}")]
     Io(#[from] std::io::Error),
+    /// A line did not parse as a rating triplet.
     #[error("parse error at line {line}: {msg}")]
-    Parse { line: usize, msg: String },
+    Parse {
+        /// 1-based line number.
+        line: usize,
+        /// What was wrong with the line.
+        msg: String,
+    },
 }
 
 fn perr<T>(line: usize, msg: impl Into<String>) -> Result<T, LoadError> {

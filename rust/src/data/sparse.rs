@@ -8,29 +8,38 @@
 /// One observed rating.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Entry {
+    /// Row index.
     pub row: u32,
+    /// Column index.
     pub col: u32,
+    /// Rating value.
     pub val: f32,
 }
 
 /// Coordinate-format sparse matrix.
 #[derive(Debug, Clone, Default)]
 pub struct Coo {
+    /// Row count of the full matrix.
     pub rows: usize,
+    /// Column count of the full matrix.
     pub cols: usize,
+    /// Observed ratings, in insertion order.
     pub entries: Vec<Entry>,
 }
 
 impl Coo {
+    /// An empty rows × cols matrix.
     pub fn new(rows: usize, cols: usize) -> Coo {
         Coo { rows, cols, entries: Vec::new() }
     }
 
+    /// Append one observation.
     pub fn push(&mut self, row: usize, col: usize, val: f32) {
         debug_assert!(row < self.rows && col < self.cols);
         self.entries.push(Entry { row: row as u32, col: col as u32, val });
     }
 
+    /// Number of observed entries.
     pub fn nnz(&self) -> usize {
         self.entries.len()
     }
@@ -88,14 +97,20 @@ impl Coo {
 /// Compressed sparse row matrix.
 #[derive(Debug, Clone)]
 pub struct Csr {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Row start offsets into `indices`/`values` (length rows + 1).
     pub indptr: Vec<usize>,
+    /// Column index of each stored value.
     pub indices: Vec<u32>,
+    /// Stored rating values.
     pub values: Vec<f32>,
 }
 
 impl Csr {
+    /// Build from COO (stable within-row order).
     pub fn from_coo(coo: &Coo) -> Csr {
         let mut counts = vec![0usize; coo.rows + 1];
         for e in &coo.entries {
@@ -117,6 +132,7 @@ impl Csr {
         Csr { rows: coo.rows, cols: coo.cols, indptr, indices, values }
     }
 
+    /// Number of stored entries.
     pub fn nnz(&self) -> usize {
         self.values.len()
     }
@@ -127,6 +143,7 @@ impl Csr {
         (&self.indices[a..b], &self.values[a..b])
     }
 
+    /// Number of stored entries in row `i`.
     pub fn row_nnz(&self, i: usize) -> usize {
         self.indptr[i + 1] - self.indptr[i]
     }
@@ -157,6 +174,7 @@ impl Csr {
         }
     }
 
+    /// Convert back to COO (row-major entry order).
     pub fn to_coo(&self) -> Coo {
         let mut coo = Coo::new(self.rows, self.cols);
         for r in 0..self.rows {

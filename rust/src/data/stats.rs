@@ -5,19 +5,28 @@ use super::sparse::Coo;
 /// Table-1 style statistics for a rating matrix.
 #[derive(Debug, Clone)]
 pub struct DatasetStats {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Observed rating count.
     pub ratings: usize,
     /// Paper's "Sparsity": (#rows * #cols) / #ratings.
     pub sparsity: f64,
+    /// Mean observations per row.
     pub ratings_per_row: f64,
+    /// Aspect statistic #rows / #cols.
     pub rows_per_col: f64,
+    /// Smallest observed value.
     pub min_val: f32,
+    /// Largest observed value.
     pub max_val: f32,
+    /// Mean observed value.
     pub mean_val: f64,
 }
 
 impl DatasetStats {
+    /// Compute all statistics in one pass.
     pub fn compute(coo: &Coo) -> DatasetStats {
         let mut min_val = f32::INFINITY;
         let mut max_val = f32::NEG_INFINITY;

@@ -15,10 +15,13 @@ use crate::rng::{normal::StdNormal, wishart::sample_wishart, Rng};
 /// Normal-Wishart prior parameters.
 #[derive(Debug, Clone)]
 pub struct NormalWishartPrior {
+    /// Prior mean of the row-prior mean.
     pub mu0: Vec<f64>,
+    /// Mean-precision scaling.
     pub beta0: f64,
     /// W0 scale matrix.
     pub w0: Mat,
+    /// Wishart degrees of freedom.
     pub nu0: f64,
 }
 
@@ -32,7 +35,9 @@ impl NormalWishartPrior {
 /// Sampled hyperparameters: row-prior mean and precision.
 #[derive(Debug, Clone)]
 pub struct HyperSample {
+    /// Sampled row-prior mean.
     pub mu: Vec<f64>,
+    /// Sampled row-prior precision.
     pub lambda: Mat,
 }
 

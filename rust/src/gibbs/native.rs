@@ -23,17 +23,44 @@ pub fn sample_side_native(
     noise: &[f32],
 ) -> (Vec<f32>, Vec<f32>) {
     let n = csr.rows;
+    let mut samples = vec![0.0f32; n * k];
+    let mut means = vec![0.0f32; n * k];
+    sample_rows_into(csr, 0..n, v, k, prior, tau, noise, &mut samples, &mut means);
+    (samples, means)
+}
+
+/// The chunked core of [`sample_side_native`]: update only the rows in
+/// `rows` (global indices into `csr`/`prior`/`noise`), writing the
+/// results into the chunk-local `samples`/`means` buffers (each
+/// `rows.len() × k`). Rows are conditionally independent given `v`, so a
+/// chunk's output is bitwise identical whether it is sampled alone (the
+/// pipelined sweep's publish unit) or as part of a full half-sweep.
+#[allow(clippy::too_many_arguments)]
+pub fn sample_rows_into(
+    csr: &Csr,
+    rows: std::ops::Range<usize>,
+    v: &[f32],
+    k: usize,
+    prior: &RowGaussians,
+    tau: f64,
+    noise: &[f32],
+    samples: &mut [f32],
+    means: &mut [f32],
+) {
+    let n = csr.rows;
     assert_eq!(prior.n, n);
     assert_eq!(prior.k, k);
     assert_eq!(noise.len(), n * k);
     assert_eq!(v.len(), csr.cols * k);
+    assert!(rows.end <= n, "row range exceeds the side");
+    assert_eq!(samples.len(), rows.len() * k);
+    assert_eq!(means.len(), rows.len() * k);
 
-    let mut samples = vec![0.0f32; n * k];
-    let mut means = vec![0.0f32; n * k];
+    let row0 = rows.start;
     let mut prec = Mat::zeros(k, k);
     let mut rhs = vec![0.0f64; k];
 
-    for i in 0..n {
+    for i in rows {
         // start from the prior's natural parameters
         prec.data.copy_from_slice(&prior.prec[i * k * k..(i + 1) * k * k]);
         let pm = prior.row_mean(i);
@@ -66,20 +93,25 @@ pub fn sample_side_native(
         let mean = chol.solve(&rhs);
         let eps: Vec<f64> = noise[i * k..(i + 1) * k].iter().map(|&x| x as f64).collect();
         let draw = chol.sample_with_precision(&mean, &eps);
+        let local = (i - row0) * k;
         for j in 0..k {
-            samples[i * k + j] = draw[j] as f32;
-            means[i * k + j] = mean[j] as f32;
+            samples[local + j] = draw[j] as f32;
+            means[local + j] = mean[j] as f32;
         }
     }
-    (samples, means)
 }
 
 /// Plain-BPMF Gibbs sampler over a full (unblocked) rating matrix — the
 /// paper's "BMF" baseline and the phase-(a) reference path.
 pub struct NativeGibbs {
+    /// Latent dimension.
     pub k: usize,
+    /// Residual noise precision (fixed, or resampled by
+    /// [`NativeGibbs::sweep_with_tau_sampling`]).
     pub tau: f64,
+    /// Current row-side factor sample (rows × k).
     pub u: Vec<f32>,
+    /// Current column-side factor sample (cols × k).
     pub v: Vec<f32>,
     /// Global rating mean (training is mean-centred).
     pub global_mean: f64,
@@ -90,6 +122,8 @@ pub struct NativeGibbs {
 }
 
 impl NativeGibbs {
+    /// Initialize a sampler on `train` (mean-centred internally) with
+    /// N(0, 0.1)-initialized factors.
     pub fn new(train: &crate::data::sparse::Coo, k: usize, tau: f64, seed: u64) -> NativeGibbs {
         let global_mean = train.mean();
         let mut centered = train.clone();
@@ -226,6 +260,32 @@ mod tests {
         let (s, m) = sample_side_native(&csr, &v, k, &prior, 1.5, &noise);
         for (a, b) in s.iter().zip(&m) {
             assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn chunked_rows_match_full_half_sweep_bitwise() {
+        // rows are conditionally independent given v, so sampling any row
+        // range in isolation (the pipelined publish unit) must reproduce
+        // the full half-sweep bit for bit
+        let d = SyntheticDataset::by_name("movielens", 0.0005, 13).unwrap();
+        let csr = Csr::from_coo(&d.ratings);
+        let k = d.k;
+        let mut rng = Rng::seed_from_u64(14);
+        let v = standard_normal_vec(&mut rng, d.ratings.cols * k);
+        let prior = RowGaussians::standard(csr.rows, k, 1.0);
+        let noise = standard_normal_vec(&mut rng, csr.rows * k);
+        let (full_s, full_m) = sample_side_native(&csr, &v, k, &prior, 2.0, &noise);
+        let chunk = 7;
+        let mut a = 0;
+        while a < csr.rows {
+            let b = (a + chunk).min(csr.rows);
+            let mut s = vec![0.0f32; (b - a) * k];
+            let mut m = vec![0.0f32; (b - a) * k];
+            sample_rows_into(&csr, a..b, &v, k, &prior, 2.0, &noise, &mut s, &mut m);
+            assert_eq!(s[..], full_s[a * k..b * k], "samples of rows {a}..{b}");
+            assert_eq!(m[..], full_m[a * k..b * k], "means of rows {a}..{b}");
+            a = b;
         }
     }
 

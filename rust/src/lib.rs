@@ -73,6 +73,12 @@
 //!
 //! At runtime the coordinator executes the AOT artifacts through the PJRT
 //! CPU client (`runtime`); python is never on the hot path.
+//!
+//! A narrative tour of the stack — the paper-section → module map, the
+//! block DAG, and the pipelined sweep — lives in `docs/ARCHITECTURE.md`
+//! at the repository root.
+
+#![warn(missing_docs)]
 
 pub mod baselines;
 pub mod cluster;

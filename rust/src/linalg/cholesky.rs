@@ -5,13 +5,17 @@ use super::mat::Mat;
 /// Lower-triangular Cholesky factor L with A = L Lᵀ.
 #[derive(Debug, Clone)]
 pub struct Cholesky {
+    /// The lower-triangular factor L.
     pub l: Mat,
 }
 
+/// The factorization hit a non-positive pivot: the input was not SPD.
 #[derive(Debug, thiserror::Error)]
 #[error("matrix is not positive definite (pivot {pivot} at {index})")]
 pub struct NotPositiveDefinite {
+    /// The offending pivot value.
     pub pivot: f64,
+    /// Diagonal index where factorization failed.
     pub index: usize,
 }
 
@@ -40,6 +44,7 @@ impl Cholesky {
         Ok(Cholesky { l })
     }
 
+    /// Dimension of the factored matrix.
     pub fn dim(&self) -> usize {
         self.l.rows
     }

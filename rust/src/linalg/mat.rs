@@ -5,16 +5,21 @@ use std::ops::{Add, Index, IndexMut, Mul, Sub};
 /// Row-major dense f64 matrix.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Mat {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Row-major elements (rows × cols).
     pub data: Vec<f64>,
 }
 
 impl Mat {
+    /// All-zero rows × cols matrix.
     pub fn zeros(rows: usize, cols: usize) -> Mat {
         Mat { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// n × n identity.
     pub fn eye(n: usize) -> Mat {
         let mut m = Mat::zeros(n, n);
         for i in 0..n {
@@ -23,6 +28,7 @@ impl Mat {
         m
     }
 
+    /// Build from row slices (all must share a length).
     pub fn from_rows(rows: &[&[f64]]) -> Mat {
         let r = rows.len();
         let c = if r > 0 { rows[0].len() } else { 0 };
@@ -34,6 +40,7 @@ impl Mat {
         Mat { rows: r, cols: c, data }
     }
 
+    /// Wrap a row-major buffer of exactly rows × cols elements.
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Mat {
         assert_eq!(data.len(), rows * cols);
         Mat { rows, cols, data }
@@ -48,14 +55,17 @@ impl Mat {
         m
     }
 
+    /// Row `i` as a slice.
     pub fn row(&self, i: usize) -> &[f64] {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Row `i` as a mutable slice.
     pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// The transposed matrix (copied).
     pub fn transpose(&self) -> Mat {
         let mut t = Mat::zeros(self.cols, self.rows);
         for i in 0..self.rows {
@@ -113,6 +123,7 @@ impl Mat {
         }
     }
 
+    /// In-place `self *= s`.
     pub fn scale(&mut self, s: f64) {
         for a in self.data.iter_mut() {
             *a *= s;
@@ -131,6 +142,7 @@ impl Mat {
         }
     }
 
+    /// Largest element-wise absolute difference.
     pub fn max_abs_diff(&self, other: &Mat) -> f64 {
         self.data
             .iter()
@@ -139,6 +151,7 @@ impl Mat {
             .fold(0.0, f64::max)
     }
 
+    /// Frobenius norm.
     pub fn frobenius(&self) -> f64 {
         self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
     }

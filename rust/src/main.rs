@@ -4,9 +4,14 @@
 //!   train     run Posterior-Propagation BMF on a dataset (synthetic profile
 //!             or CSV/MatrixMarket file), streaming progress events, then
 //!             report RMSE + timings; optionally save the model (--save)
-//!             and the holdout set (--save-test)
+//!             and the holdout set (--save-test). Within-block sweeps run
+//!             lockstep by default; --sweep pipelined overlaps the factor
+//!             exchange with sampling (--chunk-rows, --staleness)
 //!   predict   load a saved model (--load) and score a ratings file or a
-//!             dataset holdout; optionally rank top items for a row
+//!             dataset holdout; optionally rank the top columns for a row
+//!             (--top-for N, --top-n count). Checkpoints are format v2
+//!             (v1 still loads); v0 or newer-than-v2 files are rejected
+//!             with an error naming the found and supported versions
 //!   baseline  run comparators (bmf | nomad | fpsgd | sgld | als | cgd) on
 //!             the same data; --method accepts a comma-separated list and
 //!             all fits share one warm engine
@@ -15,6 +20,7 @@
 //!   datasets  print Table-1 style statistics for the synthetic profiles
 //!   partition analyse block grids for a dataset (Fig-3 style table)
 //!   simulate  strong-scaling simulation on the calibrated cluster model
+//!             (--sweep lockstep|pipelined picks the exchange regime)
 //!
 //! Examples:
 //!   bmf-pp train --dataset netflix --scale 0.002 --grid 4x2 --samples 20
@@ -32,7 +38,7 @@ use bmf_pp::cluster::{calibrate, sim};
 use bmf_pp::coordinator::backend::BlockBackend;
 use bmf_pp::coordinator::config::auto_tau;
 use bmf_pp::coordinator::{
-    checkpoint, BackendSpec, Engine, SchedulerMode, TrainConfig, TrainEvent,
+    checkpoint, BackendSpec, Engine, SchedulerMode, SweepMode, TrainConfig, TrainEvent,
 };
 use bmf_pp::data::generator::{DatasetProfile, SyntheticDataset};
 use bmf_pp::data::loader;
@@ -50,6 +56,15 @@ use std::path::Path;
 /// execution does the work — so the dispatch path can reject unknown
 /// flags after parse, before anything expensive runs.
 type Action = Box<dyn FnOnce() -> anyhow::Result<()>>;
+
+/// Shared `--sweep lockstep|pipelined` parsing (train and simulate).
+fn parse_sweep_mode(args: &Args) -> anyhow::Result<SweepMode> {
+    match args.get_or("sweep", "lockstep") {
+        "lockstep" => Ok(SweepMode::Lockstep),
+        "pipelined" => Ok(SweepMode::Pipelined),
+        other => anyhow::bail!("unknown sweep mode '{other}' (lockstep | pipelined)"),
+    }
+}
 
 /// Where the training matrix comes from (parsed flags, loaded lazily).
 enum DataSpec {
@@ -110,6 +125,9 @@ fn plan_train(args: &Args) -> anyhow::Result<Action> {
         "dag" => SchedulerMode::Dag,
         other => anyhow::bail!("unknown scheduler '{other}' (barrier | dag)"),
     };
+    let sweep = parse_sweep_mode(args)?;
+    let chunk_rows = args.usize_or("chunk-rows", 256);
+    let staleness = args.usize_or("staleness", 0);
     let block_parallelism = args.get("block-parallelism").and_then(|v| v.parse().ok());
     let phase_sample_frac = args.f64_or("phase-sample-frac", 1.0);
     let save_path = args.get("save").map(str::to_string);
@@ -126,7 +144,10 @@ fn plan_train(args: &Args) -> anyhow::Result<Action> {
             .with_workers(workers)
             .with_seed(seed)
             .with_tau(tau.unwrap_or_else(|| auto_tau(&train)))
-            .with_scheduler(scheduler);
+            .with_scheduler(scheduler)
+            .with_sweep_mode(sweep)
+            .with_chunk_rows(chunk_rows)
+            .with_staleness(staleness);
         if native {
             cfg = cfg.with_backend(BackendSpec::Native);
         }
@@ -171,6 +192,7 @@ fn plan_train(args: &Args) -> anyhow::Result<Action> {
                     );
                 }
                 TrainEvent::SweepSample { .. } => {} // recorded, not printed
+                TrainEvent::ChunkExchanged { .. } => {} // counted, not printed
                 TrainEvent::Finished { secs, blocks } => {
                     println!(
                         "[{:>6.2}s] finished: {blocks} blocks in {}",
@@ -192,10 +214,11 @@ fn plan_train(args: &Args) -> anyhow::Result<Action> {
             fmt_duration(result.timings.total)
         );
         println!(
-            "scheduling: compute {} / idle {} / phase-overlap {}",
+            "scheduling: compute {} / idle {} / phase-overlap {} / sweep-overlap {}",
             fmt_duration(result.stats.compute_secs),
             fmt_duration(result.stats.idle_secs),
-            fmt_duration(result.stats.overlap_secs)
+            fmt_duration(result.stats.overlap_secs),
+            fmt_duration(result.stats.comm_overlap_secs)
         );
         let tp = Throughput::measure(
             train.rows,
@@ -428,8 +451,17 @@ fn plan_simulate(args: &Args) -> anyhow::Result<Action> {
     let name = args.get_or("dataset", "netflix").to_string();
     let (gi, gj) = args.grid_or("grid", (4, 4));
     let max_nodes = args.usize_or("max-nodes", 16384);
-    let sweeps = args.usize_or("sweeps", 28);
+    // strict parse: --sweeps (count) sits one letter from --sweep (mode),
+    // so a non-numeric value is almost certainly the other flag mistyped
+    let sweeps = match args.get("sweeps") {
+        Some(v) => v.parse::<usize>().map_err(|_| {
+            anyhow::anyhow!("--sweeps expects a sweep count (got '{v}'); --sweep picks the mode")
+        })?,
+        None => 28,
+    };
     let k_flag = args.get("k").and_then(|v| v.parse::<usize>().ok());
+    let sweep_mode = parse_sweep_mode(args)?;
+    let chunks = args.usize_or("chunks", 16);
 
     Ok(Box::new(move || {
         let profile = DatasetProfile::by_name(&name)
@@ -446,7 +478,18 @@ fn plan_simulate(args: &Args) -> anyhow::Result<Action> {
         );
         let mut pts = Vec::new();
         for p in sim::node_sweep(&grid, max_nodes) {
-            let r = sim::simulate_pp(&model, &grid, &nnz, k, sweeps, sweeps, p);
+            let r = sim::simulate_pp_sweep(
+                &model,
+                &grid,
+                &nnz,
+                k,
+                sweeps,
+                sweeps,
+                p,
+                sim::ScheduleMode::Barrier,
+                sweep_mode,
+                chunks,
+            );
             pts.push((p, r.total));
             println!(
                 "  nodes={p:<7} wall={:<12} (a={} b={} c={})",

@@ -10,6 +10,7 @@ use crate::data::sparse::Coo;
 pub struct CoverageReport {
     /// (z, nominal coverage, empirical coverage).
     pub rows: Vec<(f64, f64, f64)>,
+    /// Held-out observations evaluated.
     pub n: usize,
 }
 

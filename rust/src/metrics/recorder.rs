@@ -9,25 +9,34 @@ use std::collections::BTreeMap;
 pub struct Recorder {
     series: BTreeMap<String, Vec<(f64, f64)>>,
     scalars: BTreeMap<String, f64>,
+    /// Pipelined chunk publications observed — a plain counter because
+    /// `ChunkExchanged` fires from sampling worker threads at chunk rate,
+    /// too hot for a per-event map lookup.
+    chunks_exchanged: u64,
 }
 
 impl Recorder {
+    /// An empty recorder.
     pub fn new() -> Recorder {
         Recorder::default()
     }
 
+    /// Append `(x, y)` to the named series.
     pub fn point(&mut self, series: &str, x: f64, y: f64) {
         self.series.entry(series.to_string()).or_default().push((x, y));
     }
 
+    /// Set a named scalar result (overwrites).
     pub fn scalar(&mut self, name: &str, value: f64) {
         self.scalars.insert(name.to_string(), value);
     }
 
+    /// Read back a scalar, if recorded.
     pub fn get_scalar(&self, name: &str) -> Option<f64> {
         self.scalars.get(name).copied()
     }
 
+    /// Read back a series, if any points were recorded.
     pub fn get_series(&self, name: &str) -> Option<&[(f64, f64)]> {
         self.series.get(name).map(|v| v.as_slice())
     }
@@ -50,10 +59,12 @@ impl Recorder {
                 self.scalar("train_secs", *secs);
                 self.scalar("blocks", *blocks as f64);
             }
+            TrainEvent::ChunkExchanged { .. } => self.chunks_exchanged += 1,
             TrainEvent::PhaseStarted { .. } => {}
         }
     }
 
+    /// Serialize all series and scalars as a JSON object.
     pub fn to_json(&self) -> Json {
         let series = Json::Obj(
             self.series
@@ -70,12 +81,16 @@ impl Recorder {
                 })
                 .collect(),
         );
-        let scalars = Json::Obj(
-            self.scalars.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect(),
-        );
-        Json::obj(vec![("series", series), ("scalars", scalars)])
+        let mut scalars: BTreeMap<String, Json> =
+            self.scalars.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect();
+        if self.chunks_exchanged > 0 {
+            scalars
+                .insert("chunks_exchanged".to_string(), Json::Num(self.chunks_exchanged as f64));
+        }
+        Json::obj(vec![("series", series), ("scalars", Json::Obj(scalars))])
     }
 
+    /// Write the JSON dump to `path` (pretty-printed).
     pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
         std::fs::write(path, crate::util::json::to_string_pretty(&self.to_json()))
     }
@@ -103,9 +118,18 @@ mod tests {
 
     #[test]
     fn observes_train_events() {
-        use crate::coordinator::{PpPhase, TrainEvent};
+        use crate::coordinator::{FactorSide, PpPhase, TrainEvent};
         let mut r = Recorder::new();
         r.observe(&TrainEvent::PhaseStarted { phase: PpPhase::A });
+        for chunk in 0..3 {
+            r.observe(&TrainEvent::ChunkExchanged {
+                node: (0, 0),
+                side: FactorSide::U,
+                sweep: 1,
+                chunk,
+                seq: chunk as u64 + 1,
+            });
+        }
         r.observe(&TrainEvent::SweepSample { node: (0, 0), sweep: 3, rmse: 0.9 });
         r.observe(&TrainEvent::SweepSample { node: (0, 0), sweep: 4, rmse: 0.8 });
         r.observe(&TrainEvent::BlockCompleted {
@@ -119,6 +143,12 @@ mod tests {
         assert_eq!(r.get_series("block_secs").unwrap(), &[(0.0, 1.5)]);
         assert_eq!(r.get_scalar("train_secs"), Some(2.0));
         assert_eq!(r.get_scalar("blocks"), Some(1.0));
+        // chunk publications land in the JSON dump as one scalar count
+        let j = r.to_json();
+        assert_eq!(
+            j.get("scalars").unwrap().get("chunks_exchanged").unwrap().as_f64(),
+            Some(3.0)
+        );
     }
 
     #[test]

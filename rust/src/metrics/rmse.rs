@@ -5,21 +5,26 @@ use crate::data::sparse::Coo;
 /// Streaming SSE accumulator → RMSE.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct SseAccumulator {
+    /// Sum of squared errors so far.
     pub sse: f64,
+    /// Observations accumulated.
     pub count: f64,
 }
 
 impl SseAccumulator {
+    /// Fold in a partial SSE over `count` observations.
     pub fn add(&mut self, sse: f64, count: f64) {
         self.sse += sse;
         self.count += count;
     }
 
+    /// Fold in another accumulator.
     pub fn merge(&mut self, other: &SseAccumulator) {
         self.sse += other.sse;
         self.count += other.count;
     }
 
+    /// RMSE of everything accumulated (NaN when empty).
     pub fn rmse(&self) -> f64 {
         if self.count == 0.0 {
             f64::NAN

@@ -10,24 +10,33 @@ use crate::data::sparse::Coo;
 /// Identifies one block of the grid.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct BlockId {
+    /// Row-block index.
     pub i: usize,
+    /// Column-block index.
     pub j: usize,
 }
 
 /// The PP phase a block belongs to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
+    /// Block (0,0): fresh priors both sides.
     A,
+    /// First row / first column blocks.
     B,
+    /// Interior blocks.
     C,
 }
 
 /// An I×J partition of an N×D matrix.
 #[derive(Debug, Clone)]
 pub struct Grid {
+    /// Matrix rows covered.
     pub rows: usize,
+    /// Matrix columns covered.
     pub cols: usize,
+    /// Number of row-blocks (I).
     pub i_blocks: usize,
+    /// Number of column-blocks (J).
     pub j_blocks: usize,
     /// Row range boundaries, length i_blocks + 1.
     pub row_bounds: Vec<usize>,
@@ -50,6 +59,7 @@ fn bounds(total: usize, parts: usize) -> Vec<usize> {
 }
 
 impl Grid {
+    /// Near-equal I×J partition of a rows × cols matrix.
     pub fn new(rows: usize, cols: usize, i_blocks: usize, j_blocks: usize) -> Grid {
         assert!(i_blocks >= 1 && j_blocks >= 1, "grid must be at least 1x1");
         assert!(i_blocks <= rows && j_blocks <= cols, "more blocks than rows/cols");
@@ -63,18 +73,22 @@ impl Grid {
         }
     }
 
+    /// Total block count I·J.
     pub fn n_blocks(&self) -> usize {
         self.i_blocks * self.j_blocks
     }
 
+    /// Row range [start, end) of row-block `i`.
     pub fn row_range(&self, i: usize) -> (usize, usize) {
         (self.row_bounds[i], self.row_bounds[i + 1])
     }
 
+    /// Column range [start, end) of column-block `j`.
     pub fn col_range(&self, j: usize) -> (usize, usize) {
         (self.col_bounds[j], self.col_bounds[j + 1])
     }
 
+    /// (rows, cols) of one block.
     pub fn block_shape(&self, id: BlockId) -> (usize, usize) {
         let (r0, r1) = self.row_range(id.i);
         let (c0, c1) = self.col_range(id.j);
@@ -90,11 +104,13 @@ impl Grid {
         }
     }
 
+    /// All blocks in row-major (i, j) order.
     pub fn blocks(&self) -> impl Iterator<Item = BlockId> + '_ {
         (0..self.i_blocks)
             .flat_map(move |i| (0..self.j_blocks).map(move |j| BlockId { i, j }))
     }
 
+    /// The blocks belonging to one PP phase.
     pub fn blocks_in_phase(&self, phase: Phase) -> Vec<BlockId> {
         self.blocks().filter(|b| self.phase(*b) == phase).collect()
     }

@@ -11,7 +11,9 @@ use crate::linalg::{Cholesky, Mat};
 /// N independent K-dimensional Gaussians: per-row mean and precision.
 #[derive(Debug, Clone)]
 pub struct RowGaussians {
+    /// Number of rows (independent Gaussians).
     pub n: usize,
+    /// Dimension of each Gaussian.
     pub k: usize,
     /// Means, row-major (n × k).
     pub mean: Vec<f64>,
@@ -42,10 +44,12 @@ impl RowGaussians {
         RowGaussians::broadcast(n, &vec![0.0; k], &Mat::scaled_eye(k, alpha))
     }
 
+    /// Mean of row `i`.
     pub fn row_mean(&self, i: usize) -> &[f64] {
         &self.mean[i * self.k..(i + 1) * self.k]
     }
 
+    /// Precision matrix of row `i` (copied into a `Mat`).
     pub fn row_prec(&self, i: usize) -> Mat {
         let kk = self.k * self.k;
         Mat::from_vec(self.k, self.k, self.prec[i * kk..(i + 1) * kk].to_vec())

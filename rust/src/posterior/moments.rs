@@ -11,14 +11,18 @@ use crate::linalg::{Cholesky, Mat};
 /// Streaming first/second moments for N rows of dimension K.
 #[derive(Debug, Clone)]
 pub struct RunningMoments {
+    /// Rows tracked.
     pub n: usize,
+    /// Dimension per row.
     pub k: usize,
+    /// Samples accumulated so far.
     pub count: usize,
     sum: Vec<f64>,     // n × k
     sum_sq: Vec<f64>,  // n × k × k (outer products)
 }
 
 impl RunningMoments {
+    /// Zeroed accumulator for `n` rows of dimension `k`.
     pub fn new(n: usize, k: usize) -> RunningMoments {
         RunningMoments { n, k, count: 0, sum: vec![0.0; n * k], sum_sq: vec![0.0; n * k * k] }
     }

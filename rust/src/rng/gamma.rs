@@ -13,11 +13,13 @@ pub struct Gamma {
 }
 
 impl Gamma {
+    /// Sampler for Gamma(shape, scale); both parameters must be positive.
     pub fn new(shape: f64, scale: f64) -> Gamma {
         assert!(shape > 0.0 && scale > 0.0, "gamma params must be positive");
         Gamma { shape, scale }
     }
 
+    /// Draw one variate.
     pub fn sample(&self, rng: &mut Rng) -> f64 {
         self.scale * sample_standard(rng, self.shape)
     }

@@ -9,6 +9,7 @@ pub struct StdNormal {
 }
 
 impl StdNormal {
+    /// Sampler with an empty cache.
     pub fn new() -> Self {
         Self::default()
     }

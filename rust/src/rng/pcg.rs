@@ -40,6 +40,7 @@ impl Rng {
         Rng::seed_from_u64(splitmix64(&mut sm))
     }
 
+    /// Next raw 64-bit output of the generator.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[0]

@@ -12,31 +12,56 @@ use std::path::{Path, PathBuf};
 /// One AOT artifact entry.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ArtifactSpec {
+    /// Unique artifact name (the HLO file stem).
     pub name: String,
     /// "sample_side" or "predict_sse".
     pub kind: String,
+    /// Padded row capacity.
     pub n: usize,
+    /// Padded column capacity.
     pub d: usize,
+    /// Latent dimension the artifact was lowered for.
     pub k: usize,
+    /// HLO text file name inside the artifact directory.
     pub file: String,
     /// "pallas" or "ref" — which L1 implementation was lowered in.
     pub flavor: String,
 }
 
+/// Why the artifact registry could not be loaded or queried.
 #[derive(Debug, thiserror::Error)]
 pub enum ManifestError {
+    /// The manifest file could not be read.
     #[error("io error reading {path}: {err}")]
-    Io { path: String, err: std::io::Error },
+    Io {
+        /// Path that failed to read.
+        path: String,
+        /// Underlying IO error.
+        err: std::io::Error,
+    },
+    /// The manifest JSON was malformed.
     #[error("manifest parse error: {0}")]
     Parse(String),
+    /// No registered artifact shape covers the requested block.
     #[error("no registered {kind} artifact fits n={n} d={d} k={k}")]
-    NoFit { kind: String, n: usize, d: usize, k: usize },
+    NoFit {
+        /// Artifact kind requested.
+        kind: String,
+        /// Required row capacity.
+        n: usize,
+        /// Required column capacity.
+        d: usize,
+        /// Required latent dimension.
+        k: usize,
+    },
 }
 
 /// The parsed artifact registry.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Directory the artifacts live in.
     pub dir: PathBuf,
+    /// Registered artifact entries.
     pub artifacts: Vec<ArtifactSpec>,
 }
 
@@ -49,6 +74,7 @@ impl Manifest {
         Self::parse(dir, &text)
     }
 
+    /// Parse manifest JSON text rooted at `dir`.
     pub fn parse(dir: &Path, text: &str) -> Result<Manifest, ManifestError> {
         let root = json::parse(text).map_err(|e| ManifestError::Parse(e.to_string()))?;
         let arts = root

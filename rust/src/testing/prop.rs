@@ -11,6 +11,7 @@ use crate::rng::Rng;
 
 /// Context handed to generators: RNG + shrink level (0 = full size).
 pub struct Gen<'a> {
+    /// The case's reproducible RNG.
     pub rng: &'a mut Rng,
     /// 0 = full-size inputs; higher values should produce smaller inputs.
     pub shrink: u32,
@@ -23,14 +24,17 @@ impl<'a> Gen<'a> {
         lo + self.rng.below(hi_eff - lo + 1)
     }
 
+    /// A uniform f64 in [lo, hi).
     pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
         lo + self.rng.uniform() * (hi - lo)
     }
 
+    /// A uniform usize in [lo, hi].
     pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
         lo + self.rng.below(hi - lo + 1)
     }
 
+    /// A uniformly chosen element of `xs`.
     pub fn pick<'t, T>(&mut self, xs: &'t [T]) -> &'t T {
         &xs[self.rng.below(xs.len())]
     }

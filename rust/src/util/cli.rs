@@ -8,7 +8,9 @@ use std::collections::BTreeMap;
 /// Parsed command line.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// First bare word, if any (the subcommand name).
     pub subcommand: Option<String>,
+    /// Remaining bare words after the subcommand.
     pub positional: Vec<String>,
     flags: BTreeMap<String, String>,
     /// Flags actually consumed by `get`/`has` — used for unknown-flag checks.
@@ -56,32 +58,39 @@ impl Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// True if the flag was provided (marks it consumed).
     pub fn has(&self, key: &str) -> bool {
         self.seen.borrow_mut().insert(key.to_string());
         self.flags.contains_key(key)
     }
 
+    /// The flag's raw value, if provided (marks it consumed).
     pub fn get(&self, key: &str) -> Option<&str> {
         self.seen.borrow_mut().insert(key.to_string());
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// The flag's raw value, or `default` when absent.
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
 
+    /// The flag parsed as `usize`, or `default` when absent/unparsable.
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// The flag parsed as `f64`, or `default` when absent/unparsable.
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// The flag parsed as `u64`, or `default` when absent/unparsable.
     pub fn u64_or(&self, key: &str, default: u64) -> u64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// The flag parsed as `bool`, or `default` when absent/unparsable.
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }

@@ -10,10 +10,15 @@ use std::fmt;
 /// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
     /// Object. BTreeMap gives deterministic iteration; key order is not
     /// semantically meaningful in JSON.
@@ -21,33 +26,39 @@ pub enum Json {
 }
 
 impl Json {
+    /// The number, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
             _ => None,
         }
     }
+    /// The number truncated to `usize`, if this is a `Num`.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|f| f as usize)
     }
+    /// The string, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The boolean, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// The elements, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
             _ => None,
         }
     }
+    /// Member lookup, if this is an `Obj`.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -90,7 +101,9 @@ impl From<bool> for Json {
 #[derive(Debug, thiserror::Error)]
 #[error("json parse error at byte {at}: {msg}")]
 pub struct JsonError {
+    /// Byte offset of the failure in the input.
     pub at: usize,
+    /// What the parser expected or found.
     pub msg: String,
 }
 

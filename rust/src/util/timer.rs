@@ -8,12 +8,15 @@ pub struct Stopwatch {
 }
 
 impl Stopwatch {
+    /// Start timing now.
     pub fn start() -> Self {
         Stopwatch { start: Instant::now() }
     }
+    /// Time elapsed since start.
     pub fn elapsed(&self) -> Duration {
         self.start.elapsed()
     }
+    /// Seconds elapsed since start.
     pub fn secs(&self) -> f64 {
         self.elapsed().as_secs_f64()
     }
