@@ -66,7 +66,7 @@ fn main() -> anyhow::Result<()> {
         for event in session.events() {
             recorder.observe(&event);
         }
-        let result = session.wait()?;
+        let result = session.wait()?.into_result()?;
         let rmse = result.rmse(&test);
         total_sweeps = result.stats.sweeps;
         println!(

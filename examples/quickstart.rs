@@ -39,6 +39,8 @@ fn main() -> anyhow::Result<()> {
         .with_seed(1);
 
     // 3. submit and watch the run live: phases (a), (b), (c) + aggregation
+    //    (the session handle could also pause/resume/cancel the run —
+    //    see `bmf-pp jobs` for the multi-session lifecycle demo)
     let session = engine.submit(cfg, &train)?;
     for event in session.events() {
         match event {
@@ -50,10 +52,12 @@ fn main() -> anyhow::Result<()> {
                 println!("  finished: {blocks} blocks in {secs:.2}s")
             }
             TrainEvent::SweepSample { .. } => {} // per-sweep RMSE, see movielens_e2e
-            TrainEvent::ChunkExchanged { .. } => {} // pipelined sweeps only
+            _ => {} // chunk exchange / lifecycle events, not used here
         }
     }
-    let result = session.wait()?;
+    // wait() reports how the run ended; into_result() treats a cancel
+    // (impossible here — nobody cancels) as an error
+    let result = session.wait()?.into_result()?;
 
     // 4. evaluate the servable model
     let model = &result.model;

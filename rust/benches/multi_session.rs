@@ -1,0 +1,144 @@
+//! §Multi-session bench: what the multi-tenant engine buys and costs.
+//!
+//!   M1 — two concurrent sessions vs back-to-back on one warm engine:
+//!        wall-clock overlap, with a bitwise assert that interleaving
+//!        never changes either posterior.
+//!   M2 — priority latency: a small High-priority job submitted after a
+//!        wide Low-priority one must land first (the queue-jump the
+//!        shared ready-queue exists for), measured as completion times.
+//!   M3 — cancel + resume: time to abort with a v3 checkpoint and the
+//!        compute saved by resuming vs retraining from scratch, with a
+//!        bitwise assert on the resumed posterior.
+//!
+//!     cargo bench --bench multi_session
+
+mod common;
+
+use bmf_pp::coordinator::config::auto_tau;
+use bmf_pp::coordinator::{BackendSpec, Engine, Priority, TrainConfig, TrainOutcome};
+use bmf_pp::util::timer::Stopwatch;
+
+fn main() {
+    bmf_pp::util::logging::init();
+    let mut results = Vec::new();
+    let (_, train, _) = common::bench_dataset("movielens");
+    let tau = auto_tau(&train);
+    let k = 8;
+    let cfg = |grid: (usize, usize), samples: usize, seed: u64| {
+        TrainConfig::new(k)
+            .with_backend(BackendSpec::Native)
+            .with_grid(grid.0, grid.1)
+            .with_sweeps(6, samples)
+            .with_tau(tau)
+            .with_seed(seed)
+    };
+
+    println!("M1 — two 3x3 sessions: concurrent vs sequential on one warm engine");
+    {
+        let engine = Engine::new(&BackendSpec::Native, 4);
+        // warm the pool
+        engine.train(&cfg((2, 2), 4, 1), &train).unwrap();
+
+        let sw = Stopwatch::start();
+        let r1 = engine.train(&cfg((3, 3), 12, 2), &train).unwrap();
+        let r2 = engine.train(&cfg((3, 3), 12, 3), &train).unwrap();
+        let sequential = sw.secs();
+
+        let sw = Stopwatch::start();
+        let s1 = engine.submit(cfg((3, 3), 12, 2), &train).unwrap();
+        let s2 = engine.submit(cfg((3, 3), 12, 3), &train).unwrap();
+        let c1 = s1.wait().unwrap().into_result().unwrap();
+        let c2 = s2.wait().unwrap().into_result().unwrap();
+        let concurrent = sw.secs();
+
+        // interleaving two jobs on one queue must not move a single bit
+        assert_eq!(c1.u_post.mean, r1.u_post.mean, "job 1 posterior changed");
+        assert_eq!(c2.u_post.mean, r2.u_post.mean, "job 2 posterior changed");
+        println!(
+            "  sequential {sequential:.2}s vs concurrent {concurrent:.2}s ({:.2}x)",
+            sequential / concurrent.max(1e-9)
+        );
+        results.push(("m1_sequential_secs".to_string(), sequential));
+        results.push(("m1_concurrent_secs".to_string(), concurrent));
+    }
+
+    common::hr();
+    println!("M2 — High-priority 2x2 job submitted after a wide Low-priority 4x4 job");
+    {
+        let engine = Engine::new(&BackendSpec::Native, 2);
+        engine.train(&cfg((2, 2), 4, 4), &train).unwrap(); // warm
+
+        let sw = Stopwatch::start();
+        let low = engine
+            .submit(cfg((4, 4), 16, 5).with_priority(Priority::Low), &train)
+            .unwrap();
+        let high = engine
+            .submit(cfg((2, 2), 6, 6).with_priority(Priority::High), &train)
+            .unwrap();
+        high.wait().unwrap().into_result().unwrap();
+        let t_high = sw.secs();
+        let low_done_when_high_landed = low.status().is_terminal();
+        low.wait().unwrap().into_result().unwrap();
+        let t_low = sw.secs();
+
+        // the acceptance property: the late High job finishes first
+        assert!(
+            !low_done_when_high_landed && t_high < t_low,
+            "high-priority job did not overtake: high {t_high:.2}s vs low {t_low:.2}s"
+        );
+        println!("  high landed at {t_high:.2}s, wide low job at {t_low:.2}s");
+        results.push(("m2_high_secs".to_string(), t_high));
+        results.push(("m2_low_secs".to_string(), t_low));
+    }
+
+    common::hr();
+    println!("M3 — cancel with v3 checkpoint, then resume vs retrain");
+    {
+        let engine = Engine::new(&BackendSpec::Native, 2);
+        let ckpt = std::env::temp_dir()
+            .join(format!("bmfpp_bench_abort_{}.json", std::process::id()));
+        let base = cfg((3, 3), 16, 7);
+        engine.train(&cfg((2, 2), 4, 7), &train).unwrap(); // warm
+
+        let session = engine
+            .submit(base.clone().with_checkpoint_on_cancel(ckpt.clone()), &train)
+            .unwrap();
+        while session.progress().0 < 3 && !session.status().is_terminal() {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        session.cancel();
+        match session.wait().unwrap() {
+            TrainOutcome::Cancelled(info) => {
+                println!(
+                    "  cancelled after {} blocks, checkpoint: {}",
+                    info.blocks_completed,
+                    info.checkpoint.is_some()
+                );
+                let sw = Stopwatch::start();
+                let resumed =
+                    engine.train(&base.clone().with_resume_from(ckpt.clone()), &train).unwrap();
+                let t_resume = sw.secs();
+                let sw = Stopwatch::start();
+                let full = engine.train(&base, &train).unwrap();
+                let t_full = sw.secs();
+                assert_eq!(
+                    resumed.u_post.mean, full.u_post.mean,
+                    "resume diverged from the uninterrupted run"
+                );
+                assert_eq!(resumed.stats.blocks_restored, info.blocks_completed);
+                println!(
+                    "  resume {t_resume:.2}s vs retrain {t_full:.2}s ({} blocks restored)",
+                    resumed.stats.blocks_restored
+                );
+                results.push(("m3_resume_secs".to_string(), t_resume));
+                results.push(("m3_retrain_secs".to_string(), t_full));
+            }
+            TrainOutcome::Completed(_) => {
+                println!("  run finished before the cancel landed; skipping resume timing");
+            }
+        }
+        std::fs::remove_file(ckpt).ok();
+    }
+
+    common::save_json("multi_session.json", &results);
+}

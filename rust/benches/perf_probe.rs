@@ -14,7 +14,7 @@ mod common;
 
 use bmf_pp::coordinator::config::auto_tau;
 use bmf_pp::coordinator::Engine as TrainEngine;
-use bmf_pp::coordinator::{BackendSpec, PpTrainer, TrainConfig};
+use bmf_pp::coordinator::{BackendSpec, TrainConfig};
 use bmf_pp::data::sparse::{Coo, Csr};
 use bmf_pp::gibbs::native::sample_side_native;
 use bmf_pp::posterior::RowGaussians;
@@ -162,7 +162,8 @@ fn main() {
             .with_tau(auto_tau(&train))
             .with_seed(6);
         let sw = Stopwatch::start();
-        PpTrainer::new(cfg.clone()).train(&train).unwrap(); // cold: fresh pool, compiles inside
+        // cold: fresh single-run engine, compiles inside
+        TrainEngine::new(&cfg.backend, cfg.block_parallelism).train(&cfg, &train).unwrap();
         let cold = sw.secs();
         let engine = TrainEngine::new(&cfg.backend, cfg.block_parallelism);
         engine.train(&cfg, &train).unwrap(); // warm the engine's pool

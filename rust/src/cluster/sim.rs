@@ -22,6 +22,21 @@ pub enum ScheduleMode {
     Dag,
 }
 
+/// How the DAG schedule sizes a block's node group at dispatch time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WidthPolicy {
+    /// Every block keeps the width the barrier schedule's LPT wave plan
+    /// assigned it, whatever is free when it dispatches.
+    #[default]
+    Static,
+    /// Node-group widths grow dynamically as blocks free nodes: a
+    /// dispatching block takes `free / ready` nodes (at least its planned
+    /// width, at most its saturation knee), so idle nodes left by a
+    /// drained ready-queue — straggler tails, ragged last waves — are
+    /// folded into the blocks that are actually runnable.
+    Dynamic,
+}
+
 /// Simulated wall-clock of a full PP run.
 #[derive(Debug, Clone, Copy)]
 pub struct SimResult {
@@ -137,7 +152,8 @@ pub fn simulate_pp_sweep(
     )
 }
 
-/// Simulate a full PP run over a partitioned workload under `mode`.
+/// Simulate a full PP run over a partitioned workload under `mode`
+/// (DAG widths stay static; see [`simulate_pp_mode_widths`]).
 #[allow(clippy::too_many_arguments)]
 pub fn simulate_pp_mode(
     model: &ClusterModel,
@@ -149,9 +165,40 @@ pub fn simulate_pp_mode(
     p: usize,
     mode: ScheduleMode,
 ) -> SimResult {
+    simulate_pp_mode_widths(
+        model,
+        grid,
+        block_nnz,
+        k,
+        sweeps_a,
+        sweeps_bc,
+        p,
+        mode,
+        WidthPolicy::Static,
+    )
+}
+
+/// [`simulate_pp_mode`] with an explicit DAG [`WidthPolicy`]. The barrier
+/// schedule ignores the policy — its wave widths are fixed by
+/// construction; under [`ScheduleMode::Dag`] with
+/// [`WidthPolicy::Dynamic`], node-group widths grow as blocks free nodes.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_pp_mode_widths(
+    model: &ClusterModel,
+    grid: &Grid,
+    block_nnz: &[Vec<usize>],
+    k: usize,
+    sweeps_a: usize,
+    sweeps_bc: usize,
+    p: usize,
+    mode: ScheduleMode,
+    policy: WidthPolicy,
+) -> SimResult {
     match mode {
         ScheduleMode::Barrier => simulate_pp(model, grid, block_nnz, k, sweeps_a, sweeps_bc, p),
-        ScheduleMode::Dag => simulate_pp_dag(model, grid, block_nnz, k, sweeps_a, sweeps_bc, p),
+        ScheduleMode::Dag => {
+            simulate_pp_dag(model, grid, block_nnz, k, sweeps_a, sweeps_bc, p, policy)
+        }
     }
 }
 
@@ -211,13 +258,19 @@ pub fn simulate_pp(
 /// phase-(c) blocks overlap phase-(b) stragglers exactly as the
 /// coordinator's `DagScheduler` overlaps them.
 ///
-/// Each block keeps the node-group width the barrier schedule would have
-/// assigned it (LPT waves, `w = p / group`), and dispatch follows strict
-/// wave priority (a later-wave block never bypasses an earlier one that is
-/// waiting for nodes). With identical widths and priorities, removing the
-/// phase barriers can only move start times earlier — the DAG schedule is
-/// never slower than the barrier schedule, and strictly faster whenever a
-/// straggler block holds a phase open.
+/// Each block's *planned* width is the one the barrier schedule would
+/// have assigned it (LPT waves, `w = p / group`), and dispatch follows
+/// strict wave priority (a later-wave block never bypasses an earlier one
+/// that is waiting for nodes). Under [`WidthPolicy::Static`] blocks keep
+/// exactly those widths: removing the phase barriers can then only move
+/// start times earlier, so the DAG schedule is never slower than the
+/// barrier schedule, and strictly faster whenever a straggler block holds
+/// a phase open. Under [`WidthPolicy::Dynamic`] a dispatching block may
+/// additionally absorb nodes freed by finished blocks — its fair share of
+/// the free pool (`free / ready`), capped at its saturation knee and only
+/// taken when that strictly shrinks the block — which folds the idle
+/// tails behind stragglers and ragged last waves back into useful width.
+#[allow(clippy::too_many_arguments)]
 fn simulate_pp_dag(
     model: &ClusterModel,
     grid: &Grid,
@@ -226,12 +279,15 @@ fn simulate_pp_dag(
     sweeps_a: usize,
     sweeps_bc: usize,
     p: usize,
+    policy: WidthPolicy,
 ) -> SimResult {
     struct Node {
         deps: Vec<usize>,
         secs: f64,
         width: usize,
         phase: usize,
+        cost: BlockCost,
+        sweeps: usize,
     }
     let p = p.max(1);
     let cost = |i: usize, j: usize| {
@@ -242,7 +298,7 @@ fn simulate_pp_dag(
     // (LPT order, shared lpt_wave_widths formula)
     let wave_plan = |mut blocks: Vec<((usize, usize), BlockCost)>,
                      sweeps: usize|
-     -> Vec<((usize, usize), usize, f64)> {
+     -> Vec<((usize, usize), usize, f64, BlockCost)> {
         blocks.sort_by(|a, b| {
             model
                 .block_compute_secs(&b.1, k, sweeps)
@@ -252,7 +308,7 @@ fn simulate_pp_dag(
         let mut out = Vec::with_capacity(blocks.len());
         for (start, group, w) in lpt_wave_widths(blocks.len(), p) {
             for (key, b) in &blocks[start..start + group] {
-                out.push((*key, w, model.block_secs(b, k, sweeps, w)));
+                out.push((*key, w, model.block_secs(b, k, sweeps, w), *b));
             }
         }
         out
@@ -264,6 +320,8 @@ fn simulate_pp_dag(
         secs: model.block_secs(&cost(0, 0), k, sweeps_a, p),
         width: p,
         phase: 0,
+        cost: cost(0, 0),
+        sweeps: sweeps_a,
     }];
     let mut b_blocks = Vec::new();
     for i in 1..grid.i_blocks {
@@ -274,13 +332,13 @@ fn simulate_pp_dag(
     }
     let mut row_id = vec![0usize; grid.i_blocks];
     let mut col_id = vec![0usize; grid.j_blocks];
-    for ((i, j), w, secs) in wave_plan(b_blocks, sweeps_bc) {
+    for ((i, j), w, secs, bc) in wave_plan(b_blocks, sweeps_bc) {
         if j == 0 {
             row_id[i] = nodes.len();
         } else {
             col_id[j] = nodes.len();
         }
-        nodes.push(Node { deps: vec![0], secs, width: w, phase: 1 });
+        nodes.push(Node { deps: vec![0], secs, width: w, phase: 1, cost: bc, sweeps: sweeps_bc });
     }
     let mut c_blocks = Vec::new();
     for i in 1..grid.i_blocks {
@@ -288,8 +346,15 @@ fn simulate_pp_dag(
             c_blocks.push(((i, j), cost(i, j)));
         }
     }
-    for ((i, j), w, secs) in wave_plan(c_blocks, sweeps_bc) {
-        nodes.push(Node { deps: vec![row_id[i], col_id[j]], secs, width: w, phase: 2 });
+    for ((i, j), w, secs, bc) in wave_plan(c_blocks, sweeps_bc) {
+        nodes.push(Node {
+            deps: vec![row_id[i], col_id[j]],
+            secs,
+            width: w,
+            phase: 2,
+            cost: bc,
+            sweeps: sweeps_bc,
+        });
     }
 
     let n = nodes.len();
@@ -313,14 +378,33 @@ fn simulate_pp_dag(
         // ready block whose node group does not fit — no bypassing
         ready.sort_unstable();
         while let Some(&id) = ready.first() {
-            let w = nodes[id].width;
-            if w > free {
+            let planned = nodes[id].width;
+            if planned > free {
                 break;
             }
             ready.remove(0);
+            let (w, secs) = match policy {
+                WidthPolicy::Static => (planned, nodes[id].secs),
+                WidthPolicy::Dynamic => {
+                    // fair share of the free pool among everything
+                    // runnable right now, never below the planned width,
+                    // never past the block's strong-scaling knee, and
+                    // only taken when it strictly shrinks the block
+                    let fair = free / (ready.len() + 1);
+                    let sat = model.saturation_nodes(&nodes[id].cost, k, nodes[id].sweeps);
+                    let w_dyn = planned.max(fair.min(sat));
+                    let s_dyn =
+                        model.block_secs(&nodes[id].cost, k, nodes[id].sweeps, w_dyn);
+                    if w_dyn > planned && s_dyn < nodes[id].secs {
+                        (w_dyn, s_dyn)
+                    } else {
+                        (planned, nodes[id].secs)
+                    }
+                }
+            };
             free -= w;
-            node_secs += nodes[id].secs * w as f64;
-            running.push((now + nodes[id].secs, id, w));
+            node_secs += secs * w as f64;
+            running.push((now + secs, id, w));
         }
         // advance to the earliest completion
         let mut best = 0usize;
@@ -505,6 +589,69 @@ mod tests {
         let dag = simulate_pp_mode(&m, &g, &nnz, 16, 20, 20, 1, ScheduleMode::Dag);
         assert!((dag.total - bar.total).abs() < 1e-9 * bar.total.max(1.0));
         assert!((dag.node_secs - bar.node_secs).abs() < 1e-9 * bar.node_secs.max(1.0));
+    }
+
+    #[test]
+    fn dynamic_widths_never_slower_than_static() {
+        // across grids, node counts, and a straggler, letting ready blocks
+        // absorb freed nodes must never cost wall-clock (same tolerance as
+        // the barrier-vs-dag assert)
+        for (gi, gj) in [(3usize, 3usize), (4, 4), (5, 2)] {
+            let (m, g, mut nnz) = setup(gi, gj);
+            nnz[1][0] *= 6; // phase-(b) straggler leaves idle tails behind
+            for p in [1usize, 2, 4, 8, 16, 64] {
+                let stat = simulate_pp_mode_widths(
+                    &m, &g, &nnz, 16, 20, 20, p, ScheduleMode::Dag, WidthPolicy::Static,
+                );
+                let dynw = simulate_pp_mode_widths(
+                    &m, &g, &nnz, 16, 20, 20, p, ScheduleMode::Dag, WidthPolicy::Dynamic,
+                );
+                assert!(
+                    dynw.total <= stat.total * 1.05,
+                    "{gi}x{gj} p={p}: dynamic {} vs static {}",
+                    dynw.total,
+                    stat.total
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dynamic_widths_fold_idle_nodes_into_straggler_tails() {
+        // 3x3 with a 10x phase-(b) straggler at p=4: statically, the c
+        // blocks released by the straggler run at their planned width 1
+        // while 2-3 nodes idle; dynamically they absorb the free nodes
+        // and the tail shrinks strictly
+        let (m, g, mut nnz) = setup(3, 3);
+        nnz[1][0] *= 10;
+        let p = 4;
+        let stat = simulate_pp_mode_widths(
+            &m, &g, &nnz, 16, 20, 20, p, ScheduleMode::Dag, WidthPolicy::Static,
+        );
+        let dynw = simulate_pp_mode_widths(
+            &m, &g, &nnz, 16, 20, 20, p, ScheduleMode::Dag, WidthPolicy::Dynamic,
+        );
+        assert!(
+            dynw.total < stat.total,
+            "dynamic {} should beat static {}",
+            dynw.total,
+            stat.total
+        );
+        // widened groups consume more node-seconds, never fewer
+        assert!(dynw.node_secs >= stat.node_secs * 0.999);
+    }
+
+    #[test]
+    fn dynamic_widths_match_static_at_one_node() {
+        // with a single node there is never anything free to absorb
+        let (m, g, nnz) = setup(3, 3);
+        let stat = simulate_pp_mode_widths(
+            &m, &g, &nnz, 16, 20, 20, 1, ScheduleMode::Dag, WidthPolicy::Static,
+        );
+        let dynw = simulate_pp_mode_widths(
+            &m, &g, &nnz, 16, 20, 20, 1, ScheduleMode::Dag, WidthPolicy::Dynamic,
+        );
+        assert!((dynw.total - stat.total).abs() < 1e-12 * stat.total.max(1.0));
     }
 
     #[test]

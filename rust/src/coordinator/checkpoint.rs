@@ -6,13 +6,23 @@
 //! (timings, scheduling stats) describe a run, not a model, and never
 //! enter the checkpoint.
 //!
-//! **Version gate:** the writer emits format v2 (v1's unused grid fields
-//! dropped). The loader accepts v1 and v2; anything outside that range —
-//! a pre-versioning v0 file, or a file written by a future format — is
-//! rejected with a [`CheckpointError::Malformed`] naming the version
-//! found and the supported range, instead of decoding it with wrong
-//! assumptions.
+//! **Version gate:** the model writer emits format v2 (v1's unused grid
+//! fields dropped). The model loader accepts v1 and v2; anything outside
+//! that range — a pre-versioning v0 file, or a file written by a future
+//! format — is rejected with a [`CheckpointError::Malformed`] naming the
+//! version found and the supported range, instead of decoding it with
+//! wrong assumptions.
+//!
+//! **Partial checkpoints (v3):** a cancelled training run persists the
+//! posteriors of every *completed block* as a format-v3 file
+//! ([`save_partial`] / [`load_partial`], [`PARTIAL_VERSION`]) so the job
+//! can later resume via `TrainConfig::resume_from` without re-sampling
+//! those blocks. v3 files are not models: feeding one to [`load`] fails
+//! with an error naming the found and supported versions plus a pointer
+//! at the resume path, and feeding a v1/v2 model to [`load_partial`]
+//! fails symmetrically.
 
+use super::block_task::BlockPosteriors;
 use crate::posterior::{PosteriorModel, RowGaussians};
 use crate::util::json::{self, Json};
 use std::path::Path;
@@ -87,9 +97,17 @@ pub fn load(path: &Path) -> Result<PosteriorModel, CheckpointError> {
     let version = root.get("version").and_then(Json::as_usize).ok_or_else(|| bad("version"))?;
     let (oldest, newest) = SUPPORTED_VERSIONS;
     if version < oldest || version > newest {
+        // a real v3 file is a partial *training* checkpoint, not a model —
+        // say so instead of only rejecting the number
+        let hint = if version == PARTIAL_VERSION && root.get("blocks").is_some() {
+            " (version 3 files are partial training checkpoints — \
+             resume them with `train --resume`)"
+        } else {
+            ""
+        };
         return Err(bad(&format!(
             "unsupported checkpoint format: found version {version}, \
-             this build reads versions {oldest} through {newest}"
+             this build reads versions {oldest} through {newest}{hint}"
         )));
     }
     let k = root.get("k").and_then(Json::as_usize).ok_or_else(|| bad("k"))?;
@@ -109,10 +127,114 @@ pub fn load(path: &Path) -> Result<PosteriorModel, CheckpointError> {
     Ok(PosteriorModel::new(u_post, v_post, global_mean))
 }
 
+/// Format version of partial (resume) checkpoints written on cancel.
+pub const PARTIAL_VERSION: usize = 3;
+
+/// One completed block recorded in a partial checkpoint.
+#[derive(Debug, Clone)]
+pub struct PartialBlock {
+    /// Row-block index in the PP grid.
+    pub i: usize,
+    /// Column-block index in the PP grid.
+    pub j: usize,
+    /// The block's sampled posterior marginals.
+    pub post: BlockPosteriors,
+}
+
+/// A cancelled run's resumable state: the identity of the run (latent dim,
+/// grid, seed, centring mean — resume refuses a mismatch) plus the
+/// posterior marginals of every block that completed before the abort.
+#[derive(Debug, Clone)]
+pub struct PartialCheckpoint {
+    /// Latent dimension the run used.
+    pub k: usize,
+    /// Base RNG seed the run used (per-block seeds derive from it, so a
+    /// resume with a different seed would silently change the math).
+    pub seed: u64,
+    /// Block grid (I row-blocks × J column-blocks) of the run.
+    pub grid: (usize, usize),
+    /// Global mean the training matrix was centred by — doubles as a
+    /// fingerprint that the resume is fed the same data.
+    pub global_mean: f64,
+    /// Completed blocks, in the order they are restored.
+    pub blocks: Vec<PartialBlock>,
+}
+
+/// Save a cancelled run's partial state as a format-v3 file.
+pub fn save_partial(ckpt: &PartialCheckpoint, path: &Path) -> std::io::Result<()> {
+    let blocks = Json::Arr(
+        ckpt.blocks
+            .iter()
+            .map(|b| {
+                Json::obj(vec![
+                    ("i", b.i.into()),
+                    ("j", b.j.into()),
+                    ("u", gaussians_to_json(&b.post.u)),
+                    ("v", gaussians_to_json(&b.post.v)),
+                ])
+            })
+            .collect(),
+    );
+    let root = Json::obj(vec![
+        ("version", PARTIAL_VERSION.into()),
+        ("k", ckpt.k.into()),
+        // JSON numbers are f64; a u64 seed round-trips through a string
+        ("seed", Json::Str(ckpt.seed.to_string())),
+        ("grid_i", ckpt.grid.0.into()),
+        ("grid_j", ckpt.grid.1.into()),
+        ("global_mean", ckpt.global_mean.into()),
+        ("blocks", blocks),
+    ]);
+    std::fs::write(path, json::to_string(&root))
+}
+
+/// Load a partial (resume) checkpoint. Only format v3 is accepted; any
+/// other version — including valid v1/v2 *model* checkpoints — fails with
+/// an error naming the version found and the supported one.
+pub fn load_partial(path: &Path) -> Result<PartialCheckpoint, CheckpointError> {
+    let text = std::fs::read_to_string(path)?;
+    let root =
+        json::parse(&text).map_err(|e| CheckpointError::Malformed(e.to_string()))?;
+    let bad = |m: &str| CheckpointError::Malformed(m.to_string());
+    let version = root.get("version").and_then(Json::as_usize).ok_or_else(|| bad("version"))?;
+    if version != PARTIAL_VERSION {
+        return Err(bad(&format!(
+            "unsupported partial checkpoint: found version {version}, partial \
+             (resume) checkpoints are version {PARTIAL_VERSION} through \
+             {PARTIAL_VERSION} — model checkpoints load via `predict --load`"
+        )));
+    }
+    let k = root.get("k").and_then(Json::as_usize).ok_or_else(|| bad("k"))?;
+    let seed = root
+        .get("seed")
+        .and_then(Json::as_str)
+        .and_then(|s| s.parse::<u64>().ok())
+        .ok_or_else(|| bad("seed"))?;
+    let gi = root.get("grid_i").and_then(Json::as_usize).ok_or_else(|| bad("grid_i"))?;
+    let gj = root.get("grid_j").and_then(Json::as_usize).ok_or_else(|| bad("grid_j"))?;
+    let global_mean =
+        root.get("global_mean").and_then(Json::as_f64).ok_or_else(|| bad("global_mean"))?;
+    let mut blocks = Vec::new();
+    for b in root.get("blocks").and_then(Json::as_arr).ok_or_else(|| bad("blocks"))? {
+        let i = b.get("i").and_then(Json::as_usize).ok_or_else(|| bad("block i"))?;
+        let j = b.get("j").and_then(Json::as_usize).ok_or_else(|| bad("block j"))?;
+        if i >= gi || j >= gj {
+            return Err(bad(&format!("block ({i},{j}) outside the {gi}x{gj} grid")));
+        }
+        let u = b.get("u").and_then(gaussians_from_json).ok_or_else(|| bad("block u"))?;
+        let v = b.get("v").and_then(gaussians_from_json).ok_or_else(|| bad("block v"))?;
+        if u.k != k || v.k != k {
+            return Err(bad("latent dim mismatch in block posterior"));
+        }
+        blocks.push(PartialBlock { i, j, post: BlockPosteriors { u, v } });
+    }
+    Ok(PartialCheckpoint { k, seed, grid: (gi, gj), global_mean, blocks })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{BackendSpec, Engine, PpTrainer, TrainConfig};
+    use crate::coordinator::{BackendSpec, Engine, TrainConfig};
     use crate::data::generator::SyntheticDataset;
     use crate::data::split::holdout_split_covered;
 
@@ -128,7 +250,8 @@ mod tests {
             .with_sweeps(4, 8)
             .with_backend(BackendSpec::Native)
             .with_seed(46);
-        let result = PpTrainer::new(cfg).train(&train).unwrap();
+        let result =
+            Engine::new(&BackendSpec::Native, cfg.block_parallelism).train(&cfg, &train).unwrap();
         let path = tmp("ckpt");
         save(&result, &path).unwrap();
         let loaded = load(&path).unwrap();
@@ -257,6 +380,86 @@ mod tests {
         let m = load(&path).unwrap();
         assert_eq!((m.rows(), m.cols(), m.k), (2, 1, 1));
         assert!((m.predict(0, 0) - 2.0).abs() < 1e-12);
+        std::fs::remove_file(path).ok();
+    }
+
+    fn tiny_partial() -> PartialCheckpoint {
+        let g = |vals: &[f64]| RowGaussians {
+            n: vals.len(),
+            k: 1,
+            mean: vals.to_vec(),
+            prec: vals.iter().map(|_| 4.0).collect(),
+        };
+        PartialCheckpoint {
+            k: 1,
+            seed: u64::MAX - 7, // exercises the string round-trip, breaks an f64 one
+            grid: (2, 2),
+            global_mean: 3.25,
+            blocks: vec![PartialBlock {
+                i: 1,
+                j: 0,
+                post: BlockPosteriors { u: g(&[0.5, -0.5]), v: g(&[2.0]) },
+            }],
+        }
+    }
+
+    #[test]
+    fn partial_checkpoint_roundtrips() {
+        let path = tmp("partial");
+        let ckpt = tiny_partial();
+        save_partial(&ckpt, &path).unwrap();
+        let back = load_partial(&path).unwrap();
+        assert_eq!(back.k, ckpt.k);
+        assert_eq!(back.seed, ckpt.seed, "u64 seed must survive JSON exactly");
+        assert_eq!(back.grid, ckpt.grid);
+        assert_eq!(back.global_mean.to_bits(), ckpt.global_mean.to_bits());
+        assert_eq!(back.blocks.len(), 1);
+        assert_eq!((back.blocks[0].i, back.blocks[0].j), (1, 0));
+        assert_eq!(back.blocks[0].post.u.mean, ckpt.blocks[0].post.u.mean);
+        assert_eq!(back.blocks[0].post.v.prec, ckpt.blocks[0].post.v.prec);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn model_loader_points_v3_partials_at_resume() {
+        // a genuine v3 partial fed to the model loader must name found vs
+        // supported versions AND say what the file actually is
+        let path = tmp("partial_as_model");
+        save_partial(&tiny_partial(), &path).unwrap();
+        let err = load(&path).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("version 3"), "{msg}");
+        assert!(msg.contains("1 through 2"), "{msg}");
+        assert!(msg.contains("--resume"), "{msg}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn partial_loader_rejects_model_files_naming_versions() {
+        // symmetric gate: a v2 model fed to the partial loader names the
+        // found version and the supported (v3) one
+        let path = tmp("model_as_partial");
+        std::fs::write(
+            &path,
+            r#"{"version":2,"k":1,"global_mean":0.0,
+                "u_post":{"n":1,"k":1,"mean":[0.5],"prec":[4.0]},
+                "v_post":{"n":1,"k":1,"mean":[2.0],"prec":[4.0]}}"#,
+        )
+        .unwrap();
+        let err = load_partial(&path).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("found version 2"), "{msg}");
+        assert!(msg.contains("version 3 through 3"), "{msg}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn partial_loader_rejects_out_of_grid_blocks() {
+        let path = tmp("partial_oob");
+        let mut ckpt = tiny_partial();
+        ckpt.blocks[0].i = 5; // outside the 2x2 grid
+        save_partial(&ckpt, &path).unwrap();
+        assert!(matches!(load_partial(&path), Err(CheckpointError::Malformed(_))));
         std::fs::remove_file(path).ok();
     }
 

@@ -1,5 +1,6 @@
 //! Training configuration for D-BMF+PP.
 
+use super::scheduler::Priority;
 use std::path::PathBuf;
 
 /// Which compute backend executes the Gibbs half-sweeps.
@@ -149,10 +150,10 @@ pub struct TrainConfig {
     /// Within-block shard workers (the distributed-BMF level).
     pub workers: usize,
     /// Parallel block slots for phases (b) and (c). Sizes the pool of a
-    /// one-shot run (`PpTrainer::train`, and the CLI, which builds its
-    /// engine from this field); a caller-owned `Engine` keeps its own
-    /// thread count and this field does not resize it. Parallelism never
-    /// changes the posterior (bitwise-invariant scheduling).
+    /// one-shot run (the CLI builds its engine from this field); a
+    /// caller-owned `Engine` keeps its own thread count and this field
+    /// does not resize it. Parallelism never changes the posterior
+    /// (bitwise-invariant scheduling).
     pub block_parallelism: usize,
     /// Ridge added when inverting sample covariances / dividing posteriors.
     pub ridge: f64,
@@ -196,6 +197,34 @@ pub struct TrainConfig {
     /// larger τ buys more compute/communication overlap at a bounded,
     /// mailbox-audited staleness. Ignored under [`SweepMode::Lockstep`].
     pub staleness: usize,
+    /// Dispatch priority of this job's block tasks in the engine's shared
+    /// ready-queue when several sessions run concurrently. Priority never
+    /// changes the math — only which queued task takes the next free
+    /// worker slot.
+    pub priority: Priority,
+    /// Max block tasks of this job occupying pool workers at once
+    /// (0 = the pool width, i.e. no extra throttle). Setting this below
+    /// the pool width on wide low-priority jobs keeps worker slots
+    /// turning over for higher-priority neighbours.
+    pub max_in_flight: usize,
+    /// Resume from a partial (v3) checkpoint written by a cancelled run:
+    /// blocks recorded in the file are restored instead of re-sampled, and
+    /// the final posterior is bitwise-identical to an uninterrupted run
+    /// over the same completed-block set (same data/config/seed).
+    pub resume_from: Option<PathBuf>,
+    /// Where a cancelled run writes its partial (v3) checkpoint of all
+    /// completed block posteriors. `None` (the default) skips
+    /// checkpoint-on-abort; a cancel with zero completed blocks never
+    /// writes a file either way.
+    pub checkpoint_on_cancel: Option<PathBuf>,
+    /// Submit the job paused: its tasks queue but are not dispatched until
+    /// [`Session::resume`](super::Session::resume) (or cancel, which
+    /// drains them). Useful for staging work behind other jobs
+    /// deterministically. Only meaningful for
+    /// [`Engine::submit`](super::Engine::submit) — the blocking paths
+    /// (`Engine::train` / `train_observed`) have no handle that could
+    /// ever resume the job, so they run immediately and ignore this flag.
+    pub start_paused: bool,
 }
 
 impl TrainConfig {
@@ -222,6 +251,11 @@ impl TrainConfig {
             sweep: SweepMode::Lockstep,
             chunk_rows: 256,
             staleness: 0,
+            priority: Priority::Normal,
+            max_in_flight: 0,
+            resume_from: None,
+            checkpoint_on_cancel: None,
+            start_paused: false,
         }
     }
 
@@ -283,6 +317,37 @@ impl TrainConfig {
     /// Set the staleness bound τ (in chunks) for pipelined reads.
     pub fn with_staleness(mut self, staleness: usize) -> Self {
         self.staleness = staleness;
+        self
+    }
+
+    /// Set the job's dispatch priority in the shared ready-queue.
+    pub fn with_priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// Cap how many of this job's block tasks occupy workers at once
+    /// (0 = pool width).
+    pub fn with_max_in_flight(mut self, max_in_flight: usize) -> Self {
+        self.max_in_flight = max_in_flight;
+        self
+    }
+
+    /// Resume from a partial (v3) checkpoint written on cancel.
+    pub fn with_resume_from(mut self, path: impl Into<PathBuf>) -> Self {
+        self.resume_from = Some(path.into());
+        self
+    }
+
+    /// Write a partial (v3) checkpoint of completed blocks on cancel.
+    pub fn with_checkpoint_on_cancel(mut self, path: impl Into<PathBuf>) -> Self {
+        self.checkpoint_on_cancel = Some(path.into());
+        self
+    }
+
+    /// Submit the job paused (dispatch gated until resumed).
+    pub fn with_start_paused(mut self, paused: bool) -> Self {
+        self.start_paused = paused;
         self
     }
 
@@ -389,6 +454,35 @@ mod tests {
             TrainConfig::new(8).with_chunk_rows(0).validate(100, 50),
             Err(ConfigError::ZeroChunkRows)
         );
+    }
+
+    #[test]
+    fn lifecycle_fields_default_and_chain() {
+        let c = TrainConfig::new(8);
+        assert_eq!(c.priority, Priority::Normal);
+        assert_eq!(c.max_in_flight, 0);
+        assert!(c.resume_from.is_none());
+        assert!(c.checkpoint_on_cancel.is_none());
+        assert!(!c.start_paused);
+        let c = c
+            .with_priority(Priority::High)
+            .with_max_in_flight(2)
+            .with_resume_from("/tmp/partial.json")
+            .with_checkpoint_on_cancel("/tmp/abort.json")
+            .with_start_paused(true);
+        assert_eq!(c.priority, Priority::High);
+        assert_eq!(c.max_in_flight, 2);
+        assert_eq!(c.resume_from.as_deref(), Some(std::path::Path::new("/tmp/partial.json")));
+        assert_eq!(
+            c.checkpoint_on_cancel.as_deref(),
+            Some(std::path::Path::new("/tmp/abort.json"))
+        );
+        assert!(c.start_paused);
+        assert_eq!(c.validate(100, 50), Ok(()));
+        // priorities order Low < Normal < High (queue pop relies on it)
+        assert!(Priority::Low < Priority::Normal && Priority::Normal < Priority::High);
+        assert_eq!("high".parse::<Priority>(), Ok(Priority::High));
+        assert!("urgent".parse::<Priority>().is_err());
     }
 
     #[test]

@@ -27,10 +27,14 @@
 //! the exchange with computation under a bounded staleness τ.
 //!
 //! The public entry point is the [`Engine`]: it owns the persistent worker
-//! pool, runs many jobs against it warm ([`Engine::train`] /
-//! [`Engine::submit`] → [`Session`] streaming [`TrainEvent`]s), and every
-//! run yields a servable [`PosteriorModel`] (what `checkpoint` persists).
-//! [`PpTrainer`] survives as a deprecated one-shot facade.
+//! pool and runs many jobs against it warm — *concurrently*:
+//! [`Engine::submit`] is non-blocking and returns a [`Session`] (stable
+//! [`JobId`], streamed [`TrainEvent`]s, `cancel`/`pause`/`resume`/`status`
+//! lifecycle control), all sessions feed one shared [`Priority`]-ordered
+//! ready-queue on the pool, and every completed run yields a servable
+//! [`PosteriorModel`] (what `checkpoint` persists). A cancelled session
+//! writes a partial (v3) checkpoint of its completed block posteriors;
+//! `TrainConfig::resume_from` continues from it bitwise-identically.
 
 pub mod aggregate;
 pub mod backend;
@@ -45,9 +49,11 @@ pub mod worker;
 
 pub use config::{BackendSpec, ConfigError, SchedulerMode, SweepMode, TrainConfig};
 pub use engine::{
-    Engine, Factorizer, FactorSide, FitOutcome, PpFactorizer, PpPhase, Session, TrainEvent,
+    Engine, Factorizer, FactorSide, FitOutcome, JobSnapshot, JobStatus, PpFactorizer, PpPhase,
+    Session, TrainEvent,
 };
 pub use mailbox::{FactorMailbox, MailboxCounters};
-pub use trainer::{PpTrainer, TrainResult};
+pub use scheduler::{JobId, Priority};
+pub use trainer::{CancelInfo, TrainOutcome, TrainResult};
 
 pub use crate::posterior::PosteriorModel;

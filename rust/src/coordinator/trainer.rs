@@ -15,21 +15,32 @@
 //!
 //! The pipeline itself is [`run_pp`], invoked through
 //! [`crate::coordinator::Engine`]; as it executes it streams typed
-//! [`TrainEvent`]s to an optional sink. [`PpTrainer`] remains as a thin
-//! compatibility facade over a one-shot engine.
+//! [`TrainEvent`]s to an optional sink and honours the session's run
+//! control: a set cancel flag stops dispatching block tasks, drains
+//! the ones in flight, optionally persists every completed block posterior
+//! as a partial (v3) checkpoint (`TrainConfig::checkpoint_on_cancel`), and
+//! yields [`TrainOutcome::Cancelled`]. A later run with
+//! `TrainConfig::resume_from` restores those blocks instead of re-sampling
+//! them; because per-block seeds derive from the config seed and
+//! aggregation consumes inputs in canonical order, the resumed posterior
+//! is bitwise-identical to an uninterrupted run over the same
+//! completed-block set.
 
 use super::aggregate::aggregate_part;
 use super::backend::{BlockBackend, BlockData};
 use super::block_task::{
     run_block, BlockObs, BlockPosteriors, BlockRunStats, BlockTaskCfg, PpTaskOutput,
 };
+use super::checkpoint::{self, PartialBlock, PartialCheckpoint};
 use super::config::{SchedulerMode, TrainConfig};
-use super::engine::{Engine, EventSink, FactorSide, PpPhase, TrainEvent};
-use super::scheduler::{DagScheduler, NodeId, WorkerPool};
+use super::engine::{EventSink, FactorSide, PpPhase, TrainEvent};
+use super::scheduler::{DagRunOpts, DagScheduler, JobId, NodeId, WorkerPool};
 use crate::data::sparse::Coo;
 use crate::partition::Grid;
 use crate::posterior::{PosteriorModel, RowGaussians};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 /// Wall-clock seconds per PP phase, attributed from per-block completion
@@ -52,8 +63,11 @@ pub struct PhaseTimings {
 /// Aggregate compute counters over all blocks.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct RunStats {
-    /// Blocks sampled.
+    /// Blocks sampled (excludes blocks restored from a resume checkpoint).
     pub blocks: usize,
+    /// Blocks restored from a `resume_from` partial checkpoint instead of
+    /// being re-sampled. 0 for non-resumed runs.
+    pub blocks_restored: usize,
     /// Total Gibbs sweeps across all blocks.
     pub sweeps: usize,
     /// Factor rows sampled across all blocks and sweeps.
@@ -121,6 +135,157 @@ impl TrainResult {
     }
 }
 
+/// What happened to a cancelled run.
+#[derive(Debug, Clone)]
+pub struct CancelInfo {
+    /// Blocks whose posteriors were completed (sampled or restored) when
+    /// the cancellation took effect.
+    pub blocks_completed: usize,
+    /// Where the partial (v3) checkpoint of those posteriors was written —
+    /// `Some` only when `TrainConfig::checkpoint_on_cancel` was set *and*
+    /// at least one block had completed.
+    pub checkpoint: Option<PathBuf>,
+}
+
+/// How a submitted run ended: trained to completion, or cancelled (with a
+/// resumable partial checkpoint when one was requested and any block had
+/// finished).
+#[derive(Debug)]
+pub enum TrainOutcome {
+    /// The run trained to completion.
+    Completed(Box<TrainResult>),
+    /// The run was cancelled before completing.
+    Cancelled(CancelInfo),
+}
+
+impl TrainOutcome {
+    /// The completed result, or an error describing the cancellation —
+    /// for callers that treat "cancelled" as failure.
+    pub fn into_result(self) -> anyhow::Result<TrainResult> {
+        match self {
+            TrainOutcome::Completed(r) => Ok(*r),
+            TrainOutcome::Cancelled(info) => Err(anyhow::anyhow!(
+                "training cancelled after {} completed blocks{}",
+                info.blocks_completed,
+                match &info.checkpoint {
+                    Some(p) => format!(" (partial checkpoint: {})", p.display()),
+                    None => String::new(),
+                }
+            )),
+        }
+    }
+
+    /// The completed result, if the run was not cancelled.
+    pub fn completed(&self) -> Option<&TrainResult> {
+        match self {
+            TrainOutcome::Completed(r) => Some(r.as_ref()),
+            TrainOutcome::Cancelled(_) => None,
+        }
+    }
+
+    /// The cancellation record, if the run was cancelled.
+    pub fn cancelled(&self) -> Option<&CancelInfo> {
+        match self {
+            TrainOutcome::Completed(_) => None,
+            TrainOutcome::Cancelled(info) => Some(info),
+        }
+    }
+}
+
+/// Shared live state between a running job and its [`Session`]
+/// (`super::Session`) handle: the cooperative cancel flag plus block
+/// progress counters the trainer updates as the schedule executes.
+#[derive(Debug)]
+pub(crate) struct RunControl {
+    /// Cooperative cancellation flag (shared with the DAG dispatcher).
+    pub cancel: Arc<AtomicBool>,
+    /// Blocks completed so far (sampled + restored).
+    pub blocks_done: AtomicUsize,
+    /// Total blocks in the run's grid.
+    pub blocks_total: AtomicUsize,
+}
+
+impl RunControl {
+    pub(crate) fn new() -> RunControl {
+        RunControl {
+            cancel: Arc::new(AtomicBool::new(false)),
+            blocks_done: AtomicUsize::new(0),
+            blocks_total: AtomicUsize::new(0),
+        }
+    }
+}
+
+/// Per-run context the engine threads through the pipeline: the pool job
+/// the run's tasks are tagged with, the shared control block, and the
+/// resume state (if any).
+pub(crate) struct JobCtx {
+    pub job: JobId,
+    pub control: Arc<RunControl>,
+    pub resume: Option<PartialCheckpoint>,
+}
+
+/// Persist `blocks` as a v3 abort checkpoint (when armed and non-empty),
+/// emit the cancel events, and build the cancellation outcome — the one
+/// tail every cancel path (before or after the DAG started) goes through.
+fn finish_cancelled(
+    cfg: &TrainConfig,
+    global_mean: f64,
+    blocks: Vec<PartialBlock>,
+    em: &Emitter,
+) -> anyhow::Result<TrainOutcome> {
+    let blocks_completed = blocks.len();
+    let mut saved = None;
+    if blocks_completed > 0 {
+        if let Some(path) = &cfg.checkpoint_on_cancel {
+            let ckpt = PartialCheckpoint {
+                k: cfg.k,
+                seed: cfg.seed,
+                grid: cfg.grid,
+                global_mean,
+                blocks,
+            };
+            checkpoint::save_partial(&ckpt, path).map_err(|e| {
+                anyhow::anyhow!("cancel checkpoint write to {} failed: {e}", path.display())
+            })?;
+            em.checkpoint_saved(path, blocks_completed);
+            saved = Some(path.clone());
+        }
+    }
+    em.cancelled(blocks_completed);
+    Ok(TrainOutcome::Cancelled(CancelInfo { blocks_completed, checkpoint: saved }))
+}
+
+/// Load + validate `cfg.resume_from` against the config it will resume
+/// under. A mismatched latent dim, grid, or seed would silently change the
+/// math, so each is rejected with the pair of values named.
+pub(crate) fn load_resume(cfg: &TrainConfig) -> anyhow::Result<Option<PartialCheckpoint>> {
+    let Some(path) = &cfg.resume_from else { return Ok(None) };
+    let ckpt = checkpoint::load_partial(path)
+        .map_err(|e| anyhow::anyhow!("cannot resume from {}: {e}", path.display()))?;
+    anyhow::ensure!(
+        ckpt.k == cfg.k,
+        "resume checkpoint has k={} but the config trains k={}",
+        ckpt.k,
+        cfg.k
+    );
+    anyhow::ensure!(
+        ckpt.grid == cfg.grid,
+        "resume checkpoint has grid {}x{} but the config trains {}x{}",
+        ckpt.grid.0,
+        ckpt.grid.1,
+        cfg.grid.0,
+        cfg.grid.1
+    );
+    anyhow::ensure!(
+        ckpt.seed == cfg.seed,
+        "resume checkpoint was written under seed {} but the config uses {} \
+         (per-block seeds derive from it, so the math would diverge)",
+        ckpt.seed,
+        cfg.seed
+    );
+    Ok(Some(ckpt))
+}
+
 /// Emits [`TrainEvent`]s from inside DAG task closures. Phase starts are
 /// deduplicated with atomics because the first task of a phase is decided
 /// by the scheduler at run time, not by construction order.
@@ -129,10 +294,11 @@ struct Emitter {
     sink: Option<EventSink>,
     sweep_rmse: bool,
     phase_started: Arc<[AtomicBool; 4]>,
+    control: Arc<RunControl>,
 }
 
 impl Emitter {
-    fn new(sink: Option<EventSink>, sweep_rmse: bool) -> Emitter {
+    fn new(sink: Option<EventSink>, sweep_rmse: bool, control: Arc<RunControl>) -> Emitter {
         Emitter {
             sink,
             sweep_rmse,
@@ -142,6 +308,7 @@ impl Emitter {
                 AtomicBool::new(false),
                 AtomicBool::new(false),
             ]),
+            control,
         }
     }
 
@@ -153,6 +320,7 @@ impl Emitter {
     }
 
     fn block_done(&self, node: (usize, usize), phase: PpPhase, stats: &BlockRunStats) {
+        self.control.blocks_done.fetch_add(1, Ordering::Relaxed);
         if let Some(sink) = &self.sink {
             sink(TrainEvent::BlockCompleted {
                 node,
@@ -160,6 +328,25 @@ impl Emitter {
                 secs: stats.secs,
                 sweeps: stats.sweeps,
             });
+        }
+    }
+
+    fn block_restored(&self, node: (usize, usize)) {
+        self.control.blocks_done.fetch_add(1, Ordering::Relaxed);
+        if let Some(sink) = &self.sink {
+            sink(TrainEvent::BlockRestored { node });
+        }
+    }
+
+    fn cancelled(&self, blocks_completed: usize) {
+        if let Some(sink) = &self.sink {
+            sink(TrainEvent::Cancelled { blocks_completed });
+        }
+    }
+
+    fn checkpoint_saved(&self, path: &std::path::Path, blocks: usize) {
+        if let Some(sink) = &self.sink {
+            sink(TrainEvent::CheckpointSaved { path: path.to_path_buf(), blocks });
         }
     }
 
@@ -268,7 +455,8 @@ pub(crate) fn center(train: &Coo) -> (Coo, f64) {
 }
 
 /// Run the full PP pipeline for `cfg` on a caller-owned worker pool,
-/// streaming progress to `sink` (if any).
+/// streaming progress to `sink` (if any). Blocking, not cancellable: the
+/// run executes under a transient pool job at the config's priority.
 pub(crate) fn run_pp(
     cfg: &TrainConfig,
     pool: &WorkerPool,
@@ -276,26 +464,67 @@ pub(crate) fn run_pp(
     sink: Option<EventSink>,
 ) -> anyhow::Result<TrainResult> {
     cfg.validate(train.rows, train.cols)?;
+    let resume = load_resume(cfg)?;
+    let job = pool.register_job(cfg.priority, cfg.max_in_flight);
+    let ctx = JobCtx { job, control: Arc::new(RunControl::new()), resume };
     let (centered, global_mean) = center(train);
-    run_pp_centered(cfg, pool, centered, global_mean, sink)
+    let out = run_pp_centered(cfg, pool, centered, global_mean, sink, ctx);
+    pool.finish_job(job);
+    out.and_then(TrainOutcome::into_result)
 }
 
 /// [`run_pp`] over an already mean-centred matrix the caller gives away —
 /// the path `Engine::submit` uses so a session holds exactly one private
 /// copy of the data (centring happens during that one clone) instead of
-/// clone-for-the-thread plus clone-for-centring.
+/// clone-for-the-thread plus clone-for-centring. The caller owns the
+/// ctx's pool-job registration (and its `finish_job`).
 pub(crate) fn run_pp_centered(
     cfg: &TrainConfig,
     pool: &WorkerPool,
     train: Coo,
     global_mean: f64,
     sink: Option<EventSink>,
-) -> anyhow::Result<TrainResult> {
+    ctx: JobCtx,
+) -> anyhow::Result<TrainOutcome> {
     cfg.validate(train.rows, train.cols)?;
-    let em = Emitter::new(sink, cfg.stream_sweep_rmse);
+    let em = Emitter::new(sink, cfg.stream_sweep_rmse, ctx.control.clone());
     let train = &train;
 
     let (gi, gj) = cfg.grid;
+    ctx.control.blocks_total.store(gi * gj, Ordering::Relaxed);
+    // blocks restored from a resume checkpoint, keyed by grid coordinate
+    let mut restored: HashMap<(usize, usize), BlockPosteriors> = HashMap::new();
+    // the restored posteriors get moved into DAG closures below; when a
+    // cancel checkpoint is armed, keep the originals (in checkpoint
+    // order) so an abort can re-persist blocks whose restore node never
+    // dispatched — checkpointed progress must never shrink across
+    // cancel/resume cycles. Without checkpoint_on_cancel the backup can
+    // never be read, so skip the copy.
+    let mut resume_backup: Vec<PartialBlock> = Vec::new();
+    if let Some(ckpt) = ctx.resume {
+        // the engine validated k/grid/seed; the centring mean is the
+        // data fingerprint and is only known here
+        anyhow::ensure!(
+            ckpt.global_mean.to_bits() == global_mean.to_bits(),
+            "resume checkpoint was written for different data \
+             (global mean {} vs {global_mean})",
+            ckpt.global_mean
+        );
+        if cfg.checkpoint_on_cancel.is_some() {
+            resume_backup = ckpt.blocks.clone();
+        }
+        restored = ckpt.blocks.into_iter().map(|b| ((b.i, b.j), b.post)).collect();
+    }
+    // a cancel that lands before the schedule starts runs nothing — but a
+    // resumed run must still carry its inherited blocks forward into the
+    // abort checkpoint rather than dropping them
+    if ctx.control.cancel.load(Ordering::Relaxed) {
+        return finish_cancelled(cfg, global_mean, resume_backup, &em);
+    }
+    let mut restored_ids: HashSet<NodeId> = HashSet::new();
+    // grid coordinate of every block node, for checkpoint-on-abort
+    let mut block_nodes: Vec<((usize, usize), NodeId)> = Vec::new();
+
     let grid = Grid::new(train.rows, train.cols, gi, gj);
     let mut blocks = grid.split(train);
     let t_total = std::time::Instant::now();
@@ -312,7 +541,13 @@ pub(crate) fn run_pp_centered(
     let a_data = take(0, 0);
     let cfg_a = task_cfg(cfg, cfg.samples, block_seed(cfg, 0, 0));
     let em_a = em.clone();
+    let pre_a = restored.remove(&(0, 0));
+    let a_restored = pre_a.is_some();
     let a_id = dag.add(&[], move |b: &BlockBackend, _p: &[Arc<PpTaskOutput>]| {
+        if let Some(post) = pre_a {
+            em_a.block_restored((0, 0));
+            return Ok(PpTaskOutput::Block(post, BlockRunStats::default()));
+        }
         em_a.phase(PpPhase::A);
         let sweep_obs = em_a.sweep_observer((0, 0));
         let chunk_obs = em_a.chunk_observer((0, 0));
@@ -321,6 +556,10 @@ pub(crate) fn run_pp_centered(
         em_a.block_done((0, 0), PpPhase::A, &stats);
         Ok(PpTaskOutput::Block(post, stats))
     });
+    if a_restored {
+        restored_ids.insert(a_id);
+    }
+    block_nodes.push(((0, 0), a_id));
 
     // ---- Phase (b): first-row and first-column blocks; each depends
     // only on (a), whose posterior it consumes as a prior ----
@@ -331,7 +570,13 @@ pub(crate) fn run_pp_centered(
         let data = take(i, 0);
         let bcfg = task_cfg(cfg, phase_samples, block_seed(cfg, i, 0));
         let em_b = em.clone();
+        let pre = restored.remove(&(i, 0));
+        let is_restored = pre.is_some();
         let id = dag.add(&[a_id], move |b: &BlockBackend, p: &[Arc<PpTaskOutput>]| {
+            if let Some(post) = pre {
+                em_b.block_restored((i, 0));
+                return Ok(PpTaskOutput::Block(post, BlockRunStats::default()));
+            }
             em_b.phase(PpPhase::B);
             let sweep_obs = em_b.sweep_observer((i, 0));
             let chunk_obs = em_b.chunk_observer((i, 0));
@@ -340,6 +585,10 @@ pub(crate) fn run_pp_centered(
             em_b.block_done((i, 0), PpPhase::B, &stats);
             Ok(PpTaskOutput::Block(post, stats))
         });
+        if is_restored {
+            restored_ids.insert(id);
+        }
+        block_nodes.push(((i, 0), id));
         b_row_ids[i] = id;
         b_ids.push(id);
     }
@@ -347,7 +596,13 @@ pub(crate) fn run_pp_centered(
         let data = take(0, j);
         let bcfg = task_cfg(cfg, phase_samples, block_seed(cfg, 0, j));
         let em_b = em.clone();
+        let pre = restored.remove(&(0, j));
+        let is_restored = pre.is_some();
         let id = dag.add(&[a_id], move |b: &BlockBackend, p: &[Arc<PpTaskOutput>]| {
+            if let Some(post) = pre {
+                em_b.block_restored((0, j));
+                return Ok(PpTaskOutput::Block(post, BlockRunStats::default()));
+            }
             em_b.phase(PpPhase::B);
             let sweep_obs = em_b.sweep_observer((0, j));
             let chunk_obs = em_b.chunk_observer((0, j));
@@ -356,6 +611,10 @@ pub(crate) fn run_pp_centered(
             em_b.block_done((0, j), PpPhase::B, &stats);
             Ok(PpTaskOutput::Block(post, stats))
         });
+        if is_restored {
+            restored_ids.insert(id);
+        }
+        block_nodes.push(((0, j), id));
         b_col_ids[j] = id;
         b_ids.push(id);
     }
@@ -383,7 +642,13 @@ pub(crate) fn run_pp_centered(
                 edges.push(join);
             }
             let em_c = em.clone();
+            let pre = restored.remove(&(i, j));
+            let is_restored = pre.is_some();
             let id = dag.add(&edges, move |b: &BlockBackend, p: &[Arc<PpTaskOutput>]| {
+                if let Some(post) = pre {
+                    em_c.block_restored((i, j));
+                    return Ok(PpTaskOutput::Block(post, BlockRunStats::default()));
+                }
                 em_c.phase(PpPhase::C);
                 let sweep_obs = em_c.sweep_observer((i, j));
                 let chunk_obs = em_c.chunk_observer((i, j));
@@ -400,6 +665,10 @@ pub(crate) fn run_pp_centered(
                 em_c.block_done((i, j), PpPhase::C, &stats);
                 Ok(PpTaskOutput::Block(post, stats))
             });
+            if is_restored {
+                restored_ids.insert(id);
+            }
+            block_nodes.push(((i, j), id));
             c_ids.push(id);
             c_id_at[i][j] = id;
         }
@@ -437,13 +706,45 @@ pub(crate) fn run_pp_centered(
         v_part_ids.push(add_part(&mut dag, b_col_ids[j], &posts, agg_join, ridge, pick_v, &em));
     }
 
-    let nodes = dag.run(pool)?;
+    let outcome = dag.run_with(
+        pool,
+        &DagRunOpts { job: Some(ctx.job), cancel: Some(ctx.control.cancel.clone()) },
+    )?;
+
+    if outcome.cancelled {
+        // ---- checkpoint-on-abort: persist every block whose posterior
+        // is known — sampled/restored this run, or carried in from the
+        // resume checkpoint with its restore node still undispatched ----
+        let backup_by_coord: HashMap<(usize, usize), &BlockPosteriors> =
+            resume_backup.iter().map(|b| ((b.i, b.j), &b.post)).collect();
+        let mut blocks = Vec::new();
+        for &((i, j), id) in &block_nodes {
+            if let Some(res) = &outcome.nodes[id] {
+                if let PpTaskOutput::Block(post, _) = res.output.as_ref() {
+                    blocks.push(PartialBlock { i, j, post: post.clone() });
+                }
+            } else if let Some(post) = backup_by_coord.get(&(i, j)) {
+                blocks.push(PartialBlock { i, j, post: (*post).clone() });
+            }
+        }
+        return finish_cancelled(cfg, global_mean, blocks, &em);
+    }
+    // a non-cancelled run_with completes every node
+    let nodes: Vec<_> = outcome
+        .nodes
+        .into_iter()
+        .map(|r| r.expect("all nodes completed"))
+        .collect();
 
     // ---- stats + phase attribution from per-node completion times ----
     let mut stats = RunStats::default();
-    for res in &nodes {
+    for (id, res) in nodes.iter().enumerate() {
         if let Some(s) = res.output.block_stats() {
-            stats.absorb(s);
+            if restored_ids.contains(&id) {
+                stats.blocks_restored += 1;
+            } else {
+                stats.absorb(s);
+            }
         }
     }
     let a_finish = nodes[a_id].finished;
@@ -488,50 +789,19 @@ pub(crate) fn run_pp_centered(
 
     em.finished(timings.total, stats.blocks);
 
-    Ok(TrainResult {
+    Ok(TrainOutcome::Completed(Box::new(TrainResult {
         model: PosteriorModel::new(u_post, v_post, global_mean),
         grid: cfg.grid,
         timings,
         stats,
-    })
-}
-
-/// Legacy one-shot trainer facade.
-///
-/// **Deprecated** in favour of [`Engine`]: each `train` call builds (and
-/// tears down) a private single-run engine, so nothing is kept warm across
-/// runs and no progress events are observable. Kept for one release so
-/// existing callers and the DAG/Barrier equivalence tests compile
-/// unchanged; both paths execute the identical [`run_pp`] pipeline.
-pub struct PpTrainer {
-    /// The training configuration every `train` call runs with.
-    pub cfg: TrainConfig,
-}
-
-impl PpTrainer {
-    /// Wrap a configuration in the legacy one-shot facade.
-    pub fn new(cfg: TrainConfig) -> PpTrainer {
-        PpTrainer { cfg }
-    }
-
-    /// Run the full PP pipeline on a training matrix through a fresh
-    /// one-shot [`Engine`] sized by `cfg.block_parallelism`.
-    pub fn train(&self, train: &Coo) -> anyhow::Result<TrainResult> {
-        Engine::new(&self.cfg.backend, self.cfg.block_parallelism).train(&self.cfg, train)
-    }
-
-    /// `train` against a caller-owned worker pool — reuses the per-thread
-    /// PJRT engines (compiled executables) across multiple training runs.
-    /// Prefer an [`Engine`], which owns such a pool.
-    pub fn train_with_pool(&self, pool: &WorkerPool, train: &Coo) -> anyhow::Result<TrainResult> {
-        run_pp(&self.cfg, pool, train, None)
-    }
+    })))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::config::BackendSpec;
+    use crate::coordinator::Engine;
     use crate::data::generator::SyntheticDataset;
     use crate::data::split::holdout_split_covered;
     use crate::metrics::rmse::mean_predictor_rmse;
@@ -543,6 +813,11 @@ mod tests {
             .with_seed(1)
     }
 
+    /// One-shot run on a private engine sized by the config.
+    fn train_once(cfg: TrainConfig, train: &Coo) -> TrainResult {
+        Engine::new(&cfg.backend, cfg.block_parallelism).train(&cfg, train).unwrap()
+    }
+
     fn dataset() -> (Coo, Coo, usize) {
         let d = SyntheticDataset::by_name("movielens", 0.0015, 21).unwrap();
         let (train, test) = holdout_split_covered(&d.ratings, 0.2, 22);
@@ -552,7 +827,7 @@ mod tests {
     #[test]
     fn pp_1x1_learns() {
         let (train, test, k) = dataset();
-        let res = PpTrainer::new(quick_cfg(k)).train(&train).unwrap();
+        let res = train_once(quick_cfg(k), &train);
         let rmse = res.rmse(&test);
         let base = mean_predictor_rmse(train.mean(), &test);
         assert!(rmse < base, "1x1 rmse {rmse} vs mean {base}");
@@ -562,7 +837,7 @@ mod tests {
     #[test]
     fn pp_grid_learns_and_phases_run() {
         let (train, test, k) = dataset();
-        let res = PpTrainer::new(quick_cfg(k).with_grid(3, 2)).train(&train).unwrap();
+        let res = train_once(quick_cfg(k).with_grid(3, 2), &train);
         let rmse = res.rmse(&test);
         let base = mean_predictor_rmse(train.mean(), &test);
         assert!(rmse < base, "3x2 rmse {rmse} vs mean {base}");
@@ -574,8 +849,8 @@ mod tests {
     fn pp_rmse_close_to_plain_bmf() {
         // the paper's core ML claim: PP ≈ plain BMF in RMSE
         let (train, test, k) = dataset();
-        let r1 = PpTrainer::new(quick_cfg(k)).train(&train).unwrap();
-        let r2 = PpTrainer::new(quick_cfg(k).with_grid(2, 2)).train(&train).unwrap();
+        let r1 = train_once(quick_cfg(k), &train);
+        let r2 = train_once(quick_cfg(k).with_grid(2, 2), &train);
         let (a, b) = (r1.rmse(&test), r2.rmse(&test));
         assert!((a - b).abs() < 0.15 * a.max(b), "1x1={a} vs 2x2={b}");
     }
@@ -583,7 +858,7 @@ mod tests {
     #[test]
     fn row_heavy_grid_works() {
         let (train, test, k) = dataset();
-        let res = PpTrainer::new(quick_cfg(k).with_grid(4, 1)).train(&train).unwrap();
+        let res = train_once(quick_cfg(k).with_grid(4, 1), &train);
         assert!(res.rmse(&test).is_finite());
         assert_eq!(res.stats.blocks, 4);
         assert_eq!(res.u_post.n, train.rows);
@@ -592,7 +867,7 @@ mod tests {
     #[test]
     fn predict_variance_positive() {
         let (train, _, k) = dataset();
-        let res = PpTrainer::new(quick_cfg(k)).train(&train).unwrap();
+        let res = train_once(quick_cfg(k), &train);
         let var = res.predict_variance(0, 0);
         assert!(var > 0.0 && var.is_finite());
     }
@@ -600,8 +875,8 @@ mod tests {
     #[test]
     fn deterministic_given_seed() {
         let (train, _, k) = dataset();
-        let r1 = PpTrainer::new(quick_cfg(k).with_grid(2, 2)).train(&train).unwrap();
-        let r2 = PpTrainer::new(quick_cfg(k).with_grid(2, 2)).train(&train).unwrap();
+        let r1 = train_once(quick_cfg(k).with_grid(2, 2), &train);
+        let r2 = train_once(quick_cfg(k).with_grid(2, 2), &train);
         assert_eq!(r1.u_mean, r2.u_mean);
     }
 
@@ -614,7 +889,7 @@ mod tests {
         let mk = |mode: SchedulerMode, slots: usize| {
             let mut c = quick_cfg(k).with_grid(3, 4).with_scheduler(mode);
             c.block_parallelism = slots;
-            PpTrainer::new(c).train(&train).unwrap()
+            train_once(c, &train)
         };
         let base = mk(SchedulerMode::Barrier, 4);
         for slots in [1usize, 2, 8] {
@@ -632,19 +907,16 @@ mod tests {
         // whole PP pipeline, grid and all
         use crate::coordinator::config::SweepMode;
         let (train, _, k) = dataset();
-        let lock = PpTrainer::new(quick_cfg(k).with_grid(2, 2).with_workers(2))
-            .train(&train)
-            .unwrap();
-        let pipe = PpTrainer::new(
+        let lock = train_once(quick_cfg(k).with_grid(2, 2).with_workers(2), &train);
+        let pipe = train_once(
             quick_cfg(k)
                 .with_grid(2, 2)
                 .with_workers(2)
                 .with_sweep_mode(SweepMode::Pipelined)
                 .with_chunk_rows(16)
                 .with_staleness(0),
-        )
-        .train(&train)
-        .unwrap();
+            &train,
+        );
         assert_eq!(pipe.u_post.mean, lock.u_post.mean);
         assert_eq!(pipe.u_post.prec, lock.u_post.prec);
         assert_eq!(pipe.v_post.mean, lock.v_post.mean);
@@ -659,17 +931,16 @@ mod tests {
         use crate::coordinator::config::SweepMode;
         let (train, test, k) = dataset();
         let lock =
-            PpTrainer::new(quick_cfg(k).with_grid(2, 2)).train(&train).unwrap();
-        let pipe = PpTrainer::new(
+            train_once(quick_cfg(k).with_grid(2, 2), &train);
+        let pipe = train_once(
             quick_cfg(k)
                 .with_grid(2, 2)
                 .with_workers(3)
                 .with_sweep_mode(SweepMode::Pipelined)
                 .with_chunk_rows(8)
                 .with_staleness(2),
-        )
-        .train(&train)
-        .unwrap();
+            &train,
+        );
         let (a, b) = (lock.rmse(&test), pipe.rmse(&test));
         assert!((a - b).abs() < 0.15 * a.max(b), "lockstep={a} vs pipelined={b}");
         assert!(pipe.stats.comm_overlap_secs >= 0.0);
@@ -679,9 +950,7 @@ mod tests {
     fn barrier_mode_reports_zero_overlap() {
         let (train, _, k) = dataset();
         let mk = |mode: SchedulerMode| {
-            PpTrainer::new(quick_cfg(k).with_grid(3, 3).with_scheduler(mode))
-                .train(&train)
-                .unwrap()
+            train_once(quick_cfg(k).with_grid(3, 3).with_scheduler(mode), &train)
         };
         let bar = mk(SchedulerMode::Barrier);
         let dag = mk(SchedulerMode::Dag);

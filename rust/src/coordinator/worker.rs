@@ -9,6 +9,14 @@
 //! thread-confined PJRT engine sequentially — same semantics, and the
 //! shard-shaped artifacts measure the padding/dispatch overhead that the
 //! cluster simulator uses for multi-node projections.
+//!
+//! These shard threads are private to one block task and live only for
+//! its half-sweeps; they are NOT the engine's pool workers. Under the
+//! multi-tenant engine, block tasks from several concurrent sessions run
+//! side by side on the pool, each spawning its own shard workers — total
+//! thread pressure is `pool threads × TrainConfig::workers`, which is why
+//! wide jobs are bounded with `TrainConfig::max_in_flight` rather than by
+//! shrinking W.
 
 use super::backend::{BlockBackend, BlockData};
 use super::engine::FactorSide;

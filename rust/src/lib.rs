@@ -9,12 +9,19 @@
 //!
 //! - [`coordinator::Engine`] — a persistent training engine owning the
 //!   warm worker pool (and, under the `pjrt` feature, each worker's PJRT
-//!   client and compiled-artifact cache). Build it once, run many jobs.
+//!   client and compiled-artifact cache). Build it once, run many jobs —
+//!   *concurrently*: all submitted jobs share one priority-ordered ready
+//!   queue ([`coordinator::Priority`], `TrainConfig::max_in_flight`), and
+//!   interleaving never changes any job's posterior.
 //! - [`coordinator::Session`] — a handle to one in-flight run, returned by
-//!   [`coordinator::Engine::submit`]; it streams typed
+//!   the non-blocking [`coordinator::Engine::submit`]; it streams typed
 //!   [`coordinator::TrainEvent`]s (phase starts, block completions,
-//!   per-sweep RMSE samples) while training executes, and
-//!   [`coordinator::Session::wait`] yields the result.
+//!   per-sweep RMSE samples) while training executes, exposes lifecycle
+//!   control (`cancel` / `pause` / `resume` / `status`), and
+//!   [`coordinator::Session::wait`] yields the
+//!   [`coordinator::TrainOutcome`]. A cancelled run persists its
+//!   completed block posteriors as a partial (v3) checkpoint;
+//!   `TrainConfig::resume_from` continues from it bitwise-identically.
 //! - [`posterior::PosteriorModel`] — the servable artifact every run
 //!   produces: posterior means/precisions + global mean, with `predict`,
 //!   `predict_variance`, `rmse` and `top_n`. Checkpoints persist exactly
@@ -39,7 +46,8 @@
 //! let engine = Engine::new(&BackendSpec::Native, 2);
 //! let cfg = TrainConfig::new(ds.k).with_grid(2, 2).with_sweeps(3, 6).with_seed(1);
 //!
-//! // submit() validates the config, then streams progress events
+//! // submit() is non-blocking: it validates the config and returns a
+//! // Session streaming progress events (any number may run at once)
 //! let session = engine.submit(cfg, &train).unwrap();
 //! let mut blocks_done = 0;
 //! for event in session.events() {
@@ -47,7 +55,9 @@
 //!         blocks_done += 1;
 //!     }
 //! }
-//! let result = session.wait().unwrap();
+//! // wait() reports how the run ended; nobody cancelled, so unwrap the
+//! // completed result
+//! let result = session.wait().unwrap().into_result().unwrap();
 //! assert_eq!(blocks_done, 4); // 2x2 grid
 //!
 //! // the servable artifact: predictions, uncertainty, rankings

@@ -6,12 +6,25 @@
 //!             report RMSE + timings; optionally save the model (--save)
 //!             and the holdout set (--save-test). Within-block sweeps run
 //!             lockstep by default; --sweep pipelined overlaps the factor
-//!             exchange with sampling (--chunk-rows, --staleness)
+//!             exchange with sampling (--chunk-rows, --staleness).
+//!             --priority low|normal|high tags the job in the engine's
+//!             shared queue; --resume <v3.json> continues a cancelled run
+//!             from its partial checkpoint (bitwise-identical over the
+//!             restored blocks); --checkpoint-on-cancel <file> arms
+//!             checkpoint-on-abort for cancels issued through the session
+//!             API (train itself never cancels; see `jobs --cancel-demo`);
+//!             --max-in-flight caps the job's concurrent block tasks
+//!   jobs      multi-tenant demo: submit several concurrent training jobs
+//!             at mixed priorities on ONE engine and stream their status
+//!             (id / priority / state / block progress) until all finish;
+//!             --cancel-demo cancels the first (low-priority) job after
+//!             its first block and reports the abort checkpoint
 //!   predict   load a saved model (--load) and score a ratings file or a
 //!             dataset holdout; optionally rank the top columns for a row
 //!             (--top-for N, --top-n count). Checkpoints are format v2
 //!             (v1 still loads); v0 or newer-than-v2 files are rejected
-//!             with an error naming the found and supported versions
+//!             with an error naming the found and supported versions (a
+//!             v3 partial training checkpoint is pointed at train --resume)
 //!   baseline  run comparators (bmf | nomad | fpsgd | sgld | als | cgd) on
 //!             the same data; --method accepts a comma-separated list and
 //!             all fits share one warm engine
@@ -20,11 +33,15 @@
 //!   datasets  print Table-1 style statistics for the synthetic profiles
 //!   partition analyse block grids for a dataset (Fig-3 style table)
 //!   simulate  strong-scaling simulation on the calibrated cluster model
-//!             (--sweep lockstep|pipelined picks the exchange regime)
+//!             (--sweep lockstep|pipelined picks the exchange regime,
+//!             --schedule barrier|dag the block schedule, --widths
+//!             static|dynamic the DAG node-group sizing)
 //!
 //! Examples:
 //!   bmf-pp train --dataset netflix --scale 0.002 --grid 4x2 --samples 20
 //!   bmf-pp train --dataset movielens --save m.json --save-test holdout.csv
+//!   bmf-pp train --dataset movielens --resume aborted_v3.json
+//!   bmf-pp jobs --jobs 3 --cancel-demo
 //!   bmf-pp predict --load m.json --file holdout.csv
 //!   bmf-pp baseline --method nomad,fpsgd,als --dataset movielens
 //!   bmf-pp simulate --dataset yahoo --grid 16x16 --max-nodes 16384
@@ -38,7 +55,8 @@ use bmf_pp::cluster::{calibrate, sim};
 use bmf_pp::coordinator::backend::BlockBackend;
 use bmf_pp::coordinator::config::auto_tau;
 use bmf_pp::coordinator::{
-    checkpoint, BackendSpec, Engine, SchedulerMode, SweepMode, TrainConfig, TrainEvent,
+    checkpoint, BackendSpec, Engine, Priority, SchedulerMode, SweepMode, TrainConfig,
+    TrainEvent, TrainOutcome,
 };
 use bmf_pp::data::generator::{DatasetProfile, SyntheticDataset};
 use bmf_pp::data::loader;
@@ -64,6 +82,13 @@ fn parse_sweep_mode(args: &Args) -> anyhow::Result<SweepMode> {
         "pipelined" => Ok(SweepMode::Pipelined),
         other => anyhow::bail!("unknown sweep mode '{other}' (lockstep | pipelined)"),
     }
+}
+
+/// `--priority low|normal|high` parsing (train and jobs).
+fn parse_priority(args: &Args) -> anyhow::Result<Priority> {
+    args.get_or("priority", "normal")
+        .parse::<Priority>()
+        .map_err(|e| anyhow::anyhow!(e))
 }
 
 /// Where the training matrix comes from (parsed flags, loaded lazily).
@@ -130,6 +155,10 @@ fn plan_train(args: &Args) -> anyhow::Result<Action> {
     let staleness = args.usize_or("staleness", 0);
     let block_parallelism = args.get("block-parallelism").and_then(|v| v.parse().ok());
     let phase_sample_frac = args.f64_or("phase-sample-frac", 1.0);
+    let priority = parse_priority(args)?;
+    let max_in_flight = args.usize_or("max-in-flight", 0);
+    let resume_path = args.get("resume").map(str::to_string);
+    let cancel_ckpt = args.get("checkpoint-on-cancel").map(str::to_string);
     let save_path = args.get("save").map(str::to_string);
     let save_test = args.get("save-test").map(str::to_string);
     let metrics_path = args.get("metrics").map(str::to_string);
@@ -153,6 +182,13 @@ fn plan_train(args: &Args) -> anyhow::Result<Action> {
         }
         if let Some(bp) = block_parallelism {
             cfg.block_parallelism = bp;
+        }
+        cfg = cfg.with_priority(priority).with_max_in_flight(max_in_flight);
+        if let Some(path) = &resume_path {
+            cfg = cfg.with_resume_from(path.clone());
+        }
+        if let Some(path) = &cancel_ckpt {
+            cfg = cfg.with_checkpoint_on_cancel(path.clone());
         }
         cfg.phase_sample_frac = phase_sample_frac;
         // per-sweep RMSE costs an extra O(nnz·k) pass per retained sweep;
@@ -191,8 +227,29 @@ fn plan_train(args: &Args) -> anyhow::Result<Action> {
                         fmt_duration(*secs)
                     );
                 }
+                TrainEvent::BlockRestored { node } => {
+                    println!(
+                        "[{:>6.2}s] block ({},{}) restored from resume checkpoint",
+                        clock.secs(),
+                        node.0,
+                        node.1
+                    );
+                }
                 TrainEvent::SweepSample { .. } => {} // recorded, not printed
                 TrainEvent::ChunkExchanged { .. } => {} // counted, not printed
+                TrainEvent::CheckpointSaved { path, blocks } => {
+                    println!(
+                        "[{:>6.2}s] partial checkpoint ({blocks} blocks) -> {}",
+                        clock.secs(),
+                        path.display()
+                    );
+                }
+                TrainEvent::Cancelled { blocks_completed } => {
+                    println!(
+                        "[{:>6.2}s] cancelled after {blocks_completed} blocks",
+                        clock.secs()
+                    );
+                }
                 TrainEvent::Finished { secs, blocks } => {
                     println!(
                         "[{:>6.2}s] finished: {blocks} blocks in {}",
@@ -202,7 +259,20 @@ fn plan_train(args: &Args) -> anyhow::Result<Action> {
                 }
             }
         }
-        let result = session.wait()?;
+        let result = match session.wait()? {
+            TrainOutcome::Completed(result) => *result,
+            TrainOutcome::Cancelled(info) => {
+                println!(
+                    "training cancelled after {} completed blocks{}",
+                    info.blocks_completed,
+                    match &info.checkpoint {
+                        Some(p) => format!("; resume with --resume {}", p.display()),
+                        None => String::new(),
+                    }
+                );
+                return Ok(());
+            }
+        };
 
         let rmse = result.rmse(&test);
         println!(
@@ -220,6 +290,12 @@ fn plan_train(args: &Args) -> anyhow::Result<Action> {
             fmt_duration(result.stats.overlap_secs),
             fmt_duration(result.stats.comm_overlap_secs)
         );
+        if result.stats.blocks_restored > 0 {
+            println!(
+                "resume: {} blocks restored from checkpoint, {} re-sampled",
+                result.stats.blocks_restored, result.stats.blocks
+            );
+        }
         let tp = Throughput::measure(
             train.rows,
             train.cols,
@@ -242,6 +318,115 @@ fn plan_train(args: &Args) -> anyhow::Result<Action> {
             loader::save_csv(&test, Path::new(&path))?;
             println!("holdout set saved to {path} ({} ratings)", test.nnz());
         }
+        Ok(())
+    }))
+}
+
+/// `jobs` — the multi-tenant engine demo: several concurrent sessions at
+/// mixed priorities on one warm pool, status streamed until all terminal.
+fn plan_jobs(args: &Args) -> anyhow::Result<Action> {
+    let data = DataSpec::from_args(args);
+    let n_jobs = args.usize_or("jobs", 3).max(1);
+    let threads = args.usize_or("threads", 4);
+    let burnin = args.usize_or("burnin", 4);
+    let samples = args.usize_or("samples", 8);
+    let seed = args.u64_or("seed", 42);
+    let cancel_demo = args.bool_or("cancel-demo", false);
+
+    Ok(Box::new(move || {
+        let (data, k) = data.load()?;
+        let (train, _) = holdout_split_covered(&data, 0.2, 7);
+        let engine = Engine::new(&BackendSpec::Native, threads);
+        let abort_ckpt =
+            std::env::temp_dir().join(format!("bmfpp_jobs_abort_{}.json", std::process::id()));
+
+        // job 0 is wide and Low; priorities then cycle upward, so the
+        // finish order itself demonstrates priority dispatch
+        let mut sessions = Vec::new();
+        for idx in 0..n_jobs {
+            let priority = match idx % 3 {
+                0 => Priority::Low,
+                1 => Priority::Normal,
+                _ => Priority::High,
+            };
+            let grid = if priority == Priority::Low { (3, 3) } else { (2, 2) };
+            let mut cfg = TrainConfig::new(k)
+                .with_grid(grid.0, grid.1)
+                .with_sweeps(burnin, samples)
+                .with_seed(seed.wrapping_add(idx as u64))
+                .with_tau(auto_tau(&train))
+                .with_backend(BackendSpec::Native)
+                .with_priority(priority);
+            if cancel_demo && idx == 0 {
+                cfg = cfg.with_checkpoint_on_cancel(abort_ckpt.clone());
+            }
+            let session = engine.submit(cfg, &train)?;
+            println!(
+                "submitted job #{} [{priority}] grid {}x{}",
+                session.id(),
+                grid.0,
+                grid.1
+            );
+            sessions.push(session);
+        }
+        if cancel_demo {
+            // cancel the wide low-priority job once it has produced a
+            // block — checkpoint-on-abort in action
+            let first = &sessions[0];
+            while first.progress().0 < 1 && !first.status().is_terminal() {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            first.cancel();
+        }
+
+        let clock = Stopwatch::start();
+        let mut finish_order: Vec<u64> = Vec::new();
+        loop {
+            let snap = engine.jobs();
+            let line = snap
+                .iter()
+                .map(|j| {
+                    format!(
+                        "#{} {}:{} {}/{}",
+                        j.id, j.priority, j.status, j.blocks_done, j.blocks_total
+                    )
+                })
+                .collect::<Vec<_>>()
+                .join("  ");
+            println!("[{:>5.1}s] {line}", clock.secs());
+            for j in &snap {
+                if j.status.is_terminal() && !finish_order.contains(&j.id) {
+                    finish_order.push(j.id);
+                }
+            }
+            if snap.iter().all(|j| j.status.is_terminal()) {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(200));
+        }
+
+        for session in sessions {
+            let id = session.id();
+            match session.wait()? {
+                TrainOutcome::Completed(res) => println!(
+                    "job #{id}: completed {} blocks, train RMSE {:.4}",
+                    res.stats.blocks,
+                    res.rmse(&train)
+                ),
+                TrainOutcome::Cancelled(info) => println!(
+                    "job #{id}: cancelled after {} blocks{}",
+                    info.blocks_completed,
+                    match &info.checkpoint {
+                        Some(p) => format!("; resume with train --resume {}", p.display()),
+                        None => String::new(),
+                    }
+                ),
+            }
+        }
+        println!(
+            "finish order: {}",
+            finish_order.iter().map(|i| format!("#{i}")).collect::<Vec<_>>().join(" -> ")
+        );
         Ok(())
     }))
 }
@@ -462,6 +647,16 @@ fn plan_simulate(args: &Args) -> anyhow::Result<Action> {
     let k_flag = args.get("k").and_then(|v| v.parse::<usize>().ok());
     let sweep_mode = parse_sweep_mode(args)?;
     let chunks = args.usize_or("chunks", 16);
+    let schedule = match args.get_or("schedule", "barrier") {
+        "barrier" => sim::ScheduleMode::Barrier,
+        "dag" => sim::ScheduleMode::Dag,
+        other => anyhow::bail!("unknown schedule '{other}' (barrier | dag)"),
+    };
+    let widths = match args.get_or("widths", "static") {
+        "static" => sim::WidthPolicy::Static,
+        "dynamic" => sim::WidthPolicy::Dynamic,
+        other => anyhow::bail!("unknown width policy '{other}' (static | dynamic)"),
+    };
 
     Ok(Box::new(move || {
         let profile = DatasetProfile::by_name(&name)
@@ -477,18 +672,18 @@ fn plan_simulate(args: &Args) -> anyhow::Result<Action> {
             profile.paper_rows, profile.paper_cols, profile.paper_ratings
         );
         let mut pts = Vec::new();
+        let comm_model = sim::model_for_sweep(&model, sweep_mode, chunks);
         for p in sim::node_sweep(&grid, max_nodes) {
-            let r = sim::simulate_pp_sweep(
-                &model,
+            let r = sim::simulate_pp_mode_widths(
+                &comm_model,
                 &grid,
                 &nnz,
                 k,
                 sweeps,
                 sweeps,
                 p,
-                sim::ScheduleMode::Barrier,
-                sweep_mode,
-                chunks,
+                schedule,
+                widths,
             );
             pts.push((p, r.total));
             println!(
@@ -524,6 +719,7 @@ fn main() {
     // stage 1: parse — each plan_* consumes exactly the flags it accepts
     let planned = match args.subcommand.as_deref() {
         Some("train") => plan_train(&args),
+        Some("jobs") => plan_jobs(&args),
         Some("predict") => plan_predict(&args),
         Some("baseline") => plan_baseline(&args),
         Some("datasets") => plan_datasets(&args),
@@ -533,7 +729,7 @@ fn main() {
         Some("recommend-grid") => plan_recommend_grid(&args),
         other => {
             eprintln!(
-                "usage: bmf-pp <train|predict|baseline|datasets|partition|simulate|evaluate|recommend-grid> [--flags]\n\
+                "usage: bmf-pp <train|jobs|predict|baseline|datasets|partition|simulate|evaluate|recommend-grid> [--flags]\n\
                  (got: {other:?}) — see crate docs for flag reference"
             );
             std::process::exit(2);

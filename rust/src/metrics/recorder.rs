@@ -60,7 +60,13 @@ impl Recorder {
                 self.scalar("blocks", *blocks as f64);
             }
             TrainEvent::ChunkExchanged { .. } => self.chunks_exchanged += 1,
-            TrainEvent::PhaseStarted { .. } => {}
+            TrainEvent::Cancelled { blocks_completed } => {
+                self.scalar("cancelled_after_blocks", *blocks_completed as f64);
+            }
+            TrainEvent::CheckpointSaved { blocks, .. } => {
+                self.scalar("checkpoint_blocks", *blocks as f64);
+            }
+            TrainEvent::PhaseStarted { .. } | TrainEvent::BlockRestored { .. } => {}
         }
     }
 

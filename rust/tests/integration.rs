@@ -5,13 +5,18 @@
 use bmf_pp::baselines::sgd_common::SgdConfig;
 use bmf_pp::baselines::{fpsgd, nomad};
 use bmf_pp::coordinator::config::auto_tau;
-use bmf_pp::coordinator::{BackendSpec, PpTrainer, SchedulerMode, TrainConfig};
+use bmf_pp::coordinator::{BackendSpec, Engine, SchedulerMode, TrainConfig, TrainResult};
 use bmf_pp::data::generator::SyntheticDataset;
 use bmf_pp::data::loader;
 use bmf_pp::data::split::holdout_split_covered;
 use bmf_pp::data::sparse::Coo;
 use bmf_pp::gibbs::NativeGibbs;
 use bmf_pp::metrics::rmse::mean_predictor_rmse;
+
+/// One-shot training run on a private engine sized by the config.
+fn train_once(cfg: TrainConfig, train: &Coo) -> TrainResult {
+    Engine::new(&cfg.backend, cfg.block_parallelism).train(&cfg, train).unwrap()
+}
 
 fn artifacts_present() -> bool {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
@@ -38,7 +43,7 @@ fn full_pipeline_hlo_backend() {
         .with_sweeps(8, 16)
         .with_tau(auto_tau(&train))
         .with_seed(73);
-    let res = PpTrainer::new(cfg).train(&train).unwrap();
+    let res = train_once(cfg, &train);
     let rmse = res.rmse(&test);
     let base = mean_predictor_rmse(train.mean(), &test);
     assert!(rmse < base * 0.9, "hlo pipeline rmse {rmse} vs mean {base}");
@@ -59,8 +64,8 @@ fn hlo_and_native_backends_agree_statistically() {
             .with_backend(backend)
     };
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let r_hlo = PpTrainer::new(mk(BackendSpec::Hlo { artifact_dir: dir })).train(&train).unwrap();
-    let r_nat = PpTrainer::new(mk(BackendSpec::Native)).train(&train).unwrap();
+    let r_hlo = train_once(mk(BackendSpec::Hlo { artifact_dir: dir }), &train);
+    let r_nat = train_once(mk(BackendSpec::Native), &train);
     let (a, b) = (r_hlo.rmse(&test), r_nat.rmse(&test));
     // same seeds and same math; f32-vs-f64 accumulation orders diverge over
     // a chain, so compare quality, not bits
@@ -79,8 +84,8 @@ fn within_block_workers_match_single_worker_exactly() {
             .with_workers(workers)
             .with_backend(BackendSpec::Native)
     };
-    let r1 = PpTrainer::new(mk(1)).train(&train).unwrap();
-    let r4 = PpTrainer::new(mk(4)).train(&train).unwrap();
+    let r1 = train_once(mk(1), &train);
+    let r4 = train_once(mk(4), &train);
     assert_eq!(r1.u_mean, r4.u_mean, "sharding must be bit-exact");
     assert!((r1.rmse(&test) - r4.rmse(&test)).abs() < 1e-12);
 }
@@ -96,7 +101,7 @@ fn pp_matches_plain_bmf_quality() {
         .with_tau(tau)
         .with_seed(76)
         .with_backend(BackendSpec::Native);
-    let pp = PpTrainer::new(cfg).train(&train).unwrap().rmse(&test);
+    let pp = train_once(cfg, &train).rmse(&test);
     let mut bmf = NativeGibbs::new(&train, k, tau, 76);
     for _ in 0..30 {
         bmf.sweep();
@@ -122,7 +127,7 @@ fn all_methods_beat_mean_predictor_on_all_profiles() {
             .with_tau(auto_tau(&train))
             .with_seed(83)
             .with_backend(BackendSpec::Native);
-        let pp = PpTrainer::new(cfg).train(&train).unwrap().rmse(&test);
+        let pp = train_once(cfg, &train).rmse(&test);
         let sgd = SgdConfig::new(ds.k).with_epochs(25).with_seed(83);
         let f = fpsgd::train(&train, &sgd).rmse(&test);
         let n = nomad::train(&train, &sgd).rmse(&test);
@@ -145,7 +150,7 @@ fn csv_to_training_pipeline() {
         .with_sweeps(5, 10)
         .with_tau(auto_tau(&train))
         .with_backend(BackendSpec::Native);
-    let res = PpTrainer::new(cfg).train(&train).unwrap();
+    let res = train_once(cfg, &train);
     assert!(res.rmse(&test).is_finite());
     std::fs::remove_file(path).ok();
 }
@@ -249,6 +254,25 @@ fn cli_train_save_predict_roundtrip_reports_identical_rmse() {
 }
 
 #[test]
+fn cli_jobs_runs_concurrent_sessions_to_completion() {
+    // the multi-tenant demo: three mixed-priority jobs on one engine,
+    // status streamed, all terminal, finish order reported
+    let bin = env!("CARGO_BIN_EXE_bmf-pp");
+    let out = std::process::Command::new(bin)
+        .args([
+            "jobs", "--dataset", "movielens", "--scale", "0.001", "--jobs", "3", "--burnin",
+            "2", "--samples", "4", "--threads", "2",
+        ])
+        .output()
+        .expect("run jobs");
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(stdout.matches("submitted job #").count(), 3, "{stdout}");
+    assert_eq!(stdout.matches(": completed").count(), 3, "{stdout}");
+    assert!(stdout.contains("finish order"), "{stdout}");
+}
+
+#[test]
 fn cli_rejects_unknown_flags_listing_known_ones() {
     let bin = env!("CARGO_BIN_EXE_bmf-pp");
     let out = std::process::Command::new(bin)
@@ -275,8 +299,8 @@ fn dag_and_barrier_schedulers_agree_bitwise_end_to_end() {
             .with_backend(BackendSpec::Native)
             .with_scheduler(mode)
     };
-    let dag = PpTrainer::new(mk(SchedulerMode::Dag)).train(&train).unwrap();
-    let bar = PpTrainer::new(mk(SchedulerMode::Barrier)).train(&train).unwrap();
+    let dag = train_once(mk(SchedulerMode::Dag), &train);
+    let bar = train_once(mk(SchedulerMode::Barrier), &train);
     assert_eq!(dag.u_mean, bar.u_mean);
     assert_eq!(dag.v_mean, bar.v_mean);
     assert_eq!(dag.u_post.prec, bar.u_post.prec);
@@ -298,8 +322,8 @@ fn phase_sample_reduction_reduces_compute() {
         c.phase_sample_frac = frac;
         c
     };
-    let full = PpTrainer::new(mk(1.0)).train(&train).unwrap();
-    let quarter = PpTrainer::new(mk(0.25)).train(&train).unwrap();
+    let full = train_once(mk(1.0), &train);
+    let quarter = train_once(mk(0.25), &train);
     assert!(
         quarter.stats.sweeps < full.stats.sweeps,
         "{} vs {}",

@@ -1,0 +1,110 @@
+//! Multi-session stress: N concurrent submits with deterministic-random
+//! cancels/pauses on one engine, watchdog-guarded so a scheduler deadlock
+//! fails the test instead of hanging CI, and a timed engine drop proving
+//! the pool shuts down clean afterwards.
+//!
+//! Heavy by design — run explicitly (CI stress job):
+//!
+//!     cargo test --release --test stress -- --ignored --nocapture
+
+use bmf_pp::coordinator::{BackendSpec, Engine, Priority, TrainConfig, TrainOutcome};
+use bmf_pp::data::generator::SyntheticDataset;
+use bmf_pp::data::split::holdout_split_covered;
+use bmf_pp::rng::Rng;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
+
+#[test]
+#[ignore = "heavy; exercised by the CI stress job"]
+fn multi_session_stress_random_cancels_no_deadlock() {
+    let ds = SyntheticDataset::by_name("movielens", 0.0015, 301).unwrap();
+    let (train, _) = holdout_split_covered(&ds.ratings, 0.2, 302);
+    let engine = Arc::new(Engine::new(&BackendSpec::Native, 4));
+    let mut rng = Rng::seed_from_u64(303);
+
+    const JOBS: usize = 12;
+    let (done_tx, done_rx) = channel::<(usize, &'static str)>();
+    let mut workers = Vec::new();
+    for idx in 0..JOBS {
+        let priority = match idx % 3 {
+            0 => Priority::Low,
+            1 => Priority::Normal,
+            _ => Priority::High,
+        };
+        let grid = if rng.bernoulli(0.5) { (3, 3) } else { (2, 2) };
+        let cfg = TrainConfig::new(ds.k)
+            .with_backend(BackendSpec::Native)
+            .with_grid(grid.0, grid.1)
+            .with_sweeps(3, 6)
+            .with_seed(304 + idx as u64)
+            .with_priority(priority)
+            .with_max_in_flight(if rng.bernoulli(0.3) { 1 } else { 0 })
+            .with_checkpoint_on_cancel(std::env::temp_dir().join(format!(
+                "bmfpp_stress_{}_{idx}.json",
+                std::process::id()
+            )));
+        let session = engine.submit(cfg, &train).unwrap();
+        // a third of the jobs get cancelled at a random point, a third
+        // get briefly paused; the pool must drain them all either way
+        let action = rng.uniform();
+        let delay_ms = (rng.uniform() * 40.0) as u64;
+        let done = done_tx.clone();
+        workers.push(std::thread::spawn(move || {
+            if action < 0.33 {
+                std::thread::sleep(Duration::from_millis(delay_ms));
+                session.cancel();
+            } else if action < 0.66 {
+                std::thread::sleep(Duration::from_millis(delay_ms));
+                session.pause();
+                std::thread::sleep(Duration::from_millis(10));
+                session.resume();
+            }
+            let outcome = session.wait().unwrap();
+            let kind = match outcome {
+                TrainOutcome::Completed(_) => "completed",
+                TrainOutcome::Cancelled(info) => {
+                    // a checkpoint only exists when blocks completed
+                    assert_eq!(info.checkpoint.is_some(), info.blocks_completed > 0);
+                    if let Some(p) = &info.checkpoint {
+                        std::fs::remove_file(p).ok();
+                    }
+                    "cancelled"
+                }
+            };
+            let _ = done.send((idx, kind));
+        }));
+    }
+    drop(done_tx);
+
+    // watchdog: every session must settle well within the budget — a
+    // recv timeout here IS the deadlock detector
+    let mut outcomes = Vec::new();
+    for _ in 0..JOBS {
+        let (idx, kind) = done_rx
+            .recv_timeout(Duration::from_secs(180))
+            .expect("a session failed to settle within 180s — scheduler deadlock?");
+        outcomes.push((idx, kind));
+    }
+    for w in workers {
+        w.join().unwrap();
+    }
+    assert_eq!(outcomes.len(), JOBS);
+    println!(
+        "settled: {} completed / {} cancelled",
+        outcomes.iter().filter(|(_, k)| *k == "completed").count(),
+        outcomes.iter().filter(|(_, k)| *k == "cancelled").count()
+    );
+
+    // clean pool shutdown: dropping the engine joins every worker; guard
+    // it with the same watchdog pattern
+    let (drop_tx, drop_rx) = channel::<()>();
+    let engine = Arc::try_unwrap(engine).map_err(|_| ()).expect("all clones joined");
+    std::thread::spawn(move || {
+        drop(engine);
+        let _ = drop_tx.send(());
+    });
+    drop_rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("engine drop (pool join) hung — queue failed to drain");
+}
