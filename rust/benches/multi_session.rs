@@ -136,6 +136,7 @@ fn main() {
             TrainOutcome::Completed(_) => {
                 println!("  run finished before the cancel landed; skipping resume timing");
             }
+            TrainOutcome::Failed(info) => panic!("unexpected failure: {}", info.error),
         }
         std::fs::remove_file(ckpt).ok();
     }

@@ -7,14 +7,22 @@
 //!   P3 — padding overhead: real vs padded cells over a netflix-profile
 //!        PP run (the cost of shape-specialized AOT artifacts).
 //!   P4 — end-to-end trainer wall-clock, cold engines vs warm pool.
+//!   P5 — snapshot metrics for the perf trajectory: sampler throughput
+//!        (ratings/s), pipelined comm/compute overlap seconds, and
+//!        per-job queue-wait seconds on a warm engine.
 //!
 //!     cargo bench --bench perf_probe
+//!
+//! With `--json` (the CI bench-snapshot job) the run additionally writes
+//! `bench_results/BENCH_PR5.json` — a flat machine-readable snapshot
+//! (throughput, comm_overlap_secs, queue_wait_secs, plus every probe
+//! result) that future PRs diff their numbers against.
 
 mod common;
 
 use bmf_pp::coordinator::config::auto_tau;
 use bmf_pp::coordinator::Engine as TrainEngine;
-use bmf_pp::coordinator::{BackendSpec, TrainConfig};
+use bmf_pp::coordinator::{BackendSpec, SweepMode, TrainConfig};
 use bmf_pp::data::sparse::{Coo, Csr};
 use bmf_pp::gibbs::native::sample_side_native;
 use bmf_pp::posterior::RowGaussians;
@@ -179,5 +187,53 @@ fn main() {
         results.push(("p4_warm_secs".to_string(), warm));
     }
 
+    println!("\nP5 — snapshot metrics (throughput / sweep overlap / queue wait)");
+    {
+        let (_, train, _) = common::bench_dataset("movielens");
+        let tau = auto_tau(&train);
+        let cfg = TrainConfig::new(16)
+            .with_grid(2, 2)
+            .with_sweeps(6, 12)
+            .with_workers(2)
+            .with_tau(tau)
+            .with_seed(8);
+        let engine = TrainEngine::new(&cfg.backend, cfg.block_parallelism);
+        engine.train(&cfg, &train).unwrap(); // warm the pool
+
+        // throughput + queue wait, measured through the session path the
+        // multi-tenant engine actually serves
+        let result = engine
+            .submit(cfg.clone(), &train)
+            .unwrap()
+            .wait()
+            .unwrap()
+            .into_result()
+            .unwrap();
+        let ratings_per_sec =
+            result.stats.ratings_processed as f64 / result.timings.total.max(1e-9);
+        println!(
+            "  throughput {:.2}M ratings/s, queue wait {:.4}s",
+            ratings_per_sec / 1e6,
+            result.stats.queue_wait_secs
+        );
+        results.push(("throughput_ratings_per_sec".to_string(), ratings_per_sec));
+        results.push(("queue_wait_secs".to_string(), result.stats.queue_wait_secs));
+
+        // comm/compute overlap from a pipelined run on the same engine
+        let pipe = engine
+            .train(
+                &cfg.with_sweep_mode(SweepMode::Pipelined).with_chunk_rows(64).with_staleness(1),
+                &train,
+            )
+            .unwrap();
+        println!("  pipelined comm overlap {:.4}s", pipe.stats.comm_overlap_secs);
+        results.push(("comm_overlap_secs".to_string(), pipe.stats.comm_overlap_secs));
+    }
+
     common::save_json("perf_probe.json", &results);
+    // machine-readable snapshot for the CI bench-snapshot artifact
+    if std::env::args().any(|a| a == "--json") {
+        common::save_json("BENCH_PR5.json", &results);
+        println!("\nsnapshot written to bench_results/BENCH_PR5.json");
+    }
 }

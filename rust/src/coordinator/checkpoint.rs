@@ -13,14 +13,27 @@
 //! version found and the supported range, instead of decoding it with
 //! wrong assumptions.
 //!
-//! **Partial checkpoints (v3):** a cancelled training run persists the
-//! posteriors of every *completed block* as a format-v3 file
-//! ([`save_partial`] / [`load_partial`], [`PARTIAL_VERSION`]) so the job
-//! can later resume via `TrainConfig::resume_from` without re-sampling
-//! those blocks. v3 files are not models: feeding one to [`load`] fails
-//! with an error naming the found and supported versions plus a pointer
-//! at the resume path, and feeding a v1/v2 model to [`load_partial`]
-//! fails symmetrically.
+//! **Partial checkpoints (v3):** a cancelled, failed, or periodically
+//! checkpointing training run persists the posteriors of every *completed
+//! block* as a format-v3 file ([`save_partial`] / [`load_partial`],
+//! [`PARTIAL_VERSION`]) so the job can later resume via
+//! `TrainConfig::resume_from` without re-sampling those blocks. v3 files
+//! are not models: feeding one to [`load`] fails with an error naming the
+//! found and supported versions plus a pointer at the resume path, and
+//! feeding a v1/v2 model to [`load_partial`] fails symmetrically.
+//!
+//! **Generations:** periodic checkpointing writes a *sequence* of v3
+//! files into one directory — `partial-gen-00000001.json`,
+//! `partial-gen-00000002.json`, … — each carrying a monotonically
+//! increasing [`PartialCheckpoint::generation`] counter. Every write is
+//! atomic (write to a temp file in the same directory, then rename), so a
+//! crash — even `SIGKILL` mid-write — can never leave a half-written file
+//! under a generation name; at worst a stale `*.tmp` is left behind,
+//! which discovery ignores. [`latest_valid_partial`] walks the
+//! generations newest-first and returns the first one that loads, so a
+//! corrupted newest file degrades to the previous generation instead of
+//! failing the resume. [`prune_generations`] implements keep-last-K
+//! retention.
 
 use super::block_task::BlockPosteriors;
 use crate::posterior::{PosteriorModel, RowGaussians};
@@ -141,9 +154,10 @@ pub struct PartialBlock {
     pub post: BlockPosteriors,
 }
 
-/// A cancelled run's resumable state: the identity of the run (latent dim,
-/// grid, seed, centring mean — resume refuses a mismatch) plus the
-/// posterior marginals of every block that completed before the abort.
+/// An interrupted run's resumable state: the identity of the run (latent
+/// dim, grid, seed, centring mean — resume refuses a mismatch) plus the
+/// posterior marginals of every block that completed before the abort or
+/// periodic snapshot.
 #[derive(Debug, Clone)]
 pub struct PartialCheckpoint {
     /// Latent dimension the run used.
@@ -156,11 +170,20 @@ pub struct PartialCheckpoint {
     /// Global mean the training matrix was centred by — doubles as a
     /// fingerprint that the resume is fed the same data.
     pub global_mean: f64,
+    /// Monotonic snapshot counter for periodic checkpointing: each write
+    /// into a checkpoint directory bumps it, and a resumed run continues
+    /// numbering past the generation it restored from. 0 for one-shot
+    /// (cancel-path) files that never entered a generation sequence.
+    pub generation: u64,
     /// Completed blocks, in the order they are restored.
     pub blocks: Vec<PartialBlock>,
 }
 
-/// Save a cancelled run's partial state as a format-v3 file.
+/// Save an interrupted run's partial state as a format-v3 file.
+///
+/// The write is atomic: the JSON is written to a `*.tmp` sibling in the
+/// same directory and renamed into place, so a reader (or a resume after
+/// a crash mid-write) can never observe a half-written file under `path`.
 pub fn save_partial(ckpt: &PartialCheckpoint, path: &Path) -> std::io::Result<()> {
     let blocks = Json::Arr(
         ckpt.blocks
@@ -183,9 +206,29 @@ pub fn save_partial(ckpt: &PartialCheckpoint, path: &Path) -> std::io::Result<()
         ("grid_i", ckpt.grid.0.into()),
         ("grid_j", ckpt.grid.1.into()),
         ("global_mean", ckpt.global_mean.into()),
+        ("generation", Json::Str(ckpt.generation.to_string())),
         ("blocks", blocks),
     ]);
-    std::fs::write(path, json::to_string(&root))
+    // same-directory temp file so the rename is atomic (one filesystem);
+    // pid + per-process counter keeps concurrent writers (two sessions,
+    // or two processes) off each other's temp files
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static WRITE_SEQ: AtomicU64 = AtomicU64::new(0);
+    let mut tmp = path.as_os_str().to_os_string();
+    tmp.push(format!(
+        ".{}.{}.tmp",
+        std::process::id(),
+        WRITE_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let tmp = std::path::PathBuf::from(tmp);
+    std::fs::write(&tmp, json::to_string(&root))?;
+    match std::fs::rename(&tmp, path) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            std::fs::remove_file(&tmp).ok();
+            Err(e)
+        }
+    }
 }
 
 /// Load a partial (resume) checkpoint. Only format v3 is accepted; any
@@ -214,6 +257,15 @@ pub fn load_partial(path: &Path) -> Result<PartialCheckpoint, CheckpointError> {
     let gj = root.get("grid_j").and_then(Json::as_usize).ok_or_else(|| bad("grid_j"))?;
     let global_mean =
         root.get("global_mean").and_then(Json::as_f64).ok_or_else(|| bad("global_mean"))?;
+    // absent in pre-generation v3 files (cancel-path writers before
+    // periodic checkpointing existed): default 0, never an error
+    let generation = match root.get("generation") {
+        None => 0,
+        Some(g) => g
+            .as_str()
+            .and_then(|s| s.parse::<u64>().ok())
+            .ok_or_else(|| bad("generation"))?,
+    };
     let mut blocks = Vec::new();
     for b in root.get("blocks").and_then(Json::as_arr).ok_or_else(|| bad("blocks"))? {
         let i = b.get("i").and_then(Json::as_usize).ok_or_else(|| bad("block i"))?;
@@ -228,7 +280,97 @@ pub fn load_partial(path: &Path) -> Result<PartialCheckpoint, CheckpointError> {
         }
         blocks.push(PartialBlock { i, j, post: BlockPosteriors { u, v } });
     }
-    Ok(PartialCheckpoint { k, seed, grid: (gi, gj), global_mean, blocks })
+    Ok(PartialCheckpoint { k, seed, grid: (gi, gj), global_mean, generation, blocks })
+}
+
+/// File-name prefix of generation files inside a checkpoint directory.
+pub const GENERATION_PREFIX: &str = "partial-gen-";
+
+/// Canonical path of generation `generation` inside checkpoint directory
+/// `dir`: `dir/partial-gen-{generation:08}.json`.
+pub fn generation_path(dir: &Path, generation: u64) -> std::path::PathBuf {
+    dir.join(format!("{GENERATION_PREFIX}{generation:08}.json"))
+}
+
+/// Parse a generation number out of a file name following the
+/// [`generation_path`] convention; `None` for anything else (models,
+/// `*.tmp` leftovers from an interrupted atomic write, unrelated files).
+fn parse_generation(name: &str) -> Option<u64> {
+    let digits = name.strip_prefix(GENERATION_PREFIX)?.strip_suffix(".json")?;
+    if digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    digits.parse().ok()
+}
+
+/// Every generation file present in `dir`, sorted ascending by generation
+/// number. Only file names matching the [`generation_path`] convention are
+/// considered; nothing is opened or validated here.
+pub fn list_generations(dir: &Path) -> std::io::Result<Vec<(u64, std::path::PathBuf)>> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if let Some(generation) = parse_generation(name) {
+            out.push((generation, entry.path()));
+        }
+    }
+    out.sort_unstable_by_key(|(g, _)| *g);
+    Ok(out)
+}
+
+/// Load the newest generation in `dir` that validates, walking the
+/// sequence newest-first: a truncated or corrupted newest file (e.g. from
+/// a disk-full write racing a kill) is skipped — never loaded — and the
+/// previous generation is used instead. `Ok(None)` when the directory
+/// holds no generation file at all; an error only when files exist but
+/// none of them loads.
+pub fn latest_valid_partial(
+    dir: &Path,
+) -> Result<Option<(PartialCheckpoint, std::path::PathBuf)>, CheckpointError> {
+    let generations = list_generations(dir)?;
+    if generations.is_empty() {
+        return Ok(None);
+    }
+    let mut last_err = None;
+    for (_, path) in generations.iter().rev() {
+        match load_partial(path) {
+            Ok(ckpt) => return Ok(Some((ckpt, path.clone()))),
+            Err(e) => {
+                log::warn!("skipping invalid checkpoint generation {}: {e}", path.display());
+                last_err = Some(e);
+            }
+        }
+    }
+    Err(CheckpointError::Malformed(format!(
+        "{} generation file(s) in {} and none is a loadable v3 partial checkpoint \
+         (last error: {})",
+        generations.len(),
+        dir.display(),
+        last_err.expect("non-empty list produced at least one error")
+    )))
+}
+
+/// Keep-last-K retention: delete all but the newest `keep` generation
+/// files in `dir` (`keep == 0` keeps everything). Returns how many files
+/// were removed; per-file deletion errors are logged, not fatal — a
+/// retention hiccup must never fail the training run that triggered it.
+pub fn prune_generations(dir: &Path, keep: usize) -> std::io::Result<usize> {
+    if keep == 0 {
+        return Ok(0);
+    }
+    let generations = list_generations(dir)?;
+    let mut removed = 0;
+    if generations.len() > keep {
+        for (_, path) in &generations[..generations.len() - keep] {
+            match std::fs::remove_file(path) {
+                Ok(()) => removed += 1,
+                Err(e) => log::warn!("retention could not remove {}: {e}", path.display()),
+            }
+        }
+    }
+    Ok(removed)
 }
 
 #[cfg(test)]
@@ -395,6 +537,7 @@ mod tests {
             seed: u64::MAX - 7, // exercises the string round-trip, breaks an f64 one
             grid: (2, 2),
             global_mean: 3.25,
+            generation: u64::MAX - 11, // string round-trip, like the seed
             blocks: vec![PartialBlock {
                 i: 1,
                 j: 0,
@@ -411,6 +554,7 @@ mod tests {
         let back = load_partial(&path).unwrap();
         assert_eq!(back.k, ckpt.k);
         assert_eq!(back.seed, ckpt.seed, "u64 seed must survive JSON exactly");
+        assert_eq!(back.generation, ckpt.generation, "generation must survive JSON exactly");
         assert_eq!(back.grid, ckpt.grid);
         assert_eq!(back.global_mean.to_bits(), ckpt.global_mean.to_bits());
         assert_eq!(back.blocks.len(), 1);
@@ -469,5 +613,115 @@ mod tests {
             load(Path::new("/definitely/missing.json")),
             Err(CheckpointError::Io(_))
         ));
+    }
+
+    #[test]
+    fn legacy_v3_without_generation_loads_as_generation_zero() {
+        // files written by the pre-periodic cancel path have no
+        // generation field — they must keep loading, as generation 0
+        let path = tmp("nogen");
+        std::fs::write(
+            &path,
+            r#"{"version":3,"k":1,"seed":"9","grid_i":1,"grid_j":1,
+                "global_mean":0.5,"blocks":[]}"#,
+        )
+        .unwrap();
+        let back = load_partial(&path).unwrap();
+        assert_eq!(back.generation, 0);
+        assert_eq!(back.seed, 9);
+        std::fs::remove_file(path).ok();
+    }
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("bmfpp_gen_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn save_partial_is_atomic_and_leaves_no_tmp_file() {
+        let dir = tmp_dir("atomic");
+        let path = generation_path(&dir, 1);
+        save_partial(&tiny_partial(), &path).unwrap();
+        assert!(path.exists());
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .filter(|n| n.ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files left behind: {leftovers:?}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn generation_listing_is_sorted_and_ignores_foreign_files() {
+        let dir = tmp_dir("list");
+        let mut ckpt = tiny_partial();
+        for generation in [3u64, 1, 2] {
+            ckpt.generation = generation;
+            save_partial(&ckpt, &generation_path(&dir, generation)).unwrap();
+        }
+        // foreign files and interrupted-write leftovers must be invisible
+        std::fs::write(dir.join("model.json"), "{}").unwrap();
+        std::fs::write(dir.join("partial-gen-00000009.json.123.tmp"), "garbage").unwrap();
+        std::fs::write(dir.join("partial-gen-x.json"), "garbage").unwrap();
+        let gens: Vec<u64> = list_generations(&dir).unwrap().into_iter().map(|(g, _)| g).collect();
+        assert_eq!(gens, vec![1, 2, 3]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn latest_valid_skips_truncated_newest_generation() {
+        let dir = tmp_dir("truncated");
+        let mut ckpt = tiny_partial();
+        ckpt.generation = 1;
+        save_partial(&ckpt, &generation_path(&dir, 1)).unwrap();
+        ckpt.generation = 2;
+        ckpt.blocks.push(ckpt.blocks[0].clone());
+        save_partial(&ckpt, &generation_path(&dir, 2)).unwrap();
+        // simulate a crash mid-write bypassing the atomic rename: a
+        // half-written newest generation
+        let full = std::fs::read_to_string(generation_path(&dir, 2)).unwrap();
+        std::fs::write(generation_path(&dir, 3), &full[..full.len() / 2]).unwrap();
+
+        // the truncated file itself is rejected with a Malformed error
+        assert!(matches!(
+            load_partial(&generation_path(&dir, 3)),
+            Err(CheckpointError::Malformed(_))
+        ));
+        // and discovery falls back to the newest generation that loads
+        let (back, path) = latest_valid_partial(&dir).unwrap().expect("valid generation");
+        assert_eq!(back.generation, 2);
+        assert_eq!(back.blocks.len(), 2);
+        assert_eq!(path, generation_path(&dir, 2));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn latest_valid_empty_dir_is_none_and_all_corrupt_is_error() {
+        let dir = tmp_dir("none");
+        assert!(latest_valid_partial(&dir).unwrap().is_none());
+        std::fs::write(generation_path(&dir, 1), "not json").unwrap();
+        let err = latest_valid_partial(&dir).unwrap_err();
+        assert!(matches!(err, CheckpointError::Malformed(_)), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn prune_keeps_last_k_generations() {
+        let dir = tmp_dir("prune");
+        let mut ckpt = tiny_partial();
+        for generation in 1..=5u64 {
+            ckpt.generation = generation;
+            save_partial(&ckpt, &generation_path(&dir, generation)).unwrap();
+        }
+        assert_eq!(prune_generations(&dir, 2).unwrap(), 3);
+        let gens: Vec<u64> = list_generations(&dir).unwrap().into_iter().map(|(g, _)| g).collect();
+        assert_eq!(gens, vec![4, 5], "the newest K generations survive");
+        // keep = 0 disables retention, pruning below the population is a no-op
+        assert_eq!(prune_generations(&dir, 0).unwrap(), 0);
+        assert_eq!(prune_generations(&dir, 5).unwrap(), 0);
+        std::fs::remove_dir_all(dir).ok();
     }
 }

@@ -1,6 +1,7 @@
 //! Training configuration for D-BMF+PP.
 
 use super::scheduler::Priority;
+use crate::testing::fault::FaultPlan;
 use std::path::PathBuf;
 
 /// Which compute backend executes the Gibbs half-sweeps.
@@ -79,6 +80,10 @@ pub enum ConfigError {
     /// at least one row.
     #[error("chunk_rows must be > 0")]
     ZeroChunkRows,
+    /// Periodic checkpointing needs somewhere to write its generations.
+    #[error("checkpoint_every is set but checkpoint_dir is not — periodic \
+             checkpoints need a directory to write generations into")]
+    CheckpointEveryWithoutDir,
 }
 
 /// How the U/V half-sweeps inside one block execute across the
@@ -212,11 +217,36 @@ pub struct TrainConfig {
     /// the final posterior is bitwise-identical to an uninterrupted run
     /// over the same completed-block set (same data/config/seed).
     pub resume_from: Option<PathBuf>,
-    /// Where a cancelled run writes its partial (v3) checkpoint of all
-    /// completed block posteriors. `None` (the default) skips
-    /// checkpoint-on-abort; a cancel with zero completed blocks never
+    /// Where a cancelled or failed run writes its partial (v3) checkpoint
+    /// of all completed block posteriors. `None` (the default) skips
+    /// checkpoint-on-abort; an abort with zero completed blocks never
     /// writes a file either way.
     pub checkpoint_on_cancel: Option<PathBuf>,
+    /// Periodic checkpointing: persist a partial (v3) checkpoint of every
+    /// completed block posterior after each `checkpoint_every` newly
+    /// completed blocks (0, the default, disables it). Writes go into
+    /// [`TrainConfig::checkpoint_dir`] as atomically-renamed,
+    /// monotonically numbered generation files, so a crash — even
+    /// `SIGKILL` — loses at most the blocks completed since the last
+    /// generation; `resume_from` pointed at the directory restores the
+    /// newest valid generation bitwise-identically.
+    pub checkpoint_every: usize,
+    /// Directory the periodic generations are written into (created on
+    /// first write). Required when `checkpoint_every > 0`. One run at a
+    /// time: generation numbering is computed per run at start, so
+    /// concurrent sessions sharing a directory would interleave (and
+    /// overwrite) each other's generations — give each job its own
+    /// directory.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Keep-last-K retention for periodic generations: after each write,
+    /// all but the newest `checkpoint_keep` generation files are deleted
+    /// (0 keeps every generation). Default 3.
+    pub checkpoint_keep: usize,
+    /// Deterministic fault injection for crash-tolerance tests: consulted
+    /// before each sampled block, on the worker thread about to run it
+    /// (see [`crate::testing::fault::FaultPlan`]). `None` — always, in
+    /// production — costs nothing.
+    pub fault: Option<FaultPlan>,
     /// Submit the job paused: its tasks queue but are not dispatched until
     /// [`Session::resume`](super::Session::resume) (or cancel, which
     /// drains them). Useful for staging work behind other jobs
@@ -255,6 +285,10 @@ impl TrainConfig {
             max_in_flight: 0,
             resume_from: None,
             checkpoint_on_cancel: None,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+            checkpoint_keep: 3,
+            fault: None,
             start_paused: false,
         }
     }
@@ -339,9 +373,36 @@ impl TrainConfig {
         self
     }
 
-    /// Write a partial (v3) checkpoint of completed blocks on cancel.
+    /// Write a partial (v3) checkpoint of completed blocks on cancel (or
+    /// on failure).
     pub fn with_checkpoint_on_cancel(mut self, path: impl Into<PathBuf>) -> Self {
         self.checkpoint_on_cancel = Some(path.into());
+        self
+    }
+
+    /// Persist a partial (v3) generation after every `every` newly
+    /// completed blocks (0 disables periodic checkpointing). Pair with
+    /// [`TrainConfig::with_checkpoint_dir`].
+    pub fn with_checkpoint_every(mut self, every: usize) -> Self {
+        self.checkpoint_every = every;
+        self
+    }
+
+    /// Directory the periodic checkpoint generations are written into.
+    pub fn with_checkpoint_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.checkpoint_dir = Some(dir.into());
+        self
+    }
+
+    /// Keep only the newest `keep` periodic generations (0 keeps all).
+    pub fn with_checkpoint_keep(mut self, keep: usize) -> Self {
+        self.checkpoint_keep = keep;
+        self
+    }
+
+    /// Attach a deterministic fault-injection plan (testing hook).
+    pub fn with_fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.fault = Some(plan);
         self
     }
 
@@ -373,6 +434,9 @@ impl TrainConfig {
         }
         if self.chunk_rows == 0 {
             return Err(ConfigError::ZeroChunkRows);
+        }
+        if self.checkpoint_every > 0 && self.checkpoint_dir.is_none() {
+            return Err(ConfigError::CheckpointEveryWithoutDir);
         }
         Ok(())
     }
@@ -483,6 +547,35 @@ mod tests {
         assert!(Priority::Low < Priority::Normal && Priority::Normal < Priority::High);
         assert_eq!("high".parse::<Priority>(), Ok(Priority::High));
         assert!("urgent".parse::<Priority>().is_err());
+    }
+
+    #[test]
+    fn periodic_checkpoint_fields_default_chain_and_validate() {
+        let c = TrainConfig::new(8);
+        assert_eq!(c.checkpoint_every, 0);
+        assert!(c.checkpoint_dir.is_none());
+        assert_eq!(c.checkpoint_keep, 3);
+        assert!(c.fault.is_none());
+        // every > 0 without a directory is a typed config error
+        assert_eq!(
+            TrainConfig::new(8).with_checkpoint_every(2).validate(100, 50),
+            Err(ConfigError::CheckpointEveryWithoutDir)
+        );
+        let c = TrainConfig::new(8)
+            .with_checkpoint_every(2)
+            .with_checkpoint_dir("/tmp/ckpts")
+            .with_checkpoint_keep(5)
+            .with_fault_plan(FaultPlan::panic_at_block(1));
+        assert_eq!(c.checkpoint_every, 2);
+        assert_eq!(c.checkpoint_dir.as_deref(), Some(std::path::Path::new("/tmp/ckpts")));
+        assert_eq!(c.checkpoint_keep, 5);
+        assert!(c.fault.unwrap().kills_block(1));
+        assert_eq!(c.validate(100, 50), Ok(()));
+        // a directory alone (no interval) is fine — on-cancel writers use it
+        assert_eq!(
+            TrainConfig::new(8).with_checkpoint_dir("/tmp/ckpts").validate(100, 50),
+            Ok(())
+        );
     }
 
     #[test]

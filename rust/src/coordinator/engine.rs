@@ -26,6 +26,22 @@
 //! [`Session::status`] / [`Session::progress`] observe the run live, and
 //! [`Engine::jobs`] snapshots every session with a live handle.
 //!
+//! **Crash tolerance.** `TrainConfig::{checkpoint_every, checkpoint_dir}`
+//! make a session persist periodic checkpoint generations while it runs,
+//! so even a hard crash (process kill, node loss) is resumable from the
+//! newest valid generation. A block task that errors or panics fails its
+//! own session with [`TrainOutcome::Failed`] — in-flight siblings drain,
+//! a final abort checkpoint is written, and every other session on the
+//! shared pool is bitwise-unaffected.
+//!
+//! **Admission control.** The engine's [`AdmissionPolicy`] bounds how
+//! many live jobs it accepts: past the bound, [`Engine::submit`] returns
+//! a typed [`SubmitError::BacklogFull`] (`Reject`) or applies
+//! backpressure by holding the caller (`Block`). `RunStats::
+//! queue_wait_secs` reports how long each admitted job then waited for
+//! its first worker slot — the fairness signal across [`Priority`]
+//! levels.
+//!
 //! Three ways to run a job:
 //!
 //! - [`Engine::train`] — blocking, no events: submit + wait in one call.
@@ -52,7 +68,7 @@ use std::fmt;
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver};
-use std::sync::{Arc, Mutex, Weak};
+use std::sync::{Arc, Condvar, Mutex, Weak};
 
 /// One of the four stages of the PP pipeline.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -150,8 +166,10 @@ pub enum TrainEvent {
         /// so far, this one included (1-based).
         seq: u64,
     },
-    /// A cancelled run persisted its completed block posteriors as a
-    /// partial (v3) checkpoint.
+    /// The run persisted its completed block posteriors as a partial (v3)
+    /// checkpoint — a periodic generation
+    /// (`TrainConfig::checkpoint_every`) or an abort checkpoint written on
+    /// cancel/failure.
     CheckpointSaved {
         /// Where the checkpoint was written.
         path: PathBuf,
@@ -162,6 +180,16 @@ pub enum TrainEvent {
     Cancelled {
         /// Blocks whose posteriors were completed before the cancel took
         /// effect.
+        blocks_completed: usize,
+    },
+    /// A block task errored or panicked and the run failed (its job only —
+    /// other sessions on the pool are untouched); no further block events
+    /// follow.
+    Failed {
+        /// The first task failure, rendered.
+        error: String,
+        /// Blocks whose posteriors were completed before (and while) the
+        /// run went down.
         blocks_completed: usize,
     },
     /// The whole schedule (all blocks + aggregation) completed.
@@ -176,6 +204,58 @@ pub enum TrainEvent {
 /// Where events go: any thread-safe callback. `Engine::submit` wires this
 /// to a channel; `Engine::train_observed` passes the caller's closure.
 pub type EventSink = Arc<dyn Fn(TrainEvent) + Send + Sync>;
+
+/// What [`Engine::submit`] does when the engine already has a full
+/// backlog of live (queued or running) jobs. The default accepts
+/// everything — PR-4 behaviour. Bounding the backlog turns the engine
+/// from "unbounded queueing" into a service with load shedding: a burst
+/// of submits past the bound is rejected (or held) instead of silently
+/// piling onto the shared queue and starving everyone's latency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AdmissionPolicy {
+    /// Admit every submit (no bound). The default.
+    #[default]
+    Unbounded,
+    /// Reject a submit once `max_backlog` jobs are live, with a typed
+    /// [`SubmitError::BacklogFull`] the caller can downcast and retry on.
+    Reject {
+        /// Live (non-terminal) jobs admitted at once.
+        max_backlog: usize,
+    },
+    /// Hold the submitting *caller* until the backlog drops below
+    /// `max_backlog` — backpressure instead of an error. The job itself
+    /// still starts asynchronously once admitted.
+    ///
+    /// The wait ends only when a live job settles: if the backlog is held
+    /// by jobs that cannot settle on their own — e.g. `start_paused`
+    /// submissions whose only handle is owned by the blocked caller — the
+    /// submit waits forever. Don't mix `Block` admission with paused
+    /// submissions unless another thread resumes them; use `Reject` when
+    /// the caller must stay responsive.
+    Block {
+        /// Live (non-terminal) jobs admitted at once.
+        max_backlog: usize,
+    },
+}
+
+/// Why [`Engine::submit`] refused a job at admission (as opposed to the
+/// config/resume validation errors, which have their own types).
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum SubmitError {
+    /// The engine's [`AdmissionPolicy`] bound is reached: `backlog` jobs
+    /// are already queued or running. Wait for one to settle and retry,
+    /// or raise the bound.
+    #[error(
+        "engine backlog full: {backlog} jobs already queued or running \
+         (admission bound {max_backlog})"
+    )]
+    BacklogFull {
+        /// Live jobs at the moment the submit was refused.
+        backlog: usize,
+        /// The policy's bound.
+        max_backlog: usize,
+    },
+}
 
 /// Lifecycle state of a submitted job, as seen through [`Session::status`]
 /// and [`Engine::jobs`].
@@ -194,7 +274,8 @@ pub enum JobStatus {
     /// The run ended cancelled (checkpoint written if requested and any
     /// block had completed).
     Cancelled,
-    /// The run ended with an error.
+    /// The run ended failed: a block task errored or panicked
+    /// ([`TrainOutcome::Failed`]), or setup failed outright.
     Failed,
 }
 
@@ -256,6 +337,36 @@ pub struct JobSnapshot {
     pub blocks_total: usize,
 }
 
+/// The engine's session registry: weak handles to every submitted job,
+/// plus the condvar admission waits on. Shared (via `Arc`) with each
+/// job's driver thread, which signals `settled` when its run reaches a
+/// terminal status so a [`AdmissionPolicy::Block`]ed submitter can
+/// re-check the backlog.
+struct JobsRegistry {
+    entries: Mutex<Vec<Weak<SessionShared>>>,
+    settled: Condvar,
+}
+
+impl JobsRegistry {
+    /// Count the live (non-terminal) jobs, pruning dead entries.
+    fn live_backlog(entries: &mut Vec<Weak<SessionShared>>) -> usize {
+        entries.retain(|e| e.strong_count() > 0);
+        entries
+            .iter()
+            .filter_map(Weak::upgrade)
+            .filter(|s| !s.status.lock().unwrap().is_terminal())
+            .count()
+    }
+
+    /// Wake admission waiters after a job reached a terminal status. The
+    /// registry mutex is taken (and released) first so a waiter between
+    /// its backlog check and its `wait` cannot miss the notification.
+    fn notify_settled(&self) {
+        drop(self.entries.lock().unwrap());
+        self.settled.notify_all();
+    }
+}
+
 /// A persistent training engine: owns the worker pool, accepts many
 /// concurrent jobs.
 ///
@@ -263,7 +374,8 @@ pub struct JobSnapshot {
 pub struct Engine {
     pool: Arc<WorkerPool>,
     spec: BackendSpec,
-    jobs: Mutex<Vec<Weak<SessionShared>>>,
+    registry: Arc<JobsRegistry>,
+    admission: Mutex<AdmissionPolicy>,
 }
 
 impl Engine {
@@ -273,7 +385,65 @@ impl Engine {
         Engine {
             pool: Arc::new(WorkerPool::new(spec, threads)),
             spec: spec.clone(),
-            jobs: Mutex::new(Vec::new()),
+            registry: Arc::new(JobsRegistry {
+                entries: Mutex::new(Vec::new()),
+                settled: Condvar::new(),
+            }),
+            admission: Mutex::new(AdmissionPolicy::Unbounded),
+        }
+    }
+
+    /// Builder: this engine with the given [`AdmissionPolicy`].
+    pub fn with_admission(self, policy: AdmissionPolicy) -> Engine {
+        *self.admission.lock().unwrap() = policy;
+        self
+    }
+
+    /// Change the admission policy at runtime (applies to future submits;
+    /// already-admitted jobs are unaffected).
+    pub fn set_admission(&self, policy: AdmissionPolicy) {
+        *self.admission.lock().unwrap() = policy;
+        // a loosened bound may unblock held submitters; take (and release)
+        // the registry mutex first so a waiter between its backlog check
+        // and its wait cannot miss this notification
+        self.registry.notify_settled();
+    }
+
+    /// The engine's current admission policy.
+    pub fn admission(&self) -> AdmissionPolicy {
+        *self.admission.lock().unwrap()
+    }
+
+    /// Live (queued or running) jobs right now — what admission compares
+    /// against the policy's bound.
+    pub fn backlog(&self) -> usize {
+        JobsRegistry::live_backlog(&mut self.registry.entries.lock().unwrap())
+    }
+
+    /// Enforce the admission policy; returns holding the registry guard
+    /// so the subsequent registration is atomic with the check (two
+    /// concurrent submits cannot both squeeze past the bound).
+    fn admit(&self) -> Result<std::sync::MutexGuard<'_, Vec<Weak<SessionShared>>>, SubmitError> {
+        let mut entries = self.registry.entries.lock().unwrap();
+        loop {
+            // re-read each iteration: set_admission may change it mid-wait
+            let policy = *self.admission.lock().unwrap();
+            let bound = match policy {
+                AdmissionPolicy::Unbounded => return Ok(entries),
+                AdmissionPolicy::Reject { max_backlog } | AdmissionPolicy::Block { max_backlog } => {
+                    max_backlog
+                }
+            };
+            let backlog = JobsRegistry::live_backlog(&mut entries);
+            if backlog < bound {
+                return Ok(entries);
+            }
+            match policy {
+                AdmissionPolicy::Reject { max_backlog } => {
+                    return Err(SubmitError::BacklogFull { backlog, max_backlog })
+                }
+                _ => entries = self.registry.settled.wait(entries).unwrap(),
+            }
         }
     }
 
@@ -318,14 +488,19 @@ impl Engine {
     }
 
     /// Validate `cfg` against `train` (and load + validate any
-    /// `resume_from` checkpoint), then start the run on a background
-    /// thread against this engine's warm pool. Returns immediately with a
-    /// [`Session`]; any number of submitted sessions run concurrently,
-    /// interleaved by the pool's shared priority queue.
+    /// `resume_from` checkpoint), enforce the engine's
+    /// [`AdmissionPolicy`] (a full backlog yields a typed
+    /// [`SubmitError::BacklogFull`] under `Reject`, or holds the caller
+    /// under `Block`), then start the run on a background thread against
+    /// this engine's warm pool. Returns immediately with a [`Session`];
+    /// any number of admitted sessions run concurrently, interleaved by
+    /// the pool's shared priority queue.
     pub fn submit(&self, cfg: TrainConfig, train: &Coo) -> anyhow::Result<Session> {
         cfg.validate(train.rows, train.cols)?;
         // resume problems surface here, not on the background thread
         let resume = load_resume(&cfg)?;
+        // admission: the returned guard keeps check + registration atomic
+        let mut reg = self.admit()?;
         let job = self.pool.register_job(cfg.priority, cfg.max_in_flight);
         if cfg.start_paused {
             self.pool.set_job_paused(job, true);
@@ -340,13 +515,11 @@ impl Engine {
             }),
             control: Arc::new(RunControl::new()),
         });
-        {
-            let mut reg = self.jobs.lock().unwrap();
-            reg.retain(|e| e.strong_count() > 0);
-            reg.push(Arc::downgrade(&shared));
-        }
+        reg.push(Arc::downgrade(&shared));
+        drop(reg);
         let (tx, rx) = channel::<TrainEvent>();
         let pool = self.pool.clone();
+        let registry = self.registry.clone();
         // the session's single private copy of the data, centred during
         // the one unavoidable clone
         let (centered, global_mean) = center(train);
@@ -371,8 +544,10 @@ impl Engine {
             *shared_bg.status.lock().unwrap() = match &res {
                 Ok(TrainOutcome::Completed(_)) => JobStatus::Completed,
                 Ok(TrainOutcome::Cancelled(_)) => JobStatus::Cancelled,
-                Err(_) => JobStatus::Failed,
+                Ok(TrainOutcome::Failed(_)) | Err(_) => JobStatus::Failed,
             };
+            // the job settled: admission waiters can re-check the backlog
+            registry.notify_settled();
             // `tx` (kept alive until here) closes the event stream only
             // now, so a consumer that drains events always observes a
             // terminal status afterwards
@@ -385,7 +560,7 @@ impl Engine {
     /// Snapshot every submitted job whose [`Session`] handle (or driver
     /// thread) is still alive: id, priority, status, block progress.
     pub fn jobs(&self) -> Vec<JobSnapshot> {
-        let mut reg = self.jobs.lock().unwrap();
+        let mut reg = self.registry.entries.lock().unwrap();
         reg.retain(|e| e.strong_count() > 0);
         reg.iter().filter_map(Weak::upgrade).map(|s| s.snapshot()).collect()
     }
@@ -491,12 +666,14 @@ impl Session {
     }
 
     /// Join the run and return how it ended (undelivered events are
-    /// dropped): [`TrainOutcome::Completed`] with the result, or
-    /// [`TrainOutcome::Cancelled`] with the abort record. Callers that
-    /// treat cancellation as failure can chain
-    /// [`TrainOutcome::into_result`]. Waiting is an explicit request for
-    /// the run to finish, so a paused session is resumed first — joining
-    /// the only handle that could ever resume it must not deadlock.
+    /// dropped): [`TrainOutcome::Completed`] with the result,
+    /// [`TrainOutcome::Cancelled`] with the abort record, or
+    /// [`TrainOutcome::Failed`] when a block task errored or panicked.
+    /// Callers that treat anything short of completion as failure can
+    /// chain [`TrainOutcome::into_result`]. Waiting is an explicit
+    /// request for the run to finish, so a paused session is resumed
+    /// first — joining the only handle that could ever resume it must not
+    /// deadlock.
     pub fn wait(mut self) -> anyhow::Result<TrainOutcome> {
         self.resume();
         let handle = self.handle.take().expect("session joined exactly once");
@@ -896,6 +1073,7 @@ mod tests {
                 }
             }
             TrainOutcome::Completed(_) => {} // cancel lost the race; fine
+            TrainOutcome::Failed(info) => panic!("unexpected failure: {}", info.error),
         }
         std::fs::remove_file(ckpt1).ok();
         std::fs::remove_file(ckpt2).ok();
@@ -970,6 +1148,99 @@ mod tests {
         s2.wait().unwrap().into_result().unwrap();
         // waited-out sessions drop out of the registry
         assert!(engine.jobs().is_empty());
+    }
+
+    #[test]
+    fn reject_admission_bounds_the_backlog_with_typed_error() {
+        let (train, _, k) = dataset();
+        let engine = Engine::new(&BackendSpec::Native, 2)
+            .with_admission(AdmissionPolicy::Reject { max_backlog: 2 });
+        assert_eq!(engine.backlog(), 0);
+        // paused jobs stay live forever, making the test deterministic
+        let s1 = engine.submit(quick_cfg(k).with_start_paused(true), &train).unwrap();
+        let s2 = engine.submit(quick_cfg(k).with_start_paused(true), &train).unwrap();
+        assert_eq!(engine.backlog(), 2);
+        let err = engine.submit(quick_cfg(k), &train).unwrap_err();
+        match err.downcast_ref::<SubmitError>() {
+            Some(SubmitError::BacklogFull { backlog, max_backlog }) => {
+                assert_eq!((*backlog, *max_backlog), (2, 2));
+            }
+            other => panic!("expected BacklogFull, got {other:?} ({err:#})"),
+        }
+        // a rejected submit must leave no pool/registry residue behind
+        assert_eq!(engine.jobs().len(), 2);
+
+        // once a job settles, the next submit is admitted again
+        s1.resume();
+        s1.wait().unwrap().into_result().unwrap();
+        let s3 = engine.submit(quick_cfg(k), &train).unwrap();
+        s3.wait().unwrap().into_result().unwrap();
+        s2.resume();
+        s2.wait().unwrap().into_result().unwrap();
+    }
+
+    #[test]
+    fn block_admission_applies_backpressure_until_a_job_settles() {
+        let (train, _, k) = dataset();
+        let engine = Arc::new(
+            Engine::new(&BackendSpec::Native, 2)
+                .with_admission(AdmissionPolicy::Block { max_backlog: 1 }),
+        );
+        let first = engine.submit(quick_cfg(k), &train).unwrap();
+        // the second submit must block until the first run settles — run
+        // it on a helper thread and watch the ordering
+        let submitted = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let (engine2, train2, flag) = (engine.clone(), train.clone(), submitted.clone());
+        let helper = std::thread::spawn(move || {
+            let s = engine2.submit(quick_cfg(k).with_seed(91), &train2).unwrap();
+            flag.store(true, std::sync::atomic::Ordering::SeqCst);
+            s.wait().unwrap().into_result().unwrap()
+        });
+        // while the first job is live the helper stays held
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        if !first.status().is_terminal() {
+            assert!(
+                !submitted.load(std::sync::atomic::Ordering::SeqCst),
+                "Block admission let a second job in past the bound"
+            );
+        }
+        first.wait().unwrap().into_result().unwrap();
+        let r = helper.join().unwrap();
+        assert_eq!(r.stats.blocks, 4);
+        assert!(submitted.load(std::sync::atomic::Ordering::SeqCst));
+    }
+
+    #[test]
+    fn queue_wait_measures_real_dispatch_delay() {
+        // deterministic probe of the fairness metric: a paused submission
+        // cannot dispatch its first task until resumed, so its recorded
+        // queue wait must cover the pause — and an uncontended run on the
+        // same engine must wait strictly less. A stamping regression
+        // (wait always 0) or a gate that stops holding paused jobs both
+        // fail this.
+        let (train, _, k) = dataset();
+        let engine = Engine::new(&BackendSpec::Native, 2);
+        let held = engine
+            .submit(quick_cfg(k).with_start_paused(true).with_seed(93), &train)
+            .unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        held.resume();
+        let r_held = held.wait().unwrap().into_result().unwrap();
+        // generous slack below the 200ms pause for slow thread spawn
+        assert!(
+            r_held.stats.queue_wait_secs >= 0.05,
+            "paused job reported queue wait {}s",
+            r_held.stats.queue_wait_secs
+        );
+        assert!(r_held.stats.queue_wait_secs < 60.0);
+
+        let r_free = engine.train(&quick_cfg(k).with_seed(94), &train).unwrap();
+        assert!(
+            r_free.stats.queue_wait_secs < r_held.stats.queue_wait_secs,
+            "uncontended wait {}s not below held wait {}s",
+            r_free.stats.queue_wait_secs,
+            r_held.stats.queue_wait_secs
+        );
     }
 
     #[test]

@@ -35,6 +35,13 @@
 //! [`PosteriorModel`] (what `checkpoint` persists). A cancelled session
 //! writes a partial (v3) checkpoint of its completed block posteriors;
 //! `TrainConfig::resume_from` continues from it bitwise-identically.
+//!
+//! The engine is production-interruptible: periodic checkpoint
+//! generations (`TrainConfig::{checkpoint_every, checkpoint_dir}`)
+//! survive hard crashes, a panicking block fails only its own session
+//! ([`TrainOutcome::Failed`]), and an [`AdmissionPolicy`] bounds the
+//! backlog ([`SubmitError::BacklogFull`]) with per-job queue-wait
+//! fairness reported in `RunStats::queue_wait_secs`.
 
 pub mod aggregate;
 pub mod backend;
@@ -49,11 +56,11 @@ pub mod worker;
 
 pub use config::{BackendSpec, ConfigError, SchedulerMode, SweepMode, TrainConfig};
 pub use engine::{
-    Engine, Factorizer, FactorSide, FitOutcome, JobSnapshot, JobStatus, PpFactorizer, PpPhase,
-    Session, TrainEvent,
+    AdmissionPolicy, Engine, Factorizer, FactorSide, FitOutcome, JobSnapshot, JobStatus,
+    PpFactorizer, PpPhase, Session, SubmitError, TrainEvent,
 };
 pub use mailbox::{FactorMailbox, MailboxCounters};
 pub use scheduler::{JobId, Priority};
-pub use trainer::{CancelInfo, TrainOutcome, TrainResult};
+pub use trainer::{CancelInfo, FailInfo, TrainOutcome, TrainResult};
 
 pub use crate::posterior::PosteriorModel;

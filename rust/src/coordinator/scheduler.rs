@@ -375,8 +375,13 @@ type DagTask<T> = Box<dyn FnOnce(&BlockBackend, &[Arc<T>]) -> anyhow::Result<T> 
 
 /// What a worker reports back for one dispatched node.
 enum TaskDone<T> {
-    /// The task ran (successfully or not).
-    Ran(anyhow::Result<T>),
+    /// The task ran to completion.
+    Ran(T),
+    /// The task errored — or *panicked*: the unwind is caught at the task
+    /// boundary (see [`PanicGuard`]) and converted into this variant, so
+    /// a crashing block fails **its job only** instead of poisoning the
+    /// shared pool or wedging the other tenants' runs.
+    Failed(anyhow::Error),
     /// The task was popped after its job's cancel flag was set and never
     /// executed.
     Skipped,
@@ -422,12 +427,19 @@ pub struct DagRunOpts {
 }
 
 /// Result of [`DagScheduler::run_with`]: per-node outputs (a node that
-/// never ran — cancelled before dispatch or skipped — is `None`).
+/// never ran — cancelled before dispatch, skipped, or failed — is `None`).
 pub struct DagOutcome<T> {
     /// One slot per node, in insertion order.
     pub nodes: Vec<Option<DagNodeResult<T>>>,
     /// True when the run stopped early because the cancel flag was set.
     pub cancelled: bool,
+    /// First task failure (error or caught panic), if any. A failure
+    /// stops further dispatch and drains in-flight siblings — whose
+    /// completed outputs still appear in `nodes`, so the caller can
+    /// checkpoint everything that finished before (and while) the run
+    /// went down. When `cancelled` is also set the cancel takes
+    /// precedence as the outcome; the failure is still reported here.
+    pub failed: Option<anyhow::Error>,
 }
 
 /// Dependency-driven (barrier-free) scheduler over a [`WorkerPool`].
@@ -478,7 +490,10 @@ impl<T: Send + Sync + 'static> DagScheduler<T> {
     /// drain and the first error is returned with the node attributed.
     pub fn run(self, pool: &WorkerPool) -> anyhow::Result<Vec<DagNodeResult<T>>> {
         let out = self.run_with(pool, &DagRunOpts::default())?;
-        // without a cancel flag the run can only end complete or Err
+        if let Some(e) = out.failed {
+            return Err(e);
+        }
+        // without a cancel flag the run can only end complete or failed
         debug_assert!(!out.cancelled);
         Ok(out
             .nodes
@@ -518,7 +533,7 @@ impl<T: Send + Sync + 'static> DagScheduler<T> {
                 .map_or(false, |c| c.load(Ordering::Relaxed))
         };
         if n == 0 {
-            return Ok(DagOutcome { nodes: Vec::new(), cancelled: cancelled() });
+            return Ok(DagOutcome { nodes: Vec::new(), cancelled: cancelled(), failed: None });
         }
         let mut deps: Vec<Vec<NodeId>> = Vec::with_capacity(n);
         let mut tasks: Vec<Option<DagTask<T>>> = Vec::with_capacity(n);
@@ -562,20 +577,20 @@ impl<T: Send + Sync + 'static> DagScheduler<T> {
                 aborted = true;
             }
             if in_flight == 0 {
-                if aborted {
+                if aborted || first_err.is_some() {
+                    // cancelled or failed: stop here — the nodes that did
+                    // complete (before and during the drain) are in
+                    // `results` for checkpoint-on-abort
                     break;
                 }
-                // a failed parent kept the rest of the DAG from running
-                return Err(first_err.unwrap_or_else(|| {
-                    anyhow::anyhow!("dag stalled with {completed}/{n} nodes completed")
-                }));
+                anyhow::bail!("dag stalled with {completed}/{n} nodes completed");
             }
             let (id, out, started, finished) =
                 rrx.recv().map_err(|_| anyhow::anyhow!("worker pool hung up"))?;
             in_flight -= 1;
             completed += 1;
             match out {
-                TaskDone::Ran(Ok(value)) => {
+                TaskDone::Ran(value) => {
                     let value = Arc::new(value);
                     outputs[id] = Some(value.clone());
                     results[id] = Some(DagNodeResult {
@@ -599,7 +614,9 @@ impl<T: Send + Sync + 'static> DagScheduler<T> {
                         }
                     }
                 }
-                TaskDone::Ran(Err(e)) => {
+                // an error or a caught panic: fail this job only — no new
+                // dispatch, in-flight siblings drain into `results`
+                TaskDone::Failed(e) => {
                     if first_err.is_none() {
                         first_err = Some(e.context(format!("dag node {id} failed")));
                     }
@@ -608,18 +625,12 @@ impl<T: Send + Sync + 'static> DagScheduler<T> {
                 TaskDone::Skipped => aborted = true,
             }
         }
-        match first_err {
-            Some(e) if !aborted => Err(e),
-            // cancellation was requested: the completed nodes still
-            // matter (checkpoint-on-abort), so a task error racing the
-            // drain must not discard them — surface it as a log, not a
-            // failure of the cancel
-            Some(e) => {
-                log::warn!("dag task failed during cancel drain: {e:#}");
-                Ok(DagOutcome { nodes: results, cancelled: true })
-            }
-            None => Ok(DagOutcome { nodes: results, cancelled: aborted }),
+        if let (Some(e), true) = (&first_err, aborted) {
+            // a task error racing a cancel drain: the cancel is the
+            // outcome, but the failure stays visible to the caller
+            log::warn!("dag task failed during cancel drain: {e:#}");
         }
+        Ok(DagOutcome { nodes: results, cancelled: aborted, failed: first_err })
     }
 }
 
@@ -629,10 +640,13 @@ impl<T: Send + Sync + 'static> Default for DagScheduler<T> {
     }
 }
 
-/// Reports a node as failed if its task unwinds: `DagScheduler` holds its
-/// own `Sender` for later dispatches, so unlike `run_phase` it cannot rely
-/// on channel disconnection to notice a dead worker — without this guard a
-/// panicking task would leave the scheduler waiting forever.
+/// Reports a node as [`TaskDone::Failed`] if its task unwinds: the
+/// catch-at-the-task-boundary half of per-job failure isolation.
+/// `DagScheduler` holds its own `Sender` for later dispatches, so unlike
+/// `run_phase` it cannot rely on channel disconnection to notice a dead
+/// worker — without this guard a panicking task would leave the scheduler
+/// waiting forever (and the panic would surface only as a pool log line,
+/// invisible to the job that owned the task).
 struct PanicGuard<T> {
     rtx: Option<Sender<Done<T>>>,
     id: NodeId,
@@ -644,12 +658,22 @@ impl<T> Drop for PanicGuard<T> {
         if let Some(rtx) = self.rtx.take() {
             let _ = rtx.send((
                 self.id,
-                TaskDone::Ran(Err(anyhow::anyhow!("dag task panicked"))),
+                TaskDone::Failed(anyhow::anyhow!("dag task panicked")),
                 self.started,
                 Instant::now(),
             ));
         }
     }
+}
+
+/// Best-effort extraction of a panic payload's message (the two shapes
+/// `panic!` actually produces).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload
+        .downcast_ref::<&'static str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("non-string panic payload")
 }
 
 fn dispatch<T: Send + Sync + 'static>(
@@ -671,9 +695,23 @@ fn dispatch<T: Send + Sync + 'static>(
             return;
         }
         let mut guard = PanicGuard { rtx: Some(rtx), id, started };
-        let out = backend.and_then(|b| task(b, &parents));
+        // catch the unwind HERE, at the task boundary, so the panic
+        // message travels to the owning job's FailInfo instead of dying
+        // as a pool log line (the guard still covers anything that slips
+        // through this catch)
+        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            backend.and_then(|b| task(b, &parents))
+        }));
         let rtx = guard.rtx.take().expect("guard armed");
-        let _ = rtx.send((id, TaskDone::Ran(out), started, Instant::now()));
+        let done = match out {
+            Ok(Ok(value)) => TaskDone::Ran(value),
+            Ok(Err(e)) => TaskDone::Failed(e),
+            Err(payload) => TaskDone::Failed(anyhow::anyhow!(
+                "dag task panicked: {}",
+                panic_message(payload.as_ref())
+            )),
+        };
+        let _ = rtx.send((id, done, started, Instant::now()));
     });
     pool.submit_for(job, run);
 }
@@ -956,6 +994,42 @@ mod tests {
         });
         let err = dag.run(&pool).unwrap_err();
         assert!(format!("{err:#}").contains("panicked"), "{err:#}");
+    }
+
+    #[test]
+    fn dag_failure_keeps_completed_siblings_and_drains_in_flight() {
+        // b panics while the straggler sibling c is still running: the
+        // outcome must carry the failure AND both a's and c's outputs —
+        // that is what checkpoint-on-abort persists after a crash
+        let pool = WorkerPool::new(&BackendSpec::Native, 3);
+        let mut dag: DagScheduler<u32> = DagScheduler::new();
+        let a = dag.add(&[], |_b: &BlockBackend, _p: &[Arc<u32>]| Ok(1));
+        let b = dag.add(&[a], |_b: &BlockBackend, _p: &[Arc<u32>]| -> anyhow::Result<u32> {
+            panic!("injected crash")
+        });
+        let c = dag.add(&[a], |_b: &BlockBackend, p: &[Arc<u32>]| {
+            std::thread::sleep(std::time::Duration::from_millis(60));
+            Ok(*p[0] + 10)
+        });
+        let d = dag.add(&[b], |_b: &BlockBackend, p: &[Arc<u32>]| Ok(*p[0]));
+        let out = dag.run_with(&pool, &DagRunOpts::default()).unwrap();
+        assert!(!out.cancelled);
+        let err = out.failed.expect("panic must surface as a failure");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("panicked") && msg.contains("dag node 1"), "{msg}");
+        assert_eq!(out.nodes[a].as_ref().map(|r| *r.output), Some(1));
+        assert_eq!(
+            out.nodes[c].as_ref().map(|r| *r.output),
+            Some(11),
+            "in-flight sibling must drain to completion, not be discarded"
+        );
+        assert!(out.nodes[d].is_none(), "descendant of the failed node never runs");
+
+        // the pool is not poisoned: it keeps serving fresh work
+        let tasks: Vec<_> = (0..6)
+            .map(|i| move |_b: &BlockBackend| -> anyhow::Result<usize> { Ok(i) })
+            .collect();
+        assert_eq!(pool.run_phase(tasks).unwrap(), (0..6).collect::<Vec<_>>());
     }
 
     #[test]

@@ -25,6 +25,19 @@
 //! aggregation consumes inputs in canonical order, the resumed posterior
 //! is bitwise-identical to an uninterrupted run over the same
 //! completed-block set.
+//!
+//! **Crash tolerance.** `TrainConfig::{checkpoint_every, checkpoint_dir}`
+//! arm *periodic* checkpointing: after every N newly completed blocks the
+//! run persists all completed block posteriors as an atomically-renamed,
+//! monotonically numbered generation file
+//! ([`checkpoint::generation_path`]), pruned to the newest
+//! `checkpoint_keep` generations — so a hard crash (`SIGKILL`, node loss)
+//! costs at most the blocks finished since the last generation, and
+//! `resume_from` pointed at the *directory* restores the newest valid
+//! generation. A block task that errors or panics fails **its job only**:
+//! dispatch stops, in-flight siblings drain, a final abort checkpoint is
+//! written, and the run yields [`TrainOutcome::Failed`] with a typed
+//! [`FailInfo`] — the shared pool and every other tenant keep running.
 
 use super::aggregate::aggregate_part;
 use super::backend::{BlockBackend, BlockData};
@@ -89,6 +102,14 @@ pub struct RunStats {
     /// [`SweepMode::Pipelined`](super::config::SweepMode::Pipelined) —
     /// lockstep sweeps serialize exchange after compute by definition.
     pub comm_overlap_secs: f64,
+    /// Seconds between the admitted run starting to schedule (config
+    /// validated, data prepared, DAG about to dispatch) and its first
+    /// task executing on a pool worker — the fairness signal for
+    /// multi-tenant scheduling: compare it across
+    /// [`Priority`](super::Priority) levels to see who actually waited
+    /// behind whom. Setup cost (resume-checkpoint loading, data centring)
+    /// is deliberately excluded — this measures waiting, not preparing.
+    pub queue_wait_secs: f64,
 }
 
 impl RunStats {
@@ -142,52 +163,93 @@ pub struct CancelInfo {
     /// the cancellation took effect.
     pub blocks_completed: usize,
     /// Where the partial (v3) checkpoint of those posteriors was written —
-    /// `Some` only when `TrainConfig::checkpoint_on_cancel` was set *and*
-    /// at least one block had completed.
+    /// the newest generation in `TrainConfig::checkpoint_dir` when
+    /// periodic checkpointing is armed, else the
+    /// `TrainConfig::checkpoint_on_cancel` file. `None` when neither is
+    /// armed or no block had completed.
     pub checkpoint: Option<PathBuf>,
 }
 
-/// How a submitted run ended: trained to completion, or cancelled (with a
-/// resumable partial checkpoint when one was requested and any block had
-/// finished).
+/// What happened to a failed run: a block task errored or panicked, the
+/// job stopped dispatching, drained its in-flight siblings, and (when any
+/// checkpoint destination was armed) persisted everything that completed.
+#[derive(Debug, Clone)]
+pub struct FailInfo {
+    /// The first task failure, rendered (panics read "dag node N failed:
+    /// dag task panicked").
+    pub error: String,
+    /// Blocks whose posteriors were completed (sampled or restored) when
+    /// the failure took the run down — including in-flight siblings that
+    /// drained *after* the failing task died.
+    pub blocks_completed: usize,
+    /// Where the final abort checkpoint of those posteriors was written:
+    /// the newest generation in `TrainConfig::checkpoint_dir`, or the
+    /// `TrainConfig::checkpoint_on_cancel` file, whichever is armed
+    /// (directory wins when both are). `None` when neither is armed or no
+    /// block had completed.
+    pub checkpoint: Option<PathBuf>,
+}
+
+/// How a submitted run ended: trained to completion, cancelled, or failed
+/// (with a resumable partial checkpoint when one was requested and any
+/// block had finished).
 #[derive(Debug)]
 pub enum TrainOutcome {
     /// The run trained to completion.
     Completed(Box<TrainResult>),
     /// The run was cancelled before completing.
     Cancelled(CancelInfo),
+    /// A block task errored or panicked; the job failed without touching
+    /// its neighbours on the shared pool.
+    Failed(FailInfo),
 }
 
 impl TrainOutcome {
-    /// The completed result, or an error describing the cancellation —
-    /// for callers that treat "cancelled" as failure.
+    /// The completed result, or an error describing the cancellation or
+    /// failure — for callers that treat anything short of completion as
+    /// failure.
     pub fn into_result(self) -> anyhow::Result<TrainResult> {
+        let ckpt_hint = |p: &Option<PathBuf>| match p {
+            Some(p) => format!(" (partial checkpoint: {})", p.display()),
+            None => String::new(),
+        };
         match self {
             TrainOutcome::Completed(r) => Ok(*r),
             TrainOutcome::Cancelled(info) => Err(anyhow::anyhow!(
                 "training cancelled after {} completed blocks{}",
                 info.blocks_completed,
-                match &info.checkpoint {
-                    Some(p) => format!(" (partial checkpoint: {})", p.display()),
-                    None => String::new(),
-                }
+                ckpt_hint(&info.checkpoint)
+            )),
+            TrainOutcome::Failed(info) => Err(anyhow::anyhow!(
+                "training failed after {} completed blocks: {}{}",
+                info.blocks_completed,
+                info.error,
+                ckpt_hint(&info.checkpoint)
             )),
         }
     }
 
-    /// The completed result, if the run was not cancelled.
+    /// The completed result, if the run trained to completion.
     pub fn completed(&self) -> Option<&TrainResult> {
         match self {
             TrainOutcome::Completed(r) => Some(r.as_ref()),
-            TrainOutcome::Cancelled(_) => None,
+            _ => None,
         }
     }
 
     /// The cancellation record, if the run was cancelled.
     pub fn cancelled(&self) -> Option<&CancelInfo> {
         match self {
-            TrainOutcome::Completed(_) => None,
             TrainOutcome::Cancelled(info) => Some(info),
+            _ => None,
+        }
+    }
+
+    /// The failure record, if a block task took the run down.
+    pub fn failed(&self) -> Option<&FailInfo> {
+        match self {
+            TrainOutcome::Failed(info) => Some(info),
+            _ => None,
         }
     }
 }
@@ -224,44 +286,264 @@ pub(crate) struct JobCtx {
     pub resume: Option<PartialCheckpoint>,
 }
 
-/// Persist `blocks` as a v3 abort checkpoint (when armed and non-empty),
-/// emit the cancel events, and build the cancellation outcome — the one
-/// tail every cancel path (before or after the DAG started) goes through.
-fn finish_cancelled(
+/// The periodic-checkpoint writer one run shares across its block tasks:
+/// every completed block posterior is recorded here (restored blocks are
+/// seeded at construction), and each `every` newly completed blocks the
+/// full completed set is persisted as the next generation file — written
+/// atomically and pruned to the newest `keep` generations. Write errors
+/// are logged and never fail the run: a checkpoint hiccup must not take
+/// down the training it exists to protect.
+///
+/// Generation writes happen on the worker thread that completed the
+/// triggering block, while holding the sink mutex — deliberately: the
+/// lock is what keeps generation numbering and contents strictly
+/// monotonic without a writer thread. The cost scales with
+/// `1/checkpoint_every`; tiny intervals (every=1) trade worker time for
+/// recovery granularity and are priced accordingly.
+struct CheckpointSink {
+    every: usize,
+    dir: PathBuf,
+    keep: usize,
+    k: usize,
+    seed: u64,
+    grid: (usize, usize),
+    global_mean: f64,
+    state: std::sync::Mutex<SinkState>,
+}
+
+struct SinkState {
+    /// Every completed block posterior so far, in completion order
+    /// (resume-inherited blocks first) — what each generation persists.
+    blocks: Vec<PartialBlock>,
+    /// Newly completed blocks since the last generation write.
+    since_last: usize,
+    /// Number the next generation file is written under.
+    next_generation: u64,
+    /// Newest generation successfully written by *this* run.
+    last_written: Option<PathBuf>,
+}
+
+impl CheckpointSink {
+    /// Build the sink when `cfg` arms periodic checkpointing (`Ok(None)`
+    /// otherwise). Creates the directory, continues generation numbering
+    /// past both the files already present and the generation the run is
+    /// resuming from, and seeds the completed set with the resumed blocks
+    /// so on-disk progress never shrinks across crash/resume cycles.
+    fn from_config(
+        cfg: &TrainConfig,
+        global_mean: f64,
+        resume: Option<&PartialCheckpoint>,
+    ) -> anyhow::Result<Option<Arc<CheckpointSink>>> {
+        if cfg.checkpoint_every == 0 {
+            return Ok(None);
+        }
+        // validate() enforces the pairing; double-checked for direct callers
+        let Some(dir) = &cfg.checkpoint_dir else { return Ok(None) };
+        std::fs::create_dir_all(dir).map_err(|e| {
+            anyhow::anyhow!("cannot create checkpoint dir {}: {e}", dir.display())
+        })?;
+        let existing = checkpoint::list_generations(dir).map_err(|e| {
+            anyhow::anyhow!("cannot list checkpoint dir {}: {e}", dir.display())
+        })?;
+        let mut next_generation = existing.last().map_or(0, |(g, _)| *g) + 1;
+        let mut blocks = Vec::new();
+        if let Some(r) = resume {
+            next_generation = next_generation.max(r.generation + 1);
+            blocks = r.blocks.clone();
+        }
+        Ok(Some(Arc::new(CheckpointSink {
+            every: cfg.checkpoint_every,
+            dir: dir.clone(),
+            keep: cfg.checkpoint_keep,
+            k: cfg.k,
+            seed: cfg.seed,
+            grid: cfg.grid,
+            global_mean,
+            state: std::sync::Mutex::new(SinkState {
+                blocks,
+                since_last: 0,
+                next_generation,
+                last_written: None,
+            }),
+        })))
+    }
+
+    /// Record one newly completed block; writes a generation when the
+    /// interval is reached. Called from worker threads.
+    fn record(&self, i: usize, j: usize, post: &BlockPosteriors, em: &Emitter) {
+        let mut st = self.state.lock().unwrap();
+        st.blocks.push(PartialBlock { i, j, post: post.clone() });
+        st.since_last += 1;
+        if st.since_last >= self.every {
+            self.write_generation(&mut st, em);
+        }
+    }
+
+    fn write_generation(&self, st: &mut SinkState, em: &Emitter) {
+        let path = checkpoint::generation_path(&self.dir, st.next_generation);
+        let ckpt = PartialCheckpoint {
+            k: self.k,
+            seed: self.seed,
+            grid: self.grid,
+            global_mean: self.global_mean,
+            generation: st.next_generation,
+            blocks: st.blocks.clone(),
+        };
+        match checkpoint::save_partial(&ckpt, &path) {
+            Ok(()) => {
+                em.checkpoint_saved(&path, ckpt.blocks.len());
+                st.next_generation += 1;
+                st.since_last = 0;
+                st.last_written = Some(path);
+                if let Err(e) = checkpoint::prune_generations(&self.dir, self.keep) {
+                    log::warn!("checkpoint retention in {} failed: {e}", self.dir.display());
+                }
+            }
+            Err(e) => {
+                log::warn!("periodic checkpoint write to {} failed: {e}", path.display())
+            }
+        }
+    }
+
+    /// Final flush on cancel or failure: persist any blocks newer than the
+    /// last generation, then return the newest generation this run wrote
+    /// (if any) — the path an abort outcome points its resume hint at. A
+    /// run that holds blocks but never wrote (e.g. resumed, then aborted
+    /// before any new block completed) writes one now, so an abort with
+    /// completed blocks always has a generation to point at.
+    fn flush_final(&self, em: &Emitter) -> Option<PathBuf> {
+        let mut st = self.state.lock().unwrap();
+        if !st.blocks.is_empty() && (st.since_last > 0 || st.last_written.is_none()) {
+            self.write_generation(&mut st, em);
+        }
+        st.last_written.clone()
+    }
+}
+
+/// Persist `blocks` to every armed abort destination — the periodic
+/// checkpoint directory (as a final generation) and/or the one-shot
+/// `checkpoint_on_cancel` file — and return the path a resume should be
+/// pointed at (the directory generation wins when both are armed). The
+/// shared tail of both the cancel and the failure exits.
+fn persist_abort(
     cfg: &TrainConfig,
     global_mean: f64,
-    blocks: Vec<PartialBlock>,
+    blocks: &[PartialBlock],
     em: &Emitter,
-) -> anyhow::Result<TrainOutcome> {
-    let blocks_completed = blocks.len();
-    let mut saved = None;
-    if blocks_completed > 0 {
+    sink: Option<&CheckpointSink>,
+) -> anyhow::Result<Option<PathBuf>> {
+    // the sink first: its writes never error out of this function, so a
+    // broken checkpoint_on_cancel path can't cost the directory its final
+    // generation
+    let gen_saved = sink.and_then(|s| s.flush_final(em));
+    if !blocks.is_empty() {
         if let Some(path) = &cfg.checkpoint_on_cancel {
             let ckpt = PartialCheckpoint {
                 k: cfg.k,
                 seed: cfg.seed,
                 grid: cfg.grid,
                 global_mean,
-                blocks,
+                generation: 0,
+                blocks: blocks.to_vec(),
             };
-            checkpoint::save_partial(&ckpt, path).map_err(|e| {
-                anyhow::anyhow!("cancel checkpoint write to {} failed: {e}", path.display())
-            })?;
-            em.checkpoint_saved(path, blocks_completed);
-            saved = Some(path.clone());
+            match checkpoint::save_partial(&ckpt, path) {
+                Ok(()) => {
+                    em.checkpoint_saved(path, blocks.len());
+                    if gen_saved.is_none() {
+                        return Ok(Some(path.clone()));
+                    }
+                }
+                // with a generation on disk the abort state IS persisted;
+                // only a run with no other checkpoint treats this as fatal
+                Err(e) if gen_saved.is_some() => {
+                    log::warn!(
+                        "abort checkpoint write to {} failed (resume from the \
+                         checkpoint dir instead): {e}",
+                        path.display()
+                    );
+                }
+                Err(e) => {
+                    return Err(anyhow::anyhow!(
+                        "abort checkpoint write to {} failed: {e}",
+                        path.display()
+                    ))
+                }
+            }
         }
     }
+    Ok(gen_saved)
+}
+
+/// Emit the cancel events and build the cancellation outcome — the one
+/// tail every cancel path (before or after the DAG started) goes through.
+fn finish_cancelled(
+    cfg: &TrainConfig,
+    global_mean: f64,
+    blocks: Vec<PartialBlock>,
+    em: &Emitter,
+    sink: Option<&CheckpointSink>,
+) -> anyhow::Result<TrainOutcome> {
+    let blocks_completed = blocks.len();
+    let saved = persist_abort(cfg, global_mean, &blocks, em, sink)?;
     em.cancelled(blocks_completed);
     Ok(TrainOutcome::Cancelled(CancelInfo { blocks_completed, checkpoint: saved }))
 }
 
+/// A block task errored or panicked: persist everything that completed,
+/// emit the failure event, and build the typed failure outcome. Unlike the
+/// cancel path an abort-write error cannot replace the primary error — it
+/// is logged and the failure is still reported.
+fn finish_failed(
+    cfg: &TrainConfig,
+    global_mean: f64,
+    blocks: Vec<PartialBlock>,
+    em: &Emitter,
+    sink: Option<&CheckpointSink>,
+    error: &anyhow::Error,
+) -> anyhow::Result<TrainOutcome> {
+    let blocks_completed = blocks.len();
+    let saved = match persist_abort(cfg, global_mean, &blocks, em, sink) {
+        Ok(p) => p,
+        Err(e) => {
+            log::warn!("abort checkpoint after failure could not be written: {e:#}");
+            None
+        }
+    };
+    let error = format!("{error:#}");
+    em.failed(&error, blocks_completed);
+    Ok(TrainOutcome::Failed(FailInfo { error, blocks_completed, checkpoint: saved }))
+}
+
 /// Load + validate `cfg.resume_from` against the config it will resume
 /// under. A mismatched latent dim, grid, or seed would silently change the
-/// math, so each is rejected with the pair of values named.
+/// math, so each is rejected with the pair of values named. The path may
+/// be a single v3 file or a periodic-checkpoint *directory* — for a
+/// directory the newest generation that validates is restored (a
+/// truncated newest file is skipped, never loaded).
 pub(crate) fn load_resume(cfg: &TrainConfig) -> anyhow::Result<Option<PartialCheckpoint>> {
     let Some(path) = &cfg.resume_from else { return Ok(None) };
-    let ckpt = checkpoint::load_partial(path)
-        .map_err(|e| anyhow::anyhow!("cannot resume from {}: {e}", path.display()))?;
+    let ckpt = if path.is_dir() {
+        let found = checkpoint::latest_valid_partial(path)
+            .map_err(|e| anyhow::anyhow!("cannot resume from {}: {e}", path.display()))?;
+        let Some((ckpt, file)) = found else {
+            anyhow::bail!(
+                "cannot resume from {}: directory holds no checkpoint generation \
+                 ({}*.json)",
+                path.display(),
+                checkpoint::GENERATION_PREFIX
+            );
+        };
+        log::info!(
+            "resuming from generation {} ({} blocks): {}",
+            ckpt.generation,
+            ckpt.blocks.len(),
+            file.display()
+        );
+        ckpt
+    } else {
+        checkpoint::load_partial(path)
+            .map_err(|e| anyhow::anyhow!("cannot resume from {}: {e}", path.display()))?
+    };
     anyhow::ensure!(
         ckpt.k == cfg.k,
         "resume checkpoint has k={} but the config trains k={}",
@@ -341,6 +623,12 @@ impl Emitter {
     fn cancelled(&self, blocks_completed: usize) {
         if let Some(sink) = &self.sink {
             sink(TrainEvent::Cancelled { blocks_completed });
+        }
+    }
+
+    fn failed(&self, error: &str, blocks_completed: usize) {
+        if let Some(sink) = &self.sink {
+            sink(TrainEvent::Failed { error: error.to_string(), blocks_completed });
         }
     }
 
@@ -492,16 +780,7 @@ pub(crate) fn run_pp_centered(
 
     let (gi, gj) = cfg.grid;
     ctx.control.blocks_total.store(gi * gj, Ordering::Relaxed);
-    // blocks restored from a resume checkpoint, keyed by grid coordinate
-    let mut restored: HashMap<(usize, usize), BlockPosteriors> = HashMap::new();
-    // the restored posteriors get moved into DAG closures below; when a
-    // cancel checkpoint is armed, keep the originals (in checkpoint
-    // order) so an abort can re-persist blocks whose restore node never
-    // dispatched — checkpointed progress must never shrink across
-    // cancel/resume cycles. Without checkpoint_on_cancel the backup can
-    // never be read, so skip the copy.
-    let mut resume_backup: Vec<PartialBlock> = Vec::new();
-    if let Some(ckpt) = ctx.resume {
+    if let Some(ckpt) = &ctx.resume {
         // the engine validated k/grid/seed; the centring mean is the
         // data fingerprint and is only known here
         anyhow::ensure!(
@@ -510,7 +789,21 @@ pub(crate) fn run_pp_centered(
              (global mean {} vs {global_mean})",
             ckpt.global_mean
         );
-        if cfg.checkpoint_on_cancel.is_some() {
+    }
+    // the periodic writer, when armed — seeded with the resumed blocks so
+    // generations never shrink across crash/resume cycles
+    let ckpt_sink = CheckpointSink::from_config(cfg, global_mean, ctx.resume.as_ref())?;
+    // blocks restored from a resume checkpoint, keyed by grid coordinate
+    let mut restored: HashMap<(usize, usize), BlockPosteriors> = HashMap::new();
+    // the restored posteriors get moved into DAG closures below; when any
+    // abort checkpoint destination is armed, keep the originals (in
+    // checkpoint order) so an abort can re-persist blocks whose restore
+    // node never dispatched — checkpointed progress must never shrink
+    // across cancel/resume cycles. With no destination the backup can
+    // never be read, so skip the copy.
+    let mut resume_backup: Vec<PartialBlock> = Vec::new();
+    if let Some(ckpt) = ctx.resume {
+        if cfg.checkpoint_on_cancel.is_some() || ckpt_sink.is_some() {
             resume_backup = ckpt.blocks.clone();
         }
         restored = ckpt.blocks.into_iter().map(|b| ((b.i, b.j), b.post)).collect();
@@ -519,7 +812,7 @@ pub(crate) fn run_pp_centered(
     // resumed run must still carry its inherited blocks forward into the
     // abort checkpoint rather than dropping them
     if ctx.control.cancel.load(Ordering::Relaxed) {
-        return finish_cancelled(cfg, global_mean, resume_backup, &em);
+        return finish_cancelled(cfg, global_mean, resume_backup, &em, ckpt_sink.as_deref());
     }
     let mut restored_ids: HashSet<NodeId> = HashSet::new();
     // grid coordinate of every block node, for checkpoint-on-abort
@@ -537,16 +830,24 @@ pub(crate) fn run_pp_centered(
         BlockData::new(std::mem::replace(&mut blocks[i][j], Coo::new(0, 0)))
     };
 
+    // fault injection (testing hook): consulted by canonical block index
+    // right before each sampled block; `None` in production
+    let fault = cfg.fault;
+
     // ---- Phase (a): block (0,0), fresh priors both sides ----
     let a_data = take(0, 0);
     let cfg_a = task_cfg(cfg, cfg.samples, block_seed(cfg, 0, 0));
     let em_a = em.clone();
     let pre_a = restored.remove(&(0, 0));
     let a_restored = pre_a.is_some();
+    let sink_a = ckpt_sink.clone();
     let a_id = dag.add(&[], move |b: &BlockBackend, _p: &[Arc<PpTaskOutput>]| {
         if let Some(post) = pre_a {
             em_a.block_restored((0, 0));
             return Ok(PpTaskOutput::Block(post, BlockRunStats::default()));
+        }
+        if let Some(f) = &fault {
+            f.before_block(0, (0, 0));
         }
         em_a.phase(PpPhase::A);
         let sweep_obs = em_a.sweep_observer((0, 0));
@@ -554,6 +855,9 @@ pub(crate) fn run_pp_centered(
         let obs = BlockObs { sweep: sweep_obs.as_deref(), chunk: chunk_obs.as_deref() };
         let (post, stats) = run_block(b, &a_data, &cfg_a, None, None, obs)?;
         em_a.block_done((0, 0), PpPhase::A, &stats);
+        if let Some(s) = &sink_a {
+            s.record(0, 0, &post, &em_a);
+        }
         Ok(PpTaskOutput::Block(post, stats))
     });
     if a_restored {
@@ -572,10 +876,15 @@ pub(crate) fn run_pp_centered(
         let em_b = em.clone();
         let pre = restored.remove(&(i, 0));
         let is_restored = pre.is_some();
+        let sink_b = ckpt_sink.clone();
+        let idx = block_nodes.len();
         let id = dag.add(&[a_id], move |b: &BlockBackend, p: &[Arc<PpTaskOutput>]| {
             if let Some(post) = pre {
                 em_b.block_restored((i, 0));
                 return Ok(PpTaskOutput::Block(post, BlockRunStats::default()));
+            }
+            if let Some(f) = &fault {
+                f.before_block(idx, (i, 0));
             }
             em_b.phase(PpPhase::B);
             let sweep_obs = em_b.sweep_observer((i, 0));
@@ -583,6 +892,9 @@ pub(crate) fn run_pp_centered(
             let obs = BlockObs { sweep: sweep_obs.as_deref(), chunk: chunk_obs.as_deref() };
             let (post, stats) = run_block(b, &data, &bcfg, None, Some(&p[0].block().v), obs)?;
             em_b.block_done((i, 0), PpPhase::B, &stats);
+            if let Some(s) = &sink_b {
+                s.record(i, 0, &post, &em_b);
+            }
             Ok(PpTaskOutput::Block(post, stats))
         });
         if is_restored {
@@ -598,10 +910,15 @@ pub(crate) fn run_pp_centered(
         let em_b = em.clone();
         let pre = restored.remove(&(0, j));
         let is_restored = pre.is_some();
+        let sink_b = ckpt_sink.clone();
+        let idx = block_nodes.len();
         let id = dag.add(&[a_id], move |b: &BlockBackend, p: &[Arc<PpTaskOutput>]| {
             if let Some(post) = pre {
                 em_b.block_restored((0, j));
                 return Ok(PpTaskOutput::Block(post, BlockRunStats::default()));
+            }
+            if let Some(f) = &fault {
+                f.before_block(idx, (0, j));
             }
             em_b.phase(PpPhase::B);
             let sweep_obs = em_b.sweep_observer((0, j));
@@ -609,6 +926,9 @@ pub(crate) fn run_pp_centered(
             let obs = BlockObs { sweep: sweep_obs.as_deref(), chunk: chunk_obs.as_deref() };
             let (post, stats) = run_block(b, &data, &bcfg, Some(&p[0].block().u), None, obs)?;
             em_b.block_done((0, j), PpPhase::B, &stats);
+            if let Some(s) = &sink_b {
+                s.record(0, j, &post, &em_b);
+            }
             Ok(PpTaskOutput::Block(post, stats))
         });
         if is_restored {
@@ -644,10 +964,15 @@ pub(crate) fn run_pp_centered(
             let em_c = em.clone();
             let pre = restored.remove(&(i, j));
             let is_restored = pre.is_some();
+            let sink_c = ckpt_sink.clone();
+            let idx = block_nodes.len();
             let id = dag.add(&edges, move |b: &BlockBackend, p: &[Arc<PpTaskOutput>]| {
                 if let Some(post) = pre {
                     em_c.block_restored((i, j));
                     return Ok(PpTaskOutput::Block(post, BlockRunStats::default()));
+                }
+                if let Some(f) = &fault {
+                    f.before_block(idx, (i, j));
                 }
                 em_c.phase(PpPhase::C);
                 let sweep_obs = em_c.sweep_observer((i, j));
@@ -663,6 +988,9 @@ pub(crate) fn run_pp_centered(
                     obs,
                 )?;
                 em_c.block_done((i, j), PpPhase::C, &stats);
+                if let Some(s) = &sink_c {
+                    s.record(i, j, &post, &em_c);
+                }
                 Ok(PpTaskOutput::Block(post, stats))
             });
             if is_restored {
@@ -711,10 +1039,12 @@ pub(crate) fn run_pp_centered(
         &DagRunOpts { job: Some(ctx.job), cancel: Some(ctx.control.cancel.clone()) },
     )?;
 
-    if outcome.cancelled {
+    if outcome.cancelled || outcome.failed.is_some() {
         // ---- checkpoint-on-abort: persist every block whose posterior
-        // is known — sampled/restored this run, or carried in from the
-        // resume checkpoint with its restore node still undispatched ----
+        // is known — sampled/restored this run (including in-flight
+        // siblings that drained after a cancel or a crash), or carried in
+        // from the resume checkpoint with its restore node still
+        // undispatched ----
         let backup_by_coord: HashMap<(usize, usize), &BlockPosteriors> =
             resume_backup.iter().map(|b| ((b.i, b.j), &b.post)).collect();
         let mut blocks = Vec::new();
@@ -727,7 +1057,14 @@ pub(crate) fn run_pp_centered(
                 blocks.push(PartialBlock { i, j, post: (*post).clone() });
             }
         }
-        return finish_cancelled(cfg, global_mean, blocks, &em);
+        // a failure racing a cancel drain resolves as the cancel — the
+        // user asked for it and the checkpoint is identical either way
+        return if outcome.cancelled {
+            finish_cancelled(cfg, global_mean, blocks, &em, ckpt_sink.as_deref())
+        } else {
+            let err = outcome.failed.expect("checked above");
+            finish_failed(cfg, global_mean, blocks, &em, ckpt_sink.as_deref(), &err)
+        };
     }
     // a non-cancelled run_with completes every node
     let nodes: Vec<_> = outcome
@@ -767,6 +1104,15 @@ pub(crate) fn run_pp_centered(
     // span — the straggler cost the barrier-free schedule removes
     let busy: f64 = nodes.iter().map(|r| r.busy()).sum();
     stats.idle_secs = (pool.threads as f64 * agg_finish - busy).max(0.0);
+    // queue wait: earliest task start relative to the schedule clock (the
+    // DAG driver's t0) — measured entirely inside the dispatch machinery,
+    // so setup work (resume loading, centring, sink creation, DAG build)
+    // can never leak into the fairness signal
+    stats.queue_wait_secs = nodes
+        .iter()
+        .map(|r| r.started)
+        .fold(f64::INFINITY, f64::min)
+        .max(0.0);
     // overlap: phase-(c) compute that ran while phase-(b) stragglers
     // were still in flight (zero under the barrier scheduler)
     stats.overlap_secs = c_ids
@@ -944,6 +1290,65 @@ mod tests {
         let (a, b) = (lock.rmse(&test), pipe.rmse(&test));
         assert!((a - b).abs() < 0.15 * a.max(b), "lockstep={a} vs pipelined={b}");
         assert!(pipe.stats.comm_overlap_secs >= 0.0);
+    }
+
+    #[test]
+    fn periodic_checkpoints_write_pruned_generations_and_resume_bitwise() {
+        let (train, _, k) = dataset();
+        let dir = std::env::temp_dir()
+            .join(format!("bmfpp_trainer_gens_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let cfg = quick_cfg(k)
+            .with_grid(3, 2)
+            .with_checkpoint_every(2)
+            .with_checkpoint_dir(&dir)
+            .with_checkpoint_keep(2);
+        let full = train_once(cfg.clone(), &train);
+        assert_eq!(full.stats.blocks, 6);
+
+        // 6 blocks at every=2 → generations 1, 2, 3; keep-last-2 retention
+        // leaves exactly {2, 3}, and generation 3 covers all 6 blocks
+        let gens: Vec<u64> = checkpoint::list_generations(&dir)
+            .unwrap()
+            .into_iter()
+            .map(|(g, _)| g)
+            .collect();
+        assert_eq!(gens, vec![2, 3], "monotonic numbering + keep-last-K");
+        let (newest, _) = checkpoint::latest_valid_partial(&dir).unwrap().unwrap();
+        assert_eq!(newest.generation, 3);
+        assert_eq!(newest.blocks.len(), 6);
+
+        // resume pointed at the *directory* restores the newest generation
+        // and reproduces the uninterrupted posterior bit for bit
+        let resumed = train_once(cfg.clone().with_resume_from(&dir), &train);
+        assert_eq!(resumed.stats.blocks_restored, 6);
+        assert_eq!(resumed.u_post.mean, full.u_post.mean);
+        assert_eq!(resumed.u_post.prec, full.u_post.prec);
+        assert_eq!(resumed.v_post.mean, full.v_post.mean);
+        assert_eq!(resumed.v_post.prec, full.v_post.prec);
+
+        // drop the newest generation to model a crash that lost it: the
+        // resume falls back to generation 2 (4 blocks), re-samples the
+        // rest, still matches bitwise, and continues numbering monotonically
+        std::fs::remove_file(checkpoint::generation_path(&dir, 3)).unwrap();
+        let resumed = train_once(cfg.with_resume_from(&dir), &train);
+        assert_eq!(resumed.stats.blocks_restored, 4);
+        assert_eq!(resumed.stats.blocks, 2);
+        assert_eq!(resumed.u_post.mean, full.u_post.mean);
+        assert_eq!(resumed.v_post.mean, full.v_post.mean);
+        let (newest, _) = checkpoint::latest_valid_partial(&dir).unwrap().unwrap();
+        assert_eq!(newest.generation, 3, "numbering continues past the restored gen");
+        assert_eq!(newest.blocks.len(), 6, "progress never shrinks");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn queue_wait_is_recorded() {
+        let (train, _, k) = dataset();
+        let res = train_once(quick_cfg(k).with_grid(2, 2), &train);
+        assert!(res.stats.queue_wait_secs.is_finite());
+        assert!(res.stats.queue_wait_secs >= 0.0);
+        assert!(res.stats.queue_wait_secs < 60.0, "queue wait implausibly large");
     }
 
     #[test]

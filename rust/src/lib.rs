@@ -22,6 +22,11 @@
 //!   [`coordinator::TrainOutcome`]. A cancelled run persists its
 //!   completed block posteriors as a partial (v3) checkpoint;
 //!   `TrainConfig::resume_from` continues from it bitwise-identically.
+//!   Runs are crash-tolerant too: `TrainConfig::{checkpoint_every,
+//!   checkpoint_dir}` write periodic generation files (resume from the
+//!   directory restores the newest valid one), a panicking block fails
+//!   only its own session ([`coordinator::TrainOutcome::Failed`]), and
+//!   the engine's [`coordinator::AdmissionPolicy`] bounds the backlog.
 //! - [`posterior::PosteriorModel`] — the servable artifact every run
 //!   produces: posterior means/precisions + global mean, with `predict`,
 //!   `predict_variance`, `rmse` and `top_n`. Checkpoints persist exactly

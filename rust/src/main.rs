@@ -8,17 +8,25 @@
 //!             lockstep by default; --sweep pipelined overlaps the factor
 //!             exchange with sampling (--chunk-rows, --staleness).
 //!             --priority low|normal|high tags the job in the engine's
-//!             shared queue; --resume <v3.json> continues a cancelled run
-//!             from its partial checkpoint (bitwise-identical over the
-//!             restored blocks); --checkpoint-on-cancel <file> arms
-//!             checkpoint-on-abort for cancels issued through the session
-//!             API (train itself never cancels; see `jobs --cancel-demo`);
-//!             --max-in-flight caps the job's concurrent block tasks
+//!             shared queue; --resume <v3.json | checkpoint-dir> continues
+//!             an interrupted run from its partial checkpoint — a
+//!             directory restores the newest valid generation —
+//!             (bitwise-identical over the restored blocks);
+//!             --checkpoint-on-cancel <file> arms checkpoint-on-abort for
+//!             cancels issued through the session API (train itself never
+//!             cancels; see `jobs --cancel-demo`); --checkpoint-every N +
+//!             --checkpoint-dir <dir> write a crash-tolerant v3 generation
+//!             every N completed blocks (atomic rename, keep-last
+//!             --checkpoint-keep, default 3) so even SIGKILL loses at most
+//!             N blocks; --max-in-flight caps the job's concurrent block
+//!             tasks
 //!   jobs      multi-tenant demo: submit several concurrent training jobs
 //!             at mixed priorities on ONE engine and stream their status
 //!             (id / priority / state / block progress) until all finish;
 //!             --cancel-demo cancels the first (low-priority) job after
-//!             its first block and reports the abort checkpoint
+//!             its first block and reports the abort checkpoint;
+//!             --backlog N rejects submits past N live jobs (typed
+//!             admission control, rejections printed and skipped)
 //!   predict   load a saved model (--load) and score a ratings file or a
 //!             dataset holdout; optionally rank the top columns for a row
 //!             (--top-for N, --top-n count). Checkpoints are format v2
@@ -55,8 +63,8 @@ use bmf_pp::cluster::{calibrate, sim};
 use bmf_pp::coordinator::backend::BlockBackend;
 use bmf_pp::coordinator::config::auto_tau;
 use bmf_pp::coordinator::{
-    checkpoint, BackendSpec, Engine, Priority, SchedulerMode, SweepMode, TrainConfig,
-    TrainEvent, TrainOutcome,
+    checkpoint, AdmissionPolicy, BackendSpec, Engine, Priority, SchedulerMode, SubmitError,
+    SweepMode, TrainConfig, TrainEvent, TrainOutcome,
 };
 use bmf_pp::data::generator::{DatasetProfile, SyntheticDataset};
 use bmf_pp::data::loader;
@@ -159,6 +167,9 @@ fn plan_train(args: &Args) -> anyhow::Result<Action> {
     let max_in_flight = args.usize_or("max-in-flight", 0);
     let resume_path = args.get("resume").map(str::to_string);
     let cancel_ckpt = args.get("checkpoint-on-cancel").map(str::to_string);
+    let checkpoint_every = args.usize_or("checkpoint-every", 0);
+    let checkpoint_dir = args.get("checkpoint-dir").map(str::to_string);
+    let checkpoint_keep = args.usize_or("checkpoint-keep", 3);
     let save_path = args.get("save").map(str::to_string);
     let save_test = args.get("save-test").map(str::to_string);
     let metrics_path = args.get("metrics").map(str::to_string);
@@ -190,6 +201,13 @@ fn plan_train(args: &Args) -> anyhow::Result<Action> {
         if let Some(path) = &cancel_ckpt {
             cfg = cfg.with_checkpoint_on_cancel(path.clone());
         }
+        if checkpoint_every > 0 {
+            cfg = cfg.with_checkpoint_every(checkpoint_every);
+        }
+        if let Some(dir) = &checkpoint_dir {
+            cfg = cfg.with_checkpoint_dir(dir.clone());
+        }
+        cfg = cfg.with_checkpoint_keep(checkpoint_keep);
         cfg.phase_sample_frac = phase_sample_frac;
         // per-sweep RMSE costs an extra O(nnz·k) pass per retained sweep;
         // only pay for it when --metrics will actually record the series
@@ -250,6 +268,12 @@ fn plan_train(args: &Args) -> anyhow::Result<Action> {
                         clock.secs()
                     );
                 }
+                TrainEvent::Failed { error, blocks_completed } => {
+                    println!(
+                        "[{:>6.2}s] FAILED after {blocks_completed} blocks: {error}",
+                        clock.secs()
+                    );
+                }
                 TrainEvent::Finished { secs, blocks } => {
                     println!(
                         "[{:>6.2}s] finished: {blocks} blocks in {}",
@@ -272,6 +296,17 @@ fn plan_train(args: &Args) -> anyhow::Result<Action> {
                 );
                 return Ok(());
             }
+            // a failed run exits non-zero so scripts (and the CI recovery
+            // drill) can tell a crash from a finished run
+            TrainOutcome::Failed(info) => anyhow::bail!(
+                "training failed after {} completed blocks: {}{}",
+                info.blocks_completed,
+                info.error,
+                match &info.checkpoint {
+                    Some(p) => format!("; resume with --resume {}", p.display()),
+                    None => String::new(),
+                }
+            ),
         };
 
         let rmse = result.rmse(&test);
@@ -284,11 +319,12 @@ fn plan_train(args: &Args) -> anyhow::Result<Action> {
             fmt_duration(result.timings.total)
         );
         println!(
-            "scheduling: compute {} / idle {} / phase-overlap {} / sweep-overlap {}",
+            "scheduling: compute {} / idle {} / phase-overlap {} / sweep-overlap {} / queue-wait {}",
             fmt_duration(result.stats.compute_secs),
             fmt_duration(result.stats.idle_secs),
             fmt_duration(result.stats.overlap_secs),
-            fmt_duration(result.stats.comm_overlap_secs)
+            fmt_duration(result.stats.comm_overlap_secs),
+            fmt_duration(result.stats.queue_wait_secs)
         );
         if result.stats.blocks_restored > 0 {
             println!(
@@ -332,11 +368,17 @@ fn plan_jobs(args: &Args) -> anyhow::Result<Action> {
     let samples = args.usize_or("samples", 8);
     let seed = args.u64_or("seed", 42);
     let cancel_demo = args.bool_or("cancel-demo", false);
+    let backlog = args.usize_or("backlog", 0);
 
     Ok(Box::new(move || {
         let (data, k) = data.load()?;
         let (train, _) = holdout_split_covered(&data, 0.2, 7);
-        let engine = Engine::new(&BackendSpec::Native, threads);
+        let mut engine = Engine::new(&BackendSpec::Native, threads);
+        if backlog > 0 {
+            engine = engine
+                .with_admission(AdmissionPolicy::Reject { max_backlog: backlog });
+            println!("admission: rejecting submits past a backlog of {backlog} live jobs");
+        }
         let abort_ckpt =
             std::env::temp_dir().join(format!("bmfpp_jobs_abort_{}.json", std::process::id()));
 
@@ -360,7 +402,15 @@ fn plan_jobs(args: &Args) -> anyhow::Result<Action> {
             if cancel_demo && idx == 0 {
                 cfg = cfg.with_checkpoint_on_cancel(abort_ckpt.clone());
             }
-            let session = engine.submit(cfg, &train)?;
+            let session = match engine.submit(cfg, &train) {
+                Ok(s) => s,
+                // load shedding in action: a typed rejection, not a hang
+                Err(e) if e.downcast_ref::<SubmitError>().is_some() => {
+                    println!("job {idx} REJECTED: {e}");
+                    continue;
+                }
+                Err(e) => return Err(e),
+            };
             println!(
                 "submitted job #{} [{priority}] grid {}x{}",
                 session.id(),
@@ -420,6 +470,10 @@ fn plan_jobs(args: &Args) -> anyhow::Result<Action> {
                         Some(p) => format!("; resume with train --resume {}", p.display()),
                         None => String::new(),
                     }
+                ),
+                TrainOutcome::Failed(info) => println!(
+                    "job #{id}: FAILED after {} blocks: {}",
+                    info.blocks_completed, info.error
                 ),
             }
         }

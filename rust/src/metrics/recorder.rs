@@ -63,6 +63,9 @@ impl Recorder {
             TrainEvent::Cancelled { blocks_completed } => {
                 self.scalar("cancelled_after_blocks", *blocks_completed as f64);
             }
+            TrainEvent::Failed { blocks_completed, .. } => {
+                self.scalar("failed_after_blocks", *blocks_completed as f64);
+            }
             TrainEvent::CheckpointSaved { blocks, .. } => {
                 self.scalar("checkpoint_blocks", *blocks as f64);
             }

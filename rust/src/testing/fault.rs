@@ -1,0 +1,176 @@
+//! Deterministic fault injection for crash-tolerance tests.
+//!
+//! A [`FaultPlan`] attached to a `TrainConfig`
+//! (`TrainConfig::with_fault_plan`) is consulted by the trainer right
+//! before each block task starts sampling, on the worker thread that will
+//! run it. Blocks are addressed by their **canonical index** — the order
+//! the trainer inserts block nodes into the DAG: phase (a) is 0, then the
+//! phase-(b) row blocks (1,0)…(I-1,0), the phase-(b) column blocks
+//! (0,1)…(0,J-1), then the phase-(c) interior blocks in row-major order.
+//! That numbering is a pure function of the grid, so a plan fires at the
+//! same block whatever the schedule, worker count, or tenant mix —
+//! deterministic by construction, no shared counters.
+//!
+//! Blocks restored from a resume checkpoint never sample, so they never
+//! consult the plan: a resumed run that restores past the fault point
+//! sails through. A run resumed with the *same* plan and the faulted
+//! block still unsampled will fault again — clear the plan on the resume
+//! config (`cfg.fault = None`) to model "the crash does not recur".
+//!
+//! Panics raised here are caught at the worker-pool task boundary and
+//! surface as `TrainOutcome::Failed` for *that job only*; sibling jobs on
+//! the same pool are untouched (asserted in `tests/fault.rs`).
+
+use std::time::Duration;
+
+/// What the plan does when its trigger fires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Panic when the block with this canonical index starts sampling —
+    /// the deterministic stand-in for a worker crash mid-run.
+    PanicAtBlock(usize),
+    /// Sleep before sampling the block with canonical index `block` — a
+    /// straggler injection that must change timings, never the math.
+    DelayBlock {
+        /// Canonical index of the delayed block.
+        block: usize,
+        /// How long the block is held before sampling, in milliseconds.
+        millis: u64,
+    },
+    /// Panic at each block independently with probability `p`, decided by
+    /// a hash of `(seed, canonical index)` — a seeded random kill that is
+    /// reproducible run-to-run and schedule-independent.
+    RandomPanic {
+        /// Seed of the per-block kill decision.
+        seed: u64,
+        /// Kill probability per block, in `[0, 1]`.
+        p: f64,
+    },
+}
+
+/// A deterministic fault schedule, consulted before every sampled block.
+///
+/// Testing hook: production configs leave `TrainConfig::fault` as `None`
+/// and never pay anything for this. The plan is a stateless `Copy` value
+/// — cloning a config copies it — and must stay that way: the trigger is
+/// a pure function of the block's canonical index, so every copy behaves
+/// identically. Fire-once or otherwise stateful plans would break under
+/// config cloning; model "the crash does not recur" by clearing
+/// `cfg.fault` on the retry instead.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    kind: FaultKind,
+}
+
+impl FaultPlan {
+    /// A plan executing `kind`.
+    pub fn new(kind: FaultKind) -> FaultPlan {
+        FaultPlan { kind }
+    }
+
+    /// Shorthand: panic when canonical block `block` starts sampling.
+    pub fn panic_at_block(block: usize) -> FaultPlan {
+        FaultPlan::new(FaultKind::PanicAtBlock(block))
+    }
+
+    /// Shorthand: delay canonical block `block` by `millis` milliseconds.
+    pub fn delay_block(block: usize, millis: u64) -> FaultPlan {
+        FaultPlan::new(FaultKind::DelayBlock { block, millis })
+    }
+
+    /// Shorthand: seeded random kill with per-block probability `p`.
+    pub fn random_panic(seed: u64, p: f64) -> FaultPlan {
+        FaultPlan::new(FaultKind::RandomPanic { seed, p })
+    }
+
+    /// The plan's trigger/action.
+    pub fn kind(&self) -> FaultKind {
+        self.kind
+    }
+
+    /// Would [`FaultPlan::before_block`] panic for this canonical index?
+    /// Lets tests predict the fault point without tripping it.
+    pub fn kills_block(&self, index: usize) -> bool {
+        match self.kind {
+            FaultKind::PanicAtBlock(n) => index == n,
+            FaultKind::DelayBlock { .. } => false,
+            FaultKind::RandomPanic { seed, p } => kill_draw(seed, index) < p,
+        }
+    }
+
+    /// The trainer's hook: called on the worker thread right before block
+    /// `index` (at grid coordinate `node`) starts sampling. Panics or
+    /// sleeps according to the plan; a no-op for every other block.
+    pub fn before_block(&self, index: usize, node: (usize, usize)) {
+        match self.kind {
+            FaultKind::DelayBlock { block, millis } if block == index => {
+                std::thread::sleep(Duration::from_millis(millis));
+            }
+            _ if self.kills_block(index) => {
+                panic!(
+                    "fault injection: killed block {index} at grid ({}, {})",
+                    node.0, node.1
+                );
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Deterministic uniform draw in `[0, 1)` from `(seed, index)` — the same
+/// splitmix-style mix the trainer uses for per-block seeds, so the kill
+/// pattern is stable across platforms.
+fn kill_draw(seed: u64, index: usize) -> f64 {
+    let mut z = seed
+        .wrapping_mul(0x9E3779B97F4A7C15)
+        .wrapping_add(index as u64)
+        .wrapping_add(0x243F6A8885A308D3);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^= z >> 31;
+    (z >> 11) as f64 / (1u64 << 53) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn panic_plan_fires_only_at_its_block() {
+        let plan = FaultPlan::panic_at_block(3);
+        assert!(!plan.kills_block(2) && plan.kills_block(3) && !plan.kills_block(4));
+        // a non-matching index is a no-op, not a panic
+        plan.before_block(2, (0, 0));
+    }
+
+    #[test]
+    #[should_panic(expected = "fault injection")]
+    fn panic_plan_panics_at_its_block() {
+        FaultPlan::panic_at_block(1).before_block(1, (1, 0));
+    }
+
+    #[test]
+    fn delay_plan_sleeps_instead_of_panicking() {
+        let plan = FaultPlan::delay_block(0, 15);
+        assert!(!plan.kills_block(0));
+        let t0 = std::time::Instant::now();
+        plan.before_block(0, (0, 0));
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+        let t0 = std::time::Instant::now();
+        plan.before_block(1, (1, 0));
+        assert!(t0.elapsed() < Duration::from_millis(15), "wrong block delayed");
+    }
+
+    #[test]
+    fn random_kill_is_deterministic_and_roughly_calibrated() {
+        let plan = FaultPlan::random_panic(7, 0.3);
+        let a: Vec<bool> = (0..64).map(|i| plan.kills_block(i)).collect();
+        let b: Vec<bool> = (0..64).map(|i| plan.kills_block(i)).collect();
+        assert_eq!(a, b, "same seed, same kill pattern");
+        let kills = a.iter().filter(|&&k| k).count();
+        assert!((5..=35).contains(&kills), "p=0.3 over 64 blocks killed {kills}");
+        // edge probabilities behave
+        assert!(!FaultPlan::random_panic(7, 0.0).kills_block(0));
+        assert!(FaultPlan::random_panic(7, 1.1).kills_block(0));
+    }
+}

@@ -1,3 +1,5 @@
-//! Property-testing substrate (proptest is unavailable offline).
+//! Property-testing substrate (proptest is unavailable offline) and
+//! deterministic fault injection for crash-tolerance tests.
 
+pub mod fault;
 pub mod prop;

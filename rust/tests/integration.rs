@@ -273,6 +273,90 @@ fn cli_jobs_runs_concurrent_sessions_to_completion() {
 }
 
 #[test]
+fn cli_periodic_checkpoint_then_dir_resume_matches_rmse() {
+    // the recovery drill's core path at tier-1 scale: a run with
+    // --checkpoint-every leaves generation files behind; a second run
+    // resuming from the DIRECTORY restores them (reported on stdout) and
+    // lands on the identical holdout RMSE
+    fn rmse_line(stdout: &str) -> String {
+        stdout
+            .lines()
+            .find(|l| l.starts_with("test RMSE = "))
+            .unwrap_or_else(|| panic!("no RMSE line in:\n{stdout}"))
+            .split_whitespace()
+            .nth(3)
+            .unwrap()
+            .to_string()
+    }
+    let bin = env!("CARGO_BIN_EXE_bmf-pp");
+    let ckpts = std::env::temp_dir().join(format!("bmfpp_cli_ckpts_{}", std::process::id()));
+    std::fs::remove_dir_all(&ckpts).ok();
+    let common = [
+        "--dataset",
+        "movielens",
+        "--scale",
+        "0.0015",
+        "--grid",
+        "2x2",
+        "--burnin",
+        "3",
+        "--samples",
+        "6",
+        "--native",
+        "--quiet",
+    ];
+
+    let out = std::process::Command::new(bin)
+        .arg("train")
+        .args(common)
+        .args(["--checkpoint-every", "1", "--checkpoint-dir", ckpts.to_str().unwrap()])
+        .output()
+        .expect("run train with periodic checkpoints");
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let first_rmse = rmse_line(&String::from_utf8_lossy(&out.stdout));
+    let generations = std::fs::read_dir(&ckpts)
+        .expect("checkpoint dir created")
+        .filter_map(|e| e.ok()?.file_name().into_string().ok())
+        .filter(|n| n.starts_with("partial-gen-") && n.ends_with(".json"))
+        .count();
+    assert_eq!(
+        generations, 3,
+        "4 blocks at every=1 under keep-last-3 must leave exactly 3 generations"
+    );
+
+    let out = std::process::Command::new(bin)
+        .arg("train")
+        .args(common)
+        .args(["--resume", ckpts.to_str().unwrap()])
+        .output()
+        .expect("run resumed train");
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("blocks restored from checkpoint"), "{stdout}");
+    assert_eq!(first_rmse, rmse_line(&stdout), "resumed RMSE must match");
+    std::fs::remove_dir_all(ckpts).ok();
+}
+
+#[test]
+fn cli_jobs_backlog_rejects_past_bound() {
+    // admission control through the CLI: with --backlog 1 only the first
+    // job is admitted; the rest are rejected with the typed message
+    let bin = env!("CARGO_BIN_EXE_bmf-pp");
+    let out = std::process::Command::new(bin)
+        .args([
+            "jobs", "--dataset", "movielens", "--scale", "0.001", "--jobs", "3", "--burnin",
+            "2", "--samples", "4", "--threads", "2", "--backlog", "1",
+        ])
+        .output()
+        .expect("run jobs with backlog");
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(stdout.matches("submitted job #").count(), 1, "{stdout}");
+    assert_eq!(stdout.matches("REJECTED").count(), 2, "{stdout}");
+    assert!(stdout.contains("backlog full"), "{stdout}");
+}
+
+#[test]
 fn cli_rejects_unknown_flags_listing_known_ones() {
     let bin = env!("CARGO_BIN_EXE_bmf-pp");
     let out = std::process::Command::new(bin)

@@ -71,6 +71,8 @@ fn multi_session_stress_random_cancels_no_deadlock() {
                     }
                     "cancelled"
                 }
+                // no fault plan is armed here: any failure is a real bug
+                TrainOutcome::Failed(info) => panic!("stress job failed: {}", info.error),
             };
             let _ = done.send((idx, kind));
         }));

@@ -1,0 +1,71 @@
+#!/usr/bin/env bash
+# End-to-end crash drill (the CI `recovery` job):
+#
+#   1. run `bmf-pp train` uninterrupted and save the model (reference)
+#   2. run the same config with --checkpoint-every 1 --checkpoint-dir,
+#      SIGKILL the process as soon as the first generation file appears
+#   3. resume from the checkpoint DIRECTORY (newest valid generation)
+#      and save the model again
+#   4. require the two saved models to be byte-identical: the posterior
+#      survived a hard kill bitwise, generations + atomic renames and all
+#
+# Run from the repository root after `cargo build --release`:
+#
+#   bash scripts/recovery_drill.sh
+set -euo pipefail
+
+BIN=${BIN:-rust/target/release/bmf-pp}
+WORK=$(mktemp -d "${TMPDIR:-/tmp}/bmfpp_recovery.XXXXXX")
+trap 'rm -rf "$WORK"' EXIT
+
+# one fixed config for all three runs; big enough that the kill lands
+# mid-run, small enough to finish in seconds
+TRAIN_FLAGS=(--dataset movielens --scale 0.003 --grid 3x3 --burnin 6
+             --samples 16 --native --seed 11 --workers 1 --quiet)
+
+echo "== 1/4: uninterrupted reference run"
+"$BIN" train "${TRAIN_FLAGS[@]}" --save "$WORK/reference.json"
+
+echo "== 2/4: crash run (checkpoint-every=1, SIGKILL at first generation)"
+CKPTS="$WORK/ckpts"
+"$BIN" train "${TRAIN_FLAGS[@]}" \
+  --checkpoint-every 1 --checkpoint-dir "$CKPTS" &
+PID=$!
+
+# wait (max ~60s) for the first generation file, then kill -9 mid-run
+for _ in $(seq 1 600); do
+  if compgen -G "$CKPTS/partial-gen-*.json" > /dev/null; then break; fi
+  if ! kill -0 "$PID" 2>/dev/null; then break; fi
+  sleep 0.1
+done
+if ! compgen -G "$CKPTS/partial-gen-*.json" > /dev/null; then
+  echo "FAIL: no checkpoint generation appeared before the run ended" >&2
+  wait "$PID" || true
+  exit 1
+fi
+if kill -9 "$PID" 2>/dev/null; then
+  echo "   SIGKILLed pid $PID after $(ls "$CKPTS" | wc -l) generation file(s)"
+else
+  # the run beat the kill — rare on CI hardware, but the resume below
+  # still proves generation discovery; note it loudly
+  echo "   WARN: run finished before SIGKILL landed; resume covers a completed dir"
+fi
+wait "$PID" 2>/dev/null || true
+
+echo "== 3/4: resume from the checkpoint directory (newest valid generation)"
+RESUME_OUT="$WORK/resume.log"
+"$BIN" train "${TRAIN_FLAGS[@]}" \
+  --resume "$CKPTS" --save "$WORK/resumed.json" | tee "$RESUME_OUT"
+grep -q "blocks restored from checkpoint" "$RESUME_OUT" || {
+  echo "FAIL: resume did not restore any blocks" >&2
+  exit 1
+}
+
+echo "== 4/4: bitwise comparison of the saved posteriors"
+if cmp -s "$WORK/reference.json" "$WORK/resumed.json"; then
+  echo "PASS: resumed posterior is byte-identical to the uninterrupted run"
+else
+  echo "FAIL: resumed model differs from the uninterrupted reference" >&2
+  cmp "$WORK/reference.json" "$WORK/resumed.json" | head -5 >&2 || true
+  exit 1
+fi
