@@ -10,6 +10,9 @@
 //!   P5 — snapshot metrics for the perf trajectory: sampler throughput
 //!        (ratings/s), pipelined comm/compute overlap seconds, and
 //!        per-job queue-wait seconds on a warm engine.
+//!   P6 — serve: p50/p99 request latency and QPS of the HTTP predict
+//!        path (request batcher + lock-free snapshot reads) under
+//!        concurrent clients.
 //!
 //!     cargo bench --bench perf_probe
 //!
@@ -29,7 +32,9 @@ use bmf_pp::posterior::RowGaussians;
 use bmf_pp::rng::{normal::standard_normal_vec, Rng};
 #[cfg(feature = "pjrt")]
 use bmf_pp::runtime::Engine;
+use bmf_pp::serve::{ModelSource, ServeConfig, Server};
 use bmf_pp::util::timer::Stopwatch;
+use std::io::{Read, Write};
 
 fn random_block(n: usize, d: usize, density: f64, seed: u64) -> Coo {
     let mut rng = Rng::seed_from_u64(seed);
@@ -228,6 +233,66 @@ fn main() {
             .unwrap();
         println!("  pipelined comm overlap {:.4}s", pipe.stats.comm_overlap_secs);
         results.push(("comm_overlap_secs".to_string(), pipe.stats.comm_overlap_secs));
+    }
+
+    println!("\nP6 — serve: HTTP predict latency / QPS (4 clients x 300 requests)");
+    {
+        let (_, train, _) = common::bench_dataset("movielens");
+        let cfg = TrainConfig::new(8).with_grid(2, 2).with_sweeps(4, 8).with_seed(9);
+        let model = TrainEngine::new(&cfg.backend, cfg.block_parallelism)
+            .train(&cfg, &train)
+            .unwrap()
+            .model;
+        let (rows, cols) = (model.rows(), model.cols());
+        let dir =
+            std::env::temp_dir().join(format!("bmfpp_perf_serve_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.json");
+        bmf_pp::coordinator::checkpoint::save(&model, &path).unwrap();
+
+        let server = Server::start(
+            ServeConfig::default().with_addr("127.0.0.1:0").with_threads(4),
+            ModelSource::File(path),
+        )
+        .expect("serve probe server");
+        let addr = server.addr();
+        let predict = move |row: usize, col: usize| {
+            let mut stream = std::net::TcpStream::connect(addr).expect("connect");
+            let req = format!(
+                "GET /predict?row={row}&col={col} HTTP/1.1\r\nhost: probe\r\n\
+                 connection: close\r\n\r\n"
+            );
+            stream.write_all(req.as_bytes()).expect("send");
+            let mut raw = String::new();
+            stream.read_to_string(&mut raw).expect("recv");
+            assert!(raw.starts_with("HTTP/1.1 200"), "probe request failed: {raw}");
+        };
+        predict(0, 0); // warm the accept loop and worker pool
+        let (clients, per_client) = (4usize, 300usize);
+        let sw = Stopwatch::start();
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                std::thread::spawn(move || {
+                    for i in 0..per_client {
+                        predict((c * per_client + i) % rows, i % cols);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("serve probe client panicked");
+        }
+        let wall = sw.secs();
+        let stats = server.stop();
+        let qps = (clients * per_client) as f64 / wall.max(1e-9);
+        println!(
+            "  p50 {:.3}ms  p99 {:.3}ms  {qps:.0} qps  ({} batches, max batch {})",
+            stats.p50_ms, stats.p99_ms, stats.batches, stats.max_batch
+        );
+        results.push(("serve_p50_ms".to_string(), stats.p50_ms));
+        results.push(("serve_p99_ms".to_string(), stats.p99_ms));
+        results.push(("serve_qps".to_string(), qps));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     common::save_json("perf_probe.json", &results);

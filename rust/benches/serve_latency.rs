@@ -1,0 +1,89 @@
+//! §Serve bench: latency/throughput of the `bmf-pp serve` HTTP path
+//! (request batcher + lock-free snapshot reads) at several client
+//! concurrencies, each level against a fresh server so the latency
+//! window is clean.
+//!
+//!     cargo bench --bench serve_latency
+//!
+//! Writes `bench_results/serve_latency.json` with per-level p50/p99/QPS.
+
+mod common;
+
+use bmf_pp::coordinator::{checkpoint, Engine, TrainConfig};
+use bmf_pp::serve::{ModelSource, ServeConfig, Server};
+use bmf_pp::util::timer::Stopwatch;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+
+const PER_CLIENT: usize = 400;
+
+/// One `GET /predict` over a fresh connection; returns the HTTP status.
+fn predict_once(addr: SocketAddr, row: usize, col: usize) -> u16 {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    let req =
+        format!("GET /predict?row={row}&col={col} HTTP/1.1\r\nhost: bench\r\nconnection: close\r\n\r\n");
+    stream.write_all(req.as_bytes()).expect("send");
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).expect("recv");
+    raw.split_whitespace().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0)
+}
+
+/// `clients` threads fire `PER_CLIENT` predicts each; returns wall secs.
+fn hammer(addr: SocketAddr, clients: usize, rows: usize, cols: usize) -> f64 {
+    let sw = Stopwatch::start();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            std::thread::spawn(move || {
+                for i in 0..PER_CLIENT {
+                    let status =
+                        predict_once(addr, (c * PER_CLIENT + i) % rows, i % cols);
+                    assert_eq!(status, 200, "bench request failed");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("client thread panicked");
+    }
+    sw.secs()
+}
+
+fn main() {
+    bmf_pp::util::logging::init();
+    let mut results = Vec::new();
+
+    let (_, train, _) = common::bench_dataset("movielens");
+    let cfg = TrainConfig::new(8).with_grid(2, 2).with_sweeps(4, 8).with_seed(11);
+    let engine = Engine::new(&cfg.backend, cfg.block_parallelism);
+    let model = engine.train(&cfg, &train).unwrap().model;
+    let (rows, cols) = (model.rows(), model.cols());
+
+    let dir = std::env::temp_dir().join(format!("bmfpp_serve_bench_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model.json");
+    checkpoint::save(&model, &path).unwrap();
+
+    println!("serve latency/QPS ({rows}x{cols} model, {PER_CLIENT} predicts per client)");
+    println!("{:>8} {:>10} {:>10} {:>10}", "clients", "p50 ms", "p99 ms", "qps");
+    for clients in [1usize, 2, 4, 8] {
+        let server = Server::start(
+            ServeConfig::default().with_addr("127.0.0.1:0").with_threads(4),
+            ModelSource::File(path.clone()),
+        )
+        .expect("server start");
+        let addr = server.addr();
+        // warm the accept loop + worker pool before the timed window
+        assert_eq!(predict_once(addr, 0, 0), 200);
+        let wall = hammer(addr, clients, rows, cols);
+        let stats = server.stop();
+        let qps = (clients * PER_CLIENT) as f64 / wall.max(1e-9);
+        println!("{clients:>8} {:>10.3} {:>10.3} {qps:>10.0}", stats.p50_ms, stats.p99_ms);
+        results.push((format!("serve_c{clients}_p50_ms"), stats.p50_ms));
+        results.push((format!("serve_c{clients}_p99_ms"), stats.p99_ms));
+        results.push((format!("serve_c{clients}_qps"), qps));
+    }
+
+    common::save_json("serve_latency.json", &results);
+    println!("results written to bench_results/serve_latency.json");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -35,6 +35,7 @@
 //! failing the resume. [`prune_generations`] implements keep-last-K
 //! retention.
 
+use super::aggregate::aggregate_part;
 use super::block_task::BlockPosteriors;
 use crate::posterior::{PosteriorModel, RowGaussians};
 use crate::util::json::{self, Json};
@@ -177,6 +178,85 @@ pub struct PartialCheckpoint {
     pub generation: u64,
     /// Completed blocks, in the order they are restored.
     pub blocks: Vec<PartialBlock>,
+}
+
+impl PartialCheckpoint {
+    /// True when every block of the grid is present — the checkpoint
+    /// captures a run whose sampling finished, so a full model can be
+    /// rebuilt from it via [`model_from_partial`]. Generations written
+    /// mid-run (or by an abort) are incomplete and return `false`.
+    pub fn is_complete(&self) -> bool {
+        let (gi, gj) = self.grid;
+        if gi == 0 || gj == 0 {
+            return false;
+        }
+        let mut seen = vec![false; gi * gj];
+        for b in &self.blocks {
+            if b.i < gi && b.j < gj {
+                seen[b.i * gj + b.j] = true;
+            }
+        }
+        seen.iter().all(|&s| s)
+    }
+}
+
+/// Rebuild a servable [`PosteriorModel`] from a *complete* partial
+/// checkpoint by replaying the trainer's canonical aggregation: each
+/// U part takes its row's phase-(a)/(b) posterior as the prior refined by
+/// that row's later blocks, each V part symmetrically per column, parts
+/// concatenated in grid order. Given the same `ridge` the trainer used
+/// (`TrainConfig::ridge`, default `1e-3`), the result is bitwise
+/// identical to the model the completed run itself would have returned —
+/// which is what lets a serving process hand off from a checkpoint
+/// directory without ever touching the Engine.
+///
+/// Fails with [`CheckpointError::Malformed`] when any grid block is
+/// missing (check [`PartialCheckpoint::is_complete`] first to skip
+/// mid-run generations without treating them as errors).
+pub fn model_from_partial(
+    ckpt: &PartialCheckpoint,
+    ridge: f64,
+) -> Result<PosteriorModel, CheckpointError> {
+    let (gi, gj) = ckpt.grid;
+    if gi == 0 || gj == 0 {
+        return Err(CheckpointError::Malformed(format!(
+            "cannot build a model from a degenerate {gi}x{gj} grid"
+        )));
+    }
+    // index by coordinate: sink files hold blocks in completion order
+    let mut grid: Vec<Option<&BlockPosteriors>> = vec![None; gi * gj];
+    for b in &ckpt.blocks {
+        if b.i < gi && b.j < gj {
+            grid[b.i * gj + b.j] = Some(&b.post);
+        }
+    }
+    if let Some(pos) = grid.iter().position(|b| b.is_none()) {
+        let (i, j) = (pos / gj, pos % gj);
+        return Err(CheckpointError::Malformed(format!(
+            "cannot build a model from an incomplete partial checkpoint \
+             (generation {}): block ({i},{j}) of the {gi}x{gj} grid is missing",
+            ckpt.generation
+        )));
+    }
+    let at = |i: usize, j: usize| grid[i * gj + j].expect("completeness checked above");
+
+    // U^(0): block (0,0)'s row posterior refined by the phase-(b) column
+    // blocks; U^(i): block (i,0) refined by row i's interior blocks
+    let posts: Vec<&RowGaussians> = (1..gj).map(|j| &at(0, j).u).collect();
+    let mut u_post = aggregate_part(&at(0, 0).u, &posts, ridge);
+    for i in 1..gi {
+        let posts: Vec<&RowGaussians> = (1..gj).map(|j| &at(i, j).u).collect();
+        u_post = u_post.concat(&aggregate_part(&at(i, 0).u, &posts, ridge));
+    }
+    // V^(0): block (0,0)'s column posterior refined by the phase-(b) row
+    // blocks; V^(j): block (0,j) refined by column j's interior blocks
+    let posts: Vec<&RowGaussians> = (1..gi).map(|i| &at(i, 0).v).collect();
+    let mut v_post = aggregate_part(&at(0, 0).v, &posts, ridge);
+    for j in 1..gj {
+        let posts: Vec<&RowGaussians> = (1..gi).map(|i| &at(i, j).v).collect();
+        v_post = v_post.concat(&aggregate_part(&at(0, j).v, &posts, ridge));
+    }
+    Ok(PosteriorModel::new(u_post, v_post, ckpt.global_mean))
 }
 
 /// Save an interrupted run's partial state as a format-v3 file.
@@ -705,6 +785,68 @@ mod tests {
         std::fs::write(generation_path(&dir, 1), "not json").unwrap();
         let err = latest_valid_partial(&dir).unwrap_err();
         assert!(matches!(err, CheckpointError::Malformed(_)), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn is_complete_requires_every_grid_block() {
+        let mut ckpt = tiny_partial(); // 2x2 grid, one block
+        assert!(!ckpt.is_complete());
+        let proto = ckpt.blocks[0].clone();
+        for (i, j) in [(0usize, 0usize), (0, 1), (1, 1)] {
+            let mut b = proto.clone();
+            (b.i, b.j) = (i, j);
+            ckpt.blocks.push(b);
+        }
+        assert!(ckpt.is_complete());
+        // a degenerate grid is never complete
+        ckpt.grid = (0, 2);
+        assert!(!ckpt.is_complete());
+    }
+
+    #[test]
+    fn model_from_partial_rejects_incomplete_checkpoints() {
+        let ckpt = tiny_partial(); // block (1,0) only
+        assert!(!ckpt.is_complete());
+        let err = model_from_partial(&ckpt, 1e-3).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("incomplete"), "{msg}");
+        assert!(msg.contains("(0,0)"), "{msg}");
+    }
+
+    #[test]
+    fn model_from_partial_matches_live_run_bitwise() {
+        // train with checkpoint_every=1 so the newest generation holds
+        // every block, then rebuild a model from it: the reconstruction
+        // replays the canonical aggregation order, so predictions must
+        // match the live run's model to the last bit
+        let dir = tmp_dir("rebuild");
+        let d = SyntheticDataset::by_name("movielens", 0.001, 50).unwrap();
+        let (train, _) = holdout_split_covered(&d.ratings, 0.2, 51);
+        let cfg = TrainConfig::new(6)
+            .with_grid(2, 2)
+            .with_sweeps(3, 6)
+            .with_backend(BackendSpec::Native)
+            .with_seed(52)
+            .with_checkpoint_every(1)
+            .with_checkpoint_dir(&dir)
+            .with_checkpoint_keep(1);
+        let ridge = cfg.ridge;
+        let result =
+            Engine::new(&BackendSpec::Native, cfg.block_parallelism).train(&cfg, &train).unwrap();
+        let (ckpt, _) = latest_valid_partial(&dir).unwrap().expect("final generation");
+        assert!(ckpt.is_complete(), "checkpoint_every=1 must leave a full final generation");
+        let rebuilt = model_from_partial(&ckpt, ridge).unwrap();
+        assert_eq!(rebuilt.u_mean, result.u_mean);
+        assert_eq!(rebuilt.v_mean, result.v_mean);
+        assert_eq!(rebuilt.global_mean.to_bits(), result.global_mean.to_bits());
+        for (r, c) in [(0usize, 0usize), (1, 2), (train.rows - 1, train.cols - 1)] {
+            assert_eq!(rebuilt.predict(r, c).to_bits(), result.predict(r, c).to_bits());
+            assert_eq!(
+                rebuilt.predict_variance(r, c).to_bits(),
+                result.predict_variance(r, c).to_bits()
+            );
+        }
         std::fs::remove_dir_all(dir).ok();
     }
 

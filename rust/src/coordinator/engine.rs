@@ -318,6 +318,7 @@ impl SessionShared {
             status: *self.status.lock().unwrap(),
             blocks_done: self.control.blocks_done.load(Ordering::Relaxed),
             blocks_total: self.control.blocks_total.load(Ordering::Relaxed),
+            queue_wait_secs: self.control.queue_wait(),
         }
     }
 }
@@ -335,6 +336,11 @@ pub struct JobSnapshot {
     pub blocks_done: usize,
     /// Total blocks in the job's grid (0 until the run thread starts).
     pub blocks_total: usize,
+    /// The run's measured dispatch delay (`RunStats::queue_wait_secs`):
+    /// how long its first block sat in the ready queue behind
+    /// higher-priority work. `None` until the schedule has measured it
+    /// (the value is produced when the block DAG completes).
+    pub queue_wait_secs: Option<f64>,
 }
 
 /// The engine's session registry: weak handles to every submitted job,
@@ -1148,6 +1154,32 @@ mod tests {
         s2.wait().unwrap().into_result().unwrap();
         // waited-out sessions drop out of the registry
         assert!(engine.jobs().is_empty());
+    }
+
+    #[test]
+    fn jobs_snapshot_surfaces_queue_wait_once_measured() {
+        let (train, _, k) = dataset();
+        let engine = Engine::new(&BackendSpec::Native, 2);
+        let session = engine.submit(quick_cfg(k).with_start_paused(true), &train).unwrap();
+        let before = engine.jobs();
+        assert_eq!(before.len(), 1);
+        assert_eq!(
+            before[0].queue_wait_secs, None,
+            "queue wait is unmeasured until the schedule completes"
+        );
+        session.resume();
+        // the Finished event is emitted after the stats (and the shared
+        // queue-wait cell) are final, so observing it orders the check
+        for event in session.events() {
+            if matches!(event, TrainEvent::Finished { .. }) {
+                break;
+            }
+        }
+        let after = engine.jobs();
+        assert_eq!(after.len(), 1);
+        let wait = after[0].queue_wait_secs.expect("measured after completion");
+        assert!(wait.is_finite() && wait >= 0.0, "queue_wait_secs={wait}");
+        session.wait().unwrap().into_result().unwrap();
     }
 
     #[test]

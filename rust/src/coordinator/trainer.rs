@@ -53,7 +53,7 @@ use crate::partition::Grid;
 use crate::posterior::{PosteriorModel, RowGaussians};
 use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 /// Wall-clock seconds per PP phase, attributed from per-block completion
@@ -265,14 +265,35 @@ pub(crate) struct RunControl {
     pub blocks_done: AtomicUsize,
     /// Total blocks in the run's grid.
     pub blocks_total: AtomicUsize,
+    /// `RunStats::queue_wait_secs` as `f64` bits once the schedule has
+    /// measured it; `u64::MAX` (a NaN pattern no measurement produces)
+    /// while unset. Lets `Engine::jobs()` surface the admission fairness
+    /// signal live instead of only in the final result.
+    queue_wait_bits: AtomicU64,
 }
 
 impl RunControl {
+    const QUEUE_WAIT_UNSET: u64 = u64::MAX;
+
     pub(crate) fn new() -> RunControl {
         RunControl {
             cancel: Arc::new(AtomicBool::new(false)),
             blocks_done: AtomicUsize::new(0),
             blocks_total: AtomicUsize::new(0),
+            queue_wait_bits: AtomicU64::new(Self::QUEUE_WAIT_UNSET),
+        }
+    }
+
+    /// Publish the run's measured queue wait (seconds).
+    pub(crate) fn set_queue_wait(&self, secs: f64) {
+        self.queue_wait_bits.store(secs.to_bits(), Ordering::Relaxed);
+    }
+
+    /// The measured queue wait, once the schedule has produced one.
+    pub(crate) fn queue_wait(&self) -> Option<f64> {
+        match self.queue_wait_bits.load(Ordering::Relaxed) {
+            Self::QUEUE_WAIT_UNSET => None,
+            bits => Some(f64::from_bits(bits)),
         }
     }
 }
@@ -1113,6 +1134,7 @@ pub(crate) fn run_pp_centered(
         .map(|r| r.started)
         .fold(f64::INFINITY, f64::min)
         .max(0.0);
+    ctx.control.set_queue_wait(stats.queue_wait_secs);
     // overlap: phase-(c) compute that ran while phase-(b) stragglers
     // were still in flight (zero under the barrier scheduler)
     stats.overlap_secs = c_ids

@@ -5,42 +5,42 @@
 //! Implementation of Bayesian Matrix Factorization with Limited
 //! Communication".
 //!
-//! ## The API in three types
+//! ## Two facades
 //!
-//! - [`coordinator::Engine`] — a persistent training engine owning the
-//!   warm worker pool (and, under the `pjrt` feature, each worker's PJRT
-//!   client and compiled-artifact cache). Build it once, run many jobs —
-//!   *concurrently*: all submitted jobs share one priority-ordered ready
-//!   queue ([`coordinator::Priority`], `TrainConfig::max_in_flight`), and
-//!   interleaving never changes any job's posterior.
-//! - [`coordinator::Session`] — a handle to one in-flight run, returned by
-//!   the non-blocking [`coordinator::Engine::submit`]; it streams typed
-//!   [`coordinator::TrainEvent`]s (phase starts, block completions,
-//!   per-sweep RMSE samples) while training executes, exposes lifecycle
-//!   control (`cancel` / `pause` / `resume` / `status`), and
-//!   [`coordinator::Session::wait`] yields the
-//!   [`coordinator::TrainOutcome`]. A cancelled run persists its
-//!   completed block posteriors as a partial (v3) checkpoint;
-//!   `TrainConfig::resume_from` continues from it bitwise-identically.
-//!   Runs are crash-tolerant too: `TrainConfig::{checkpoint_every,
-//!   checkpoint_dir}` write periodic generation files (resume from the
-//!   directory restores the newest valid one), a panicking block fails
-//!   only its own session ([`coordinator::TrainOutcome::Failed`]), and
-//!   the engine's [`coordinator::AdmissionPolicy`] bounds the backlog.
-//! - [`posterior::PosteriorModel`] — the servable artifact every run
-//!   produces: posterior means/precisions + global mean, with `predict`,
-//!   `predict_variance`, `rmse` and `top_n`. Checkpoints persist exactly
-//!   this type, and the baselines convert into it, so serving code never
-//!   cares which method trained the model.
+//! The public surface splits along the model's lifecycle:
 //!
-//! PP and the comparator methods all implement
-//! [`coordinator::Factorizer`], so sweeping methods is a loop over
-//! `fit(&engine, &data)` calls on one warm engine.
+//! - [`train`] — *producing* a model. [`train::Engine`] owns a warm
+//!   worker pool and runs concurrent prioritized jobs; each
+//!   [`train::Session`] streams typed [`train::TrainEvent`]s, supports
+//!   cancel/pause/resume, survives crashes through periodic v3
+//!   checkpoint generations, and yields a [`train::TrainOutcome`]
+//!   carrying the servable model.
+//! - [`serve`] — *consuming* a model under traffic. A
+//!   [`serve::Server`] answers predict/top-n over HTTP, coalescing
+//!   concurrent requests into batched passes
+//!   ([`serve::batcher`]), reading through lock-free
+//!   [`serve::ModelSnapshot`] flips ([`serve::SnapshotCell`]), and
+//!   hot-swapping to the newest servable checkpoint generation the
+//!   moment retraining publishes one.
 //!
-//! ## Quickstart
+//! The hinge between them is [`serve::PosteriorModel`] (re-exported by
+//! both facades): posterior means/precisions + global mean, with
+//! `predict` / `predict_variance` / `top_n` and fallible `try_*`
+//! variants returning a typed [`serve::PredictError`] for untrusted
+//! ids. Checkpoints persist exactly this type; a *complete* v3
+//! generation rebuilds it bitwise
+//! ([`train::checkpoint::model_from_partial`]), which is what makes the
+//! train → serve handoff exact.
+//!
+//! [`prelude`] curates the common names from both facades. The deep
+//! module paths (`bmf_pp::coordinator`, `bmf_pp::posterior`, …) remain
+//! public for existing code, hidden from the docs to keep the surface
+//! navigable.
+//!
+//! ## Quickstart: train, check, hand off
 //!
 //! ```
-//! use bmf_pp::coordinator::{BackendSpec, Engine, TrainConfig, TrainEvent};
+//! use bmf_pp::prelude::*;
 //! use bmf_pp::data::generator::SyntheticDataset;
 //! use bmf_pp::data::split::holdout_split_covered;
 //!
@@ -60,17 +60,21 @@
 //!         blocks_done += 1;
 //!     }
 //! }
-//! // wait() reports how the run ended; nobody cancelled, so unwrap the
-//! // completed result
 //! let result = session.wait().unwrap().into_result().unwrap();
 //! assert_eq!(blocks_done, 4); // 2x2 grid
 //!
-//! // the servable artifact: predictions, uncertainty, rankings
+//! // the servable artifact: predictions, uncertainty, rankings — with
+//! // typed errors on out-of-range ids (the serving side maps them to 4xx)
 //! let model = result.model;
 //! assert!(model.rmse(&test).is_finite());
 //! assert!(model.predict_variance(0, 0) > 0.0);
-//! let top = model.top_n(0, 3);
-//! assert_eq!(top.len(), 3);
+//! assert!(model.try_predict(usize::MAX, 0).is_err());
+//! assert_eq!(model.top_n(0, 3).len(), 3);
+//!
+//! // freeze it into the serving side's unit of exchange; a live HTTP
+//! // server over snapshots is the `bmf_pp::serve` quickstart
+//! let snapshot = ModelSnapshot { model, generation: 0, source: None };
+//! assert!(snapshot.model.try_top_n(0, 1).is_ok());
 //! ```
 //!
 //! ## The three-layer stack
@@ -79,8 +83,8 @@
 //! - **L3 (this crate)**: Posterior-Propagation phase scheduling across an
 //!   I×J block grid, distributed Gibbs workers inside each block, posterior
 //!   propagation/aggregation, datasets, baselines (NOMAD/FPSGD/ALS/CGD/
-//!   SGLD), a cluster simulator for strong-scaling studies, CLI and
-//!   metrics.
+//!   SGLD), a cluster simulator for strong-scaling studies, the serving
+//!   subsystem, CLI and metrics.
 //! - **L2 (python/compile/model.py, build-time)**: the BPMF Gibbs half-sweep
 //!   as a JAX graph, AOT-lowered to HLO text.
 //! - **L1 (python/compile/kernels/, build-time)**: the Gibbs hot-spot as a
@@ -90,22 +94,39 @@
 //! CPU client (`runtime`); python is never on the hot path.
 //!
 //! A narrative tour of the stack — the paper-section → module map, the
-//! block DAG, and the pipelined sweep — lives in `docs/ARCHITECTURE.md`
-//! at the repository root.
+//! block DAG, the pipelined sweep, and the serving dataflow — lives in
+//! `docs/ARCHITECTURE.md` at the repository root.
 
 #![warn(missing_docs)]
 
+pub mod prelude;
+pub mod serve;
+pub mod train;
+
+#[doc(hidden)]
 pub mod baselines;
+#[doc(hidden)]
 pub mod cluster;
+#[doc(hidden)]
 pub mod coordinator;
+#[doc(hidden)]
 pub mod data;
+#[doc(hidden)]
 pub mod gibbs;
+#[doc(hidden)]
 pub mod linalg;
+#[doc(hidden)]
 pub mod metrics;
+#[doc(hidden)]
 pub mod partition;
+#[doc(hidden)]
 pub mod posterior;
+#[doc(hidden)]
 pub mod rng;
 #[cfg(feature = "pjrt")]
+#[doc(hidden)]
 pub mod runtime;
+#[doc(hidden)]
 pub mod testing;
+#[doc(hidden)]
 pub mod util;

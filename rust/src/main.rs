@@ -33,6 +33,14 @@
 //!             (v1 still loads); v0 or newer-than-v2 files are rejected
 //!             with an error naming the found and supported versions (a
 //!             v3 partial training checkpoint is pointed at train --resume)
+//!   serve     long-running HTTP recommendation server over a saved model
+//!             (--load) or a v3 checkpoint directory (--checkpoint-dir):
+//!             GET /predict, /top, /healthz, /stats; POST /shutdown.
+//!             Concurrent requests coalesce into batched passes
+//!             (--batch-max, --batch-wait-us); with --checkpoint-dir the
+//!             server polls every --poll-ms and hot-swaps to the newest
+//!             servable generation without dropping a request (--ridge
+//!             must match the trainer's for a bitwise handoff)
 //!   baseline  run comparators (bmf | nomad | fpsgd | sgld | als | cgd) on
 //!             the same data; --method accepts a comma-separated list and
 //!             all fits share one warm engine
@@ -51,6 +59,7 @@
 //!   bmf-pp train --dataset movielens --resume aborted_v3.json
 //!   bmf-pp jobs --jobs 3 --cancel-demo
 //!   bmf-pp predict --load m.json --file holdout.csv
+//!   bmf-pp serve --checkpoint-dir ckpts --addr 127.0.0.1:7878
 //!   bmf-pp baseline --method nomad,fpsgd,als --dataset movielens
 //!   bmf-pp simulate --dataset yahoo --grid 16x16 --max-nodes 16384
 //!
@@ -74,6 +83,7 @@ use bmf_pp::data::stats::DatasetStats;
 use bmf_pp::metrics::recorder::Recorder;
 use bmf_pp::metrics::throughput::Throughput;
 use bmf_pp::partition::{balance, Grid};
+use bmf_pp::serve::{ModelSource, ServeConfig, Server};
 use bmf_pp::util::cli::Args;
 use bmf_pp::util::timer::{fmt_duration, fmt_hhmm, Stopwatch};
 use std::path::Path;
@@ -436,8 +446,13 @@ fn plan_jobs(args: &Args) -> anyhow::Result<Action> {
             let line = snap
                 .iter()
                 .map(|j| {
+                    // queue wait appears once the schedule has measured it
+                    let qw = match j.queue_wait_secs {
+                        Some(s) => format!(" wait={s:.2}s"),
+                        None => String::new(),
+                    };
                     format!(
-                        "#{} {}:{} {}/{}",
+                        "#{} {}:{} {}/{}{qw}",
                         j.id, j.priority, j.status, j.blocks_done, j.blocks_total
                     )
                 })
@@ -761,6 +776,62 @@ fn plan_simulate(args: &Args) -> anyhow::Result<Action> {
     }))
 }
 
+/// `serve`: long-running HTTP recommendation server with request
+/// batching and checkpoint hot-swap (see `bmf_pp::serve`).
+fn plan_serve(args: &Args) -> anyhow::Result<Action> {
+    let load = args.get("load").map(str::to_string);
+    let ckpt_dir = args.get("checkpoint-dir").map(str::to_string);
+    let addr = args.get_or("addr", "127.0.0.1:7878").to_string();
+    let threads = args.usize_or("threads", 4);
+    let batch_max = args.usize_or("batch-max", 32);
+    let batch_wait_us = args.u64_or("batch-wait-us", 500);
+    let poll_ms = args.u64_or("poll-ms", 200);
+    let ridge = args.f64_or("ridge", 1e-3);
+    Ok(Box::new(move || {
+        let source = match (load, ckpt_dir) {
+            (Some(path), None) => ModelSource::File(path.into()),
+            (None, Some(dir)) => ModelSource::CheckpointDir(dir.into()),
+            _ => anyhow::bail!(
+                "serve needs exactly one model source: --load <model.json> \
+                 or --checkpoint-dir <dir>"
+            ),
+        };
+        let cfg = ServeConfig::default()
+            .with_addr(addr)
+            .with_threads(threads)
+            .with_batching(batch_max, std::time::Duration::from_micros(batch_wait_us))
+            .with_poll(std::time::Duration::from_millis(poll_ms))
+            .with_ridge(ridge);
+        let server = Server::start(cfg, source)?;
+        let s = server.stats();
+        println!(
+            "serving generation {} ({}x{} k={}) on http://{}",
+            s.generation,
+            s.model_rows,
+            s.model_cols,
+            s.model_k,
+            server.addr()
+        );
+        println!(
+            "endpoints: GET /healthz /predict?row=&col=[&variance] \
+             /top?row=[&n=] /stats | POST /shutdown"
+        );
+        let fin = server.join();
+        println!(
+            "served {} requests ({} errors) in {} batches, {} swaps; \
+             p50={:.3}ms p99={:.3}ms qps={:.1}",
+            fin.http_requests,
+            fin.http_errors,
+            fin.batches,
+            fin.swaps,
+            fin.p50_ms,
+            fin.p99_ms,
+            fin.qps
+        );
+        Ok(())
+    }))
+}
+
 fn main() {
     bmf_pp::util::logging::init();
     let args = match Args::from_env() {
@@ -775,6 +846,7 @@ fn main() {
         Some("train") => plan_train(&args),
         Some("jobs") => plan_jobs(&args),
         Some("predict") => plan_predict(&args),
+        Some("serve") => plan_serve(&args),
         Some("baseline") => plan_baseline(&args),
         Some("datasets") => plan_datasets(&args),
         Some("partition") => plan_partition(&args),
@@ -783,7 +855,7 @@ fn main() {
         Some("recommend-grid") => plan_recommend_grid(&args),
         other => {
             eprintln!(
-                "usage: bmf-pp <train|jobs|predict|baseline|datasets|partition|simulate|evaluate|recommend-grid> [--flags]\n\
+                "usage: bmf-pp <train|jobs|predict|serve|baseline|datasets|partition|simulate|evaluate|recommend-grid> [--flags]\n\
                  (got: {other:?}) — see crate docs for flag reference"
             );
             std::process::exit(2);

@@ -9,5 +9,5 @@ pub mod model;
 pub mod moments;
 
 pub use gaussian::RowGaussians;
-pub use model::PosteriorModel;
+pub use model::{PosteriorModel, PredictError};
 pub use moments::RunningMoments;

@@ -14,6 +14,31 @@ use crate::data::sparse::Coo;
 use crate::linalg::Cholesky;
 use crate::metrics::rmse::{rmse_factors, rmse_with};
 
+/// A prediction request referenced an entity the model does not contain.
+///
+/// Ids arrive from untrusted callers (the `serve` HTTP surface, CLI
+/// arguments), so the fallible `try_*` accessors return this instead of
+/// panicking; the server maps it to a 4xx response.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, thiserror::Error)]
+pub enum PredictError {
+    /// The row id is ≥ the number of row entities in the model.
+    #[error("row {row} out of range (model has {rows} rows)")]
+    RowOutOfRange {
+        /// The offending row id.
+        row: usize,
+        /// Number of row entities in the model.
+        rows: usize,
+    },
+    /// The column id is ≥ the number of column entities in the model.
+    #[error("col {col} out of range (model has {cols} cols)")]
+    ColOutOfRange {
+        /// The offending column id.
+        col: usize,
+        /// Number of column entities in the model.
+        cols: usize,
+    },
+}
+
 /// A trained factorization model: posterior marginals over the factor rows
 /// (means + precisions), f32 mean mirrors for fast prediction, and the
 /// global rating mean (training is mean-centred; predictions add it back).
@@ -74,12 +99,33 @@ impl PosteriorModel {
         self.v_post.n
     }
 
+    /// Return an error when either id falls outside the model.
+    fn check_ids(&self, row: usize, col: usize) -> Result<(), PredictError> {
+        if row >= self.rows() {
+            return Err(PredictError::RowOutOfRange { row, rows: self.rows() });
+        }
+        if col >= self.cols() {
+            return Err(PredictError::ColOutOfRange { col, cols: self.cols() });
+        }
+        Ok(())
+    }
+
     /// Posterior-mean prediction for one cell.
+    ///
+    /// Panics when an id is out of range; use
+    /// [`PosteriorModel::try_predict`] for untrusted input.
     pub fn predict(&self, row: usize, col: usize) -> f64 {
-        self.global_mean
+        self.try_predict(row, col).expect("predict: id out of range")
+    }
+
+    /// Fallible [`PosteriorModel::predict`]: out-of-range ids become a
+    /// typed [`PredictError`] instead of a panic.
+    pub fn try_predict(&self, row: usize, col: usize) -> Result<f64, PredictError> {
+        self.check_ids(row, col)?;
+        Ok(self.global_mean
             + (0..self.k)
                 .map(|j| (self.u_mean[row * self.k + j] * self.v_mean[col * self.k + j]) as f64)
-                .sum::<f64>()
+                .sum::<f64>())
     }
 
     /// RMSE of posterior-mean predictions on a held-out set.
@@ -93,7 +139,19 @@ impl PosteriorModel {
 
     /// Predictive variance of one cell from the factor posteriors
     /// (delta-method approximation: uᵀΣ_v u + vᵀΣ_u v + tr(Σ_u Σ_v)).
+    ///
+    /// Panics when an id is out of range; use
+    /// [`PosteriorModel::try_predict_variance`] for untrusted input.
     pub fn predict_variance(&self, row: usize, col: usize) -> f64 {
+        self.try_predict_variance(row, col).expect("predict_variance: id out of range")
+    }
+
+    /// Fallible [`PosteriorModel::predict_variance`]: out-of-range ids
+    /// become a typed [`PredictError`] instead of a panic. A numerically
+    /// unusable posterior precision still yields `Ok(NAN)` — that is a
+    /// model property, not a caller error.
+    pub fn try_predict_variance(&self, row: usize, col: usize) -> Result<f64, PredictError> {
+        self.check_ids(row, col)?;
         let k = self.k;
         let su = self.u_post.row_prec(row);
         let sv = self.v_post.row_prec(col);
@@ -101,7 +159,7 @@ impl PosteriorModel {
         let cv = Cholesky::new(&sv).map(|c| c.inverse());
         let (cu, cv) = match (cu, cv) {
             (Ok(a), Ok(b)) => (a, b),
-            _ => return f64::NAN,
+            _ => return Ok(f64::NAN),
         };
         let u: Vec<f64> = (0..k).map(|j| self.u_mean[row * k + j] as f64).collect();
         let v: Vec<f64> = (0..k).map(|j| self.v_mean[col * k + j] as f64).collect();
@@ -110,30 +168,56 @@ impl PosteriorModel {
         let term1: f64 = u.iter().zip(&vsv).map(|(a, b)| a * b).sum();
         let term2: f64 = v.iter().zip(&usu).map(|(a, b)| a * b).sum();
         let term3: f64 = (0..k).map(|a| (0..k).map(|b| cu[(a, b)] * cv[(b, a)]).sum::<f64>()).sum();
-        term1 + term2 + term3
+        Ok(term1 + term2 + term3)
     }
 
     /// The `n` columns with the highest posterior-mean prediction for
     /// `row`, best first — the serving-side ranking primitive.
+    ///
+    /// Panics when `row` is out of range; use
+    /// [`PosteriorModel::try_top_n`] for untrusted input.
     pub fn top_n(&self, row: usize, n: usize) -> Vec<(usize, f64)> {
-        self.top_n_where(row, n, |_| true)
+        self.try_top_n(row, n).expect("top_n: row out of range")
+    }
+
+    /// Fallible [`PosteriorModel::top_n`]: an out-of-range row becomes a
+    /// typed [`PredictError`] instead of a panic.
+    pub fn try_top_n(&self, row: usize, n: usize) -> Result<Vec<(usize, f64)>, PredictError> {
+        self.try_top_n_where(row, n, |_| true)
     }
 
     /// [`PosteriorModel::top_n`] restricted to columns where `keep` holds
     /// (e.g. skip already-rated items).
+    ///
+    /// Panics when `row` is out of range; use
+    /// [`PosteriorModel::try_top_n_where`] for untrusted input.
     pub fn top_n_where(
         &self,
         row: usize,
         n: usize,
         keep: impl Fn(usize) -> bool,
     ) -> Vec<(usize, f64)> {
+        self.try_top_n_where(row, n, keep).expect("top_n_where: row out of range")
+    }
+
+    /// Fallible [`PosteriorModel::top_n_where`]: an out-of-range row
+    /// becomes a typed [`PredictError`] instead of a panic.
+    pub fn try_top_n_where(
+        &self,
+        row: usize,
+        n: usize,
+        keep: impl Fn(usize) -> bool,
+    ) -> Result<Vec<(usize, f64)>, PredictError> {
+        if row >= self.rows() {
+            return Err(PredictError::RowOutOfRange { row, rows: self.rows() });
+        }
         let mut scored: Vec<(usize, f64)> = (0..self.cols())
             .filter(|&c| keep(c))
             .map(|c| (c, self.predict(row, c)))
             .collect();
         scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
         scored.truncate(n);
-        scored
+        Ok(scored)
     }
 }
 
@@ -186,6 +270,45 @@ mod tests {
         assert_eq!(top.len(), 2);
         assert!(top.iter().all(|&(c, _)| c != 1));
         assert_eq!(top[0].0, 0); // next best after excluded col 1
+    }
+
+    #[test]
+    fn try_predict_rejects_out_of_range_ids() {
+        let m = point_model();
+        assert_eq!(
+            m.try_predict(2, 0),
+            Err(PredictError::RowOutOfRange { row: 2, rows: 2 })
+        );
+        assert_eq!(
+            m.try_predict(0, 3),
+            Err(PredictError::ColOutOfRange { col: 3, cols: 3 })
+        );
+        assert_eq!(
+            m.try_predict_variance(7, 0),
+            Err(PredictError::RowOutOfRange { row: 7, rows: 2 })
+        );
+        assert_eq!(
+            m.try_top_n(9, 1),
+            Err(PredictError::RowOutOfRange { row: 9, rows: 2 })
+        );
+        assert!(m.try_top_n_where(9, 1, |_| true).is_err());
+    }
+
+    #[test]
+    fn try_variants_agree_with_infallible_ones() {
+        let m = point_model();
+        assert_eq!(m.try_predict(0, 1).unwrap(), m.predict(0, 1));
+        assert_eq!(m.try_predict_variance(1, 2).unwrap(), m.predict_variance(1, 2));
+        assert_eq!(m.try_top_n(0, 2).unwrap(), m.top_n(0, 2));
+    }
+
+    #[test]
+    fn predict_error_messages_name_the_bounds() {
+        let err = PredictError::RowOutOfRange { row: 5, rows: 2 };
+        assert!(err.to_string().contains("row 5"));
+        assert!(err.to_string().contains("2 rows"));
+        let err = PredictError::ColOutOfRange { col: 4, cols: 3 };
+        assert!(err.to_string().contains("col 4"));
     }
 
     #[test]

@@ -1,0 +1,20 @@
+//! Curated one-line import for the common cases on both sides of the
+//! train/serve split:
+//!
+//! ```
+//! use bmf_pp::prelude::*;
+//! let _cfg = TrainConfig::new(8);
+//! let _scfg = ServeConfig::default();
+//! ```
+//!
+//! Training: [`Engine`], [`Session`], [`TrainConfig`], [`TrainEvent`],
+//! [`TrainOutcome`], [`BackendSpec`]. Serving: [`PosteriorModel`],
+//! [`PredictError`], [`ModelSnapshot`], [`ModelSource`], [`ServeConfig`],
+//! [`Server`]. Anything rarer comes from [`crate::train`] /
+//! [`crate::serve`] explicitly.
+
+pub use crate::coordinator::{
+    BackendSpec, Engine, Session, TrainConfig, TrainEvent, TrainOutcome,
+};
+pub use crate::posterior::{PosteriorModel, PredictError};
+pub use crate::serve::{ModelSnapshot, ModelSource, ServeConfig, Server};

@@ -1,0 +1,317 @@
+//! Request coalescing: many concurrent HTTP requests, one pass over the
+//! factor matrices.
+//!
+//! The paper's central trade is amortization — per-block communication
+//! cost spread over many Gibbs sweeps. Serving makes the same trade at
+//! request granularity: instead of every HTTP worker resolving its own
+//! snapshot and walking the factors alone, requests queue into a
+//! [`RequestBatcher`] and a single batch thread drains up to
+//! `max_batch` of them at a time (waiting at most `max_wait` for
+//! stragglers to coalesce), resolves the model snapshot *once*, and
+//! answers the whole batch against it. Besides amortizing the snapshot
+//! resolution, this gives a hard atomicity guarantee for free: all
+//! requests in one batch are answered by one model — a checkpoint
+//! hot-swap lands between batches, never inside one.
+
+use super::snapshot::SnapshotReader;
+use crate::posterior::{PosteriorModel, PredictError};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One prediction-side request, as parsed off the HTTP surface.
+#[derive(Debug, Clone)]
+pub enum Request {
+    /// Posterior-mean prediction for one cell, optionally with the
+    /// delta-method predictive variance.
+    Predict {
+        /// Row entity id.
+        row: usize,
+        /// Column entity id.
+        col: usize,
+        /// Also compute the predictive variance.
+        variance: bool,
+    },
+    /// The `n` best columns for a row, best first.
+    TopN {
+        /// Row entity id.
+        row: usize,
+        /// How many columns to return.
+        n: usize,
+    },
+}
+
+/// The answer to one [`Request`], produced against a single snapshot.
+#[derive(Debug, Clone)]
+pub enum Response {
+    /// Answer to [`Request::Predict`].
+    Predict {
+        /// Posterior-mean prediction.
+        value: f64,
+        /// Predictive variance, when requested.
+        variance: Option<f64>,
+    },
+    /// Answer to [`Request::TopN`].
+    TopN {
+        /// `(column, score)` pairs, best first.
+        items: Vec<(usize, f64)>,
+    },
+}
+
+/// What a submitter gets back: the response plus the generation of the
+/// snapshot that served it, or the typed out-of-range error.
+pub type Reply = Result<(Response, u64), PredictError>;
+
+/// Counters describing how well coalescing is working.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BatcherStats {
+    /// Batches executed.
+    pub batches: u64,
+    /// Requests answered across all batches.
+    pub requests: u64,
+    /// Largest batch observed.
+    pub max_batch: u64,
+}
+
+struct Queue {
+    items: VecDeque<(Request, mpsc::Sender<Reply>)>,
+    closed: bool,
+}
+
+/// The coalescing queue between HTTP workers and the batch thread.
+///
+/// Workers call [`RequestBatcher::submit`] (blocking until their reply
+/// arrives); the batch thread loops in [`RequestBatcher::run`]. Batch
+/// boundaries are controlled by `max_batch` (drain at most this many per
+/// pass) and `max_wait` (how long the first request in a batch waits for
+/// company before the batch goes out regardless).
+pub struct RequestBatcher {
+    q: Mutex<Queue>,
+    cv: Condvar,
+    max_batch: usize,
+    max_wait: Duration,
+    batches: AtomicU64,
+    requests: AtomicU64,
+    max_batch_seen: AtomicU64,
+}
+
+impl RequestBatcher {
+    /// Build a batcher; `max_batch` is clamped to at least 1.
+    pub fn new(max_batch: usize, max_wait: Duration) -> RequestBatcher {
+        RequestBatcher {
+            q: Mutex::new(Queue { items: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+            max_batch: max_batch.max(1),
+            max_wait,
+            batches: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            max_batch_seen: AtomicU64::new(0),
+        }
+    }
+
+    /// Enqueue a request and block until its reply arrives. `None` when
+    /// the batcher has shut down (submitted too late, or the batch
+    /// thread is gone) — the server maps that to a 503.
+    pub fn submit(&self, req: Request) -> Option<Reply> {
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut q = self.q.lock().unwrap();
+            if q.closed {
+                return None;
+            }
+            q.items.push_back((req, tx));
+        }
+        self.cv.notify_all();
+        rx.recv().ok()
+    }
+
+    /// Stop accepting new requests and wake the batch thread; requests
+    /// already queued are still answered before [`RequestBatcher::run`]
+    /// returns.
+    pub fn close(&self) {
+        self.q.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Snapshot the coalescing counters.
+    pub fn stats(&self) -> BatcherStats {
+        BatcherStats {
+            batches: self.batches.load(Ordering::Relaxed),
+            requests: self.requests.load(Ordering::Relaxed),
+            max_batch: self.max_batch_seen.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Block until at least one request is queued (or the batcher is
+    /// closed and drained), linger up to `max_wait` for the batch to
+    /// fill, then drain at most `max_batch` requests.
+    fn next_batch(&self) -> Option<Vec<(Request, mpsc::Sender<Reply>)>> {
+        let mut q = self.q.lock().unwrap();
+        loop {
+            if !q.items.is_empty() {
+                break;
+            }
+            if q.closed {
+                return None;
+            }
+            q = self.cv.wait(q).unwrap();
+        }
+        let deadline = Instant::now() + self.max_wait;
+        while q.items.len() < self.max_batch && !q.closed {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, timeout) = self.cv.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        let take = q.items.len().min(self.max_batch);
+        Some(q.items.drain(..take).collect())
+    }
+
+    /// The batch thread's main loop: drain batches and answer each
+    /// against one snapshot until closed and drained. `reader` is this
+    /// thread's cached view of the snapshot cell, so a hot-swap is picked
+    /// up at the next batch boundary.
+    pub fn run(&self, mut reader: SnapshotReader) {
+        while let Some(batch) = self.next_batch() {
+            let snap = reader.current().clone();
+            self.batches.fetch_add(1, Ordering::Relaxed);
+            self.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
+            self.max_batch_seen.fetch_max(batch.len() as u64, Ordering::Relaxed);
+            for (req, tx) in batch {
+                let reply = answer(&snap.model, &req).map(|r| (r, snap.generation));
+                // a submitter that gave up (disconnected) is not an error
+                let _ = tx.send(reply);
+            }
+        }
+    }
+}
+
+/// Answer one request against one model.
+fn answer(model: &PosteriorModel, req: &Request) -> Result<Response, PredictError> {
+    match *req {
+        Request::Predict { row, col, variance } => {
+            let value = model.try_predict(row, col)?;
+            let variance =
+                if variance { Some(model.try_predict_variance(row, col)?) } else { None };
+            Ok(Response::Predict { value, variance })
+        }
+        Request::TopN { row, n } => {
+            Ok(Response::TopN { items: model.try_top_n(row, n)? })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::snapshot::{ModelSnapshot, SnapshotCell};
+    use std::sync::Arc;
+
+    fn cell() -> Arc<SnapshotCell> {
+        let u = vec![1.0f32, 0.0, 0.0, 1.0];
+        let v = vec![1.0f32, 2.0, 3.0, -1.0, 0.5, 0.5];
+        Arc::new(SnapshotCell::new(ModelSnapshot {
+            model: PosteriorModel::from_factors(2, &u, &v, 1.5, 1e6),
+            generation: 7,
+            source: None,
+        }))
+    }
+
+    #[test]
+    fn coalesces_concurrent_requests_into_few_batches() {
+        let cell = cell();
+        let batcher = Arc::new(RequestBatcher::new(64, Duration::from_millis(20)));
+        let runner = {
+            let b = batcher.clone();
+            let reader = cell.reader();
+            std::thread::spawn(move || b.run(reader))
+        };
+        let mut handles = Vec::new();
+        for i in 0..16 {
+            let b = batcher.clone();
+            handles.push(std::thread::spawn(move || {
+                b.submit(Request::Predict { row: i % 2, col: i % 3, variance: false })
+                    .expect("batcher alive")
+            }));
+        }
+        for h in handles {
+            let (resp, generation) = h.join().unwrap().expect("in-range ids");
+            assert_eq!(generation, 7);
+            match resp {
+                Response::Predict { value, variance } => {
+                    assert!(value.is_finite());
+                    assert!(variance.is_none());
+                }
+                other => panic!("unexpected response {other:?}"),
+            }
+        }
+        batcher.close();
+        runner.join().unwrap();
+        let stats = batcher.stats();
+        assert_eq!(stats.requests, 16);
+        assert!(stats.batches <= 16, "batches={}", stats.batches);
+        assert!(stats.max_batch >= 1);
+    }
+
+    #[test]
+    fn out_of_range_ids_return_typed_errors_not_panics() {
+        let cell = cell();
+        let batcher = Arc::new(RequestBatcher::new(4, Duration::from_millis(1)));
+        let runner = {
+            let b = batcher.clone();
+            let reader = cell.reader();
+            std::thread::spawn(move || b.run(reader))
+        };
+        let err = batcher
+            .submit(Request::Predict { row: 99, col: 0, variance: false })
+            .expect("batcher alive")
+            .unwrap_err();
+        assert_eq!(err, PredictError::RowOutOfRange { row: 99, rows: 2 });
+        let err = batcher
+            .submit(Request::TopN { row: 5, n: 3 })
+            .expect("batcher alive")
+            .unwrap_err();
+        assert_eq!(err, PredictError::RowOutOfRange { row: 5, rows: 2 });
+        batcher.close();
+        runner.join().unwrap();
+    }
+
+    #[test]
+    fn close_rejects_new_but_answers_queued() {
+        let batcher = Arc::new(RequestBatcher::new(8, Duration::from_millis(1)));
+        batcher.close();
+        assert!(batcher
+            .submit(Request::Predict { row: 0, col: 0, variance: false })
+            .is_none());
+        // run() on a closed, empty batcher returns immediately
+        batcher.run(cell().reader());
+    }
+
+    #[test]
+    fn top_n_flows_through_the_batch_path() {
+        let cell = cell();
+        let batcher = Arc::new(RequestBatcher::new(8, Duration::from_millis(1)));
+        let runner = {
+            let b = batcher.clone();
+            let reader = cell.reader();
+            std::thread::spawn(move || b.run(reader))
+        };
+        let (resp, _) =
+            batcher.submit(Request::TopN { row: 0, n: 2 }).expect("alive").expect("in range");
+        match resp {
+            Response::TopN { items } => {
+                assert_eq!(items.len(), 2);
+                assert_eq!(items[0].0, 1); // col 1 scores highest for row 0
+            }
+            other => panic!("unexpected response {other:?}"),
+        }
+        batcher.close();
+        runner.join().unwrap();
+    }
+}

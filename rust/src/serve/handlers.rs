@@ -1,0 +1,273 @@
+//! HTTP/1.1 parsing, routing, and JSON rendering for the serve
+//! endpoints (hand-rolled on `std::net` — the crate set is frozen, so no
+//! hyper/axum).
+//!
+//! One connection carries one request: the handler reads the request
+//! head, routes it, writes a `Connection: close` response, and hangs up.
+//! That keeps the worker pool trivially fair and is plenty for the
+//! batcher to do its coalescing — concurrency comes from many
+//! connections, not pipelining.
+//!
+//! | Endpoint          | Query                          | Answer |
+//! |-------------------|--------------------------------|--------|
+//! | `GET /predict`    | `row`, `col`, [`variance`]     | posterior-mean prediction (+ variance) |
+//! | `GET /top`        | `row`, [`n`]                   | best-first `(col, score)` ranking |
+//! | `GET /stats`      | —                              | generation, swap counters, latency, QPS |
+//! | `GET /healthz`    | —                              | liveness |
+//! | `POST /shutdown`  | —                              | clean stop |
+//!
+//! Malformed queries are 400s; in-range parse but out-of-range ids are
+//! 404s carrying the typed [`PredictError`](crate::posterior::PredictError)
+//! message; a request arriving during shutdown is a 503.
+
+use super::batcher::{Request, Response};
+use super::server::ServerShared;
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+const HEAD_CAP: usize = 8 * 1024;
+
+/// Read and answer one request on `stream`, then close it.
+pub(crate) fn handle_connection(mut stream: TcpStream, shared: &ServerShared) {
+    stream.set_read_timeout(Some(Duration::from_secs(5))).ok();
+    stream.set_write_timeout(Some(Duration::from_secs(5))).ok();
+    let Some((method, path, query)) = read_request_head(&mut stream) else {
+        write_response(&mut stream, 400, &err_json("malformed HTTP request"));
+        return;
+    };
+    shared.http_requests.fetch_add(1, Ordering::Relaxed);
+    let timed = matches!(path.as_str(), "/predict" | "/top");
+    let started = Instant::now();
+    let (status, body) = route(&method, &path, &query, shared);
+    if timed {
+        shared.latency.record(started.elapsed().as_secs_f64() * 1e3);
+    }
+    if status >= 400 {
+        shared.http_errors.fetch_add(1, Ordering::Relaxed);
+    }
+    write_response(&mut stream, status, &body);
+}
+
+/// Read the request head and split the request line into
+/// `(method, path, query)`. `None` on anything that isn't HTTP.
+fn read_request_head(stream: &mut TcpStream) -> Option<(String, String, BTreeMap<String, String>)> {
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    while !contains_head_end(&buf) && buf.len() < HEAD_CAP {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(_) => return None,
+        }
+    }
+    let head = std::str::from_utf8(&buf).ok()?;
+    let line = head.lines().next()?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next()?.to_string();
+    let target = parts.next()?;
+    let version = parts.next()?;
+    if !version.starts_with("HTTP/") {
+        return None;
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), parse_query(q)),
+        None => (target.to_string(), BTreeMap::new()),
+    };
+    Some((method, path, query))
+}
+
+fn contains_head_end(buf: &[u8]) -> bool {
+    buf.windows(4).any(|w| w == b"\r\n\r\n")
+}
+
+fn parse_query(q: &str) -> BTreeMap<String, String> {
+    q.split('&')
+        .filter(|kv| !kv.is_empty())
+        .map(|kv| match kv.split_once('=') {
+            Some((k, v)) => (k.to_string(), v.to_string()),
+            None => (kv.to_string(), "true".to_string()),
+        })
+        .collect()
+}
+
+fn err_json(msg: &str) -> Json {
+    Json::obj(vec![("error", msg.into())])
+}
+
+/// A required numeric query parameter, with a 400-worthy message.
+fn q_usize(query: &BTreeMap<String, String>, key: &str) -> Result<usize, String> {
+    let raw = query.get(key).ok_or_else(|| format!("missing query parameter '{key}'"))?;
+    raw.parse().map_err(|_| format!("query parameter '{key}' is not a non-negative integer"))
+}
+
+fn route(
+    method: &str,
+    path: &str,
+    query: &BTreeMap<String, String>,
+    shared: &ServerShared,
+) -> (u16, Json) {
+    match (method, path) {
+        ("GET", "/healthz") => (200, Json::obj(vec![("ok", true.into())])),
+        ("GET", "/predict") => predict(query, shared),
+        ("GET", "/top") => top(query, shared),
+        ("GET", "/stats") => (200, stats_json(shared)),
+        ("POST", "/shutdown") => {
+            shared.shutdown.store(true, Ordering::Relaxed);
+            shared.batcher.close();
+            (200, Json::obj(vec![("ok", true.into()), ("stopping", true.into())]))
+        }
+        ("GET", _) | ("POST", _) => (404, err_json("no such endpoint")),
+        _ => (405, err_json("method not allowed")),
+    }
+}
+
+fn predict(query: &BTreeMap<String, String>, shared: &ServerShared) -> (u16, Json) {
+    let (row, col) = match (q_usize(query, "row"), q_usize(query, "col")) {
+        (Ok(r), Ok(c)) => (r, c),
+        (Err(e), _) | (_, Err(e)) => return (400, err_json(&e)),
+    };
+    let variance = query.get("variance").map(|v| v != "false").unwrap_or(false);
+    match shared.batcher.submit(Request::Predict { row, col, variance }) {
+        None => (503, err_json("server is shutting down")),
+        Some(Err(e)) => (404, err_json(&e.to_string())),
+        Some(Ok((Response::Predict { value, variance }, generation))) => {
+            let mut fields = vec![
+                ("row", row.into()),
+                ("col", col.into()),
+                ("value", value.into()),
+                ("generation", Json::Str(generation.to_string())),
+            ];
+            if let Some(var) = variance {
+                fields.push(("variance", var.into()));
+            }
+            (200, Json::obj(fields))
+        }
+        Some(Ok(_)) => (500, err_json("batcher returned a mismatched response")),
+    }
+}
+
+fn top(query: &BTreeMap<String, String>, shared: &ServerShared) -> (u16, Json) {
+    let row = match q_usize(query, "row") {
+        Ok(r) => r,
+        Err(e) => return (400, err_json(&e)),
+    };
+    let n = match query.get("n") {
+        None => 10,
+        Some(raw) => match raw.parse() {
+            Ok(n) => n,
+            Err(_) => return (400, err_json("query parameter 'n' is not a non-negative integer")),
+        },
+    };
+    match shared.batcher.submit(Request::TopN { row, n }) {
+        None => (503, err_json("server is shutting down")),
+        Some(Err(e)) => (404, err_json(&e.to_string())),
+        Some(Ok((Response::TopN { items }, generation))) => {
+            let items = Json::Arr(
+                items
+                    .into_iter()
+                    .map(|(col, score)| {
+                        Json::obj(vec![("col", col.into()), ("score", score.into())])
+                    })
+                    .collect(),
+            );
+            (
+                200,
+                Json::obj(vec![
+                    ("row", row.into()),
+                    ("items", items),
+                    ("generation", Json::Str(generation.to_string())),
+                ]),
+            )
+        }
+        Some(Ok(_)) => (500, err_json("batcher returned a mismatched response")),
+    }
+}
+
+fn stats_json(shared: &ServerShared) -> Json {
+    let s = shared.stats();
+    Json::obj(vec![
+        ("generation", Json::Str(s.generation.to_string())),
+        (
+            "model",
+            Json::obj(vec![
+                ("rows", s.model_rows.into()),
+                ("cols", s.model_cols.into()),
+                ("k", s.model_k.into()),
+            ]),
+        ),
+        ("swaps", Json::Str(s.swaps.to_string())),
+        ("swaps_skipped", Json::Str(s.swaps_skipped.to_string())),
+        ("http_requests", Json::Str(s.http_requests.to_string())),
+        ("http_errors", Json::Str(s.http_errors.to_string())),
+        (
+            "batcher",
+            Json::obj(vec![
+                ("batches", Json::Str(s.batches.to_string())),
+                ("requests", Json::Str(s.batched_requests.to_string())),
+                ("max_batch", Json::Str(s.max_batch.to_string())),
+            ]),
+        ),
+        (
+            "latency",
+            Json::obj(vec![
+                ("p50_ms", s.p50_ms.into()),
+                ("p99_ms", s.p99_ms.into()),
+                ("qps", s.qps.into()),
+            ]),
+        ),
+        ("uptime_secs", s.uptime_secs.into()),
+    ])
+}
+
+fn write_response(stream: &mut TcpStream, status: u16, body: &Json) {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        503 => "Service Unavailable",
+        _ => "Internal Server Error",
+    };
+    let body = json::to_string(body);
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\ncontent-type: application/json\r\n\
+         content-length: {}\r\nconnection: close\r\n\r\n",
+        body.len()
+    );
+    // a client that hung up mid-write is its problem, not the server's
+    let _ = stream.write_all(head.as_bytes());
+    let _ = stream.write_all(body.as_bytes());
+    let _ = stream.flush();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn query_parsing_handles_flags_and_pairs() {
+        let q = parse_query("row=3&col=7&variance");
+        assert_eq!(q.get("row").map(String::as_str), Some("3"));
+        assert_eq!(q.get("col").map(String::as_str), Some("7"));
+        assert_eq!(q.get("variance").map(String::as_str), Some("true"));
+        assert!(parse_query("").is_empty());
+    }
+
+    #[test]
+    fn q_usize_reports_missing_and_malformed() {
+        let q = parse_query("row=3&col=x");
+        assert_eq!(q_usize(&q, "row"), Ok(3));
+        assert!(q_usize(&q, "col").unwrap_err().contains("col"));
+        assert!(q_usize(&q, "n").unwrap_err().contains("missing"));
+    }
+
+    #[test]
+    fn head_end_detection() {
+        assert!(contains_head_end(b"GET / HTTP/1.1\r\n\r\n"));
+        assert!(!contains_head_end(b"GET / HTTP/1.1\r\n"));
+    }
+}

@@ -1,0 +1,55 @@
+//! Serving: a long-running HTTP/JSON recommendation server over a
+//! trained [`PosteriorModel`] — the `bmf_pp::serve` facade.
+//!
+//! Training produces a model; this module keeps it answering traffic.
+//! Three mechanisms, one per submodule:
+//!
+//! - [`batcher`] — concurrent predict/top-n requests coalesce into one
+//!   batched pass over the factor matrices (configurable max batch size
+//!   and max wait), amortizing per-request overhead the way the trainer
+//!   amortizes per-block communication.
+//! - [`snapshot`] — requests read an immutable [`ModelSnapshot`] through
+//!   an atomic pointer flip ([`SnapshotCell`]); the read path takes no
+//!   lock at steady state and a swap can never tear a model.
+//! - [`server`] — lifecycle: the TCP accept loop, HTTP workers
+//!   ([`handlers`]), and the hot-swap watcher that polls a checkpoint
+//!   directory and flips to the newest *servable* generation the moment
+//!   training writes one, with swap counters and the serving generation
+//!   exposed on `/stats`.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use bmf_pp::prelude::*;
+//!
+//! // any trained model serves; a tiny point model keeps the test fast
+//! let model = PosteriorModel::from_factors(2, &[1.0, 0.0], &[0.5, 0.5], 3.0, 1e6);
+//! let path = std::env::temp_dir()
+//!     .join(format!("bmfpp_serve_doc_{}.json", std::process::id()));
+//! bmf_pp::train::checkpoint::save(&model, &path).unwrap();
+//!
+//! let server = Server::start(
+//!     ServeConfig::default().with_addr("127.0.0.1:0").with_threads(2),
+//!     ModelSource::File(path.clone()),
+//! )
+//! .unwrap();
+//! assert_eq!(server.stats().generation, 0); // model files carry no generation
+//! server.stop();
+//! std::fs::remove_file(path).ok();
+//! ```
+//!
+//! To serve a *training pipeline* rather than a frozen file, point
+//! [`ModelSource::CheckpointDir`] at the directory a run writes with
+//! `TrainConfig::with_checkpoint_dir` — the server starts on the newest
+//! complete generation and hot-swaps as retraining publishes new ones.
+
+pub mod batcher;
+pub mod handlers;
+pub mod server;
+pub mod snapshot;
+
+pub use batcher::{BatcherStats, Request, Response};
+pub use server::{ModelSource, ServeConfig, Server, ServerStats};
+pub use snapshot::{scan_servable, ModelSnapshot, ServableScan, SnapshotCell, SnapshotReader};
+
+pub use crate::posterior::{PosteriorModel, PredictError};

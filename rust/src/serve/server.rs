@@ -1,0 +1,418 @@
+//! The long-running HTTP server: lifecycle, worker pool, and the
+//! checkpoint hot-swap watcher.
+//!
+//! Wiring (all std, no async runtime):
+//!
+//! ```text
+//!   accept thread ──streams──▶ worker threads ──requests──▶ batcher
+//!        │                          │                          │
+//!        │                     handlers.rs                batch thread
+//!        │                          │                          │
+//!        ▼                          ▼                          ▼
+//!   TcpListener              SnapshotReader ◀──── flip ──  SnapshotCell
+//!                                                              ▲
+//!   watcher thread ── poll checkpoint dir ── scan_servable ────┘
+//! ```
+//!
+//! The accept thread hands connections to a fixed pool of HTTP workers
+//! over a channel; workers parse and route (see
+//! [`handlers`](super::handlers)), prediction traffic funnels through the
+//! [`RequestBatcher`], and the watcher thread polls the checkpoint
+//! directory, flipping the [`SnapshotCell`] whenever a newer *servable*
+//! generation appears. Everything shuts down cleanly on `POST /shutdown`
+//! or [`Server::shutdown`]: the listener stops accepting, queued
+//! requests drain, threads join.
+
+use super::batcher::RequestBatcher;
+use super::snapshot::{scan_servable, ModelSnapshot, SnapshotCell};
+use std::net::{SocketAddr, TcpListener};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Where the served model comes from.
+#[derive(Debug, Clone)]
+pub enum ModelSource {
+    /// A v1/v2 model checkpoint file (`bmf-pp train --save`). No
+    /// hot-swap: the file is loaded once.
+    File(PathBuf),
+    /// A directory of v3 generation files (`train --checkpoint-dir`).
+    /// The newest servable generation is loaded at startup and the
+    /// watcher thread hot-swaps to newer ones as training writes them.
+    CheckpointDir(PathBuf),
+}
+
+/// Serving knobs, builder-style like `TrainConfig`.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Listen address; port 0 asks the OS for a free port (tests).
+    pub addr: String,
+    /// HTTP worker threads.
+    pub threads: usize,
+    /// Most requests coalesced into one batch.
+    pub batch_max: usize,
+    /// Longest a batch's first request waits for company.
+    pub batch_wait: Duration,
+    /// Checkpoint-directory poll interval for hot-swap.
+    pub poll: Duration,
+    /// Ridge used when rebuilding a model from a v3 generation; must
+    /// match the trainer's `TrainConfig::ridge` for bitwise handoff.
+    pub ridge: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:7878".to_string(),
+            threads: 4,
+            batch_max: 32,
+            batch_wait: Duration::from_micros(500),
+            poll: Duration::from_millis(200),
+            ridge: 1e-3,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Set the listen address.
+    pub fn with_addr(mut self, addr: impl Into<String>) -> Self {
+        self.addr = addr.into();
+        self
+    }
+
+    /// Set the HTTP worker thread count (clamped to ≥ 1).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Set the batcher's size and linger bounds.
+    pub fn with_batching(mut self, batch_max: usize, batch_wait: Duration) -> Self {
+        self.batch_max = batch_max.max(1);
+        self.batch_wait = batch_wait;
+        self
+    }
+
+    /// Set the hot-swap poll interval.
+    pub fn with_poll(mut self, poll: Duration) -> Self {
+        self.poll = poll;
+        self
+    }
+
+    /// Set the aggregation ridge used to rebuild models from generations.
+    pub fn with_ridge(mut self, ridge: f64) -> Self {
+        self.ridge = ridge;
+        self
+    }
+}
+
+/// Fixed-capacity reservoir of recent request latencies (milliseconds).
+pub(crate) struct LatencyRecorder {
+    ring: Mutex<LatencyRing>,
+    count: AtomicU64,
+}
+
+struct LatencyRing {
+    buf: Vec<f64>,
+    next: usize,
+}
+
+impl LatencyRecorder {
+    const CAP: usize = 4096;
+
+    fn new() -> LatencyRecorder {
+        LatencyRecorder {
+            ring: Mutex::new(LatencyRing { buf: Vec::with_capacity(Self::CAP), next: 0 }),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    pub(crate) fn record(&self, ms: f64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let mut ring = self.ring.lock().unwrap();
+        if ring.buf.len() < Self::CAP {
+            ring.buf.push(ms);
+        } else {
+            let i = ring.next;
+            ring.buf[i] = ms;
+            ring.next = (i + 1) % Self::CAP;
+        }
+    }
+
+    /// Total recorded count and the (p50, p99) of the retained window.
+    pub(crate) fn summary(&self) -> (u64, f64, f64) {
+        let count = self.count.load(Ordering::Relaxed);
+        let mut sorted = self.ring.lock().unwrap().buf.clone();
+        if sorted.is_empty() {
+            return (count, 0.0, 0.0);
+        }
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let pick = |q: f64| {
+            let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+            sorted[idx.min(sorted.len() - 1)]
+        };
+        (count, pick(0.50), pick(0.99))
+    }
+}
+
+/// Everything the request path touches, shared across all threads.
+pub(crate) struct ServerShared {
+    pub(crate) cell: Arc<SnapshotCell>,
+    pub(crate) batcher: Arc<RequestBatcher>,
+    pub(crate) shutdown: AtomicBool,
+    pub(crate) started: Instant,
+    pub(crate) swaps: AtomicU64,
+    pub(crate) swaps_skipped: AtomicU64,
+    pub(crate) http_requests: AtomicU64,
+    pub(crate) http_errors: AtomicU64,
+    pub(crate) latency: LatencyRecorder,
+}
+
+impl ServerShared {
+    /// Snapshot every observable counter (also rendered by `/stats`).
+    pub(crate) fn stats(&self) -> ServerStats {
+        let snap = self.cell.load();
+        let b = self.batcher.stats();
+        let (latency_count, p50_ms, p99_ms) = self.latency.summary();
+        let uptime_secs = self.started.elapsed().as_secs_f64();
+        ServerStats {
+            generation: snap.generation,
+            model_rows: snap.model.rows(),
+            model_cols: snap.model.cols(),
+            model_k: snap.model.k,
+            swaps: self.swaps.load(Ordering::Relaxed),
+            swaps_skipped: self.swaps_skipped.load(Ordering::Relaxed),
+            http_requests: self.http_requests.load(Ordering::Relaxed),
+            http_errors: self.http_errors.load(Ordering::Relaxed),
+            batches: b.batches,
+            batched_requests: b.requests,
+            max_batch: b.max_batch,
+            p50_ms,
+            p99_ms,
+            qps: if uptime_secs > 0.0 { latency_count as f64 / uptime_secs } else { 0.0 },
+            uptime_secs,
+        }
+    }
+}
+
+/// Point-in-time observability snapshot; `/stats` is this struct as JSON.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerStats {
+    /// Checkpoint generation of the snapshot currently serving.
+    pub generation: u64,
+    /// Row entities in the serving model.
+    pub model_rows: usize,
+    /// Column entities in the serving model.
+    pub model_cols: usize,
+    /// Latent dimension of the serving model.
+    pub model_k: usize,
+    /// Successful hot-swaps since startup.
+    pub swaps: u64,
+    /// Candidate generations skipped as unservable (corrupt/incomplete).
+    pub swaps_skipped: u64,
+    /// HTTP requests handled (all endpoints).
+    pub http_requests: u64,
+    /// HTTP requests answered with a 4xx/5xx status.
+    pub http_errors: u64,
+    /// Batches the coalescer executed.
+    pub batches: u64,
+    /// Requests answered through the batcher.
+    pub batched_requests: u64,
+    /// Largest coalesced batch observed.
+    pub max_batch: u64,
+    /// Median prediction latency over the retained window, milliseconds.
+    pub p50_ms: f64,
+    /// 99th-percentile prediction latency, milliseconds.
+    pub p99_ms: f64,
+    /// Prediction requests per second since startup.
+    pub qps: f64,
+    /// Seconds since the server started.
+    pub uptime_secs: f64,
+}
+
+/// A running `bmf-pp serve` instance. Dropping the handle does *not*
+/// stop the server; call [`Server::shutdown`] (or `POST /shutdown`) and
+/// then [`Server::join`].
+pub struct Server {
+    addr: SocketAddr,
+    shared: Arc<ServerShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Load the initial snapshot from `source`, bind `cfg.addr`, and
+    /// spawn the accept loop, HTTP workers, batch thread, and (for
+    /// checkpoint-directory sources) the hot-swap watcher.
+    pub fn start(cfg: ServeConfig, source: ModelSource) -> anyhow::Result<Server> {
+        let (initial, watch_dir) = match &source {
+            ModelSource::File(path) => (
+                ModelSnapshot::from_model_file(path)
+                    .map_err(|e| anyhow::anyhow!("loading model {}: {e}", path.display()))?,
+                None,
+            ),
+            ModelSource::CheckpointDir(dir) => {
+                let scan = scan_servable(dir, None, cfg.ridge)
+                    .map_err(|e| anyhow::anyhow!("scanning {}: {e}", dir.display()))?;
+                let snap = scan.snapshot.ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "no servable checkpoint generation in {} (need a complete \
+                         v3 generation — run train with --checkpoint-dir first)",
+                        dir.display()
+                    )
+                })?;
+                (snap, Some(dir.clone()))
+            }
+        };
+
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+
+        let cell = Arc::new(SnapshotCell::new(initial));
+        let batcher = Arc::new(RequestBatcher::new(cfg.batch_max, cfg.batch_wait));
+        let shared = Arc::new(ServerShared {
+            cell: cell.clone(),
+            batcher: batcher.clone(),
+            shutdown: AtomicBool::new(false),
+            started: Instant::now(),
+            swaps: AtomicU64::new(0),
+            swaps_skipped: AtomicU64::new(0),
+            http_requests: AtomicU64::new(0),
+            http_errors: AtomicU64::new(0),
+            latency: LatencyRecorder::new(),
+        });
+        let mut handles = Vec::new();
+
+        // batch thread: the only place model math runs
+        {
+            let batcher = batcher.clone();
+            let reader = cell.reader();
+            handles.push(std::thread::spawn(move || batcher.run(reader)));
+        }
+
+        // HTTP workers: parse/route connections off a shared channel
+        let (conn_tx, conn_rx) = mpsc::channel::<std::net::TcpStream>();
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        for _ in 0..cfg.threads.max(1) {
+            let rx = conn_rx.clone();
+            let shared = shared.clone();
+            handles.push(std::thread::spawn(move || loop {
+                // hold the lock only for the recv, not while handling
+                let stream = rx.lock().unwrap().recv();
+                match stream {
+                    Ok(stream) => super::handlers::handle_connection(stream, &shared),
+                    Err(_) => break, // accept loop gone: drain done
+                }
+            }));
+        }
+
+        // accept loop: non-blocking so shutdown is observed within ~1ms
+        {
+            let shared = shared.clone();
+            handles.push(std::thread::spawn(move || {
+                loop {
+                    if shared.shutdown.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            // handlers do one read + one write per
+                            // connection; blocking mode with a timeout
+                            stream.set_nonblocking(false).ok();
+                            if conn_tx.send(stream).is_err() {
+                                break;
+                            }
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                        Err(e) => {
+                            log::warn!("serve: accept failed: {e}");
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                    }
+                }
+                // dropping conn_tx closes the channel and releases workers
+            }));
+        }
+
+        // watcher: poll the checkpoint directory, flip on newer servable
+        if let Some(dir) = watch_dir {
+            let shared = shared.clone();
+            let cell = cell.clone();
+            let (poll, ridge) = (cfg.poll, cfg.ridge);
+            handles.push(std::thread::spawn(move || {
+                while !shared.shutdown.load(Ordering::Relaxed) {
+                    // sleep in small slices so shutdown isn't held up by
+                    // a long poll interval
+                    let wake = Instant::now() + poll;
+                    while Instant::now() < wake {
+                        if shared.shutdown.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        std::thread::sleep(Duration::from_millis(5).min(poll));
+                    }
+                    let serving = cell.load().generation;
+                    match scan_servable(&dir, Some(serving), ridge) {
+                        Ok(scan) => {
+                            shared
+                                .swaps_skipped
+                                .fetch_add(scan.skipped as u64, Ordering::Relaxed);
+                            if let Some(snap) = scan.snapshot {
+                                let generation = snap.generation;
+                                cell.store(snap);
+                                shared.swaps.fetch_add(1, Ordering::Relaxed);
+                                log::info!(
+                                    "serve: hot-swapped to generation {generation} \
+                                     (was {serving})"
+                                );
+                            }
+                        }
+                        Err(e) => log::warn!("serve: watcher scan failed: {e}"),
+                    }
+                }
+            }));
+        }
+
+        Ok(Server { addr, shared, handles })
+    }
+
+    /// The address actually bound (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Current observability counters (what `/stats` serves).
+    pub fn stats(&self) -> ServerStats {
+        self.shared.stats()
+    }
+
+    /// Signal every thread to stop: the listener stops accepting, queued
+    /// requests drain, the watcher exits at its next slice.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        self.shared.batcher.close();
+    }
+
+    /// True once shutdown has been requested (by [`Server::shutdown`] or
+    /// `POST /shutdown`).
+    pub fn is_shutting_down(&self) -> bool {
+        self.shared.shutdown.load(Ordering::Relaxed)
+    }
+
+    /// Wait for every server thread to exit. Returns the final stats so
+    /// callers can log a parting summary.
+    pub fn join(self) -> ServerStats {
+        for h in self.handles {
+            let _ = h.join();
+        }
+        self.shared.stats()
+    }
+
+    /// Convenience for tests and one-shot probes: shutdown, then join.
+    pub fn stop(self) -> ServerStats {
+        self.shutdown();
+        self.join()
+    }
+}

@@ -1,0 +1,328 @@
+//! Immutable model snapshots and the lock-free reader cell they flip
+//! through.
+//!
+//! Serving never mutates a model: a [`ModelSnapshot`] is frozen at load
+//! time and shared behind an `Arc`. Swapping in a retrained model is a
+//! single atomic pointer flip inside [`SnapshotCell`] (the `arc-swap`
+//! idiom, hand-rolled because the crate set is frozen): a version counter
+//! published with `Release` ordering plus a mutex-guarded writer slot.
+//! Readers hold a [`SnapshotReader`] that caches the current `Arc` and
+//! re-reads the slot only when the version counter moves, so the steady-
+//! state read path is one atomic load — no reader-side lock, no
+//! allocation, and a swap can never tear a model in half (requests see
+//! the old model or the new one, bitwise, never a mix).
+//!
+//! Snapshots come from two sources: a v1/v2 model checkpoint file
+//! (`bmf-pp train --save`) or a directory of v3 generation files written
+//! by periodic checkpointing (`train --checkpoint-dir`). The directory
+//! path is what enables hot-swap: [`scan_servable`] walks the
+//! generations newest-first, skipping files that are corrupt *or
+//! incomplete* (a mid-retrain generation does not hold every grid block),
+//! and rebuilds a full model from the newest servable one via
+//! [`crate::coordinator::checkpoint::model_from_partial`].
+
+use crate::coordinator::checkpoint::{
+    self, list_generations, model_from_partial, CheckpointError,
+};
+use crate::posterior::PosteriorModel;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// An immutable, servable model plus its provenance: which checkpoint
+/// generation it came from (0 for plain model files) and the file it was
+/// loaded from.
+#[derive(Debug)]
+pub struct ModelSnapshot {
+    /// The frozen model all predictions in this snapshot's lifetime use.
+    pub model: PosteriorModel,
+    /// Checkpoint generation the model was rebuilt from (0 when loaded
+    /// from a v1/v2 model file, which carries no generation counter).
+    pub generation: u64,
+    /// File the snapshot was loaded from, when known.
+    pub source: Option<PathBuf>,
+}
+
+impl ModelSnapshot {
+    /// Load a snapshot from a v1/v2 model checkpoint file.
+    pub fn from_model_file(path: &Path) -> Result<ModelSnapshot, CheckpointError> {
+        let model = checkpoint::load(path)?;
+        Ok(ModelSnapshot { model, generation: 0, source: Some(path.to_path_buf()) })
+    }
+}
+
+/// Result of scanning a checkpoint directory for a servable generation.
+#[derive(Debug)]
+pub struct ServableScan {
+    /// The newest servable snapshot found, if any.
+    pub snapshot: Option<ModelSnapshot>,
+    /// Candidate generations newer than the floor that were skipped as
+    /// unservable (corrupt, truncated, or incomplete).
+    pub skipped: usize,
+}
+
+/// Walk the generation files in `dir` newest-first and load the newest
+/// *servable* one strictly newer than `newer_than` (pass `None` for no
+/// floor): a generation is servable when it parses as a v3 partial
+/// checkpoint *and* holds every block of its grid, so a model can be
+/// rebuilt from it. Corrupt, truncated, or incomplete candidates are
+/// counted in [`ServableScan::skipped`] and the walk continues — exactly
+/// the degradation contract of
+/// [`crate::coordinator::checkpoint::latest_valid_partial`], tightened by
+/// the completeness requirement serving adds.
+///
+/// `ridge` must match the `TrainConfig::ridge` the writer used (default
+/// `1e-3`) for the rebuilt model to be bitwise-identical to the one the
+/// training run returned.
+pub fn scan_servable(
+    dir: &Path,
+    newer_than: Option<u64>,
+    ridge: f64,
+) -> std::io::Result<ServableScan> {
+    let generations = list_generations(dir)?;
+    let mut skipped = 0;
+    for (gen_no, path) in generations.iter().rev() {
+        if let Some(floor) = newer_than {
+            if *gen_no <= floor {
+                break; // sorted: everything further back is older still
+            }
+        }
+        let ckpt = match checkpoint::load_partial(path) {
+            Ok(c) => c,
+            Err(e) => {
+                log::warn!("serve: skipping unreadable generation {}: {e}", path.display());
+                skipped += 1;
+                continue;
+            }
+        };
+        if !ckpt.is_complete() {
+            log::debug!(
+                "serve: skipping incomplete generation {} ({} blocks)",
+                path.display(),
+                ckpt.blocks.len()
+            );
+            skipped += 1;
+            continue;
+        }
+        match model_from_partial(&ckpt, ridge) {
+            Ok(model) => {
+                return Ok(ServableScan {
+                    snapshot: Some(ModelSnapshot {
+                        model,
+                        generation: ckpt.generation,
+                        source: Some(path.clone()),
+                    }),
+                    skipped,
+                })
+            }
+            Err(e) => {
+                log::warn!("serve: cannot rebuild model from {}: {e}", path.display());
+                skipped += 1;
+            }
+        }
+    }
+    Ok(ServableScan { snapshot: None, skipped })
+}
+
+/// The swap point between the checkpoint watcher (one writer) and the
+/// request path (many readers).
+///
+/// A store replaces the slot and then bumps the version with `Release`
+/// ordering; a reader's hot path is a single `Acquire` load of the
+/// version, touching the slot mutex only when the version moved since its
+/// cached `Arc` was taken. The mutex is therefore contended only in the
+/// instants around a swap — reads are lock-free at steady state, and old
+/// snapshots are reclaimed as soon as the last cached `Arc` drops.
+#[derive(Debug)]
+pub struct SnapshotCell {
+    version: AtomicU64,
+    slot: Mutex<Arc<ModelSnapshot>>,
+}
+
+impl SnapshotCell {
+    /// Wrap the initial snapshot.
+    pub fn new(initial: ModelSnapshot) -> SnapshotCell {
+        SnapshotCell { version: AtomicU64::new(0), slot: Mutex::new(Arc::new(initial)) }
+    }
+
+    /// Atomically flip every future read to `snap` (current readers keep
+    /// their `Arc` until their next version check).
+    pub fn store(&self, snap: ModelSnapshot) {
+        let mut slot = self.slot.lock().unwrap();
+        *slot = Arc::new(snap);
+        self.version.fetch_add(1, Ordering::Release);
+    }
+
+    /// The swap counter: bumped once per [`SnapshotCell::store`].
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// One-off read of the current snapshot (locks the slot; request
+    /// paths should hold a [`SnapshotReader`] instead).
+    pub fn load(&self) -> Arc<ModelSnapshot> {
+        self.slot.lock().unwrap().clone()
+    }
+
+    /// A cached reader for a thread that resolves snapshots repeatedly.
+    pub fn reader(self: &Arc<Self>) -> SnapshotReader {
+        // version first, slot second: a store racing in between leaves
+        // the cache *newer* than `seen` (refreshed on the next check),
+        // never staler than the version we claim to have observed
+        let seen = self.version();
+        let cached = self.load();
+        SnapshotReader { cell: self.clone(), cached, seen }
+    }
+}
+
+/// A per-thread view of a [`SnapshotCell`]: one atomic load per
+/// resolution at steady state.
+#[derive(Debug)]
+pub struct SnapshotReader {
+    cell: Arc<SnapshotCell>,
+    cached: Arc<ModelSnapshot>,
+    seen: u64,
+}
+
+impl SnapshotReader {
+    /// The current snapshot, refreshing the cache only when the cell's
+    /// version moved.
+    pub fn current(&mut self) -> &Arc<ModelSnapshot> {
+        let v = self.cell.version.load(Ordering::Acquire);
+        if v != self.seen {
+            self.cached = self.cell.load();
+            self.seen = v;
+        }
+        &self.cached
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(mean: f64, generation: u64) -> ModelSnapshot {
+        let u = vec![mean as f32; 2];
+        let v = vec![1.0f32, 0.5];
+        ModelSnapshot {
+            model: PosteriorModel::from_factors(1, &u, &v, 0.0, 1e6),
+            generation,
+            source: None,
+        }
+    }
+
+    #[test]
+    fn reader_sees_flips_and_never_tears() {
+        let cell = Arc::new(SnapshotCell::new(snap(1.0, 1)));
+        let mut reader = cell.reader();
+        assert_eq!(reader.current().generation, 1);
+        cell.store(snap(2.0, 2));
+        assert_eq!(reader.current().generation, 2);
+        assert_eq!(cell.version(), 1);
+        // a reader created after the swap starts on the new snapshot
+        assert_eq!(cell.reader().current().generation, 2);
+    }
+
+    #[test]
+    fn concurrent_readers_observe_only_whole_snapshots() {
+        // hammer the cell from reader threads while the writer flips
+        // between two models whose predictions differ; every observed
+        // prediction must bitwise-match one of the two models
+        let a = snap(1.0, 1);
+        let b = snap(2.0, 2);
+        let pa = a.model.predict(0, 0).to_bits();
+        let pb = b.model.predict(0, 0).to_bits();
+        let cell = Arc::new(SnapshotCell::new(a));
+        let stop = Arc::new(AtomicU64::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let cell = cell.clone();
+            let stop = stop.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut reader = cell.reader();
+                let mut seen_new = false;
+                while stop.load(Ordering::Relaxed) == 0 {
+                    let s = reader.current();
+                    let bits = s.model.predict(0, 0).to_bits();
+                    let generation = s.generation;
+                    assert!(
+                        (bits == pa && generation == 1) || (bits == pb && generation == 2),
+                        "torn snapshot: bits={bits} generation={generation}"
+                    );
+                    seen_new |= generation == 2;
+                }
+                seen_new
+            }));
+        }
+        for flip in 0..200 {
+            cell.store(if flip % 2 == 0 { snap(2.0, 2) } else { snap(1.0, 1) });
+            std::thread::yield_now();
+        }
+        cell.store(snap(2.0, 2));
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        stop.store(1, Ordering::Relaxed);
+        let mut any_new = false;
+        for h in handles {
+            any_new |= h.join().unwrap();
+        }
+        assert!(any_new, "readers never observed the swapped-in snapshot");
+        assert_eq!(cell.version(), 201);
+    }
+
+    #[test]
+    fn scan_prefers_newest_complete_generation() {
+        use crate::coordinator::checkpoint::{
+            generation_path, save_partial, PartialBlock, PartialCheckpoint,
+        };
+        use crate::posterior::RowGaussians;
+
+        let dir = std::env::temp_dir()
+            .join(format!("bmfpp_serve_scan_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+
+        let g = |vals: &[f64]| RowGaussians {
+            n: vals.len(),
+            k: 1,
+            mean: vals.to_vec(),
+            prec: vals.iter().map(|_| 4.0).collect(),
+        };
+        let block = |i: usize, j: usize| PartialBlock {
+            i,
+            j,
+            post: crate::coordinator::block_task::BlockPosteriors {
+                u: g(&[0.5]),
+                v: g(&[2.0]),
+            },
+        };
+        let complete = PartialCheckpoint {
+            k: 1,
+            seed: 7,
+            grid: (1, 1),
+            global_mean: 0.25,
+            generation: 1,
+            blocks: vec![block(0, 0)],
+        };
+        save_partial(&complete, &generation_path(&dir, 1)).unwrap();
+        // newer but incomplete (mid-retrain): must be skipped
+        let incomplete = PartialCheckpoint {
+            grid: (2, 1),
+            generation: 2,
+            blocks: vec![block(0, 0)],
+            ..complete.clone()
+        };
+        save_partial(&incomplete, &generation_path(&dir, 2)).unwrap();
+        // newest of all is garbage: must also be skipped
+        std::fs::write(generation_path(&dir, 3), "not json").unwrap();
+
+        let scan = scan_servable(&dir, None, 1e-3).unwrap();
+        let found = scan.snapshot.expect("generation 1 is servable");
+        assert_eq!(found.generation, 1);
+        assert_eq!(scan.skipped, 2);
+        // with generation 1 already serving, nothing newer is servable
+        let scan = scan_servable(&dir, Some(1), 1e-3).unwrap();
+        assert!(scan.snapshot.is_none());
+        assert_eq!(scan.skipped, 2);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

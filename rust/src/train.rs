@@ -1,0 +1,28 @@
+//! Training: engines, sessions, configs, and checkpoints — the
+//! `bmf_pp::train` facade.
+//!
+//! Everything needed to *produce* a model lives here:
+//!
+//! - [`Engine`] owns the warm worker pool; [`Engine::submit`] runs any
+//!   number of prioritized jobs concurrently and returns a [`Session`]
+//!   streaming typed [`TrainEvent`]s.
+//! - [`TrainConfig`] is the builder-style run description (grid, sweeps,
+//!   backend, checkpointing, admission priority).
+//! - [`TrainOutcome`] / [`TrainResult`] report how a run ended and carry
+//!   the servable [`PosteriorModel`].
+//! - [`checkpoint`] persists models (v1/v2 files) and partial run state
+//!   (v3 generation files) — the handoff point to the serving side,
+//!   which watches a generation directory and hot-swaps
+//!   (see [`crate::serve`]).
+//!
+//! This module re-exports the coordinator layer; the deep
+//! `bmf_pp::coordinator::*` paths keep working for existing code.
+
+pub use crate::coordinator::checkpoint;
+pub use crate::coordinator::{
+    AdmissionPolicy, BackendSpec, CancelInfo, ConfigError, Engine, FactorSide, Factorizer,
+    FailInfo, FitOutcome, JobId, JobSnapshot, JobStatus, PpFactorizer, PpPhase, Priority,
+    SchedulerMode, Session, SubmitError, SweepMode, TrainConfig, TrainEvent, TrainOutcome,
+    TrainResult,
+};
+pub use crate::posterior::PosteriorModel;

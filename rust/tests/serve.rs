@@ -1,0 +1,302 @@
+//! End-to-end serving tests over real sockets: a trained model goes
+//! through the checkpoint pipeline into a running [`Server`], and plain
+//! `TcpStream` HTTP clients exercise every endpoint.
+//!
+//! The headline test is the hot-swap acceptance criterion: while client
+//! threads hammer `/predict` and `/top`, a new checkpoint generation is
+//! published into the watched directory, and the server must flip to it
+//! with **zero failed requests** and **zero torn responses** — every
+//! answer bitwise-matches the old model or the new one, tagged with the
+//! matching generation, never a mix.
+
+use bmf_pp::prelude::*;
+use bmf_pp::data::generator::SyntheticDataset;
+use bmf_pp::data::split::holdout_split_covered;
+use bmf_pp::data::sparse::Coo;
+use bmf_pp::train::checkpoint::{self, generation_path, latest_valid_partial, save_partial};
+use bmf_pp::util::json::{self, Json};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn dataset() -> (Coo, usize) {
+    let ds = SyntheticDataset::by_name("movielens", 0.0015, 601).unwrap();
+    let (train, _) = holdout_split_covered(&ds.ratings, 0.2, 602);
+    (train, ds.k)
+}
+
+fn quick_cfg(k: usize) -> TrainConfig {
+    TrainConfig::new(k)
+        .with_backend(BackendSpec::Native)
+        .with_grid(2, 2)
+        .with_sweeps(3, 6)
+        .with_seed(603)
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("bmfpp_serve_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// One-shot HTTP exchange: connect, send, read to EOF (the server always
+/// answers `Connection: close`), return `(status, parsed JSON body)`.
+fn http(addr: SocketAddr, request: &str) -> (u16, Json) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.write_all(request.as_bytes()).expect("send request");
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).expect("read response");
+    let status: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("unparseable status line in {raw:?}"));
+    let body = raw.split("\r\n\r\n").nth(1).unwrap_or("");
+    let body = json::parse(body).unwrap_or_else(|e| panic!("bad body {body:?}: {e}"));
+    (status, body)
+}
+
+fn get(addr: SocketAddr, target: &str) -> (u16, Json) {
+    http(addr, &format!("GET {target} HTTP/1.1\r\nhost: test\r\nconnection: close\r\n\r\n"))
+}
+
+fn post(addr: SocketAddr, target: &str) -> (u16, Json) {
+    http(addr, &format!("POST {target} HTTP/1.1\r\nhost: test\r\nconnection: close\r\n\r\n"))
+}
+
+#[test]
+fn endpoints_answer_over_real_sockets() {
+    let (train, k) = dataset();
+    let engine = Engine::new(&BackendSpec::Native, 2);
+    let model = engine.train(&quick_cfg(k), &train).unwrap().model;
+    let dir = tmp_dir("file");
+    let path = dir.join("model.json");
+    checkpoint::save(&model, &path).unwrap();
+
+    let server = Server::start(
+        ServeConfig::default().with_addr("127.0.0.1:0").with_threads(2),
+        ModelSource::File(path),
+    )
+    .unwrap();
+    let addr = server.addr();
+
+    let (status, body) = get(addr, "/healthz");
+    assert_eq!(status, 200);
+    assert_eq!(body.get("ok").and_then(Json::as_bool), Some(true));
+
+    // predictions over the wire are bitwise the model's own answers
+    let (status, body) = get(addr, "/predict?row=0&col=0&variance");
+    assert_eq!(status, 200);
+    let value = body.get("value").and_then(Json::as_f64).expect("value");
+    assert_eq!(value.to_bits(), model.predict(0, 0).to_bits());
+    let var = body.get("variance").and_then(Json::as_f64).expect("variance");
+    assert_eq!(var.to_bits(), model.predict_variance(0, 0).to_bits());
+    assert_eq!(body.get("generation").and_then(Json::as_str), Some("0"));
+
+    let (status, body) = get(addr, "/top?row=1&n=3");
+    assert_eq!(status, 200);
+    let items = body.get("items").and_then(Json::as_arr).expect("items");
+    let expect = model.top_n(1, 3);
+    assert_eq!(items.len(), expect.len());
+    for (item, (col, score)) in items.iter().zip(&expect) {
+        assert_eq!(item.get("col").and_then(Json::as_usize), Some(*col));
+        let got = item.get("score").and_then(Json::as_f64).expect("score");
+        assert_eq!(got.to_bits(), score.to_bits());
+    }
+
+    // out-of-range ids are typed 404s carrying the PredictError message
+    let (status, body) = get(addr, &format!("/predict?row={}&col=0", model.rows()));
+    assert_eq!(status, 404);
+    let msg = body.get("error").and_then(Json::as_str).expect("error body");
+    assert!(msg.contains("out of range"), "unexpected error: {msg}");
+    // malformed queries are 400s, unknown paths 404s — never a hangup
+    let (status, _) = get(addr, "/predict?row=zero&col=0");
+    assert_eq!(status, 400);
+    let (status, _) = get(addr, "/predict?col=0");
+    assert_eq!(status, 400);
+    let (status, _) = get(addr, "/nope");
+    assert_eq!(status, 404);
+
+    let (status, body) = post(addr, "/shutdown");
+    assert_eq!(status, 200);
+    assert_eq!(body.get("stopping").and_then(Json::as_bool), Some(true));
+    let stats = server.join();
+    assert!(stats.http_requests >= 7, "requests counted: {}", stats.http_requests);
+    assert!(stats.http_errors >= 4, "errors counted: {}", stats.http_errors);
+    assert_eq!(stats.generation, 0, "model files carry no generation");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn startup_requires_a_servable_generation() {
+    let dir = tmp_dir("unservable");
+    std::fs::write(generation_path(&dir, 1), "definitely not json").unwrap();
+    let err = Server::start(
+        ServeConfig::default().with_addr("127.0.0.1:0"),
+        ModelSource::CheckpointDir(dir.clone()),
+    )
+    .expect_err("a corrupt-only directory must not start");
+    assert!(
+        err.to_string().contains("no servable checkpoint generation"),
+        "unexpected error: {err:#}"
+    );
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// The acceptance criterion: publish generation N+1 while clients hammer
+/// the server — zero failed requests, zero torn responses, `/stats`
+/// advances, and a corrupt newest generation is skipped, not served.
+#[test]
+fn hot_swap_under_fire_drops_nothing_and_never_tears() {
+    let (train, k) = dataset();
+    let engine = Engine::new(&BackendSpec::Native, 2);
+
+    // run A checkpoints into the served directory; with --checkpoint-every 1
+    // the newest generation of a successful run holds every block
+    let dir = tmp_dir("swap");
+    let cfg_a = quick_cfg(k)
+        .with_checkpoint_every(1)
+        .with_checkpoint_dir(&dir)
+        .with_checkpoint_keep(1);
+    let model_a = engine.train(&cfg_a, &train).unwrap().model;
+    let (ckpt_a, _) = latest_valid_partial(&dir).unwrap().expect("run A checkpointed");
+    assert!(ckpt_a.is_complete(), "a finished run's newest generation is complete");
+    let gen_a = ckpt_a.generation;
+
+    // run B (different seed → distinguishable posterior) staged in a side
+    // directory, renumbered to land strictly after run A's generation
+    let dir_b = tmp_dir("swap_staging");
+    let cfg_b = quick_cfg(k)
+        .with_seed(617)
+        .with_checkpoint_every(1)
+        .with_checkpoint_dir(&dir_b)
+        .with_checkpoint_keep(1);
+    let model_b = engine.train(&cfg_b, &train).unwrap().model;
+    let (mut ckpt_b, _) = latest_valid_partial(&dir_b).unwrap().expect("run B checkpointed");
+    let gen_b = gen_a + 1;
+    ckpt_b.generation = gen_b;
+
+    // a corrupt file newer than everything else: must be skipped forever
+    std::fs::write(generation_path(&dir, gen_a + 7), "definitely not json").unwrap();
+
+    let pa = model_a.predict(0, 0).to_bits();
+    let pb = model_b.predict(0, 0).to_bits();
+    assert_ne!(pa, pb, "the two runs must be distinguishable bitwise");
+    let ta = model_a.top_n(0, 2);
+    let tb = model_b.top_n(0, 2);
+
+    let server = Server::start(
+        ServeConfig::default()
+            .with_addr("127.0.0.1:0")
+            .with_threads(3)
+            .with_poll(Duration::from_millis(20)),
+        ModelSource::CheckpointDir(dir.clone()),
+    )
+    .unwrap();
+    let addr = server.addr();
+    assert_eq!(server.stats().generation, gen_a);
+
+    // client threads hammer both prediction endpoints through the swap;
+    // any non-200, or any response mixing models/generations, panics here
+    // and fails the join below
+    let stop = Arc::new(AtomicBool::new(false));
+    let gen_a_str = gen_a.to_string();
+    let gen_b_str = gen_b.to_string();
+    let mut clients = Vec::new();
+    for client_id in 0..3usize {
+        let stop = stop.clone();
+        let (gen_a_str, gen_b_str) = (gen_a_str.clone(), gen_b_str.clone());
+        let (ta, tb) = (ta.clone(), tb.clone());
+        clients.push(std::thread::spawn(move || {
+            let mut answered = 0u64;
+            let mut saw_new = false;
+            while !stop.load(Ordering::Relaxed) {
+                if (answered as usize + client_id) % 2 == 0 {
+                    let (status, body) = get(addr, "/predict?row=0&col=0");
+                    assert_eq!(status, 200, "predict failed mid-swap: {body}");
+                    let bits =
+                        body.get("value").and_then(Json::as_f64).expect("value").to_bits();
+                    let generation =
+                        body.get("generation").and_then(Json::as_str).expect("generation");
+                    let old = bits == pa && generation == gen_a_str;
+                    let new = bits == pb && generation == gen_b_str;
+                    assert!(old || new, "torn predict: bits={bits} generation={generation}");
+                    saw_new |= new;
+                } else {
+                    let (status, body) = get(addr, "/top?row=0&n=2");
+                    assert_eq!(status, 200, "top failed mid-swap: {body}");
+                    let generation =
+                        body.get("generation").and_then(Json::as_str).expect("generation");
+                    let items = body.get("items").and_then(Json::as_arr).expect("items");
+                    let scores: Vec<u64> = items
+                        .iter()
+                        .map(|i| i.get("score").and_then(Json::as_f64).unwrap().to_bits())
+                        .collect();
+                    let want = |m: &[(usize, f64)]| {
+                        m.iter().map(|(_, s)| s.to_bits()).collect::<Vec<u64>>()
+                    };
+                    let old = scores == want(&ta) && generation == gen_a_str;
+                    let new = scores == want(&tb) && generation == gen_b_str;
+                    assert!(old || new, "torn ranking: generation={generation}");
+                    saw_new |= new;
+                }
+                answered += 1;
+            }
+            (answered, saw_new)
+        }));
+    }
+
+    // let the clients get going, then publish run B's generation the way
+    // the trainer does: write to a temp name, atomic rename into place
+    std::thread::sleep(Duration::from_millis(50));
+    let tmp = dir.join("incoming.tmp");
+    save_partial(&ckpt_b, &tmp).unwrap();
+    std::fs::rename(&tmp, generation_path(&dir, gen_b)).unwrap();
+
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while server.stats().generation != gen_b {
+        assert!(Instant::now() < deadline, "hot-swap did not land within 10s");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    // keep firing a little longer so clients observe the new snapshot
+    std::thread::sleep(Duration::from_millis(100));
+    stop.store(true, Ordering::Relaxed);
+    let mut answered_total = 0u64;
+    let mut any_saw_new = false;
+    for c in clients {
+        let (answered, saw_new) = c.join().expect("a client hit a failed or torn response");
+        answered_total += answered;
+        any_saw_new |= saw_new;
+    }
+    assert!(answered_total > 0, "clients never got a request through");
+    assert!(any_saw_new, "no client ever observed the swapped-in generation");
+
+    let stats = server.stats();
+    assert_eq!(stats.generation, gen_b);
+    assert!(stats.swaps >= 1, "swap counter never moved");
+    assert!(stats.swaps_skipped >= 1, "corrupt newest generation was not counted");
+    assert_eq!(stats.http_errors, 0, "a request failed during the swap window");
+    assert_eq!(
+        stats.batched_requests, answered_total,
+        "every client request flows through the batcher"
+    );
+    assert!(stats.batches <= stats.batched_requests);
+
+    // the flip is visible over the wire too
+    let (status, body) = get(addr, "/stats");
+    assert_eq!(status, 200);
+    assert_eq!(body.get("generation").and_then(Json::as_str), Some(gen_b_str.as_str()));
+    assert_eq!(
+        body.get("model").and_then(|m| m.get("k")).and_then(Json::as_usize),
+        Some(k)
+    );
+
+    let final_stats = server.stop();
+    assert_eq!(final_stats.http_errors, 0);
+    std::fs::remove_dir_all(dir).ok();
+    std::fs::remove_dir_all(dir_b).ok();
+}

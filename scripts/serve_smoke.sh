@@ -1,0 +1,99 @@
+#!/usr/bin/env bash
+# End-to-end serve smoke (the CI `serve-smoke` job):
+#
+#   1. train with --checkpoint-every 1 --checkpoint-dir: the newest
+#      generation of a finished run holds every grid block, so it is
+#      servable
+#   2. start `bmf-pp serve --checkpoint-dir` in the background
+#   3. exercise /healthz /predict /top /stats over real HTTP and record
+#      the serving generation (malformed/out-of-range requests must be
+#      typed 4xx, not hangups)
+#   4. retrain into the same directory (generation numbering continues
+#      past existing files) and wait for /stats to report the newer
+#      generation — the hot-swap — then drop a corrupt "newest" file and
+#      require the server to keep serving the last good generation
+#   5. POST /shutdown and require a clean exit
+#
+# Run from the repository root after `cargo build --release`:
+#
+#   bash scripts/serve_smoke.sh
+set -euo pipefail
+
+BIN=${BIN:-rust/target/release/bmf-pp}
+PORT=${PORT:-7979}
+BASE="http://127.0.0.1:$PORT"
+WORK=$(mktemp -d "${TMPDIR:-/tmp}/bmfpp_serve_smoke.XXXXXX")
+SERVE_PID=
+cleanup() {
+  if [ -n "$SERVE_PID" ]; then kill "$SERVE_PID" 2>/dev/null || true; fi
+  rm -rf "$WORK"
+}
+trap cleanup EXIT
+
+TRAIN_FLAGS=(--dataset movielens --scale 0.002 --grid 2x2 --burnin 4
+             --samples 10 --native --workers 1 --quiet)
+CKPTS="$WORK/ckpts"
+
+echo "== 1/5: train a servable generation into $CKPTS"
+"$BIN" train "${TRAIN_FLAGS[@]}" --seed 21 \
+  --checkpoint-every 1 --checkpoint-dir "$CKPTS"
+
+echo "== 2/5: start bmf-pp serve on $BASE"
+"$BIN" serve --checkpoint-dir "$CKPTS" --addr "127.0.0.1:$PORT" --poll-ms 100 &
+SERVE_PID=$!
+for _ in $(seq 1 100); do
+  if curl -sf "$BASE/healthz" > /dev/null 2>&1; then break; fi
+  if ! kill -0 "$SERVE_PID" 2>/dev/null; then
+    echo "FAIL: serve exited before answering /healthz" >&2
+    exit 1
+  fi
+  sleep 0.1
+done
+curl -sf "$BASE/healthz" | grep -q '"ok":true'
+
+echo "== 3/5: exercise the endpoints"
+curl -sf "$BASE/predict?row=0&col=0&variance" > "$WORK/predict.json"
+grep -q '"value":' "$WORK/predict.json"
+grep -q '"variance":' "$WORK/predict.json"
+curl -sf "$BASE/top?row=0&n=3" | grep -q '"items":'
+test "$(curl -s -o /dev/null -w '%{http_code}' "$BASE/predict?row=bad&col=0")" = 400
+test "$(curl -s -o /dev/null -w '%{http_code}' "$BASE/predict?row=99999999&col=0")" = 404
+test "$(curl -s -o /dev/null -w '%{http_code}' "$BASE/nope")" = 404
+GEN0=$(curl -sf "$BASE/stats" | sed -n 's/.*"generation":"\([0-9]*\)".*/\1/p')
+if [ -z "$GEN0" ]; then
+  echo "FAIL: /stats did not report a generation" >&2
+  exit 1
+fi
+echo "   serving generation $GEN0"
+
+echo "== 4/5: retrain into the same dir and wait for the hot-swap"
+"$BIN" train "${TRAIN_FLAGS[@]}" --seed 22 \
+  --checkpoint-every 1 --checkpoint-dir "$CKPTS"
+GEN1="$GEN0"
+for _ in $(seq 1 300); do
+  GEN1=$(curl -sf "$BASE/stats" | sed -n 's/.*"generation":"\([0-9]*\)".*/\1/p')
+  if [ -n "$GEN1" ] && [ "$GEN1" -gt "$GEN0" ]; then break; fi
+  sleep 0.1
+done
+if [ -z "$GEN1" ] || [ "$GEN1" -le "$GEN0" ]; then
+  echo "FAIL: hot-swap never landed (still generation $GEN1)" >&2
+  exit 1
+fi
+echo "   hot-swapped $GEN0 -> $GEN1 with zero downtime"
+
+# a corrupt newest generation must be skipped, never served
+echo "not json" > "$CKPTS/partial-gen-99999999.json"
+sleep 0.5
+GEN2=$(curl -sf "$BASE/stats" | sed -n 's/.*"generation":"\([0-9]*\)".*/\1/p')
+if [ "$GEN2" != "$GEN1" ]; then
+  echo "FAIL: corrupt generation changed the served model ($GEN1 -> $GEN2)" >&2
+  exit 1
+fi
+curl -sf "$BASE/predict?row=0&col=0" | grep -q '"value":'
+echo "   corrupt newest generation skipped, still serving $GEN2"
+
+echo "== 5/5: clean shutdown"
+curl -sf -X POST "$BASE/shutdown" | grep -q '"stopping":true'
+wait "$SERVE_PID"
+SERVE_PID=
+echo "PASS: serve smoke (swap $GEN0 -> $GEN1, corrupt generation skipped)"
