@@ -13,13 +13,17 @@
 //!   P6 — serve: p50/p99 request latency and QPS of the HTTP predict
 //!        path (request batcher + lock-free snapshot reads) under
 //!        concurrent clients.
+//!   P7 — out-of-core store: ingest throughput (ratings/s to shard files)
+//!        and the shard-cache hit rate of a store-backed run whose byte
+//!        budget holds roughly half the store.
 //!
 //!     cargo bench --bench perf_probe
 //!
 //! With `--json` (the CI bench-snapshot job) the run additionally writes
-//! `bench_results/BENCH_PR5.json` — a flat machine-readable snapshot
-//! (throughput, comm_overlap_secs, queue_wait_secs, plus every probe
-//! result) that future PRs diff their numbers against.
+//! `bench_results/BENCH_PR7.json` — a flat machine-readable snapshot
+//! (throughput, comm_overlap_secs, queue_wait_secs, shard_cache_hit_rate,
+//! plus every probe result) that future PRs diff against the previous
+//! snapshot via `scripts/bench_gate.sh`.
 
 mod common;
 
@@ -33,8 +37,10 @@ use bmf_pp::rng::{normal::standard_normal_vec, Rng};
 #[cfg(feature = "pjrt")]
 use bmf_pp::runtime::Engine;
 use bmf_pp::serve::{ModelSource, ServeConfig, Server};
+use bmf_pp::store::{ingest, ShardStore};
 use bmf_pp::util::timer::Stopwatch;
 use std::io::{Read, Write};
+use std::sync::Arc;
 
 fn random_block(n: usize, d: usize, density: f64, seed: u64) -> Coo {
     let mut rng = Rng::seed_from_u64(seed);
@@ -295,10 +301,55 @@ fn main() {
         std::fs::remove_dir_all(&dir).ok();
     }
 
+    println!("\nP7 — out-of-core store: ingest throughput + shard-cache hit rate");
+    {
+        let (_, train, _) = common::bench_dataset("movielens");
+        let dir =
+            std::env::temp_dir().join(format!("bmfpp_perf_store_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let sw = Stopwatch::start();
+        let report = ingest(&train, 2, 2, &dir).unwrap();
+        let ingest_secs = sw.secs();
+        let ingest_rps = report.nnz as f64 / ingest_secs.max(1e-9);
+        println!(
+            "  ingest: {} ratings -> {} shards ({} bytes) in {ingest_secs:.3}s \
+             ({:.2}M ratings/s)",
+            report.nnz,
+            report.blocks,
+            report.bytes,
+            ingest_rps / 1e6
+        );
+        results.push(("p7_ingest_ratings_per_sec".to_string(), ingest_rps));
+
+        // budget ~half the store: real cache churn without degenerate thrash
+        let store = Arc::new(ShardStore::open(&dir).unwrap());
+        let cfg = TrainConfig::new(8)
+            .with_grid(2, 2)
+            .with_sweeps(4, 8)
+            .with_tau(auto_tau(&train))
+            .with_seed(11)
+            .with_cache_bytes(report.bytes / 2);
+        let engine = TrainEngine::new(&cfg.backend, cfg.block_parallelism);
+        let result = engine.train_store(&cfg, store).unwrap();
+        let (hits, misses) = (result.stats.shard_hits, result.stats.shard_misses);
+        // prefetch_hits is a subset of hits, so the rate is hits over all gets
+        let hit_rate = hits as f64 / (hits + misses).max(1) as f64;
+        println!(
+            "  cache: {hits} hits / {misses} misses ({} prefetch, {} evictions) \
+             -> hit rate {hit_rate:.2}",
+            result.stats.shard_prefetch_hits, result.stats.shard_evictions
+        );
+        results.push(("shard_cache_hit_rate".to_string(), hit_rate));
+        results.push(("shard_hits".to_string(), hits as f64));
+        results.push(("shard_misses".to_string(), misses as f64));
+        results.push(("prefetch_hits".to_string(), result.stats.shard_prefetch_hits as f64));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
     common::save_json("perf_probe.json", &results);
     // machine-readable snapshot for the CI bench-snapshot artifact
     if std::env::args().any(|a| a == "--json") {
-        common::save_json("BENCH_PR5.json", &results);
-        println!("\nsnapshot written to bench_results/BENCH_PR5.json");
+        common::save_json("BENCH_PR7.json", &results);
+        println!("\nsnapshot written to bench_results/BENCH_PR7.json");
     }
 }

@@ -21,7 +21,7 @@ pub struct BlockData {
     pub csr: Csr,
     /// Column-major (transposed CSR) for column-side half-sweeps.
     pub csr_t: Csr,
-    dense_cache: std::cell::RefCell<
+    dense_cache: std::sync::Mutex<
         std::collections::HashMap<(usize, usize, bool), std::sync::Arc<(Vec<f32>, Vec<f32>)>>,
     >,
 }
@@ -42,7 +42,8 @@ impl BlockData {
         transpose: bool,
     ) -> std::sync::Arc<(Vec<f32>, Vec<f32>)> {
         self.dense_cache
-            .borrow_mut()
+            .lock()
+            .unwrap()
             .entry((pad_n, pad_d, transpose))
             .or_insert_with(|| {
                 std::sync::Arc::new(self.coo.to_dense_padded(pad_n, pad_d, transpose))

@@ -255,6 +255,14 @@ pub struct TrainConfig {
     /// (`Engine::train` / `train_observed`) have no handle that could
     /// ever resume the job, so they run immediately and ignore this flag.
     pub start_paused: bool,
+    /// Shard-cache byte budget for store-backed runs
+    /// ([`Engine::submit_store`](super::Engine::submit_store)): the run
+    /// keeps at most this many bytes of block shards resident, evicting
+    /// least-recently-used shards past it (0, the default, is unbounded).
+    /// A budget below one shard still works — every block is evicted
+    /// after use. Ignored for resident (`Coo`) runs; never changes the
+    /// posterior, only residency and disk traffic.
+    pub cache_bytes: u64,
 }
 
 impl TrainConfig {
@@ -290,6 +298,7 @@ impl TrainConfig {
             checkpoint_keep: 3,
             fault: None,
             start_paused: false,
+            cache_bytes: 0,
         }
     }
 
@@ -412,6 +421,12 @@ impl TrainConfig {
         self
     }
 
+    /// Bound resident shard bytes for store-backed runs (0 = unbounded).
+    pub fn with_cache_bytes(mut self, cache_bytes: u64) -> Self {
+        self.cache_bytes = cache_bytes;
+        self
+    }
+
     /// Check the configuration against the training matrix's dimensions.
     /// Called by the engine on every submit; the typed [`ConfigError`]
     /// reaches the caller before any worker thread sees the job.
@@ -525,6 +540,8 @@ mod tests {
         let c = TrainConfig::new(8);
         assert_eq!(c.priority, Priority::Normal);
         assert_eq!(c.max_in_flight, 0);
+        assert_eq!(c.cache_bytes, 0);
+        assert_eq!(c.clone().with_cache_bytes(1 << 20).cache_bytes, 1 << 20);
         assert!(c.resume_from.is_none());
         assert!(c.checkpoint_on_cancel.is_none());
         assert!(!c.start_paused);

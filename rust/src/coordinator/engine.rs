@@ -52,18 +52,26 @@
 //!   through a channel ([`Session::events`]), with [`Session::wait`]
 //!   yielding the final [`TrainOutcome`].
 //!
+//! Each has a store-backed twin ([`Engine::train_store`],
+//! [`Engine::train_store_observed`], [`Engine::submit_store`]) that
+//! streams blocks from an ingested on-disk shard store
+//! (`bmf_pp::store`) through a byte-budgeted cache instead of holding
+//! the ratings in memory — same math, bitwise-identical posterior.
+//!
 //! The [`Factorizer`] trait unifies PP and the baseline comparators behind
 //! `fit(&Engine, &Coo)`, so sweeping methods (or cross-validating one) is a
 //! loop over fits on one warm engine.
 
+use super::checkpoint::PartialCheckpoint;
 use super::config::{BackendSpec, TrainConfig};
 use super::scheduler::{JobId, Priority, WorkerPool};
 use super::trainer::{
-    center, load_resume, run_pp, run_pp_centered, JobCtx, PhaseTimings, RunControl, RunStats,
-    TrainOutcome, TrainResult,
+    center, load_resume, run_pp, run_pp_centered, run_pp_store, DataSource, JobCtx, PhaseTimings,
+    RunControl, RunStats, TrainOutcome, TrainResult,
 };
 use crate::data::sparse::Coo;
 use crate::posterior::PosteriorModel;
+use crate::store::{ShardStore, StoreError};
 use std::fmt;
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
@@ -175,6 +183,31 @@ pub enum TrainEvent {
         path: PathBuf,
         /// Completed blocks recorded in it.
         blocks: usize,
+    },
+    /// A shard entered the cache of a store-backed run: a block task
+    /// missed (`prefetch: false`) or the background prefetcher warmed it
+    /// ahead of the task (`prefetch: true`). The counters are the cache's
+    /// cumulative totals at emission, so the latest event is a live view
+    /// of cache effectiveness. Never emitted by resident runs.
+    ShardLoaded {
+        /// Grid coordinates of the block whose shard was read.
+        node: (usize, usize),
+        /// On-disk size of the shard just loaded.
+        bytes: u64,
+        /// True when the background prefetcher performed the read.
+        prefetch: bool,
+        /// Cumulative cache hits (task fetches served without a disk read
+        /// on the task's own time).
+        hits: u64,
+        /// Cumulative task-initiated disk reads.
+        misses: u64,
+        /// Cumulative first-touches of prefetcher-warmed shards.
+        prefetch_hits: u64,
+        /// Cumulative evictions under the `cache_bytes` budget.
+        evictions: u64,
+        /// Shard bytes resident after this load (and any evictions it
+        /// forced).
+        resident_bytes: u64,
     },
     /// The run was cancelled; no further block events follow.
     Cancelled {
@@ -312,6 +345,7 @@ struct SessionShared {
 
 impl SessionShared {
     fn snapshot(&self) -> JobSnapshot {
+        let shards = self.control.shards.snapshot();
         JobSnapshot {
             id: self.job,
             priority: self.priority,
@@ -319,6 +353,9 @@ impl SessionShared {
             blocks_done: self.control.blocks_done.load(Ordering::Relaxed),
             blocks_total: self.control.blocks_total.load(Ordering::Relaxed),
             queue_wait_secs: self.control.queue_wait(),
+            shard_hits: shards.hits,
+            shard_misses: shards.misses,
+            shard_prefetch_hits: shards.prefetch_hits,
         }
     }
 }
@@ -341,6 +378,12 @@ pub struct JobSnapshot {
     /// higher-priority work. `None` until the schedule has measured it
     /// (the value is produced when the block DAG completes).
     pub queue_wait_secs: Option<f64>,
+    /// Live shard-cache hits so far (0 for resident runs).
+    pub shard_hits: u64,
+    /// Live shard-cache misses so far (0 for resident runs).
+    pub shard_misses: u64,
+    /// Live prefetch hits so far (0 for resident runs).
+    pub shard_prefetch_hits: u64,
 }
 
 /// The engine's session registry: weak handles to every submitted job,
@@ -493,6 +536,45 @@ impl Engine {
         run_pp(cfg, &self.pool, train, Some(Arc::new(on_event)))
     }
 
+    /// Run one store-backed training job to completion (no events):
+    /// blocks stream from `store` through a byte-budgeted shard cache
+    /// (`TrainConfig::cache_bytes`) instead of living in memory. The
+    /// posterior is bitwise-identical to [`Engine::train`] on the data
+    /// the store was ingested from. The config's grid must equal the
+    /// store's ingest grid; a mismatch is a typed
+    /// [`StoreError::GridMismatch`].
+    pub fn train_store(
+        &self,
+        cfg: &TrainConfig,
+        store: Arc<ShardStore>,
+    ) -> anyhow::Result<TrainResult> {
+        Self::check_store_grid(cfg, &store)?;
+        run_pp_store(cfg, &self.pool, store, None)
+    }
+
+    /// [`Engine::train_store`] with a live [`TrainEvent`] callback —
+    /// store-backed runs additionally stream
+    /// [`TrainEvent::ShardLoaded`] as shards enter the cache.
+    pub fn train_store_observed(
+        &self,
+        cfg: &TrainConfig,
+        store: Arc<ShardStore>,
+        on_event: impl Fn(TrainEvent) + Send + Sync + 'static,
+    ) -> anyhow::Result<TrainResult> {
+        Self::check_store_grid(cfg, &store)?;
+        run_pp_store(cfg, &self.pool, store, Some(Arc::new(on_event)))
+    }
+
+    /// The training grid must equal the ingest grid: shards were cut on
+    /// the latter, and block membership depends on it.
+    fn check_store_grid(cfg: &TrainConfig, store: &ShardStore) -> Result<(), StoreError> {
+        let store_grid = store.grid_dims();
+        if store_grid != cfg.grid {
+            return Err(StoreError::GridMismatch { cfg: cfg.grid, store: store_grid });
+        }
+        Ok(())
+    }
+
     /// Validate `cfg` against `train` (and load + validate any
     /// `resume_from` checkpoint), enforce the engine's
     /// [`AdmissionPolicy`] (a full backlog yields a typed
@@ -505,6 +587,37 @@ impl Engine {
         cfg.validate(train.rows, train.cols)?;
         // resume problems surface here, not on the background thread
         let resume = load_resume(&cfg)?;
+        // the session's single private copy of the data, centred during
+        // the one unavoidable clone
+        let (centered, global_mean) = center(train);
+        self.submit_source(cfg, DataSource::Resident(centered), global_mean, resume)
+    }
+
+    /// [`Engine::submit`] against an opened shard store: same session
+    /// lifecycle (events, pause/cancel, checkpoints, admission), but
+    /// blocks stream from disk through a `TrainConfig::cache_bytes`-
+    /// budgeted cache and the session holds no copy of the ratings at
+    /// all. Grid mismatches against the ingest grid are a typed
+    /// [`StoreError::GridMismatch`] here, at submit time.
+    pub fn submit_store(&self, cfg: TrainConfig, store: Arc<ShardStore>) -> anyhow::Result<Session> {
+        cfg.validate(store.rows(), store.cols())?;
+        Self::check_store_grid(&cfg, &store)?;
+        let resume = load_resume(&cfg)?;
+        // the centring mean was computed once at ingest and persisted in
+        // the manifest — bitwise the same f64 a resident run derives
+        let global_mean = store.global_mean();
+        self.submit_source(cfg, DataSource::Store(store), global_mean, resume)
+    }
+
+    /// Shared back half of [`Engine::submit`] / [`Engine::submit_store`]:
+    /// admission, registration, and the driver thread.
+    fn submit_source(
+        &self,
+        cfg: TrainConfig,
+        data: DataSource,
+        global_mean: f64,
+        resume: Option<PartialCheckpoint>,
+    ) -> anyhow::Result<Session> {
         // admission: the returned guard keeps check + registration atomic
         let mut reg = self.admit()?;
         let job = self.pool.register_job(cfg.priority, cfg.max_in_flight);
@@ -526,9 +639,6 @@ impl Engine {
         let (tx, rx) = channel::<TrainEvent>();
         let pool = self.pool.clone();
         let registry = self.registry.clone();
-        // the session's single private copy of the data, centred during
-        // the one unavoidable clone
-        let (centered, global_mean) = center(train);
         let shared_bg = shared.clone();
         let handle = std::thread::spawn(move || {
             {
@@ -545,7 +655,7 @@ impl Engine {
                 }
             });
             let ctx = JobCtx { job, control: shared_bg.control.clone(), resume };
-            let res = run_pp_centered(&cfg, &pool, centered, global_mean, Some(sink), ctx);
+            let res = run_pp_centered(&cfg, &pool, data, global_mean, Some(sink), ctx);
             pool.finish_job(job);
             *shared_bg.status.lock().unwrap() = match &res {
                 Ok(TrainOutcome::Completed(_)) => JobStatus::Completed,

@@ -424,6 +424,13 @@ pub struct DagRunOpts {
     /// drain, and the run returns with
     /// [`DagOutcome::cancelled`]` == true` and the nodes completed so far.
     pub cancel: Option<Arc<AtomicBool>>,
+    /// Called with each node id the moment it becomes runnable (all
+    /// dependencies met), immediately before the node is handed to the
+    /// pool's ready queue. This is the scheduler's look-ahead signal: the
+    /// out-of-core trainer uses it to start warming a block's shard while
+    /// the task waits for a worker slot. Invoked on the scheduling
+    /// thread — keep it cheap (enqueue, don't do I/O).
+    pub on_ready: Option<Box<dyn Fn(NodeId) + Send + Sync>>,
 }
 
 /// Result of [`DagScheduler::run_with`]: per-node outputs (a node that
@@ -513,7 +520,7 @@ impl<T: Send + Sync + 'static> DagScheduler<T> {
         let job = opts
             .job
             .unwrap_or_else(|| pool.register_job(Priority::Normal, 0));
-        let out = self.run_inner(pool, job, opts.cancel.clone());
+        let out = self.run_inner(pool, job, opts.cancel.clone(), opts.on_ready.as_deref());
         if transient {
             pool.finish_job(job);
         }
@@ -525,6 +532,7 @@ impl<T: Send + Sync + 'static> DagScheduler<T> {
         pool: &WorkerPool,
         job: JobId,
         cancel: Option<Arc<AtomicBool>>,
+        on_ready: Option<&(dyn Fn(NodeId) + Send + Sync)>,
     ) -> anyhow::Result<DagOutcome<T>> {
         let n = self.nodes.len();
         let cancelled = || {
@@ -566,6 +574,9 @@ impl<T: Send + Sync + 'static> DagScheduler<T> {
         if !aborted {
             for id in 0..n {
                 if unmet[id] == 0 {
+                    if let Some(cb) = on_ready {
+                        cb(id);
+                    }
                     let task = tasks[id].take().expect("task present");
                     dispatch(pool, &rtx, id, task, Vec::new(), job, cancel.clone());
                     in_flight += 1;
@@ -604,6 +615,9 @@ impl<T: Send + Sync + 'static> DagScheduler<T> {
                     for &child in &dependents[id] {
                         unmet[child] -= 1;
                         if unmet[child] == 0 && first_err.is_none() && !aborted {
+                            if let Some(cb) = on_ready {
+                                cb(child);
+                            }
                             let parents: Vec<Arc<T>> = deps[child]
                                 .iter()
                                 .map(|&p| outputs[p].clone().expect("parent completed"))
@@ -1048,7 +1062,7 @@ mod tests {
         let out = dag
             .run_with(
                 &pool,
-                &DagRunOpts { job: None, cancel: Some(cancel.clone()) },
+                &DagRunOpts { job: None, cancel: Some(cancel.clone()), on_ready: None },
             )
             .unwrap();
         assert!(out.cancelled);
@@ -1069,7 +1083,7 @@ mod tests {
             Ok(1)
         });
         let out = dag
-            .run_with(&pool, &DagRunOpts { job: None, cancel: Some(cancel) })
+            .run_with(&pool, &DagRunOpts { job: None, cancel: Some(cancel), on_ready: None })
             .unwrap();
         assert!(out.cancelled);
         assert!(out.nodes[0].is_none());

@@ -51,6 +51,7 @@ use super::scheduler::{DagRunOpts, DagScheduler, JobId, NodeId, WorkerPool};
 use crate::data::sparse::Coo;
 use crate::partition::Grid;
 use crate::posterior::{PosteriorModel, RowGaussians};
+use crate::store::{Prefetcher, ShardCache, ShardCounters, ShardLoad, ShardStore, StoreError};
 use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -110,6 +111,23 @@ pub struct RunStats {
     /// behind whom. Setup cost (resume-checkpoint loading, data centring)
     /// is deliberately excluded — this measures waiting, not preparing.
     pub queue_wait_secs: f64,
+    /// Shard-cache hits: block fetches served from memory in a
+    /// store-backed run (see [`crate::store::ShardCache`] for exact
+    /// semantics). 0 for resident runs.
+    pub shard_hits: u64,
+    /// Shard-cache misses: block fetches that read their shard from disk
+    /// on the task's own time. 0 for resident runs.
+    pub shard_misses: u64,
+    /// Hits whose shard was resident because the DAG-fed prefetcher
+    /// warmed it (counted once per prefetched load). 0 for resident runs.
+    pub shard_prefetch_hits: u64,
+    /// Shards evicted to respect `TrainConfig::cache_bytes`. 0 for
+    /// resident or unbounded runs.
+    pub shard_evictions: u64,
+    /// High-water mark of resident shard bytes (accounted at on-disk
+    /// size) — the proof the working set stayed bounded. 0 for resident
+    /// runs.
+    pub shard_bytes_peak: u64,
 }
 
 impl RunStats {
@@ -270,6 +288,11 @@ pub(crate) struct RunControl {
     /// while unset. Lets `Engine::jobs()` surface the admission fairness
     /// signal live instead of only in the final result.
     queue_wait_bits: AtomicU64,
+    /// Live shard-cache counters for store-backed runs (all zero for
+    /// resident runs). Shared with the run's `ShardCache` so
+    /// `Engine::jobs()` can surface hit/miss/prefetch numbers while the
+    /// job is still training.
+    pub shards: Arc<ShardCounters>,
 }
 
 impl RunControl {
@@ -281,6 +304,7 @@ impl RunControl {
             blocks_done: AtomicUsize::new(0),
             blocks_total: AtomicUsize::new(0),
             queue_wait_bits: AtomicU64::new(Self::QUEUE_WAIT_UNSET),
+            shards: Arc::new(ShardCounters::default()),
         }
     }
 
@@ -659,6 +683,24 @@ impl Emitter {
         }
     }
 
+    /// A shard entered the cache (store-backed runs only). Fired by the
+    /// cache's load hook from whichever thread performed the read.
+    fn shard_loaded(&self, load: &ShardLoad) {
+        if let Some(sink) = &self.sink {
+            let c = load.counters;
+            sink(TrainEvent::ShardLoaded {
+                node: (load.i, load.j),
+                bytes: load.bytes,
+                prefetch: load.prefetch,
+                hits: c.hits,
+                misses: c.misses,
+                prefetch_hits: c.prefetch_hits,
+                evictions: c.evictions,
+                resident_bytes: c.resident_bytes,
+            });
+        }
+    }
+
     /// Per-sweep observer for one block, or None when nobody listens or
     /// the config disabled sweep streaming (the block then skips the
     /// per-sweep RMSE computation entirely).
@@ -763,6 +805,71 @@ pub(crate) fn center(train: &Coo) -> (Coo, f64) {
     (centered, global_mean)
 }
 
+/// Where a run's ratings come from: the whole (already mean-centred)
+/// matrix resident in memory, or an opened on-disk shard store whose
+/// blocks are materialized on demand (centring applied per entry at read
+/// time — see `store::shard` for the bitwise-equivalence argument).
+pub(crate) enum DataSource {
+    /// The classic path: one private, centred `Coo` owned by the run.
+    Resident(Coo),
+    /// Out-of-core: blocks fetched through a byte-budgeted `ShardCache`.
+    Store(Arc<ShardStore>),
+}
+
+impl DataSource {
+    fn rows(&self) -> usize {
+        match self {
+            DataSource::Resident(c) => c.rows,
+            DataSource::Store(s) => s.rows(),
+        }
+    }
+
+    fn cols(&self) -> usize {
+        match self {
+            DataSource::Resident(c) => c.cols,
+            DataSource::Store(s) => s.cols(),
+        }
+    }
+}
+
+/// Per-run block provider the DAG builder draws from. Resident blocks
+/// are split (and their CSR layouts built) up front exactly as before;
+/// store blocks stay on disk until their task runs.
+enum BlockSource {
+    Resident(Vec<Vec<Coo>>),
+    Store(Arc<ShardCache>),
+}
+
+impl BlockSource {
+    fn take(&mut self, i: usize, j: usize) -> BlockSlot {
+        match self {
+            BlockSource::Resident(blocks) => BlockSlot::Owned(Arc::new(BlockData::new(
+                std::mem::replace(&mut blocks[i][j], Coo::new(0, 0)),
+            ))),
+            BlockSource::Store(cache) => BlockSlot::Lazy { cache: cache.clone(), i, j },
+        }
+    }
+}
+
+/// What a block task closure captures: the block itself (resident) or a
+/// cache ticket redeemed when the task actually starts — after the
+/// restored-block early return and the fault-injection hook, so resumed
+/// blocks never touch disk and injected crashes model dying *before* the
+/// read.
+enum BlockSlot {
+    Owned(Arc<BlockData>),
+    Lazy { cache: Arc<ShardCache>, i: usize, j: usize },
+}
+
+impl BlockSlot {
+    fn fetch(&self) -> anyhow::Result<Arc<BlockData>> {
+        match self {
+            BlockSlot::Owned(data) => Ok(data.clone()),
+            BlockSlot::Lazy { cache, i, j } => Ok(cache.get(*i, *j)?),
+        }
+    }
+}
+
 /// Run the full PP pipeline for `cfg` on a caller-owned worker pool,
 /// streaming progress to `sink` (if any). Blocking, not cancellable: the
 /// run executes under a transient pool job at the config's priority.
@@ -777,7 +884,27 @@ pub(crate) fn run_pp(
     let job = pool.register_job(cfg.priority, cfg.max_in_flight);
     let ctx = JobCtx { job, control: Arc::new(RunControl::new()), resume };
     let (centered, global_mean) = center(train);
-    let out = run_pp_centered(cfg, pool, centered, global_mean, sink, ctx);
+    let out = run_pp_centered(cfg, pool, DataSource::Resident(centered), global_mean, sink, ctx);
+    pool.finish_job(job);
+    out.and_then(TrainOutcome::into_result)
+}
+
+/// [`run_pp`] against an opened shard store. Blocking, not cancellable —
+/// the store-backed twin of the resident convenience path. The centring
+/// mean comes from the store's manifest (persisted at ingest), so the
+/// posterior is bitwise-identical to a resident run of the same data.
+pub(crate) fn run_pp_store(
+    cfg: &TrainConfig,
+    pool: &WorkerPool,
+    store: Arc<ShardStore>,
+    sink: Option<EventSink>,
+) -> anyhow::Result<TrainResult> {
+    cfg.validate(store.rows(), store.cols())?;
+    let resume = load_resume(cfg)?;
+    let job = pool.register_job(cfg.priority, cfg.max_in_flight);
+    let ctx = JobCtx { job, control: Arc::new(RunControl::new()), resume };
+    let global_mean = store.global_mean();
+    let out = run_pp_centered(cfg, pool, DataSource::Store(store), global_mean, sink, ctx);
     pool.finish_job(job);
     out.and_then(TrainOutcome::into_result)
 }
@@ -790,14 +917,22 @@ pub(crate) fn run_pp(
 pub(crate) fn run_pp_centered(
     cfg: &TrainConfig,
     pool: &WorkerPool,
-    train: Coo,
+    data: DataSource,
     global_mean: f64,
     sink: Option<EventSink>,
     ctx: JobCtx,
 ) -> anyhow::Result<TrainOutcome> {
-    cfg.validate(train.rows, train.cols)?;
+    let (rows, cols) = (data.rows(), data.cols());
+    cfg.validate(rows, cols)?;
+    if let DataSource::Store(store) = &data {
+        // shards were cut on the ingest grid; a different training grid
+        // would need different block membership, so it is a typed error
+        let store_grid = store.grid_dims();
+        if store_grid != cfg.grid {
+            return Err(StoreError::GridMismatch { cfg: cfg.grid, store: store_grid }.into());
+        }
+    }
     let em = Emitter::new(sink, cfg.stream_sweep_rmse, ctx.control.clone());
-    let train = &train;
 
     let (gi, gj) = cfg.grid;
     ctx.control.blocks_total.store(gi * gj, Ordering::Relaxed);
@@ -839,24 +974,35 @@ pub(crate) fn run_pp_centered(
     // grid coordinate of every block node, for checkpoint-on-abort
     let mut block_nodes: Vec<((usize, usize), NodeId)> = Vec::new();
 
-    let grid = Grid::new(train.rows, train.cols, gi, gj);
-    let mut blocks = grid.split(train);
+    let (mut source, cache) = match data {
+        DataSource::Resident(train) => {
+            let grid = Grid::new(rows, cols, gi, gj);
+            (BlockSource::Resident(grid.split(&train)), None)
+        }
+        DataSource::Store(store) => {
+            let em_load = em.clone();
+            let cache = Arc::new(ShardCache::new(
+                store,
+                cfg.cache_bytes,
+                ctx.control.shards.clone(),
+                Some(Box::new(move |load: &ShardLoad| em_load.shard_loaded(load))),
+            ));
+            (BlockSource::Store(cache.clone()), Some(cache))
+        }
+    };
     let t_total = std::time::Instant::now();
     let barrier = cfg.scheduler == SchedulerMode::Barrier;
     let ridge = cfg.ridge;
     let phase_samples = cfg.phase_samples();
 
     let mut dag: DagScheduler<PpTaskOutput> = DagScheduler::new();
-    let mut take = |i: usize, j: usize| {
-        BlockData::new(std::mem::replace(&mut blocks[i][j], Coo::new(0, 0)))
-    };
 
     // fault injection (testing hook): consulted by canonical block index
     // right before each sampled block; `None` in production
     let fault = cfg.fault;
 
     // ---- Phase (a): block (0,0), fresh priors both sides ----
-    let a_data = take(0, 0);
+    let a_slot = source.take(0, 0);
     let cfg_a = task_cfg(cfg, cfg.samples, block_seed(cfg, 0, 0));
     let em_a = em.clone();
     let pre_a = restored.remove(&(0, 0));
@@ -870,6 +1016,7 @@ pub(crate) fn run_pp_centered(
         if let Some(f) = &fault {
             f.before_block(0, (0, 0));
         }
+        let a_data = a_slot.fetch()?;
         em_a.phase(PpPhase::A);
         let sweep_obs = em_a.sweep_observer((0, 0));
         let chunk_obs = em_a.chunk_observer((0, 0));
@@ -892,7 +1039,7 @@ pub(crate) fn run_pp_centered(
     let mut b_col_ids: Vec<NodeId> = vec![a_id; gj];
     let mut b_ids: Vec<NodeId> = Vec::new();
     for i in 1..gi {
-        let data = take(i, 0);
+        let slot = source.take(i, 0);
         let bcfg = task_cfg(cfg, phase_samples, block_seed(cfg, i, 0));
         let em_b = em.clone();
         let pre = restored.remove(&(i, 0));
@@ -907,6 +1054,7 @@ pub(crate) fn run_pp_centered(
             if let Some(f) = &fault {
                 f.before_block(idx, (i, 0));
             }
+            let data = slot.fetch()?;
             em_b.phase(PpPhase::B);
             let sweep_obs = em_b.sweep_observer((i, 0));
             let chunk_obs = em_b.chunk_observer((i, 0));
@@ -926,7 +1074,7 @@ pub(crate) fn run_pp_centered(
         b_ids.push(id);
     }
     for j in 1..gj {
-        let data = take(0, j);
+        let slot = source.take(0, j);
         let bcfg = task_cfg(cfg, phase_samples, block_seed(cfg, 0, j));
         let em_b = em.clone();
         let pre = restored.remove(&(0, j));
@@ -941,6 +1089,7 @@ pub(crate) fn run_pp_centered(
             if let Some(f) = &fault {
                 f.before_block(idx, (0, j));
             }
+            let data = slot.fetch()?;
             em_b.phase(PpPhase::B);
             let sweep_obs = em_b.sweep_observer((0, j));
             let chunk_obs = em_b.chunk_observer((0, j));
@@ -976,7 +1125,7 @@ pub(crate) fn run_pp_centered(
     let mut c_id_at = vec![vec![a_id; gj]; gi];
     for i in 1..gi {
         for j in 1..gj {
-            let data = take(i, j);
+            let slot = source.take(i, j);
             let bcfg = task_cfg(cfg, phase_samples, block_seed(cfg, i, j));
             let mut edges = vec![b_row_ids[i], b_col_ids[j]];
             if let Some(join) = b_join {
@@ -995,6 +1144,7 @@ pub(crate) fn run_pp_centered(
                 if let Some(f) = &fault {
                     f.before_block(idx, (i, j));
                 }
+                let data = slot.fetch()?;
                 em_c.phase(PpPhase::C);
                 let sweep_obs = em_c.sweep_observer((i, j));
                 let chunk_obs = em_c.chunk_observer((i, j));
@@ -1055,10 +1205,31 @@ pub(crate) fn run_pp_centered(
         v_part_ids.push(add_part(&mut dag, b_col_ids[j], &posts, agg_join, ridge, pick_v, &em));
     }
 
+    // store mode: a background prefetcher warms each block's shard the
+    // moment the scheduler declares the block runnable — restored blocks
+    // are excluded (their tasks never read data)
+    let prefetcher = cache.as_ref().map(|c| Prefetcher::spawn(c.clone()));
+    let on_ready = prefetcher.as_ref().map(|p| {
+        let handle = p.handle();
+        let coord_of: HashMap<NodeId, (usize, usize)> = block_nodes
+            .iter()
+            .filter(|&&(_, id)| !restored_ids.contains(&id))
+            .map(|&(coord, id)| (id, coord))
+            .collect();
+        Box::new(move |id: NodeId| {
+            if let Some(&(i, j)) = coord_of.get(&id) {
+                handle.request(i, j);
+            }
+        }) as Box<dyn Fn(NodeId) + Send + Sync>
+    });
+
     let outcome = dag.run_with(
         pool,
-        &DagRunOpts { job: Some(ctx.job), cancel: Some(ctx.control.cancel.clone()) },
+        &DagRunOpts { job: Some(ctx.job), cancel: Some(ctx.control.cancel.clone()), on_ready },
     )?;
+    // closes the prefetch queue and joins the thread, so every counter
+    // below reflects a finished cache
+    drop(prefetcher);
 
     if outcome.cancelled || outcome.failed.is_some() {
         // ---- checkpoint-on-abort: persist every block whose posterior
@@ -1141,6 +1312,13 @@ pub(crate) fn run_pp_centered(
         .iter()
         .map(|&id| (b_finish - nodes[id].started).clamp(0.0, nodes[id].busy()))
         .sum();
+    // shard-cache counters (all zero for resident runs)
+    let shard = ctx.control.shards.snapshot();
+    stats.shard_hits = shard.hits;
+    stats.shard_misses = shard.misses;
+    stats.shard_prefetch_hits = shard.prefetch_hits;
+    stats.shard_evictions = shard.evictions;
+    stats.shard_bytes_peak = shard.peak_bytes;
 
     let mut u_post = nodes[u_part_ids[0]].output.part().clone();
     for &id in &u_part_ids[1..] {
@@ -1152,8 +1330,8 @@ pub(crate) fn run_pp_centered(
     }
     timings.total = t_total.elapsed().as_secs_f64();
 
-    assert_eq!(u_post.n, train.rows, "U posterior row count");
-    assert_eq!(v_post.n, train.cols, "V posterior row count");
+    assert_eq!(u_post.n, rows, "U posterior row count");
+    assert_eq!(v_post.n, cols, "V posterior row count");
 
     em.finished(timings.total, stats.blocks);
 

@@ -1,19 +1,30 @@
 //! File loaders for users with the real datasets: CSV triplets
 //! (`row,col,value`, optional header) and MatrixMarket coordinate files.
+//!
+//! Every error names the offending file (and line, for parse errors), so
+//! a failed multi-file pipeline run points straight at the bad input.
 
 use super::sparse::Coo;
-use std::io::{BufRead, BufReader};
-use std::path::Path;
+use std::io::{BufRead, BufReader, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Why a ratings file failed to load.
 #[derive(Debug, thiserror::Error)]
 pub enum LoadError {
     /// The file could not be read.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    #[error("{}: io error: {source}", path.display())]
+    Io {
+        /// The file that failed.
+        path: PathBuf,
+        /// The underlying I/O error.
+        source: std::io::Error,
+    },
     /// A line did not parse as a rating triplet.
-    #[error("parse error at line {line}: {msg}")]
+    #[error("{}:{line}: {msg}", path.display())]
     Parse {
+        /// The file that failed.
+        path: PathBuf,
         /// 1-based line number.
         line: usize,
         /// What was wrong with the line.
@@ -21,26 +32,30 @@ pub enum LoadError {
     },
 }
 
-fn perr<T>(line: usize, msg: impl Into<String>) -> Result<T, LoadError> {
-    Err(LoadError::Parse { line, msg: msg.into() })
+fn io_err(path: &Path) -> impl Fn(std::io::Error) -> LoadError + '_ {
+    move |source| LoadError::Io { path: path.to_path_buf(), source }
+}
+
+fn perr<T>(path: &Path, line: usize, msg: impl Into<String>) -> Result<T, LoadError> {
+    Err(LoadError::Parse { path: path.to_path_buf(), line, msg: msg.into() })
 }
 
 /// Load `row,col,value` CSV (0- or 1-based ids auto-detected by `one_based`).
 /// Dimensions are inferred as max index + 1.
 pub fn load_csv(path: &Path, one_based: bool) -> Result<Coo, LoadError> {
-    let f = std::fs::File::open(path)?;
+    let f = std::fs::File::open(path).map_err(io_err(path))?;
     let reader = BufReader::new(f);
     let mut entries = Vec::new();
     let (mut max_r, mut max_c) = (0usize, 0usize);
     for (i, line) in reader.lines().enumerate() {
-        let line = line?;
+        let line = line.map_err(io_err(path))?;
         let t = line.trim();
         if t.is_empty() || t.starts_with('#') {
             continue;
         }
         let parts: Vec<&str> = t.split([',', '\t', ' ']).filter(|s| !s.is_empty()).collect();
         if parts.len() < 3 {
-            return perr(i + 1, format!("expected 3 fields, got {}", parts.len()));
+            return perr(path, i + 1, format!("expected 3 fields, got {}", parts.len()));
         }
         // skip a header row
         if i == 0 && parts[0].parse::<usize>().is_err() {
@@ -48,19 +63,19 @@ pub fn load_csv(path: &Path, one_based: bool) -> Result<Coo, LoadError> {
         }
         let r: usize = match parts[0].parse() {
             Ok(v) => v,
-            Err(_) => return perr(i + 1, "bad row id"),
+            Err(_) => return perr(path, i + 1, "bad row id"),
         };
         let c: usize = match parts[1].parse() {
             Ok(v) => v,
-            Err(_) => return perr(i + 1, "bad col id"),
+            Err(_) => return perr(path, i + 1, "bad col id"),
         };
         let v: f32 = match parts[2].parse() {
             Ok(v) => v,
-            Err(_) => return perr(i + 1, "bad value"),
+            Err(_) => return perr(path, i + 1, "bad value"),
         };
         let off = usize::from(one_based);
         if one_based && (r == 0 || c == 0) {
-            return perr(i + 1, "index 0 in one-based file");
+            return perr(path, i + 1, "index 0 in one-based file");
         }
         let (r, c) = (r - off, c - off);
         max_r = max_r.max(r);
@@ -76,27 +91,27 @@ pub fn load_csv(path: &Path, one_based: bool) -> Result<Coo, LoadError> {
 
 /// Load a MatrixMarket coordinate file (`%%MatrixMarket matrix coordinate ...`).
 pub fn load_matrix_market(path: &Path) -> Result<Coo, LoadError> {
-    let f = std::fs::File::open(path)?;
+    let f = std::fs::File::open(path).map_err(io_err(path))?;
     let reader = BufReader::new(f);
     let mut lines = reader.lines().enumerate();
 
     // header
     let (_, first) = match lines.next() {
-        Some((i, l)) => (i, l?),
-        None => return perr(0, "empty file"),
+        Some((i, l)) => (i, l.map_err(io_err(path))?),
+        None => return perr(path, 0, "empty file"),
     };
     if !first.starts_with("%%MatrixMarket") {
-        return perr(1, "missing MatrixMarket banner");
+        return perr(path, 1, "missing MatrixMarket banner");
     }
     if !first.contains("coordinate") {
-        return perr(1, "only coordinate format supported");
+        return perr(path, 1, "only coordinate format supported");
     }
 
     let mut dims: Option<(usize, usize, usize)> = None;
     let mut coo = Coo::new(0, 0);
     let mut count = 0usize;
     for (i, line) in lines {
-        let line = line?;
+        let line = line.map_err(io_err(path))?;
         let t = line.trim();
         if t.is_empty() || t.starts_with('%') {
             continue;
@@ -105,42 +120,45 @@ pub fn load_matrix_market(path: &Path) -> Result<Coo, LoadError> {
         match dims {
             None => {
                 if parts.len() != 3 {
-                    return perr(i + 1, "bad size line");
+                    return perr(path, i + 1, "bad size line");
                 }
-                let r = parts[0].parse().map_err(|_| LoadError::Parse {
-                    line: i + 1,
-                    msg: "bad rows".into(),
-                })?;
-                let c = parts[1].parse().map_err(|_| LoadError::Parse {
-                    line: i + 1,
-                    msg: "bad cols".into(),
-                })?;
-                let n = parts[2].parse().map_err(|_| LoadError::Parse {
-                    line: i + 1,
-                    msg: "bad nnz".into(),
-                })?;
+                let r = match parts[0].parse() {
+                    Ok(v) => v,
+                    Err(_) => return perr(path, i + 1, "bad rows"),
+                };
+                let c = match parts[1].parse() {
+                    Ok(v) => v,
+                    Err(_) => return perr(path, i + 1, "bad cols"),
+                };
+                let n = match parts[2].parse() {
+                    Ok(v) => v,
+                    Err(_) => return perr(path, i + 1, "bad nnz"),
+                };
                 dims = Some((r, c, n));
                 coo = Coo::new(r, c);
             }
             Some((r, c, _)) => {
                 if parts.len() < 2 {
-                    return perr(i + 1, "bad entry");
+                    return perr(path, i + 1, "bad entry");
                 }
-                let er: usize = parts[0]
-                    .parse()
-                    .map_err(|_| LoadError::Parse { line: i + 1, msg: "bad row".into() })?;
-                let ec: usize = parts[1]
-                    .parse()
-                    .map_err(|_| LoadError::Parse { line: i + 1, msg: "bad col".into() })?;
+                let er: usize = match parts[0].parse() {
+                    Ok(v) => v,
+                    Err(_) => return perr(path, i + 1, "bad row"),
+                };
+                let ec: usize = match parts[1].parse() {
+                    Ok(v) => v,
+                    Err(_) => return perr(path, i + 1, "bad col"),
+                };
                 let v: f32 = if parts.len() >= 3 {
-                    parts[2]
-                        .parse()
-                        .map_err(|_| LoadError::Parse { line: i + 1, msg: "bad val".into() })?
+                    match parts[2].parse() {
+                        Ok(v) => v,
+                        Err(_) => return perr(path, i + 1, "bad val"),
+                    }
                 } else {
                     1.0 // pattern matrices
                 };
                 if er == 0 || ec == 0 || er > r || ec > c {
-                    return perr(i + 1, "index out of bounds");
+                    return perr(path, i + 1, "index out of bounds");
                 }
                 coo.push(er - 1, ec - 1, v);
                 count += 1;
@@ -148,21 +166,40 @@ pub fn load_matrix_market(path: &Path) -> Result<Coo, LoadError> {
         }
     }
     match dims {
-        Some((_, _, n)) if n != count => perr(0, format!("nnz mismatch: header {n}, got {count}")),
+        Some((_, _, n)) if n != count => {
+            perr(path, 0, format!("nnz mismatch: header {n}, got {count}"))
+        }
         Some(_) => Ok(coo),
-        None => perr(0, "missing size line"),
+        None => perr(path, 0, "missing size line"),
     }
 }
 
-/// Save as CSV triplets (for exporting synthetic data).
+/// Save as CSV triplets (for exporting synthetic data). Atomic: the rows
+/// stream into a unique sibling temp file that is renamed over `path`
+/// only after a successful flush, so a crash mid-write can never leave a
+/// truncated CSV where a complete one was expected.
 pub fn save_csv(coo: &Coo, path: &Path) -> std::io::Result<()> {
-    use std::io::Write;
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    writeln!(f, "row,col,value")?;
-    for e in &coo.entries {
-        writeln!(f, "{},{},{}", e.row, e.col, e.val)?;
+    static WRITE_SEQ: AtomicU64 = AtomicU64::new(0);
+    let mut tmp_name = path.as_os_str().to_owned();
+    tmp_name.push(format!(
+        ".{}.{}.tmp",
+        std::process::id(),
+        WRITE_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let tmp = PathBuf::from(tmp_name);
+    let write = (|| {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        writeln!(f, "row,col,value")?;
+        for e in &coo.entries {
+            writeln!(f, "{},{},{}", e.row, e.col, e.val)?;
+        }
+        f.flush()
+    })();
+    let renamed = write.and_then(|()| std::fs::rename(&tmp, path));
+    if renamed.is_err() {
+        std::fs::remove_file(&tmp).ok();
     }
-    Ok(())
+    renamed
 }
 
 #[cfg(test)]
@@ -202,6 +239,44 @@ mod tests {
         let p = tmp("csv3", "0,1\n");
         assert!(load_csv(&p, false).is_err());
         std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn errors_name_the_offending_file() {
+        let missing = std::env::temp_dir().join("bmfpp_definitely_missing.csv");
+        let err = load_csv(&missing, false).unwrap_err();
+        assert!(
+            err.to_string().contains("bmfpp_definitely_missing.csv"),
+            "io error does not name the file: {err}"
+        );
+        let p = tmp("csv4", "0,notanumber,1.0\n");
+        let err = load_csv(&p, false).unwrap_err();
+        let rendered = err.to_string();
+        assert!(rendered.contains("bmfpp_test_csv4"), "parse error lacks path: {rendered}");
+        assert!(rendered.contains(":1:"), "parse error lacks line: {rendered}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn save_csv_is_atomic_and_leaves_no_temp() {
+        let mut coo = Coo::new(2, 2);
+        coo.push(0, 0, 1.5);
+        let dir = std::env::temp_dir()
+            .join(format!("bmfpp_atomic_csv_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("data.csv");
+        save_csv(&coo, &out).unwrap();
+        assert!(out.exists());
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files left behind: {leftovers:?}");
+        // writing into a missing directory errors without creating junk
+        let bad = dir.join("no_such_subdir").join("x.csv");
+        assert!(save_csv(&coo, &bad).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -127,6 +127,8 @@ pub mod rng;
 #[doc(hidden)]
 pub mod runtime;
 #[doc(hidden)]
+pub mod store;
+#[doc(hidden)]
 pub mod testing;
 #[doc(hidden)]
 pub mod util;

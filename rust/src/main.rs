@@ -7,6 +7,13 @@
 //!             and the holdout set (--save-test). Within-block sweeps run
 //!             lockstep by default; --sweep pipelined overlaps the factor
 //!             exchange with sampling (--chunk-rows, --staleness).
+//!             --store <dir> trains out-of-core from a shard store written
+//!             by `ingest` instead of loading the matrix: blocks stream
+//!             through an LRU cache bounded by --cache-bytes (0 =
+//!             unbounded), warmed by a DAG-order prefetcher — the
+//!             posterior is bitwise-identical to the resident run (pass
+//!             the same --tau); --test-file <csv> scores the holdout that
+//!             `ingest --save-test` wrote.
 //!             --priority low|normal|high tags the job in the engine's
 //!             shared queue; --resume <v3.json | checkpoint-dir> continues
 //!             an interrupted run from its partial checkpoint — a
@@ -20,6 +27,12 @@
 //!             --checkpoint-keep, default 3) so even SIGKILL loses at most
 //!             N blocks; --max-in-flight caps the job's concurrent block
 //!             tasks
+//!   ingest    one-pass conversion of a dataset into a per-block shard
+//!             store (--out <dir>, --grid IxJ): binary shard files plus a
+//!             versioned, checksummed manifest, all written atomically.
+//!             Splits off the same holdout `train` would (--test-frac,
+//!             seed-stable) so --save-test <csv> + `train --store --test-file`
+//!             reproduce the resident run's RMSE exactly
 //!   jobs      multi-tenant demo: submit several concurrent training jobs
 //!             at mixed priorities on ONE engine and stream their status
 //!             (id / priority / state / block progress) until all finish;
@@ -57,6 +70,8 @@
 //!   bmf-pp train --dataset netflix --scale 0.002 --grid 4x2 --samples 20
 //!   bmf-pp train --dataset movielens --save m.json --save-test holdout.csv
 //!   bmf-pp train --dataset movielens --resume aborted_v3.json
+//!   bmf-pp ingest --dataset movielens --grid 3x3 --out shards --save-test h.csv
+//!   bmf-pp train --store shards --tau 1.5 --cache-bytes 65536 --test-file h.csv
 //!   bmf-pp jobs --jobs 3 --cancel-demo
 //!   bmf-pp predict --load m.json --file holdout.csv
 //!   bmf-pp serve --checkpoint-dir ckpts --addr 127.0.0.1:7878
@@ -84,9 +99,11 @@ use bmf_pp::metrics::recorder::Recorder;
 use bmf_pp::metrics::throughput::Throughput;
 use bmf_pp::partition::{balance, Grid};
 use bmf_pp::serve::{ModelSource, ServeConfig, Server};
+use bmf_pp::store::{ingest, ShardStore};
 use bmf_pp::util::cli::Args;
 use bmf_pp::util::timer::{fmt_duration, fmt_hhmm, Stopwatch};
 use std::path::Path;
+use std::sync::Arc;
 
 /// A fully-parsed subcommand, ready to execute. Parsing consumes flags;
 /// execution does the work — so the dispatch path can reject unknown
@@ -157,6 +174,12 @@ fn plan_train(args: &Args) -> anyhow::Result<Action> {
     let data = DataSpec::from_args(args);
     let test_frac = args.f64_or("test-frac", 0.2);
     let grid = args.grid_or("grid", (1, 1));
+    // store-backed runs default the grid to the store's ingest grid
+    let grid_set = args.get("grid").is_some();
+    let store_dir = args.get("store").map(str::to_string);
+    let cache_bytes = args.u64_or("cache-bytes", 0);
+    let test_file = args.get("test-file").map(str::to_string);
+    let k_flag = args.usize_or("k", 16);
     let burnin = args.usize_or("burnin", 8);
     let samples = args.usize_or("samples", 20);
     let workers = args.usize_or("workers", 1);
@@ -186,53 +209,101 @@ fn plan_train(args: &Args) -> anyhow::Result<Action> {
     let quiet = args.bool_or("quiet", false);
 
     Ok(Box::new(move || {
-        let (data, k) = data.load()?;
-        let (train, test) = holdout_split_covered(&data, test_frac, 7);
-        let mut cfg = TrainConfig::new(k)
-            .with_grid(grid.0, grid.1)
-            .with_sweeps(burnin, samples)
-            .with_workers(workers)
-            .with_seed(seed)
-            .with_tau(tau.unwrap_or_else(|| auto_tau(&train)))
-            .with_scheduler(scheduler)
-            .with_sweep_mode(sweep)
-            .with_chunk_rows(chunk_rows)
-            .with_staleness(staleness);
-        if native {
-            cfg = cfg.with_backend(BackendSpec::Native);
-        }
-        if let Some(bp) = block_parallelism {
-            cfg.block_parallelism = bp;
-        }
-        cfg = cfg.with_priority(priority).with_max_in_flight(max_in_flight);
-        if let Some(path) = &resume_path {
-            cfg = cfg.with_resume_from(path.clone());
-        }
-        if let Some(path) = &cancel_ckpt {
-            cfg = cfg.with_checkpoint_on_cancel(path.clone());
-        }
-        if checkpoint_every > 0 {
-            cfg = cfg.with_checkpoint_every(checkpoint_every);
-        }
-        if let Some(dir) = &checkpoint_dir {
-            cfg = cfg.with_checkpoint_dir(dir.clone());
-        }
-        cfg = cfg.with_checkpoint_keep(checkpoint_keep);
-        cfg.phase_sample_frac = phase_sample_frac;
-        // per-sweep RMSE costs an extra O(nnz·k) pass per retained sweep;
-        // only pay for it when --metrics will actually record the series
-        cfg.stream_sweep_rmse = metrics_path.is_some();
+        // one config builder for both data sources; only K, tau, and the
+        // grid differ between them
+        let build_cfg = |k: usize, tau: f64, grid: (usize, usize)| {
+            let mut cfg = TrainConfig::new(k)
+                .with_grid(grid.0, grid.1)
+                .with_sweeps(burnin, samples)
+                .with_workers(workers)
+                .with_seed(seed)
+                .with_tau(tau)
+                .with_scheduler(scheduler)
+                .with_sweep_mode(sweep)
+                .with_chunk_rows(chunk_rows)
+                .with_staleness(staleness)
+                .with_cache_bytes(cache_bytes);
+            if native {
+                cfg = cfg.with_backend(BackendSpec::Native);
+            }
+            if let Some(bp) = block_parallelism {
+                cfg.block_parallelism = bp;
+            }
+            cfg = cfg.with_priority(priority).with_max_in_flight(max_in_flight);
+            if let Some(path) = &resume_path {
+                cfg = cfg.with_resume_from(path.clone());
+            }
+            if let Some(path) = &cancel_ckpt {
+                cfg = cfg.with_checkpoint_on_cancel(path.clone());
+            }
+            if checkpoint_every > 0 {
+                cfg = cfg.with_checkpoint_every(checkpoint_every);
+            }
+            if let Some(dir) = &checkpoint_dir {
+                cfg = cfg.with_checkpoint_dir(dir.clone());
+            }
+            cfg = cfg.with_checkpoint_keep(checkpoint_keep);
+            cfg.phase_sample_frac = phase_sample_frac;
+            // per-sweep RMSE costs an extra O(nnz·k) pass per retained sweep;
+            // only pay for it when --metrics will actually record the series
+            cfg.stream_sweep_rmse = metrics_path.is_some();
+            cfg
+        };
 
-        println!(
-            "training D-BMF+PP: {}x{} matrix, {} ratings, K={k}, grid {}x{}",
-            train.rows,
-            train.cols,
-            train.nnz(),
-            grid.0,
-            grid.1
-        );
-        let engine = Engine::new(&cfg.backend, cfg.block_parallelism);
-        let session = engine.submit(cfg, &train)?;
+        // data source: an ingested shard store (out-of-core) or a resident
+        // matrix loaded and split here
+        let (_engine, session, rows, cols, nnz, test) = if let Some(dir) = &store_dir {
+            let store = Arc::new(ShardStore::open(Path::new(dir))?);
+            let test = match &test_file {
+                Some(p) => Some(loader::load_csv(Path::new(p), false)?),
+                None => None,
+            };
+            let (rows, cols, nnz) = (store.rows(), store.cols(), store.nnz());
+            let grid = if grid_set { grid } else { store.grid_dims() };
+            // auto_tau needs the resident ratings; a store-backed run must
+            // be told the value the resident run derived
+            let tau = match tau {
+                Some(t) => t,
+                None => {
+                    println!(
+                        "note: --tau not set; store-backed runs default to 1.0 \
+                         (pass the resident run's --tau for identical posteriors)"
+                    );
+                    1.0
+                }
+            };
+            let cfg = build_cfg(k_flag, tau, grid);
+            println!(
+                "training D-BMF+PP (store-backed): {rows}x{cols} matrix, {nnz} ratings, \
+                 K={k_flag}, grid {}x{}, cache budget {}",
+                grid.0,
+                grid.1,
+                if cache_bytes == 0 {
+                    "unbounded".to_string()
+                } else {
+                    format!("{cache_bytes} bytes")
+                }
+            );
+            let engine = Engine::new(&cfg.backend, cfg.block_parallelism);
+            let session = engine.submit_store(cfg, store)?;
+            (engine, session, rows, cols, nnz, test)
+        } else {
+            let (data, k) = data.load()?;
+            let (train, test) = holdout_split_covered(&data, test_frac, 7);
+            let tau = tau.unwrap_or_else(|| auto_tau(&train));
+            let cfg = build_cfg(k, tau, grid);
+            println!(
+                "training D-BMF+PP: {}x{} matrix, {} ratings, K={k}, grid {}x{}",
+                train.rows,
+                train.cols,
+                train.nnz(),
+                grid.0,
+                grid.1
+            );
+            let engine = Engine::new(&cfg.backend, cfg.block_parallelism);
+            let session = engine.submit(cfg, &train)?;
+            (engine, session, train.rows, train.cols, train.nnz(), Some(test))
+        };
 
         // live progress: consume the session's typed event stream
         let mut recorder = Recorder::new();
@@ -265,6 +336,7 @@ fn plan_train(args: &Args) -> anyhow::Result<Action> {
                 }
                 TrainEvent::SweepSample { .. } => {} // recorded, not printed
                 TrainEvent::ChunkExchanged { .. } => {} // counted, not printed
+                TrainEvent::ShardLoaded { .. } => {} // summarized after the run
                 TrainEvent::CheckpointSaved { path, blocks } => {
                     println!(
                         "[{:>6.2}s] partial checkpoint ({blocks} blocks) -> {}",
@@ -319,7 +391,6 @@ fn plan_train(args: &Args) -> anyhow::Result<Action> {
             ),
         };
 
-        let rmse = result.rmse(&test);
         println!(
             "phases: a={} b={} c={} aggregate={} total={}",
             fmt_duration(result.timings.a),
@@ -342,17 +413,40 @@ fn plan_train(args: &Args) -> anyhow::Result<Action> {
                 result.stats.blocks_restored, result.stats.blocks
             );
         }
+        if store_dir.is_some() {
+            println!(
+                "shard cache: {} hits, {} misses, {} prefetch hits, {} evictions \
+                 (peak {} bytes resident)",
+                result.stats.shard_hits,
+                result.stats.shard_misses,
+                result.stats.shard_prefetch_hits,
+                result.stats.shard_evictions,
+                result.stats.shard_bytes_peak
+            );
+        }
         let tp = Throughput::measure(
-            train.rows,
-            train.cols,
-            train.nnz(),
+            rows,
+            cols,
+            nnz,
             result.stats.sweeps / result.stats.blocks.max(1),
             result.timings.total,
         );
         println!("throughput: {}", tp.format_table1());
-        println!("test RMSE = {rmse:.4}  (wall-clock {})", fmt_hhmm(result.timings.total));
+        match &test {
+            Some(test) => println!(
+                "test RMSE = {:.4}  (wall-clock {})",
+                result.rmse(test),
+                fmt_hhmm(result.timings.total)
+            ),
+            None => println!(
+                "wall-clock {} (no holdout scored; pass --test-file <csv>)",
+                fmt_hhmm(result.timings.total)
+            ),
+        }
         if let Some(path) = metrics_path {
-            recorder.scalar("test_rmse", rmse);
+            if let Some(test) = &test {
+                recorder.scalar("test_rmse", result.rmse(test));
+            }
             recorder.save(Path::new(&path))?;
             println!("metrics saved to {path}");
         }
@@ -360,6 +454,58 @@ fn plan_train(args: &Args) -> anyhow::Result<Action> {
             checkpoint::save(&result, Path::new(&path))?;
             println!("checkpoint saved to {path}");
         }
+        if let Some(path) = save_test {
+            match &test {
+                Some(test) => {
+                    loader::save_csv(test, Path::new(&path))?;
+                    println!("holdout set saved to {path} ({} ratings)", test.nnz());
+                }
+                None => anyhow::bail!(
+                    "--save-test needs a dataset split (use `ingest --save-test` \
+                     for store-backed runs)"
+                ),
+            }
+        }
+        Ok(())
+    }))
+}
+
+/// `ingest` — one-pass conversion of a dataset into a per-block shard
+/// store on disk, the input side of out-of-core `train --store`.
+fn plan_ingest(args: &Args) -> anyhow::Result<Action> {
+    let data = DataSpec::from_args(args);
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow::anyhow!("--out <dir> required"))?
+        .to_string();
+    let (gi, gj) = args.grid_or("grid", (2, 2));
+    let test_frac = args.f64_or("test-frac", 0.2);
+    let save_test = args.get("save-test").map(str::to_string);
+
+    Ok(Box::new(move || {
+        let clock = Stopwatch::start();
+        let (full, _k) = data.load()?;
+        // mirror `train`'s holdout split (same seed) so a store-backed run
+        // scores the exact holdout a resident run of these flags would;
+        // --save-test writes it out for `train --store --test-file`
+        let (train, test) = holdout_split_covered(&full, test_frac, 7);
+        let report = ingest(&train, gi, gj, Path::new(&out))?;
+        let secs = clock.secs();
+        println!(
+            "ingested {}x{} ({} ratings) as {} shards ({gi}x{gj} grid, {} bytes) in {}",
+            train.rows,
+            train.cols,
+            report.nnz,
+            report.blocks,
+            report.bytes,
+            fmt_duration(secs)
+        );
+        println!(
+            "global mean {:.6}; manifest -> {}",
+            report.global_mean,
+            report.manifest_path.display()
+        );
+        println!("throughput: {:.0} ratings/s", report.nnz as f64 / secs.max(1e-9));
         if let Some(path) = save_test {
             loader::save_csv(&test, Path::new(&path))?;
             println!("holdout set saved to {path} ({} ratings)", test.nnz());
@@ -451,8 +597,17 @@ fn plan_jobs(args: &Args) -> anyhow::Result<Action> {
                         Some(s) => format!(" wait={s:.2}s"),
                         None => String::new(),
                     };
+                    // shard-cache traffic only appears for store-backed jobs
+                    let sh = if j.shard_hits + j.shard_misses > 0 {
+                        format!(
+                            " cache={}h/{}m/{}p",
+                            j.shard_hits, j.shard_misses, j.shard_prefetch_hits
+                        )
+                    } else {
+                        String::new()
+                    };
                     format!(
-                        "#{} {}:{} {}/{}{qw}",
+                        "#{} {}:{} {}/{}{qw}{sh}",
                         j.id, j.priority, j.status, j.blocks_done, j.blocks_total
                     )
                 })
@@ -844,6 +999,7 @@ fn main() {
     // stage 1: parse — each plan_* consumes exactly the flags it accepts
     let planned = match args.subcommand.as_deref() {
         Some("train") => plan_train(&args),
+        Some("ingest") => plan_ingest(&args),
         Some("jobs") => plan_jobs(&args),
         Some("predict") => plan_predict(&args),
         Some("serve") => plan_serve(&args),
@@ -855,7 +1011,7 @@ fn main() {
         Some("recommend-grid") => plan_recommend_grid(&args),
         other => {
             eprintln!(
-                "usage: bmf-pp <train|jobs|predict|serve|baseline|datasets|partition|simulate|evaluate|recommend-grid> [--flags]\n\
+                "usage: bmf-pp <train|ingest|jobs|predict|serve|baseline|datasets|partition|simulate|evaluate|recommend-grid> [--flags]\n\
                  (got: {other:?}) — see crate docs for flag reference"
             );
             std::process::exit(2);

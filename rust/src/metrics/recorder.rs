@@ -69,6 +69,18 @@ impl Recorder {
             TrainEvent::CheckpointSaved { blocks, .. } => {
                 self.scalar("checkpoint_blocks", *blocks as f64);
             }
+            TrainEvent::ShardLoaded {
+                hits, misses, prefetch_hits, evictions, resident_bytes, ..
+            } => {
+                // the event carries cumulative totals, so the last one
+                // observed leaves the final counters in the scalars
+                self.scalar("shard_hits", *hits as f64);
+                self.scalar("shard_misses", *misses as f64);
+                self.scalar("shard_prefetch_hits", *prefetch_hits as f64);
+                self.scalar("shard_evictions", *evictions as f64);
+                let idx = self.get_series("shard_resident_bytes").map_or(0, |s| s.len());
+                self.point("shard_resident_bytes", idx as f64, *resident_bytes as f64);
+            }
             TrainEvent::PhaseStarted { .. } | TrainEvent::BlockRestored { .. } => {}
         }
     }
@@ -158,6 +170,29 @@ mod tests {
             j.get("scalars").unwrap().get("chunks_exchanged").unwrap().as_f64(),
             Some(3.0)
         );
+    }
+
+    #[test]
+    fn observes_shard_loads_as_cumulative_scalars() {
+        use crate::coordinator::TrainEvent;
+        let mut r = Recorder::new();
+        for i in 0..2u64 {
+            r.observe(&TrainEvent::ShardLoaded {
+                node: (0, i as usize),
+                bytes: 24,
+                prefetch: i == 1,
+                hits: i,
+                misses: i + 1,
+                prefetch_hits: i,
+                evictions: i,
+                resident_bytes: 24 * (i + 1),
+            });
+        }
+        assert_eq!(r.get_scalar("shard_hits"), Some(1.0));
+        assert_eq!(r.get_scalar("shard_misses"), Some(2.0));
+        assert_eq!(r.get_scalar("shard_prefetch_hits"), Some(1.0));
+        assert_eq!(r.get_scalar("shard_evictions"), Some(1.0));
+        assert_eq!(r.get_series("shard_resident_bytes").unwrap().len(), 2);
     }
 
     #[test]

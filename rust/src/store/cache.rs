@@ -1,0 +1,494 @@
+//! Byte-budgeted LRU shard cache and the DAG-fed background prefetcher.
+//!
+//! [`ShardCache`] sits between block tasks and a [`ShardStore`]: a task
+//! asks for block `(i, j)` and gets an `Arc<BlockData>` — from memory if
+//! the shard is resident (a **hit**), otherwise read + decoded from disk
+//! (a **miss**). Residency is bounded by a byte budget: after every load
+//! the least-recently-used shards are evicted until the total is back
+//! under `cache_bytes` (0 = unbounded). Eviction only drops the cache's
+//! own `Arc`; a task mid-sample keeps its block alive, so even a budget
+//! smaller than one shard is safe — it just evicts every block after use.
+//!
+//! Loads happen **outside** the cache lock: a loading slot is marked
+//! `Loading`, concurrent requesters for the same shard wait on a condvar
+//! instead of reading the file twice, and everyone else proceeds.
+//!
+//! [`Prefetcher`] is a single background thread fed by the DAG
+//! scheduler's ready-order (see `DagRunOpts::on_ready`): as the scheduler
+//! unlocks a block it pushes the coordinates here, so the shard is
+//! already warming from disk while the block sits in the ready queue. A
+//! task whose shard was first brought in by the prefetcher counts a
+//! **prefetch hit** on first touch. Prefetch I/O errors are swallowed —
+//! the same typed error resurfaces on the task's own `get`.
+//!
+//! Counter semantics (all cumulative per cache, surfaced in `RunStats`,
+//! `TrainEvent::ShardLoaded`, `bmf-pp jobs`, and `perf_probe`):
+//! - `hits` — task `get`s served without this task reading disk
+//!   (including waits on a load already in flight);
+//! - `misses` — task `get`s that had to read the shard from disk;
+//! - `prefetch_hits` — subset of hits whose shard was resident (or in
+//!   flight) because of the prefetcher, counted once per load;
+//! - `evictions` — shards dropped to respect the budget;
+//! - `resident_bytes` / `peak_bytes` — current and high-water shard
+//!   bytes resident (accounted at on-disk size, `nnz * 12`).
+
+use super::manifest::StoreError;
+use super::shard::ShardStore;
+use crate::coordinator::backend::BlockData;
+use std::collections::hash_map::Entry;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Cumulative cache counters, shared between the cache, the run's
+/// `RunStats`, and live `jobs` snapshots. See the module docs for exact
+/// semantics.
+#[derive(Debug, Default)]
+pub struct ShardCounters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    prefetch_hits: AtomicU64,
+    evictions: AtomicU64,
+    resident_bytes: AtomicU64,
+    peak_bytes: AtomicU64,
+}
+
+/// A point-in-time copy of [`ShardCounters`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShardCounterSnapshot {
+    /// Task fetches served from memory.
+    pub hits: u64,
+    /// Task fetches that read the shard from disk.
+    pub misses: u64,
+    /// Hits attributable to the prefetcher (once per prefetched load).
+    pub prefetch_hits: u64,
+    /// Shards evicted to respect the byte budget.
+    pub evictions: u64,
+    /// Shard bytes currently resident.
+    pub resident_bytes: u64,
+    /// High-water mark of resident shard bytes.
+    pub peak_bytes: u64,
+}
+
+impl ShardCounters {
+    /// Copy the current counter values.
+    pub fn snapshot(&self) -> ShardCounterSnapshot {
+        ShardCounterSnapshot {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            prefetch_hits: self.prefetch_hits.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            resident_bytes: self.resident_bytes.load(Ordering::Relaxed),
+            peak_bytes: self.peak_bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// What a disk load looked like, passed to the cache's `on_load` hook
+/// (the trainer turns this into `TrainEvent::ShardLoaded`).
+#[derive(Debug, Clone, Copy)]
+pub struct ShardLoad {
+    /// Row-block index of the loaded shard.
+    pub i: usize,
+    /// Column-block index of the loaded shard.
+    pub j: usize,
+    /// On-disk bytes of the shard.
+    pub bytes: u64,
+    /// Whether the prefetcher (rather than a blocked task) loaded it.
+    pub prefetch: bool,
+    /// Counter values just after this load was accounted.
+    pub counters: ShardCounterSnapshot,
+}
+
+/// Callback invoked (outside the cache lock) after every disk load.
+pub type LoadHook = Box<dyn Fn(&ShardLoad) + Send + Sync>;
+
+enum Slot {
+    /// Some thread is reading this shard from disk; wait on the condvar.
+    Loading,
+    /// Resident, ready to hand out.
+    Ready { data: Arc<BlockData>, bytes: u64, last_used: u64, prefetched: bool },
+}
+
+struct CacheState {
+    slots: HashMap<(usize, usize), Slot>,
+    bytes: u64,
+    tick: u64,
+}
+
+/// Byte-budgeted LRU cache over a [`ShardStore`]. Thread-safe; clone the
+/// `Arc<ShardCache>` into every consumer.
+pub struct ShardCache {
+    store: Arc<ShardStore>,
+    budget: u64,
+    counters: Arc<ShardCounters>,
+    state: Mutex<CacheState>,
+    cv: Condvar,
+    on_load: Option<LoadHook>,
+}
+
+impl ShardCache {
+    /// Create a cache over `store` holding at most `budget_bytes` of
+    /// shards (0 = unbounded). `counters` is shared so the run can
+    /// snapshot live values; `on_load` fires after each disk load.
+    pub fn new(
+        store: Arc<ShardStore>,
+        budget_bytes: u64,
+        counters: Arc<ShardCounters>,
+        on_load: Option<LoadHook>,
+    ) -> ShardCache {
+        ShardCache {
+            store,
+            budget: budget_bytes,
+            counters,
+            state: Mutex::new(CacheState { slots: HashMap::new(), bytes: 0, tick: 0 }),
+            cv: Condvar::new(),
+            on_load,
+        }
+    }
+
+    /// The store this cache reads from.
+    pub fn store(&self) -> &Arc<ShardStore> {
+        &self.store
+    }
+
+    /// The configured byte budget (0 = unbounded).
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget
+    }
+
+    /// The shared counters.
+    pub fn counters(&self) -> &Arc<ShardCounters> {
+        &self.counters
+    }
+
+    /// Fetch block `(i, j)` for a task, reading it from disk on a miss.
+    /// Concurrent requests for the same shard perform one read.
+    pub fn get(&self, i: usize, j: usize) -> Result<Arc<BlockData>, StoreError> {
+        let key = (i, j);
+        let mut g = self.state.lock().unwrap();
+        loop {
+            g.tick += 1;
+            let tick = g.tick;
+            match g.slots.entry(key) {
+                Entry::Vacant(slot) => {
+                    slot.insert(Slot::Loading);
+                    break;
+                }
+                Entry::Occupied(mut slot) => match slot.get_mut() {
+                    Slot::Ready { data, last_used, prefetched, .. } => {
+                        *last_used = tick;
+                        let first_prefetched_touch = std::mem::replace(prefetched, false);
+                        let data = data.clone();
+                        self.counters.hits.fetch_add(1, Ordering::Relaxed);
+                        if first_prefetched_touch {
+                            self.counters.prefetch_hits.fetch_add(1, Ordering::Relaxed);
+                        }
+                        return Ok(data);
+                    }
+                    Slot::Loading => {}
+                },
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+        drop(g);
+        // read + decode outside the lock; other shards stay available
+        let loaded = self.load_block(i, j);
+        let mut g = self.state.lock().unwrap();
+        match loaded {
+            Err(e) => {
+                g.slots.remove(&key);
+                self.cv.notify_all();
+                Err(e)
+            }
+            Ok((data, bytes)) => {
+                self.counters.misses.fetch_add(1, Ordering::Relaxed);
+                g.tick += 1;
+                let tick = g.tick;
+                g.slots.insert(
+                    key,
+                    Slot::Ready { data: data.clone(), bytes, last_used: tick, prefetched: false },
+                );
+                g.bytes += bytes;
+                self.evict_to_budget(&mut g);
+                self.cv.notify_all();
+                drop(g);
+                self.fire_on_load(i, j, bytes, false);
+                Ok(data)
+            }
+        }
+    }
+
+    /// Warm block `(i, j)` in the background. No-op if it is already
+    /// resident or in flight; errors are swallowed (they resurface,
+    /// typed, when a task `get`s the shard).
+    pub fn prefetch(&self, i: usize, j: usize) {
+        let key = (i, j);
+        {
+            let mut g = self.state.lock().unwrap();
+            match g.slots.entry(key) {
+                Entry::Occupied(_) => return,
+                Entry::Vacant(slot) => {
+                    slot.insert(Slot::Loading);
+                }
+            }
+        }
+        match self.load_block(i, j) {
+            Err(_) => {
+                let mut g = self.state.lock().unwrap();
+                g.slots.remove(&key);
+                self.cv.notify_all();
+            }
+            Ok((data, bytes)) => {
+                let mut g = self.state.lock().unwrap();
+                g.tick += 1;
+                let tick = g.tick;
+                g.slots
+                    .insert(key, Slot::Ready { data, bytes, last_used: tick, prefetched: true });
+                g.bytes += bytes;
+                self.evict_to_budget(&mut g);
+                self.cv.notify_all();
+                drop(g);
+                self.fire_on_load(i, j, bytes, true);
+            }
+        }
+    }
+
+    fn load_block(&self, i: usize, j: usize) -> Result<(Arc<BlockData>, u64), StoreError> {
+        let shard = self.store.read_block(i, j)?;
+        let bytes = self.store.shard_bytes(i, j);
+        Ok((Arc::new(BlockData::new(shard.coo)), bytes))
+    }
+
+    /// Evict least-recently-used Ready shards until under budget (the
+    /// just-inserted shard may be the victim — its requester already
+    /// holds an `Arc`, so a degenerate budget still makes progress).
+    fn evict_to_budget(&self, state: &mut CacheState) {
+        if self.budget > 0 {
+            while state.bytes > self.budget {
+                let victim = state
+                    .slots
+                    .iter()
+                    .filter_map(|(k, s)| match s {
+                        Slot::Ready { last_used, .. } => Some((*last_used, *k)),
+                        Slot::Loading => None,
+                    })
+                    .min();
+                let Some((_, k)) = victim else { break };
+                if let Some(Slot::Ready { bytes, .. }) = state.slots.remove(&k) {
+                    state.bytes -= bytes;
+                    self.counters.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        self.counters.resident_bytes.store(state.bytes, Ordering::Relaxed);
+        self.counters.peak_bytes.fetch_max(state.bytes, Ordering::Relaxed);
+    }
+
+    fn fire_on_load(&self, i: usize, j: usize, bytes: u64, prefetch: bool) {
+        if let Some(hook) = &self.on_load {
+            hook(&ShardLoad { i, j, bytes, prefetch, counters: self.counters.snapshot() });
+        }
+    }
+}
+
+struct QueueInner {
+    pending: VecDeque<(usize, usize)>,
+    closed: bool,
+}
+
+struct PrefetchQueue {
+    inner: Mutex<QueueInner>,
+    cv: Condvar,
+}
+
+/// Cheap cloneable handle for pushing prefetch requests from scheduler
+/// callbacks.
+#[derive(Clone)]
+pub struct PrefetchHandle {
+    queue: Arc<PrefetchQueue>,
+}
+
+impl PrefetchHandle {
+    /// Ask the prefetcher to warm block `(i, j)` soon. Duplicate pending
+    /// requests are coalesced; requests after shutdown are dropped.
+    pub fn request(&self, i: usize, j: usize) {
+        let mut g = self.queue.inner.lock().unwrap();
+        if !g.closed && !g.pending.contains(&(i, j)) {
+            g.pending.push_back((i, j));
+            self.queue.cv.notify_one();
+        }
+    }
+}
+
+/// A background thread that warms shards in DAG ready-order. Dropping it
+/// closes the queue and joins the thread.
+pub struct Prefetcher {
+    queue: Arc<PrefetchQueue>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Prefetcher {
+    /// Spawn the prefetch thread over `cache`.
+    pub fn spawn(cache: Arc<ShardCache>) -> Prefetcher {
+        let queue = Arc::new(PrefetchQueue {
+            inner: Mutex::new(QueueInner { pending: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        });
+        let q = queue.clone();
+        let worker = std::thread::Builder::new()
+            .name("bmfpp-prefetch".into())
+            .spawn(move || loop {
+                let next = {
+                    let mut g = q.inner.lock().unwrap();
+                    loop {
+                        if let Some(key) = g.pending.pop_front() {
+                            break Some(key);
+                        }
+                        if g.closed {
+                            break None;
+                        }
+                        g = q.cv.wait(g).unwrap();
+                    }
+                };
+                match next {
+                    Some((i, j)) => cache.prefetch(i, j),
+                    None => return,
+                }
+            })
+            .expect("spawn prefetch thread");
+        Prefetcher { queue, worker: Some(worker) }
+    }
+
+    /// A handle for feeding requests (e.g. from `DagRunOpts::on_ready`).
+    pub fn handle(&self) -> PrefetchHandle {
+        PrefetchHandle { queue: self.queue.clone() }
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        {
+            let mut g = self.queue.inner.lock().unwrap();
+            g.closed = true;
+        }
+        self.queue.cv.notify_all();
+        if let Some(worker) = self.worker.take() {
+            worker.join().ok();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::sparse::Coo;
+    use crate::store::ingest::ingest;
+    use std::path::PathBuf;
+
+    fn toy() -> Coo {
+        let mut c = Coo::new(6, 6);
+        for r in 0..6 {
+            for j in 0..6 {
+                if (r + j) % 2 == 0 {
+                    c.push(r, j, (r * 6 + j) as f32 * 0.5 - 3.0);
+                }
+            }
+        }
+        c
+    }
+
+    fn open_store(tag: &str) -> (Arc<ShardStore>, PathBuf) {
+        let dir = std::env::temp_dir()
+            .join(format!("bmfpp_store_cache_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        ingest(&toy(), 2, 2, &dir).unwrap();
+        (Arc::new(ShardStore::open(&dir).unwrap()), dir)
+    }
+
+    #[test]
+    fn hits_and_misses_are_counted() {
+        let (store, dir) = open_store("hits");
+        let counters = Arc::new(ShardCounters::default());
+        let cache = ShardCache::new(store, 0, counters.clone(), None);
+        cache.get(0, 0).unwrap();
+        cache.get(0, 0).unwrap();
+        cache.get(1, 1).unwrap();
+        let snap = counters.snapshot();
+        assert_eq!((snap.hits, snap.misses, snap.evictions), (1, 2, 0));
+        assert!(snap.resident_bytes > 0);
+        assert_eq!(snap.peak_bytes, snap.resident_bytes);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn budget_forces_lru_eviction() {
+        let (store, dir) = open_store("lru");
+        let one_shard = store.shard_bytes(0, 0);
+        let counters = Arc::new(ShardCounters::default());
+        // budget of one shard: every new load evicts the previous one
+        let cache = ShardCache::new(store, one_shard, counters.clone(), None);
+        cache.get(0, 0).unwrap();
+        cache.get(0, 1).unwrap();
+        cache.get(0, 0).unwrap(); // evicted above, so this is a miss again
+        let snap = counters.snapshot();
+        assert_eq!(snap.hits, 0);
+        assert_eq!(snap.misses, 3);
+        assert!(snap.evictions >= 2, "evictions = {}", snap.evictions);
+        assert!(snap.resident_bytes <= one_shard);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn prefetch_then_get_counts_a_prefetch_hit() {
+        let (store, dir) = open_store("prefetch");
+        let counters = Arc::new(ShardCounters::default());
+        let loads = Arc::new(AtomicU64::new(0));
+        let l = loads.clone();
+        let hook: LoadHook = Box::new(move |info| {
+            assert_eq!((info.i, info.j), (1, 0));
+            l.fetch_add(1, Ordering::Relaxed);
+        });
+        let cache = ShardCache::new(store, 0, counters.clone(), Some(hook));
+        cache.prefetch(1, 0);
+        cache.prefetch(1, 0); // coalesced: already resident
+        cache.get(1, 0).unwrap();
+        cache.get(1, 0).unwrap(); // plain hit, prefetch credited once
+        let snap = counters.snapshot();
+        assert_eq!(snap.misses, 0);
+        assert_eq!(snap.hits, 2);
+        assert_eq!(snap.prefetch_hits, 1);
+        assert_eq!(loads.load(Ordering::Relaxed), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn prefetcher_thread_warms_and_shuts_down() {
+        let (store, dir) = open_store("thread");
+        let counters = Arc::new(ShardCounters::default());
+        let cache = Arc::new(ShardCache::new(store, 0, counters.clone(), None));
+        let pf = Prefetcher::spawn(cache.clone());
+        let handle = pf.handle();
+        handle.request(0, 0);
+        handle.request(1, 1);
+        // wait until both shards are resident (Ready, not just in flight)
+        for _ in 0..2500 {
+            let ready = {
+                let g = cache.state.lock().unwrap();
+                [(0, 0), (1, 1)]
+                    .iter()
+                    .all(|k| matches!(g.slots.get(k), Some(Slot::Ready { .. })))
+            };
+            if ready {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        cache.get(0, 0).unwrap();
+        drop(pf); // joins cleanly
+        let snap = counters.snapshot();
+        assert_eq!(snap.misses, 0, "prefetcher should have loaded both shards");
+        assert_eq!(snap.prefetch_hits, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,204 @@
+//! One-pass ingest: split a loaded dataset into per-block shard files.
+//!
+//! [`ingest`] takes the `Coo` the existing loader path produced, splits
+//! it with [`Grid::split`] — the *same* single-pass router the resident
+//! trainer uses, so block membership, entry order, and local coordinates
+//! are identical by construction — and writes one binary shard file per
+//! block plus a versioned [`Manifest`](super::Manifest). Entries are
+//! written **raw** (uncentred); the global mean is computed here with the
+//! same `Coo::mean` pass the resident trainer's centring uses and
+//! persisted in the manifest, so materialization can centre each block
+//! bitwise-identically (see `store::shard` for the full contract).
+//!
+//! Every file write is atomic (same-directory temp + rename), so a
+//! crashed ingest never leaves a torn shard or manifest behind.
+
+use super::manifest::{atomic_write, fnv1a64, shard_file_name, Manifest, ShardMeta, StoreError};
+use super::shard::encode_block;
+use crate::data::sparse::Coo;
+use crate::partition::grid::{BlockId, Grid};
+use std::path::{Path, PathBuf};
+
+/// Summary of a completed ingest, for CLI reporting.
+#[derive(Debug, Clone)]
+pub struct IngestReport {
+    /// Shard files written (`grid.0 * grid.1`).
+    pub blocks: usize,
+    /// Total ratings ingested.
+    pub nnz: usize,
+    /// Total shard bytes written (excluding the manifest).
+    pub bytes: u64,
+    /// Global mean persisted in the manifest.
+    pub global_mean: f64,
+    /// Path of the written `manifest.json`.
+    pub manifest_path: PathBuf,
+}
+
+/// Split `data` on a `(gi, gj)` block grid and write shards + manifest
+/// into `dir` (created if absent).
+///
+/// One pass over the data: `Coo::mean` for the centring constant, one
+/// `Grid::split`, one encode + checksum + atomic write per block.
+/// Re-ingesting into the same directory atomically replaces each file,
+/// and the same input always produces byte-identical shards.
+pub fn ingest(data: &Coo, gi: usize, gj: usize, dir: &Path) -> Result<IngestReport, StoreError> {
+    if gi == 0 || gj == 0 || gi > data.rows || gj > data.cols {
+        return Err(StoreError::InvalidGrid { gi, gj, rows: data.rows, cols: data.cols });
+    }
+    std::fs::create_dir_all(dir)
+        .map_err(|source| StoreError::Io { path: dir.to_path_buf(), source })?;
+    // Same mean the resident trainer's `center()` computes on this data.
+    let global_mean = data.mean();
+    let grid = Grid::new(data.rows, data.cols, gi, gj);
+    let blocks = grid.split(data);
+    let mut shards = Vec::with_capacity(gi * gj);
+    let mut bytes_total = 0u64;
+    for (i, row) in blocks.iter().enumerate() {
+        for (j, block) in row.iter().enumerate() {
+            let bytes = encode_block(block);
+            let file = shard_file_name(i, j);
+            atomic_write(&dir.join(&file), &bytes)?;
+            let (rows, cols) = grid.block_shape(BlockId { i, j });
+            bytes_total += bytes.len() as u64;
+            shards.push(ShardMeta {
+                i,
+                j,
+                rows,
+                cols,
+                nnz: block.nnz(),
+                checksum: fnv1a64(&bytes),
+                file,
+            });
+        }
+    }
+    let manifest = Manifest {
+        rows: data.rows,
+        cols: data.cols,
+        grid: (gi, gj),
+        nnz: data.nnz(),
+        global_mean,
+        shards,
+    };
+    manifest.save(dir)?;
+    Ok(IngestReport {
+        blocks: gi * gj,
+        nnz: data.nnz(),
+        bytes: bytes_total,
+        global_mean,
+        manifest_path: dir.join(super::manifest::MANIFEST_FILE),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::ShardStore;
+
+    fn toy() -> Coo {
+        let mut c = Coo::new(6, 5);
+        for (r, col, v) in
+            [(0, 0, 1.0), (1, 3, 2.5), (2, 2, -0.5), (3, 4, 4.0), (5, 1, 3.0), (5, 4, 0.25)]
+        {
+            c.push(r, col, v as f32);
+        }
+        c
+    }
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("bmfpp_store_ingest_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    #[test]
+    fn ingest_then_open_round_trips_centred_blocks() {
+        let data = toy();
+        let dir = temp_dir("roundtrip");
+        let report = ingest(&data, 2, 2, &dir).unwrap();
+        assert_eq!(report.blocks, 4);
+        assert_eq!(report.nnz, data.nnz());
+        let store = ShardStore::open(&dir).unwrap();
+        assert_eq!(store.global_mean().to_bits(), data.mean().to_bits());
+
+        // reference: resident path centres first, then splits
+        let mean = data.mean() as f32;
+        let mut centred = data.clone();
+        for e in &mut centred.entries {
+            e.val -= mean;
+        }
+        let expect = Grid::new(6, 5, 2, 2).split(&centred);
+        for i in 0..2 {
+            for j in 0..2 {
+                let got = store.read_block(i, j).unwrap();
+                assert_eq!(got.coo.entries, expect[i][j].entries, "block ({i},{j})");
+                assert_eq!((got.coo.rows, got.coo.cols), (expect[i][j].rows, expect[i][j].cols));
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn ingest_is_deterministic_byte_for_byte() {
+        let data = toy();
+        let (d1, d2) = (temp_dir("det1"), temp_dir("det2"));
+        ingest(&data, 3, 2, &d1).unwrap();
+        ingest(&data, 3, 2, &d2).unwrap();
+        for entry in std::fs::read_dir(&d1).unwrap() {
+            let name = entry.unwrap().file_name();
+            assert_eq!(
+                std::fs::read(d1.join(&name)).unwrap(),
+                std::fs::read(d2.join(&name)).unwrap(),
+                "{name:?} differs between identical ingests"
+            );
+        }
+        std::fs::remove_dir_all(&d1).ok();
+        std::fs::remove_dir_all(&d2).ok();
+    }
+
+    #[test]
+    fn bad_grid_is_a_typed_error() {
+        let data = toy();
+        let dir = temp_dir("badgrid");
+        assert!(matches!(
+            ingest(&data, 0, 1, &dir),
+            Err(StoreError::InvalidGrid { .. })
+        ));
+        assert!(matches!(
+            ingest(&data, 7, 1, &dir),
+            Err(StoreError::InvalidGrid { .. })
+        ));
+    }
+
+    #[test]
+    fn truncated_shard_and_stale_version_fail_open_typed() {
+        let data = toy();
+        let dir = temp_dir("corrupt");
+        ingest(&data, 2, 2, &dir).unwrap();
+
+        // truncate one shard → SizeMismatch
+        let shard = dir.join(shard_file_name(0, 0));
+        let bytes = std::fs::read(&shard).unwrap();
+        std::fs::write(&shard, &bytes[..bytes.len() - 1]).unwrap();
+        assert!(matches!(ShardStore::open(&dir), Err(StoreError::SizeMismatch { .. })));
+
+        // flip one byte (same length) → ChecksumMismatch
+        let mut flipped = bytes.clone();
+        flipped[0] ^= 0xff;
+        std::fs::write(&shard, &flipped).unwrap();
+        assert!(matches!(ShardStore::open(&dir), Err(StoreError::ChecksumMismatch { .. })));
+
+        // remove it → MissingShard
+        std::fs::remove_file(&shard).unwrap();
+        assert!(matches!(ShardStore::open(&dir), Err(StoreError::MissingShard { .. })));
+        std::fs::write(&shard, &bytes).unwrap();
+
+        // bump the manifest version → Version, naming the supported range
+        let mpath = dir.join(super::super::manifest::MANIFEST_FILE);
+        let text = std::fs::read_to_string(&mpath).unwrap();
+        std::fs::write(&mpath, text.replacen("\"version\": 1", "\"version\": 99", 1)).unwrap();
+        let err = ShardStore::open(&dir).unwrap_err();
+        assert!(matches!(err, StoreError::Version { found: 99, .. }), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

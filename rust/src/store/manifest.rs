@@ -1,0 +1,468 @@
+//! Shard-store manifest: the versioned JSON index of an ingested dataset.
+//!
+//! An ingest directory holds one `manifest.json` plus one binary shard
+//! file per grid block. The manifest records everything needed to open
+//! the store without touching a shard: matrix dimensions, the block grid,
+//! the centring mean, and — per shard — its block shape, entry count and
+//! an FNV-1a checksum of the file bytes. [`ShardStore::open`]
+//! (`store::shard`) re-derives the grid bounds from `(rows, cols, grid)`
+//! with the exact arithmetic of [`crate::partition::Grid`], which is what
+//! makes store-backed training bitwise-identical to the resident path.
+//!
+//! **Version gate:** the writer emits [`STORE_VERSION`]; the reader
+//! rejects anything outside [`SUPPORTED_STORE_VERSIONS`] with a
+//! [`StoreError::Version`] naming the found and supported versions —
+//! the same found-vs-supported discipline as the checkpoint loaders.
+//!
+//! All writes (manifest and shards) are atomic: temp file in the same
+//! directory, then rename — a crashed ingest never leaves a torn
+//! `manifest.json` behind, at worst a stale `*.tmp` nobody reads.
+
+use crate::util::json::{self, Json};
+use std::path::{Path, PathBuf};
+
+/// Manifest format version written by this build's ingest.
+pub const STORE_VERSION: usize = 1;
+
+/// Oldest and newest manifest versions this build's reader accepts.
+pub const SUPPORTED_STORE_VERSIONS: (usize, usize) = (1, 1);
+
+/// File name of the manifest inside a store directory.
+pub const MANIFEST_FILE: &str = "manifest.json";
+
+/// Bytes per triplet record in a shard file: `u32` local row, `u32`
+/// local column, `f32` rating, all little-endian.
+pub const RECORD_BYTES: u64 = 12;
+
+/// Why a shard store could not be ingested, opened, or read.
+///
+/// Every variant names the offending file (or the config/store pair), so
+/// a failed `submit` points straight at the bad artifact instead of
+/// surfacing as a mid-run panic.
+#[derive(Debug, thiserror::Error)]
+pub enum StoreError {
+    /// A file or directory could not be read or written.
+    #[error("{}: io error: {source}", path.display())]
+    Io {
+        /// The file or directory the operation touched.
+        path: PathBuf,
+        /// The underlying I/O error.
+        source: std::io::Error,
+    },
+    /// The manifest parsed but is not a valid store index (bad JSON,
+    /// missing fields, or inconsistent shapes).
+    #[error("{}: malformed store manifest: {msg}", path.display())]
+    Malformed {
+        /// The manifest file.
+        path: PathBuf,
+        /// What was wrong with it.
+        msg: String,
+    },
+    /// The manifest was written by an unsupported format version.
+    #[error(
+        "unsupported shard store: found version {found}, this build reads \
+         versions {oldest} through {newest}"
+    )]
+    Version {
+        /// Version recorded in the manifest.
+        found: usize,
+        /// Oldest version this build reads.
+        oldest: usize,
+        /// Newest version this build reads.
+        newest: usize,
+    },
+    /// A shard file named by the manifest does not exist.
+    #[error("{}: shard file missing", path.display())]
+    MissingShard {
+        /// The absent shard file.
+        path: PathBuf,
+    },
+    /// A shard file exists but its size disagrees with the manifest —
+    /// a truncated or padded file.
+    #[error(
+        "{}: shard file is {found} bytes, manifest expects {expected}",
+        path.display()
+    )]
+    SizeMismatch {
+        /// The shard file.
+        path: PathBuf,
+        /// Bytes the manifest expects (`nnz * 12`).
+        expected: u64,
+        /// Bytes actually on disk.
+        found: u64,
+    },
+    /// A shard file's bytes do not hash to the manifest's checksum —
+    /// corruption between ingest and open.
+    #[error(
+        "{}: shard checksum mismatch (manifest {expected:#018x}, file {found:#018x})",
+        path.display()
+    )]
+    ChecksumMismatch {
+        /// The shard file.
+        path: PathBuf,
+        /// Checksum recorded at ingest.
+        expected: u64,
+        /// Checksum of the bytes on disk.
+        found: u64,
+    },
+    /// The training config's grid does not match the grid the store was
+    /// ingested with (shards are per-block; re-ingest to change the grid).
+    #[error(
+        "config grid {}x{} does not match the store's ingest grid {}x{} \
+         (re-run `bmf-pp ingest` with the desired grid)",
+        cfg.0, cfg.1, store.0, store.1
+    )]
+    GridMismatch {
+        /// Grid requested by the training config.
+        cfg: (usize, usize),
+        /// Grid recorded in the manifest.
+        store: (usize, usize),
+    },
+    /// The requested ingest grid cannot partition the matrix.
+    #[error("cannot ingest a {rows}x{cols} matrix on a {gi}x{gj} grid")]
+    InvalidGrid {
+        /// Requested row blocks.
+        gi: usize,
+        /// Requested column blocks.
+        gj: usize,
+        /// Matrix rows.
+        rows: usize,
+        /// Matrix columns.
+        cols: usize,
+    },
+}
+
+/// FNV-1a 64-bit hash of a byte slice — the shard checksum. Hand-rolled
+/// (the crate set is frozen); stable across platforms by construction.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Canonical shard file name for block `(i, j)`.
+pub fn shard_file_name(i: usize, j: usize) -> String {
+    format!("shard-{i:04}-{j:04}.bin")
+}
+
+/// One shard (grid block) recorded in the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardMeta {
+    /// Row-block index in the grid.
+    pub i: usize,
+    /// Column-block index in the grid.
+    pub j: usize,
+    /// Rows of the block (must equal the grid's derived block shape).
+    pub rows: usize,
+    /// Columns of the block.
+    pub cols: usize,
+    /// Triplet records in the shard file.
+    pub nnz: usize,
+    /// FNV-1a 64 checksum of the shard file's bytes.
+    pub checksum: u64,
+    /// Shard file name, relative to the store directory.
+    pub file: String,
+}
+
+impl ShardMeta {
+    /// Exact byte size the shard file must have (`nnz * 12`).
+    pub fn bytes(&self) -> u64 {
+        self.nnz as u64 * RECORD_BYTES
+    }
+}
+
+/// The parsed `manifest.json` of an ingested store directory.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    /// Rows of the full matrix.
+    pub rows: usize,
+    /// Columns of the full matrix.
+    pub cols: usize,
+    /// Ingest grid: (row blocks, column blocks).
+    pub grid: (usize, usize),
+    /// Total entries across all shards.
+    pub nnz: usize,
+    /// Global mean of the raw ratings, computed at ingest time over the
+    /// entries in file order — exactly what the resident trainer's
+    /// centring pass computes, persisted so a store-backed run centres
+    /// with the bitwise-identical `f64` (JSON `f64` round-trips exactly
+    /// through `util::json`).
+    pub global_mean: f64,
+    /// Per-block shard records, in ingest (row-major block) order.
+    pub shards: Vec<ShardMeta>,
+}
+
+impl Manifest {
+    /// Serialize to the versioned JSON document.
+    pub fn to_json(&self) -> Json {
+        let shards = Json::Arr(
+            self.shards
+                .iter()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("i", s.i.into()),
+                        ("j", s.j.into()),
+                        ("rows", s.rows.into()),
+                        ("cols", s.cols.into()),
+                        ("nnz", s.nnz.into()),
+                        // JSON numbers are f64; a u64 checksum round-trips
+                        // through a string (the checkpoint seed idiom)
+                        ("checksum", Json::Str(s.checksum.to_string())),
+                        ("file", Json::Str(s.file.clone())),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("version", STORE_VERSION.into()),
+            ("rows", self.rows.into()),
+            ("cols", self.cols.into()),
+            ("grid_i", self.grid.0.into()),
+            ("grid_j", self.grid.1.into()),
+            ("nnz", self.nnz.into()),
+            ("global_mean", self.global_mean.into()),
+            ("shards", shards),
+        ])
+    }
+
+    /// Parse and validate a manifest document. `path` only labels errors.
+    pub fn from_json(root: &Json, path: &Path) -> Result<Manifest, StoreError> {
+        let bad = |msg: &str| StoreError::Malformed {
+            path: path.to_path_buf(),
+            msg: msg.to_string(),
+        };
+        let field = |name: &str| root.get(name).and_then(Json::as_usize);
+        let version = field("version").ok_or_else(|| bad("missing version"))?;
+        let (oldest, newest) = SUPPORTED_STORE_VERSIONS;
+        if version < oldest || version > newest {
+            return Err(StoreError::Version { found: version, oldest, newest });
+        }
+        let rows = field("rows").ok_or_else(|| bad("missing rows"))?;
+        let cols = field("cols").ok_or_else(|| bad("missing cols"))?;
+        let gi = field("grid_i").ok_or_else(|| bad("missing grid_i"))?;
+        let gj = field("grid_j").ok_or_else(|| bad("missing grid_j"))?;
+        let nnz = field("nnz").ok_or_else(|| bad("missing nnz"))?;
+        let global_mean = root
+            .get("global_mean")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| bad("missing global_mean"))?;
+        let shards_json =
+            root.get("shards").and_then(Json::as_arr).ok_or_else(|| bad("missing shards"))?;
+        if gi == 0 || gj == 0 {
+            return Err(bad("zero-sized grid"));
+        }
+        if shards_json.len() != gi * gj {
+            return Err(bad(&format!(
+                "expected {} shards for a {gi}x{gj} grid, found {}",
+                gi * gj,
+                shards_json.len()
+            )));
+        }
+        let mut shards = Vec::with_capacity(shards_json.len());
+        let mut seen = vec![false; gi * gj];
+        let mut total = 0usize;
+        for s in shards_json {
+            let sfield = |name: &str| s.get(name).and_then(Json::as_usize);
+            let i = sfield("i").ok_or_else(|| bad("shard missing i"))?;
+            let j = sfield("j").ok_or_else(|| bad("shard missing j"))?;
+            if i >= gi || j >= gj {
+                return Err(bad(&format!("shard ({i},{j}) outside the {gi}x{gj} grid")));
+            }
+            if std::mem::replace(&mut seen[i * gj + j], true) {
+                return Err(bad(&format!("duplicate shard ({i},{j})")));
+            }
+            let checksum = s
+                .get("checksum")
+                .and_then(Json::as_str)
+                .and_then(|t| t.parse::<u64>().ok())
+                .ok_or_else(|| bad("shard missing checksum"))?;
+            let file = s
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| bad("shard missing file"))?
+                .to_string();
+            if file.contains(['/', '\\']) {
+                return Err(bad(&format!("shard file name '{file}' escapes the store dir")));
+            }
+            let snnz = sfield("nnz").ok_or_else(|| bad("shard missing nnz"))?;
+            total += snnz;
+            shards.push(ShardMeta {
+                i,
+                j,
+                rows: sfield("rows").ok_or_else(|| bad("shard missing rows"))?,
+                cols: sfield("cols").ok_or_else(|| bad("shard missing cols"))?,
+                nnz: snnz,
+                checksum,
+                file,
+            });
+        }
+        if total != nnz {
+            return Err(bad(&format!("shard nnz sums to {total}, manifest says {nnz}")));
+        }
+        Ok(Manifest { rows, cols, grid: (gi, gj), nnz, global_mean, shards })
+    }
+
+    /// Load and parse `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, StoreError> {
+        let path = dir.join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&path)
+            .map_err(|source| StoreError::Io { path: path.clone(), source })?;
+        let root = json::parse(&text).map_err(|e| StoreError::Malformed {
+            path: path.clone(),
+            msg: e.to_string(),
+        })?;
+        Manifest::from_json(&root, &path)
+    }
+
+    /// Atomically write `dir/manifest.json` (same-directory temp file +
+    /// rename, the checkpoint discipline).
+    pub fn save(&self, dir: &Path) -> Result<(), StoreError> {
+        let path = dir.join(MANIFEST_FILE);
+        atomic_write(&path, json::to_string_pretty(&self.to_json()).as_bytes())
+    }
+}
+
+/// Write `bytes` to `path` atomically: a uniquely named temp file in the
+/// same directory (pid + per-process counter keeps concurrent writers off
+/// each other's temp files), then rename into place. Used for shards and
+/// the manifest alike.
+pub(crate) fn atomic_write(path: &Path, bytes: &[u8]) -> Result<(), StoreError> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static WRITE_SEQ: AtomicU64 = AtomicU64::new(0);
+    let err = |source| StoreError::Io { path: path.to_path_buf(), source };
+    let mut tmp = path.as_os_str().to_os_string();
+    tmp.push(format!(
+        ".{}.{}.tmp",
+        std::process::id(),
+        WRITE_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let tmp = PathBuf::from(tmp);
+    std::fs::write(&tmp, bytes).map_err(err)?;
+    match std::fs::rename(&tmp, path) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            std::fs::remove_file(&tmp).ok();
+            Err(err(e))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        Manifest {
+            rows: 10,
+            cols: 8,
+            grid: (2, 1),
+            nnz: 7,
+            global_mean: 3.25,
+            shards: vec![
+                ShardMeta {
+                    i: 0,
+                    j: 0,
+                    rows: 5,
+                    cols: 8,
+                    nnz: 4,
+                    checksum: u64::MAX - 3,
+                    file: shard_file_name(0, 0),
+                },
+                ShardMeta {
+                    i: 1,
+                    j: 0,
+                    rows: 5,
+                    cols: 8,
+                    nnz: 3,
+                    checksum: 17,
+                    file: shard_file_name(1, 0),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn manifest_roundtrips_exactly() {
+        let m = sample();
+        let text = json::to_string_pretty(&m.to_json());
+        let back =
+            Manifest::from_json(&json::parse(&text).unwrap(), Path::new("m.json")).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn global_mean_roundtrips_bitwise() {
+        let mut m = sample();
+        m.global_mean = 3.578_912_340_000_001_2_f64;
+        let text = json::to_string(&m.to_json());
+        let back =
+            Manifest::from_json(&json::parse(&text).unwrap(), Path::new("m.json")).unwrap();
+        assert_eq!(back.global_mean.to_bits(), m.global_mean.to_bits());
+    }
+
+    #[test]
+    fn future_version_rejected_naming_supported_range() {
+        let mut j = sample().to_json();
+        if let Json::Obj(map) = &mut j {
+            map.insert("version".into(), Json::Num(9.0));
+        }
+        let err = Manifest::from_json(&j, Path::new("m.json")).unwrap_err();
+        let msg = err.to_string();
+        assert!(matches!(err, StoreError::Version { found: 9, .. }), "{msg}");
+        assert!(msg.contains("found version 9"), "{msg}");
+        assert!(msg.contains("versions 1 through 1"), "{msg}");
+    }
+
+    #[test]
+    fn shard_count_and_nnz_consistency_enforced() {
+        let mut m = sample();
+        m.shards.pop();
+        let j = m.to_json();
+        assert!(matches!(
+            Manifest::from_json(&j, Path::new("m.json")),
+            Err(StoreError::Malformed { .. })
+        ));
+
+        let mut m = sample();
+        m.nnz = 99;
+        let j = m.to_json();
+        let err = Manifest::from_json(&j, Path::new("m.json")).unwrap_err();
+        assert!(err.to_string().contains("sums to 7"), "{err}");
+    }
+
+    #[test]
+    fn shard_file_names_may_not_escape_the_dir() {
+        let mut m = sample();
+        m.shards[0].file = "../evil.bin".into();
+        let j = m.to_json();
+        let err = Manifest::from_json(&j, Path::new("m.json")).unwrap_err();
+        assert!(err.to_string().contains("escapes"), "{err}");
+    }
+
+    #[test]
+    fn fnv_is_stable() {
+        // reference vectors for the 64-bit FNV-1a parameters
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_ne!(fnv1a64(b"ab"), fnv1a64(b"ba"));
+    }
+
+    #[test]
+    fn atomic_write_leaves_no_tmp_behind() {
+        let dir = std::env::temp_dir().join(format!("bmfpp_store_aw_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("file.bin");
+        atomic_write(&path, b"hello").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"hello");
+        let tmps = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok()?.file_name().into_string().ok())
+            .filter(|n| n.ends_with(".tmp"))
+            .count();
+        assert_eq!(tmps, 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,34 @@
+//! Out-of-core storage layer: per-block shard files on disk, an LRU
+//! cache bounding residency, and DAG-aware prefetch.
+//!
+//! This is the subsystem that lets a training run work on datasets
+//! bigger than RAM. The lifecycle:
+//!
+//! 1. **Ingest** ([`ingest`]): split a loaded dataset once into one
+//!    binary shard file per grid block plus a versioned, checksummed
+//!    [`Manifest`] — all writes atomic (tmp + rename).
+//! 2. **Open** ([`ShardStore::open`]): parse + version-gate the
+//!    manifest and verify every shard (existence, size, checksum) so
+//!    corruption is a typed [`StoreError`] at submit time.
+//! 3. **Train**: block tasks fetch their shard through a byte-budgeted
+//!    [`ShardCache`]; the [`Prefetcher`] warms upcoming shards in the
+//!    DAG scheduler's ready-order; hit/miss/evict/bytes counters flow
+//!    into `RunStats`, `TrainEvent::ShardLoaded`, and `bmf-pp jobs`.
+//!
+//! The centring mean is persisted at ingest and applied per entry at
+//! materialization, so a store-backed run is **bitwise-identical** to a
+//! resident run of the same data, grid, and seed (see `store::shard` for
+//! the full equivalence argument).
+
+pub mod cache;
+pub mod ingest;
+pub mod manifest;
+pub mod shard;
+
+pub use cache::{
+    LoadHook, PrefetchHandle, Prefetcher, ShardCache, ShardCounterSnapshot, ShardCounters,
+    ShardLoad,
+};
+pub use ingest::{ingest, IngestReport};
+pub use manifest::{Manifest, ShardMeta, StoreError, STORE_VERSION, SUPPORTED_STORE_VERSIONS};
+pub use shard::{BlockShard, ShardStore};

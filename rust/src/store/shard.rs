@@ -1,0 +1,247 @@
+//! On-demand shard access: open a validated store, materialize blocks.
+//!
+//! [`ShardStore::open`] front-loads every integrity check — manifest
+//! version gate, grid-consistency against freshly derived
+//! [`Grid`] bounds, per-shard existence, size, and checksum — so that a
+//! corrupt or stale store surfaces as a typed [`StoreError`] at
+//! `Engine::submit` time, never as a panic in the middle of a run.
+//!
+//! [`ShardStore::read_block`] then reads one shard file (buffered read;
+//! the container toolchain has no mmap crate, and a shard-at-a-time read
+//! keeps residency bounded just the same) and decodes it into a
+//! [`BlockShard`] holding the *centred* block `Coo`.
+//!
+//! # Bitwise-equivalence contract
+//!
+//! The resident path computes `center(train)` (subtract
+//! `global_mean as f32` from every entry) and then `grid.split(&train)`.
+//! Ingest runs `grid.split` on the *raw* entries — split routing depends
+//! only on coordinates, so block membership, order, and local coordinates
+//! are identical — and this module subtracts the manifest's
+//! `global_mean as f32` per entry at materialization. Subtraction is a
+//! per-entry operation, so doing it after the split instead of before
+//! yields bit-for-bit the same `f32` values. The resulting `Coo` is
+//! therefore bitwise-equal to the slice the resident partitioner would
+//! have produced, which is what makes store-backed training
+//! bitwise-identical to resident training.
+
+use super::manifest::{fnv1a64, Manifest, ShardMeta, StoreError, RECORD_BYTES};
+use crate::data::sparse::{Coo, Entry};
+use crate::partition::grid::{BlockId, Grid};
+use std::path::{Path, PathBuf};
+
+/// One grid block materialized from its shard file: the centred `Coo`
+/// slice, bitwise-equal to what `grid.split(&centred_train)[i][j]` would
+/// have produced in a resident run.
+#[derive(Debug, Clone)]
+pub struct BlockShard {
+    /// Row-block index.
+    pub i: usize,
+    /// Column-block index.
+    pub j: usize,
+    /// The centred block data in block-local coordinates.
+    pub coo: Coo,
+}
+
+/// A validated, openable shard store directory.
+///
+/// Open once (all integrity checks run eagerly), then `read_block` as
+/// many times as the cache asks; reads are independent and thread-safe
+/// (`&self`, no interior state).
+#[derive(Debug)]
+pub struct ShardStore {
+    dir: PathBuf,
+    manifest: Manifest,
+    grid: Grid,
+}
+
+impl ShardStore {
+    /// Open `dir`, parse + version-gate its manifest, and verify every
+    /// shard file (existence, exact size, checksum) before returning.
+    ///
+    /// This reads each shard once, one at a time — open cost is a full
+    /// sequential pass over the dataset, but peak residency stays one
+    /// shard. All failures are typed [`StoreError`]s naming the file.
+    pub fn open(dir: &Path) -> Result<ShardStore, StoreError> {
+        let manifest = Manifest::load(dir)?;
+        let manifest_path = dir.join(super::manifest::MANIFEST_FILE);
+        let (gi, gj) = manifest.grid;
+        if gi > manifest.rows || gj > manifest.cols {
+            return Err(StoreError::Malformed {
+                path: manifest_path,
+                msg: format!(
+                    "grid {gi}x{gj} exceeds matrix {}x{}",
+                    manifest.rows, manifest.cols
+                ),
+            });
+        }
+        // Re-derive the partition bounds with the same arithmetic the
+        // resident trainer uses; every shard's recorded shape must match.
+        let grid = Grid::new(manifest.rows, manifest.cols, gi, gj);
+        for s in &manifest.shards {
+            let (rows, cols) = grid.block_shape(BlockId { i: s.i, j: s.j });
+            if (s.rows, s.cols) != (rows, cols) {
+                return Err(StoreError::Malformed {
+                    path: manifest_path,
+                    msg: format!(
+                        "shard ({},{}) is {}x{}, grid derives {rows}x{cols}",
+                        s.i, s.j, s.rows, s.cols
+                    ),
+                });
+            }
+            verify_shard_file(dir, s)?;
+        }
+        Ok(ShardStore { dir: dir.to_path_buf(), manifest, grid })
+    }
+
+    /// Rows of the full matrix.
+    pub fn rows(&self) -> usize {
+        self.manifest.rows
+    }
+
+    /// Columns of the full matrix.
+    pub fn cols(&self) -> usize {
+        self.manifest.cols
+    }
+
+    /// Total ratings across all shards.
+    pub fn nnz(&self) -> usize {
+        self.manifest.nnz
+    }
+
+    /// The ingest grid `(row_blocks, col_blocks)` — training must use
+    /// exactly this grid (shards are per-block).
+    pub fn grid_dims(&self) -> (usize, usize) {
+        self.manifest.grid
+    }
+
+    /// Global mean of the raw ratings, persisted at ingest; training
+    /// centres with this exact `f64` (bitwise-equal to the resident
+    /// `center()` pass over the same data).
+    pub fn global_mean(&self) -> f64 {
+        self.manifest.global_mean
+    }
+
+    /// The store directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The parsed manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// On-disk byte size of shard `(i, j)` — the unit the cache budget
+    /// is accounted in.
+    pub fn shard_bytes(&self, i: usize, j: usize) -> u64 {
+        self.meta(i, j).bytes()
+    }
+
+    fn meta(&self, i: usize, j: usize) -> &ShardMeta {
+        let gj = self.manifest.grid.1;
+        // shards are stored in row-major block order by ingest and
+        // validated unique/complete by the manifest parser
+        let s = &self.manifest.shards[i * gj + j];
+        debug_assert_eq!((s.i, s.j), (i, j));
+        s
+    }
+
+    /// Read and decode shard `(i, j)` into a centred [`BlockShard`].
+    ///
+    /// The size is re-checked at read time (the file could have been
+    /// truncated after `open`); decode failures are typed errors, never
+    /// panics.
+    pub fn read_block(&self, i: usize, j: usize) -> Result<BlockShard, StoreError> {
+        let s = self.meta(i, j);
+        let path = self.dir.join(&s.file);
+        let bytes = std::fs::read(&path).map_err(|e| match e.kind() {
+            std::io::ErrorKind::NotFound => StoreError::MissingShard { path: path.clone() },
+            _ => StoreError::Io { path: path.clone(), source: e },
+        })?;
+        if bytes.len() as u64 != s.bytes() {
+            return Err(StoreError::SizeMismatch {
+                path,
+                expected: s.bytes(),
+                found: bytes.len() as u64,
+            });
+        }
+        let mean = self.manifest.global_mean as f32;
+        let mut entries = Vec::with_capacity(s.nnz);
+        for rec in bytes.chunks_exact(RECORD_BYTES as usize) {
+            let row = u32::from_le_bytes([rec[0], rec[1], rec[2], rec[3]]);
+            let col = u32::from_le_bytes([rec[4], rec[5], rec[6], rec[7]]);
+            let val = f32::from_le_bytes([rec[8], rec[9], rec[10], rec[11]]);
+            if row as usize >= s.rows || col as usize >= s.cols {
+                return Err(StoreError::Malformed {
+                    path,
+                    msg: format!(
+                        "entry ({row},{col}) outside the {}x{} block",
+                        s.rows, s.cols
+                    ),
+                });
+            }
+            // same per-entry centring op as the resident `center()` pass
+            entries.push(Entry { row, col, val: val - mean });
+        }
+        Ok(BlockShard {
+            i,
+            j,
+            coo: Coo { rows: s.rows, cols: s.cols, entries },
+        })
+    }
+
+    /// The derived partition grid (identical bounds to what the resident
+    /// trainer would compute for these dimensions).
+    pub fn partition_grid(&self) -> &Grid {
+        &self.grid
+    }
+}
+
+/// Encode a block's entries into the shard wire format (12-byte LE
+/// records). Shared with ingest.
+pub(crate) fn encode_block(coo: &Coo) -> Vec<u8> {
+    let mut out = Vec::with_capacity(coo.entries.len() * RECORD_BYTES as usize);
+    for e in &coo.entries {
+        out.extend_from_slice(&e.row.to_le_bytes());
+        out.extend_from_slice(&e.col.to_le_bytes());
+        out.extend_from_slice(&e.val.to_le_bytes());
+    }
+    out
+}
+
+fn verify_shard_file(dir: &Path, s: &ShardMeta) -> Result<(), StoreError> {
+    let path = dir.join(&s.file);
+    let bytes = std::fs::read(&path).map_err(|e| match e.kind() {
+        std::io::ErrorKind::NotFound => StoreError::MissingShard { path: path.clone() },
+        _ => StoreError::Io { path: path.clone(), source: e },
+    })?;
+    if bytes.len() as u64 != s.bytes() {
+        return Err(StoreError::SizeMismatch {
+            path,
+            expected: s.bytes(),
+            found: bytes.len() as u64,
+        });
+    }
+    let found = fnv1a64(&bytes);
+    if found != s.checksum {
+        return Err(StoreError::ChecksumMismatch { path, expected: s.checksum, found });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_is_12_bytes_per_entry_little_endian() {
+        let mut coo = Coo::new(4, 4);
+        coo.push(1, 2, -1.5);
+        let bytes = encode_block(&coo);
+        assert_eq!(bytes.len(), 12);
+        assert_eq!(&bytes[0..4], &1u32.to_le_bytes());
+        assert_eq!(&bytes[4..8], &2u32.to_le_bytes());
+        assert_eq!(&bytes[8..12], &(-1.5f32).to_le_bytes());
+    }
+}

@@ -14,6 +14,11 @@
 //!   (v3 generation files) — the handoff point to the serving side,
 //!   which watches a generation directory and hot-swaps
 //!   (see [`crate::serve`]).
+//! - The out-of-core storage layer ([`ingest`], [`ShardStore`],
+//!   [`StoreError`]) feeds [`Engine::submit_store`] /
+//!   [`Engine::train_store`]: blocks stream from per-block shard files
+//!   through a `TrainConfig::cache_bytes`-budgeted cache, producing a
+//!   posterior bitwise-identical to the resident run.
 //!
 //! This module re-exports the coordinator layer; the deep
 //! `bmf_pp::coordinator::*` paths keep working for existing code.
@@ -26,3 +31,4 @@ pub use crate::coordinator::{
     TrainResult,
 };
 pub use crate::posterior::PosteriorModel;
+pub use crate::store::{ingest, IngestReport, ShardStore, StoreError};

@@ -1,0 +1,228 @@
+//! Out-of-core store integration tests: the acceptance contract is that
+//! training from an ingested shard store is the **same computation** as
+//! training resident — bitwise-identical posteriors across grids, sweep
+//! modes, and cache budgets (including a degenerate budget that forces
+//! the cache to evict on every block), typed `StoreError`s for corrupt
+//! or version-skewed stores surfaced before any training starts, and
+//! cancel → resume working unchanged on the store-backed path.
+//!
+//! The CI `out-of-core` job runs this suite under `--release` next to
+//! `scripts/out_of_core_drill.sh` (the ulimit-capped CLI drill).
+
+use bmf_pp::coordinator::{
+    BackendSpec, Engine, SweepMode, TrainConfig, TrainOutcome, TrainResult,
+};
+use bmf_pp::data::generator::SyntheticDataset;
+use bmf_pp::data::split::holdout_split_covered;
+use bmf_pp::data::sparse::Coo;
+use bmf_pp::store::{ingest, ShardStore, StoreError};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn dataset() -> (Coo, usize) {
+    let ds = SyntheticDataset::by_name("movielens", 0.0015, 501).unwrap();
+    let (train, _) = holdout_split_covered(&ds.ratings, 0.2, 502);
+    (train, ds.k)
+}
+
+fn quick_cfg(k: usize) -> TrainConfig {
+    TrainConfig::new(k)
+        .with_backend(BackendSpec::Native)
+        .with_grid(2, 2)
+        .with_sweeps(3, 6)
+        .with_tau(1.2)
+        .with_seed(503)
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("bmfpp_store_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+fn ingest_to(train: &Coo, gi: usize, gj: usize, tag: &str) -> (Arc<ShardStore>, PathBuf) {
+    let dir = tmp_dir(tag);
+    ingest(train, gi, gj, &dir).unwrap();
+    (Arc::new(ShardStore::open(&dir).unwrap()), dir)
+}
+
+fn assert_bitwise_eq(a: &TrainResult, b: &TrainResult, ctx: &str) {
+    assert_eq!(a.u_post.mean, b.u_post.mean, "u mean diverged: {ctx}");
+    assert_eq!(a.u_post.prec, b.u_post.prec, "u prec diverged: {ctx}");
+    assert_eq!(a.v_post.mean, b.v_post.mean, "v mean diverged: {ctx}");
+    assert_eq!(a.v_post.prec, b.v_post.prec, "v prec diverged: {ctx}");
+}
+
+#[test]
+fn store_backed_training_is_bitwise_identical_to_resident() {
+    // the full equivalence matrix: grid shape x sweep mode x cache budget.
+    // budget 0 = unbounded; budget 1 byte cannot hold even one shard, so
+    // every block load evicts its predecessors — the posterior must not
+    // notice either way.
+    let (train, k) = dataset();
+    let engine = Engine::new(&BackendSpec::Native, 2);
+    for &(gi, gj) in &[(1usize, 1usize), (2, 2), (3, 2)] {
+        let (store, dir) = ingest_to(&train, gi, gj, &format!("matrix_{gi}x{gj}"));
+        for mode in [SweepMode::Lockstep, SweepMode::Pipelined] {
+            let mut cfg = quick_cfg(k).with_grid(gi, gj).with_sweep_mode(mode);
+            if mode == SweepMode::Pipelined {
+                cfg = cfg.with_chunk_rows(64).with_staleness(0);
+            }
+            let resident = engine.train(&cfg, &train).unwrap();
+            for budget in [0u64, 1] {
+                let r = engine
+                    .train_store(&cfg.clone().with_cache_bytes(budget), store.clone())
+                    .unwrap();
+                let ctx = format!("grid {gi}x{gj}, {mode:?}, cache_bytes={budget}");
+                assert_bitwise_eq(&resident, &r, &ctx);
+                if budget == 1 && gi * gj > 1 {
+                    assert!(
+                        r.stats.shard_evictions > 0,
+                        "degenerate budget must force evictions ({ctx})"
+                    );
+                    assert!(r.stats.shard_misses > 0, "every load is a miss ({ctx})");
+                }
+            }
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+}
+
+#[test]
+fn shard_counters_reach_run_stats_and_job_snapshot() {
+    let (train, k) = dataset();
+    let (store, dir) = ingest_to(&train, 2, 2, "counters");
+    let engine = Engine::new(&BackendSpec::Native, 2);
+    let session =
+        engine.submit_store(quick_cfg(k).with_cache_bytes(1), store).unwrap();
+    let result = session.wait().unwrap().into_result().unwrap();
+    // every phase touches each of the 4 blocks at least once from disk
+    assert!(result.stats.shard_misses >= 4, "misses: {}", result.stats.shard_misses);
+    assert!(result.stats.shard_bytes_peak > 0);
+    let snap = engine.jobs();
+    assert_eq!(snap.len(), 1);
+    assert_eq!(snap[0].shard_misses, result.stats.shard_misses);
+    assert_eq!(snap[0].shard_hits, result.stats.shard_hits);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn grid_mismatch_is_a_typed_submit_time_error() {
+    let (train, k) = dataset();
+    let (store, dir) = ingest_to(&train, 2, 2, "grid_mismatch");
+    let engine = Engine::new(&BackendSpec::Native, 2);
+    let err = engine
+        .submit_store(quick_cfg(k).with_grid(3, 3), store.clone())
+        .expect_err("3x3 config over a 2x2 store must be rejected");
+    match err.downcast_ref::<StoreError>() {
+        Some(StoreError::GridMismatch { cfg, store }) => {
+            assert_eq!(*cfg, (3, 3));
+            assert_eq!(*store, (2, 2));
+        }
+        other => panic!("expected GridMismatch, got {other:?}"),
+    }
+    // the blocking train path rejects identically
+    let err = engine
+        .train_store(&quick_cfg(k).with_grid(3, 3), store)
+        .expect_err("train_store must reject too");
+    assert!(matches!(
+        err.downcast_ref::<StoreError>(),
+        Some(StoreError::GridMismatch { .. })
+    ));
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn corrupt_and_stale_stores_fail_typed_at_open() {
+    let (train, _) = dataset();
+
+    // truncated shard → SizeMismatch naming the file
+    let dir = tmp_dir("truncated");
+    ingest(&train, 2, 2, &dir).unwrap();
+    let shard = dir.join("shard-0000-0000.bin");
+    let bytes = std::fs::read(&shard).unwrap();
+    std::fs::write(&shard, &bytes[..bytes.len() - 1]).unwrap();
+    match ShardStore::open(&dir) {
+        Err(StoreError::SizeMismatch { path, .. }) => {
+            assert!(path.ends_with("shard-0000-0000.bin"), "{path:?}")
+        }
+        other => panic!("expected SizeMismatch, got {other:?}"),
+    }
+    std::fs::remove_dir_all(&dir).ok();
+
+    // flipped byte → ChecksumMismatch
+    let dir = tmp_dir("corrupt");
+    ingest(&train, 2, 2, &dir).unwrap();
+    let shard = dir.join("shard-0001-0001.bin");
+    let mut bytes = std::fs::read(&shard).unwrap();
+    bytes[0] ^= 0xFF;
+    std::fs::write(&shard, &bytes).unwrap();
+    assert!(matches!(
+        ShardStore::open(&dir),
+        Err(StoreError::ChecksumMismatch { .. })
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+
+    // missing shard → MissingShard
+    let dir = tmp_dir("missing");
+    ingest(&train, 2, 2, &dir).unwrap();
+    std::fs::remove_file(dir.join("shard-0001-0000.bin")).unwrap();
+    assert!(matches!(ShardStore::open(&dir), Err(StoreError::MissingShard { .. })));
+    std::fs::remove_dir_all(&dir).ok();
+
+    // future manifest version → Version naming the supported range
+    let dir = tmp_dir("stale");
+    ingest(&train, 2, 2, &dir).unwrap();
+    let manifest = dir.join("manifest.json");
+    let text = std::fs::read_to_string(&manifest).unwrap();
+    assert!(text.contains("\"version\": 1"), "manifest format changed? {text}");
+    std::fs::write(&manifest, text.replace("\"version\": 1", "\"version\": 999")).unwrap();
+    match ShardStore::open(&dir) {
+        Err(StoreError::Version { found, oldest, newest }) => {
+            assert_eq!(found, 999);
+            assert!(oldest <= newest);
+        }
+        other => panic!("expected Version, got {other:?}"),
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cancel_then_resume_store_backed_is_bitwise_identical() {
+    // cancel a store-backed run after its first block, resume from the
+    // abort checkpoint (still store-backed), and require the posterior to
+    // match both an uninterrupted store run and the resident run
+    let (train, k) = dataset();
+    let (store, dir) = ingest_to(&train, 3, 3, "cancel_resume");
+    let ckpt = tmp_dir("cancel_ckpt").join("abort.json");
+    std::fs::create_dir_all(ckpt.parent().unwrap()).unwrap();
+    let engine = Engine::new(&BackendSpec::Native, 2);
+    let base = quick_cfg(k).with_grid(3, 3);
+
+    let session = engine
+        .submit_store(base.clone().with_checkpoint_on_cancel(&ckpt), store.clone())
+        .unwrap();
+    while session.progress().0 < 1 && !session.status().is_terminal() {
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    session.cancel();
+    let info = match session.wait().unwrap() {
+        TrainOutcome::Cancelled(info) => info,
+        // the run can beat the cancel on a fast machine — then there is
+        // nothing to resume and the bitwise matrix test already covers it
+        TrainOutcome::Completed(_) => return,
+        TrainOutcome::Failed(info) => panic!("unexpected failure: {}", info.error),
+    };
+    let ckpt_path = info.checkpoint.expect("abort checkpoint written");
+
+    let resumed = engine
+        .train_store(&base.clone().with_resume_from(&ckpt_path), store.clone())
+        .unwrap();
+    assert!(resumed.stats.blocks_restored >= 1);
+    let uninterrupted = engine.train_store(&base, store).unwrap();
+    let resident = engine.train(&base, &train).unwrap();
+    assert_bitwise_eq(&resumed, &uninterrupted, "resumed vs uninterrupted (store)");
+    assert_bitwise_eq(&resumed, &resident, "resumed store run vs resident");
+    std::fs::remove_dir_all(dir).ok();
+    std::fs::remove_file(&ckpt_path).ok();
+}

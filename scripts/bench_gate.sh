@@ -1,0 +1,67 @@
+#!/usr/bin/env bash
+# Bench regression gate: diff a fresh perf_probe snapshot against the
+# previous PR's baseline and fail past a tolerance.
+#
+#   scripts/bench_gate.sh <fresh.json> [baseline.json]
+#
+# The baseline resolves as: $2, else $BENCH_BASELINE, else
+# rust/bench_results/BENCH_PR5.json (the PR-5 snapshot, when a local
+# checkout still has one lying around). A missing baseline SKIPs the
+# gate (exit 0) — the first run on a fresh machine has nothing to
+# compare against; it still records the new snapshot for the next run.
+#
+# Direction is inferred from the metric name:
+#   *_ms, *_secs, *padding_ratio          lower is better
+#   *throughput*, *qps*, *per_sec*, *hit_rate*   higher is better
+# Anything else is informational (printed, never gated).
+#
+# Tolerance: a metric fails when it is worse than baseline by more than
+# BENCH_GATE_TOL x (default 2.0 — bench runners are noisy; the gate is
+# for order-of-magnitude regressions, not jitter).
+
+set -euo pipefail
+
+FRESH="${1:?usage: bench_gate.sh <fresh.json> [baseline.json]}"
+BASE="${2:-${BENCH_BASELINE:-rust/bench_results/BENCH_PR5.json}}"
+TOL="${BENCH_GATE_TOL:-2.0}"
+
+if [[ ! -f "$FRESH" ]]; then
+  echo "bench_gate: fresh snapshot '$FRESH' not found" >&2
+  exit 1
+fi
+if [[ ! -f "$BASE" ]]; then
+  echo "bench_gate: SKIP (no baseline at '$BASE')"
+  exit 0
+fi
+
+echo "bench_gate: $FRESH vs $BASE (tolerance ${TOL}x)"
+
+# flatten {"key": num, ...} into "key value" lines (flat JSON only)
+flat() {
+  tr -d '{}",' <"$1" | awk -F: 'NF == 2 {
+    gsub(/^[ \t]+|[ \t]+$/, "", $1); gsub(/^[ \t]+|[ \t]+$/, "", $2);
+    if ($2 ~ /^-?[0-9]+([.][0-9]*)?([eE][+-]?[0-9]+)?$/) print $1, $2
+  }'
+}
+
+FAIL=0
+while read -r key fresh_v; do
+  base_v=$(flat "$BASE" | awk -v k="$key" '$1 == k { print $2 }')
+  [[ -z "$base_v" ]] && { printf '  %-32s %12g  (new metric)\n' "$key" "$fresh_v"; continue; }
+  verdict=$(awk -v k="$key" -v f="$fresh_v" -v b="$base_v" -v tol="$TOL" 'BEGIN {
+    dir = "info"
+    if (k ~ /_ms$/ || k ~ /_secs$/ || k ~ /padding_ratio/) dir = "lower"
+    if (k ~ /throughput/ || k ~ /qps/ || k ~ /per_sec/ || k ~ /hit_rate/) dir = "higher"
+    if (dir == "info" || b == 0 || f == 0) { print "info"; exit }
+    if (dir == "lower") ratio = f / b; else ratio = b / f
+    if (ratio > tol) print "FAIL"; else print "ok"
+  }')
+  printf '  %-32s %12g  (base %g)  %s\n' "$key" "$fresh_v" "$base_v" "$verdict"
+  [[ "$verdict" == "FAIL" ]] && FAIL=1
+done < <(flat "$FRESH")
+
+if [[ "$FAIL" -ne 0 ]]; then
+  echo "bench_gate: FAIL — at least one metric regressed past ${TOL}x" >&2
+  exit 1
+fi
+echo "bench_gate: ok"
