@@ -3,7 +3,7 @@
 # (`--features pjrt`) picks them up. Without the artifacts the coordinator
 # transparently uses the native sampler — all default tests still pass.
 
-.PHONY: artifacts test bench clean-artifacts
+.PHONY: artifacts test bench scenarios clean-artifacts
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../rust/artifacts
@@ -11,6 +11,11 @@ artifacts:
 test:
 	cd rust && cargo test -q
 	python -m pytest python/tests -q
+
+# run every declarative end-to-end spec under scenarios/ (release build)
+scenarios:
+	cd rust && cargo build --release
+	rust/target/release/bmf-pp scenario scenarios/ --report scenario_report.json
 
 bench:
 	cd rust && cargo bench --no-run

@@ -1,0 +1,285 @@
+//! Invariant evaluation: turn a scenario's declarative checks into
+//! pass/fail verdicts over the executor's [`LegResult`]s.
+//!
+//! Each [`Invariant`] becomes one [`CheckResult`]; the detail string
+//! always carries the observed numbers so a failure is diagnosable from
+//! the report alone. Bitwise equality compares the full posterior —
+//! per-row means *and* precisions on both sides, plus the global mean —
+//! with exact `f64` equality, the same bar the repo's Rust tests hold
+//! store/resident and pipelined/lockstep equivalences to.
+
+use crate::posterior::PosteriorModel;
+
+use super::executor::{LegOutcome, LegResult, ScenarioRun};
+use super::spec::{ExpectedOutcome, Invariant, Scenario};
+
+/// One evaluated invariant.
+#[derive(Debug, Clone)]
+pub struct CheckResult {
+    /// The invariant's compact label (e.g. `bitwise_equal(a, b)`).
+    pub invariant: String,
+    /// Whether it held.
+    pub passed: bool,
+    /// Observed values (or what was missing) — the failure diagnosis.
+    pub detail: String,
+}
+
+impl CheckResult {
+    fn pass(invariant: String, detail: String) -> CheckResult {
+        CheckResult { invariant, passed: true, detail }
+    }
+
+    fn fail(invariant: String, detail: String) -> CheckResult {
+        CheckResult { invariant, passed: false, detail }
+    }
+}
+
+/// Evaluate every invariant of `scn` against the executed `run`.
+pub fn evaluate(scn: &Scenario, run: &ScenarioRun) -> Vec<CheckResult> {
+    scn.invariants.iter().map(|inv| evaluate_one(inv, run)).collect()
+}
+
+fn evaluate_one(inv: &Invariant, run: &ScenarioRun) -> CheckResult {
+    let label = inv.label();
+    match inv {
+        Invariant::RmseMax { leg, max } => match completed(run, leg) {
+            Err(detail) => CheckResult::fail(label, detail),
+            Ok(result) => match result.rmse {
+                Some(rmse) if rmse.is_finite() && rmse <= *max => {
+                    CheckResult::pass(label, format!("rmse {rmse:.4} <= {max}"))
+                }
+                Some(rmse) => CheckResult::fail(label, format!("rmse {rmse:.4} > {max}")),
+                None => CheckResult::fail(label, format!("leg '{leg}' produced no model")),
+            },
+        },
+        Invariant::BitwiseEqual { legs } => bitwise_equal(run, legs, label),
+        Invariant::MaxQueueWaitSecs { leg, max } => match completed(run, leg) {
+            Err(detail) => CheckResult::fail(label, detail),
+            Ok(result) => {
+                let wait = result.stats.map(|s| s.queue_wait_secs).unwrap_or(f64::INFINITY);
+                if wait <= *max {
+                    CheckResult::pass(label, format!("queue wait {wait:.3}s <= {max}s"))
+                } else {
+                    CheckResult::fail(label, format!("queue wait {wait:.3}s > {max}s"))
+                }
+            }
+        },
+        Invariant::MinEvictions { leg, min } => match completed(run, leg) {
+            Err(detail) => CheckResult::fail(label, detail),
+            Ok(result) => {
+                let evictions = result.stats.map(|s| s.shard_evictions).unwrap_or(0);
+                if evictions >= *min {
+                    CheckResult::pass(label, format!("{evictions} evictions >= {min}"))
+                } else {
+                    CheckResult::fail(
+                        label,
+                        format!("{evictions} evictions < {min} — cache budget never bound"),
+                    )
+                }
+            }
+        },
+        Invariant::ExpectOutcome { leg, outcome } => match run.leg(leg) {
+            None => CheckResult::fail(label, format!("leg '{leg}' was not executed")),
+            Some(result) => {
+                let matches = matches!(
+                    (outcome, result.outcome),
+                    (ExpectedOutcome::Completed, LegOutcome::Completed)
+                        | (ExpectedOutcome::Failed, LegOutcome::Failed)
+                );
+                let observed = match &result.error {
+                    Some(e) => format!("{} ({e})", result.outcome),
+                    None => result.outcome.to_string(),
+                };
+                if matches {
+                    CheckResult::pass(label, format!("leg '{leg}' ended {observed}"))
+                } else {
+                    CheckResult::fail(
+                        label,
+                        format!("leg '{leg}' ended {observed}, expected {outcome}"),
+                    )
+                }
+            }
+        },
+        Invariant::ResumeBitwise { resumed, reference } => {
+            let restored = match completed(run, resumed) {
+                Err(detail) => return CheckResult::fail(label, detail),
+                Ok(result) => result.blocks_restored,
+            };
+            if restored == 0 {
+                return CheckResult::fail(
+                    label,
+                    format!("leg '{resumed}' restored 0 blocks — it never actually resumed"),
+                );
+            }
+            let bitwise = bitwise_equal(run, &[resumed.clone(), reference.clone()], label.clone());
+            if bitwise.passed {
+                CheckResult::pass(label, format!("{restored} blocks restored; {}", bitwise.detail))
+            } else {
+                bitwise
+            }
+        }
+        Invariant::FinishBefore { first, then } => {
+            let (a, b) = match (run.leg(first), run.leg(then)) {
+                (Some(a), Some(b)) => (a, b),
+                _ => return CheckResult::fail(label, "a referenced leg was not executed".into()),
+            };
+            if a.finished_rank < b.finished_rank {
+                CheckResult::pass(
+                    label,
+                    format!(
+                        "'{first}' finished #{} before '{then}' #{}",
+                        a.finished_rank + 1,
+                        b.finished_rank + 1
+                    ),
+                )
+            } else {
+                CheckResult::fail(
+                    label,
+                    format!(
+                        "'{first}' finished #{}, '{then}' finished #{}",
+                        a.finished_rank + 1,
+                        b.finished_rank + 1
+                    ),
+                )
+            }
+        }
+    }
+}
+
+/// The leg's result if it completed, else a failure detail.
+fn completed<'a>(run: &'a ScenarioRun, leg: &str) -> Result<&'a LegResult, String> {
+    match run.leg(leg) {
+        None => Err(format!("leg '{leg}' was not executed")),
+        Some(r) if r.outcome == LegOutcome::Completed => Ok(r),
+        Some(r) => Err(format!(
+            "leg '{leg}' did not complete: {} ({})",
+            r.outcome,
+            r.error.as_deref().unwrap_or("no detail")
+        )),
+    }
+}
+
+fn bitwise_equal(run: &ScenarioRun, legs: &[String], label: String) -> CheckResult {
+    let mut models: Vec<(&str, &PosteriorModel)> = Vec::with_capacity(legs.len());
+    for leg in legs {
+        match completed(run, leg) {
+            Err(detail) => return CheckResult::fail(label, detail),
+            Ok(result) => match &result.model {
+                Some(m) => models.push((leg, m)),
+                None => {
+                    return CheckResult::fail(label, format!("leg '{leg}' produced no model"))
+                }
+            },
+        }
+    }
+    let (base_name, base) = models[0];
+    for (name, model) in &models[1..] {
+        if let Some(diff) = first_difference(base, model) {
+            return CheckResult::fail(
+                label,
+                format!("'{base_name}' and '{name}' diverge: {diff}"),
+            );
+        }
+    }
+    CheckResult::pass(label, format!("{} models bit-for-bit identical", models.len()))
+}
+
+/// Exact posterior comparison; returns a description of the first
+/// mismatch, or `None` when the models are bit-for-bit identical.
+fn first_difference(a: &PosteriorModel, b: &PosteriorModel) -> Option<String> {
+    if a.k != b.k {
+        return Some(format!("k {} vs {}", a.k, b.k));
+    }
+    if a.global_mean.to_bits() != b.global_mean.to_bits() {
+        return Some(format!("global_mean {} vs {}", a.global_mean, b.global_mean));
+    }
+    for (side, ga, gb) in [("u", &a.u_post, &b.u_post), ("v", &a.v_post, &b.v_post)] {
+        if ga.n != gb.n {
+            return Some(format!("{side}_post rows {} vs {}", ga.n, gb.n));
+        }
+        for (field, xa, xb) in [("mean", &ga.mean, &gb.mean), ("prec", &ga.prec, &gb.prec)] {
+            if let Some(i) = (0..xa.len().max(xb.len()))
+                .find(|&i| xa.get(i).map(|v| v.to_bits()) != xb.get(i).map(|v| v.to_bits()))
+            {
+                return Some(format!(
+                    "{side}_post.{field}[{i}]: {:?} vs {:?}",
+                    xa.get(i),
+                    xb.get(i)
+                ));
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posterior::gaussian::RowGaussians;
+
+    fn model(shift: f64) -> PosteriorModel {
+        let g = RowGaussians {
+            n: 2,
+            k: 2,
+            mean: vec![0.1 + shift, 0.2, 0.3, 0.4],
+            prec: vec![1.0; 2 * 2 * 2],
+        };
+        PosteriorModel::new(g.clone(), g, 3.5)
+    }
+
+    fn completed_leg(name: &str, m: PosteriorModel) -> LegResult {
+        LegResult {
+            name: name.into(),
+            outcome: LegOutcome::Completed,
+            error: None,
+            model: Some(m),
+            stats: None,
+            rmse: Some(1.0),
+            blocks_restored: 0,
+            secs: 0.0,
+            finished_rank: 0,
+        }
+    }
+
+    #[test]
+    fn bitwise_detects_single_ulp() {
+        let run = ScenarioRun {
+            name: "t".into(),
+            path: "<t>".into(),
+            legs: vec![
+                completed_leg("a", model(0.0)),
+                completed_leg("b", model(0.0)),
+                completed_leg("c", model(f64::EPSILON)),
+            ],
+            secs: 0.0,
+        };
+        let same = bitwise_equal(&run, &["a".into(), "b".into()], "x".into());
+        assert!(same.passed, "{}", same.detail);
+        let diff = bitwise_equal(&run, &["a".into(), "c".into()], "x".into());
+        assert!(!diff.passed);
+        assert!(diff.detail.contains("u_post.mean[0]"), "{}", diff.detail);
+    }
+
+    #[test]
+    fn incomplete_leg_fails_not_panics() {
+        let run = ScenarioRun {
+            name: "t".into(),
+            path: "<t>".into(),
+            legs: vec![LegResult {
+                name: "a".into(),
+                outcome: LegOutcome::Failed,
+                error: Some("boom".into()),
+                model: None,
+                stats: None,
+                rmse: None,
+                blocks_restored: 0,
+                secs: 0.0,
+                finished_rank: 0,
+            }],
+            secs: 0.0,
+        };
+        let r = evaluate_one(&Invariant::RmseMax { leg: "a".into(), max: 1.0 }, &run);
+        assert!(!r.passed);
+        assert!(r.detail.contains("boom"), "{}", r.detail);
+    }
+}

@@ -1,0 +1,422 @@
+//! Scenario execution: drive the real [`Engine`] through a parsed
+//! [`Scenario`] and collect per-leg observations for the comparator.
+//!
+//! The executor is deliberately boring: one synthetic dataset and one
+//! holdout split per scenario (split seed 7, matching the `train` and
+//! `ingest` CLIs), one warm [`Engine`] shared by every leg, and one τ
+//! resolved up front so cross-leg bitwise comparisons are exact. Store
+//! legs ingest the train split into a scenario-scoped temp directory
+//! (once per distinct grid); fault legs run the crash under the leg's
+//! [`FaultPlan`] and, when asked, resume from the newest checkpoint
+//! generation. Nothing here panics on a failed run — every leg ends as
+//! a [`LegResult`] and the invariants decide what that means.
+
+use crate::coordinator::trainer::RunStats;
+use crate::coordinator::{BackendSpec, Engine, Session, TrainConfig, TrainOutcome, TrainResult};
+use crate::data::split::holdout_split_covered;
+use crate::data::{Coo, SyntheticDataset};
+use crate::posterior::PosteriorModel;
+use crate::store::{ingest, ShardStore};
+use crate::testing::fault::FaultPlan;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::spec::{LegSpec, RunSpec, Scenario, Tenancy};
+
+/// Holdout split seed, fixed to match `bmf-pp train`/`ingest` so a
+/// scenario's RMSE bound is comparable with the CLI's reported numbers.
+const SPLIT_SEED: u64 = 7;
+
+/// How a leg ended, as the comparator sees it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LegOutcome {
+    /// Trained to completion (model + stats available).
+    Completed,
+    /// The run failed — an injected fault, a rejected config, or any
+    /// engine error. The detail string says which.
+    Failed,
+    /// The run was cancelled (not currently produced by any spec knob,
+    /// but the engine can report it).
+    Cancelled,
+}
+
+impl std::fmt::Display for LegOutcome {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            LegOutcome::Completed => "completed",
+            LegOutcome::Failed => "failed",
+            LegOutcome::Cancelled => "cancelled",
+        })
+    }
+}
+
+/// Everything observed about one executed leg.
+#[derive(Debug)]
+pub struct LegResult {
+    /// The leg's spec name.
+    pub name: String,
+    /// Terminal state.
+    pub outcome: LegOutcome,
+    /// Failure detail when `outcome != Completed`.
+    pub error: Option<String>,
+    /// The trained posterior (completed legs only).
+    pub model: Option<PosteriorModel>,
+    /// Run counters (completed legs only).
+    pub stats: Option<RunStats>,
+    /// Holdout RMSE of `model` (completed legs only).
+    pub rmse: Option<f64>,
+    /// Blocks restored from checkpoint instead of recomputed — nonzero
+    /// proves a resumed leg actually resumed.
+    pub blocks_restored: usize,
+    /// Wall-clock seconds the leg took (including any crash + resume).
+    pub secs: f64,
+    /// 0-based completion order across the scenario's legs (in a
+    /// sequential scenario this is just the leg index).
+    pub finished_rank: usize,
+}
+
+impl LegResult {
+    fn failed(name: &str, error: String, secs: f64, rank: usize) -> LegResult {
+        LegResult {
+            name: name.to_string(),
+            outcome: LegOutcome::Failed,
+            error: Some(error),
+            model: None,
+            stats: None,
+            rmse: None,
+            blocks_restored: 0,
+            secs,
+            finished_rank: rank,
+        }
+    }
+}
+
+/// A scenario-scoped temporary directory, removed on drop. Hand-rolled
+/// (no tempfile dep): uniqueness comes from pid + a process-wide counter.
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> std::io::Result<TempDir> {
+        static SEQ: AtomicUsize = AtomicUsize::new(0);
+        let path = std::env::temp_dir().join(format!(
+            "bmfpp_scenario_{tag}_{}_{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&path)?;
+        Ok(TempDir(path))
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+/// The execution context a scenario's legs share.
+struct Context {
+    engine: Engine,
+    train: Coo,
+    test: Coo,
+    k: usize,
+    tau: f64,
+    /// Ingested shard stores, one per distinct grid (store legs only).
+    stores: Mutex<BTreeMap<(usize, usize), Result<Arc<ShardStore>, String>>>,
+    /// Keeps store/checkpoint temp directories alive until the scenario ends.
+    scratch: Mutex<Vec<TempDir>>,
+}
+
+impl Context {
+    fn config(&self, run: &RunSpec) -> TrainConfig {
+        TrainConfig::new(self.k)
+            .with_backend(BackendSpec::Native)
+            .with_grid(run.grid.0, run.grid.1)
+            .with_sweeps(run.burnin, run.samples)
+            .with_seed(run.seed)
+            .with_workers(run.workers.max(1))
+            .with_tau(run.tau.unwrap_or(self.tau))
+            .with_sweep_mode(run.sweep)
+            .with_chunk_rows(run.chunk_rows)
+            .with_staleness(run.staleness)
+            .with_scheduler(run.scheduler)
+            .with_priority(run.priority)
+            .with_max_in_flight(run.max_in_flight)
+    }
+
+    /// The shard store for `grid`, ingesting the train split on first use.
+    fn store_for(&self, grid: (usize, usize)) -> Result<Arc<ShardStore>, String> {
+        let mut stores = self.stores.lock().unwrap();
+        if let Some(cached) = stores.get(&grid) {
+            return cached.clone();
+        }
+        let built = self.ingest_store(grid);
+        stores.insert(grid, built.clone());
+        built
+    }
+
+    fn ingest_store(&self, grid: (usize, usize)) -> Result<Arc<ShardStore>, String> {
+        let dir = TempDir::new(&format!("store_{}x{}", grid.0, grid.1))
+            .map_err(|e| format!("cannot create store dir: {e}"))?;
+        ingest(&self.train, grid.0, grid.1, &dir.0).map_err(|e| e.to_string())?;
+        let store = ShardStore::open(&dir.0).map_err(|e| e.to_string())?;
+        self.scratch.lock().unwrap().push(dir);
+        Ok(Arc::new(store))
+    }
+
+    fn submit(&self, cfg: TrainConfig, leg: &LegSpec) -> anyhow::Result<Session> {
+        if leg.store {
+            let store = self.store_for(leg.run.grid).map_err(anyhow::Error::msg)?;
+            let cfg =
+                if leg.cache_bytes > 0 { cfg.with_cache_bytes(leg.cache_bytes) } else { cfg };
+            self.engine.submit_store(cfg, store)
+        } else {
+            self.engine.submit(cfg, &self.train)
+        }
+    }
+}
+
+/// One fully-executed scenario, ready for the comparator/reporter.
+#[derive(Debug)]
+pub struct ScenarioRun {
+    /// The scenario's name.
+    pub name: String,
+    /// The file it came from (re-run hints).
+    pub path: String,
+    /// Per-leg observations, in spec order.
+    pub legs: Vec<LegResult>,
+    /// Wall-clock seconds for the whole scenario.
+    pub secs: f64,
+}
+
+impl ScenarioRun {
+    /// The result for leg `name` (validated to exist at parse time).
+    pub fn leg(&self, name: &str) -> Option<&LegResult> {
+        self.legs.iter().find(|l| l.name == name)
+    }
+}
+
+/// Execute every leg of `scn` against a fresh engine. Run-time failures
+/// (engine errors, injected faults, store errors) are captured in the
+/// returned [`LegResult`]s — this function only errors when the scenario
+/// cannot be set up at all (unknown dataset profile escaping validation
+/// is impossible, so in practice: never for a parsed spec).
+pub fn run_scenario(scn: &Scenario) -> anyhow::Result<ScenarioRun> {
+    let started = Instant::now();
+    let ds = SyntheticDataset::by_name(&scn.dataset.profile, scn.dataset.scale, scn.dataset.seed)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset profile '{}'", scn.dataset.profile))?;
+    let (train, test) = holdout_split_covered(&ds.ratings, scn.dataset.test_frac, SPLIT_SEED);
+    let tau = scn.base.tau.unwrap_or_else(|| crate::coordinator::config::auto_tau(&train));
+    let ctx = Context {
+        engine: Engine::new(&BackendSpec::Native, scn.threads),
+        train,
+        test,
+        k: scn.dataset.k.unwrap_or(ds.k),
+        tau,
+        stores: Mutex::new(BTreeMap::new()),
+        scratch: Mutex::new(Vec::new()),
+    };
+
+    let legs = match scn.tenancy {
+        Tenancy::Sequential => run_sequential(&ctx, scn),
+        Tenancy::Concurrent => run_concurrent(&ctx, scn),
+    };
+
+    Ok(ScenarioRun {
+        name: scn.name.clone(),
+        path: scn.display_path(),
+        legs,
+        secs: started.elapsed().as_secs_f64(),
+    })
+}
+
+fn run_sequential(ctx: &Context, scn: &Scenario) -> Vec<LegResult> {
+    scn.legs
+        .iter()
+        .enumerate()
+        .map(|(rank, leg)| {
+            if leg.fault_block.is_some() {
+                run_fault_leg(ctx, leg, rank)
+            } else {
+                run_plain_leg(ctx, leg, rank)
+            }
+        })
+        .collect()
+}
+
+/// Submit every leg up front (in spec order) and let the engine's shared
+/// priority queue interleave them; completion order is observed for the
+/// `finish_before` invariant.
+fn run_concurrent(ctx: &Context, scn: &Scenario) -> Vec<LegResult> {
+    let started = Instant::now();
+    let mut submitted = Vec::with_capacity(scn.legs.len());
+    for leg in &scn.legs {
+        let cfg = ctx.config(&leg.run);
+        submitted.push((leg, ctx.submit(cfg, leg)));
+    }
+    let finish_order: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    let mut results: Vec<LegResult> = std::thread::scope(|scope| {
+        let handles: Vec<_> = submitted
+            .into_iter()
+            .map(|(leg, session)| {
+                let order = &finish_order;
+                scope.spawn(move || match session {
+                    Err(e) => {
+                        order.lock().unwrap().push(leg.name.clone());
+                        let secs = started.elapsed().as_secs_f64();
+                        LegResult::failed(&leg.name, e.to_string(), secs, 0)
+                    }
+                    Ok(session) => {
+                        let outcome = session.wait();
+                        order.lock().unwrap().push(leg.name.clone());
+                        finish_leg(ctx, &leg.name, outcome, started.elapsed().as_secs_f64(), 0)
+                    }
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("leg thread panicked")).collect()
+    });
+    let order = finish_order.into_inner().unwrap();
+    for leg in &mut results {
+        leg.finished_rank = order.iter().position(|n| n == &leg.name).unwrap_or(usize::MAX);
+    }
+    results
+}
+
+fn run_plain_leg(ctx: &Context, leg: &LegSpec, rank: usize) -> LegResult {
+    let started = Instant::now();
+    let mut cfg = ctx.config(&leg.run);
+    if leg.checkpoint_every > 0 {
+        match TempDir::new("ckpt") {
+            Ok(dir) => {
+                cfg = cfg.with_checkpoint_every(leg.checkpoint_every).with_checkpoint_dir(&dir.0);
+                ctx.scratch.lock().unwrap().push(dir);
+            }
+            Err(e) => {
+                return LegResult::failed(
+                    &leg.name,
+                    format!("cannot create checkpoint dir: {e}"),
+                    started.elapsed().as_secs_f64(),
+                    rank,
+                )
+            }
+        }
+    }
+    let outcome = ctx.submit(cfg, leg).and_then(|s| s.wait());
+    finish_leg(ctx, &leg.name, outcome, started.elapsed().as_secs_f64(), rank)
+}
+
+/// Run the leg with its fault plan armed (crash expected), then — when
+/// the leg opts into resume — rerun the identical config without the
+/// fault, restoring from the checkpoint generations the crashed run
+/// left behind. The *resumed* run is the leg's reported result.
+fn run_fault_leg(ctx: &Context, leg: &LegSpec, rank: usize) -> LegResult {
+    let started = Instant::now();
+    let block = leg.fault_block.expect("fault leg without fault_block");
+    let ckpt = match TempDir::new("fault_ckpt") {
+        Ok(dir) => dir,
+        Err(e) => {
+            return LegResult::failed(
+                &leg.name,
+                format!("cannot create checkpoint dir: {e}"),
+                started.elapsed().as_secs_f64(),
+                rank,
+            )
+        }
+    };
+    let mut crash_cfg = ctx.config(&leg.run).with_fault_plan(FaultPlan::panic_at_block(block));
+    if leg.checkpoint_every > 0 {
+        crash_cfg =
+            crash_cfg.with_checkpoint_every(leg.checkpoint_every).with_checkpoint_dir(&ckpt.0);
+    }
+    let crash = ctx.submit(crash_cfg, leg).and_then(|s| s.wait());
+    match crash {
+        Err(e) => {
+            let secs = started.elapsed().as_secs_f64();
+            return LegResult::failed(&leg.name, e.to_string(), secs, rank);
+        }
+        Ok(TrainOutcome::Failed(_)) if !leg.resume => {
+            // The failure IS the expected observation (expect_outcome: failed).
+            return LegResult::failed(
+                &leg.name,
+                format!("injected fault at block {block}"),
+                started.elapsed().as_secs_f64(),
+                rank,
+            );
+        }
+        Ok(TrainOutcome::Failed(_)) => {} // expected crash; fall through to resume
+        Ok(other) => {
+            return LegResult::failed(
+                &leg.name,
+                format!(
+                    "fault at block {block} did not fire: run ended {}",
+                    outcome_name(&other)
+                ),
+                started.elapsed().as_secs_f64(),
+                rank,
+            )
+        }
+    }
+    let resume_cfg = ctx.config(&leg.run).with_resume_from(&ckpt.0);
+    let outcome = ctx.submit(resume_cfg, leg).and_then(|s| s.wait());
+    ctx.scratch.lock().unwrap().push(ckpt);
+    finish_leg(ctx, &leg.name, outcome, started.elapsed().as_secs_f64(), rank)
+}
+
+fn outcome_name(outcome: &TrainOutcome) -> &'static str {
+    match outcome {
+        TrainOutcome::Completed(_) => "completed",
+        TrainOutcome::Cancelled(_) => "cancelled",
+        TrainOutcome::Failed(_) => "failed",
+    }
+}
+
+fn finish_leg(
+    ctx: &Context,
+    name: &str,
+    outcome: anyhow::Result<TrainOutcome>,
+    secs: f64,
+    rank: usize,
+) -> LegResult {
+    match outcome {
+        Err(e) => LegResult::failed(name, e.to_string(), secs, rank),
+        Ok(TrainOutcome::Completed(result)) => completed_leg(ctx, name, *result, secs, rank),
+        Ok(TrainOutcome::Cancelled(info)) => LegResult {
+            name: name.to_string(),
+            outcome: LegOutcome::Cancelled,
+            error: Some(format!("cancelled after {} blocks", info.blocks_completed)),
+            model: None,
+            stats: None,
+            rmse: None,
+            blocks_restored: 0,
+            secs,
+            finished_rank: rank,
+        },
+        Ok(TrainOutcome::Failed(info)) => LegResult::failed(name, info.error, secs, rank),
+    }
+}
+
+fn completed_leg(
+    ctx: &Context,
+    name: &str,
+    result: TrainResult,
+    secs: f64,
+    rank: usize,
+) -> LegResult {
+    let rmse = result.model.rmse(&ctx.test);
+    let stats = result.stats;
+    LegResult {
+        name: name.to_string(),
+        outcome: LegOutcome::Completed,
+        error: None,
+        blocks_restored: stats.blocks_restored,
+        rmse: Some(rmse),
+        stats: Some(stats),
+        model: Some(result.into_model()),
+        secs,
+        finished_rank: rank,
+    }
+}

@@ -1,0 +1,38 @@
+//! Declarative scenario harness: data-driven end-to-end specs with
+//! invariant checking (`bmf-pp scenario`).
+//!
+//! A scenario is a JSON file describing a complete exercise of the
+//! training stack — dataset, grid, sweep/scheduler modes, store-backed
+//! legs, fault plans, multi-tenant job mixes — plus the invariants the
+//! runs must satisfy (RMSE bounds, bitwise-equal pairs, queue-wait
+//! bounds, eviction floors, expected outcomes, crash→resume
+//! equivalence). The pipeline is four small modules:
+//!
+//! ```text
+//! spec.rs        JSON file ──parse+validate──▶ Scenario   (typed SpecError on any defect)
+//! executor.rs    Scenario ──Engine runs─────▶ ScenarioRun (per-leg models + RunStats)
+//! comparator.rs  invariants × ScenarioRun ──▶ CheckResult verdicts
+//! reporter.rs    verdicts ──────────────────▶ human table + machine JSON report
+//! ```
+//!
+//! [`run_and_check`] strings them together for one scenario; the CLI
+//! sweeps a directory of specs and exits non-zero if any invariant
+//! fails. New workloads become data files under `scenarios/`, not new
+//! Rust tests.
+
+pub mod comparator;
+pub mod executor;
+pub mod reporter;
+pub mod spec;
+
+pub use comparator::{evaluate, CheckResult};
+pub use executor::{run_scenario, LegOutcome, LegResult, ScenarioRun};
+pub use reporter::{render_human, render_summary, to_json, ScenarioReport};
+pub use spec::{load_path, Invariant, LegSpec, RunSpec, Scenario, SpecError, Tenancy};
+
+/// Execute one scenario and evaluate its invariants.
+pub fn run_and_check(scn: &Scenario) -> anyhow::Result<ScenarioReport> {
+    let run = run_scenario(scn)?;
+    let checks = evaluate(scn, &run);
+    Ok(ScenarioReport { run, checks })
+}

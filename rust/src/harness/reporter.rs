@@ -1,0 +1,151 @@
+//! Scenario reporting: a human table on stdout and a machine-readable
+//! JSON report (the artifact CI uploads).
+//!
+//! The human output prints one block per scenario — its legs with
+//! outcome/RMSE/timing, then each invariant as `PASS`/`FAIL` with the
+//! comparator's observed detail — and every failing scenario ends with
+//! the exact `bmf-pp scenario <file>` line that reproduces it alone.
+//! The JSON report mirrors the same data (`version: 1`) via
+//! [`crate::util::json`], so downstream tooling needs no extra parser.
+
+use crate::util::json::Json;
+use std::fmt::Write as _;
+
+use super::comparator::CheckResult;
+use super::executor::{LegOutcome, ScenarioRun};
+
+/// One scenario's executed legs plus its evaluated invariants.
+#[derive(Debug)]
+pub struct ScenarioReport {
+    /// The executed scenario.
+    pub run: ScenarioRun,
+    /// The comparator's verdicts, in spec order.
+    pub checks: Vec<CheckResult>,
+}
+
+impl ScenarioReport {
+    /// A scenario passes iff every invariant held.
+    pub fn passed(&self) -> bool {
+        self.checks.iter().all(|c| c.passed)
+    }
+}
+
+/// Render the human block for one scenario (what `bmf-pp scenario`
+/// prints as each spec finishes).
+pub fn render_human(report: &ScenarioReport) -> String {
+    let mut out = String::new();
+    let verdict = if report.passed() { "PASS" } else { "FAIL" };
+    let _ = writeln!(
+        out,
+        "[{verdict}] {}  ({} legs, {:.1}s)",
+        report.run.name,
+        report.run.legs.len(),
+        report.run.secs
+    );
+    for leg in &report.run.legs {
+        let rmse = leg.rmse.map(|r| format!("rmse {r:.4}")).unwrap_or_else(|| "-".into());
+        let extra = match (&leg.outcome, &leg.error) {
+            (LegOutcome::Completed, _) if leg.blocks_restored > 0 => {
+                format!("  ({} blocks restored)", leg.blocks_restored)
+            }
+            (LegOutcome::Completed, _) => String::new(),
+            (_, Some(e)) => format!("  ({e})"),
+            (_, None) => String::new(),
+        };
+        let _ = writeln!(
+            out,
+            "  leg {:<14} {:<9} {:<12} {:>6.1}s{extra}",
+            leg.name, leg.outcome, rmse, leg.secs
+        );
+    }
+    for check in &report.checks {
+        let mark = if check.passed { "PASS" } else { "FAIL" };
+        let _ = writeln!(out, "  [{mark}] {:<40} {}", check.invariant, check.detail);
+    }
+    if !report.passed() {
+        let _ = writeln!(out, "  re-run: bmf-pp scenario {}", report.run.path);
+    }
+    out
+}
+
+/// Render the one-line sweep summary printed after all scenarios ran.
+pub fn render_summary(reports: &[ScenarioReport]) -> String {
+    let passed = reports.iter().filter(|r| r.passed()).count();
+    let mut out = format!("scenarios: {passed}/{} passed", reports.len());
+    for report in reports.iter().filter(|r| !r.passed()) {
+        let _ = write!(
+            out,
+            "\n  FAIL {}  — re-run: bmf-pp scenario {}",
+            report.run.name, report.run.path
+        );
+    }
+    out
+}
+
+/// Build the machine JSON report (`{"version": 1, ...}`) for `--report`.
+pub fn to_json(reports: &[ScenarioReport]) -> Json {
+    let passed = reports.iter().filter(|r| r.passed()).count();
+    Json::obj(vec![
+        ("version", Json::Num(1.0)),
+        ("total", Json::Num(reports.len() as f64)),
+        ("passed", Json::Num(passed as f64)),
+        ("failed", Json::Num((reports.len() - passed) as f64)),
+        ("scenarios", Json::Arr(reports.iter().map(scenario_json).collect())),
+    ])
+}
+
+fn scenario_json(report: &ScenarioReport) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(report.run.name.clone())),
+        ("file", Json::Str(report.run.path.clone())),
+        ("passed", Json::Bool(report.passed())),
+        ("secs", Json::Num(report.run.secs)),
+        (
+            "legs",
+            Json::Arr(
+                report
+                    .run
+                    .legs
+                    .iter()
+                    .map(|leg| {
+                        let mut fields = vec![
+                            ("name", Json::Str(leg.name.clone())),
+                            ("outcome", Json::Str(leg.outcome.to_string())),
+                            ("secs", Json::Num(leg.secs)),
+                            ("finished_rank", Json::Num(leg.finished_rank as f64)),
+                            ("blocks_restored", Json::Num(leg.blocks_restored as f64)),
+                        ];
+                        if let Some(rmse) = leg.rmse {
+                            fields.push(("rmse", Json::Num(rmse)));
+                        }
+                        if let Some(stats) = &leg.stats {
+                            let evictions = stats.shard_evictions as f64;
+                            fields.push(("queue_wait_secs", Json::Num(stats.queue_wait_secs)));
+                            fields.push(("shard_evictions", Json::Num(evictions)));
+                        }
+                        if let Some(err) = &leg.error {
+                            fields.push(("error", Json::Str(err.clone())));
+                        }
+                        Json::obj(fields)
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "invariants",
+            Json::Arr(
+                report
+                    .checks
+                    .iter()
+                    .map(|c| {
+                        Json::obj(vec![
+                            ("invariant", Json::Str(c.invariant.clone())),
+                            ("passed", Json::Bool(c.passed)),
+                            ("detail", Json::Str(c.detail.clone())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}

@@ -1,0 +1,1064 @@
+//! Declarative scenario specs: JSON → typed [`Scenario`].
+//!
+//! A scenario file describes an end-to-end exercise of the training
+//! stack as data: the synthetic dataset to generate, a base training
+//! configuration, a list of **legs** (runs that vary one or more knobs —
+//! sweep mode, scheduler, store-backed vs resident, a fault plan), and a
+//! list of **invariants** the executed legs must satisfy. Parsing is
+//! strict: unknown keys, wrong types, and inconsistent combinations
+//! (staleness on a lockstep leg, a fault plan with no checkpointing
+//! armed) are typed [`SpecError`]s at load time — a malformed spec never
+//! reaches the engine, let alone panics.
+//!
+//! The JSON grammar (parsed with [`crate::util::json`]; no external
+//! deps):
+//!
+//! ```json
+//! {
+//!   "name": "tau0-pipelined-bitwise",
+//!   "description": "pipelined tau=0 must equal lockstep bitwise",
+//!   "dataset": {"profile": "movielens", "scale": 0.002, "seed": 11},
+//!   "config": {"grid": "3x3", "burnin": 6, "samples": 12, "seed": 11},
+//!   "legs": [
+//!     {"name": "lockstep"},
+//!     {"name": "pipelined", "sweep": "pipelined", "staleness": 0}
+//!   ],
+//!   "invariants": [
+//!     {"check": "bitwise_equal", "legs": ["lockstep", "pipelined"]},
+//!     {"check": "rmse_max", "leg": "lockstep", "max": 1.6}
+//!   ]
+//! }
+//! ```
+//!
+//! Every `config` key may be overridden per leg; leg-only keys add the
+//! store-backed, fault-injection, and checkpointing dimensions.
+
+use crate::coordinator::{Priority, SchedulerMode, SweepMode};
+use crate::data::generator::DatasetProfile;
+use crate::util::cli::parse_grid;
+use crate::util::json::{self, Json, JsonError};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Why a scenario file was rejected. Every variant names the offending
+/// section/field so the fix is obvious from the message alone; the CLI
+/// prints these and exits non-zero without running anything.
+#[derive(Debug, thiserror::Error)]
+pub enum SpecError {
+    /// The file (or directory) could not be read.
+    #[error("cannot read scenario {path}: {source}")]
+    Io {
+        /// The path that failed.
+        path: PathBuf,
+        /// The underlying filesystem error.
+        source: std::io::Error,
+    },
+    /// The file is not valid JSON.
+    #[error("scenario {path} is not valid JSON: {source}")]
+    Json {
+        /// The file that failed to parse.
+        path: PathBuf,
+        /// The parser's error (with byte offset).
+        source: JsonError,
+    },
+    /// A section that must be a JSON object (or array) is something else.
+    #[error("scenario section '{section}' must be {expected}")]
+    WrongShape {
+        /// The section (dotted path) with the wrong shape.
+        section: String,
+        /// What the parser expected there.
+        expected: &'static str,
+    },
+    /// An object contains a key the schema does not define — almost
+    /// always a typo; listing the accepted keys makes it self-healing.
+    #[error("unknown key '{key}' in '{section}' (accepted: {})", known.join(", "))]
+    UnknownKey {
+        /// The section (dotted path) holding the unknown key.
+        section: String,
+        /// The rejected key.
+        key: String,
+        /// Keys the section accepts.
+        known: Vec<&'static str>,
+    },
+    /// A required field is absent.
+    #[error("'{section}' is missing required field '{field}'")]
+    MissingField {
+        /// The section (dotted path) missing the field.
+        section: String,
+        /// The absent field.
+        field: &'static str,
+    },
+    /// A field is present but its value is unusable (wrong type, unknown
+    /// enum name, out of range).
+    #[error("bad value for '{section}.{field}': got {got}, expected {expected}")]
+    BadValue {
+        /// The section (dotted path) holding the field.
+        section: String,
+        /// The offending field.
+        field: String,
+        /// The value found, rendered.
+        got: String,
+        /// What would have been accepted.
+        expected: String,
+    },
+    /// Two legs share a name — invariants reference legs by name, so
+    /// names must be unique.
+    #[error("duplicate leg name '{name}'")]
+    DuplicateLeg {
+        /// The repeated name.
+        name: String,
+    },
+    /// The scenario has no legs to run.
+    #[error("scenario '{scenario}' declares no legs")]
+    NoLegs {
+        /// The offending scenario.
+        scenario: String,
+    },
+    /// The scenario has no invariants — it would always "pass", which is
+    /// a spec bug, not a test.
+    #[error("scenario '{scenario}' declares no invariants")]
+    NoInvariants {
+        /// The offending scenario.
+        scenario: String,
+    },
+    /// An invariant references a leg name no leg declares.
+    #[error("invariant '{invariant}' references unknown leg '{leg}'")]
+    UnknownLeg {
+        /// The invariant (rendered) holding the reference.
+        invariant: String,
+        /// The dangling leg name.
+        leg: String,
+    },
+    /// `staleness > 0` on a leg whose effective sweep mode is lockstep:
+    /// the staleness bound τ only exists in the pipelined exchange.
+    #[error(
+        "leg '{leg}' sets staleness {staleness} under lockstep sweeps — \
+         the staleness bound only applies to sweep \"pipelined\""
+    )]
+    StalenessOnLockstep {
+        /// The offending leg.
+        leg: String,
+        /// The staleness it asked for.
+        staleness: usize,
+    },
+    /// A fault-injected leg that wants to resume has no periodic
+    /// checkpointing armed — there would be nothing to resume from.
+    #[error(
+        "leg '{leg}' injects a fault but arms no checkpointing \
+         (set checkpoint_every >= 1, or resume: false to assert the failure)"
+    )]
+    FaultWithoutCheckpoint {
+        /// The offending leg.
+        leg: String,
+    },
+    /// Fault-injected legs need the deterministic sequential executor;
+    /// concurrent tenancy would race the crash against its neighbours.
+    #[error("leg '{leg}' injects a fault in a concurrent scenario — use sequential tenancy")]
+    FaultInConcurrent {
+        /// The offending leg.
+        leg: String,
+    },
+    /// A directory sweep found no scenario files at all.
+    #[error("no scenario files (*.json) found under {path}")]
+    NoScenarios {
+        /// The directory that was swept.
+        path: PathBuf,
+    },
+}
+
+/// Synthetic-dataset parameters for a scenario (section `dataset`).
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    /// Synthetic profile name ("movielens", "netflix", "yahoo", "amazon").
+    /// The skewed-nnz profiles (yahoo, amazon) give long-tailed blocks.
+    pub profile: String,
+    /// Profile scale factor (fraction of the paper-sized matrix).
+    pub scale: f64,
+    /// Generator seed.
+    pub seed: u64,
+    /// Latent dimension override (`None` = the profile's K).
+    pub k: Option<usize>,
+    /// Held-out fraction for the RMSE invariants (split seed is fixed at
+    /// 7, matching the CLI's `train`/`ingest`).
+    pub test_frac: f64,
+}
+
+/// The training knobs a scenario (and each leg, by override) controls —
+/// the declarative mirror of `TrainConfig`.
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    /// Block grid (I row-blocks × J column-blocks).
+    pub grid: (usize, usize),
+    /// Burn-in sweeps per block.
+    pub burnin: usize,
+    /// Retained samples per block.
+    pub samples: usize,
+    /// Base RNG seed.
+    pub seed: u64,
+    /// Within-block shard workers.
+    pub workers: usize,
+    /// Noise precision τ; `None` derives `auto_tau` from the train split
+    /// (the same value for every leg, so cross-leg comparisons stay exact).
+    pub tau: Option<f64>,
+    /// Lockstep vs pipelined within-block half-sweeps.
+    pub sweep: SweepMode,
+    /// Rows per published chunk (pipelined only).
+    pub chunk_rows: usize,
+    /// Staleness bound in chunks (pipelined only; 0 = bitwise-lockstep).
+    pub staleness: usize,
+    /// Barrier vs dependency-driven block scheduling.
+    pub scheduler: SchedulerMode,
+    /// Dispatch priority in the engine's shared queue.
+    pub priority: Priority,
+    /// Per-job in-flight block cap (0 = pool width).
+    pub max_in_flight: usize,
+}
+
+impl Default for RunSpec {
+    fn default() -> RunSpec {
+        RunSpec {
+            grid: (2, 2),
+            burnin: 4,
+            samples: 8,
+            seed: 42,
+            workers: 1,
+            tau: None,
+            sweep: SweepMode::Lockstep,
+            chunk_rows: 256,
+            staleness: 0,
+            scheduler: SchedulerMode::Dag,
+            priority: Priority::Normal,
+            max_in_flight: 0,
+        }
+    }
+}
+
+/// One run of the engine inside a scenario. A leg inherits the
+/// scenario's `config` and overrides any subset of it, plus the
+/// leg-only dimensions (store-backed data, fault injection,
+/// checkpointing).
+#[derive(Debug, Clone)]
+pub struct LegSpec {
+    /// Unique name invariants reference this leg by.
+    pub name: String,
+    /// The leg's effective training knobs (base config + overrides).
+    pub run: RunSpec,
+    /// Train out-of-core: ingest the train split into a shard store
+    /// (once per distinct grid) and stream blocks through the cache.
+    pub store: bool,
+    /// Shard-cache byte budget for a store leg (0 = unbounded). A budget
+    /// far below the store size forces evictions — pair with the
+    /// `min_evictions` invariant.
+    pub cache_bytes: u64,
+    /// Deterministic crash: panic when the block with this canonical
+    /// index starts sampling (see `testing::fault::FaultPlan`).
+    pub fault_block: Option<usize>,
+    /// After the injected crash, resume from the newest checkpoint
+    /// generation and report the *resumed* run as the leg's result
+    /// (default). `false` reports the crashed run itself — pair with
+    /// `expect_outcome: failed`.
+    pub resume: bool,
+    /// Periodic checkpoint interval in blocks (0 = off). Required ≥ 1
+    /// when `fault_block` is set with `resume: true`; the harness
+    /// provides the (temporary) generation directory itself.
+    pub checkpoint_every: usize,
+}
+
+/// How a scenario's legs share the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tenancy {
+    /// Legs run one after another on the same warm pool (the default) —
+    /// the mode for bitwise-pair and fault/resume scenarios.
+    Sequential,
+    /// All legs are submitted at once and interleave on the shared
+    /// priority queue — the multi-tenant mode, for `finish_before` /
+    /// `max_queue_wait_secs` invariants.
+    Concurrent,
+}
+
+/// What a leg is expected to end as (`expect_outcome` invariant).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExpectedOutcome {
+    /// The run trained to completion.
+    Completed,
+    /// The run failed (a fault-injected leg with `resume: false`).
+    Failed,
+}
+
+impl std::fmt::Display for ExpectedOutcome {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ExpectedOutcome::Completed => "completed",
+            ExpectedOutcome::Failed => "failed",
+        })
+    }
+}
+
+/// A declarative check over the executed legs (section `invariants`).
+/// The comparator evaluates each against the `LegResult`s; any failure
+/// fails the scenario (and the CLI exit code).
+#[derive(Debug, Clone)]
+pub enum Invariant {
+    /// The leg's holdout RMSE must be ≤ `max` (and finite).
+    RmseMax {
+        /// Leg to score.
+        leg: String,
+        /// Inclusive RMSE bound.
+        max: f64,
+    },
+    /// All named legs must produce bit-for-bit identical posteriors —
+    /// the repo's strongest equivalence (store ≡ resident, τ=0 pipelined
+    /// ≡ lockstep, DAG ≡ barrier, interleaved ≡ interleaved).
+    BitwiseEqual {
+        /// Legs whose models must match exactly (≥ 2).
+        legs: Vec<String>,
+    },
+    /// The leg's measured dispatch delay (`RunStats::queue_wait_secs`)
+    /// must be ≤ `max` seconds — the multi-tenant fairness bound.
+    MaxQueueWaitSecs {
+        /// Leg whose queue wait is bounded.
+        leg: String,
+        /// Inclusive bound in seconds.
+        max: f64,
+    },
+    /// A store-backed leg must have evicted at least `min` shards — the
+    /// proof its cache budget actually bounded the working set.
+    MinEvictions {
+        /// Leg whose evictions are counted.
+        leg: String,
+        /// Inclusive eviction floor.
+        min: u64,
+    },
+    /// The leg must end in the given state.
+    ExpectOutcome {
+        /// Leg to check.
+        leg: String,
+        /// Required terminal state.
+        outcome: ExpectedOutcome,
+    },
+    /// `resumed` (a fault-injected leg that resumed from its crash
+    /// checkpoint) must have restored at least one block AND match
+    /// `reference` (an uninterrupted leg) bit for bit — crash → resume
+    /// is the same computation.
+    ResumeBitwise {
+        /// The crashed-and-resumed leg.
+        resumed: String,
+        /// The uninterrupted reference leg.
+        reference: String,
+    },
+    /// In a concurrent scenario, leg `first` must reach its terminal
+    /// state before leg `then` — e.g. a small High-priority job landing
+    /// ahead of a wide Low-priority one submitted first.
+    FinishBefore {
+        /// Leg required to finish first.
+        first: String,
+        /// Leg required to finish after.
+        then: String,
+    },
+}
+
+impl Invariant {
+    /// Compact rendering ("bitwise_equal(a, b)") for tables and errors.
+    pub fn label(&self) -> String {
+        match self {
+            Invariant::RmseMax { leg, max } => format!("rmse_max({leg} <= {max})"),
+            Invariant::BitwiseEqual { legs } => format!("bitwise_equal({})", legs.join(", ")),
+            Invariant::MaxQueueWaitSecs { leg, max } => {
+                format!("max_queue_wait_secs({leg} <= {max})")
+            }
+            Invariant::MinEvictions { leg, min } => format!("min_evictions({leg} >= {min})"),
+            Invariant::ExpectOutcome { leg, outcome } => {
+                format!("expect_outcome({leg} = {outcome})")
+            }
+            Invariant::ResumeBitwise { resumed, reference } => {
+                format!("resume_bitwise({resumed} == {reference})")
+            }
+            Invariant::FinishBefore { first, then } => format!("finish_before({first} < {then})"),
+        }
+    }
+
+    /// Leg names this invariant references (for existence validation).
+    fn legs(&self) -> Vec<&str> {
+        match self {
+            Invariant::RmseMax { leg, .. }
+            | Invariant::MaxQueueWaitSecs { leg, .. }
+            | Invariant::MinEvictions { leg, .. }
+            | Invariant::ExpectOutcome { leg, .. } => vec![leg],
+            Invariant::BitwiseEqual { legs } => legs.iter().map(String::as_str).collect(),
+            Invariant::ResumeBitwise { resumed, reference } => vec![resumed, reference],
+            Invariant::FinishBefore { first, then } => vec![first, then],
+        }
+    }
+}
+
+/// A fully-parsed, validated scenario, ready for the executor.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Unique name (`--filter` matches on it).
+    pub name: String,
+    /// One-line human description.
+    pub description: String,
+    /// The file this scenario was loaded from (`None` for in-code specs).
+    pub path: Option<PathBuf>,
+    /// Synthetic dataset to generate.
+    pub dataset: DatasetSpec,
+    /// Base training knobs every leg inherits.
+    pub base: RunSpec,
+    /// Sequential (default) or concurrent leg execution.
+    pub tenancy: Tenancy,
+    /// Engine worker threads shared by the legs.
+    pub threads: usize,
+    /// The runs to execute.
+    pub legs: Vec<LegSpec>,
+    /// The checks that decide pass/fail.
+    pub invariants: Vec<Invariant>,
+}
+
+impl Scenario {
+    /// Parse and validate a scenario from JSON text. `path` is recorded
+    /// for re-run hints and error messages (pass the file's path, or a
+    /// placeholder like `<inline>` for generated specs).
+    pub fn parse(text: &str, path: impl Into<PathBuf>) -> Result<Scenario, SpecError> {
+        let path = path.into();
+        let root = json::parse(text)
+            .map_err(|source| SpecError::Json { path: path.clone(), source })?;
+        Scenario::from_json(&root, Some(path))
+    }
+
+    /// Load and validate one scenario file.
+    pub fn load(path: &Path) -> Result<Scenario, SpecError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|source| SpecError::Io { path: path.to_path_buf(), source })?;
+        Scenario::parse(&text, path)
+    }
+
+    /// Build a scenario from a parsed JSON value.
+    pub fn from_json(root: &Json, path: Option<PathBuf>) -> Result<Scenario, SpecError> {
+        const SCENARIO_KEYS: &[&str] = &[
+            "name",
+            "description",
+            "dataset",
+            "config",
+            "tenancy",
+            "threads",
+            "legs",
+            "invariants",
+        ];
+        let map = as_obj(root, "scenario")?;
+        check_keys(map, "scenario", SCENARIO_KEYS)?;
+
+        let name = req_str(map, "scenario", "name")?.to_string();
+        let description = opt_str(map, "scenario", "description")?.unwrap_or_default().to_string();
+        let dataset = parse_dataset(map.get("dataset"), "dataset")?;
+        let base = match map.get("config") {
+            Some(v) => parse_run(as_obj(v, "config")?, "config", &RunSpec::default())?,
+            None => RunSpec::default(),
+        };
+        let tenancy = match opt_str(map, "scenario", "tenancy")? {
+            None | Some("sequential") => Tenancy::Sequential,
+            Some("concurrent") => Tenancy::Concurrent,
+            Some(other) => {
+                return Err(bad("scenario", "tenancy", other, "\"sequential\" or \"concurrent\""))
+            }
+        };
+        let threads = opt_usize(map, "scenario", "threads")?.unwrap_or(2).max(1);
+
+        let legs_json = map
+            .get("legs")
+            .ok_or_else(|| SpecError::MissingField { section: "scenario".into(), field: "legs" })?;
+        let Json::Arr(leg_items) = legs_json else {
+            return Err(SpecError::WrongShape { section: "legs".into(), expected: "an array" });
+        };
+        let mut legs = Vec::with_capacity(leg_items.len());
+        for (i, item) in leg_items.iter().enumerate() {
+            legs.push(parse_leg(item, &format!("legs[{i}]"), &base)?);
+        }
+
+        let inv_json = map.get("invariants").ok_or_else(|| SpecError::MissingField {
+            section: "scenario".into(),
+            field: "invariants",
+        })?;
+        let Json::Arr(inv_items) = inv_json else {
+            return Err(SpecError::WrongShape {
+                section: "invariants".into(),
+                expected: "an array",
+            });
+        };
+        let mut invariants = Vec::with_capacity(inv_items.len());
+        for (i, item) in inv_items.iter().enumerate() {
+            invariants.push(parse_invariant(item, &format!("invariants[{i}]"))?);
+        }
+
+        let scenario =
+            Scenario { name, description, path, dataset, base, tenancy, threads, legs, invariants };
+        scenario.validate()?;
+        Ok(scenario)
+    }
+
+    /// Cross-field validation: leg-name uniqueness, invariant references,
+    /// and the combination rules that make specs executable.
+    fn validate(&self) -> Result<(), SpecError> {
+        if self.legs.is_empty() {
+            return Err(SpecError::NoLegs { scenario: self.name.clone() });
+        }
+        if self.invariants.is_empty() {
+            return Err(SpecError::NoInvariants { scenario: self.name.clone() });
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for leg in &self.legs {
+            if !seen.insert(leg.name.as_str()) {
+                return Err(SpecError::DuplicateLeg { name: leg.name.clone() });
+            }
+            if leg.run.staleness > 0 && leg.run.sweep == SweepMode::Lockstep {
+                return Err(SpecError::StalenessOnLockstep {
+                    leg: leg.name.clone(),
+                    staleness: leg.run.staleness,
+                });
+            }
+            if leg.fault_block.is_some() {
+                if leg.resume && leg.checkpoint_every == 0 {
+                    return Err(SpecError::FaultWithoutCheckpoint { leg: leg.name.clone() });
+                }
+                if self.tenancy == Tenancy::Concurrent {
+                    return Err(SpecError::FaultInConcurrent { leg: leg.name.clone() });
+                }
+            }
+        }
+        for inv in &self.invariants {
+            for leg in inv.legs() {
+                if !seen.contains(leg) {
+                    return Err(SpecError::UnknownLeg {
+                        invariant: inv.label(),
+                        leg: leg.to_string(),
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The path the CLI should name in re-run hints.
+    pub fn display_path(&self) -> String {
+        match &self.path {
+            Some(p) => p.display().to_string(),
+            None => format!("<{}>", self.name),
+        }
+    }
+}
+
+/// Load every scenario from `path`: a single `.json` file, or a
+/// directory swept non-recursively in sorted filename order. An empty
+/// directory is a typed [`SpecError::NoScenarios`] — a sweep that runs
+/// nothing must not look green.
+pub fn load_path(path: &Path) -> Result<Vec<Scenario>, SpecError> {
+    let meta = std::fs::metadata(path)
+        .map_err(|source| SpecError::Io { path: path.to_path_buf(), source })?;
+    if !meta.is_dir() {
+        return Ok(vec![Scenario::load(path)?]);
+    }
+    let entries = std::fs::read_dir(path)
+        .map_err(|source| SpecError::Io { path: path.to_path_buf(), source })?;
+    let mut files: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().map_or(false, |x| x == "json"))
+        .collect();
+    files.sort();
+    if files.is_empty() {
+        return Err(SpecError::NoScenarios { path: path.to_path_buf() });
+    }
+    files.iter().map(|f| Scenario::load(f)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// section parsers
+
+fn parse_dataset(v: Option<&Json>, section: &str) -> Result<DatasetSpec, SpecError> {
+    const KEYS: &[&str] = &["profile", "scale", "seed", "k", "test_frac"];
+    let empty = BTreeMap::new();
+    let map = match v {
+        Some(v) => as_obj(v, section)?,
+        None => &empty,
+    };
+    check_keys(map, section, KEYS)?;
+    let profile = opt_str(map, section, "profile")?.unwrap_or("movielens").to_string();
+    if DatasetProfile::by_name(&profile).is_none() {
+        return Err(bad(section, "profile", &profile, "movielens | netflix | yahoo | amazon"));
+    }
+    let scale = opt_f64(map, section, "scale")?.unwrap_or(0.002);
+    if !(scale > 0.0 && scale.is_finite()) {
+        return Err(bad(section, "scale", &scale.to_string(), "a positive finite number"));
+    }
+    let test_frac = opt_f64(map, section, "test_frac")?.unwrap_or(0.2);
+    if !(0.0..1.0).contains(&test_frac) {
+        return Err(bad(section, "test_frac", &test_frac.to_string(), "a fraction in [0, 1)"));
+    }
+    Ok(DatasetSpec {
+        profile,
+        scale,
+        seed: opt_u64(map, section, "seed")?.unwrap_or(42),
+        k: opt_usize(map, section, "k")?,
+        test_frac,
+    })
+}
+
+/// Keys shared by the `config` section and per-leg overrides.
+const RUN_KEYS: &[&str] = &[
+    "grid",
+    "burnin",
+    "samples",
+    "seed",
+    "workers",
+    "tau",
+    "sweep",
+    "chunk_rows",
+    "staleness",
+    "scheduler",
+    "priority",
+    "max_in_flight",
+];
+
+fn parse_run(
+    map: &BTreeMap<String, Json>,
+    section: &str,
+    base: &RunSpec,
+) -> Result<RunSpec, SpecError> {
+    let mut run = base.clone();
+    if let Some(g) = opt_str(map, section, "grid")? {
+        run.grid = parse_grid(g).ok_or_else(|| bad(section, "grid", g, "\"IxJ\" like \"3x3\""))?;
+    }
+    if let Some(v) = opt_usize(map, section, "burnin")? {
+        run.burnin = v;
+    }
+    if let Some(v) = opt_usize(map, section, "samples")? {
+        run.samples = v;
+    }
+    if let Some(v) = opt_u64(map, section, "seed")? {
+        run.seed = v;
+    }
+    if let Some(v) = opt_usize(map, section, "workers")? {
+        run.workers = v;
+    }
+    if let Some(v) = opt_f64(map, section, "tau")? {
+        run.tau = Some(v);
+    }
+    if let Some(v) = opt_str(map, section, "sweep")? {
+        run.sweep = match v {
+            "lockstep" => SweepMode::Lockstep,
+            "pipelined" => SweepMode::Pipelined,
+            other => return Err(bad(section, "sweep", other, "\"lockstep\" or \"pipelined\"")),
+        };
+    }
+    if let Some(v) = opt_usize(map, section, "chunk_rows")? {
+        run.chunk_rows = v;
+    }
+    if let Some(v) = opt_usize(map, section, "staleness")? {
+        run.staleness = v;
+    }
+    if let Some(v) = opt_str(map, section, "scheduler")? {
+        run.scheduler = match v {
+            "dag" => SchedulerMode::Dag,
+            "barrier" => SchedulerMode::Barrier,
+            other => return Err(bad(section, "scheduler", other, "\"dag\" or \"barrier\"")),
+        };
+    }
+    if let Some(v) = opt_str(map, section, "priority")? {
+        run.priority = v
+            .parse::<Priority>()
+            .map_err(|_| bad(section, "priority", v, "\"low\", \"normal\", or \"high\""))?;
+    }
+    if let Some(v) = opt_usize(map, section, "max_in_flight")? {
+        run.max_in_flight = v;
+    }
+    Ok(run)
+}
+
+fn parse_leg(v: &Json, section: &str, base: &RunSpec) -> Result<LegSpec, SpecError> {
+    const LEG_ONLY: &[&str] =
+        &["name", "store", "cache_bytes", "fault_block", "resume", "checkpoint_every"];
+    let map = as_obj(v, section)?;
+    let allowed: Vec<&'static str> = LEG_ONLY.iter().chain(RUN_KEYS).copied().collect();
+    check_keys(map, section, &allowed)?;
+    Ok(LegSpec {
+        name: req_str(map, section, "name")?.to_string(),
+        run: parse_run(map, section, base)?,
+        store: opt_bool(map, section, "store")?.unwrap_or(false),
+        cache_bytes: opt_u64(map, section, "cache_bytes")?.unwrap_or(0),
+        fault_block: opt_usize(map, section, "fault_block")?,
+        resume: opt_bool(map, section, "resume")?.unwrap_or(true),
+        checkpoint_every: opt_usize(map, section, "checkpoint_every")?.unwrap_or(0),
+    })
+}
+
+fn parse_invariant(v: &Json, section: &str) -> Result<Invariant, SpecError> {
+    let map = as_obj(v, section)?;
+    let check = req_str(map, section, "check")?;
+    let inv = match check {
+        "rmse_max" => {
+            check_keys(map, section, &["check", "leg", "max"])?;
+            Invariant::RmseMax {
+                leg: req_str(map, section, "leg")?.to_string(),
+                max: req_f64(map, section, "max")?,
+            }
+        }
+        "bitwise_equal" => {
+            check_keys(map, section, &["check", "legs"])?;
+            let legs = req_str_list(map, section, "legs")?;
+            if legs.len() < 2 {
+                return Err(bad(section, "legs", &format!("{legs:?}"), "at least two leg names"));
+            }
+            Invariant::BitwiseEqual { legs }
+        }
+        "max_queue_wait_secs" => {
+            check_keys(map, section, &["check", "leg", "max"])?;
+            Invariant::MaxQueueWaitSecs {
+                leg: req_str(map, section, "leg")?.to_string(),
+                max: req_f64(map, section, "max")?,
+            }
+        }
+        "min_evictions" => {
+            check_keys(map, section, &["check", "leg", "min"])?;
+            Invariant::MinEvictions {
+                leg: req_str(map, section, "leg")?.to_string(),
+                min: req_f64(map, section, "min")? as u64,
+            }
+        }
+        "expect_outcome" => {
+            check_keys(map, section, &["check", "leg", "outcome"])?;
+            let outcome = match req_str(map, section, "outcome")? {
+                "completed" => ExpectedOutcome::Completed,
+                "failed" => ExpectedOutcome::Failed,
+                other => return Err(bad(section, "outcome", other, "\"completed\" or \"failed\"")),
+            };
+            Invariant::ExpectOutcome { leg: req_str(map, section, "leg")?.to_string(), outcome }
+        }
+        "resume_bitwise" => {
+            check_keys(map, section, &["check", "resumed", "reference"])?;
+            Invariant::ResumeBitwise {
+                resumed: req_str(map, section, "resumed")?.to_string(),
+                reference: req_str(map, section, "reference")?.to_string(),
+            }
+        }
+        "finish_before" => {
+            check_keys(map, section, &["check", "first", "then"])?;
+            Invariant::FinishBefore {
+                first: req_str(map, section, "first")?.to_string(),
+                then: req_str(map, section, "then")?.to_string(),
+            }
+        }
+        other => {
+            return Err(bad(
+                section,
+                "check",
+                other,
+                "rmse_max | bitwise_equal | max_queue_wait_secs | min_evictions | \
+                 expect_outcome | resume_bitwise | finish_before",
+            ))
+        }
+    };
+    Ok(inv)
+}
+
+// ---------------------------------------------------------------------------
+// JSON field helpers (strict: wrong types are BadValue, never defaults)
+
+fn as_obj<'a>(v: &'a Json, section: &str) -> Result<&'a BTreeMap<String, Json>, SpecError> {
+    match v {
+        Json::Obj(m) => Ok(m),
+        _ => Err(SpecError::WrongShape { section: section.into(), expected: "an object" }),
+    }
+}
+
+fn check_keys(
+    map: &BTreeMap<String, Json>,
+    section: &str,
+    allowed: &[&'static str],
+) -> Result<(), SpecError> {
+    for key in map.keys() {
+        if !allowed.contains(&key.as_str()) {
+            return Err(SpecError::UnknownKey {
+                section: section.into(),
+                key: key.clone(),
+                known: allowed.to_vec(),
+            });
+        }
+    }
+    Ok(())
+}
+
+fn bad(section: &str, field: &str, got: &str, expected: &str) -> SpecError {
+    SpecError::BadValue {
+        section: section.into(),
+        field: field.into(),
+        got: got.into(),
+        expected: expected.into(),
+    }
+}
+
+fn opt_str<'a>(
+    map: &'a BTreeMap<String, Json>,
+    section: &str,
+    field: &str,
+) -> Result<Option<&'a str>, SpecError> {
+    match map.get(field) {
+        None => Ok(None),
+        Some(Json::Str(s)) => Ok(Some(s)),
+        Some(other) => Err(bad(section, field, &json::to_string(other), "a string")),
+    }
+}
+
+fn req_str<'a>(
+    map: &'a BTreeMap<String, Json>,
+    section: &str,
+    field: &'static str,
+) -> Result<&'a str, SpecError> {
+    opt_str(map, section, field)?
+        .ok_or_else(|| SpecError::MissingField { section: section.into(), field })
+}
+
+fn opt_f64(
+    map: &BTreeMap<String, Json>,
+    section: &str,
+    field: &str,
+) -> Result<Option<f64>, SpecError> {
+    match map.get(field) {
+        None => Ok(None),
+        Some(Json::Num(n)) => Ok(Some(*n)),
+        Some(other) => Err(bad(section, field, &json::to_string(other), "a number")),
+    }
+}
+
+fn req_f64(
+    map: &BTreeMap<String, Json>,
+    section: &str,
+    field: &'static str,
+) -> Result<f64, SpecError> {
+    opt_f64(map, section, field)?
+        .ok_or_else(|| SpecError::MissingField { section: section.into(), field })
+}
+
+fn opt_usize(
+    map: &BTreeMap<String, Json>,
+    section: &str,
+    field: &str,
+) -> Result<Option<usize>, SpecError> {
+    match opt_f64(map, section, field)? {
+        None => Ok(None),
+        Some(n) if n >= 0.0 && n.fract() == 0.0 && n <= (1u64 << 52) as f64 => Ok(Some(n as usize)),
+        Some(n) => Err(bad(section, field, &n.to_string(), "a non-negative integer")),
+    }
+}
+
+fn opt_u64(
+    map: &BTreeMap<String, Json>,
+    section: &str,
+    field: &str,
+) -> Result<Option<u64>, SpecError> {
+    Ok(opt_usize(map, section, field)?.map(|n| n as u64))
+}
+
+fn opt_bool(
+    map: &BTreeMap<String, Json>,
+    section: &str,
+    field: &str,
+) -> Result<Option<bool>, SpecError> {
+    match map.get(field) {
+        None => Ok(None),
+        Some(Json::Bool(b)) => Ok(Some(*b)),
+        Some(other) => Err(bad(section, field, &json::to_string(other), "a boolean")),
+    }
+}
+
+fn req_str_list(
+    map: &BTreeMap<String, Json>,
+    section: &str,
+    field: &'static str,
+) -> Result<Vec<String>, SpecError> {
+    match map.get(field) {
+        None => Err(SpecError::MissingField { section: section.into(), field }),
+        Some(Json::Arr(items)) => items
+            .iter()
+            .map(|v| match v {
+                Json::Str(s) => Ok(s.clone()),
+                other => Err(bad(section, field, &json::to_string(other), "an array of strings")),
+            })
+            .collect(),
+        Some(other) => Err(bad(section, field, &json::to_string(other), "an array of strings")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn minimal(extra_leg: &str, invariant: &str) -> String {
+        format!(
+            r#"{{
+              "name": "t", "description": "d",
+              "dataset": {{"profile": "movielens", "scale": 0.001, "seed": 1}},
+              "config": {{"grid": "2x2", "burnin": 2, "samples": 4, "seed": 1}},
+              "legs": [{{"name": "a"}}{extra_leg}],
+              "invariants": [{invariant}]
+            }}"#
+        )
+    }
+
+    #[test]
+    fn parses_minimal_scenario() {
+        let s = Scenario::parse(
+            &minimal("", r#"{"check": "rmse_max", "leg": "a", "max": 2.0}"#),
+            "<test>",
+        )
+        .unwrap();
+        assert_eq!(s.name, "t");
+        assert_eq!(s.legs.len(), 1);
+        assert_eq!(s.base.grid, (2, 2));
+        assert_eq!(s.tenancy, Tenancy::Sequential);
+        assert!(matches!(
+            s.invariants[0],
+            Invariant::RmseMax { ref leg, max } if leg == "a" && max == 2.0
+        ));
+    }
+
+    #[test]
+    fn leg_overrides_inherit_base() {
+        let s = Scenario::parse(
+            &minimal(
+                r#", {"name": "b", "sweep": "pipelined", "staleness": 1, "chunk_rows": 32}"#,
+                r#"{"check": "bitwise_equal", "legs": ["a", "b"]}"#,
+            ),
+            "<test>",
+        )
+        .unwrap();
+        let b = &s.legs[1];
+        assert_eq!(b.run.sweep, SweepMode::Pipelined);
+        assert_eq!(b.run.staleness, 1);
+        assert_eq!(b.run.chunk_rows, 32);
+        // inherited, not defaulted
+        assert_eq!(b.run.grid, (2, 2));
+        assert_eq!(b.run.burnin, 2);
+    }
+
+    #[test]
+    fn malformed_json_is_typed() {
+        let err = Scenario::parse("{ not json", "<test>").unwrap_err();
+        assert!(matches!(err, SpecError::Json { .. }), "{err}");
+    }
+
+    #[test]
+    fn unknown_keys_are_rejected_everywhere() {
+        for (text, key) in [
+            (minimal("", r#"{"check": "rmse_max", "leg": "a", "max": 2.0}"#)
+                .replace("\"name\": \"t\"", "\"name\": \"t\", \"oops\": 1"), "oops"),
+            (minimal(r#", {"name": "b", "cache_byte": 1}"#,
+                r#"{"check": "bitwise_equal", "legs": ["a", "b"]}"#), "cache_byte"),
+            (minimal("", r#"{"check": "rmse_max", "leg": "a", "max": 2.0, "mx": 1}"#), "mx"),
+        ] {
+            let err = Scenario::parse(&text, "<test>").unwrap_err();
+            match err {
+                SpecError::UnknownKey { key: k, .. } => assert_eq!(k, key),
+                other => panic!("expected UnknownKey({key}), got {other}"),
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_invariant_name_is_typed() {
+        let err = Scenario::parse(
+            &minimal("", r#"{"check": "rmse_min", "leg": "a", "max": 2.0}"#),
+            "<test>",
+        )
+        .unwrap_err();
+        assert!(
+            matches!(err, SpecError::BadValue { ref field, .. } if field == "check"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn staleness_on_lockstep_is_typed() {
+        let err = Scenario::parse(
+            &minimal(
+                r#", {"name": "b", "staleness": 2}"#,
+                r#"{"check": "bitwise_equal", "legs": ["a", "b"]}"#,
+            ),
+            "<test>",
+        )
+        .unwrap_err();
+        assert!(matches!(err, SpecError::StalenessOnLockstep { staleness: 2, .. }), "{err}");
+    }
+
+    #[test]
+    fn fault_without_checkpointing_is_typed() {
+        let err = Scenario::parse(
+            &minimal(
+                r#", {"name": "b", "fault_block": 2}"#,
+                r#"{"check": "expect_outcome", "leg": "b", "outcome": "failed"}"#,
+            ),
+            "<test>",
+        )
+        .unwrap_err();
+        assert!(matches!(err, SpecError::FaultWithoutCheckpoint { .. }), "{err}");
+        // resume: false is the escape hatch — the leg asserts the failure
+        Scenario::parse(
+            &minimal(
+                r#", {"name": "b", "fault_block": 2, "resume": false}"#,
+                r#"{"check": "expect_outcome", "leg": "b", "outcome": "failed"}"#,
+            ),
+            "<test>",
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn invariant_referencing_unknown_leg_is_typed() {
+        let err = Scenario::parse(
+            &minimal("", r#"{"check": "rmse_max", "leg": "ghost", "max": 2.0}"#),
+            "<test>",
+        )
+        .unwrap_err();
+        assert!(matches!(err, SpecError::UnknownLeg { ref leg, .. } if leg == "ghost"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_and_empty_legs_are_typed() {
+        let err = Scenario::parse(
+            &minimal(r#", {"name": "a"}"#, r#"{"check": "rmse_max", "leg": "a", "max": 2.0}"#),
+            "<test>",
+        )
+        .unwrap_err();
+        assert!(matches!(err, SpecError::DuplicateLeg { .. }), "{err}");
+
+        let text = r#"{"name": "t", "legs": [], "invariants": [{"check": "bitwise_equal", "legs": ["a", "b"]}]}"#;
+        let err = Scenario::parse(text, "<test>").unwrap_err();
+        assert!(matches!(err, SpecError::NoLegs { .. }), "{err}");
+    }
+
+    #[test]
+    fn bad_enum_values_are_typed() {
+        for (leg, field) in [
+            (r#", {"name": "b", "sweep": "warp"}"#, "sweep"),
+            (r#", {"name": "b", "scheduler": "ring"}"#, "scheduler"),
+            (r#", {"name": "b", "priority": "urgent"}"#, "priority"),
+            (r#", {"name": "b", "grid": "3by3"}"#, "grid"),
+            (r#", {"name": "b", "burnin": -1}"#, "burnin"),
+            (r#", {"name": "b", "store": "yes"}"#, "store"),
+        ] {
+            let err = Scenario::parse(
+                &minimal(leg, r#"{"check": "bitwise_equal", "legs": ["a", "b"]}"#),
+                "<test>",
+            )
+            .unwrap_err();
+            assert!(
+                matches!(err, SpecError::BadValue { field: ref f, .. } if f == field),
+                "field {field}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn load_path_on_missing_file_is_io_error() {
+        let err = load_path(Path::new("/definitely/missing/scenario.json")).unwrap_err();
+        assert!(matches!(err, SpecError::Io { .. }), "{err}");
+    }
+}

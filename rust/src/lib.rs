@@ -113,6 +113,7 @@ pub mod coordinator;
 pub mod data;
 #[doc(hidden)]
 pub mod gibbs;
+pub mod harness;
 #[doc(hidden)]
 pub mod linalg;
 #[doc(hidden)]

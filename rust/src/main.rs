@@ -65,6 +65,18 @@
 //!             (--sweep lockstep|pipelined picks the exchange regime,
 //!             --schedule barrier|dag the block schedule, --widths
 //!             static|dynamic the DAG node-group sizing)
+//!   scenario  run declarative end-to-end specs: `bmf-pp scenario
+//!             <file|dir>` parses JSON scenario files (dataset, grid,
+//!             sweep/scheduler modes, store-backed legs, fault plans,
+//!             multi-tenant mixes) and checks their declared invariants
+//!             (rmse_max, bitwise_equal, max_queue_wait_secs,
+//!             min_evictions, expect_outcome, resume_bitwise,
+//!             finish_before) against real Engine runs. A directory is
+//!             swept in filename order; any failed invariant makes the
+//!             exit code non-zero and prints the exact re-run line.
+//!             --list shows the specs without running them, --filter S
+//!             keeps scenarios whose name contains S, --report <file>
+//!             writes a machine JSON report
 //!
 //! Examples:
 //!   bmf-pp train --dataset netflix --scale 0.002 --grid 4x2 --samples 20
@@ -77,6 +89,8 @@
 //!   bmf-pp serve --checkpoint-dir ckpts --addr 127.0.0.1:7878
 //!   bmf-pp baseline --method nomad,fpsgd,als --dataset movielens
 //!   bmf-pp simulate --dataset yahoo --grid 16x16 --max-nodes 16384
+//!   bmf-pp scenario scenarios/ --report scenario_report.json
+//!   bmf-pp scenario scenarios/crash_resume.json
 //!
 //! Every subcommand parses its flags up front; the dispatch path then runs
 //! a single unknown-flag check (listing the known flags on error) before
@@ -987,6 +1001,66 @@ fn plan_serve(args: &Args) -> anyhow::Result<Action> {
     }))
 }
 
+fn plan_scenario(args: &Args) -> anyhow::Result<Action> {
+    // `--list` is boolean, but `--list scenarios/` parses as a key-value
+    // pair — accept the value as the sweep path so both orders work.
+    let list_val = args.get("list").map(str::to_string);
+    let list = list_val.is_some();
+    let filter = args.get("filter").map(str::to_string);
+    let report_path = args.get("report").map(str::to_string);
+    let path = args
+        .positional
+        .first()
+        .cloned()
+        .or_else(|| list_val.filter(|v| v != "true" && v != "false"))
+        .unwrap_or_else(|| "scenarios".to_string());
+    Ok(Box::new(move || {
+        let all = bmf_pp::harness::load_path(Path::new(&path))?;
+        let selected: Vec<_> = all
+            .into_iter()
+            .filter(|s| filter.as_deref().map_or(true, |f| s.name.contains(f)))
+            .collect();
+        if selected.is_empty() {
+            anyhow::bail!(
+                "no scenarios under {path} match --filter {}",
+                filter.as_deref().unwrap_or("")
+            );
+        }
+        if list {
+            for s in &selected {
+                println!(
+                    "{:<28} {:>2} legs {:>2} invariants  {}  [{}]",
+                    s.name,
+                    s.legs.len(),
+                    s.invariants.len(),
+                    s.description,
+                    s.display_path()
+                );
+            }
+            return Ok(());
+        }
+        let mut reports = Vec::with_capacity(selected.len());
+        for scn in &selected {
+            println!("running {} ({})", scn.name, scn.description);
+            let report = bmf_pp::harness::run_and_check(scn)?;
+            print!("{}", bmf_pp::harness::render_human(&report));
+            reports.push(report);
+        }
+        println!("{}", bmf_pp::harness::render_summary(&reports));
+        if let Some(out) = &report_path {
+            let json = bmf_pp::util::json::to_string_pretty(&bmf_pp::harness::to_json(&reports));
+            std::fs::write(out, json + "\n")
+                .map_err(|e| anyhow::anyhow!("cannot write report {out}: {e}"))?;
+            println!("report written to {out}");
+        }
+        let failed = reports.iter().filter(|r| !r.passed()).count();
+        if failed > 0 {
+            anyhow::bail!("{failed} of {} scenarios failed", reports.len());
+        }
+        Ok(())
+    }))
+}
+
 fn main() {
     bmf_pp::util::logging::init();
     let args = match Args::from_env() {
@@ -1009,9 +1083,10 @@ fn main() {
         Some("simulate") => plan_simulate(&args),
         Some("evaluate") => plan_evaluate(&args),
         Some("recommend-grid") => plan_recommend_grid(&args),
+        Some("scenario") => plan_scenario(&args),
         other => {
             eprintln!(
-                "usage: bmf-pp <train|ingest|jobs|predict|serve|baseline|datasets|partition|simulate|evaluate|recommend-grid> [--flags]\n\
+                "usage: bmf-pp <train|ingest|jobs|predict|serve|baseline|datasets|partition|simulate|evaluate|recommend-grid|scenario> [--flags]\n\
                  (got: {other:?}) — see crate docs for flag reference"
             );
             std::process::exit(2);

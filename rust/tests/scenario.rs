@@ -1,0 +1,299 @@
+//! Scenario-harness suite: negative-path spec parsing (typed errors,
+//! never panics, non-zero CLI exits), the shipped `scenarios/` directory
+//! staying parseable, a tiny end-to-end run through the full
+//! parse → execute → compare → report pipeline, and a property test that
+//! random valid scenarios hold the cross-leg bitwise invariant.
+
+use bmf_pp::harness::{self, Scenario, SpecError};
+use bmf_pp::testing::prop::{check, Gen};
+use std::path::{Path, PathBuf};
+
+/// Unique scratch file holding `content`, cleaned up on drop.
+struct SpecFile(PathBuf);
+
+impl SpecFile {
+    fn new(tag: &str, content: &str) -> SpecFile {
+        let path = std::env::temp_dir().join(format!(
+            "bmfpp_scn_{tag}_{}_{}.json",
+            std::process::id(),
+            std::thread::current().name().unwrap_or("t").replace("::", "_")
+        ));
+        std::fs::write(&path, content).unwrap();
+        SpecFile(path)
+    }
+}
+
+impl Drop for SpecFile {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.0);
+    }
+}
+
+fn tiny_scenario(legs: &str, invariants: &str) -> String {
+    format!(
+        r#"{{
+          "name": "tiny", "description": "test spec",
+          "dataset": {{"profile": "movielens", "scale": 0.001, "seed": 4}},
+          "config": {{"grid": "2x2", "burnin": 2, "samples": 4, "seed": 4}},
+          "legs": [{legs}],
+          "invariants": [{invariants}]
+        }}"#
+    )
+}
+
+// ---------------------------------------------------------------------------
+// negative paths: typed SpecErrors, never a panic
+
+#[test]
+fn malformed_json_yields_typed_error() {
+    let err = Scenario::parse("{ \"name\": ", "<t>").unwrap_err();
+    assert!(matches!(err, SpecError::Json { .. }), "{err}");
+}
+
+#[test]
+fn unknown_invariant_yields_typed_error() {
+    let text = tiny_scenario(
+        r#"{"name": "a"}"#,
+        r#"{"check": "rmse_exactly", "leg": "a", "max": 1.0}"#,
+    );
+    let err = Scenario::parse(&text, "<t>").unwrap_err();
+    match err {
+        SpecError::BadValue { field, got, .. } => {
+            assert_eq!(field, "check");
+            assert_eq!(got, "rmse_exactly");
+        }
+        other => panic!("expected BadValue, got {other}"),
+    }
+}
+
+#[test]
+fn staleness_on_lockstep_yields_typed_error() {
+    let text = tiny_scenario(
+        r#"{"name": "a", "staleness": 3}"#,
+        r#"{"check": "rmse_max", "leg": "a", "max": 2.0}"#,
+    );
+    let err = Scenario::parse(&text, "<t>").unwrap_err();
+    assert!(matches!(err, SpecError::StalenessOnLockstep { staleness: 3, .. }), "{err}");
+}
+
+#[test]
+fn fault_without_checkpointing_yields_typed_error() {
+    let text = tiny_scenario(
+        r#"{"name": "a", "fault_block": 1}"#,
+        r#"{"check": "rmse_max", "leg": "a", "max": 2.0}"#,
+    );
+    let err = Scenario::parse(&text, "<t>").unwrap_err();
+    assert!(matches!(err, SpecError::FaultWithoutCheckpoint { .. }), "{err}");
+}
+
+#[test]
+fn unknown_key_yields_typed_error_with_accepted_list() {
+    let text = tiny_scenario(
+        r#"{"name": "a", "cache_byte": 64}"#,
+        r#"{"check": "rmse_max", "leg": "a", "max": 2.0}"#,
+    );
+    let err = Scenario::parse(&text, "<t>").unwrap_err();
+    let msg = err.to_string();
+    assert!(matches!(err, SpecError::UnknownKey { .. }), "{msg}");
+    assert!(msg.contains("cache_byte") && msg.contains("cache_bytes"), "{msg}");
+}
+
+#[test]
+fn empty_directory_yields_typed_error() {
+    let dir = std::env::temp_dir().join(format!("bmfpp_scn_empty_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let err = harness::load_path(&dir).unwrap_err();
+    assert!(matches!(err, SpecError::NoScenarios { .. }), "{err}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// CLI exit codes
+
+fn run_scenario_cli(args: &[&str]) -> std::process::Output {
+    std::process::Command::new(env!("CARGO_BIN_EXE_bmf-pp"))
+        .arg("scenario")
+        .args(args)
+        .output()
+        .expect("spawn bmf-pp")
+}
+
+#[test]
+fn cli_malformed_specs_exit_nonzero_with_typed_message() {
+    let bad_check =
+        tiny_scenario(r#"{"name": "a"}"#, r#"{"check": "rmse_min", "leg": "a", "max": 1.0}"#);
+    let stale = tiny_scenario(
+        r#"{"name": "a", "staleness": 2}"#,
+        r#"{"check": "rmse_max", "leg": "a", "max": 2.0}"#,
+    );
+    let no_ckpt = tiny_scenario(
+        r#"{"name": "a", "fault_block": 1}"#,
+        r#"{"check": "rmse_max", "leg": "a", "max": 2.0}"#,
+    );
+    for (tag, content, needle) in [
+        ("badjson", "{ not json at all", "not valid JSON"),
+        ("badcheck", bad_check.as_str(), "bad value"),
+        ("stale", stale.as_str(), "staleness"),
+        ("nockpt", no_ckpt.as_str(), "checkpointing"),
+    ] {
+        let spec = SpecFile::new(tag, content);
+        let out = run_scenario_cli(&[spec.0.to_str().unwrap()]);
+        assert!(!out.status.success(), "{tag}: malformed spec must exit non-zero");
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(stderr.contains(needle), "{tag}: stderr missing '{needle}':\n{stderr}");
+    }
+}
+
+#[test]
+fn cli_missing_path_exits_nonzero() {
+    let out = run_scenario_cli(&["/definitely/not/there.json"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("cannot read scenario"));
+}
+
+#[test]
+fn cli_failed_invariant_exits_nonzero_and_prints_rerun_line() {
+    // impossible RMSE bound: the run completes but the invariant fails
+    let spec = SpecFile::new(
+        "failinv",
+        &tiny_scenario(r#"{"name": "a"}"#, r#"{"check": "rmse_max", "leg": "a", "max": 0.000001}"#),
+    );
+    let out = run_scenario_cli(&[spec.0.to_str().unwrap()]);
+    assert!(!out.status.success(), "failed invariant must exit non-zero");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("FAIL"), "{stdout}");
+    assert!(
+        stdout.contains(&format!("re-run: bmf-pp scenario {}", spec.0.display())),
+        "missing re-run hint:\n{stdout}"
+    );
+}
+
+#[test]
+fn cli_list_parses_all_shipped_scenarios() {
+    let shipped = Path::new(env!("CARGO_MANIFEST_DIR")).join("../scenarios");
+    let out = run_scenario_cli(&[shipped.to_str().unwrap(), "--list"]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "--list failed:\n{}", String::from_utf8_lossy(&out.stderr));
+    // the shipped suite must keep covering the standing guarantees
+    for name in [
+        "tau0-pipelined-bitwise",
+        "out-of-core",
+        "crash-resume",
+        "multi-tenant-priority",
+        "skewed-grid-rmse",
+    ] {
+        assert!(stdout.contains(name), "--list missing {name}:\n{stdout}");
+    }
+    assert!(stdout.lines().count() >= 8, "expected >= 8 shipped scenarios:\n{stdout}");
+}
+
+#[test]
+fn cli_filter_selects_by_name() {
+    let shipped = Path::new(env!("CARGO_MANIFEST_DIR")).join("../scenarios");
+    let out = run_scenario_cli(&[shipped.to_str().unwrap(), "--list", "--filter", "crash"]);
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("crash-resume"), "{stdout}");
+    assert!(!stdout.contains("tau0-pipelined-bitwise"), "{stdout}");
+
+    let none = run_scenario_cli(&[shipped.to_str().unwrap(), "--list", "--filter", "zzz-none"]);
+    assert!(!none.status.success(), "empty filter match must exit non-zero");
+}
+
+// ---------------------------------------------------------------------------
+// end-to-end through the library pipeline
+
+#[test]
+fn tiny_bitwise_scenario_passes_end_to_end() {
+    let text = tiny_scenario(
+        r#"{"name": "dag"}, {"name": "barrier", "scheduler": "barrier"}"#,
+        r#"{"check": "bitwise_equal", "legs": ["dag", "barrier"]},
+           {"check": "expect_outcome", "leg": "dag", "outcome": "completed"}"#,
+    );
+    let scn = Scenario::parse(&text, "<inline>").unwrap();
+    let report = harness::run_and_check(&scn).unwrap();
+    assert!(
+        report.passed(),
+        "tiny scenario failed:\n{}",
+        harness::render_human(&report)
+    );
+    // the machine report round-trips through the JSON writer/parser
+    let json = bmf_pp::util::json::to_string_pretty(&harness::to_json(std::slice::from_ref(
+        &report,
+    )));
+    let parsed = bmf_pp::util::json::parse(&json).unwrap();
+    assert_eq!(parsed.get("passed").and_then(|v| v.as_f64()), Some(1.0));
+}
+
+#[test]
+fn fault_leg_resumes_bitwise_end_to_end() {
+    let text = r#"{
+      "name": "tiny-crash", "description": "crash then resume equals uninterrupted",
+      "dataset": {"profile": "movielens", "scale": 0.001, "seed": 6},
+      "config": {"grid": "2x2", "burnin": 2, "samples": 4, "seed": 6},
+      "legs": [
+        {"name": "reference"},
+        {"name": "crashed", "fault_block": 3, "checkpoint_every": 1}
+      ],
+      "invariants": [
+        {"check": "resume_bitwise", "resumed": "crashed", "reference": "reference"}
+      ]
+    }"#;
+    let scn = Scenario::parse(text, "<inline>").unwrap();
+    let report = harness::run_and_check(&scn).unwrap();
+    assert!(report.passed(), "crash scenario failed:\n{}", harness::render_human(&report));
+    let crashed = report.run.leg("crashed").unwrap();
+    assert!(crashed.blocks_restored > 0, "resume restored nothing");
+}
+
+// ---------------------------------------------------------------------------
+// property: random valid scenarios hold the cross-leg bitwise invariant
+
+#[derive(Debug)]
+struct RandomScenario {
+    text: String,
+}
+
+fn random_scenario(g: &mut Gen) -> RandomScenario {
+    let (gi, gj) = *g.pick(&[(1usize, 1usize), (2, 2), (3, 2)]);
+    let seed = g.usize_in(1, 1000);
+    let scheduler = *g.pick(&["dag", "barrier"]);
+    // the varied leg flips sweep mode (τ=0) and/or goes store-backed —
+    // every combination must stay bitwise-equal to the plain leg
+    let pipelined = *g.pick(&[true, false]);
+    let store = *g.pick(&[true, false]);
+    let mut varied = String::from(r#"{"name": "varied""#);
+    if pipelined {
+        varied.push_str(r#", "sweep": "pipelined", "staleness": 0, "chunk_rows": 16"#);
+    }
+    if store {
+        varied.push_str(r#", "store": true, "cache_bytes": 2048"#);
+    }
+    varied.push('}');
+    let text = format!(
+        r#"{{
+          "name": "prop-{gi}x{gj}-{seed}",
+          "description": "randomized bitwise pair",
+          "dataset": {{"profile": "movielens", "scale": 0.001, "seed": {seed}}},
+          "config": {{"grid": "{gi}x{gj}", "burnin": 2, "samples": 4, "seed": {seed},
+                     "scheduler": "{scheduler}", "tau": 1.5}},
+          "legs": [{{"name": "plain"}}, {varied}],
+          "invariants": [{{"check": "bitwise_equal", "legs": ["plain", "varied"]}}]
+        }}"#
+    );
+    RandomScenario { text }
+}
+
+#[test]
+fn random_valid_scenarios_hold_bitwise_invariant() {
+    check(4, random_scenario, |scn| {
+        let parsed = Scenario::parse(&scn.text, "<prop>")
+            .map_err(|e| format!("generated spec rejected: {e}"))?;
+        let report = harness::run_and_check(&parsed).map_err(|e| format!("run failed: {e}"))?;
+        if report.passed() {
+            Ok(())
+        } else {
+            Err(format!("invariant failed:\n{}", harness::render_human(&report)))
+        }
+    });
+}

@@ -1,16 +1,13 @@
 #!/usr/bin/env bash
-# Out-of-core drill (the CI `out-of-core` job):
+# Out-of-core drill (the CI `out-of-core` job).
 #
-#   1. ingest a synthetic dataset into a per-block shard store, writing
-#      the train/holdout split's holdout CSV alongside
-#   2. run `bmf-pp train` resident (same flags) as the reference: save
-#      the model and record its test RMSE
-#   3. run `bmf-pp train --store` on the shard store under a hard
-#      address-space cap (ulimit -v) with a cache budget far below the
-#      store size, scoring the same holdout
-#   4. require: evictions > 0 (the working set really was bounded), the
-#      two RMSE values identical, and the two saved models byte-identical
-#      — out-of-core is the same computation, not an approximation
+# The assertion logic lives in the declarative scenario twin
+# `scenarios/out_of_core.json` (same dataset/config as before): ingest to
+# a shard store, train resident and store-backed with an eviction-forcing
+# 4 KiB cache budget, require evictions > 0 and the two posteriors
+# bit-for-bit identical. This script only contributes what a scenario
+# file cannot express: the hard address-space cap (ulimit -v) proving the
+# store-backed leg really runs inside bounded memory.
 #
 # Run from the repository root after `cargo build --release`:
 #
@@ -18,57 +15,10 @@
 set -euo pipefail
 
 BIN=${BIN:-rust/target/release/bmf-pp}
-WORK=$(mktemp -d "${TMPDIR:-/tmp}/bmfpp_ooc.XXXXXX")
-trap 'rm -rf "$WORK"' EXIT
 
-# one dataset + config for every run; --tau is explicit because a
-# store-backed run cannot derive auto_tau from resident ratings, and
-# --seed lives in CFG_FLAGS only (it seeds both the synthetic generator
-# and the sampler, and must match across all three invocations)
-DATA_FLAGS=(--dataset movielens --scale 0.003)
-CFG_FLAGS=(--grid 3x3 --burnin 6 --samples 16 --native --tau 1.5
-           --seed 11 --workers 1 --quiet)
-
-echo "== 1/4: ingest into a shard store (3x3 grid) + save the holdout"
-INGEST_OUT="$WORK/ingest.log"
-"$BIN" ingest "${DATA_FLAGS[@]}" --seed 11 --grid 3x3 --out "$WORK/shards" \
-  --save-test "$WORK/holdout.csv" | tee "$INGEST_OUT"
-STORE_BYTES=$(grep -o '[0-9]* bytes' "$INGEST_OUT" | head -1 | awk '{print $1}')
-echo "   store size: ${STORE_BYTES:-?} bytes"
-
-echo "== 2/4: resident reference run"
-REF_OUT="$WORK/resident.log"
-"$BIN" train "${DATA_FLAGS[@]}" "${CFG_FLAGS[@]}" \
-  --save "$WORK/reference.json" | tee "$REF_OUT"
-REF_RMSE=$(sed -n 's/.*test RMSE = \([0-9.]*\).*/\1/p' "$REF_OUT")
-[[ -n "$REF_RMSE" ]] || { echo "FAIL: resident run printed no RMSE" >&2; exit 1; }
-
-echo "== 3/4: store-backed run, 4 KiB cache budget, 1 GiB address-space cap"
-OOC_OUT="$WORK/store.log"
+echo "== out-of-core scenario under a 1 GiB address-space cap"
 (
   ulimit -v 1048576
-  exec "$BIN" train --store "$WORK/shards" --test-file "$WORK/holdout.csv" \
-    --cache-bytes 4096 "${CFG_FLAGS[@]}" --save "$WORK/store.json"
-) | tee "$OOC_OUT"
-OOC_RMSE=$(sed -n 's/.*test RMSE = \([0-9.]*\).*/\1/p' "$OOC_OUT")
-EVICTIONS=$(grep -o '[0-9]* evictions' "$OOC_OUT" | awk '{print $1}')
-[[ -n "$OOC_RMSE" ]] || { echo "FAIL: store run printed no RMSE" >&2; exit 1; }
-
-echo "== 4/4: verdicts"
-if [[ -z "${EVICTIONS:-}" || "$EVICTIONS" -eq 0 ]]; then
-  echo "FAIL: no evictions — the cache budget never bounded the working set" >&2
-  exit 1
-fi
-echo "   evictions: $EVICTIONS (budget 4096 of ${STORE_BYTES} store bytes)"
-if [[ "$REF_RMSE" != "$OOC_RMSE" ]]; then
-  echo "FAIL: RMSE diverged (resident $REF_RMSE vs store-backed $OOC_RMSE)" >&2
-  exit 1
-fi
-echo "   RMSE identical: $REF_RMSE"
-if cmp -s "$WORK/reference.json" "$WORK/store.json"; then
-  echo "PASS: store-backed posterior is byte-identical to the resident run"
-else
-  echo "FAIL: store-backed model differs from the resident reference" >&2
-  cmp "$WORK/reference.json" "$WORK/store.json" | head -5 >&2 || true
-  exit 1
-fi
+  exec "$BIN" scenario scenarios/out_of_core.json
+)
+echo "PASS: store ≡ resident bitwise with evictions, inside the ulimit"

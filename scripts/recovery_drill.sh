@@ -1,13 +1,15 @@
 #!/usr/bin/env bash
-# End-to-end crash drill (the CI `recovery` job):
+# End-to-end crash drill (the CI `recovery` job).
 #
-#   1. run `bmf-pp train` uninterrupted and save the model (reference)
-#   2. run the same config with --checkpoint-every 1 --checkpoint-dir,
-#      SIGKILL the process as soon as the first generation file appears
-#   3. resume from the checkpoint DIRECTORY (newest valid generation)
-#      and save the model again
-#   4. require the two saved models to be byte-identical: the posterior
-#      survived a hard kill bitwise, generations + atomic renames and all
+# Step 1 delegates the deterministic crash→resume assertion to the
+# declarative scenario twin `scenarios/crash_resume.json` (same
+# dataset/config as before): inject a panic mid-run with
+# checkpoint-every=1, resume from the newest generation, require blocks
+# restored and the posterior bit-for-bit identical to the uninterrupted
+# reference. Step 2 keeps the one thing a scenario file cannot express:
+# a real SIGKILL of the whole process — no unwinding, no atexit — then a
+# directory resume proving the atomically-renamed generations survive a
+# hard kill.
 #
 # Run from the repository root after `cargo build --release`:
 #
@@ -18,15 +20,13 @@ BIN=${BIN:-rust/target/release/bmf-pp}
 WORK=$(mktemp -d "${TMPDIR:-/tmp}/bmfpp_recovery.XXXXXX")
 trap 'rm -rf "$WORK"' EXIT
 
-# one fixed config for all three runs; big enough that the kill lands
-# mid-run, small enough to finish in seconds
+echo "== 1/2: deterministic crash→resume scenario (panic fault, bitwise resume)"
+"$BIN" scenario scenarios/crash_resume.json
+
+echo "== 2/2: real SIGKILL mid-run, then resume from the generation directory"
+# big enough that the kill lands mid-run, small enough to finish in seconds
 TRAIN_FLAGS=(--dataset movielens --scale 0.003 --grid 3x3 --burnin 6
              --samples 16 --native --seed 11 --workers 1 --quiet)
-
-echo "== 1/4: uninterrupted reference run"
-"$BIN" train "${TRAIN_FLAGS[@]}" --save "$WORK/reference.json"
-
-echo "== 2/4: crash run (checkpoint-every=1, SIGKILL at first generation)"
 CKPTS="$WORK/ckpts"
 "$BIN" train "${TRAIN_FLAGS[@]}" \
   --checkpoint-every 1 --checkpoint-dir "$CKPTS" &
@@ -52,7 +52,6 @@ else
 fi
 wait "$PID" 2>/dev/null || true
 
-echo "== 3/4: resume from the checkpoint directory (newest valid generation)"
 RESUME_OUT="$WORK/resume.log"
 "$BIN" train "${TRAIN_FLAGS[@]}" \
   --resume "$CKPTS" --save "$WORK/resumed.json" | tee "$RESUME_OUT"
@@ -60,12 +59,4 @@ grep -q "blocks restored from checkpoint" "$RESUME_OUT" || {
   echo "FAIL: resume did not restore any blocks" >&2
   exit 1
 }
-
-echo "== 4/4: bitwise comparison of the saved posteriors"
-if cmp -s "$WORK/reference.json" "$WORK/resumed.json"; then
-  echo "PASS: resumed posterior is byte-identical to the uninterrupted run"
-else
-  echo "FAIL: resumed model differs from the uninterrupted reference" >&2
-  cmp "$WORK/reference.json" "$WORK/resumed.json" | head -5 >&2 || true
-  exit 1
-fi
+echo "PASS: SIGKILLed run resumed from its generation directory"
