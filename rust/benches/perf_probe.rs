@@ -16,11 +16,15 @@
 //!   P7 — out-of-core store: ingest throughput (ratings/s to shard files)
 //!        and the shard-cache hit rate of a store-backed run whose byte
 //!        budget holds roughly half the store.
+//!   P9 — incremental update vs full retrain: wall-clock of
+//!        `Engine::update` at ~1% and ~10% dirty ratings (deltas packed
+//!        into whole blocks of a 4x4 grid) against a full retrain of the
+//!        same config, plus the fraction of blocks actually re-sampled.
 //!
 //!     cargo bench --bench perf_probe
 //!
 //! With `--json` (the CI bench-snapshot job) the run additionally writes
-//! `bench_results/BENCH_PR7.json` — a flat machine-readable snapshot
+//! `bench_results/BENCH_PR9.json` — a flat machine-readable snapshot
 //! (throughput, comm_overlap_secs, queue_wait_secs, shard_cache_hit_rate,
 //! plus every probe result) that future PRs diff against the previous
 //! snapshot via `scripts/bench_gate.sh`.
@@ -346,10 +350,88 @@ fn main() {
         std::fs::remove_dir_all(&dir).ok();
     }
 
+    println!("\nP9 — incremental update vs full retrain (movielens profile, 4x4)");
+    {
+        let (_, train, _) = common::bench_dataset("movielens");
+        let cfg = TrainConfig::new(8)
+            .with_grid(4, 4)
+            .with_sweeps(4, 8)
+            .with_tau(auto_tau(&train))
+            .with_seed(13);
+        let ckpt_dir =
+            std::env::temp_dir().join(format!("bmfpp_perf_update_{}", std::process::id()));
+        std::fs::remove_dir_all(&ckpt_dir).ok();
+        let engine = TrainEngine::new(&cfg.backend, cfg.block_parallelism);
+        // the prior generation every update seeds from (also warms the pool)
+        engine
+            .train(&cfg.clone().with_checkpoint_every(1).with_checkpoint_dir(&ckpt_dir), &train)
+            .unwrap();
+        let prior = bmf_pp::online::load_prior(&ckpt_dir).unwrap();
+
+        let sw = Stopwatch::start();
+        engine.train(&cfg, &train).unwrap();
+        let full_secs = sw.secs();
+        println!("  full retrain: {full_secs:.3}s ({} blocks)", 4 * 4);
+        results.push(("p9_full_retrain_secs".to_string(), full_secs));
+
+        let total_blocks = (prior.grid.0 * prior.grid.1) as f64;
+        for (label, frac) in [("1pct", 0.01), ("10pct", 0.10)] {
+            let delta = dirty_delta(&train, prior.grid, frac);
+            let sw = Stopwatch::start();
+            let result = engine
+                .update(cfg.clone(), &prior, &delta, &train)
+                .unwrap()
+                .wait()
+                .unwrap()
+                .into_result()
+                .unwrap();
+            let secs = sw.secs();
+            let ratio = result.stats.blocks as f64 / total_blocks;
+            println!(
+                "  update {label} dirty ({} ratings): {secs:.3}s, {}/{} blocks \
+                 re-sampled ({:.1}x vs retrain)",
+                delta.len(),
+                result.stats.blocks,
+                total_blocks as usize,
+                full_secs / secs.max(1e-9)
+            );
+            results.push((format!("p9_update_{label}_secs"), secs));
+            if frac == 0.10 {
+                results.push(("p9_blocks_resampled_ratio".to_string(), ratio));
+            }
+        }
+        std::fs::remove_dir_all(&ckpt_dir).ok();
+    }
+
     common::save_json("perf_probe.json", &results);
     // machine-readable snapshot for the CI bench-snapshot artifact
     if std::env::args().any(|a| a == "--json") {
-        common::save_json("BENCH_PR7.json", &results);
-        println!("\nsnapshot written to bench_results/BENCH_PR7.json");
+        common::save_json("BENCH_PR9.json", &results);
+        println!("\nsnapshot written to bench_results/BENCH_PR9.json");
     }
+}
+
+/// A delta re-rating ~`frac` of the train ratings (+0.25), packed into
+/// whole blocks walked row-major — the dirty set stays proportional to
+/// the delta instead of spraying across the grid.
+fn dirty_delta(train: &Coo, grid: (usize, usize), frac: f64) -> bmf_pp::online::RatingDelta {
+    let g = bmf_pp::partition::Grid::new(train.rows, train.cols, grid.0, grid.1);
+    let target = ((train.nnz() as f64) * frac).ceil() as usize;
+    let mut delta = bmf_pp::online::RatingDelta::new(train.rows, train.cols);
+    'blocks: for bi in 0..grid.0 {
+        for bj in 0..grid.1 {
+            let (r0, r1) = g.row_range(bi);
+            let (c0, c1) = g.col_range(bj);
+            for e in &train.entries {
+                let (r, c) = (e.row as usize, e.col as usize);
+                if r >= r0 && r < r1 && c >= c0 && c < c1 {
+                    delta.push(r, c, e.val + 0.25);
+                }
+            }
+            if delta.len() >= target {
+                break 'blocks;
+            }
+        }
+    }
+    delta
 }

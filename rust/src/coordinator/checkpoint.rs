@@ -176,6 +176,13 @@ pub struct PartialCheckpoint {
     /// numbering past the generation it restored from. 0 for one-shot
     /// (cancel-path) files that never entered a generation sequence.
     pub generation: u64,
+    /// Revision of the shard store the run trained against
+    /// ([`Manifest::revision`](crate::store::Manifest)) — 0 for resident
+    /// runs and for stores that were never appended to. An incremental
+    /// update compares this against the live store's revision to detect
+    /// (and warn, non-fatally) when the store has been appended to since
+    /// this checkpoint was written.
+    pub store_revision: u64,
     /// Completed blocks, in the order they are restored.
     pub blocks: Vec<PartialBlock>,
 }
@@ -287,6 +294,7 @@ pub fn save_partial(ckpt: &PartialCheckpoint, path: &Path) -> std::io::Result<()
         ("grid_j", ckpt.grid.1.into()),
         ("global_mean", ckpt.global_mean.into()),
         ("generation", Json::Str(ckpt.generation.to_string())),
+        ("store_revision", Json::Str(ckpt.store_revision.to_string())),
         ("blocks", blocks),
     ]);
     // same-directory temp file so the rename is atomic (one filesystem);
@@ -346,6 +354,15 @@ pub fn load_partial(path: &Path) -> Result<PartialCheckpoint, CheckpointError> {
             .and_then(|s| s.parse::<u64>().ok())
             .ok_or_else(|| bad("generation"))?,
     };
+    // absent in files written before stores carried revisions: those
+    // runs saw revision 0 by definition
+    let store_revision = match root.get("store_revision") {
+        None => 0,
+        Some(r) => r
+            .as_str()
+            .and_then(|s| s.parse::<u64>().ok())
+            .ok_or_else(|| bad("store_revision"))?,
+    };
     let mut blocks = Vec::new();
     for b in root.get("blocks").and_then(Json::as_arr).ok_or_else(|| bad("blocks"))? {
         let i = b.get("i").and_then(Json::as_usize).ok_or_else(|| bad("block i"))?;
@@ -360,7 +377,7 @@ pub fn load_partial(path: &Path) -> Result<PartialCheckpoint, CheckpointError> {
         }
         blocks.push(PartialBlock { i, j, post: BlockPosteriors { u, v } });
     }
-    Ok(PartialCheckpoint { k, seed, grid: (gi, gj), global_mean, generation, blocks })
+    Ok(PartialCheckpoint { k, seed, grid: (gi, gj), global_mean, generation, store_revision, blocks })
 }
 
 /// File-name prefix of generation files inside a checkpoint directory.
@@ -618,6 +635,7 @@ mod tests {
             grid: (2, 2),
             global_mean: 3.25,
             generation: u64::MAX - 11, // string round-trip, like the seed
+            store_revision: u64::MAX - 13, // string round-trip, like the seed
             blocks: vec![PartialBlock {
                 i: 1,
                 j: 0,
@@ -635,6 +653,10 @@ mod tests {
         assert_eq!(back.k, ckpt.k);
         assert_eq!(back.seed, ckpt.seed, "u64 seed must survive JSON exactly");
         assert_eq!(back.generation, ckpt.generation, "generation must survive JSON exactly");
+        assert_eq!(
+            back.store_revision, ckpt.store_revision,
+            "store revision must survive JSON exactly"
+        );
         assert_eq!(back.grid, ckpt.grid);
         assert_eq!(back.global_mean.to_bits(), ckpt.global_mean.to_bits());
         assert_eq!(back.blocks.len(), 1);
@@ -708,6 +730,7 @@ mod tests {
         .unwrap();
         let back = load_partial(&path).unwrap();
         assert_eq!(back.generation, 0);
+        assert_eq!(back.store_revision, 0, "pre-revision files load as revision 0");
         assert_eq!(back.seed, 9);
         std::fs::remove_file(path).ok();
     }

@@ -84,6 +84,16 @@ pub enum ConfigError {
     #[error("checkpoint_every is set but checkpoint_dir is not — periodic \
              checkpoints need a directory to write generations into")]
     CheckpointEveryWithoutDir,
+    /// A staleness bound was requested for lockstep sweeps, where it can
+    /// never apply — lockstep gathers every shard before the opposite
+    /// side starts, so no stale chunk is ever read. Raised by the CLI
+    /// (library callers may legitimately set `staleness` on a config
+    /// whose sweep mode is chosen later).
+    #[error(
+        "staleness {0} requires --sweep pipelined \
+         (lockstep sweeps never read stale chunks)"
+    )]
+    StalenessWithLockstep(usize),
 }
 
 /// How the U/V half-sweeps inside one block execute across the

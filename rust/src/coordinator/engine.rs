@@ -70,6 +70,11 @@ use super::trainer::{
     RunControl, RunStats, TrainOutcome, TrainResult,
 };
 use crate::data::sparse::Coo;
+use crate::online::delta::RatingDelta;
+use crate::online::update::{
+    check_prior, prior_dims, prune_prior, revision_skew, UpdateError,
+};
+use crate::partition::grid::Grid;
 use crate::posterior::PosteriorModel;
 use crate::store::{ShardStore, StoreError};
 use std::fmt;
@@ -144,6 +149,15 @@ pub enum TrainEvent {
     /// Block `node` was restored from a `resume_from` partial checkpoint
     /// instead of being re-sampled.
     BlockRestored {
+        /// Grid coordinates of the block.
+        node: (usize, usize),
+    },
+    /// Block `node` was passed through unchanged by an incremental update
+    /// ([`Engine::update`]): no delta entry touched it, so its prior
+    /// posterior fed aggregation as-is. Observability for "exactly what
+    /// re-ran": an update emits this for every clean block and
+    /// [`TrainEvent::BlockCompleted`] for every dirty one.
+    BlockSkippedClean {
         /// Grid coordinates of the block.
         node: (usize, usize),
     },
@@ -590,7 +604,7 @@ impl Engine {
         // the session's single private copy of the data, centred during
         // the one unavoidable clone
         let (centered, global_mean) = center(train);
-        self.submit_source(cfg, DataSource::Resident(centered), global_mean, resume)
+        self.submit_source(cfg, DataSource::Resident(centered), global_mean, resume, false)
     }
 
     /// [`Engine::submit`] against an opened shard store: same session
@@ -606,7 +620,124 @@ impl Engine {
         // the centring mean was computed once at ingest and persisted in
         // the manifest — bitwise the same f64 a resident run derives
         let global_mean = store.global_mean();
-        self.submit_source(cfg, DataSource::Store(store), global_mean, resume)
+        self.submit_source(cfg, DataSource::Store(store), global_mean, resume, false)
+    }
+
+    /// Incremental posterior update: re-sample **only** the blocks a
+    /// [`RatingDelta`] touches, passing every clean block's posterior from
+    /// `prior` through unchanged.
+    ///
+    /// The mechanism is a *pruned resume*: the delta is projected through
+    /// the block grid onto its dirty blocks
+    /// ([`RatingDelta::dirty_blocks`]), those blocks are dropped from the
+    /// prior checkpoint ([`prune_prior`](crate::online::update)), and the
+    /// remainder seeds the run exactly like `resume_from` would. Clean
+    /// blocks early-return their checkpointed posterior (emitting
+    /// [`TrainEvent::BlockSkippedClean`]); dirty blocks re-sample with
+    /// their original per-block seeds over the updated data; the
+    /// aggregation replays in canonical order. Because `aggregate_part`
+    /// divides each posterior by the prior it consumed, a clean posterior
+    /// fed back as a prior is never counted twice — so an **empty delta
+    /// reproduces the prior model bit for bit**, and a delta reaching new
+    /// row/column ids simply dirties every block (a full retrain inside
+    /// the same API).
+    ///
+    /// `base` must be the *raw* (uncentred) matrix the prior trained on —
+    /// dimensions are checked against the checkpoint's per-block shapes
+    /// and its mean against `prior.global_mean` (the same data
+    /// fingerprint a resume enforces); the delta is upserted on top.
+    /// Centring uses the **prior's** mean, pinned, so clean blocks see
+    /// bitwise-identical data. `cfg` must carry the prior's `k`, `grid`,
+    /// and `seed` (typed [`UpdateError`] otherwise); `cfg.resume_from` is
+    /// ignored — the pruned prior *is* the resume state.
+    pub fn update(
+        &self,
+        cfg: TrainConfig,
+        prior: &PartialCheckpoint,
+        delta: &RatingDelta,
+        base: &Coo,
+    ) -> anyhow::Result<Session> {
+        check_prior(&cfg, prior)?;
+        let dims = prior_dims(prior);
+        if (base.rows, base.cols) != dims {
+            return Err(
+                UpdateError::DataMismatch { data: (base.rows, base.cols), prior: dims }.into()
+            );
+        }
+        anyhow::ensure!(
+            base.mean().to_bits() == prior.global_mean.to_bits(),
+            "update base data does not fingerprint-match the checkpoint: \
+             data mean {} vs checkpoint mean {} — pass the exact matrix the \
+             prior trained on (the delta carries the changes)",
+            base.mean(),
+            prior.global_mean,
+        );
+        let updated = delta.apply_to(base);
+        let mut cfg = cfg;
+        cfg.resume_from = None;
+        cfg.validate(updated.rows, updated.cols)?;
+        let (gi, gj) = cfg.grid;
+        // project against the BASE grid: growth past it dirties everything
+        let dirty = delta.dirty_blocks(&Grid::new(base.rows, base.cols, gi, gj));
+        let pruned = prune_prior(prior, &dirty);
+        // centre with the pinned prior mean — NOT the updated data's own
+        // mean — so every clean block's entries stay bitwise-identical
+        let mean = prior.global_mean;
+        let mut centered = updated;
+        for e in &mut centered.entries {
+            e.val -= mean as f32;
+        }
+        self.submit_source(cfg, DataSource::Resident(centered), mean, Some(pruned), true)
+    }
+
+    /// [`Engine::update`] against a shard store the delta has already
+    /// been folded into (`bmf-pp ingest --append` /
+    /// [`append_delta`](crate::online::append_delta)).
+    ///
+    /// The store carries the post-append data and the pinned centring
+    /// mean, so only the dirty-set projection needs the delta here. Two
+    /// extra checks against the store: its centring mean must equal the
+    /// prior's bitwise (a re-ingested store re-derives the mean — that
+    /// needs a full retrain, and fails typed here), and if its append
+    /// `revision` is more than one step past
+    /// `prior.store_revision` a non-fatal
+    /// [`UpdateWarning`](crate::online::UpdateWarning) is logged — the
+    /// delta likely does not cover the intermediate appends. An append
+    /// that *grew* the matrix dirties every block, degrading to a full
+    /// retrain within the same call.
+    pub fn update_store(
+        &self,
+        cfg: TrainConfig,
+        prior: &PartialCheckpoint,
+        delta: &RatingDelta,
+        store: Arc<ShardStore>,
+    ) -> anyhow::Result<Session> {
+        check_prior(&cfg, prior)?;
+        let mut cfg = cfg;
+        cfg.resume_from = None;
+        cfg.validate(store.rows(), store.cols())?;
+        Self::check_store_grid(&cfg, &store)?;
+        anyhow::ensure!(
+            store.global_mean().to_bits() == prior.global_mean.to_bits(),
+            "store centring mean {} does not match the checkpoint's {} — \
+             the store was re-ingested rather than appended to; run a full \
+             retrain instead of an update",
+            store.global_mean(),
+            prior.global_mean,
+        );
+        if let Some(warning) = revision_skew(prior, store.revision()) {
+            log::warn!("{warning}");
+        }
+        let dims = prior_dims(prior);
+        let dirty = if (store.rows(), store.cols()) != dims {
+            // the append grew the matrix: every block boundary moved
+            store.partition_grid().blocks().map(|b| (b.i, b.j)).collect()
+        } else {
+            delta.dirty_blocks(store.partition_grid())
+        };
+        let pruned = prune_prior(prior, &dirty);
+        let global_mean = store.global_mean();
+        self.submit_source(cfg, DataSource::Store(store), global_mean, Some(pruned), true)
     }
 
     /// Shared back half of [`Engine::submit`] / [`Engine::submit_store`]:
@@ -617,6 +748,7 @@ impl Engine {
         data: DataSource,
         global_mean: f64,
         resume: Option<PartialCheckpoint>,
+        clean_skip: bool,
     ) -> anyhow::Result<Session> {
         // admission: the returned guard keeps check + registration atomic
         let mut reg = self.admit()?;
@@ -654,7 +786,7 @@ impl Engine {
                     let _ = tx.send(e);
                 }
             });
-            let ctx = JobCtx { job, control: shared_bg.control.clone(), resume };
+            let ctx = JobCtx { job, control: shared_bg.control.clone(), resume, clean_skip };
             let res = run_pp_centered(&cfg, &pool, data, global_mean, Some(sink), ctx);
             pool.finish_job(job);
             *shared_bg.status.lock().unwrap() = match &res {

@@ -82,6 +82,11 @@ pub struct RunStats {
     /// Blocks restored from a `resume_from` partial checkpoint instead of
     /// being re-sampled. 0 for non-resumed runs.
     pub blocks_restored: usize,
+    /// Blocks an incremental update passed through unchanged because no
+    /// delta entry touched them (see `Engine::update`): their
+    /// checkpointed posteriors fed aggregation as-is. 0 outside update
+    /// runs; `blocks` then counts exactly the dirty blocks re-sampled.
+    pub blocks_skipped_clean: usize,
     /// Total Gibbs sweeps across all blocks.
     pub sweeps: usize,
     /// Factor rows sampled across all blocks and sweeps.
@@ -329,6 +334,12 @@ pub(crate) struct JobCtx {
     pub job: JobId,
     pub control: Arc<RunControl>,
     pub resume: Option<PartialCheckpoint>,
+    /// True for incremental updates (`Engine::update`): blocks carried in
+    /// through `resume` are *clean* — untouched by the delta — so their
+    /// pass-through is reported as [`TrainEvent::BlockSkippedClean`] and
+    /// counted in `RunStats::blocks_skipped_clean` instead of the
+    /// crash-resume restore accounting.
+    pub clean_skip: bool,
 }
 
 /// The periodic-checkpoint writer one run shares across its block tasks:
@@ -353,6 +364,7 @@ struct CheckpointSink {
     seed: u64,
     grid: (usize, usize),
     global_mean: f64,
+    store_revision: u64,
     state: std::sync::Mutex<SinkState>,
 }
 
@@ -377,6 +389,7 @@ impl CheckpointSink {
     fn from_config(
         cfg: &TrainConfig,
         global_mean: f64,
+        store_revision: u64,
         resume: Option<&PartialCheckpoint>,
     ) -> anyhow::Result<Option<Arc<CheckpointSink>>> {
         if cfg.checkpoint_every == 0 {
@@ -404,6 +417,7 @@ impl CheckpointSink {
             seed: cfg.seed,
             grid: cfg.grid,
             global_mean,
+            store_revision,
             state: std::sync::Mutex::new(SinkState {
                 blocks,
                 since_last: 0,
@@ -432,6 +446,7 @@ impl CheckpointSink {
             grid: self.grid,
             global_mean: self.global_mean,
             generation: st.next_generation,
+            store_revision: self.store_revision,
             blocks: st.blocks.clone(),
         };
         match checkpoint::save_partial(&ckpt, &path) {
@@ -473,6 +488,7 @@ impl CheckpointSink {
 fn persist_abort(
     cfg: &TrainConfig,
     global_mean: f64,
+    store_revision: u64,
     blocks: &[PartialBlock],
     em: &Emitter,
     sink: Option<&CheckpointSink>,
@@ -489,6 +505,7 @@ fn persist_abort(
                 grid: cfg.grid,
                 global_mean,
                 generation: 0,
+                store_revision,
                 blocks: blocks.to_vec(),
             };
             match checkpoint::save_partial(&ckpt, path) {
@@ -524,12 +541,13 @@ fn persist_abort(
 fn finish_cancelled(
     cfg: &TrainConfig,
     global_mean: f64,
+    store_revision: u64,
     blocks: Vec<PartialBlock>,
     em: &Emitter,
     sink: Option<&CheckpointSink>,
 ) -> anyhow::Result<TrainOutcome> {
     let blocks_completed = blocks.len();
-    let saved = persist_abort(cfg, global_mean, &blocks, em, sink)?;
+    let saved = persist_abort(cfg, global_mean, store_revision, &blocks, em, sink)?;
     em.cancelled(blocks_completed);
     Ok(TrainOutcome::Cancelled(CancelInfo { blocks_completed, checkpoint: saved }))
 }
@@ -541,13 +559,14 @@ fn finish_cancelled(
 fn finish_failed(
     cfg: &TrainConfig,
     global_mean: f64,
+    store_revision: u64,
     blocks: Vec<PartialBlock>,
     em: &Emitter,
     sink: Option<&CheckpointSink>,
     error: &anyhow::Error,
 ) -> anyhow::Result<TrainOutcome> {
     let blocks_completed = blocks.len();
-    let saved = match persist_abort(cfg, global_mean, &blocks, em, sink) {
+    let saved = match persist_abort(cfg, global_mean, store_revision, &blocks, em, sink) {
         Ok(p) => p,
         Err(e) => {
             log::warn!("abort checkpoint after failure could not be written: {e:#}");
@@ -620,15 +639,24 @@ pub(crate) fn load_resume(cfg: &TrainConfig) -> anyhow::Result<Option<PartialChe
 struct Emitter {
     sink: Option<EventSink>,
     sweep_rmse: bool,
+    /// Incremental-update run: pass-through blocks are clean skips, not
+    /// crash-resume restores (see `JobCtx::clean_skip`).
+    clean_skip: bool,
     phase_started: Arc<[AtomicBool; 4]>,
     control: Arc<RunControl>,
 }
 
 impl Emitter {
-    fn new(sink: Option<EventSink>, sweep_rmse: bool, control: Arc<RunControl>) -> Emitter {
+    fn new(
+        sink: Option<EventSink>,
+        sweep_rmse: bool,
+        clean_skip: bool,
+        control: Arc<RunControl>,
+    ) -> Emitter {
         Emitter {
             sink,
             sweep_rmse,
+            clean_skip,
             phase_started: Arc::new([
                 AtomicBool::new(false),
                 AtomicBool::new(false),
@@ -661,7 +689,11 @@ impl Emitter {
     fn block_restored(&self, node: (usize, usize)) {
         self.control.blocks_done.fetch_add(1, Ordering::Relaxed);
         if let Some(sink) = &self.sink {
-            sink(TrainEvent::BlockRestored { node });
+            if self.clean_skip {
+                sink(TrainEvent::BlockSkippedClean { node });
+            } else {
+                sink(TrainEvent::BlockRestored { node });
+            }
         }
     }
 
@@ -882,7 +914,7 @@ pub(crate) fn run_pp(
     cfg.validate(train.rows, train.cols)?;
     let resume = load_resume(cfg)?;
     let job = pool.register_job(cfg.priority, cfg.max_in_flight);
-    let ctx = JobCtx { job, control: Arc::new(RunControl::new()), resume };
+    let ctx = JobCtx { job, control: Arc::new(RunControl::new()), resume, clean_skip: false };
     let (centered, global_mean) = center(train);
     let out = run_pp_centered(cfg, pool, DataSource::Resident(centered), global_mean, sink, ctx);
     pool.finish_job(job);
@@ -902,7 +934,7 @@ pub(crate) fn run_pp_store(
     cfg.validate(store.rows(), store.cols())?;
     let resume = load_resume(cfg)?;
     let job = pool.register_job(cfg.priority, cfg.max_in_flight);
-    let ctx = JobCtx { job, control: Arc::new(RunControl::new()), resume };
+    let ctx = JobCtx { job, control: Arc::new(RunControl::new()), resume, clean_skip: false };
     let global_mean = store.global_mean();
     let out = run_pp_centered(cfg, pool, DataSource::Store(store), global_mean, sink, ctx);
     pool.finish_job(job);
@@ -932,7 +964,15 @@ pub(crate) fn run_pp_centered(
             return Err(StoreError::GridMismatch { cfg: cfg.grid, store: store_grid }.into());
         }
     }
-    let em = Emitter::new(sink, cfg.stream_sweep_rmse, ctx.control.clone());
+    let em = Emitter::new(sink, cfg.stream_sweep_rmse, ctx.clean_skip, ctx.control.clone());
+    let clean_skip = ctx.clean_skip;
+    // the store revision the periodic/abort checkpoints will record:
+    // live manifest value for store runs; for resident runs, whatever the
+    // resume checkpoint carried (an update keeps its prior's revision)
+    let store_revision = match &data {
+        DataSource::Store(store) => store.revision(),
+        DataSource::Resident(_) => ctx.resume.as_ref().map_or(0, |r| r.store_revision),
+    };
 
     let (gi, gj) = cfg.grid;
     ctx.control.blocks_total.store(gi * gj, Ordering::Relaxed);
@@ -948,7 +988,7 @@ pub(crate) fn run_pp_centered(
     }
     // the periodic writer, when armed — seeded with the resumed blocks so
     // generations never shrink across crash/resume cycles
-    let ckpt_sink = CheckpointSink::from_config(cfg, global_mean, ctx.resume.as_ref())?;
+    let ckpt_sink = CheckpointSink::from_config(cfg, global_mean, store_revision, ctx.resume.as_ref())?;
     // blocks restored from a resume checkpoint, keyed by grid coordinate
     let mut restored: HashMap<(usize, usize), BlockPosteriors> = HashMap::new();
     // the restored posteriors get moved into DAG closures below; when any
@@ -968,7 +1008,14 @@ pub(crate) fn run_pp_centered(
     // resumed run must still carry its inherited blocks forward into the
     // abort checkpoint rather than dropping them
     if ctx.control.cancel.load(Ordering::Relaxed) {
-        return finish_cancelled(cfg, global_mean, resume_backup, &em, ckpt_sink.as_deref());
+        return finish_cancelled(
+            cfg,
+            global_mean,
+            store_revision,
+            resume_backup,
+            &em,
+            ckpt_sink.as_deref(),
+        );
     }
     let mut restored_ids: HashSet<NodeId> = HashSet::new();
     // grid coordinate of every block node, for checkpoint-on-abort
@@ -1252,10 +1299,18 @@ pub(crate) fn run_pp_centered(
         // a failure racing a cancel drain resolves as the cancel — the
         // user asked for it and the checkpoint is identical either way
         return if outcome.cancelled {
-            finish_cancelled(cfg, global_mean, blocks, &em, ckpt_sink.as_deref())
+            finish_cancelled(cfg, global_mean, store_revision, blocks, &em, ckpt_sink.as_deref())
         } else {
             let err = outcome.failed.expect("checked above");
-            finish_failed(cfg, global_mean, blocks, &em, ckpt_sink.as_deref(), &err)
+            finish_failed(
+                cfg,
+                global_mean,
+                store_revision,
+                blocks,
+                &em,
+                ckpt_sink.as_deref(),
+                &err,
+            )
         };
     }
     // a non-cancelled run_with completes every node
@@ -1270,7 +1325,11 @@ pub(crate) fn run_pp_centered(
     for (id, res) in nodes.iter().enumerate() {
         if let Some(s) = res.output.block_stats() {
             if restored_ids.contains(&id) {
-                stats.blocks_restored += 1;
+                if clean_skip {
+                    stats.blocks_skipped_clean += 1;
+                } else {
+                    stats.blocks_restored += 1;
+                }
             } else {
                 stats.absorb(s);
             }

@@ -118,6 +118,32 @@ fn evaluate_one(inv: &Invariant, run: &ScenarioRun) -> CheckResult {
                 bitwise
             }
         }
+        Invariant::MaxBlocksResampled { leg, max } => match completed(run, leg) {
+            Err(detail) => CheckResult::fail(label, detail),
+            Ok(result) => match result.stats {
+                None => CheckResult::fail(label, format!("leg '{leg}' recorded no stats")),
+                Some(stats) => {
+                    if stats.blocks <= *max {
+                        CheckResult::pass(
+                            label,
+                            format!(
+                                "{} blocks re-sampled <= {max} ({} passed through clean)",
+                                stats.blocks, stats.blocks_skipped_clean
+                            ),
+                        )
+                    } else {
+                        CheckResult::fail(
+                            label,
+                            format!(
+                                "{} blocks re-sampled > {max} — the update touched \
+                                 more than its dirty set",
+                                stats.blocks
+                            ),
+                        )
+                    }
+                }
+            },
+        },
         Invariant::FinishBefore { first, then } => {
             let (a, b) = match (run.leg(first), run.leg(then)) {
                 (Some(a), Some(b)) => (a, b),
@@ -258,6 +284,28 @@ mod tests {
         let diff = bitwise_equal(&run, &["a".into(), "c".into()], "x".into());
         assert!(!diff.passed);
         assert!(diff.detail.contains("u_post.mean[0]"), "{}", diff.detail);
+    }
+
+    #[test]
+    fn max_blocks_resampled_bounds_sampled_blocks() {
+        use crate::coordinator::trainer::RunStats;
+        let mut leg = completed_leg("a", model(0.0));
+        leg.stats =
+            Some(RunStats { blocks: 1, blocks_skipped_clean: 3, ..RunStats::default() });
+        let run = ScenarioRun {
+            name: "t".into(),
+            path: "<t>".into(),
+            legs: vec![leg],
+            secs: 0.0,
+        };
+        let pass =
+            evaluate_one(&Invariant::MaxBlocksResampled { leg: "a".into(), max: 1 }, &run);
+        assert!(pass.passed, "{}", pass.detail);
+        assert!(pass.detail.contains("3 passed through clean"), "{}", pass.detail);
+        let fail =
+            evaluate_one(&Invariant::MaxBlocksResampled { leg: "a".into(), max: 0 }, &run);
+        assert!(!fail.passed);
+        assert!(fail.detail.contains("1 blocks re-sampled > 0"), "{}", fail.detail);
     }
 
     #[test]

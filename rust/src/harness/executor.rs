@@ -234,17 +234,25 @@ pub fn run_scenario(scn: &Scenario) -> anyhow::Result<ScenarioRun> {
 }
 
 fn run_sequential(ctx: &Context, scn: &Scenario) -> Vec<LegResult> {
-    scn.legs
-        .iter()
-        .enumerate()
-        .map(|(rank, leg)| {
-            if leg.fault_block.is_some() {
-                run_fault_leg(ctx, leg, rank)
-            } else {
-                run_plain_leg(ctx, leg, rank)
-            }
-        })
-        .collect()
+    // legs some later update leg seeds from must checkpoint, into a
+    // directory that outlives them
+    let referenced: std::collections::BTreeSet<&str> =
+        scn.legs.iter().filter_map(|l| l.update_from.as_deref()).collect();
+    let mut ckpt_dirs: BTreeMap<String, PathBuf> = BTreeMap::new();
+    let mut results = Vec::with_capacity(scn.legs.len());
+    for (rank, leg) in scn.legs.iter().enumerate() {
+        let result = if leg.update_from.is_some() {
+            run_update_leg(ctx, leg, rank, &ckpt_dirs)
+        } else if leg.fault_block.is_some() {
+            run_fault_leg(ctx, leg, rank)
+        } else if referenced.contains(leg.name.as_str()) {
+            run_checkpointed_leg(ctx, leg, rank, &mut ckpt_dirs)
+        } else {
+            run_plain_leg(ctx, leg, rank)
+        };
+        results.push(result);
+    }
+    results
 }
 
 /// Submit every leg up front (in spec order) and let the engine's shared
@@ -307,6 +315,95 @@ fn run_plain_leg(ctx: &Context, leg: &LegSpec, rank: usize) -> LegResult {
     }
     let outcome = ctx.submit(cfg, leg).and_then(|s| s.wait());
     finish_leg(ctx, &leg.name, outcome, started.elapsed().as_secs_f64(), rank)
+}
+
+/// A leg some later update leg seeds from: force checkpointing after
+/// *every* block (so the final generation is complete — a sparser
+/// interval could leave the newest generation mid-run) into a retained
+/// directory, recorded under the leg's name for the update to find.
+fn run_checkpointed_leg(
+    ctx: &Context,
+    leg: &LegSpec,
+    rank: usize,
+    ckpt_dirs: &mut BTreeMap<String, PathBuf>,
+) -> LegResult {
+    let started = Instant::now();
+    let dir = match TempDir::new("update_base") {
+        Ok(dir) => dir,
+        Err(e) => {
+            return LegResult::failed(
+                &leg.name,
+                format!("cannot create checkpoint dir: {e}"),
+                started.elapsed().as_secs_f64(),
+                rank,
+            )
+        }
+    };
+    let cfg = ctx.config(&leg.run).with_checkpoint_every(1).with_checkpoint_dir(&dir.0);
+    ckpt_dirs.insert(leg.name.clone(), dir.0.clone());
+    ctx.scratch.lock().unwrap().push(dir);
+    let outcome = ctx.submit(cfg, leg).and_then(|s| s.wait());
+    finish_leg(ctx, &leg.name, outcome, started.elapsed().as_secs_f64(), rank)
+}
+
+/// An update leg: load the referenced leg's final checkpoint as the
+/// prior, synthesize the drift delta, and run `Engine::update` — the
+/// pruned-resume path that re-samples only dirty blocks.
+fn run_update_leg(
+    ctx: &Context,
+    leg: &LegSpec,
+    rank: usize,
+    ckpt_dirs: &BTreeMap<String, PathBuf>,
+) -> LegResult {
+    let started = Instant::now();
+    let from = leg.update_from.as_deref().expect("update leg without update_from");
+    let Some(dir) = ckpt_dirs.get(from) else {
+        return LegResult::failed(
+            &leg.name,
+            format!("update_from leg '{from}' left no checkpoint directory (did it fail?)"),
+            started.elapsed().as_secs_f64(),
+            rank,
+        );
+    };
+    let prior = match crate::online::load_prior(dir) {
+        Ok(p) => p,
+        Err(e) => {
+            return LegResult::failed(
+                &leg.name,
+                format!("cannot load update prior: {e}"),
+                started.elapsed().as_secs_f64(),
+                rank,
+            )
+        }
+    };
+    let delta = synthesize_delta(&ctx.train, leg.run.grid, leg.delta_frac);
+    let cfg = ctx.config(&leg.run);
+    let outcome = ctx.engine.update(cfg, &prior, &delta, &ctx.train).and_then(|s| s.wait());
+    finish_leg(ctx, &leg.name, outcome, started.elapsed().as_secs_f64(), rank)
+}
+
+/// Deterministic drift confined to block (0,0): every `stride`-th train
+/// entry inside the block is re-rated at `+0.25`, so the delta's size
+/// tracks `frac` while dirtying exactly one block — the scenario can
+/// then pin `max_blocks_resampled` to 1. `frac == 0.0` returns the
+/// empty delta (the bitwise no-op case).
+fn synthesize_delta(train: &Coo, grid: (usize, usize), frac: f64) -> crate::online::RatingDelta {
+    let mut delta = crate::online::RatingDelta::new(train.rows, train.cols);
+    if frac <= 0.0 {
+        return delta;
+    }
+    let g = crate::partition::Grid::new(train.rows, train.cols, grid.0, grid.1);
+    let (_, row_end) = g.row_range(0);
+    let (_, col_end) = g.col_range(0);
+    let stride = ((1.0 / frac) as usize).max(1);
+    let in_block =
+        train.entries.iter().filter(|e| (e.row as usize) < row_end && (e.col as usize) < col_end);
+    for (idx, e) in in_block.enumerate() {
+        if idx % stride == 0 {
+            delta.push(e.row as usize, e.col as usize, e.val + 0.25);
+        }
+    }
+    delta
 }
 
 /// Run the leg with its fault plan armed (crash expected), then — when

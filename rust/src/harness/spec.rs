@@ -158,6 +158,46 @@ pub enum SpecError {
         /// The offending leg.
         leg: String,
     },
+    /// An `update_from` reference that does not name an *earlier* leg:
+    /// the referenced run's final checkpoint is the update's prior, so it
+    /// must already have executed.
+    #[error(
+        "leg '{leg}' updates from '{from}', which must name an earlier \
+         non-update, non-fault leg in the same scenario"
+    )]
+    UpdateFromNotEarlier {
+        /// The update leg.
+        leg: String,
+        /// The dangling or out-of-order reference.
+        from: String,
+    },
+    /// Update legs need the deterministic sequential executor — the
+    /// prior leg's checkpoint must exist before the update starts.
+    #[error("leg '{leg}' sets update_from in a concurrent scenario — use sequential tenancy")]
+    UpdateInConcurrent {
+        /// The offending leg.
+        leg: String,
+    },
+    /// An update leg combined with a knob that contradicts it: the leg
+    /// re-runs the referenced leg's configuration over delta'd data, so
+    /// only the delta may vary.
+    #[error(
+        "leg '{leg}' combines update_from with {conflict} — an update leg \
+         replays the referenced leg's run over the delta; vary only delta_frac"
+    )]
+    UpdateConflict {
+        /// The offending leg.
+        leg: String,
+        /// The incompatible knob.
+        conflict: &'static str,
+    },
+    /// `delta_frac` on a leg that is not an update leg — the drift delta
+    /// only exists relative to an `update_from` prior.
+    #[error("leg '{leg}' sets delta_frac without update_from")]
+    DeltaWithoutUpdate {
+        /// The offending leg.
+        leg: String,
+    },
     /// A directory sweep found no scenario files at all.
     #[error("no scenario files (*.json) found under {path}")]
     NoScenarios {
@@ -262,6 +302,18 @@ pub struct LegSpec {
     /// when `fault_block` is set with `resume: true`; the harness
     /// provides the (temporary) generation directory itself.
     pub checkpoint_every: usize,
+    /// Run this leg as an *incremental update* seeded by the named
+    /// earlier leg's final checkpoint: the executor forces
+    /// checkpointing onto the referenced leg, synthesizes a
+    /// deterministic drift delta ([`delta_frac`](LegSpec::delta_frac)),
+    /// and calls `Engine::update` instead of a fresh submit. Pair with
+    /// `max_blocks_resampled` / `bitwise_equal` invariants.
+    pub update_from: Option<String>,
+    /// Fraction of the training entries inside block (0,0) the synthetic
+    /// drift delta re-rates (each bumped by a fixed +0.25). `0.0` (the
+    /// default) is the *empty* delta — the bitwise no-op case. Only
+    /// meaningful with [`update_from`](LegSpec::update_from).
+    pub delta_frac: f64,
 }
 
 /// How a scenario's legs share the engine.
@@ -355,6 +407,16 @@ pub enum Invariant {
         /// Leg required to finish after.
         then: String,
     },
+    /// The leg must have re-sampled at most `max` blocks
+    /// (`RunStats::blocks`; restored and clean-skipped blocks do not
+    /// count) — the proof an incremental update touched exactly its
+    /// dirty set. `max: 0` asserts a pure pass-through (empty delta).
+    MaxBlocksResampled {
+        /// Leg whose sampled-block count is bounded.
+        leg: String,
+        /// Inclusive re-sample ceiling.
+        max: usize,
+    },
 }
 
 impl Invariant {
@@ -374,6 +436,9 @@ impl Invariant {
                 format!("resume_bitwise({resumed} == {reference})")
             }
             Invariant::FinishBefore { first, then } => format!("finish_before({first} < {then})"),
+            Invariant::MaxBlocksResampled { leg, max } => {
+                format!("max_blocks_resampled({leg} <= {max})")
+            }
         }
     }
 
@@ -383,7 +448,8 @@ impl Invariant {
             Invariant::RmseMax { leg, .. }
             | Invariant::MaxQueueWaitSecs { leg, .. }
             | Invariant::MinEvictions { leg, .. }
-            | Invariant::ExpectOutcome { leg, .. } => vec![leg],
+            | Invariant::ExpectOutcome { leg, .. }
+            | Invariant::MaxBlocksResampled { leg, .. } => vec![leg],
             Invariant::BitwiseEqual { legs } => legs.iter().map(String::as_str).collect(),
             Invariant::ResumeBitwise { resumed, reference } => vec![resumed, reference],
             Invariant::FinishBefore { first, then } => vec![first, then],
@@ -522,6 +588,39 @@ impl Scenario {
                 if self.tenancy == Tenancy::Concurrent {
                     return Err(SpecError::FaultInConcurrent { leg: leg.name.clone() });
                 }
+            }
+            if let Some(from) = &leg.update_from {
+                if self.tenancy == Tenancy::Concurrent {
+                    return Err(SpecError::UpdateInConcurrent { leg: leg.name.clone() });
+                }
+                for (knob, set) in
+                    [("fault_block", leg.fault_block.is_some()), ("store", leg.store)]
+                {
+                    if set {
+                        return Err(SpecError::UpdateConflict {
+                            leg: leg.name.clone(),
+                            conflict: knob,
+                        });
+                    }
+                }
+                // the prior leg must run earlier, and be an ordinary
+                // training run — an update or fault leg's checkpoints
+                // would not be a complete, uninterrupted prior
+                let earlier_ok = self
+                    .legs
+                    .iter()
+                    .take_while(|l| l.name != leg.name)
+                    .any(|l| {
+                        l.name == *from && l.update_from.is_none() && l.fault_block.is_none()
+                    });
+                if !earlier_ok {
+                    return Err(SpecError::UpdateFromNotEarlier {
+                        leg: leg.name.clone(),
+                        from: from.clone(),
+                    });
+                }
+            } else if leg.delta_frac != 0.0 {
+                return Err(SpecError::DeltaWithoutUpdate { leg: leg.name.clone() });
             }
         }
         for inv in &self.invariants {
@@ -674,11 +773,23 @@ fn parse_run(
 }
 
 fn parse_leg(v: &Json, section: &str, base: &RunSpec) -> Result<LegSpec, SpecError> {
-    const LEG_ONLY: &[&str] =
-        &["name", "store", "cache_bytes", "fault_block", "resume", "checkpoint_every"];
+    const LEG_ONLY: &[&str] = &[
+        "name",
+        "store",
+        "cache_bytes",
+        "fault_block",
+        "resume",
+        "checkpoint_every",
+        "update_from",
+        "delta_frac",
+    ];
     let map = as_obj(v, section)?;
     let allowed: Vec<&'static str> = LEG_ONLY.iter().chain(RUN_KEYS).copied().collect();
     check_keys(map, section, &allowed)?;
+    let delta_frac = opt_f64(map, section, "delta_frac")?.unwrap_or(0.0);
+    if !(0.0..=1.0).contains(&delta_frac) {
+        return Err(bad(section, "delta_frac", &delta_frac.to_string(), "a fraction in [0, 1]"));
+    }
     Ok(LegSpec {
         name: req_str(map, section, "name")?.to_string(),
         run: parse_run(map, section, base)?,
@@ -687,6 +798,8 @@ fn parse_leg(v: &Json, section: &str, base: &RunSpec) -> Result<LegSpec, SpecErr
         fault_block: opt_usize(map, section, "fault_block")?,
         resume: opt_bool(map, section, "resume")?.unwrap_or(true),
         checkpoint_every: opt_usize(map, section, "checkpoint_every")?.unwrap_or(0),
+        update_from: opt_str(map, section, "update_from")?.map(str::to_string),
+        delta_frac,
     })
 }
 
@@ -746,13 +859,24 @@ fn parse_invariant(v: &Json, section: &str) -> Result<Invariant, SpecError> {
                 then: req_str(map, section, "then")?.to_string(),
             }
         }
+        "max_blocks_resampled" => {
+            check_keys(map, section, &["check", "leg", "max"])?;
+            let max = req_f64(map, section, "max")?;
+            if !(max >= 0.0 && max.fract() == 0.0) {
+                return Err(bad(section, "max", &max.to_string(), "a non-negative integer"));
+            }
+            Invariant::MaxBlocksResampled {
+                leg: req_str(map, section, "leg")?.to_string(),
+                max: max as usize,
+            }
+        }
         other => {
             return Err(bad(
                 section,
                 "check",
                 other,
                 "rmse_max | bitwise_equal | max_queue_wait_secs | min_evictions | \
-                 expect_outcome | resume_bitwise | finish_before",
+                 expect_outcome | resume_bitwise | finish_before | max_blocks_resampled",
             ))
         }
     };
@@ -1054,6 +1178,109 @@ mod tests {
                 "field {field}: {err}"
             );
         }
+    }
+
+    #[test]
+    fn update_leg_parses_and_validates_ordering() {
+        let s = Scenario::parse(
+            &minimal(
+                r#", {"name": "b", "update_from": "a", "delta_frac": 0.1}"#,
+                r#"{"check": "max_blocks_resampled", "leg": "b", "max": 1}"#,
+            ),
+            "<test>",
+        )
+        .unwrap();
+        assert_eq!(s.legs[1].update_from.as_deref(), Some("a"));
+        assert_eq!(s.legs[1].delta_frac, 0.1);
+        assert!(matches!(
+            s.invariants[0],
+            Invariant::MaxBlocksResampled { ref leg, max: 1 } if leg == "b"
+        ));
+
+        // forward reference: the prior leg has not run yet
+        let err = Scenario::parse(
+            &minimal(
+                r#", {"name": "b", "update_from": "c"}, {"name": "c"}"#,
+                r#"{"check": "rmse_max", "leg": "a", "max": 2.0}"#,
+            ),
+            "<test>",
+        )
+        .unwrap_err();
+        assert!(matches!(err, SpecError::UpdateFromNotEarlier { .. }), "{err}");
+
+        // self reference is just as out of order
+        let err = Scenario::parse(
+            &minimal(
+                r#", {"name": "b", "update_from": "b"}"#,
+                r#"{"check": "rmse_max", "leg": "a", "max": 2.0}"#,
+            ),
+            "<test>",
+        )
+        .unwrap_err();
+        assert!(matches!(err, SpecError::UpdateFromNotEarlier { .. }), "{err}");
+    }
+
+    #[test]
+    fn update_leg_conflicts_are_typed() {
+        let err = Scenario::parse(
+            &minimal(
+                r#", {"name": "b", "update_from": "a", "store": true}"#,
+                r#"{"check": "rmse_max", "leg": "a", "max": 2.0}"#,
+            ),
+            "<test>",
+        )
+        .unwrap_err();
+        assert!(
+            matches!(err, SpecError::UpdateConflict { conflict: "store", .. }),
+            "{err}"
+        );
+
+        let err = Scenario::parse(
+            &minimal(
+                r#", {"name": "b", "delta_frac": 0.5}"#,
+                r#"{"check": "rmse_max", "leg": "a", "max": 2.0}"#,
+            ),
+            "<test>",
+        )
+        .unwrap_err();
+        assert!(matches!(err, SpecError::DeltaWithoutUpdate { .. }), "{err}");
+
+        let err = Scenario::parse(
+            &minimal(
+                r#", {"name": "b", "update_from": "a", "delta_frac": 1.5}"#,
+                r#"{"check": "rmse_max", "leg": "a", "max": 2.0}"#,
+            ),
+            "<test>",
+        )
+        .unwrap_err();
+        assert!(
+            matches!(err, SpecError::BadValue { ref field, .. } if field == "delta_frac"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn update_in_concurrent_is_typed() {
+        let text = minimal(
+            r#", {"name": "b", "update_from": "a"}"#,
+            r#"{"check": "rmse_max", "leg": "a", "max": 2.0}"#,
+        )
+        .replace("\"name\": \"t\"", "\"name\": \"t\", \"tenancy\": \"concurrent\"");
+        let err = Scenario::parse(&text, "<test>").unwrap_err();
+        assert!(matches!(err, SpecError::UpdateInConcurrent { .. }), "{err}");
+    }
+
+    #[test]
+    fn max_blocks_resampled_rejects_fractional_max() {
+        let err = Scenario::parse(
+            &minimal("", r#"{"check": "max_blocks_resampled", "leg": "a", "max": 0.5}"#),
+            "<test>",
+        )
+        .unwrap_err();
+        assert!(
+            matches!(err, SpecError::BadValue { ref field, .. } if field == "max"),
+            "{err}"
+        );
     }
 
     #[test]

@@ -118,6 +118,7 @@ pub mod harness;
 pub mod linalg;
 #[doc(hidden)]
 pub mod metrics;
+pub mod online;
 #[doc(hidden)]
 pub mod partition;
 #[doc(hidden)]

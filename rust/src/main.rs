@@ -12,7 +12,9 @@
 //!             through an LRU cache bounded by --cache-bytes (0 =
 //!             unbounded), warmed by a DAG-order prefetcher — the
 //!             posterior is bitwise-identical to the resident run (pass
-//!             the same --tau); --test-file <csv> scores the holdout that
+//!             the same --tau; store-backed runs default --tau to 1.0
+//!             because the resident data that `auto_tau` derives it from
+//!             is not loaded); --test-file <csv> scores the holdout that
 //!             `ingest --save-test` wrote.
 //!             --priority low|normal|high tags the job in the engine's
 //!             shared queue; --resume <v3.json | checkpoint-dir> continues
@@ -32,7 +34,28 @@
 //!             versioned, checksummed manifest, all written atomically.
 //!             Splits off the same holdout `train` would (--test-frac,
 //!             seed-stable) so --save-test <csv> + `train --store --test-file`
-//!             reproduce the resident run's RMSE exactly
+//!             reproduce the resident run's RMSE exactly.
+//!             --append --delta <csv> folds a ratings delta into an
+//!             existing store instead: only the shards of blocks the
+//!             delta touches are rewritten (atomic tmp+rename), the
+//!             manifest revision is bumped, and the centring mean stays
+//!             pinned — the input side of `update --store`
+//!   update    incremental retrain: apply a ratings delta (--delta <csv>,
+//!             empty = no-op) on top of a finished run's v3 checkpoint
+//!             (--from <file|dir>), re-sampling ONLY the blocks the delta
+//!             touches and passing every clean block's posterior through
+//!             unchanged — an empty delta reproduces the prior model bit
+//!             for bit, and a delta with new row/col ids degrades to a
+//!             full retrain inside the same call. K, grid, and seed come
+//!             from the checkpoint; pass the original run's --tau. The
+//!             base data is --store <dir> (after `ingest --append` folded
+//!             the same delta in; a manifest revision more than one
+//!             append past the checkpoint's warns, non-fatally) or the
+//!             resident dataset flags the original run used. Writes
+//!             checkpoint generations to --checkpoint-dir (default:
+//!             --from when it is a directory) that a running
+//!             `serve --checkpoint-dir` hot-swaps without dropping a
+//!             request
 //!   jobs      multi-tenant demo: submit several concurrent training jobs
 //!             at mixed priorities on ONE engine and stream their status
 //!             (id / priority / state / block progress) until all finish;
@@ -71,7 +94,9 @@
 //!             multi-tenant mixes) and checks their declared invariants
 //!             (rmse_max, bitwise_equal, max_queue_wait_secs,
 //!             min_evictions, expect_outcome, resume_bitwise,
-//!             finish_before) against real Engine runs. A directory is
+//!             finish_before, max_blocks_resampled) against real Engine
+//!             runs; update legs (update_from + delta_frac) replay a
+//!             finished leg through Engine::update. A directory is
 //!             swept in filename order; any failed invariant makes the
 //!             exit code non-zero and prints the exact re-run line.
 //!             --list shows the specs without running them, --filter S
@@ -84,6 +109,8 @@
 //!   bmf-pp train --dataset movielens --resume aborted_v3.json
 //!   bmf-pp ingest --dataset movielens --grid 3x3 --out shards --save-test h.csv
 //!   bmf-pp train --store shards --tau 1.5 --cache-bytes 65536 --test-file h.csv
+//!   bmf-pp ingest --append --delta new_ratings.csv --out shards
+//!   bmf-pp update --from ckpts --store shards --delta new_ratings.csv --tau 1.5
 //!   bmf-pp jobs --jobs 3 --cancel-demo
 //!   bmf-pp predict --load m.json --file holdout.csv
 //!   bmf-pp serve --checkpoint-dir ckpts --addr 127.0.0.1:7878
@@ -101,8 +128,8 @@ use bmf_pp::cluster::{calibrate, sim};
 use bmf_pp::coordinator::backend::BlockBackend;
 use bmf_pp::coordinator::config::auto_tau;
 use bmf_pp::coordinator::{
-    checkpoint, AdmissionPolicy, BackendSpec, Engine, Priority, SchedulerMode, SubmitError,
-    SweepMode, TrainConfig, TrainEvent, TrainOutcome,
+    checkpoint, AdmissionPolicy, BackendSpec, ConfigError, Engine, Priority, SchedulerMode,
+    SubmitError, SweepMode, TrainConfig, TrainEvent, TrainOutcome,
 };
 use bmf_pp::data::generator::{DatasetProfile, SyntheticDataset};
 use bmf_pp::data::loader;
@@ -110,6 +137,8 @@ use bmf_pp::data::split::holdout_split_covered;
 use bmf_pp::data::sparse::Coo;
 use bmf_pp::data::stats::DatasetStats;
 use bmf_pp::metrics::recorder::Recorder;
+use bmf_pp::online::update::revision_skew;
+use bmf_pp::online::{append_delta, RatingDelta};
 use bmf_pp::metrics::throughput::Throughput;
 use bmf_pp::partition::{balance, Grid};
 use bmf_pp::serve::{ModelSource, ServeConfig, Server};
@@ -208,6 +237,12 @@ fn plan_train(args: &Args) -> anyhow::Result<Action> {
     let sweep = parse_sweep_mode(args)?;
     let chunk_rows = args.usize_or("chunk-rows", 256);
     let staleness = args.usize_or("staleness", 0);
+    // --staleness bounds how far a pipelined chunk read may lag; under
+    // lockstep sweeps (the default) it can never apply, so passing it is
+    // a mistyped run — reject at parse time, before any data loads
+    if staleness > 0 && matches!(sweep, SweepMode::Lockstep) {
+        return Err(ConfigError::StalenessWithLockstep(staleness).into());
+    }
     let block_parallelism = args.get("block-parallelism").and_then(|v| v.parse().ok());
     let phase_sample_frac = args.f64_or("phase-sample-frac", 1.0);
     let priority = parse_priority(args)?;
@@ -343,6 +378,14 @@ fn plan_train(args: &Args) -> anyhow::Result<Action> {
                 TrainEvent::BlockRestored { node } => {
                     println!(
                         "[{:>6.2}s] block ({},{}) restored from resume checkpoint",
+                        clock.secs(),
+                        node.0,
+                        node.1
+                    );
+                }
+                TrainEvent::BlockSkippedClean { node } => {
+                    println!(
+                        "[{:>6.2}s] block ({},{}) clean — posterior passed through",
                         clock.secs(),
                         node.0,
                         node.1
@@ -484,9 +527,54 @@ fn plan_train(args: &Args) -> anyhow::Result<Action> {
     }))
 }
 
+/// `ingest --append` — fold a ratings delta into an existing shard
+/// store: only the shards of blocks the delta touches are rewritten
+/// (atomic tmp+rename), the manifest revision is bumped, and the
+/// centring mean stays pinned — the input side of `update --store`.
+fn plan_ingest_append(args: &Args) -> anyhow::Result<Action> {
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow::anyhow!("--out <existing store dir> required"))?
+        .to_string();
+    let delta_path = args
+        .get("delta")
+        .ok_or_else(|| anyhow::anyhow!("--append requires --delta <csv>"))?
+        .to_string();
+    let one_based = args.bool_or("one-based", false);
+
+    Ok(Box::new(move || {
+        let clock = Stopwatch::start();
+        let coo = loader::load_csv(Path::new(&delta_path), one_based)?;
+        let delta = RatingDelta::from_coo(&coo);
+        let report = append_delta(&delta, Path::new(&out))?;
+        println!(
+            "appended {} ratings into {out}: {} shard(s) rewritten{} in {}",
+            report.delta_nnz,
+            report.rewritten,
+            if report.grown {
+                format!(
+                    " (matrix grew to {}x{}; every shard re-split)",
+                    report.shape.0, report.shape.1
+                )
+            } else {
+                String::new()
+            },
+            fmt_duration(clock.secs())
+        );
+        println!(
+            "store now {}x{}, {} ratings, manifest revision {}",
+            report.shape.0, report.shape.1, report.nnz, report.revision
+        );
+        Ok(())
+    }))
+}
+
 /// `ingest` — one-pass conversion of a dataset into a per-block shard
 /// store on disk, the input side of out-of-core `train --store`.
 fn plan_ingest(args: &Args) -> anyhow::Result<Action> {
+    if args.bool_or("append", false) {
+        return plan_ingest_append(args);
+    }
     let data = DataSpec::from_args(args);
     let out = args
         .get("out")
@@ -523,6 +611,165 @@ fn plan_ingest(args: &Args) -> anyhow::Result<Action> {
         if let Some(path) = save_test {
             loader::save_csv(&test, Path::new(&path))?;
             println!("holdout set saved to {path} ({} ratings)", test.nnz());
+        }
+        Ok(())
+    }))
+}
+
+/// `update` — incremental retrain from a finished run's checkpoint:
+/// re-sample only the blocks a ratings delta touches, pass every clean
+/// block's posterior through unchanged, and write the result as new
+/// checkpoint generations a running `serve` hot-swaps. K, grid, and seed
+/// come from the checkpoint itself; only the sampling knobs are flags.
+fn plan_update(args: &Args) -> anyhow::Result<Action> {
+    let from = args
+        .get("from")
+        .ok_or_else(|| anyhow::anyhow!("--from <v3.json | checkpoint-dir> required"))?
+        .to_string();
+    let delta_path = args
+        .get("delta")
+        .ok_or_else(|| {
+            anyhow::anyhow!("--delta <csv> required (an empty file is a valid no-op delta)")
+        })?
+        .to_string();
+    let one_based = args.bool_or("one-based", false);
+    let store_dir = args.get("store").map(str::to_string);
+    // the resident path re-derives the base matrix from the same dataset
+    // flags + split seed the original `train` run used
+    let data = DataSpec::from_args(args);
+    let test_frac = args.f64_or("test-frac", 0.2);
+    let burnin = args.usize_or("burnin", 8);
+    let samples = args.usize_or("samples", 20);
+    let workers = args.usize_or("workers", 1);
+    let native = args.bool_or("native", false);
+    let tau = args.get("tau").and_then(|v| v.parse::<f64>().ok());
+    let checkpoint_dir = args.get("checkpoint-dir").map(str::to_string);
+    let checkpoint_keep = args.usize_or("checkpoint-keep", 3);
+    let quiet = args.bool_or("quiet", false);
+
+    Ok(Box::new(move || {
+        let prior = bmf_pp::online::load_prior(Path::new(&from))?;
+        // generations default to landing where the prior lives, so a
+        // serve watching that directory hot-swaps the result
+        let ckpt_dir = match checkpoint_dir {
+            Some(d) => d,
+            None if Path::new(&from).is_dir() => from.clone(),
+            None => anyhow::bail!(
+                "--checkpoint-dir <dir> required when --from is a file \
+                 (a directory --from doubles as the output directory)"
+            ),
+        };
+        let delta_coo = loader::load_csv(Path::new(&delta_path), one_based)?;
+        let delta = RatingDelta::from_coo(&delta_coo);
+        let tau = match tau {
+            Some(t) => t,
+            None => {
+                println!(
+                    "note: --tau not set; update defaults to 1.0 (pass the \
+                     original run's --tau — a mismatch changes the dirty \
+                     blocks' math)"
+                );
+                1.0
+            }
+        };
+        let mut cfg = TrainConfig::new(prior.k)
+            .with_grid(prior.grid.0, prior.grid.1)
+            .with_seed(prior.seed)
+            .with_sweeps(burnin, samples)
+            .with_workers(workers)
+            .with_tau(tau)
+            // checkpoint after every completed block: the run's final
+            // generation is complete and servable the moment it lands
+            .with_checkpoint_every(1)
+            .with_checkpoint_dir(ckpt_dir.clone())
+            .with_checkpoint_keep(checkpoint_keep);
+        if native {
+            cfg = cfg.with_backend(BackendSpec::Native);
+        }
+
+        println!(
+            "incremental update: prior generation {} ({}x{} grid, K={}, seed {}), \
+             delta of {} ratings",
+            prior.generation,
+            prior.grid.0,
+            prior.grid.1,
+            prior.k,
+            prior.seed,
+            delta.len()
+        );
+        let engine = Engine::new(&cfg.backend, cfg.block_parallelism);
+        let session = if let Some(dir) = &store_dir {
+            let store = Arc::new(ShardStore::open(Path::new(dir))?);
+            // non-fatal: the store moved further than the one append this
+            // delta accounts for — surface it, then proceed
+            if let Some(warning) = revision_skew(&prior, store.revision()) {
+                println!("warning: {warning}");
+            }
+            engine.update_store(cfg, &prior, &delta, store)?
+        } else {
+            let (full, _k) = data.load()?;
+            let (train, _test) = holdout_split_covered(&full, test_frac, 7);
+            engine.update(cfg, &prior, &delta, &train)?
+        };
+
+        let clock = Stopwatch::start();
+        for event in session.events() {
+            if quiet {
+                continue;
+            }
+            match &event {
+                TrainEvent::BlockSkippedClean { node } => println!(
+                    "[{:>6.2}s] block ({},{}) clean — posterior passed through",
+                    clock.secs(),
+                    node.0,
+                    node.1
+                ),
+                TrainEvent::BlockCompleted { node, secs, sweeps, .. } => println!(
+                    "[{:>6.2}s] block ({},{}) re-sampled: {sweeps} sweeps in {}",
+                    clock.secs(),
+                    node.0,
+                    node.1,
+                    fmt_duration(*secs)
+                ),
+                TrainEvent::CheckpointSaved { path, blocks } => println!(
+                    "[{:>6.2}s] generation ({blocks} blocks) -> {}",
+                    clock.secs(),
+                    path.display()
+                ),
+                TrainEvent::Failed { error, blocks_completed } => println!(
+                    "[{:>6.2}s] FAILED after {blocks_completed} blocks: {error}",
+                    clock.secs()
+                ),
+                _ => {}
+            }
+        }
+        let result = match session.wait()? {
+            TrainOutcome::Completed(r) => *r,
+            TrainOutcome::Cancelled(info) => {
+                anyhow::bail!("update cancelled after {} blocks", info.blocks_completed)
+            }
+            TrainOutcome::Failed(info) => anyhow::bail!(
+                "update failed after {} completed blocks: {}",
+                info.blocks_completed,
+                info.error
+            ),
+        };
+        println!(
+            "update: {} block(s) re-sampled, {} passed through clean, in {}",
+            result.stats.blocks,
+            result.stats.blocks_skipped_clean,
+            fmt_duration(result.timings.total)
+        );
+        if result.stats.blocks == 0 {
+            println!(
+                "empty delta: no block changed, so no new generation was \
+                 written — the prior model already is the answer, bit for bit"
+            );
+        } else {
+            println!(
+                "new generation in {ckpt_dir} — a running `serve \
+                 --checkpoint-dir {ckpt_dir}` hot-swaps it within its --poll-ms"
+            );
         }
         Ok(())
     }))
@@ -1074,6 +1321,7 @@ fn main() {
     let planned = match args.subcommand.as_deref() {
         Some("train") => plan_train(&args),
         Some("ingest") => plan_ingest(&args),
+        Some("update") => plan_update(&args),
         Some("jobs") => plan_jobs(&args),
         Some("predict") => plan_predict(&args),
         Some("serve") => plan_serve(&args),
@@ -1086,7 +1334,7 @@ fn main() {
         Some("scenario") => plan_scenario(&args),
         other => {
             eprintln!(
-                "usage: bmf-pp <train|ingest|jobs|predict|serve|baseline|datasets|partition|simulate|evaluate|recommend-grid|scenario> [--flags]\n\
+                "usage: bmf-pp <train|ingest|update|jobs|predict|serve|baseline|datasets|partition|simulate|evaluate|recommend-grid|scenario> [--flags]\n\
                  (got: {other:?}) — see crate docs for flag reference"
             );
             std::process::exit(2);

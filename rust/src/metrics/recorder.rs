@@ -81,6 +81,10 @@ impl Recorder {
                 let idx = self.get_series("shard_resident_bytes").map_or(0, |s| s.len());
                 self.point("shard_resident_bytes", idx as f64, *resident_bytes as f64);
             }
+            TrainEvent::BlockSkippedClean { .. } => {
+                let n = self.get_scalar("blocks_skipped_clean").unwrap_or(0.0);
+                self.scalar("blocks_skipped_clean", n + 1.0);
+            }
             TrainEvent::PhaseStarted { .. } | TrainEvent::BlockRestored { .. } => {}
         }
     }
@@ -159,7 +163,10 @@ mod tests {
             secs: 1.5,
             sweeps: 5,
         });
+        r.observe(&TrainEvent::BlockSkippedClean { node: (0, 1) });
+        r.observe(&TrainEvent::BlockSkippedClean { node: (1, 1) });
         r.observe(&TrainEvent::Finished { secs: 2.0, blocks: 1 });
+        assert_eq!(r.get_scalar("blocks_skipped_clean"), Some(2.0));
         assert_eq!(r.get_series("sweep_rmse_0x0").unwrap().len(), 2);
         assert_eq!(r.get_series("block_secs").unwrap(), &[(0.0, 1.5)]);
         assert_eq!(r.get_scalar("train_secs"), Some(2.0));

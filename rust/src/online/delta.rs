@@ -1,0 +1,511 @@
+//! Rating deltas: a batch of new/updated cells, its projection onto the
+//! block grid, and the `ingest --append` fold into an on-disk store.
+//!
+//! A [`RatingDelta`] is the unit of online change: cells collected since
+//! the last (re)train, as *raw* (uncentred) values, optionally reaching
+//! row/column ids the trained matrix has never seen. Two consumers:
+//!
+//! - [`RatingDelta::apply_to`] upserts the delta into a resident `Coo` —
+//!   existing cells are replaced **in place** (entry order preserved),
+//!   new cells are appended at the end in delta order. That ordering
+//!   contract is what makes the resident and store-backed update paths
+//!   produce bitwise-identical per-block entry sequences.
+//! - [`append_delta`] folds the delta into an ingested shard store:
+//!   only dirty shards are rewritten (atomic temp + rename, the PR-7
+//!   discipline), the manifest's [`revision`](crate::store::Manifest)
+//!   is bumped by exactly one, and the persisted centring mean is left
+//!   untouched — the store keeps centring with the mean its checkpoints
+//!   were trained under, so clean blocks stay bitwise clean.
+//!
+//! Deltas that *grow* the matrix (new users/items) move every block
+//! boundary, so they degrade gracefully: [`RatingDelta::dirty_blocks`]
+//! reports every block dirty (an update then retrains fully, inside the
+//! same API) and [`append_delta`] rewrites every shard on the new grid.
+
+use crate::data::sparse::{Coo, Entry};
+use crate::partition::Grid;
+use crate::store::manifest::{atomic_write, fnv1a64, Manifest, StoreError, RECORD_BYTES};
+use crate::store::shard::encode_block;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::path::Path;
+
+/// A batch of new or corrected ratings, in raw (uncentred) scale.
+///
+/// `rows`/`cols` are the dimensions the delta *requires*: the max index
+/// + 1 over its entries (or whatever larger shape the caller declares).
+/// When they exceed the trained matrix the delta introduces new ids.
+#[derive(Debug, Clone, Default)]
+pub struct RatingDelta {
+    /// Row count the delta requires of the matrix it applies to.
+    pub rows: usize,
+    /// Column count the delta requires of the matrix it applies to.
+    pub cols: usize,
+    /// The delta cells, in arrival order. A later entry for the same
+    /// cell wins over an earlier one (upsert order).
+    pub entries: Vec<Entry>,
+}
+
+impl RatingDelta {
+    /// An empty delta constrained to a `rows` × `cols` matrix.
+    pub fn new(rows: usize, cols: usize) -> RatingDelta {
+        RatingDelta { rows, cols, entries: Vec::new() }
+    }
+
+    /// A delta holding every entry of `data` (e.g. a loaded delta CSV).
+    pub fn from_coo(data: &Coo) -> RatingDelta {
+        RatingDelta { rows: data.rows, cols: data.cols, entries: data.entries.clone() }
+    }
+
+    /// Append one cell, growing the declared dimensions to contain it.
+    pub fn push(&mut self, row: usize, col: usize, val: f32) {
+        self.rows = self.rows.max(row + 1);
+        self.cols = self.cols.max(col + 1);
+        self.entries.push(Entry { row: row as u32, col: col as u32, val });
+    }
+
+    /// Number of delta cells.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when the delta holds no cells (and so dirties no blocks).
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// True when the delta reaches row/column ids outside `rows` × `cols`
+    /// — applying it grows the matrix and moves every block boundary.
+    pub fn grows(&self, rows: usize, cols: usize) -> bool {
+        self.rows > rows || self.cols > cols
+    }
+
+    /// Upsert the delta into `base`: existing cells are replaced in
+    /// place (preserving `base`'s entry order), new cells are appended
+    /// at the end in delta order, and the dimensions grow to the max of
+    /// both. When a cell appears more than once in `base` the *last*
+    /// occurrence is the one replaced — the same convention
+    /// [`append_delta`] applies per shard, which keeps the two update
+    /// paths bitwise-aligned.
+    pub fn apply_to(&self, base: &Coo) -> Coo {
+        let mut out = base.clone();
+        out.rows = base.rows.max(self.rows);
+        out.cols = base.cols.max(self.cols);
+        let mut index: HashMap<(u32, u32), usize> =
+            out.entries.iter().enumerate().map(|(n, e)| ((e.row, e.col), n)).collect();
+        for e in &self.entries {
+            match index.entry((e.row, e.col)) {
+                std::collections::hash_map::Entry::Occupied(o) => {
+                    out.entries[*o.get()].val = e.val;
+                }
+                std::collections::hash_map::Entry::Vacant(v) => {
+                    v.insert(out.entries.len());
+                    out.entries.push(*e);
+                }
+            }
+        }
+        out
+    }
+
+    /// Project the delta through `grid` onto canonical block indices:
+    /// the set of blocks an incremental update must re-sample. Routing
+    /// uses [`Grid::block_of`] — the exact arithmetic of
+    /// [`Grid::split`] — so a dirty set plus the clean complement is
+    /// always a partition of the grid. A delta that grows past the
+    /// grid's dimensions dirties **every** block (growth moves block
+    /// boundaries, so no block's membership is stable).
+    pub fn dirty_blocks(&self, grid: &Grid) -> BTreeSet<(usize, usize)> {
+        let mut out = BTreeSet::new();
+        if self.grows(grid.rows, grid.cols) {
+            for i in 0..grid.i_blocks {
+                for j in 0..grid.j_blocks {
+                    out.insert((i, j));
+                }
+            }
+            return out;
+        }
+        for e in &self.entries {
+            let id = grid.block_of(e.row as usize, e.col as usize);
+            out.insert((id.i, id.j));
+        }
+        out
+    }
+}
+
+/// Summary of a completed [`append_delta`], for CLI reporting.
+#[derive(Debug, Clone)]
+pub struct AppendReport {
+    /// The store's revision after the append (`previous + 1`).
+    pub revision: u64,
+    /// Shard files rewritten (the dirty blocks; all of them when the
+    /// delta grew the matrix).
+    pub rewritten: usize,
+    /// Delta cells folded in.
+    pub delta_nnz: usize,
+    /// Total ratings in the store after the append.
+    pub nnz: usize,
+    /// Matrix shape after the append.
+    pub shape: (usize, usize),
+    /// True when the delta grew the matrix (every shard was rewritten
+    /// on the re-derived grid).
+    pub grown: bool,
+}
+
+/// Decode a shard file's 12-byte LE records into a block-local, raw
+/// (uncentred) `Coo` — the writer-side inverse of `encode_block`, needed
+/// here because the reader path (`ShardStore::read_block`) centres.
+fn decode_raw(bytes: &[u8], rows: usize, cols: usize) -> Coo {
+    let mut coo = Coo::new(rows, cols);
+    coo.entries.reserve(bytes.len() / RECORD_BYTES as usize);
+    for rec in bytes.chunks_exact(RECORD_BYTES as usize) {
+        coo.entries.push(Entry {
+            row: u32::from_le_bytes(rec[0..4].try_into().expect("4-byte slice")),
+            col: u32::from_le_bytes(rec[4..8].try_into().expect("4-byte slice")),
+            val: f32::from_le_bytes(rec[8..12].try_into().expect("4-byte slice")),
+        });
+    }
+    coo
+}
+
+/// Read shard `(i, j)`'s raw bytes, verifying size and checksum against
+/// the manifest — corruption fails the append typed, before any write.
+fn read_shard_raw(dir: &Path, manifest: &Manifest, idx: usize) -> Result<Vec<u8>, StoreError> {
+    let meta = &manifest.shards[idx];
+    let path = dir.join(&meta.file);
+    let bytes = match std::fs::read(&path) {
+        Ok(b) => b,
+        Err(source) if source.kind() == std::io::ErrorKind::NotFound => {
+            return Err(StoreError::MissingShard { path })
+        }
+        Err(source) => return Err(StoreError::Io { path, source }),
+    };
+    if bytes.len() as u64 != meta.bytes() {
+        return Err(StoreError::SizeMismatch {
+            path,
+            expected: meta.bytes(),
+            found: bytes.len() as u64,
+        });
+    }
+    let found = fnv1a64(&bytes);
+    if found != meta.checksum {
+        return Err(StoreError::ChecksumMismatch { path, expected: meta.checksum, found });
+    }
+    Ok(bytes)
+}
+
+/// Fold `delta` into the ingested store at `dir` — the `bmf-pp ingest
+/// --append` engine.
+///
+/// Same-shape deltas rewrite **only** the dirty shards: each is read
+/// back (size + checksum verified), upserted in block-local coordinates
+/// with [`RatingDelta::apply_to`]'s exact ordering convention, and
+/// atomically replaced; clean shards are never touched. A delta that
+/// grows the matrix rewrites every shard on the grid re-derived for the
+/// new shape (same block counts). Either way the manifest's `revision`
+/// is bumped by exactly one and its `global_mean` is left unchanged —
+/// the centring mean is pinned at first ingest so checkpoints seeded
+/// from this store stay bitwise-valid priors.
+pub fn append_delta(delta: &RatingDelta, dir: &Path) -> Result<AppendReport, StoreError> {
+    let mut manifest = Manifest::load(dir)?;
+    let (gi, gj) = manifest.grid;
+    let grown = delta.grows(manifest.rows, manifest.cols);
+    let rewritten = if grown {
+        append_grown(delta, dir, &mut manifest)?
+    } else {
+        append_in_place(delta, dir, &mut manifest)?
+    };
+    manifest.nnz = manifest.shards.iter().map(|s| s.nnz).sum();
+    manifest.revision += 1;
+    manifest.save(dir)?;
+    debug_assert_eq!(manifest.shards.len(), gi * gj);
+    Ok(AppendReport {
+        revision: manifest.revision,
+        rewritten,
+        delta_nnz: delta.len(),
+        nnz: manifest.nnz,
+        shape: (manifest.rows, manifest.cols),
+        grown,
+    })
+}
+
+/// Same-shape append: upsert into dirty shards only.
+fn append_in_place(
+    delta: &RatingDelta,
+    dir: &Path,
+    manifest: &mut Manifest,
+) -> Result<usize, StoreError> {
+    let (gi, gj) = manifest.grid;
+    let grid = Grid::new(manifest.rows, manifest.cols, gi, gj);
+    // group delta cells by block, preserving delta order within each
+    let mut by_block: BTreeMap<(usize, usize), Vec<Entry>> = BTreeMap::new();
+    for e in &delta.entries {
+        let id = grid.block_of(e.row as usize, e.col as usize);
+        by_block.entry((id.i, id.j)).or_default().push(*e);
+    }
+    for (&(i, j), cells) in &by_block {
+        let idx = i * gj + j;
+        let (brows, bcols) = (manifest.shards[idx].rows, manifest.shards[idx].cols);
+        let bytes = read_shard_raw(dir, manifest, idx)?;
+        let mut block = decode_raw(&bytes, brows, bcols);
+        let (r0, _) = grid.row_range(i);
+        let (c0, _) = grid.col_range(j);
+        // last duplicate wins on collision — apply_to's convention
+        let mut index: HashMap<(u32, u32), usize> =
+            block.entries.iter().enumerate().map(|(n, e)| ((e.row, e.col), n)).collect();
+        for e in cells {
+            let local = (e.row - r0 as u32, e.col - c0 as u32);
+            match index.entry(local) {
+                std::collections::hash_map::Entry::Occupied(o) => {
+                    block.entries[*o.get()].val = e.val;
+                }
+                std::collections::hash_map::Entry::Vacant(v) => {
+                    v.insert(block.entries.len());
+                    block.entries.push(Entry { row: local.0, col: local.1, val: e.val });
+                }
+            }
+        }
+        let new_bytes = encode_block(&block);
+        atomic_write(&dir.join(&manifest.shards[idx].file), &new_bytes)?;
+        manifest.shards[idx].nnz = block.nnz();
+        manifest.shards[idx].checksum = fnv1a64(&new_bytes);
+    }
+    Ok(by_block.len())
+}
+
+/// Growth append: reconstruct the full raw matrix (block-major — the
+/// per-block entry order, which is all training ever sees, is preserved
+/// exactly), upsert, and re-split on the grid derived for the new shape.
+fn append_grown(
+    delta: &RatingDelta,
+    dir: &Path,
+    manifest: &mut Manifest,
+) -> Result<usize, StoreError> {
+    use crate::partition::grid::BlockId;
+    use crate::store::manifest::shard_file_name;
+    use crate::store::ShardMeta;
+    let (gi, gj) = manifest.grid;
+    let old_grid = Grid::new(manifest.rows, manifest.cols, gi, gj);
+    let mut base = Coo::new(manifest.rows, manifest.cols);
+    for idx in 0..manifest.shards.len() {
+        let meta = manifest.shards[idx].clone();
+        let bytes = read_shard_raw(dir, manifest, idx)?;
+        let (r0, _) = old_grid.row_range(meta.i);
+        let (c0, _) = old_grid.col_range(meta.j);
+        for e in decode_raw(&bytes, meta.rows, meta.cols).entries {
+            base.entries.push(Entry {
+                row: e.row + r0 as u32,
+                col: e.col + c0 as u32,
+                val: e.val,
+            });
+        }
+    }
+    let updated = delta.apply_to(&base);
+    if gi > updated.rows || gj > updated.cols {
+        // unreachable for growth, but keep the typed guard
+        return Err(StoreError::InvalidGrid { gi, gj, rows: updated.rows, cols: updated.cols });
+    }
+    let new_grid = Grid::new(updated.rows, updated.cols, gi, gj);
+    let blocks = new_grid.split(&updated);
+    let mut shards = Vec::with_capacity(gi * gj);
+    for (i, row) in blocks.iter().enumerate() {
+        for (j, block) in row.iter().enumerate() {
+            let bytes = encode_block(block);
+            let file = shard_file_name(i, j);
+            atomic_write(&dir.join(&file), &bytes)?;
+            let (rows, cols) = new_grid.block_shape(BlockId { i, j });
+            shards.push(ShardMeta {
+                i,
+                j,
+                rows,
+                cols,
+                nnz: block.nnz(),
+                checksum: fnv1a64(&bytes),
+                file,
+            });
+        }
+    }
+    manifest.rows = updated.rows;
+    manifest.cols = updated.cols;
+    manifest.shards = shards;
+    Ok(gi * gj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::{ingest, ShardStore};
+    use std::path::PathBuf;
+
+    fn toy() -> Coo {
+        let mut c = Coo::new(6, 5);
+        for (r, col, v) in
+            [(0, 0, 1.0), (1, 3, 2.5), (2, 2, -0.5), (3, 4, 4.0), (5, 1, 3.0), (5, 4, 0.25)]
+        {
+            c.push(r, col, v as f32);
+        }
+        c
+    }
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("bmfpp_online_delta_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    #[test]
+    fn dirty_blocks_match_split_membership() {
+        let data = toy();
+        let grid = Grid::new(6, 5, 3, 2);
+        let delta = RatingDelta::from_coo(&data);
+        let dirty = delta.dirty_blocks(&grid);
+        let blocks = grid.split(&data);
+        for i in 0..3 {
+            for j in 0..2 {
+                assert_eq!(
+                    dirty.contains(&(i, j)),
+                    blocks[i][j].nnz() > 0,
+                    "block ({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn growth_dirties_every_block() {
+        let grid = Grid::new(6, 5, 2, 2);
+        let mut delta = RatingDelta::new(0, 0);
+        delta.push(6, 0, 1.0); // row 6 is outside a 6-row matrix
+        assert_eq!(delta.dirty_blocks(&grid).len(), 4);
+    }
+
+    #[test]
+    fn apply_to_upserts_in_place_and_appends_new_at_end() {
+        let base = toy();
+        let mut delta = RatingDelta::new(6, 5);
+        delta.push(1, 3, 9.0); // replaces base entry #1 in place
+        delta.push(4, 4, 7.0); // new cell, appended at the end
+        let out = delta.apply_to(&base);
+        assert_eq!((out.rows, out.cols), (6, 5));
+        assert_eq!(out.nnz(), base.nnz() + 1);
+        assert_eq!(out.entries[1], Entry { row: 1, col: 3, val: 9.0 });
+        assert_eq!(*out.entries.last().unwrap(), Entry { row: 4, col: 4, val: 7.0 });
+        // untouched entries keep their exact position and bits
+        assert_eq!(out.entries[0], base.entries[0]);
+        assert_eq!(out.entries[2..6], base.entries[2..6]);
+    }
+
+    #[test]
+    fn apply_to_last_delta_entry_wins() {
+        let base = toy();
+        let mut delta = RatingDelta::new(6, 5);
+        delta.push(4, 4, 1.0);
+        delta.push(4, 4, 2.0); // same new cell twice: later wins, once
+        let out = delta.apply_to(&base);
+        assert_eq!(out.nnz(), base.nnz() + 1);
+        assert_eq!(*out.entries.last().unwrap(), Entry { row: 4, col: 4, val: 2.0 });
+    }
+
+    #[test]
+    fn append_rewrites_only_dirty_shards_and_bumps_revision() {
+        let data = toy();
+        let dir = temp_dir("dirty_only");
+        ingest(&data, 2, 2, &dir).unwrap();
+        let before: Vec<Vec<u8>> = (0..2)
+            .flat_map(|i| (0..2).map(move |j| (i, j)))
+            .map(|(i, j)| {
+                std::fs::read(dir.join(crate::store::manifest::shard_file_name(i, j))).unwrap()
+            })
+            .collect();
+        // one cell in block (0,0) only (rows 0..3, cols 0..3 of 6x5 / 2x2)
+        let mut delta = RatingDelta::new(6, 5);
+        delta.push(0, 0, 5.0);
+        let report = append_delta(&delta, &dir).unwrap();
+        assert_eq!(report.revision, 1);
+        assert_eq!(report.rewritten, 1);
+        assert!(!report.grown);
+        assert_eq!(report.nnz, data.nnz(), "an upsert of an existing cell adds no entry");
+        let after: Vec<Vec<u8>> = (0..2)
+            .flat_map(|i| (0..2).map(move |j| (i, j)))
+            .map(|(i, j)| {
+                std::fs::read(dir.join(crate::store::manifest::shard_file_name(i, j))).unwrap()
+            })
+            .collect();
+        assert_ne!(before[0], after[0], "dirty shard (0,0) must change");
+        assert_eq!(before[1..], after[1..], "clean shards must be byte-identical");
+        // the store still opens (sizes + checksums consistent)
+        let store = ShardStore::open(&dir).unwrap();
+        assert_eq!(store.revision(), 1);
+        assert_eq!(store.global_mean().to_bits(), data.mean().to_bits(), "mean is pinned");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn append_matches_resident_apply_per_block() {
+        let data = toy();
+        let dir = temp_dir("equivalence");
+        ingest(&data, 2, 2, &dir).unwrap();
+        let mut delta = RatingDelta::new(6, 5);
+        delta.push(1, 3, 9.0); // update in block (0,1)
+        delta.push(4, 0, -2.0); // new cell in block (1,0)
+        append_delta(&delta, &dir).unwrap();
+
+        // resident reference: upsert, centre by the PINNED mean, split
+        let updated = delta.apply_to(&data);
+        let mean = data.mean();
+        let mut centred = updated.clone();
+        for e in &mut centred.entries {
+            e.val -= mean as f32;
+        }
+        let expect = Grid::new(6, 5, 2, 2).split(&centred);
+
+        let store = ShardStore::open(&dir).unwrap();
+        for i in 0..2 {
+            for j in 0..2 {
+                let got = store.read_block(i, j).unwrap();
+                assert_eq!(got.coo.entries, expect[i][j].entries, "block ({i},{j})");
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn grown_append_rewrites_all_on_new_grid_keeping_the_mean() {
+        let data = toy();
+        let dir = temp_dir("grown");
+        ingest(&data, 2, 2, &dir).unwrap();
+        let mut delta = RatingDelta::new(0, 0);
+        delta.push(7, 5, 2.0); // grows to 8 rows x 6 cols
+        let report = append_delta(&delta, &dir).unwrap();
+        assert!(report.grown);
+        assert_eq!(report.rewritten, 4);
+        assert_eq!(report.shape, (8, 6));
+        assert_eq!(report.nnz, data.nnz() + 1);
+        let store = ShardStore::open(&dir).unwrap();
+        assert_eq!((store.rows(), store.cols()), (8, 6));
+        assert_eq!(store.revision(), 1);
+        assert_eq!(
+            store.global_mean().to_bits(),
+            data.mean().to_bits(),
+            "growth must not re-derive the centring mean"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_shard_fails_append_typed_before_writing() {
+        let data = toy();
+        let dir = temp_dir("corrupt");
+        ingest(&data, 2, 2, &dir).unwrap();
+        let shard = dir.join(crate::store::manifest::shard_file_name(0, 0));
+        let mut bytes = std::fs::read(&shard).unwrap();
+        bytes[0] ^= 0xff;
+        std::fs::write(&shard, &bytes).unwrap();
+        let mut delta = RatingDelta::new(6, 5);
+        delta.push(0, 0, 5.0);
+        let err = append_delta(&delta, &dir).unwrap_err();
+        assert!(matches!(err, StoreError::ChecksumMismatch { .. }), "{err}");
+        // manifest untouched: revision still 0
+        assert_eq!(Manifest::load(&dir).unwrap().revision, 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,44 @@
+//! Incremental posterior updates — the serve → collect → retrain →
+//! hot-swap loop.
+//!
+//! Posterior Propagation's defining property is that a block's posterior
+//! becomes the prior for its dependents (Qin et al., arXiv:1703.00734).
+//! This module exploits exactly that for online learning: when a batch of
+//! new or corrected ratings arrives ([`RatingDelta`]), only the blocks
+//! the batch touches need re-sampling — every clean block's saved
+//! posterior passes through unchanged, still serving as the prior for the
+//! dirty blocks downstream of it.
+//!
+//! The loop, end to end:
+//!
+//! 1. **Collect** a [`RatingDelta`] (new cells, corrected cells,
+//!    optionally new row/column ids).
+//! 2. **Project** it onto the block grid: [`RatingDelta::dirty_blocks`]
+//!    maps each delta cell to its canonical block index with the exact
+//!    routing arithmetic of [`Grid::split`](crate::partition::Grid).
+//! 3. **Fold** it into the on-disk shard store ([`append_delta`], the
+//!    `bmf-pp ingest --append` path): only dirty shards are rewritten
+//!    (atomic temp + rename), and the manifest's monotonic `revision` is
+//!    bumped.
+//! 4. **Update**: `Engine::update` / `Engine::update_store`
+//!    (`crate::train::Engine`) build a *pruned* resume — the prior
+//!    checkpoint minus the dirty blocks — so the training DAG re-samples
+//!    exactly the dirty blocks (with their original per-block seeds, on
+//!    the updated data) while every clean block early-returns its
+//!    checkpointed posterior, emitting
+//!    [`TrainEvent::BlockSkippedClean`](crate::train::TrainEvent). The
+//!    aggregation replays in canonical order, so an *empty* delta
+//!    reproduces the prior model bit for bit.
+//! 5. **Hot-swap**: the `bmf-pp update` CLI writes the result as a new
+//!    checkpoint generation; a running `bmf-pp serve` watcher picks it up
+//!    automatically.
+//!
+//! The prior-seeding contract and the double-counting argument (why
+//! clean posteriors can feed `aggregate_part` unchanged) are documented
+//! on [`update`] and in `docs/ARCHITECTURE.md` ("Online updates").
+
+pub mod delta;
+pub mod update;
+
+pub use delta::{append_delta, AppendReport, RatingDelta};
+pub use update::{load_prior, UpdateError, UpdateWarning};

@@ -1,0 +1,342 @@
+//! Incremental-update validation: prior checks, dirty-set pruning, and
+//! the store-revision skew warning.
+//!
+//! `Engine::update` (`crate::train::Engine`) is a *pruned resume*: the
+//! prior checkpoint minus the dirty blocks becomes the resume state, so
+//! the trainer re-samples exactly the dirty blocks (with their original
+//! per-block seeds, over the updated data) and restores every clean
+//! block's posterior unchanged. This module holds the pieces that are
+//! pure data-plumbing — everything that does not need the engine:
+//!
+//! - [`check_prior`]: the prior must be *complete* (every grid block
+//!   present — a mid-run generation cannot seed an update) and must
+//!   match the config's `k` / `grid` / `seed`, the same identity triple
+//!   a plain resume enforces. Violations are typed [`UpdateError`]s.
+//! - [`prune_prior`]: drop the dirty blocks from the checkpoint. What
+//!   remains seeds the run; `aggregate_part`'s prior-division contract
+//!   guarantees a clean posterior fed back as a prior is not counted
+//!   twice (see `docs/ARCHITECTURE.md`, "Online updates").
+//! - [`revision_skew`]: a non-fatal, typed [`UpdateWarning`] when the
+//!   store's append revision has moved more than one step past the
+//!   revision the checkpoint trained against — the delta being applied
+//!   probably does not cover everything that changed.
+//! - [`load_prior`]: fetch the prior from a v3 file or, for a
+//!   checkpoint *directory*, its newest valid generation.
+
+use crate::coordinator::checkpoint::{
+    latest_valid_partial, load_partial, PartialCheckpoint,
+};
+use crate::coordinator::config::TrainConfig;
+use std::collections::BTreeSet;
+use std::path::Path;
+
+/// Why a prior checkpoint cannot seed an incremental update. Every
+/// variant names the prior's value and the conflicting one, mirroring
+/// the resume-path validation messages.
+#[derive(Debug, thiserror::Error)]
+pub enum UpdateError {
+    /// The prior is a mid-run generation: some grid blocks never
+    /// completed, so there is no posterior to pass through for them.
+    /// Resume the interrupted run to completion first.
+    #[error(
+        "prior checkpoint is incomplete ({have} of {need} blocks) — an \
+         incremental update needs a finished run; resume it to completion first"
+    )]
+    IncompletePrior {
+        /// Blocks present in the prior.
+        have: usize,
+        /// Blocks the grid requires.
+        need: usize,
+    },
+    /// The config's latent dimension differs from the prior's.
+    #[error("checkpoint has k={prior}, config wants k={cfg}")]
+    KMismatch {
+        /// Latent dimension recorded in the prior.
+        prior: usize,
+        /// Latent dimension the config requests.
+        cfg: usize,
+    },
+    /// The config's block grid differs from the prior's — blocks would
+    /// not line up, so no posterior could be passed through.
+    #[error(
+        "checkpoint grid {}x{} does not match config grid {}x{}",
+        prior.0, prior.1, cfg.0, cfg.1
+    )]
+    GridMismatch {
+        /// Grid recorded in the prior.
+        prior: (usize, usize),
+        /// Grid the config requests.
+        cfg: (usize, usize),
+    },
+    /// The config's base seed differs from the prior's: dirty blocks
+    /// would re-sample with different per-block seeds, silently changing
+    /// the math of the clean/dirty split.
+    #[error("checkpoint seed {prior} does not match config seed {cfg}")]
+    SeedMismatch {
+        /// Seed recorded in the prior.
+        prior: u64,
+        /// Seed the config requests.
+        cfg: u64,
+    },
+    /// The base data's dimensions differ from what the prior trained on
+    /// (derived from its per-block posterior row counts). A *delta* may
+    /// grow the matrix; the *base* must be the one the prior saw.
+    #[error(
+        "base data is {}x{}, the checkpoint trained on {}x{}",
+        data.0, data.1, prior.0, prior.1
+    )]
+    DataMismatch {
+        /// Dimensions of the base data handed to the update.
+        data: (usize, usize),
+        /// Dimensions reconstructed from the prior checkpoint.
+        prior: (usize, usize),
+    },
+}
+
+/// Non-fatal conditions an update surfaces before running. Typed so CLI
+/// and tests can match on them; the update itself proceeds.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum UpdateWarning {
+    /// The store has been appended to more than once since the prior
+    /// checkpoint was written: the delta being applied now likely does
+    /// not cover the earlier appends, so blocks they touched will be
+    /// treated as clean even though their data changed.
+    #[error(
+        "store is at revision {store} but the checkpoint trained against \
+         revision {checkpoint} — appends between the two are not covered \
+         by this delta; consider a full retrain"
+    )]
+    StoreRevisionAhead {
+        /// The store's current append revision.
+        store: u64,
+        /// Revision recorded in the prior checkpoint.
+        checkpoint: u64,
+    },
+}
+
+/// Detect store/checkpoint revision skew: `Some(warning)` when
+/// `store_revision` is more than one append ahead of the revision the
+/// prior trained against. Exactly one append ahead is the expected state
+/// — the append this very update accounts for — and warns nothing.
+pub fn revision_skew(prior: &PartialCheckpoint, store_revision: u64) -> Option<UpdateWarning> {
+    if store_revision > prior.store_revision.saturating_add(1) {
+        Some(UpdateWarning::StoreRevisionAhead {
+            store: store_revision,
+            checkpoint: prior.store_revision,
+        })
+    } else {
+        None
+    }
+}
+
+/// Validate that `prior` can seed an incremental update under `cfg`:
+/// complete, and matching the config's `k`, `grid`, and `seed` (the
+/// resume identity triple).
+pub fn check_prior(cfg: &TrainConfig, prior: &PartialCheckpoint) -> Result<(), UpdateError> {
+    if prior.k != cfg.k {
+        return Err(UpdateError::KMismatch { prior: prior.k, cfg: cfg.k });
+    }
+    if prior.grid != cfg.grid {
+        return Err(UpdateError::GridMismatch { prior: prior.grid, cfg: cfg.grid });
+    }
+    if prior.seed != cfg.seed {
+        return Err(UpdateError::SeedMismatch { prior: prior.seed, cfg: cfg.seed });
+    }
+    if !prior.is_complete() {
+        // distinct coordinates only — duplicates must not inflate `have`
+        let (gi, gj) = prior.grid;
+        let have = prior
+            .blocks
+            .iter()
+            .map(|b| (b.i, b.j))
+            .collect::<BTreeSet<_>>()
+            .len();
+        return Err(UpdateError::IncompletePrior { have, need: gi * gj });
+    }
+    Ok(())
+}
+
+/// Matrix dimensions the prior trained on, reconstructed from its block
+/// posteriors: rows = Σᵢ rows of block (i,0)'s U posterior, cols = Σⱼ
+/// columns of block (0,j)'s V posterior. Requires a *complete* prior
+/// (run [`check_prior`] first); missing first-row/column blocks make
+/// the reconstruction undercount, which [`UpdateError::DataMismatch`]
+/// then reports against the caller's data.
+pub fn prior_dims(prior: &PartialCheckpoint) -> (usize, usize) {
+    let (gi, gj) = prior.grid;
+    let mut rows = vec![0usize; gi];
+    let mut cols = vec![0usize; gj];
+    for b in &prior.blocks {
+        if b.j == 0 && b.i < gi {
+            rows[b.i] = b.post.u.n;
+        }
+        if b.i == 0 && b.j < gj {
+            cols[b.j] = b.post.v.n;
+        }
+    }
+    (rows.iter().sum(), cols.iter().sum())
+}
+
+/// The pruned resume state: `prior` minus the dirty blocks. The trainer
+/// restores every surviving block's posterior unchanged (emitting
+/// `BlockSkippedClean`) and re-samples exactly the dropped ones.
+/// Generation and store-revision counters carry over, so the update's
+/// checkpoint generations continue the prior's sequence.
+pub fn prune_prior(
+    prior: &PartialCheckpoint,
+    dirty: &BTreeSet<(usize, usize)>,
+) -> PartialCheckpoint {
+    let mut pruned = prior.clone();
+    pruned.blocks.retain(|b| !dirty.contains(&(b.i, b.j)));
+    pruned
+}
+
+/// Load the prior checkpoint for an update: a v3 partial-checkpoint
+/// *file* loads directly; a checkpoint *directory* loads its newest
+/// valid generation (the same discovery `serve` and `--resume` use).
+pub fn load_prior(path: &Path) -> anyhow::Result<PartialCheckpoint> {
+    if path.is_dir() {
+        match latest_valid_partial(path)? {
+            Some((ckpt, from)) => {
+                log::info!("update prior: {}", from.display());
+                Ok(ckpt)
+            }
+            None => anyhow::bail!(
+                "no checkpoint generation found in {} — train with \
+                 --checkpoint-every/--checkpoint-dir first",
+                path.display()
+            ),
+        }
+    } else {
+        Ok(load_partial(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::block_task::BlockPosteriors;
+    use crate::coordinator::checkpoint::PartialBlock;
+    use crate::posterior::RowGaussians;
+
+    /// A complete 2x2 prior over a 5x4 matrix (rows 3+2, cols 2+2), k=1.
+    fn complete_prior() -> PartialCheckpoint {
+        let g = |n: usize| RowGaussians {
+            n,
+            k: 1,
+            mean: vec![0.5; n],
+            prec: vec![4.0; n],
+        };
+        let block = |i: usize, j: usize, rows: usize, cols: usize| PartialBlock {
+            i,
+            j,
+            post: BlockPosteriors { u: g(rows), v: g(cols) },
+        };
+        PartialCheckpoint {
+            k: 1,
+            seed: 7,
+            grid: (2, 2),
+            global_mean: 1.5,
+            generation: 4,
+            store_revision: 2,
+            blocks: vec![
+                block(0, 0, 3, 2),
+                block(0, 1, 3, 2),
+                block(1, 0, 2, 2),
+                block(1, 1, 2, 2),
+            ],
+        }
+    }
+
+    fn cfg() -> TrainConfig {
+        TrainConfig::new(1).with_grid(2, 2).with_seed(7)
+    }
+
+    #[test]
+    fn check_prior_accepts_matching_complete_checkpoint() {
+        assert!(check_prior(&cfg(), &complete_prior()).is_ok());
+    }
+
+    #[test]
+    fn check_prior_names_each_mismatch() {
+        let prior = complete_prior();
+        let err = check_prior(&cfg().with_seed(8), &prior).unwrap_err();
+        assert!(matches!(err, UpdateError::SeedMismatch { prior: 7, cfg: 8 }), "{err}");
+        let err = check_prior(&TrainConfig::new(2).with_grid(2, 2).with_seed(7), &prior)
+            .unwrap_err();
+        assert!(matches!(err, UpdateError::KMismatch { prior: 1, cfg: 2 }), "{err}");
+        let err = check_prior(&TrainConfig::new(1).with_grid(2, 1).with_seed(7), &prior)
+            .unwrap_err();
+        assert!(matches!(err, UpdateError::GridMismatch { .. }), "{err}");
+        assert!(err.to_string().contains("2x2"), "{err}");
+    }
+
+    #[test]
+    fn check_prior_rejects_incomplete_with_counts() {
+        let mut prior = complete_prior();
+        prior.blocks.pop();
+        let err = check_prior(&cfg(), &prior).unwrap_err();
+        assert!(
+            matches!(err, UpdateError::IncompletePrior { have: 3, need: 4 }),
+            "{err}"
+        );
+        assert!(err.to_string().contains("resume it to completion"), "{err}");
+    }
+
+    #[test]
+    fn prior_dims_reconstructs_the_training_shape() {
+        assert_eq!(prior_dims(&complete_prior()), (5, 4));
+    }
+
+    #[test]
+    fn prune_drops_exactly_the_dirty_blocks() {
+        let prior = complete_prior();
+        let dirty: BTreeSet<_> = [(0usize, 1usize), (1, 1)].into_iter().collect();
+        let pruned = prune_prior(&prior, &dirty);
+        let left: Vec<_> = pruned.blocks.iter().map(|b| (b.i, b.j)).collect();
+        assert_eq!(left, vec![(0, 0), (1, 0)]);
+        // run identity and counters carry over untouched
+        assert_eq!(pruned.generation, prior.generation);
+        assert_eq!(pruned.store_revision, prior.store_revision);
+        assert_eq!(pruned.global_mean.to_bits(), prior.global_mean.to_bits());
+    }
+
+    #[test]
+    fn prune_with_empty_dirty_set_is_identity_sized() {
+        let prior = complete_prior();
+        assert_eq!(prune_prior(&prior, &BTreeSet::new()).blocks.len(), prior.blocks.len());
+    }
+
+    #[test]
+    fn revision_skew_warns_only_past_one_append() {
+        let prior = complete_prior(); // store_revision: 2
+        assert_eq!(revision_skew(&prior, 2), None, "no append since: fine");
+        assert_eq!(revision_skew(&prior, 3), None, "the expected single append: fine");
+        let warn = revision_skew(&prior, 5).expect("two extra appends must warn");
+        assert_eq!(warn, UpdateWarning::StoreRevisionAhead { store: 5, checkpoint: 2 });
+        assert!(warn.to_string().contains("revision 5"), "{warn}");
+        assert!(warn.to_string().contains("revision 2"), "{warn}");
+    }
+
+    #[test]
+    fn load_prior_reads_files_and_directories() {
+        use crate::coordinator::checkpoint::{generation_path, save_partial};
+        let dir = std::env::temp_dir()
+            .join(format!("bmfpp_load_prior_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        // empty directory: actionable error
+        let err = load_prior(&dir).unwrap_err();
+        assert!(err.to_string().contains("--checkpoint-every"), "{err}");
+        // directory with generations: newest wins
+        let mut ckpt = complete_prior();
+        for generation in [1u64, 2] {
+            ckpt.generation = generation;
+            save_partial(&ckpt, &generation_path(&dir, generation)).unwrap();
+        }
+        assert_eq!(load_prior(&dir).unwrap().generation, 2);
+        // a direct file path loads that exact generation
+        assert_eq!(load_prior(&generation_path(&dir, 1)).unwrap().generation, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

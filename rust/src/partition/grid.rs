@@ -139,6 +139,18 @@ impl Grid {
         out
     }
 
+    /// Block containing global cell `(row, col)` — the same routing
+    /// arithmetic [`Grid::split`] uses, exposed so a rating delta can be
+    /// projected onto the canonical block indices without splitting the
+    /// whole matrix. `row`/`col` must lie inside the grid's dimensions.
+    pub fn block_of(&self, row: usize, col: usize) -> BlockId {
+        debug_assert!(row < self.rows && col < self.cols, "cell outside the grid");
+        BlockId {
+            i: self.find_block(&self.row_bounds, row),
+            j: self.find_block(&self.col_bounds, col),
+        }
+    }
+
     fn find_block(&self, bounds: &[usize], idx: usize) -> usize {
         // bounds is sorted; find the partition containing idx
         match bounds.binary_search(&idx) {

@@ -301,6 +301,7 @@ mod tests {
             grid: (1, 1),
             global_mean: 0.25,
             generation: 1,
+            store_revision: 0,
             blocks: vec![block(0, 0)],
         };
         save_partial(&complete, &generation_path(&dir, 1)).unwrap();

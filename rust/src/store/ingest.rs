@@ -77,6 +77,7 @@ pub fn ingest(data: &Coo, gi: usize, gj: usize, dir: &Path) -> Result<IngestRepo
         grid: (gi, gj),
         nnz: data.nnz(),
         global_mean,
+        revision: 0,
         shards,
     };
     manifest.save(dir)?;

@@ -191,6 +191,12 @@ pub struct Manifest {
     /// with the bitwise-identical `f64` (JSON `f64` round-trips exactly
     /// through `util::json`).
     pub global_mean: f64,
+    /// Monotonic append counter: 0 at initial ingest, bumped by one each
+    /// time `bmf-pp ingest --append` folds a delta into the store. A
+    /// checkpoint seeded from this store records the revision it saw
+    /// (`PartialCheckpoint::store_revision`), which is how an incremental
+    /// update detects that the store has moved past the checkpoint.
+    pub revision: u64,
     /// Per-block shard records, in ingest (row-major block) order.
     pub shards: Vec<ShardMeta>,
 }
@@ -224,6 +230,8 @@ impl Manifest {
             ("grid_j", self.grid.1.into()),
             ("nnz", self.nnz.into()),
             ("global_mean", self.global_mean.into()),
+            // u64 through a string, the checksum/seed idiom
+            ("revision", Json::Str(self.revision.to_string())),
             ("shards", shards),
         ])
     }
@@ -249,6 +257,15 @@ impl Manifest {
             .get("global_mean")
             .and_then(Json::as_f64)
             .ok_or_else(|| bad("missing global_mean"))?;
+        // absent in manifests written before appends existed: those
+        // stores have never been appended to, so revision 0 is exact
+        let revision = match root.get("revision") {
+            None => 0,
+            Some(r) => r
+                .as_str()
+                .and_then(|s| s.parse::<u64>().ok())
+                .ok_or_else(|| bad("revision is not a u64 string"))?,
+        };
         let shards_json =
             root.get("shards").and_then(Json::as_arr).ok_or_else(|| bad("missing shards"))?;
         if gi == 0 || gj == 0 {
@@ -302,7 +319,7 @@ impl Manifest {
         if total != nnz {
             return Err(bad(&format!("shard nnz sums to {total}, manifest says {nnz}")));
         }
-        Ok(Manifest { rows, cols, grid: (gi, gj), nnz, global_mean, shards })
+        Ok(Manifest { rows, cols, grid: (gi, gj), nnz, global_mean, revision, shards })
     }
 
     /// Load and parse `dir/manifest.json`.
@@ -361,6 +378,7 @@ mod tests {
             grid: (2, 1),
             nnz: 7,
             global_mean: 3.25,
+            revision: u64::MAX - 5,
             shards: vec![
                 ShardMeta {
                     i: 0,
@@ -401,6 +419,16 @@ mod tests {
         let back =
             Manifest::from_json(&json::parse(&text).unwrap(), Path::new("m.json")).unwrap();
         assert_eq!(back.global_mean.to_bits(), m.global_mean.to_bits());
+    }
+
+    #[test]
+    fn legacy_manifest_without_revision_loads_as_revision_zero() {
+        let mut j = sample().to_json();
+        if let Json::Obj(map) = &mut j {
+            map.remove("revision");
+        }
+        let back = Manifest::from_json(&j, Path::new("m.json")).unwrap();
+        assert_eq!(back.revision, 0);
     }
 
     #[test]

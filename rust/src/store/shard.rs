@@ -122,6 +122,14 @@ impl ShardStore {
         self.manifest.global_mean
     }
 
+    /// The store's append revision: 0 at initial ingest, +1 per
+    /// `ingest --append`. Checkpoints seeded from this store record the
+    /// revision they trained against (see
+    /// [`Manifest::revision`](super::Manifest)).
+    pub fn revision(&self) -> u64 {
+        self.manifest.revision
+    }
+
     /// The store directory.
     pub fn dir(&self) -> &Path {
         &self.dir

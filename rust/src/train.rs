@@ -19,11 +19,17 @@
 //!   [`Engine::train_store`]: blocks stream from per-block shard files
 //!   through a `TrainConfig::cache_bytes`-budgeted cache, producing a
 //!   posterior bitwise-identical to the resident run.
+//! - Incremental updates ([`RatingDelta`], [`append_delta`],
+//!   [`Engine::update`] / [`Engine::update_store`]) re-sample only the
+//!   blocks a batch of new ratings touches, passing clean posteriors
+//!   through unchanged — the serve → collect → retrain → hot-swap loop
+//!   (full story in [`crate::online`]).
 //!
 //! This module re-exports the coordinator layer; the deep
 //! `bmf_pp::coordinator::*` paths keep working for existing code.
 
 pub use crate::coordinator::checkpoint;
+pub use crate::online::{append_delta, AppendReport, RatingDelta, UpdateError, UpdateWarning};
 pub use crate::coordinator::{
     AdmissionPolicy, BackendSpec, CancelInfo, ConfigError, Engine, FactorSide, Factorizer,
     FailInfo, FitOutcome, JobId, JobSnapshot, JobStatus, PpFactorizer, PpPhase, Priority,

@@ -1,0 +1,194 @@
+//! Incremental-update suite: `Engine::update` must be a *pruned resume* —
+//! an empty delta reproduces the prior posterior bit for bit, a delta
+//! confined to one block re-samples exactly that block, and the
+//! store-backed path (`ingest --append` + `update --store`) lands on the
+//! same bits as the resident one.
+
+use bmf_pp::coordinator::{BackendSpec, Engine, TrainConfig, TrainOutcome, TrainResult};
+use bmf_pp::data::generator::SyntheticDataset;
+use bmf_pp::data::split::holdout_split_covered;
+use bmf_pp::data::sparse::Coo;
+use bmf_pp::online::{append_delta, load_prior, RatingDelta};
+use bmf_pp::partition::Grid;
+use bmf_pp::posterior::PosteriorModel;
+use bmf_pp::store::{ingest, ShardStore};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Unique scratch directory, removed on drop.
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> TempDir {
+        let path = std::env::temp_dir().join(format!(
+            "bmfpp_online_{tag}_{}_{}",
+            std::process::id(),
+            std::thread::current().name().unwrap_or("t").replace("::", "_")
+        ));
+        std::fs::remove_dir_all(&path).ok();
+        std::fs::create_dir_all(&path).unwrap();
+        TempDir(path)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+fn dataset() -> (Coo, usize) {
+    let ds = SyntheticDataset::by_name("movielens", 0.0015, 91).unwrap();
+    let (train, _test) = holdout_split_covered(&ds.ratings, 0.2, 7);
+    (train, ds.k)
+}
+
+/// The shared config every leg of a test must agree on (same k, grid,
+/// seed, tau — the update path checks the first three against the prior).
+fn config(k: usize) -> TrainConfig {
+    TrainConfig::new(k)
+        .with_grid(2, 2)
+        .with_sweeps(4, 8)
+        .with_tau(1.5)
+        .with_seed(91)
+        .with_backend(BackendSpec::Native)
+}
+
+fn run_to_completion(
+    session: anyhow::Result<bmf_pp::coordinator::Session>,
+) -> TrainResult {
+    match session.and_then(|s| s.wait()).unwrap() {
+        TrainOutcome::Completed(result) => *result,
+        other => panic!("run did not complete: {other:?}"),
+    }
+}
+
+/// Exact posterior comparison: both marginal sides (means *and*
+/// precisions), the factor caches, and the global mean, all by bits.
+fn assert_bitwise(a: &PosteriorModel, b: &PosteriorModel, what: &str) {
+    assert_eq!(a.k, b.k, "{what}: k");
+    assert_eq!(a.global_mean.to_bits(), b.global_mean.to_bits(), "{what}: global_mean");
+    for (side, ga, gb) in [("u", &a.u_post, &b.u_post), ("v", &a.v_post, &b.v_post)] {
+        assert_eq!(ga.n, gb.n, "{what}: {side}_post.n");
+        for (field, xa, xb) in [("mean", &ga.mean, &gb.mean), ("prec", &ga.prec, &gb.prec)] {
+            assert_eq!(xa.len(), xb.len(), "{what}: {side}_post.{field} len");
+            for i in 0..xa.len() {
+                assert_eq!(
+                    xa[i].to_bits(),
+                    xb[i].to_bits(),
+                    "{what}: {side}_post.{field}[{i}]: {} vs {}",
+                    xa[i],
+                    xb[i]
+                );
+            }
+        }
+    }
+    for (side, fa, fb) in [("u", &a.u_mean, &b.u_mean), ("v", &a.v_mean, &b.v_mean)] {
+        assert_eq!(fa.len(), fb.len(), "{what}: {side}_mean len");
+        for i in 0..fa.len() {
+            assert_eq!(fa[i].to_bits(), fb[i].to_bits(), "{what}: {side}_mean[{i}]");
+        }
+    }
+}
+
+/// Train the full run with per-sweep checkpointing so the newest
+/// generation is complete, and return (full result, engine, ckpt dir).
+fn full_run(train: &Coo, k: usize) -> (TrainResult, Engine, TempDir) {
+    let ckpt = TempDir::new("prior");
+    let cfg = config(k).with_checkpoint_every(1).with_checkpoint_dir(&ckpt.0);
+    let engine = Engine::new(&cfg.backend, cfg.block_parallelism);
+    let full = run_to_completion(engine.submit(cfg, train));
+    (full, engine, ckpt)
+}
+
+#[test]
+fn empty_delta_update_is_bitwise_noop() {
+    let (train, k) = dataset();
+    let (full, engine, ckpt) = full_run(&train, k);
+
+    let prior = load_prior(&ckpt.0).unwrap();
+    let delta = RatingDelta::new(train.rows, train.cols);
+    assert!(delta.is_empty());
+    let update = run_to_completion(engine.update(config(k), &prior, &delta, &train));
+
+    assert_eq!(update.stats.blocks, 0, "an empty delta must re-sample nothing");
+    assert_eq!(
+        update.stats.blocks_skipped_clean, 4,
+        "all 2x2 blocks must pass through clean"
+    );
+    assert_bitwise(&full.model, &update.model, "empty-delta update");
+}
+
+#[test]
+fn single_block_delta_resamples_only_that_block() {
+    let (train, k) = dataset();
+    let (full, engine, ckpt) = full_run(&train, k);
+    let prior = load_prior(&ckpt.0).unwrap();
+
+    // a delta strictly inside block (1,1): rows/cols of stripe 1 only
+    let grid = Grid::new(train.rows, train.cols, 2, 2);
+    let (r_start, _) = grid.row_range(1);
+    let (c_start, _) = grid.col_range(1);
+    let mut delta = RatingDelta::new(train.rows, train.cols);
+    delta.push(r_start, c_start, 4.5);
+    delta.push(r_start + 1, c_start, 1.0);
+
+    let update = run_to_completion(engine.update(config(k), &prior, &delta, &train));
+    assert_eq!(update.stats.blocks, 1, "exactly block (1,1) is dirty");
+    assert_eq!(update.stats.blocks_skipped_clean, 3);
+
+    // rows and columns of stripe 0 aggregate only clean blocks, so their
+    // marginals — and therefore predictions over stripe-0 × stripe-0 —
+    // must be bitwise-identical to the full run
+    let (_, r_end0) = grid.row_range(0);
+    let (_, c_end0) = grid.col_range(0);
+    for r in (0..r_end0).step_by((r_end0 / 5).max(1)) {
+        for c in (0..c_end0).step_by((c_end0 / 5).max(1)) {
+            assert_eq!(
+                full.model.predict(r, c).to_bits(),
+                update.model.predict(r, c).to_bits(),
+                "untouched ({r},{c}) prediction drifted"
+            );
+        }
+    }
+    for i in 0..r_end0 * k {
+        assert_eq!(
+            full.model.u_post.mean[i].to_bits(),
+            update.model.u_post.mean[i].to_bits(),
+            "clean row-stripe posterior drifted at {i}"
+        );
+    }
+}
+
+#[test]
+fn store_update_matches_resident_update_bitwise() {
+    let (train, k) = dataset();
+    let (_full, engine, ckpt) = full_run(&train, k);
+    let prior = load_prior(&ckpt.0).unwrap();
+
+    let grid = Grid::new(train.rows, train.cols, 2, 2);
+    let (r_start, _) = grid.row_range(1);
+    let (c_start, _) = grid.col_range(1);
+    let mut delta = RatingDelta::new(train.rows, train.cols);
+    delta.push(r_start, c_start, 4.5);
+
+    // store path: ingest the base matrix, fold the delta in, update
+    let store_dir = TempDir::new("store");
+    ingest(&train, 2, 2, &store_dir.0).unwrap();
+    let report = append_delta(&delta, &store_dir.0).unwrap();
+    assert_eq!(report.revision, 1, "append must bump the manifest revision");
+    assert_eq!(report.rewritten, 1, "only the dirty shard is rewritten");
+    let store = Arc::new(ShardStore::open(&store_dir.0).unwrap());
+    let via_store =
+        run_to_completion(engine.update_store(config(k), &prior, &delta, store));
+
+    let via_resident = run_to_completion(engine.update(config(k), &prior, &delta, &train));
+
+    assert_eq!(via_store.stats.blocks, 1);
+    assert_eq!(via_resident.stats.blocks, 1);
+    assert_bitwise(
+        &via_resident.model,
+        &via_store.model,
+        "store vs resident update",
+    );
+}

@@ -1,0 +1,112 @@
+#!/usr/bin/env bash
+# End-to-end online-update drill (the CI `online-loop` job) — the full
+# serve → collect → retrain → hot-swap loop through the real binary:
+#
+#   1. ingest a dataset into a shard store and train from it with
+#      --checkpoint-every 1 --checkpoint-dir (the prior generation)
+#   2. start `bmf-pp serve --checkpoint-dir` and record the serving
+#      generation from /stats
+#   3. "collect" new ratings as a delta CSV and fold it into the store
+#      with `ingest --append` (manifest revision bumps, dirty shards
+#      rewritten in place)
+#   4. `bmf-pp update --store`: re-sample only the dirty blocks, seeding
+#      everything else from the prior checkpoint, writing a new
+#      generation into the same directory
+#   5. hammer /predict throughout and wait for /stats to report the newer
+#      generation — the hot-swap must land with zero dropped requests
+#
+# Run from the repository root after `cargo build --release`:
+#
+#   bash scripts/online_drill.sh
+set -euo pipefail
+
+BIN=${BIN:-rust/target/release/bmf-pp}
+PORT=${PORT:-7981}
+BASE="http://127.0.0.1:$PORT"
+WORK=$(mktemp -d "${TMPDIR:-/tmp}/bmfpp_online_drill.XXXXXX")
+SERVE_PID=
+HAMMER_PID=
+cleanup() {
+  if [ -n "$HAMMER_PID" ]; then kill "$HAMMER_PID" 2>/dev/null || true; fi
+  if [ -n "$SERVE_PID" ]; then kill "$SERVE_PID" 2>/dev/null || true; fi
+  rm -rf "$WORK"
+}
+trap cleanup EXIT
+
+SHARDS="$WORK/shards"
+CKPTS="$WORK/ckpts"
+DELTA="$WORK/delta.csv"
+DROPS="$WORK/drops"
+
+echo "== 1/5: ingest + store-backed train into $CKPTS"
+"$BIN" ingest --dataset movielens --scale 0.002 --seed 21 \
+  --grid 2x2 --out "$SHARDS"
+"$BIN" train --store "$SHARDS" --tau 1.5 --burnin 4 --samples 10 \
+  --native --workers 1 --quiet --seed 21 \
+  --checkpoint-every 1 --checkpoint-dir "$CKPTS"
+
+echo "== 2/5: start bmf-pp serve on $BASE"
+"$BIN" serve --checkpoint-dir "$CKPTS" --addr "127.0.0.1:$PORT" --poll-ms 100 &
+SERVE_PID=$!
+for _ in $(seq 1 100); do
+  if curl -sf "$BASE/healthz" > /dev/null 2>&1; then break; fi
+  if ! kill -0 "$SERVE_PID" 2>/dev/null; then
+    echo "FAIL: serve exited before answering /healthz" >&2
+    exit 1
+  fi
+  sleep 0.1
+done
+curl -sf "$BASE/healthz" | grep -q '"ok":true'
+GEN0=$(curl -sf "$BASE/stats" | sed -n 's/.*"generation":"\([0-9]*\)".*/\1/p')
+if [ -z "$GEN0" ]; then
+  echo "FAIL: /stats did not report a generation" >&2
+  exit 1
+fi
+echo "   serving generation $GEN0"
+
+# hammer /predict for the rest of the drill; every failure is a dropped
+# request and fails the run
+: > "$DROPS"
+(
+  while :; do
+    curl -sf "$BASE/predict?row=0&col=0" > /dev/null 2>&1 || echo drop >> "$DROPS"
+    sleep 0.02
+  done
+) &
+HAMMER_PID=$!
+
+echo "== 3/5: collect a delta and fold it into the store"
+printf 'row,col,value\n0,0,4.5\n1,2,1.0\n2,1,3.5\n' > "$DELTA"
+"$BIN" ingest --append --delta "$DELTA" --out "$SHARDS" | tee "$WORK/append.log"
+grep -q 'manifest revision 1' "$WORK/append.log"
+
+echo "== 4/5: incremental update from the prior checkpoint"
+"$BIN" update --from "$CKPTS" --store "$SHARDS" --delta "$DELTA" \
+  --tau 1.5 --burnin 4 --samples 10 --native --workers 1 --quiet \
+  | tee "$WORK/update.log"
+grep -q 'passed through clean' "$WORK/update.log"
+
+echo "== 5/5: wait for the hot-swap, require zero dropped requests"
+GEN1="$GEN0"
+for _ in $(seq 1 300); do
+  GEN1=$(curl -sf "$BASE/stats" | sed -n 's/.*"generation":"\([0-9]*\)".*/\1/p')
+  if [ -n "$GEN1" ] && [ "$GEN1" -gt "$GEN0" ]; then break; fi
+  sleep 0.1
+done
+if [ -z "$GEN1" ] || [ "$GEN1" -le "$GEN0" ]; then
+  echo "FAIL: updated generation never swapped in (still $GEN1)" >&2
+  exit 1
+fi
+kill "$HAMMER_PID" 2>/dev/null || true
+wait "$HAMMER_PID" 2>/dev/null || true
+HAMMER_PID=
+DROPPED=$(wc -l < "$DROPS")
+if [ "$DROPPED" -ne 0 ]; then
+  echo "FAIL: $DROPPED request(s) dropped during the update/swap" >&2
+  exit 1
+fi
+curl -sf "$BASE/predict?row=0&col=0" | grep -q '"value":'
+curl -sf -X POST "$BASE/shutdown" | grep -q '"stopping":true'
+wait "$SERVE_PID"
+SERVE_PID=
+echo "PASS: online drill (swap $GEN0 -> $GEN1, 0 dropped requests)"
