@@ -54,6 +54,7 @@ fn independent_blocks_rmse(
                 sweep: bmf_pp::coordinator::SweepMode::Lockstep,
                 chunk_rows: 256,
                 staleness: 0,
+                precision: bmf_pp::gibbs::GibbsPrecision::F64,
             };
             let (post, _) =
                 run_block(&backend, &data, &cfg, None, None, Default::default()).unwrap();

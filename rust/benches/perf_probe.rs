@@ -20,11 +20,17 @@
 //!        `Engine::update` at ~1% and ~10% dirty ratings (deltas packed
 //!        into whole blocks of a 4x4 grid) against a full retrain of the
 //!        same config, plus the fraction of blocks actually re-sampled.
+//!   P10 — kernel_bench: the optimized row-sampling kernel (`RowSampler`,
+//!        scratch arena + packed-triangle accumulation + packed Cholesky)
+//!        vs the retained naive reference (`sample_rows_reference`) on a
+//!        256x256 block at density 0.12, k in {8, 16, 32} — rows/s and
+//!        nnz/s per k, with the k=16 numbers as the gated headline
+//!        metrics and the speedup ratios as informational extras.
 //!
 //!     cargo bench --bench perf_probe
 //!
 //! With `--json` (the CI bench-snapshot job) the run additionally writes
-//! `bench_results/BENCH_PR9.json` — a flat machine-readable snapshot
+//! `bench_results/BENCH_PR10.json` — a flat machine-readable snapshot
 //! (throughput, comm_overlap_secs, queue_wait_secs, shard_cache_hit_rate,
 //! plus every probe result) that future PRs diff against the previous
 //! snapshot via `scripts/bench_gate.sh`.
@@ -35,7 +41,7 @@ use bmf_pp::coordinator::config::auto_tau;
 use bmf_pp::coordinator::Engine as TrainEngine;
 use bmf_pp::coordinator::{BackendSpec, SweepMode, TrainConfig};
 use bmf_pp::data::sparse::{Coo, Csr};
-use bmf_pp::gibbs::native::sample_side_native;
+use bmf_pp::gibbs::native::{sample_rows_reference, sample_side_native, GibbsPrecision, RowSampler};
 use bmf_pp::posterior::RowGaussians;
 use bmf_pp::rng::{normal::standard_normal_vec, Rng};
 #[cfg(feature = "pjrt")]
@@ -154,7 +160,7 @@ fn main() {
         let mut times = Vec::new();
         for _ in 0..30 {
             let sw = Stopwatch::start();
-            sample_side_native(&csr, &v, k, &prior, 2.0, &noise);
+            sample_side_native(&csr, &v, k, &prior, 2.0, &noise).unwrap();
             times.push(sw.secs());
         }
         let med = median(&mut times);
@@ -403,11 +409,75 @@ fn main() {
         std::fs::remove_dir_all(&ckpt_dir).ok();
     }
 
+    println!("\nP10 — kernel_bench: optimized RowSampler vs naive reference (256x256, 12%)");
+    {
+        let (n, d) = (256usize, 256usize);
+        for k in [8usize, 16, 32] {
+            let block = random_block(n, d, 0.12, 9);
+            let csr = Csr::from_coo(&block);
+            let nnz = block.nnz();
+            let mut rng = Rng::seed_from_u64(10);
+            let v = standard_normal_vec(&mut rng, d * k);
+            let prior = RowGaussians::standard(n, k, 2.0);
+            let noise = standard_normal_vec(&mut rng, n * k);
+            let mut samples = vec![0.0f32; n * k];
+            let mut means = vec![0.0f32; n * k];
+
+            // optimized: one arena reused across reps, like a real sweep
+            let mut sampler = RowSampler::new(k, GibbsPrecision::F64);
+            sampler
+                .sample_rows_into(&csr, 0..n, &v, &prior, 2.0, &noise, &mut samples, &mut means)
+                .unwrap(); // warm caches + page in buffers
+            let mut opt_times = Vec::new();
+            for _ in 0..30 {
+                let sw = Stopwatch::start();
+                sampler
+                    .sample_rows_into(
+                        &csr, 0..n, &v, &prior, 2.0, &noise, &mut samples, &mut means,
+                    )
+                    .unwrap();
+                opt_times.push(sw.secs());
+            }
+            let opt = median(&mut opt_times);
+
+            let mut ref_times = Vec::new();
+            for _ in 0..30 {
+                let sw = Stopwatch::start();
+                sample_rows_reference(
+                    &csr, 0..n, &v, k, &prior, 2.0, &noise, &mut samples, &mut means,
+                )
+                .unwrap();
+                ref_times.push(sw.secs());
+            }
+            let naive = median(&mut ref_times);
+
+            let rows_per_sec = n as f64 / opt;
+            let nnz_per_sec = nnz as f64 / opt;
+            let speedup = naive / opt.max(1e-12);
+            println!(
+                "  k={k:<2} optimized {:.3}ms ({:.2}M rows/s, {:.2}M nnz/s)  \
+                 reference {:.3}ms  speedup {speedup:.2}x",
+                opt * 1e3,
+                rows_per_sec / 1e6,
+                nnz_per_sec / 1e6,
+                naive * 1e3,
+            );
+            results.push((format!("p10_kernel_rows_per_sec_k{k}"), rows_per_sec));
+            results.push((format!("p10_kernel_nnz_per_sec_k{k}"), nnz_per_sec));
+            results.push((format!("p10_kernel_speedup_k{k}"), speedup));
+            if k == 16 {
+                // the gated headline metrics (see scripts/bench_gate.sh)
+                results.push(("p10_kernel_rows_per_sec".to_string(), rows_per_sec));
+                results.push(("p10_kernel_nnz_per_sec".to_string(), nnz_per_sec));
+            }
+        }
+    }
+
     common::save_json("perf_probe.json", &results);
     // machine-readable snapshot for the CI bench-snapshot artifact
     if std::env::args().any(|a| a == "--json") {
-        common::save_json("BENCH_PR9.json", &results);
-        println!("\nsnapshot written to bench_results/BENCH_PR9.json");
+        common::save_json("BENCH_PR10.json", &results);
+        println!("\nsnapshot written to bench_results/BENCH_PR10.json");
     }
 }
 

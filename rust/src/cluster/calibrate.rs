@@ -36,6 +36,7 @@ fn measure(backend: &BlockBackend, n: usize, d: usize, nnz: usize, k: usize, see
         sweep: crate::coordinator::SweepMode::Lockstep,
         chunk_rows: 256,
         staleness: 0,
+        precision: crate::gibbs::GibbsPrecision::F64,
     };
     let (_, stats) =
         run_block(backend, &data, &cfg, None, None, Default::default()).expect("calibration run");

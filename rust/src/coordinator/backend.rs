@@ -113,7 +113,7 @@ impl BlockBackend {
         match self {
             BlockBackend::Native => {
                 let csr = if transpose { &data.csr_t } else { &data.csr };
-                Ok(sample_side_native(csr, v, prior.k, prior, tau, noise))
+                Ok(sample_side_native(csr, v, prior.k, prior, tau, noise)?)
             }
             #[cfg(feature = "pjrt")]
             BlockBackend::Hlo(engine) => {
@@ -134,7 +134,7 @@ impl BlockBackend {
                             prior.k
                         );
                         let csr = if transpose { &data.csr_t } else { &data.csr };
-                        return Ok(sample_side_native(csr, v, prior.k, prior, tau, noise));
+                        return Ok(sample_side_native(csr, v, prior.k, prior, tau, noise)?);
                     }
                 };
                 let dense = data.dense_padded(pn, pd, transpose);

@@ -13,6 +13,7 @@ use super::engine::FactorSide;
 use super::mailbox::FactorMailbox;
 use super::worker::{pipelined_sweep, sample_side_sharded, ChunkObs};
 use crate::gibbs::hyper::{sample_hyper, NormalWishartPrior};
+use crate::gibbs::native::GibbsPrecision;
 use crate::posterior::{RowGaussians, RunningMoments};
 use crate::rng::{normal::standard_normal_vec, Rng};
 
@@ -115,6 +116,11 @@ pub struct BlockTaskCfg {
     pub chunk_rows: usize,
     /// Staleness bound τ in chunks (pipelined sweeps).
     pub staleness: usize,
+    /// Floating-point regime of the native Gibbs kernel. The default
+    /// [`GibbsPrecision::F64`] participates in every bitwise-equivalence
+    /// contract; [`GibbsPrecision::F32`] trades those contracts for a
+    /// smaller working set (see `docs/PERFORMANCE.md`).
+    pub precision: GibbsPrecision,
 }
 
 /// Observers a block task streams progress through. Both are optional and
@@ -224,6 +230,7 @@ fn run_block_lockstep(
         crate::rng::normal::fill_standard_normal(&mut rng, &mut noise_u);
         let (u_new, _) = sample_side_sharded(
             backend, data, false, &v, prior_u, cfg.tau, &noise_u, cfg.workers,
+            cfg.precision,
         )?;
         u = u_new;
 
@@ -235,6 +242,7 @@ fn run_block_lockstep(
         crate::rng::normal::fill_standard_normal(&mut rng, &mut noise_v);
         let (v_new, _) = sample_side_sharded(
             backend, data, true, &u, prior_v, cfg.tau, &noise_v, cfg.workers,
+            cfg.precision,
         )?;
         v = v_new;
 
@@ -335,7 +343,8 @@ fn run_block_pipelined(
             &mut v_mail,
             cfg.staleness,
             chunk_obs,
-        );
+            cfg.precision,
+        )?;
 
         // refresh the main-thread factor snapshots (epoch is complete, so
         // these reads are immediate and never stale)
@@ -426,6 +435,7 @@ mod tests {
             sweep: SweepMode::Lockstep,
             chunk_rows: 8,
             staleness: 0,
+            precision: GibbsPrecision::F64,
         }
     }
 

@@ -1,6 +1,7 @@
 //! Training configuration for D-BMF+PP.
 
 use super::scheduler::Priority;
+use crate::gibbs::native::GibbsPrecision;
 use crate::testing::fault::FaultPlan;
 use std::path::PathBuf;
 
@@ -273,6 +274,16 @@ pub struct TrainConfig {
     /// after use. Ignored for resident (`Coo`) runs; never changes the
     /// posterior, only residency and disk traffic.
     pub cache_bytes: u64,
+    /// Floating-point regime of the native Gibbs kernel.
+    /// [`GibbsPrecision::F64`] (the default) accumulates and factors in
+    /// f64 and participates in every bitwise-equivalence contract
+    /// (chunk-invariance, τ=0 pipelined≡lockstep, store≡resident).
+    /// [`GibbsPrecision::F32`] keeps f64 accumulation but stores the
+    /// posterior precision and runs the factorization/solves in f32
+    /// (f64 inner products) — a smaller per-row working set at ~1e-3
+    /// relative deviation; it is excluded from the bitwise contracts.
+    /// The HLO backend has its own fixed arithmetic and ignores this.
+    pub kernel_precision: GibbsPrecision,
 }
 
 impl TrainConfig {
@@ -309,6 +320,7 @@ impl TrainConfig {
             fault: None,
             start_paused: false,
             cache_bytes: 0,
+            kernel_precision: GibbsPrecision::F64,
         }
     }
 
@@ -434,6 +446,13 @@ impl TrainConfig {
     /// Bound resident shard bytes for store-backed runs (0 = unbounded).
     pub fn with_cache_bytes(mut self, cache_bytes: u64) -> Self {
         self.cache_bytes = cache_bytes;
+        self
+    }
+
+    /// Select the native Gibbs kernel's floating-point regime (see
+    /// [`TrainConfig::kernel_precision`]).
+    pub fn with_kernel_precision(mut self, precision: GibbsPrecision) -> Self {
+        self.kernel_precision = precision;
         self
     }
 

@@ -822,6 +822,7 @@ fn task_cfg(cfg: &TrainConfig, samples: usize, seed: u64) -> BlockTaskCfg {
         sweep: cfg.sweep,
         chunk_rows: cfg.chunk_rows,
         staleness: cfg.staleness,
+        precision: cfg.kernel_precision,
     }
 }
 

@@ -22,7 +22,7 @@ use super::backend::{BlockBackend, BlockData};
 use super::engine::FactorSide;
 use super::mailbox::FactorMailbox;
 use crate::data::sparse::Csr;
-use crate::gibbs::native::{sample_rows_into, sample_side_native};
+use crate::gibbs::native::{GibbsPrecision, RowSampler, SampleError};
 use crate::posterior::RowGaussians;
 use std::time::Instant;
 
@@ -45,7 +45,13 @@ pub fn shard_bounds(n: usize, workers: usize) -> Vec<(usize, usize)> {
 ///
 /// Updates the `transpose`-selected side's factors given opposite-side
 /// factors `v`, with per-row priors and injected noise; returns (samples,
-/// conditional means) for the full side.
+/// conditional means) for the full side. `mode` selects the kernel's
+/// floating-point regime on the native backend (the HLO backend has its
+/// own fixed f32 arithmetic and ignores it). A non-SPD posterior
+/// precision in any shard surfaces as a typed
+/// [`SampleError`] (smallest failing
+/// row wins, deterministically) instead of panicking the worker thread.
+#[allow(clippy::too_many_arguments)]
 pub fn sample_side_sharded(
     backend: &BlockBackend,
     data: &BlockData,
@@ -55,10 +61,15 @@ pub fn sample_side_sharded(
     tau: f64,
     noise: &[f32],
     workers: usize,
+    mode: GibbsPrecision,
 ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
     let n = if transpose { data.cols() } else { data.rows() };
     let k = prior.k;
     if workers <= 1 || n < 2 * workers {
+        if let BlockBackend::Native = backend {
+            let csr: &Csr = if transpose { &data.csr_t } else { &data.csr };
+            return Ok(RowSampler::new(k, mode).sample_side(csr, v, prior, tau, noise)?);
+        }
         return backend.sample_side(data, transpose, v, prior, tau, noise);
     }
     let bounds = shard_bounds(n, workers);
@@ -68,9 +79,11 @@ pub fn sample_side_sharded(
             let csr: &Csr = if transpose { &data.csr_t } else { &data.csr };
             let mut samples = vec![0.0f32; n * k];
             let mut means = vec![0.0f32; n * k];
-            // scoped threads: each worker samples its shard, sends results
-            // over a channel; the leader gathers (MPI-allgather analogue).
+            // scoped threads: each worker samples its shard through its
+            // own arena, sends results over a channel; the leader gathers
+            // (MPI-allgather analogue).
             let (tx, rx) = std::sync::mpsc::channel();
+            let mut first_err: Option<SampleError> = None;
             crossbeam_utils::thread::scope(|scope| {
                 for (widx, &(a, b)) in bounds.iter().enumerate() {
                     let tx = tx.clone();
@@ -78,18 +91,34 @@ pub fn sample_side_sharded(
                     let noise_shard = &noise[a * k..b * k];
                     let shard = csr.slice_rows(a, b);
                     scope.spawn(move |_| {
-                        let (s, m) =
-                            sample_side_native(&shard, v, k, &prior_shard, tau, noise_shard);
-                        tx.send((widx, a, b, s, m)).expect("gather channel closed");
+                        let res = RowSampler::new(k, mode)
+                            .sample_side(&shard, v, &prior_shard, tau, noise_shard);
+                        tx.send((widx, a, b, res)).expect("gather channel closed");
                     });
                 }
                 drop(tx);
-                for (_widx, a, b, s, m) in rx.iter() {
-                    samples[a * k..b * k].copy_from_slice(&s);
-                    means[a * k..b * k].copy_from_slice(&m);
+                for (_widx, a, b, res) in rx.iter() {
+                    match res {
+                        Ok((s, m)) => {
+                            samples[a * k..b * k].copy_from_slice(&s);
+                            means[a * k..b * k].copy_from_slice(&m);
+                        }
+                        Err(e) => {
+                            // remap the shard-local row to the side's
+                            // global index; keep the smallest failing row
+                            // so the reported error is schedule-invariant
+                            let e = SampleError { row: e.row + a, source: e.source };
+                            if first_err.as_ref().map_or(true, |f| e.row < f.row) {
+                                first_err = Some(e);
+                            }
+                        }
+                    }
                 }
             })
             .expect("worker thread panicked");
+            if let Some(e) = first_err {
+                return Err(e.into());
+            }
             Ok((samples, means))
         }
         #[cfg(feature = "pjrt")]
@@ -142,6 +171,15 @@ pub type ChunkObs<'a> = Option<&'a (dyn Fn(FactorSide, usize, u64) + Sync)>;
 /// sampling) that ran while the U side was still sampling/publishing —
 /// the communication/computation overlap the lockstep schedule cannot
 /// have.
+///
+/// A non-SPD posterior precision surfaces as a typed
+/// [`SampleError`] instead of a panic. A
+/// worker that fails mid-U-half-sweep first publishes zero-filled
+/// buffers for its remaining U chunks — the peers' staleness gates and
+/// the completion clock still resolve (no deadlock), their results are
+/// discarded with the sweep, and the first failing worker's error (a
+/// deterministic function of the data, priors, and worker assignment) is
+/// returned.
 #[allow(clippy::too_many_arguments)]
 pub fn pipelined_sweep(
     data: &BlockData,
@@ -156,7 +194,8 @@ pub fn pipelined_sweep(
     v_mail: &mut FactorMailbox,
     stale_bound: usize,
     chunk_obs: ChunkObs<'_>,
-) -> f64 {
+    mode: GibbsPrecision,
+) -> Result<f64, SampleError> {
     u_mail.begin_epoch();
     v_mail.begin_epoch();
     let w = workers.max(1);
@@ -169,33 +208,48 @@ pub fn pipelined_sweep(
     let csr: &Csr = &data.csr;
     let csr_t: &Csr = &data.csr_t;
 
-    let mut v_spans: Vec<(Instant, Instant)> = Vec::with_capacity(w);
+    let mut v_spans: Vec<Result<(Instant, Instant), SampleError>> = Vec::with_capacity(w);
     crossbeam_utils::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(w);
         for wi in 0..w {
             let ur = u_bounds.get(wi).copied().unwrap_or((0, 0));
             let vr = v_bounds.get(wi).copied().unwrap_or((0, 0));
-            handles.push(scope.spawn(move |_| {
+            handles.push(scope.spawn(move |_| -> Result<(Instant, Instant), SampleError> {
                 let chunk_cap = u_ref.chunk_rows().max(v_ref.chunk_rows()) * k;
                 let mut samples = vec![0.0f32; chunk_cap];
                 let mut means = vec![0.0f32; chunk_cap];
+                // one arena per worker, reused across every chunk of both
+                // half-sweeps — the per-row allocations the old kernel
+                // paid are gone
+                let mut sampler = RowSampler::new(k, mode);
 
                 // ---- U half-sweep: publish every chunk as it finishes ----
                 let v_prev = v_ref.prev();
                 for c in ur.0..ur.1 {
                     let (a, b) = u_ref.chunk_span(c);
                     let len = (b - a) * k;
-                    sample_rows_into(
+                    if let Err(e) = sampler.sample_rows_into(
                         csr,
                         a..b,
                         v_prev,
-                        k,
                         prior_u,
                         tau,
                         noise_u,
                         &mut samples[..len],
                         &mut means[..len],
-                    );
+                    ) {
+                        // peers wait on U publication counts: publish
+                        // zeros for this worker's remaining chunks so
+                        // their gates open, then fail the sweep (all
+                        // published values are discarded on error)
+                        for cz in c..ur.1 {
+                            let (az, bz) = u_ref.chunk_span(cz);
+                            let lz = (bz - az) * k;
+                            samples[..lz].fill(0.0);
+                            u_ref.publish(cz, &samples[..lz]);
+                        }
+                        return Err(e);
+                    }
                     let seq = u_ref.publish(c, &samples[..len]);
                     if let Some(f) = chunk_obs {
                         f(FactorSide::U, c, seq);
@@ -205,7 +259,7 @@ pub fn pipelined_sweep(
                 // ---- V half-sweep: stale-bounded read of the U side ----
                 if vr.0 >= vr.1 {
                     let now = Instant::now();
-                    return (now, now);
+                    return Ok((now, now));
                 }
                 // each worker assembles its own U snapshot — the
                 // in-process stand-in for the per-node receive buffer a
@@ -221,23 +275,24 @@ pub fn pipelined_sweep(
                 for c in vr.0..vr.1 {
                     let (a, b) = v_ref.chunk_span(c);
                     let len = (b - a) * k;
-                    sample_rows_into(
+                    // a V-side failure needs no zero-fill: nothing waits
+                    // on V publication within the failing sweep
+                    sampler.sample_rows_into(
                         csr_t,
                         a..b,
                         &u_view,
-                        k,
                         prior_v,
                         tau,
                         noise_v,
                         &mut samples[..len],
                         &mut means[..len],
-                    );
+                    )?;
                     let seq = v_ref.publish(c, &samples[..len]);
                     if let Some(f) = chunk_obs {
                         f(FactorSide::V, c, seq);
                     }
                 }
-                (started, Instant::now())
+                Ok((started, Instant::now()))
             }));
         }
         for h in handles {
@@ -246,21 +301,29 @@ pub fn pipelined_sweep(
     })
     .expect("pipelined sweep scope");
 
+    // first failing worker wins — worker assignment and the per-row math
+    // are deterministic, so the surfaced error is too
+    let mut spans = Vec::with_capacity(w);
+    for r in v_spans {
+        spans.push(r?);
+    }
+
     // overlap: V-side compute that ran before the last U chunk landed
     let u_done = u_ref.completed_at().expect("U side fully published");
-    v_spans
+    Ok(spans
         .iter()
         .map(|&(start, end)| {
             let end = end.min(u_done);
             if end > start { end.duration_since(start).as_secs_f64() } else { 0.0 }
         })
-        .sum()
+        .sum())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::sparse::Coo;
+    use crate::gibbs::native::sample_side_native;
     use crate::rng::{normal::standard_normal_vec, Rng};
 
     #[test]
@@ -294,12 +357,15 @@ mod tests {
         let prior = RowGaussians::standard(40, k, 1.5);
         let noise = standard_normal_vec(&mut rng, 40 * k);
         let backend = BlockBackend::Native;
-        let (s1, m1) =
-            sample_side_sharded(&backend, &data, false, &v, &prior, 2.0, &noise, 1).unwrap();
+        let (s1, m1) = sample_side_sharded(
+            &backend, &data, false, &v, &prior, 2.0, &noise, 1, GibbsPrecision::F64,
+        )
+        .unwrap();
         for w in [2usize, 3, 4] {
-            let (s, m) =
-                sample_side_sharded(&backend, &data, false, &v, &prior, 2.0, &noise, w)
-                    .unwrap();
+            let (s, m) = sample_side_sharded(
+                &backend, &data, false, &v, &prior, 2.0, &noise, w, GibbsPrecision::F64,
+            )
+            .unwrap();
             // sharding must not change the math at all (same noise rows)
             for i in 0..s.len() {
                 assert!((s[i] - s1[i]).abs() < 1e-5, "w={w} sample[{i}]");
@@ -325,16 +391,19 @@ mod tests {
         let noise_v = standard_normal_vec(&mut rng, 30 * k);
 
         // lockstep reference: full U half-sweep, then full V half-sweep
-        let (u1, _) = sample_side_native(&data.csr, &v0, k, &prior_u, 2.0, &noise_u);
-        let (v1, _) = sample_side_native(&data.csr_t, &u1, k, &prior_v, 2.0, &noise_v);
+        let (u1, _) =
+            sample_side_native(&data.csr, &v0, k, &prior_u, 2.0, &noise_u).unwrap();
+        let (v1, _) =
+            sample_side_native(&data.csr_t, &u1, k, &prior_v, 2.0, &noise_v).unwrap();
 
         for workers in [1usize, 2, 3] {
             let mut u_mail = FactorMailbox::new(40, k, 7, &u0);
             let mut v_mail = FactorMailbox::new(30, k, 5, &v0);
             let overlap = pipelined_sweep(
                 &data, k, 2.0, workers, &prior_u, &prior_v, &noise_u, &noise_v,
-                &mut u_mail, &mut v_mail, 0, None,
-            );
+                &mut u_mail, &mut v_mail, 0, None, GibbsPrecision::F64,
+            )
+            .unwrap();
             assert!(overlap >= 0.0);
             let mut u = vec![0.0f32; 40 * k];
             let mut v = vec![0.0f32; 30 * k];
@@ -371,8 +440,9 @@ mod tests {
         };
         pipelined_sweep(
             &data, k, 1.0, 2, &prior_u, &prior_v, &noise_u, &noise_v,
-            &mut u_mail, &mut v_mail, 1, Some(&obs),
-        );
+            &mut u_mail, &mut v_mail, 1, Some(&obs), GibbsPrecision::F64,
+        )
+        .unwrap();
         let seen = seen.into_inner().unwrap();
         let u_chunks: Vec<usize> =
             seen.iter().filter(|e| e.0 == FactorSide::U).map(|e| e.1).collect();
@@ -400,10 +470,14 @@ mod tests {
         let prior = RowGaussians::standard(36, k, 1.0);
         let noise = standard_normal_vec(&mut rng, 36 * k);
         let backend = BlockBackend::Native;
-        let (s1, _) =
-            sample_side_sharded(&backend, &data, true, &u, &prior, 1.0, &noise, 1).unwrap();
-        let (s3, _) =
-            sample_side_sharded(&backend, &data, true, &u, &prior, 1.0, &noise, 3).unwrap();
+        let (s1, _) = sample_side_sharded(
+            &backend, &data, true, &u, &prior, 1.0, &noise, 1, GibbsPrecision::F64,
+        )
+        .unwrap();
+        let (s3, _) = sample_side_sharded(
+            &backend, &data, true, &u, &prior, 1.0, &noise, 3, GibbsPrecision::F64,
+        )
+        .unwrap();
         for i in 0..s1.len() {
             assert!((s1[i] - s3[i]).abs() < 1e-5);
         }

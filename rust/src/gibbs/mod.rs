@@ -14,4 +14,4 @@ pub mod hyper;
 pub mod native;
 
 pub use hyper::{NormalWishartPrior, sample_hyper};
-pub use native::{sample_side_native, NativeGibbs};
+pub use native::{sample_side_native, GibbsPrecision, NativeGibbs, RowSampler, SampleError};

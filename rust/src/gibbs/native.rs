@@ -4,16 +4,350 @@
 //! `sample_side_native` implements EXACTLY the math of
 //! python/compile/model.py::sample_side, consuming the same injected noise,
 //! so the two paths can be compared bit-for-tolerance on identical inputs.
+//!
+//! The hot path is [`RowSampler`]: a reusable scratch arena (packed
+//! precision triangle, rhs, mean, noise buffers) that samples each row
+//! with zero allocations, accumulating the τ·v_d·v_dᵀ rank-1 updates in a
+//! packed upper-triangle layout that a [`PackedCholesky`] then factors in
+//! place. Its output is **bitwise identical** to the retained naive
+//! kernel [`sample_rows_reference`] (the pre-optimization implementation,
+//! kept as the equivalence oracle and the benchmark baseline) — see
+//! docs/ARCHITECTURE.md §"The Gibbs kernel" for the full contract table.
 
 use crate::data::sparse::Csr;
-use crate::linalg::{Cholesky, Mat};
+use crate::linalg::{Cholesky, Mat, NotPositiveDefinite, PackedCholesky};
 use crate::posterior::RowGaussians;
 use crate::rng::{normal::standard_normal_vec, Rng};
+
+/// Floating-point regime of the per-row Gibbs kernel.
+///
+/// [`GibbsPrecision::F64`] (the default) is the reference regime every
+/// bitwise-equivalence contract in the repo is stated in. With
+/// [`GibbsPrecision::F32`] the per-row precision triangle, Cholesky
+/// factor, and triangular solves use f32 *storage* while every inner
+/// accumulation still runs in f64 — roughly half the per-row triangle
+/// traffic in exchange for results that agree with F64 only to f32
+/// rounding (~1e-3 relative), so it is opt-in
+/// (`TrainConfig::kernel_precision`, CLI `--kernel-f32`) and excluded
+/// from all bitwise contracts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum GibbsPrecision {
+    /// f64 storage and accumulation everywhere (default; bitwise regime).
+    #[default]
+    F64,
+    /// f32 storage for the row's triangle/factor/solves, f64 accumulation
+    /// inside every dot product. Documented-tolerance regime.
+    F32,
+}
+
+/// A row's posterior precision matrix was not positive definite — e.g. a
+/// degenerate propagated prior (zero precision) on a row with no
+/// observations. Carries the failing row so the scheduler's failure path
+/// can report which row of which block broke; surfaced to callers as a
+/// `TrainOutcome::Failed`, never a panic.
+#[derive(Debug, thiserror::Error)]
+#[error("row {row}: posterior precision is not positive definite ({source})")]
+pub struct SampleError {
+    /// Index of the failing row, global to the sampled side.
+    pub row: usize,
+    /// The failing pivot, from the Cholesky factorization.
+    #[source]
+    pub source: NotPositiveDefinite,
+}
+
+/// Reusable per-row sampling arena: one allocation per *chunk*, zero per
+/// row. Holds the packed precision triangle (k(k+1)/2 f64 — ~1.1 KB at
+/// k = 16, L1-resident), the rhs/mean/noise vectors, and the f32 shadow
+/// buffers of the [`GibbsPrecision::F32`] regime.
+///
+/// Construct once per shard/chunk worker and feed it row ranges; the
+/// arena's contents carry no state across rows, so reuse never changes a
+/// result. One conditional Gibbs row update is:
+///
+/// 1. load the prior's precision upper triangle into the packed buffer
+///    and form `rhs = prior_prec · prior_mean`,
+/// 2. accumulate `packed += τ·v_d·v_dᵀ` (upper triangle) and
+///    `rhs += τ·r·v_d` over the row's CSR observations, four
+///    observations per panel,
+/// 3. factor the triangle in place ([`PackedCholesky`]), solve for the
+///    conditional mean, solve `Lᵀε` for the draw.
+pub struct RowSampler {
+    k: usize,
+    mode: GibbsPrecision,
+    chol: PackedCholesky,
+    rhs: Vec<f64>,
+    mean: Vec<f64>,
+    eps: Vec<f64>,
+    /// f32-storage shadow of the packed triangle (F32 regime only).
+    packed32: Vec<f32>,
+    mean32: Vec<f32>,
+    eps32: Vec<f32>,
+}
+
+impl RowSampler {
+    /// Arena for latent dimension `k` in the given precision regime.
+    pub fn new(k: usize, mode: GibbsPrecision) -> RowSampler {
+        let (tri, kv) = if mode == GibbsPrecision::F32 { (k * (k + 1) / 2, k) } else { (0, 0) };
+        RowSampler {
+            k,
+            mode,
+            chol: PackedCholesky::new(k),
+            rhs: vec![0.0; k],
+            mean: vec![0.0; k],
+            eps: vec![0.0; k],
+            packed32: vec![0.0; tri],
+            mean32: vec![0.0; kv],
+            eps32: vec![0.0; kv],
+        }
+    }
+
+    /// Latent dimension of the arena.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Precision regime of the arena.
+    pub fn mode(&self) -> GibbsPrecision {
+        self.mode
+    }
+
+    /// Update the rows in `rows` (global indices into
+    /// `csr`/`prior`/`noise`), writing results into the chunk-local
+    /// `samples`/`means` buffers (each `rows.len() × k`). Rows are
+    /// conditionally independent given `v`, so a chunk's output is
+    /// bitwise identical whether it is sampled alone (the pipelined
+    /// sweep's publish unit) or as part of a full half-sweep.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sample_rows_into(
+        &mut self,
+        csr: &Csr,
+        rows: std::ops::Range<usize>,
+        v: &[f32],
+        prior: &RowGaussians,
+        tau: f64,
+        noise: &[f32],
+        samples: &mut [f32],
+        means: &mut [f32],
+    ) -> Result<(), SampleError> {
+        let k = self.k;
+        let n = csr.rows;
+        assert_eq!(prior.n, n);
+        assert_eq!(prior.k, k);
+        assert_eq!(noise.len(), n * k);
+        assert_eq!(v.len(), csr.cols * k);
+        assert!(rows.end <= n, "row range exceeds the side");
+        assert_eq!(samples.len(), rows.len() * k);
+        assert_eq!(means.len(), rows.len() * k);
+
+        let row0 = rows.start;
+        for i in rows {
+            let packed = self.chol.packed_mut();
+            // 1. prior natural parameters. The precision's upper-triangle
+            //    rows land contiguously in the packed buffer (packed
+            //    row-major upper == packed column-major lower — same
+            //    bytes, so the factorization reads them as L-packed);
+            //    rhs uses the FULL stored row like the reference's
+            //    matvec, in case a stored lower mirror differs bitwise.
+            let pp = &prior.prec[i * k * k..(i + 1) * k * k];
+            let pm = &prior.mean[i * k..(i + 1) * k];
+            let mut off = 0;
+            for a in 0..k {
+                packed[off..off + (k - a)].copy_from_slice(&pp[a * k + a..(a + 1) * k]);
+                off += k - a;
+            }
+            for a in 0..k {
+                let mut s = 0.0f64;
+                for (x, m) in pp[a * k..(a + 1) * k].iter().zip(pm) {
+                    s += x * m;
+                }
+                self.rhs[a] = s;
+            }
+
+            // 2. accumulate observed items over the CSR row
+            let (cols, vals) = csr.row(i);
+            accumulate_observations(packed, &mut self.rhs, k, cols, vals, v, tau);
+
+            // 3. factor + solve in the regime's storage
+            let local = (i - row0) * k;
+            match self.mode {
+                GibbsPrecision::F64 => {
+                    self.chol
+                        .factor_in_place()
+                        .map_err(|source| SampleError { row: i, source })?;
+                    self.mean.copy_from_slice(&self.rhs);
+                    self.chol.solve_in_place(&mut self.mean);
+                    for (e, &x) in self.eps.iter_mut().zip(&noise[i * k..(i + 1) * k]) {
+                        *e = x as f64;
+                    }
+                    self.chol.solve_upper_in_place(&mut self.eps);
+                    for j in 0..k {
+                        samples[local + j] = (self.mean[j] + self.eps[j]) as f32;
+                        means[local + j] = self.mean[j] as f32;
+                    }
+                }
+                GibbsPrecision::F32 => {
+                    // round the f64-accumulated triangle and rhs to f32
+                    // storage once, then factor/solve with f64 inner
+                    // accumulation (documented-tolerance fast path)
+                    for (d, &s) in self.packed32.iter_mut().zip(self.chol.packed().iter()) {
+                        *d = s as f32;
+                    }
+                    for (d, &s) in self.mean32.iter_mut().zip(&self.rhs) {
+                        *d = s as f32;
+                    }
+                    factor_packed_f32(&mut self.packed32, k)
+                        .map_err(|source| SampleError { row: i, source })?;
+                    solve_lower_packed_f32(&self.packed32, k, &mut self.mean32);
+                    solve_upper_packed_f32(&self.packed32, k, &mut self.mean32);
+                    self.eps32.copy_from_slice(&noise[i * k..(i + 1) * k]);
+                    solve_upper_packed_f32(&self.packed32, k, &mut self.eps32);
+                    for j in 0..k {
+                        samples[local + j] = self.mean32[j] + self.eps32[j];
+                        means[local + j] = self.mean32[j];
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Sample a full side (all `csr.rows` rows) into fresh buffers —
+    /// the per-shard entry point of the lockstep half-sweep.
+    pub fn sample_side(
+        &mut self,
+        csr: &Csr,
+        v: &[f32],
+        prior: &RowGaussians,
+        tau: f64,
+        noise: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>), SampleError> {
+        let n = csr.rows;
+        let mut samples = vec![0.0f32; n * self.k];
+        let mut means = vec![0.0f32; n * self.k];
+        self.sample_rows_into(csr, 0..n, v, prior, tau, noise, &mut samples, &mut means)?;
+        Ok((samples, means))
+    }
+}
+
+/// The kernel's inner loop: `packed += τ·v_d·v_dᵀ` (upper triangle) and
+/// `rhs += τ·r·v_d` over one row's observations, four per panel. Per
+/// triangle element the additions land in ascending observation order —
+/// exactly the reference kernel's order — so panelling is a pure
+/// register-tiling change, bitwise invisible.
+#[inline]
+fn accumulate_observations(
+    packed: &mut [f64],
+    rhs: &mut [f64],
+    k: usize,
+    cols: &[u32],
+    vals: &[f32],
+    v: &[f32],
+    tau: f64,
+) {
+    let mut c_panels = cols.chunks_exact(4);
+    let mut r_panels = vals.chunks_exact(4);
+    for (cp, rp) in (&mut c_panels).zip(&mut r_panels) {
+        let w0 = &v[cp[0] as usize * k..][..k];
+        let w1 = &v[cp[1] as usize * k..][..k];
+        let w2 = &v[cp[2] as usize * k..][..k];
+        let w3 = &v[cp[3] as usize * k..][..k];
+        let (r0, r1, r2, r3) = (rp[0] as f64, rp[1] as f64, rp[2] as f64, rp[3] as f64);
+        let mut off = 0;
+        for a in 0..k {
+            let va0 = tau * w0[a] as f64;
+            let va1 = tau * w1[a] as f64;
+            let va2 = tau * w2[a] as f64;
+            let va3 = tau * w3[a] as f64;
+            let row = &mut packed[off..off + (k - a)];
+            for ((((p, &b0), &b1), &b2), &b3) in
+                row.iter_mut().zip(&w0[a..]).zip(&w1[a..]).zip(&w2[a..]).zip(&w3[a..])
+            {
+                let mut x = *p;
+                x += va0 * b0 as f64;
+                x += va1 * b1 as f64;
+                x += va2 * b2 as f64;
+                x += va3 * b3 as f64;
+                *p = x;
+            }
+            let mut r = rhs[a];
+            r += r0 * va0;
+            r += r1 * va1;
+            r += r2 * va2;
+            r += r3 * va3;
+            rhs[a] = r;
+            off += k - a;
+        }
+    }
+    for (c, r) in c_panels.remainder().iter().zip(r_panels.remainder()) {
+        let vd = &v[*c as usize * k..][..k];
+        let rv = *r as f64;
+        let mut off = 0;
+        for a in 0..k {
+            let va = tau * vd[a] as f64;
+            let row = &mut packed[off..off + (k - a)];
+            for (p, &b) in row.iter_mut().zip(&vd[a..]) {
+                *p += va * b as f64;
+            }
+            rhs[a] += rv * va;
+            off += k - a;
+        }
+    }
+}
+
+/// In-place packed Cholesky with f32 storage and f64 inner accumulation —
+/// the [`GibbsPrecision::F32`] regime's factorization.
+fn factor_packed_f32(d: &mut [f32], k: usize) -> Result<(), NotPositiveDefinite> {
+    let off = |j: usize| j * (2 * k - j + 1) / 2;
+    for j in 0..k {
+        for i in j..k {
+            let mut s = d[off(j) + (i - j)] as f64;
+            for t in 0..j {
+                s -= (d[off(t) + (i - t)] as f64) * (d[off(t) + (j - t)] as f64);
+            }
+            if i == j {
+                if s <= 0.0 || !s.is_finite() {
+                    return Err(NotPositiveDefinite { pivot: s, index: j });
+                }
+                d[off(j)] = s.sqrt() as f32;
+            } else {
+                d[off(j) + (i - j)] = (s / d[off(j)] as f64) as f32;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Forward substitution (L y = b) in the f32-storage regime.
+fn solve_lower_packed_f32(d: &[f32], k: usize, b: &mut [f32]) {
+    let off = |j: usize| j * (2 * k - j + 1) / 2;
+    for i in 0..k {
+        let mut s = b[i] as f64;
+        for t in 0..i {
+            s -= (d[off(t) + (i - t)] as f64) * (b[t] as f64);
+        }
+        b[i] = (s / d[off(i)] as f64) as f32;
+    }
+}
+
+/// Back substitution (Lᵀ x = b) in the f32-storage regime.
+fn solve_upper_packed_f32(d: &[f32], k: usize, b: &mut [f32]) {
+    let off = |j: usize| j * (2 * k - j + 1) / 2;
+    for i in (0..k).rev() {
+        let col = &d[off(i)..off(i) + (k - i)];
+        let mut s = b[i] as f64;
+        for t in (i + 1)..k {
+            s -= (col[t - i] as f64) * (b[t] as f64);
+        }
+        b[i] = (s / col[0] as f64) as f32;
+    }
+}
 
 /// One conditional Gibbs update of the N rows of one side, given the D
 /// opposite-side factor rows `v` (row-major d × k, f32 like the runtime).
 ///
-/// Returns (samples, conditional means), both row-major n × k f32.
+/// Returns (samples, conditional means), both row-major n × k f32, or a
+/// typed [`SampleError`] naming the row whose posterior precision was not
+/// positive definite (a degenerate prior — never a panic).
 pub fn sample_side_native(
     csr: &Csr,
     v: &[f32],
@@ -21,20 +355,14 @@ pub fn sample_side_native(
     prior: &RowGaussians,
     tau: f64,
     noise: &[f32],
-) -> (Vec<f32>, Vec<f32>) {
-    let n = csr.rows;
-    let mut samples = vec![0.0f32; n * k];
-    let mut means = vec![0.0f32; n * k];
-    sample_rows_into(csr, 0..n, v, k, prior, tau, noise, &mut samples, &mut means);
-    (samples, means)
+) -> Result<(Vec<f32>, Vec<f32>), SampleError> {
+    RowSampler::new(k, GibbsPrecision::F64).sample_side(csr, v, prior, tau, noise)
 }
 
-/// The chunked core of [`sample_side_native`]: update only the rows in
-/// `rows` (global indices into `csr`/`prior`/`noise`), writing the
-/// results into the chunk-local `samples`/`means` buffers (each
-/// `rows.len() × k`). Rows are conditionally independent given `v`, so a
-/// chunk's output is bitwise identical whether it is sampled alone (the
-/// pipelined sweep's publish unit) or as part of a full half-sweep.
+/// The chunked core of [`sample_side_native`] as a free function: one
+/// arena is built per call, so chunked callers that care about the
+/// per-row allocation win should hold a [`RowSampler`] and call
+/// [`RowSampler::sample_rows_into`] directly.
 #[allow(clippy::too_many_arguments)]
 pub fn sample_rows_into(
     csr: &Csr,
@@ -46,7 +374,29 @@ pub fn sample_rows_into(
     noise: &[f32],
     samples: &mut [f32],
     means: &mut [f32],
-) {
+) -> Result<(), SampleError> {
+    RowSampler::new(k, GibbsPrecision::F64)
+        .sample_rows_into(csr, rows, v, prior, tau, noise, samples, means)
+}
+
+/// The pre-optimization kernel, retained verbatim as the bitwise oracle:
+/// per-row dense precision matrix, allocating Cholesky, allocating
+/// solves. [`RowSampler`] in the [`GibbsPrecision::F64`] regime must
+/// reproduce this bit for bit (property-tested in `tests/kernel.rs`),
+/// and `perf_probe`'s `p10_kernel_*` section measures the optimized
+/// kernel against it.
+#[allow(clippy::too_many_arguments)]
+pub fn sample_rows_reference(
+    csr: &Csr,
+    rows: std::ops::Range<usize>,
+    v: &[f32],
+    k: usize,
+    prior: &RowGaussians,
+    tau: f64,
+    noise: &[f32],
+    samples: &mut [f32],
+    means: &mut [f32],
+) -> Result<(), SampleError> {
     let n = csr.rows;
     assert_eq!(prior.n, n);
     assert_eq!(prior.k, k);
@@ -89,7 +439,7 @@ pub fn sample_rows_into(
             }
         }
 
-        let chol = Cholesky::new(&prec).expect("posterior precision SPD");
+        let chol = Cholesky::new(&prec).map_err(|source| SampleError { row: i, source })?;
         let mean = chol.solve(&rhs);
         let eps: Vec<f64> = noise[i * k..(i + 1) * k].iter().map(|&x| x as f64).collect();
         let draw = chol.sample_with_precision(&mean, &eps);
@@ -99,6 +449,7 @@ pub fn sample_rows_into(
             means[local + j] = mean[j] as f32;
         }
     }
+    Ok(())
 }
 
 /// Plain-BPMF Gibbs sampler over a full (unblocked) rating matrix — the
@@ -195,16 +546,19 @@ impl NativeGibbs {
             k,
         );
 
+        // a freshly hyper-sampled Normal-Wishart prior is SPD by
+        // construction (the hyper sampler itself panics first on
+        // non-finite factors), so a failure here is unreachable
         let prior_u = RowGaussians::broadcast(self.r_rows.rows, &hu.mu, &hu.lambda);
         let noise_u = standard_normal_vec(&mut self.rng, self.r_rows.rows * k);
-        let (u_new, _) =
-            sample_side_native(&self.r_rows, &self.v, k, &prior_u, self.tau, &noise_u);
+        let (u_new, _) = sample_side_native(&self.r_rows, &self.v, k, &prior_u, self.tau, &noise_u)
+            .expect("hyper-sampled prior is SPD");
         self.u = u_new;
 
         let prior_v = RowGaussians::broadcast(self.r_cols.rows, &hv.mu, &hv.lambda);
         let noise_v = standard_normal_vec(&mut self.rng, self.r_cols.rows * k);
-        let (v_new, _) =
-            sample_side_native(&self.r_cols, &self.u, k, &prior_v, self.tau, &noise_v);
+        let (v_new, _) = sample_side_native(&self.r_cols, &self.u, k, &prior_v, self.tau, &noise_v)
+            .expect("hyper-sampled prior is SPD");
         self.v = v_new;
     }
 
@@ -242,7 +596,7 @@ mod tests {
         let csr = Csr::from_coo(&coo);
         let prior = RowGaussians::standard(1, k, 1.0);
         let noise = vec![0.0f32; k];
-        let (_, mean) = sample_side_native(&csr, &v, k, &prior, 100.0, &noise);
+        let (_, mean) = sample_side_native(&csr, &v, k, &prior, 100.0, &noise).unwrap();
         for j in 0..k {
             assert!((mean[j] - u_star[j]).abs() < 0.05, "mean[{j}]={}", mean[j]);
         }
@@ -257,7 +611,7 @@ mod tests {
         let v = standard_normal_vec(&mut rng, d.ratings.cols * k);
         let prior = RowGaussians::standard(csr.rows, k, 2.0);
         let noise = vec![0.0f32; csr.rows * k];
-        let (s, m) = sample_side_native(&csr, &v, k, &prior, 1.5, &noise);
+        let (s, m) = sample_side_native(&csr, &v, k, &prior, 1.5, &noise).unwrap();
         for (a, b) in s.iter().zip(&m) {
             assert!((a - b).abs() < 1e-6);
         }
@@ -275,18 +629,94 @@ mod tests {
         let v = standard_normal_vec(&mut rng, d.ratings.cols * k);
         let prior = RowGaussians::standard(csr.rows, k, 1.0);
         let noise = standard_normal_vec(&mut rng, csr.rows * k);
-        let (full_s, full_m) = sample_side_native(&csr, &v, k, &prior, 2.0, &noise);
+        let (full_s, full_m) = sample_side_native(&csr, &v, k, &prior, 2.0, &noise).unwrap();
         let chunk = 7;
         let mut a = 0;
         while a < csr.rows {
             let b = (a + chunk).min(csr.rows);
             let mut s = vec![0.0f32; (b - a) * k];
             let mut m = vec![0.0f32; (b - a) * k];
-            sample_rows_into(&csr, a..b, &v, k, &prior, 2.0, &noise, &mut s, &mut m);
+            sample_rows_into(&csr, a..b, &v, k, &prior, 2.0, &noise, &mut s, &mut m).unwrap();
             assert_eq!(s[..], full_s[a * k..b * k], "samples of rows {a}..{b}");
             assert_eq!(m[..], full_m[a * k..b * k], "means of rows {a}..{b}");
             a = b;
         }
+    }
+
+    #[test]
+    fn optimized_kernel_matches_reference_bitwise() {
+        // the tentpole contract: the arena/packed/panelled kernel is the
+        // same function as the retained naive reference, to the last bit
+        // (the full property sweep lives in tests/kernel.rs)
+        let d = SyntheticDataset::by_name("movielens", 0.001, 21).unwrap();
+        let csr = Csr::from_coo(&d.ratings);
+        let k = d.k;
+        let mut rng = Rng::seed_from_u64(22);
+        let v = standard_normal_vec(&mut rng, d.ratings.cols * k);
+        let prior = RowGaussians::standard(csr.rows, k, 1.0);
+        let noise = standard_normal_vec(&mut rng, csr.rows * k);
+        let n = csr.rows;
+        let mut s_ref = vec![0.0f32; n * k];
+        let mut m_ref = vec![0.0f32; n * k];
+        sample_rows_reference(&csr, 0..n, &v, k, &prior, 2.5, &noise, &mut s_ref, &mut m_ref)
+            .unwrap();
+        let (s_opt, m_opt) = sample_side_native(&csr, &v, k, &prior, 2.5, &noise).unwrap();
+        assert_eq!(s_opt, s_ref, "samples");
+        assert_eq!(m_opt, m_ref, "means");
+    }
+
+    #[test]
+    fn f32_mode_tracks_f64_within_tolerance() {
+        let d = SyntheticDataset::by_name("movielens", 0.001, 31).unwrap();
+        let csr = Csr::from_coo(&d.ratings);
+        let k = d.k;
+        let mut rng = Rng::seed_from_u64(32);
+        let v = standard_normal_vec(&mut rng, d.ratings.cols * k);
+        let prior = RowGaussians::standard(csr.rows, k, 1.0);
+        let noise = standard_normal_vec(&mut rng, csr.rows * k);
+        let (s64, m64) = RowSampler::new(k, GibbsPrecision::F64)
+            .sample_side(&csr, &v, &prior, 2.0, &noise)
+            .unwrap();
+        let (s32, m32) = RowSampler::new(k, GibbsPrecision::F32)
+            .sample_side(&csr, &v, &prior, 2.0, &noise)
+            .unwrap();
+        for i in 0..s64.len() {
+            assert!(
+                (s64[i] - s32[i]).abs() < 1e-3 * (1.0 + s64[i].abs()),
+                "sample[{i}]: f64={} f32={}",
+                s64[i],
+                s32[i]
+            );
+            assert!((m64[i] - m32[i]).abs() < 1e-3 * (1.0 + m64[i].abs()), "mean[{i}]");
+        }
+    }
+
+    #[test]
+    fn degenerate_prior_returns_typed_error_with_row() {
+        // row 1 has no observations and a zero-precision prior: its
+        // posterior precision is the zero matrix — a typed SampleError
+        // carrying the row, never a panic
+        let mut coo = Coo::new(3, 2);
+        coo.push(0, 0, 1.0);
+        coo.push(2, 1, 2.0);
+        let csr = Csr::from_coo(&coo);
+        let k = 2;
+        let v = vec![0.5f32; 2 * k];
+        let mut prior = RowGaussians::standard(3, k, 1.0);
+        for x in prior.prec[k * k..2 * k * k].iter_mut() {
+            *x = 0.0; // degenerate prior on row 1
+        }
+        let noise = vec![0.0f32; 3 * k];
+        let err = sample_side_native(&csr, &v, k, &prior, 1.0, &noise).unwrap_err();
+        assert_eq!(err.row, 1);
+        assert_eq!(err.source.index, 0);
+        // the reference kernel reports the identical failure
+        let mut s = vec![0.0f32; 3 * k];
+        let mut m = vec![0.0f32; 3 * k];
+        let ref_err =
+            sample_rows_reference(&csr, 0..3, &v, k, &prior, 1.0, &noise, &mut s, &mut m)
+                .unwrap_err();
+        assert_eq!(ref_err.row, 1);
     }
 
     #[test]
@@ -300,7 +730,7 @@ mod tests {
         prior.mean[k] = 0.7; // row 1 prior mean
         prior.mean[k + 1] = -0.4;
         let noise = vec![0.0f32; 2 * k];
-        let (s, _) = sample_side_native(&csr, &v, k, &prior, 1.0, &noise);
+        let (s, _) = sample_side_native(&csr, &v, k, &prior, 1.0, &noise).unwrap();
         assert!((s[k] - 0.7).abs() < 1e-6);
         assert!((s[k + 1] + 0.4).abs() < 1e-6);
     }

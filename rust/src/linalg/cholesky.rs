@@ -121,6 +121,244 @@ impl Cholesky {
     }
 }
 
+/// In-place Cholesky factorization over a *packed* lower triangle — the
+/// Gibbs kernel's workhorse (see `gibbs::native::RowSampler`).
+///
+/// The k(k+1)/2 elements are stored column-major ("L"-packed, LAPACK
+/// convention): column `j` of L occupies the contiguous run
+/// `off(j) .. off(j) + (k - j)` with `off(j) = j·k − j(j−1)/2`, so
+/// element `L[i][j]` (i ≥ j) sits at `off(j) + (i − j)`. Because the
+/// input matrix is symmetric, the same bytes read row-major are the
+/// packed *upper* triangle — which is exactly the layout the kernel's
+/// rank-1 accumulation produces, so no transposition ever happens.
+///
+/// The buffer doubles as input and output: fill it with the matrix (via
+/// [`PackedCholesky::set_matrix`] or directly through
+/// [`PackedCholesky::packed_mut`]), then [`PackedCholesky::factor_in_place`]
+/// overwrites it with L. Every element is computed by the identical
+/// expression, in the identical accumulation order, as [`Cholesky::new`] —
+/// the factors are **bitwise equal**, which is what lets the optimized
+/// kernel keep the repo's bitwise-equivalence contracts.
+///
+/// ```
+/// use bmf_pp::linalg::{Mat, PackedCholesky};
+///
+/// let a = Mat::from_rows(&[&[4.0, 2.0], &[2.0, 3.0]]);
+/// let mut ch = PackedCholesky::new(2);
+/// ch.factor_into(&a).unwrap();
+///
+/// // solve A x = b in place
+/// let mut x = vec![10.0, 8.0];
+/// ch.solve_in_place(&mut x);
+/// assert!((a.matvec(&x)[0] - 10.0).abs() < 1e-12);
+/// assert!((a.matvec(&x)[1] - 8.0).abs() < 1e-12);
+/// ```
+#[derive(Debug, Clone)]
+pub struct PackedCholesky {
+    k: usize,
+    data: Vec<f64>,
+}
+
+impl PackedCholesky {
+    /// Zeroed workspace for k×k matrices (k(k+1)/2 packed elements).
+    pub fn new(k: usize) -> PackedCholesky {
+        PackedCholesky { k, data: vec![0.0; k * (k + 1) / 2] }
+    }
+
+    /// Dimension k of the factored matrix.
+    pub fn dim(&self) -> usize {
+        self.k
+    }
+
+    /// Packed start offset of column `j` (row `j` of the upper triangle):
+    /// `Σ_{t<j} (k − t) = j(2k − j + 1)/2`.
+    #[inline]
+    pub fn off(&self, j: usize) -> usize {
+        j * (2 * self.k - j + 1) / 2
+    }
+
+    /// The packed buffer (the matrix before factoring, L after).
+    pub fn packed(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable packed buffer — the kernel accumulates rank-1 updates
+    /// directly here before factoring.
+    pub fn packed_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Copy the lower triangle of a dense symmetric `a` into the packed
+    /// buffer (ready for [`PackedCholesky::factor_in_place`]).
+    pub fn set_matrix(&mut self, a: &Mat) {
+        assert_eq!(a.rows, self.k, "matrix dimension");
+        assert_eq!(a.cols, self.k, "matrix dimension");
+        let k = self.k;
+        let mut o = 0;
+        for j in 0..k {
+            for i in j..k {
+                self.data[o] = a[(i, j)];
+                o += 1;
+            }
+        }
+    }
+
+    /// Factor the packed matrix in place: the buffer is overwritten with
+    /// L (A = L Lᵀ). Bitwise-equal to [`Cholesky::new`] on the same
+    /// matrix; returns the same typed [`NotPositiveDefinite`] on failure.
+    ///
+    /// ```
+    /// use bmf_pp::linalg::{Cholesky, Mat, PackedCholesky};
+    ///
+    /// let a = Mat::from_rows(&[&[9.0, 3.0], &[3.0, 5.0]]);
+    /// let dense = Cholesky::new(&a).unwrap();
+    /// let mut packed = PackedCholesky::new(2);
+    /// packed.set_matrix(&a);
+    /// packed.factor_in_place().unwrap();
+    /// // same factor, bit for bit
+    /// assert_eq!(packed.unpack().data, dense.l.data);
+    /// ```
+    pub fn factor_in_place(&mut self) -> Result<(), NotPositiveDefinite> {
+        let k = self.k;
+        let d = &mut self.data;
+        // left-looking, column by column: when column j is reached,
+        // columns t < j already hold L, and every element (i, j) is
+        //   s = a[i][j] − Σ_{t<j} l[i][t]·l[j][t]   (t ascending)
+        // — the exact expression and accumulation order of
+        // `Cholesky::new`, hence bitwise-equal factors.
+        let mut off_j = 0; // off(j), maintained incrementally
+        for j in 0..k {
+            let mut off_t = 0; // off(t)
+            for t in 0..j {
+                let ljt = d[off_t + (j - t)];
+                for i in j..k {
+                    d[off_j + (i - j)] -= d[off_t + (i - t)] * ljt;
+                }
+                off_t += k - t;
+            }
+            let s = d[off_j];
+            if s <= 0.0 || !s.is_finite() {
+                return Err(NotPositiveDefinite { pivot: s, index: j });
+            }
+            let ljj = s.sqrt();
+            d[off_j] = ljj;
+            for i in (j + 1)..k {
+                d[off_j + (i - j)] /= ljj;
+            }
+            off_j += k - j;
+        }
+        Ok(())
+    }
+
+    /// [`PackedCholesky::set_matrix`] + [`PackedCholesky::factor_in_place`]
+    /// in one call — factor a dense SPD matrix without allocating.
+    pub fn factor_into(&mut self, a: &Mat) -> Result<(), NotPositiveDefinite> {
+        self.set_matrix(a);
+        self.factor_in_place()
+    }
+
+    /// Rank-1 update of an existing factor: after the call the buffer
+    /// holds the Cholesky factor of `L Lᵀ + x xᵀ`, computed with Givens
+    /// rotations in O(k²) instead of re-factoring in O(k³) — the tool for
+    /// incrementally growing a precision matrix one observation at a time.
+    ///
+    /// ```
+    /// use bmf_pp::linalg::{Mat, PackedCholesky};
+    ///
+    /// let a = Mat::from_rows(&[&[4.0, 1.0], &[1.0, 3.0]]);
+    /// let mut ch = PackedCholesky::new(2);
+    /// ch.factor_into(&a).unwrap();
+    /// ch.rank1_update(&[0.5, -1.0]);
+    /// // now ch factors A + x xᵀ
+    /// let l = ch.unpack();
+    /// let axxt = Mat::from_rows(&[&[4.25, 0.5], &[0.5, 4.0]]);
+    /// assert!(l.matmul(&l.transpose()).max_abs_diff(&axxt) < 1e-12);
+    /// ```
+    pub fn rank1_update(&mut self, x: &[f64]) {
+        let k = self.k;
+        assert_eq!(x.len(), k, "update vector length");
+        let mut w = x.to_vec();
+        let d = &mut self.data;
+        let mut off_j = 0;
+        for j in 0..k {
+            let ljj = d[off_j];
+            let r = (ljj * ljj + w[j] * w[j]).sqrt();
+            let c = r / ljj;
+            let s = w[j] / ljj;
+            d[off_j] = r;
+            for i in (j + 1)..k {
+                let lij = (d[off_j + (i - j)] + s * w[i]) / c;
+                d[off_j + (i - j)] = lij;
+                w[i] = c * w[i] - s * lij;
+            }
+            off_j += k - j;
+        }
+    }
+
+    /// Solve L y = b in place (forward substitution). Same operation
+    /// order as [`Cholesky::solve_lower`], so bitwise-equal results.
+    pub fn solve_lower_in_place(&self, b: &mut [f64]) {
+        let k = self.k;
+        assert_eq!(b.len(), k, "rhs length");
+        for i in 0..k {
+            let mut off_t = 0;
+            for t in 0..i {
+                b[i] -= self.data[off_t + (i - t)] * b[t];
+                off_t += k - t;
+            }
+            b[i] /= self.data[off_t];
+        }
+    }
+
+    /// Solve Lᵀ x = b in place (back substitution). Reads column `i` of
+    /// L as one contiguous packed run — the cache-friendly direction of
+    /// this layout. Bitwise-equal to [`Cholesky::solve_upper`].
+    pub fn solve_upper_in_place(&self, b: &mut [f64]) {
+        let k = self.k;
+        assert_eq!(b.len(), k, "rhs length");
+        for i in (0..k).rev() {
+            let off_i = self.off(i);
+            let col = &self.data[off_i..off_i + (k - i)];
+            for t in (i + 1)..k {
+                b[i] -= col[t - i] * b[t];
+            }
+            b[i] /= col[0];
+        }
+    }
+
+    /// Solve A x = b in place (forward then back substitution).
+    pub fn solve_in_place(&self, b: &mut [f64]) {
+        self.solve_lower_in_place(b);
+        self.solve_upper_in_place(b);
+    }
+
+    /// log det A = 2 Σ log L_ii over the packed diagonal.
+    pub fn log_det(&self) -> f64 {
+        let mut s = 0.0;
+        let mut off_j = 0;
+        for j in 0..self.k {
+            s += self.data[off_j].ln();
+            off_j += self.k - j;
+        }
+        s * 2.0
+    }
+
+    /// Unpack the factor into a dense lower-triangular [`Mat`] (tests,
+    /// doc examples; the hot path never calls this).
+    pub fn unpack(&self) -> Mat {
+        let k = self.k;
+        let mut l = Mat::zeros(k, k);
+        let mut o = 0;
+        for j in 0..k {
+            for i in j..k {
+                l[(i, j)] = self.data[o];
+                o += 1;
+            }
+        }
+        l
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -180,6 +418,82 @@ mod tests {
     fn rejects_indefinite() {
         let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eigenvalues 3, -1
         assert!(Cholesky::new(&a).is_err());
+    }
+
+    #[test]
+    fn packed_factor_matches_dense_bitwise() {
+        for n in [1usize, 2, 3, 5, 8, 16, 32] {
+            let a = random_spd(n, 100 + n as u64);
+            let dense = Cholesky::new(&a).unwrap();
+            let mut packed = PackedCholesky::new(n);
+            packed.factor_into(&a).unwrap();
+            let l = packed.unpack();
+            for i in 0..n {
+                for j in 0..=i {
+                    assert_eq!(
+                        l[(i, j)].to_bits(),
+                        dense.l[(i, j)].to_bits(),
+                        "n={n} L[{i}][{j}]"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_solves_match_dense_bitwise() {
+        for n in [1usize, 4, 16] {
+            let a = random_spd(n, 200 + n as u64);
+            let dense = Cholesky::new(&a).unwrap();
+            let mut packed = PackedCholesky::new(n);
+            packed.factor_into(&a).unwrap();
+            let b: Vec<f64> = (0..n).map(|i| (i as f64) - 1.5).collect();
+            let mut x = b.clone();
+            packed.solve_in_place(&mut x);
+            let x_dense = dense.solve(&b);
+            for i in 0..n {
+                assert_eq!(x[i].to_bits(), x_dense[i].to_bits(), "n={n} x[{i}]");
+            }
+            let mut y = b.clone();
+            packed.solve_upper_in_place(&mut y);
+            let y_dense = dense.solve_upper(&b);
+            for i in 0..n {
+                assert_eq!(y[i].to_bits(), y_dense[i].to_bits(), "n={n} upper[{i}]");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_rejects_indefinite_with_same_pivot() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eigenvalues 3, -1
+        let dense_err = Cholesky::new(&a).unwrap_err();
+        let mut packed = PackedCholesky::new(2);
+        let packed_err = packed.factor_into(&a).unwrap_err();
+        assert_eq!(packed_err.index, dense_err.index);
+        assert_eq!(packed_err.pivot.to_bits(), dense_err.pivot.to_bits());
+    }
+
+    #[test]
+    fn packed_rank1_update_matches_refactor() {
+        let n = 6;
+        let a = random_spd(n, 300);
+        let x: Vec<f64> = (0..n).map(|i| 0.3 * (i as f64) - 0.7).collect();
+        let mut ch = PackedCholesky::new(n);
+        ch.factor_into(&a).unwrap();
+        ch.rank1_update(&x);
+        let l = ch.unpack();
+        let mut axxt = a.clone();
+        axxt.add_scaled(&Mat::outer(&x, &x), 1.0);
+        assert!(l.matmul(&l.transpose()).max_abs_diff(&axxt) < 1e-10);
+    }
+
+    #[test]
+    fn packed_log_det_matches_dense() {
+        let a = random_spd(5, 400);
+        let dense = Cholesky::new(&a).unwrap();
+        let mut packed = PackedCholesky::new(5);
+        packed.factor_into(&a).unwrap();
+        assert_eq!(packed.log_det().to_bits(), dense.log_det().to_bits());
     }
 
     #[test]

@@ -8,5 +8,5 @@
 pub mod cholesky;
 pub mod mat;
 
-pub use cholesky::Cholesky;
+pub use cholesky::{Cholesky, NotPositiveDefinite, PackedCholesky};
 pub use mat::Mat;

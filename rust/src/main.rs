@@ -7,6 +7,10 @@
 //!             and the holdout set (--save-test). Within-block sweeps run
 //!             lockstep by default; --sweep pipelined overlaps the factor
 //!             exchange with sampling (--chunk-rows, --staleness).
+//!             --kernel-f32 runs the native Gibbs kernel with f32-stored
+//!             precisions/solves (f64 accumulation): a smaller per-row
+//!             working set at ~1e-3 relative deviation, excluded from
+//!             the bitwise-equivalence contracts (see docs/PERFORMANCE.md).
 //!             --store <dir> trains out-of-core from a shard store written
 //!             by `ingest` instead of loading the matrix: blocks stream
 //!             through an LRU cache bounded by --cache-bytes (0 =
@@ -237,6 +241,7 @@ fn plan_train(args: &Args) -> anyhow::Result<Action> {
     let sweep = parse_sweep_mode(args)?;
     let chunk_rows = args.usize_or("chunk-rows", 256);
     let staleness = args.usize_or("staleness", 0);
+    let kernel_f32 = args.bool_or("kernel-f32", false);
     // --staleness bounds how far a pipelined chunk read may lag; under
     // lockstep sweeps (the default) it can never apply, so passing it is
     // a mistyped run — reject at parse time, before any data loads
@@ -272,6 +277,9 @@ fn plan_train(args: &Args) -> anyhow::Result<Action> {
                 .with_chunk_rows(chunk_rows)
                 .with_staleness(staleness)
                 .with_cache_bytes(cache_bytes);
+            if kernel_f32 {
+                cfg = cfg.with_kernel_precision(bmf_pp::gibbs::GibbsPrecision::F32);
+            }
             if native {
                 cfg = cfg.with_backend(BackendSpec::Native);
             }

@@ -1,0 +1,270 @@
+//! Gibbs-kernel contracts: the optimized `RowSampler` must reproduce the
+//! retained naive reference bit for bit in the f64 regime (across random
+//! shapes, skewed sparsity, empty rows, and arbitrary chunk boundaries),
+//! the f32 regime must track f64 within its documented tolerance, and a
+//! non-SPD posterior precision must surface as a typed error through
+//! every layer — kernel, `run_block` (both sweep schedules), and the
+//! engine's failure path — never as a panic or a deadlock.
+
+use bmf_pp::coordinator::backend::{BlockBackend, BlockData};
+use bmf_pp::coordinator::block_task::{run_block, BlockObs, BlockTaskCfg};
+use bmf_pp::coordinator::SweepMode;
+use bmf_pp::data::sparse::{Coo, Csr};
+use bmf_pp::gibbs::native::{
+    sample_rows_reference, sample_side_native, GibbsPrecision, RowSampler, SampleError,
+};
+use bmf_pp::posterior::RowGaussians;
+use bmf_pp::rng::{normal::standard_normal_vec, Rng};
+use bmf_pp::testing::prop::{check, Gen};
+
+/// A random side: CSR with skewed per-row occupancy (some rows dense,
+/// some sparse, some empty), opposite factors, a randomized SPD prior,
+/// injected noise, and a τ.
+#[derive(Debug)]
+struct KernelCase {
+    n: usize,
+    d: usize,
+    k: usize,
+    entries: Vec<(usize, usize, f32)>,
+    tau: f64,
+}
+
+fn gen_case(g: &mut Gen) -> KernelCase {
+    let k = g.usize_in(1, 32);
+    let n = g.size(1, 48);
+    let d = g.size(1, 40);
+    let mut entries = Vec::new();
+    for r in 0..n {
+        // skewed occupancy: square a uniform so most rows are sparse and
+        // a few are dense; ~1 in 4 rows stays completely empty
+        if g.rng.uniform() < 0.25 {
+            continue;
+        }
+        let frac = g.rng.uniform().powi(2);
+        let nnz_row = ((d as f64 * frac).ceil() as usize).min(d);
+        for _ in 0..nnz_row {
+            let c = g.rng.below(d);
+            entries.push((r, c, (g.rng.uniform() * 4.0 + 1.0) as f32));
+        }
+    }
+    let tau = g.f64_in(0.1, 5.0);
+    KernelCase { n, d, k, entries, tau }
+}
+
+fn case_inputs(case: &KernelCase, seed: u64) -> (Csr, Vec<f32>, RowGaussians, Vec<f32>) {
+    let (n, d, k) = (case.n, case.d, case.k);
+    let mut coo = Coo::new(n, d);
+    for &(r, c, val) in &case.entries {
+        coo.push(r, c, val);
+    }
+    let csr = Csr::from_coo(&coo);
+    let mut rng = Rng::seed_from_u64(seed);
+    let v = standard_normal_vec(&mut rng, d * k);
+    let mut prior = RowGaussians::standard(n, k, 1.0 + rng.uniform() * 3.0);
+    for m in prior.mean.iter_mut() {
+        *m = (rng.uniform() - 0.5) * 2.0;
+    }
+    let noise = standard_normal_vec(&mut rng, n * k);
+    (csr, v, prior, noise)
+}
+
+#[test]
+fn optimized_kernel_is_bitwise_equal_to_reference_across_random_cases() {
+    check(40, gen_case, |case| {
+        let (n, k) = (case.n, case.k);
+        let (csr, v, prior, noise) = case_inputs(case, 0xC0FFEE ^ n as u64);
+
+        let mut s_ref = vec![0.0f32; n * k];
+        let mut m_ref = vec![0.0f32; n * k];
+        sample_rows_reference(&csr, 0..n, &v, k, &prior, case.tau, &noise, &mut s_ref, &mut m_ref)
+            .map_err(|e| format!("reference errored: {e}"))?;
+
+        // one reused arena, driven over arbitrary chunk boundaries — the
+        // chunk-invariance contract and the bitwise contract in one pass
+        let mut sampler = RowSampler::new(k, GibbsPrecision::F64);
+        let mut s_opt = vec![0.0f32; n * k];
+        let mut m_opt = vec![0.0f32; n * k];
+        let chunk = 1 + (n * k) % 7; // deterministic, often straddles rows
+        let mut a = 0;
+        while a < n {
+            let b = (a + chunk).min(n);
+            sampler
+                .sample_rows_into(
+                    &csr,
+                    a..b,
+                    &v,
+                    &prior,
+                    case.tau,
+                    &noise,
+                    &mut s_opt[a * k..b * k],
+                    &mut m_opt[a * k..b * k],
+                )
+                .map_err(|e| format!("optimized errored: {e}"))?;
+            a = b;
+        }
+
+        for i in 0..n * k {
+            if s_opt[i].to_bits() != s_ref[i].to_bits() {
+                return Err(format!(
+                    "sample[{i}] diverged: {} vs {}",
+                    s_opt[i], s_ref[i]
+                ));
+            }
+            if m_opt[i].to_bits() != m_ref[i].to_bits() {
+                return Err(format!("mean[{i}] diverged: {} vs {}", m_opt[i], m_ref[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn f32_regime_tracks_f64_within_documented_tolerance() {
+    check(15, gen_case, |case| {
+        let (n, k) = (case.n, case.k);
+        let (csr, v, prior, noise) = case_inputs(case, 0xF32 ^ n as u64);
+
+        let (s64, m64) = RowSampler::new(k, GibbsPrecision::F64)
+            .sample_side(&csr, &v, &prior, case.tau, &noise)
+            .map_err(|e| format!("f64 errored: {e}"))?;
+        let (s32, m32) = RowSampler::new(k, GibbsPrecision::F32)
+            .sample_side(&csr, &v, &prior, case.tau, &noise)
+            .map_err(|e| format!("f32 errored: {e}"))?;
+
+        // documented tolerance: ~1e-3 relative typical (docs/PERFORMANCE.md);
+        // the hard bound here is 5e-3 to absorb ill-conditioned random cases
+        for i in 0..n * k {
+            let scale = s64[i].abs().max(1.0);
+            if (s32[i] - s64[i]).abs() > 5e-3 * scale {
+                return Err(format!("sample[{i}]: f32 {} vs f64 {}", s32[i], s64[i]));
+            }
+            let mscale = m64[i].abs().max(1.0);
+            if (m32[i] - m64[i]).abs() > 5e-3 * mscale {
+                return Err(format!("mean[{i}]: f32 {} vs f64 {}", m32[i], m64[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// A 4×3 block whose row 2 is unobserved with an all-zero prior precision
+/// row — the posterior precision for that row is exactly zero, so the
+/// factorization must reject it at pivot 0.
+fn degenerate_setup(k: usize) -> (BlockData, RowGaussians) {
+    let mut coo = Coo::new(4, 3);
+    coo.push(0, 0, 3.0);
+    coo.push(1, 1, 2.0);
+    coo.push(3, 2, 4.0);
+    let mut prior = RowGaussians::standard(4, k, 2.0);
+    for x in prior.prec[2 * k * k..3 * k * k].iter_mut() {
+        *x = 0.0;
+    }
+    (BlockData::new(coo), prior)
+}
+
+#[test]
+fn degenerate_prior_yields_typed_error_in_both_kernels() {
+    let k = 3;
+    let (data, prior) = degenerate_setup(k);
+    let mut rng = Rng::seed_from_u64(5);
+    let v = standard_normal_vec(&mut rng, 3 * k);
+    let noise = standard_normal_vec(&mut rng, 4 * k);
+
+    let err = sample_side_native(&data.csr, &v, k, &prior, 1.0, &noise).unwrap_err();
+    assert_eq!(err.row, 2, "error names the degenerate row");
+    assert_eq!(err.source.index, 0, "zero precision fails at the first pivot");
+
+    let mut s = vec![0.0f32; 4 * k];
+    let mut m = vec![0.0f32; 4 * k];
+    let ref_err = sample_rows_reference(&data.csr, 0..4, &v, k, &prior, 1.0, &noise, &mut s, &mut m)
+        .unwrap_err();
+    assert_eq!(ref_err.row, err.row, "both kernels reject the same row");
+}
+
+#[test]
+fn run_block_surfaces_degenerate_prior_as_error_not_panic() {
+    let k = 3;
+    let (data, prior) = degenerate_setup(k);
+    let cfg = BlockTaskCfg {
+        k,
+        tau: 1.0,
+        burnin: 2,
+        samples: 4,
+        workers: 1,
+        ridge: 1e-3,
+        seed: 9,
+        sweep: SweepMode::Lockstep,
+        chunk_rows: 2,
+        staleness: 0,
+        precision: GibbsPrecision::F64,
+    };
+    let err = run_block(&BlockBackend::Native, &data, &cfg, Some(&prior), None, BlockObs::default())
+        .unwrap_err();
+    let sample_err = err.downcast_ref::<SampleError>().expect("typed SampleError");
+    assert_eq!(sample_err.row, 2);
+}
+
+#[test]
+fn pipelined_run_with_degenerate_prior_errors_without_deadlocking() {
+    // the failing U worker must zero-fill-publish its remaining chunks so
+    // peer workers' staleness gates open; the sweep then fails cleanly
+    let k = 3;
+    let (data, prior) = degenerate_setup(k);
+    for workers in [1usize, 2, 3] {
+        let cfg = BlockTaskCfg {
+            k,
+            tau: 1.0,
+            burnin: 2,
+            samples: 4,
+            workers,
+            ridge: 1e-3,
+            seed: 11,
+            sweep: SweepMode::Pipelined,
+            chunk_rows: 1,
+            staleness: 0,
+            precision: GibbsPrecision::F64,
+        };
+        let err = run_block(
+            &BlockBackend::Native,
+            &data,
+            &cfg,
+            Some(&prior),
+            None,
+            BlockObs::default(),
+        )
+        .unwrap_err();
+        let sample_err = err.downcast_ref::<SampleError>().expect("typed SampleError");
+        assert_eq!(sample_err.row, 2, "workers={workers}");
+    }
+}
+
+#[test]
+fn f32_regime_trains_a_block_end_to_end() {
+    // the opt-in fast path runs the full block task and produces finite,
+    // usable posteriors (statistical sanity only — it is excluded from
+    // the bitwise contracts by design)
+    let mut coo = Coo::new(20, 16);
+    let mut rng = Rng::seed_from_u64(21);
+    for _ in 0..140 {
+        coo.push(rng.below(20), rng.below(16), (rng.uniform() * 4.0 + 1.0) as f32);
+    }
+    let data = BlockData::new(coo);
+    let cfg = BlockTaskCfg {
+        k: 4,
+        tau: 2.0,
+        burnin: 4,
+        samples: 8,
+        workers: 2,
+        ridge: 1e-3,
+        seed: 22,
+        sweep: SweepMode::Lockstep,
+        chunk_rows: 8,
+        staleness: 0,
+        precision: GibbsPrecision::F32,
+    };
+    let (post, stats) =
+        run_block(&BlockBackend::Native, &data, &cfg, None, None, BlockObs::default()).unwrap();
+    assert_eq!(stats.sweeps, 12);
+    assert!(post.u.mean.iter().all(|x| x.is_finite()));
+    assert!(post.v.mean.iter().all(|x| x.is_finite()));
+}
